@@ -1,0 +1,57 @@
+//! Codec shoot-out on live training: run every compression scheme for the
+//! same short training budget and compare accuracy, bytes, and simulated
+//! time — a fast preview of the paper's Fig. 5 before running the full
+//! `cargo bench --bench fig5_main`.
+//!
+//!     make artifacts && cargo run --release --example compare_codecs
+//!
+//! Flags: --rounds N --dataset ham|mnist --noniid
+
+use slacc::bench::Table;
+use slacc::cli::Args;
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::coordinator::trainer::Trainer;
+use slacc::data::partition::Partition;
+
+const CODECS: &[&str] = &["identity", "slacc", "powerquant", "randtopk", "splitfc",
+                          "easyquant", "uniform4"];
+
+fn main() -> Result<(), String> {
+    slacc::util::logging::init_from_env();
+    let mut args = Args::from_env();
+    let rounds = args.usize_or("rounds", 60);
+    let dataset = args.str_or("dataset", "ham");
+    let noniid = args.bool_or("noniid", false);
+    args.finish()?;
+
+    let mut table = Table::new(
+        &format!("codec comparison ({dataset}, {rounds} rounds)"),
+        &["codec", "final_acc%", "best_acc%", "MB_up", "MB_down", "sim_time_s"],
+    );
+
+    for name in CODECS {
+        let mut cfg = ExperimentConfig::default_for(&dataset);
+        cfg.rounds = rounds;
+        cfg.train_n = 800;
+        cfg.test_n = 256;
+        cfg.eval_every = 10;
+        cfg.lr = 3e-3;
+        cfg.codec = CodecChoice::Named(name.to_string());
+        if noniid {
+            cfg.partition = Partition::Dirichlet { beta: 0.5 };
+        }
+        let mut trainer = Trainer::new(cfg)?;
+        let r = trainer.run()?;
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}", r.final_accuracy * 100.0),
+            format!("{:.2}", r.best_accuracy * 100.0),
+            format!("{:.2}", r.total_bytes_up as f64 / 1e6),
+            format!("{:.2}", r.total_bytes_down as f64 / 1e6),
+            format!("{:.2}", r.total_sim_time_s),
+        ]);
+        eprintln!("[done] {name}");
+    }
+    table.finish();
+    Ok(())
+}

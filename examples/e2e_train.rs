@@ -1,0 +1,99 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E).
+//!
+//! Trains the split GN-ResNet on the synthetic HAM10000 workload for a few
+//! hundred rounds with SL-ACC compression active on both smashed-data
+//! directions, and logs the full loss/accuracy curve plus communication
+//! accounting. An uncompressed (identity) run follows as the reference so
+//! the compression/accuracy trade-off is visible in one shot.
+//!
+//!     make artifacts && cargo run --release --example e2e_train
+//!
+//! Flags: --rounds N --train-n N --dataset ham|mnist --skip-identity
+
+use slacc::cli::Args;
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::coordinator::trainer::Trainer;
+
+fn run(cfg: ExperimentConfig) -> Result<slacc::coordinator::trainer::TrainReport, String> {
+    let label = cfg.codec.label();
+    let t0 = std::time::Instant::now();
+    let mut trainer = Trainer::new(cfg)?;
+    let report = trainer.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n--- {label} ---");
+    println!("round  loss    acc%     sim-time   cum-MB-up");
+    let mut cum_up = 0usize;
+    for r in &report.metrics.records {
+        cum_up += r.bytes_up;
+        if let Some(a) = r.accuracy {
+            println!(
+                "{:>5}  {:.4}  {:>6.2}  {:>8.1}s  {:>9.2}",
+                r.round,
+                r.loss,
+                a * 100.0,
+                r.sim_time_s,
+                cum_up as f64 / 1e6
+            );
+        }
+    }
+    println!(
+        "{label}: final {:.2}% best {:.2}% | sim {:.1}s | wall {wall:.0}s | {:.1} MB up",
+        report.final_accuracy * 100.0,
+        report.best_accuracy * 100.0,
+        report.total_sim_time_s,
+        report.total_bytes_up as f64 / 1e6,
+    );
+    Ok(report)
+}
+
+fn main() -> Result<(), String> {
+    slacc::util::logging::init_from_env();
+    let mut args = Args::from_env();
+    let rounds = args.usize_or("rounds", 300);
+    let train_n = args.usize_or("train-n", 2000);
+    let dataset = args.str_or("dataset", "ham");
+    let skip_identity = args.bool_or("skip-identity", false);
+    args.finish()?;
+
+    let mut cfg = ExperimentConfig::default_for(&dataset);
+    cfg.rounds = rounds;
+    cfg.train_n = train_n;
+    cfg.test_n = 512;
+    cfg.eval_every = 10;
+    cfg.lr = 3e-3;
+
+    let mut slacc_cfg = cfg.clone();
+    slacc_cfg.codec = CodecChoice::Named("slacc".into());
+    let slacc_report = run(slacc_cfg)?;
+    slacc_report
+        .metrics
+        .write_csv(std::path::Path::new("bench_results/e2e_slacc.csv"))?;
+
+    if !skip_identity {
+        let mut id_cfg = cfg.clone();
+        id_cfg.codec = CodecChoice::Named("identity".into());
+        let id_report = run(id_cfg)?;
+        id_report
+            .metrics
+            .write_csv(std::path::Path::new("bench_results/e2e_identity.csv"))?;
+
+        println!("\n=== e2e summary ({dataset}, {rounds} rounds) ===");
+        println!(
+            "SL-ACC  : {:.2}% acc, {:.1}s sim, {:.1} MB",
+            slacc_report.final_accuracy * 100.0,
+            slacc_report.total_sim_time_s,
+            (slacc_report.total_bytes_up + slacc_report.total_bytes_down) as f64 / 1e6
+        );
+        println!(
+            "identity: {:.2}% acc, {:.1}s sim, {:.1} MB",
+            id_report.final_accuracy * 100.0,
+            id_report.total_sim_time_s,
+            (id_report.total_bytes_up + id_report.total_bytes_down) as f64 / 1e6
+        );
+        let speedup = id_report.total_sim_time_s / slacc_report.total_sim_time_s.max(1e-9);
+        println!("SL-ACC simulated-time speedup over uncompressed SL: {speedup:.2}x");
+    }
+    println!("\nCSV curves in bench_results/e2e_*.csv");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! ACII/CGC internals on real activations: run one client forward pass,
+//! compute per-channel entropy through BOTH the AOT Pallas kernel and the
+//! host mirror (printing the parity error), then show the CGC grouping,
+//! bit allocation, and payload layout for the batch.
+//!
+//!     make artifacts && cargo run --release --example inspect_entropy
+//!
+//! Flags: --dataset ham|mnist --groups N
+
+use slacc::cli::Args;
+use slacc::codecs::slacc::{SlAccCodec, SlAccConfig};
+use slacc::codecs::{Codec, RoundCtx};
+use slacc::data::Dataset;
+use slacc::entropy::shannon;
+use slacc::runtime::{Arg, Engine};
+
+fn main() -> Result<(), String> {
+    slacc::util::logging::init_from_env();
+    let mut args = Args::from_env();
+    let dataset = args.str_or("dataset", "ham");
+    let groups = args.usize_or("groups", 4);
+    args.finish()?;
+
+    let dir = std::path::Path::new("artifacts").join(&dataset);
+    let mut engine = Engine::load(&dir)?;
+    let man = engine.manifest().clone();
+    println!(
+        "model {}: batch={} cut=({},{},{},{})",
+        man.config_name, man.batch, man.cut.b, man.cut.c, man.cut.h, man.cut.w
+    );
+
+    // one real batch through the client sub-model
+    let (train, _) = Dataset::for_config(&dataset, man.batch * 2, 1, 7)?;
+    let idx: Vec<usize> = (0..man.batch).collect();
+    let (x, _) = train.batch(&idx);
+    let x_dims = [man.batch, man.in_ch, man.img, man.img];
+    let cp = man.load_client_init()?;
+    let mut eng_args: Vec<Arg> = cp.iter().map(|t| Arg::F32(t.data(), t.dims())).collect();
+    eng_args.push(Arg::F32(&x, &x_dims));
+    let acts = engine
+        .execute("client_fwd", &eng_args)?
+        .into_iter()
+        .next()
+        .unwrap();
+
+    // entropy: Pallas kernel (AOT) vs host mirror
+    let kernel_h = engine
+        .execute("entropy", &[Arg::F32(acts.data(), acts.dims())])?
+        .into_iter()
+        .next()
+        .unwrap()
+        .into_data();
+    let cm = acts.to_channel_major();
+    let host_h = shannon::entropies(&cm);
+    let max_err = kernel_h
+        .iter()
+        .zip(&host_h)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "\nentropy parity: Pallas kernel vs host mirror, max |err| = {max_err:.2e} \
+         (N = {} elements/channel, ln N = {:.3})",
+        cm.n_per_channel,
+        (cm.n_per_channel as f32).ln()
+    );
+
+    // CGC grouping + bit allocation
+    let cfg = SlAccConfig { groups, ..Default::default() };
+    let mut codec = SlAccCodec::new(cfg, man.cut.c, 100, 0);
+    let wire = codec.compress(&cm, RoundCtx { entropy: Some(&kernel_h) });
+    let last = codec.last_round().unwrap().clone();
+
+    println!("\nch  H(kernel)  H(blend)  group  bits");
+    for c in 0..man.cut.c {
+        println!(
+            "{:>2}  {:>9.4}  {:>8.4}  {:>5}  {:>4}",
+            c,
+            kernel_h[c],
+            last.blended_entropy[c],
+            last.group_of_channel[c],
+            last.group_bits[last.group_of_channel[c]]
+        );
+    }
+    println!("\ngroup  mean-H  bits  members");
+    for (j, (&h, &b)) in last.group_entropy.iter().zip(&last.group_bits).enumerate() {
+        let members: Vec<String> = last
+            .group_of_channel
+            .iter()
+            .enumerate()
+            .filter(|&(_, &g)| g == j)
+            .map(|(c, _)| c.to_string())
+            .collect();
+        println!("{:>5}  {:>6.4}  {:>4}  [{}]", j, h, b, members.join(","));
+    }
+    let raw = cm.data().len() * 4;
+    println!(
+        "\npayload: {} bytes (raw {} bytes, ratio {:.1}x, avg {:.2} bits/elem)",
+        wire.len(),
+        raw,
+        raw as f64 / wire.len() as f64,
+        last.avg_bits_per_element
+    );
+
+    // verify the decompressed tensor round-trips within quantization error
+    let rec = codec.decompress(&wire)?;
+    println!("reconstruction mean|err| = {:.5}", acts.mean_abs_diff(&rec));
+    Ok(())
+}

@@ -1,0 +1,194 @@
+"""AOT pipeline: lower every phase function to HLO *text* + manifest.
+
+This is the single point where Python runs — ``make artifacts`` invokes it
+once per model config; afterwards the Rust coordinator is self-contained.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs, per config (artifacts/<name>/):
+  client_fwd.hlo.txt   server_step.hlo.txt   client_bwd.hlo.txt
+  eval_logits.hlo.txt  entropy.hlo.txt       qdq.hlo.txt
+  client_init.bin      server_init.bin       (raw little-endian f32)
+  manifest.json        (shapes/dtypes of every artifact's I/O, param specs)
+
+The manifest is the contract with rust/src/runtime/artifacts.rs — any change
+to its schema must be mirrored there.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import entropy_kernel, qdq_kernel
+
+SCHEMA_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[np.dtype(dt).name]
+
+
+def _io_entry(name: str, arr) -> dict:
+    return {"name": name, "dims": list(arr.shape), "dtype": _dtype_tag(arr.dtype)}
+
+
+def lower_fn(fn, arg_specs: List[Tuple[str, jax.ShapeDtypeStruct]],
+             out_names: List[str], out_path: str) -> dict:
+    """Lower ``fn`` at the given shapes, write HLO text, return manifest entry."""
+    specs = [s for _, s in arg_specs]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *specs)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    assert len(out_names) == len(outs), (out_names, len(outs))
+    return {
+        "file": os.path.basename(out_path),
+        "inputs": [_io_entry(n, s) for n, s in arg_specs],
+        "outputs": [_io_entry(n, s) for n, s in zip(out_names, outs)],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_config(cfg: M.ModelConfig, out_root: str, seed: int) -> None:
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+
+    cspec = M.client_spec(cfg)
+    sspec = M.server_spec(cfg)
+    b, c, h, w = cfg.cut_shape
+    n_elem = b * h * w
+
+    cp_args = [(name, _sds(shape)) for name, shape in cspec]
+    sp_args = [(name, _sds(shape)) for name, shape in sspec]
+    x_arg = ("x", _sds((cfg.batch, cfg.in_ch, cfg.img, cfg.img)))
+    acts_arg = ("acts", _sds((b, c, h, w)))
+    y_arg = ("y", _sds((cfg.batch,), jnp.int32))
+    lr_arg = ("lr", _sds((), jnp.float32))
+
+    artifacts = {}
+
+    artifacts["client_fwd"] = lower_fn(
+        M.make_client_fwd(cfg), cp_args + [x_arg], ["acts"],
+        os.path.join(out_dir, "client_fwd.hlo.txt"))
+
+    artifacts["server_step"] = lower_fn(
+        M.make_server_step(cfg), sp_args + [acts_arg, y_arg, lr_arg],
+        ["loss", "g_acts"] + [n for n, _ in sspec],
+        os.path.join(out_dir, "server_step.hlo.txt"))
+
+    artifacts["client_bwd"] = lower_fn(
+        M.make_client_bwd(cfg), cp_args + [x_arg, ("g_acts", _sds((b, c, h, w))), lr_arg],
+        [n for n, _ in cspec],
+        os.path.join(out_dir, "client_bwd.hlo.txt"))
+
+    artifacts["eval_logits"] = lower_fn(
+        M.make_eval_logits(cfg), cp_args + sp_args + [x_arg], ["logits"],
+        os.path.join(out_dir, "eval_logits.hlo.txt"))
+
+    # L1 Pallas kernels, lowered standalone so the Rust coordinator can call
+    # them on raw smashed data each round.
+    artifacts["entropy"] = lower_fn(
+        entropy_kernel.channel_entropy_nchw, [acts_arg], ["entropy"],
+        os.path.join(out_dir, "entropy.hlo.txt"))
+
+    artifacts["qdq"] = lower_fn(
+        qdq_kernel.qdq_nchw,
+        [acts_arg,
+         ("qmin", _sds((c, 1))), ("qmax", _sds((c, 1))), ("levels", _sds((c, 1)))],
+        ["acts_hat"],
+        os.path.join(out_dir, "qdq.hlo.txt"))
+
+    # Deterministic initial parameters, raw little-endian f32 blobs.
+    key = jax.random.PRNGKey(seed)
+    kc, ks = jax.random.split(key)
+    cinit = M.init_params(cspec, kc)
+    sinit = M.init_params(sspec, ks)
+
+    def dump(path, arrs):
+        with open(path, "wb") as f:
+            for a in arrs:
+                f.write(np.asarray(a, dtype="<f4").tobytes())
+
+    dump(os.path.join(out_dir, "client_init.bin"), cinit)
+    dump(os.path.join(out_dir, "server_init.bin"), sinit)
+
+    def spec_json(spec):
+        out, off = [], 0
+        for name, shape in spec:
+            size = int(np.prod(shape))
+            out.append({"name": name, "dims": list(shape),
+                        "offset": off, "size": size})
+            off += size
+        return out
+
+    manifest = {
+        "schema": SCHEMA_VERSION,
+        "config": {
+            "name": cfg.name, "in_ch": cfg.in_ch, "classes": cfg.num_classes,
+            "batch": cfg.batch, "img": cfg.img,
+            "cut": {"b": b, "c": c, "h": h, "w": w, "n_per_channel": n_elem},
+            "gn_groups": cfg.gn_groups, "seed": seed,
+        },
+        "client_params": spec_json(cspec),
+        "server_params": spec_json(sspec),
+        "client_param_count": M.param_count(cspec),
+        "server_param_count": M.param_count(sspec),
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    total = M.param_count(cspec) + M.param_count(sspec)
+    print(f"[aot] {cfg.name}: {len(artifacts)} artifacts, "
+          f"{total:,} params ({M.param_count(cspec):,} client / "
+          f"{M.param_count(sspec):,} server) -> {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output root dir")
+    ap.add_argument("--configs", default="ham,mnist",
+                    help="comma-separated config names (ham,mnist)")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    for name in args.configs.split(","):
+        base = M.CONFIGS[name.strip()]
+        cfg = M.ModelConfig(name=base.name, in_ch=base.in_ch,
+                            num_classes=base.num_classes, batch=args.batch,
+                            img=base.img, width=base.width,
+                            gn_groups=base.gn_groups)
+        build_config(cfg, args.out, args.seed)
+
+
+if __name__ == "__main__":
+    main()

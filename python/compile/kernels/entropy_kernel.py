@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: per-channel Shannon entropy of smashed data (ACII Eq. 1).
+
+This is the per-round compute the paper *adds* to the split-learning data
+path — it runs over every activation tensor (uplink) and every cut-layer
+gradient tensor (downlink) on every device, every round. It is therefore the
+kernel we AOT-compile into ``artifacts/<cfg>/entropy.hlo.txt`` and invoke
+from the Rust coordinator.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the input is reshaped to
+(C, N) with N = B*H*W; the grid iterates over channels and each program
+processes one (1, N) row. At the default config (N = 32*16*16 = 8192) a row
+is 32 KiB — comfortably inside VMEM — so the HBM↔VMEM schedule expressed by
+the BlockSpec is exactly one read per channel plus one scalar write. The
+reductions (min, max, sum) vectorize on the VPU; there is no matmul, so the
+kernel is memory-bound and the MXU is idle by design.
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-8
+
+
+def _entropy_row_kernel(x_ref, o_ref):
+    """One grid step = one channel: (1, N) block -> scalar entropy."""
+    row = x_ref[...]  # (1, N) in VMEM
+    mn = jnp.min(row)
+    mx = jnp.max(row)
+    z = (row - mn) / jnp.maximum(mx - mn, EPS)  # min-max normalize to [0,1]
+    s = z - jnp.max(z)                          # stable softmax shift
+    e = jnp.exp(s)
+    total = jnp.sum(e)
+    p = e / total
+    o_ref[...] = -jnp.sum(p * jnp.log(p)).reshape(1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def channel_entropy(x2d: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel entropy of (C, N) f32 data via the Pallas kernel.
+
+    Returns an (C,) f32 vector H where H[c] is the Shannon entropy (natural
+    log) of the softmax distribution over channel c's normalized elements.
+    Matches ``ref.channel_entropy_ref`` to float32 round-off.
+    """
+    c, n = x2d.shape
+    return pl.pallas_call(
+        _entropy_row_kernel,
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        grid=(c,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x2d.astype(jnp.float32))
+
+
+def channel_entropy_nchw(acts: jnp.ndarray) -> jnp.ndarray:
+    """Entropy of NCHW activations: channel c pools its N = B*H*W elements.
+
+    This is the entry point AOT-lowered for the Rust coordinator; the
+    transpose/reshape fuses into the surrounding HLO.
+    """
+    b, c, h, w = acts.shape
+    x2d = jnp.transpose(acts, (1, 0, 2, 3)).reshape(c, b * h * w)
+    return channel_entropy(x2d)

@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: fused per-channel linear quantize-dequantize (CGC Eq. 7).
+
+The Rust coordinator performs the *real* quantization (bit-packing actual
+wire bytes in rust/src/quant/). This kernel implements the numerically
+identical fake-quant x -> dequant(quant(x)) as an in-graph operation, used
+
+* to parity-test the Rust quantizer against JAX (same rounding rule,
+  round-half-away-from-zero),
+* as the AOT artifact ``qdq.hlo.txt`` for the optional in-graph compression
+  path (server-side simulation of the channel without host round-trips),
+* as the L1 micro-bench subject.
+
+Layout mirrors the entropy kernel: (C, N) rows, one channel per grid step,
+per-channel parameters arriving as (C, 1) operands so each block sees its
+own scalars. Elementwise VPU work, one HBM read + one write per element.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-8
+
+
+def _qdq_row_kernel(x_ref, qmin_ref, qmax_ref, lv_ref, o_ref):
+    row = x_ref[...]          # (1, N)
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    levels = lv_ref[0, 0]
+    rng = qmax - qmin
+    scale = jnp.maximum(rng, EPS) / levels
+    xc = jnp.clip(row, qmin, qmax)
+    t = (xc - qmin) / scale
+    code = jnp.floor(t + 0.5)  # t >= 0, so this IS round-half-away
+    xhat = qmin + code * scale
+    o_ref[...] = jnp.where(rng > EPS, xhat, qmin)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def qdq(x2d: jnp.ndarray, qmin: jnp.ndarray, qmax: jnp.ndarray,
+        levels: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quantize (C, N) f32 data with per-channel [qmin, qmax] and level
+    counts (2^b - 1). All parameter arrays are (C, 1) f32.
+    """
+    c, n = x2d.shape
+    spec_param = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        _qdq_row_kernel,
+        out_shape=jax.ShapeDtypeStruct((c, n), jnp.float32),
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            spec_param, spec_param, spec_param,
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x2d.astype(jnp.float32), qmin, qmax, levels)
+
+
+def qdq_nchw(acts: jnp.ndarray, qmin: jnp.ndarray, qmax: jnp.ndarray,
+             levels: jnp.ndarray) -> jnp.ndarray:
+    """NCHW wrapper: per-channel fake-quant of (B, C, H, W) activations."""
+    b, c, h, w = acts.shape
+    x2d = jnp.transpose(acts, (1, 0, 2, 3)).reshape(c, b * h * w)
+    y2d = qdq(x2d, qmin, qmax, levels)
+    return jnp.transpose(y2d.reshape(c, b, h, w), (1, 0, 2, 3))

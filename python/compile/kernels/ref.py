@@ -1,0 +1,68 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+These are the ground-truth implementations of the two SL-ACC hot-spot
+computations:
+
+* ``channel_entropy_ref`` — ACII instantaneous entropy (paper Eq. 1): each
+  channel is min-max normalized to [0, 1], converted to a probability
+  distribution with a softmax over its N = B*H*W elements, and reduced to
+  Shannon entropy H_c = -sum_i p_i log p_i (natural log).
+* ``qdq_ref`` — CGC linear quantize-dequantize (paper Eq. 7) with
+  round-half-away-from-zero, applied per channel with externally supplied
+  [qmin, qmax] boundaries and integer level counts (2^b - 1).
+
+The Pallas kernels in ``entropy_kernel.py`` / ``qdq_kernel.py`` must match
+these to ~1e-5; the Rust quantizer (rust/src/quant/linear.rs) implements the
+same rounding so wire bytes and the in-graph fake-quant path agree exactly.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def channel_entropy_ref(x2d: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel Shannon entropy of (C, N) smashed data. Returns (C,) f32.
+
+    Pipeline per channel c (paper Sec. II-B):
+      1. min-max normalize the N elements to [0, 1]
+      2. softmax -> probability distribution p_c(i)
+      3. H_c = -sum_i p_c(i) * log p_c(i)
+    """
+    x2d = x2d.astype(jnp.float32)
+    mn = jnp.min(x2d, axis=1, keepdims=True)
+    mx = jnp.max(x2d, axis=1, keepdims=True)
+    z = (x2d - mn) / jnp.maximum(mx - mn, EPS)
+    # stable softmax over the channel's elements; z in [0,1] so the max
+    # subtraction is tiny but keeps bit-parity with the kernel.
+    s = z - jnp.max(z, axis=1, keepdims=True)
+    e = jnp.exp(s)
+    p = e / jnp.sum(e, axis=1, keepdims=True)
+    return -jnp.sum(p * jnp.log(p), axis=1)
+
+
+def round_half_away(t: jnp.ndarray) -> jnp.ndarray:
+    """Round to nearest with halves away from zero (paper Eq. 7 footnote).
+
+    Inputs on the QDQ path are always >= 0 (t = (x - qmin)/scale), but the
+    sign-symmetric form is kept so the oracle is total.
+    """
+    return jnp.sign(t) * jnp.floor(jnp.abs(t) + 0.5)
+
+
+def qdq_ref(x2d: jnp.ndarray, qmin: jnp.ndarray, qmax: jnp.ndarray,
+            levels: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel linear fake-quantization of (C, N) data.
+
+    qmin/qmax/levels are (C, 1) f32; ``levels`` is 2^b - 1 for a b-bit code.
+    Dequantized value = qmin + code * scale, scale = (qmax - qmin)/levels.
+    Degenerate channels (qmax == qmin) collapse to qmin, matching the Rust
+    quantizer's flat-channel special case.
+    """
+    x2d = x2d.astype(jnp.float32)
+    rng = qmax - qmin
+    scale = jnp.maximum(rng, EPS) / levels
+    xc = jnp.clip(x2d, qmin, qmax)
+    code = round_half_away((xc - qmin) / scale)
+    xhat = qmin + code * scale
+    return jnp.where(rng > EPS, xhat, qmin)

@@ -1,0 +1,273 @@
+"""L2: the split GN-ResNet model in pure JAX (build-time only).
+
+The paper partitions ResNet-18 after its first three layers: the client-side
+sub-model produces the *smashed data* (cut-layer activations), the server
+runs the rest. We reproduce that topology as a GroupNorm ResNet (GN-ResNet-8)
+so every artifact is a pure function of (params, data) — BatchNorm running
+stats would leak mutable state into the AOT interface.
+
+  client : conv3x3(in,32) -> GN -> relu -> ResBlock(32->32, stride 2)
+           => smashed data (B, 32, 16, 16) for 32x32 inputs
+  server : ResBlock(32->64, s2) -> ResBlock(64->128, s2) -> GAP -> FC(classes)
+
+Four phase functions are AOT-lowered (see aot.py):
+
+  client_fwd  (cp..., x)                -> (acts,)
+  server_step (sp..., acts, y, lr)      -> (loss, g_acts, sp'...)
+  client_bwd  (cp..., x, g_acts, lr)    -> (cp'...,)
+  eval_logits (cp..., sp..., x)         -> (logits,)
+
+All of them take/return *flat* tuples of arrays — the PJRT interface has no
+pytrees — with the ordering pinned by client_spec()/server_spec(), which is
+also serialized into the manifest so the Rust runtime addresses parameters
+by name.
+
+Training semantics match the paper's setup: plain SGD (lr supplied as a
+runtime scalar), softmax cross-entropy on integer labels. ``server_step``
+fuses forward, backward, the gradient w.r.t. the smashed data (the downlink
+payload) and the SGD update into one HLO module; ``client_bwd`` recomputes
+the client forward and applies the chain rule with the (decompressed)
+upstream gradient.
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static shape configuration baked into the AOT artifacts."""
+
+    name: str = "ham"
+    in_ch: int = 3
+    num_classes: int = 7
+    batch: int = 32
+    img: int = 32
+    width: int = 32          # channels at the cut layer
+    gn_groups: int = 8
+
+    @property
+    def cut_shape(self) -> Tuple[int, int, int, int]:
+        """Smashed-data shape (B, C, H, W) after the stride-2 client block."""
+        return (self.batch, self.width, self.img // 2, self.img // 2)
+
+
+HAM_CONFIG = ModelConfig(name="ham", in_ch=3, num_classes=7)
+MNIST_CONFIG = ModelConfig(name="mnist", in_ch=1, num_classes=10)
+
+CONFIGS = {c.name: c for c in (HAM_CONFIG, MNIST_CONFIG)}
+
+
+# --------------------------------------------------------------------------
+# Parameter specs — the single source of truth for flat ordering.
+# --------------------------------------------------------------------------
+
+def _block_spec(prefix: str, cin: int, cout: int) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Residual block params: two 3x3 convs + GN affine + 1x1 projection."""
+    return [
+        (f"{prefix}.conv1", (cout, cin, 3, 3)),
+        (f"{prefix}.gn1.scale", (cout,)),
+        (f"{prefix}.gn1.bias", (cout,)),
+        (f"{prefix}.conv2", (cout, cout, 3, 3)),
+        (f"{prefix}.gn2.scale", (cout,)),
+        (f"{prefix}.gn2.bias", (cout,)),
+        (f"{prefix}.proj", (cout, cin, 1, 1)),
+        (f"{prefix}.gnp.scale", (cout,)),
+        (f"{prefix}.gnp.bias", (cout,)),
+    ]
+
+
+def client_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    w = cfg.width
+    return [
+        ("stem.conv", (w, cfg.in_ch, 3, 3)),
+        ("stem.gn.scale", (w,)),
+        ("stem.gn.bias", (w,)),
+    ] + _block_spec("block1", w, w)
+
+
+def server_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    w = cfg.width
+    return (
+        _block_spec("block2", w, 2 * w)
+        + _block_spec("block3", 2 * w, 4 * w)
+        + [
+            ("fc.weight", (4 * w, cfg.num_classes)),
+            ("fc.bias", (cfg.num_classes,)),
+        ]
+    )
+
+
+def param_count(spec: List[Tuple[str, Tuple[int, ...]]]) -> int:
+    total = 0
+    for _, shape in spec:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def init_params(spec: List[Tuple[str, Tuple[int, ...]]], key: jax.Array
+                ) -> List[jnp.ndarray]:
+    """He-normal init for convs/FC, ones/zeros for GN scale/bias."""
+    out = []
+    for name, shape in spec:
+        key, sub = jax.random.split(key)
+        if name.endswith(".scale"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(".bias"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name == "fc.weight":
+            fan_in = shape[0]
+            out.append(jax.random.normal(sub, shape, jnp.float32)
+                       * jnp.sqrt(2.0 / fan_in))
+        else:  # conv kernels (cout, cin, kh, kw)
+            fan_in = shape[1] * shape[2] * shape[3]
+            out.append(jax.random.normal(sub, shape, jnp.float32)
+                       * jnp.sqrt(2.0 / fan_in))
+    return out
+
+
+def _as_dict(spec, flat) -> Dict[str, jnp.ndarray]:
+    assert len(spec) == len(flat), (len(spec), len(flat))
+    return {name: arr for (name, _), arr in zip(spec, flat)}
+
+
+# --------------------------------------------------------------------------
+# Layers
+# --------------------------------------------------------------------------
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """NCHW 'SAME' convolution with OIHW kernels."""
+    return lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def group_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               groups: int, eps: float = 1e-5) -> jnp.ndarray:
+    """Stateless GroupNorm over NCHW (normalizes within channel groups)."""
+    b, c, h, w = x.shape
+    g = min(groups, c)
+    xg = x.reshape(b, g, c // g, h, w)
+    mean = jnp.mean(xg, axis=(2, 3, 4), keepdims=True)
+    var = jnp.var(xg, axis=(2, 3, 4), keepdims=True)
+    xn = ((xg - mean) * lax.rsqrt(var + eps)).reshape(b, c, h, w)
+    return xn * scale[None, :, None, None] + bias[None, :, None, None]
+
+
+def res_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray], prefix: str,
+              stride: int, groups: int) -> jnp.ndarray:
+    """Projection residual block: out = relu(main(x) + proj(x))."""
+    h = conv2d(x, p[f"{prefix}.conv1"], stride)
+    h = group_norm(h, p[f"{prefix}.gn1.scale"], p[f"{prefix}.gn1.bias"], groups)
+    h = jax.nn.relu(h)
+    h = conv2d(h, p[f"{prefix}.conv2"], 1)
+    h = group_norm(h, p[f"{prefix}.gn2.scale"], p[f"{prefix}.gn2.bias"], groups)
+    s = conv2d(x, p[f"{prefix}.proj"], stride)
+    s = group_norm(s, p[f"{prefix}.gnp.scale"], p[f"{prefix}.gnp.bias"], groups)
+    return jax.nn.relu(h + s)
+
+
+# --------------------------------------------------------------------------
+# Sub-model forwards
+# --------------------------------------------------------------------------
+
+def client_forward(cfg: ModelConfig, cp: List[jnp.ndarray], x: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Client sub-model: (B, in_ch, 32, 32) -> smashed data (B, W, 16, 16)."""
+    p = _as_dict(client_spec(cfg), cp)
+    h = conv2d(x, p["stem.conv"], 1)
+    h = group_norm(h, p["stem.gn.scale"], p["stem.gn.bias"], cfg.gn_groups)
+    h = jax.nn.relu(h)
+    return res_block(h, p, "block1", 2, cfg.gn_groups)
+
+
+def server_forward(cfg: ModelConfig, sp: List[jnp.ndarray], acts: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Server sub-model: smashed data -> logits (B, num_classes)."""
+    p = _as_dict(server_spec(cfg), sp)
+    h = res_block(acts, p, "block2", 2, cfg.gn_groups)
+    h = res_block(h, p, "block3", 2, cfg.gn_groups)
+    h = jnp.mean(h, axis=(2, 3))  # global average pool -> (B, 4W)
+    return h @ p["fc.weight"] + p["fc.bias"]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy with integer labels."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# AOT phase functions (flat-tuple interfaces)
+# --------------------------------------------------------------------------
+
+def make_client_fwd(cfg: ModelConfig):
+    n = len(client_spec(cfg))
+
+    def client_fwd(*args):
+        cp, x = list(args[:n]), args[n]
+        return (client_forward(cfg, cp, x),)
+
+    return client_fwd
+
+
+def make_server_step(cfg: ModelConfig):
+    """(sp..., acts, y, lr) -> (loss, g_acts, sp'...). Fused fwd+bwd+SGD."""
+    n = len(server_spec(cfg))
+
+    def server_step(*args):
+        sp = list(args[:n])
+        acts, y, lr = args[n], args[n + 1], args[n + 2]
+
+        def loss_fn(sp_in, acts_in):
+            return cross_entropy(server_forward(cfg, sp_in, acts_in), y)
+
+        loss, (g_sp, g_acts) = jax.value_and_grad(loss_fn, argnums=(0, 1))(sp, acts)
+        new_sp = [p - lr * g for p, g in zip(sp, g_sp)]
+        return (loss, g_acts, *new_sp)
+
+    return server_step
+
+
+def make_client_bwd(cfg: ModelConfig):
+    """(cp..., x, g_acts, lr) -> (cp'...,). Recompute fwd, chain rule, SGD."""
+    n = len(client_spec(cfg))
+
+    def client_bwd(*args):
+        cp = list(args[:n])
+        x, g_acts, lr = args[n], args[n + 1], args[n + 2]
+
+        def fwd(cp_in):
+            return client_forward(cfg, cp_in, x)
+
+        _, vjp = jax.vjp(fwd, cp)
+        (g_cp,) = vjp(g_acts)
+        return tuple(p - lr * g for p, g in zip(cp, g_cp))
+
+    return client_bwd
+
+
+def make_eval_logits(cfg: ModelConfig):
+    """(cp..., sp..., x) -> (logits,): full-model inference for test acc."""
+    nc = len(client_spec(cfg))
+    ns = len(server_spec(cfg))
+
+    def eval_logits(*args):
+        cp = list(args[:nc])
+        sp = list(args[nc:nc + ns])
+        x = args[nc + ns]
+        acts = client_forward(cfg, cp, x)
+        return (server_forward(cfg, sp, acts),)
+
+    return eval_logits

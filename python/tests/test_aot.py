@@ -1,0 +1,110 @@
+"""AOT pipeline: HLO text well-formedness + manifest/blob consistency.
+
+These run against a small throwaway config (batch=2) in a tmpdir so they
+don't depend on `make artifacts` having run.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    cfg = M.ModelConfig(name="ham", batch=2)
+    aot.build_config(cfg, out, seed=0)
+    return os.path.join(out, "ham"), cfg
+
+
+def _manifest(built):
+    with open(os.path.join(built[0], "manifest.json")) as f:
+        return json.load(f)
+
+
+EXPECTED_ARTIFACTS = ["client_fwd", "server_step", "client_bwd",
+                      "eval_logits", "entropy", "qdq"]
+
+
+class TestAotOutputs:
+    def test_all_artifacts_written(self, built):
+        d, _ = built
+        man = _manifest(built)
+        for name in EXPECTED_ARTIFACTS:
+            assert name in man["artifacts"]
+            path = os.path.join(d, man["artifacts"][name]["file"])
+            assert os.path.getsize(path) > 100
+
+    def test_hlo_text_is_parseable_hlo(self, built):
+        """Every artifact must be HLO text with an ENTRY computation."""
+        d, _ = built
+        man = _manifest(built)
+        for name in EXPECTED_ARTIFACTS:
+            text = open(os.path.join(d, man["artifacts"][name]["file"])).read()
+            assert "HloModule" in text, name
+            assert "ENTRY" in text, name
+
+    def test_manifest_shapes_match_model_spec(self, built):
+        _, cfg = built
+        man = _manifest(built)
+        cspec = M.client_spec(cfg)
+        for entry, (name, shape) in zip(man["client_params"], cspec):
+            assert entry["name"] == name
+            assert tuple(entry["dims"]) == shape
+        cut = man["config"]["cut"]
+        assert (cut["b"], cut["c"], cut["h"], cut["w"]) == cfg.cut_shape
+
+    def test_init_blob_sizes(self, built):
+        d, cfg = built
+        man = _manifest(built)
+        csize = os.path.getsize(os.path.join(d, "client_init.bin"))
+        ssize = os.path.getsize(os.path.join(d, "server_init.bin"))
+        assert csize == 4 * M.param_count(M.client_spec(cfg))
+        assert ssize == 4 * M.param_count(M.server_spec(cfg))
+        assert man["client_param_count"] == M.param_count(M.client_spec(cfg))
+
+    def test_init_blob_roundtrip(self, built):
+        """The blob deserializes to exactly the jax init (offset layout)."""
+        d, cfg = built
+        man = _manifest(built)
+        blob = np.fromfile(os.path.join(d, "client_init.bin"), dtype="<f4")
+        key = jax.random.PRNGKey(0)
+        kc, _ = jax.random.split(key)
+        cinit = M.init_params(M.client_spec(cfg), kc)
+        for entry, arr in zip(man["client_params"], cinit):
+            seg = blob[entry["offset"]:entry["offset"] + entry["size"]]
+            np.testing.assert_array_equal(seg, np.asarray(arr).ravel())
+
+    def test_server_step_io_counts(self, built):
+        _, cfg = built
+        man = _manifest(built)
+        ss = man["artifacts"]["server_step"]
+        nsp = len(M.server_spec(cfg))
+        assert len(ss["inputs"]) == nsp + 3      # sp..., acts, y, lr
+        assert len(ss["outputs"]) == nsp + 2     # loss, g_acts, sp'...
+
+    def test_entropy_artifact_io(self, built):
+        _, cfg = built
+        man = _manifest(built)
+        ent = man["artifacts"]["entropy"]
+        assert [tuple(i["dims"]) for i in ent["inputs"]] == [cfg.cut_shape]
+        assert tuple(ent["outputs"][0]["dims"]) == (cfg.width,)
+
+    def test_deterministic_hlo(self, built, tmp_path):
+        """Rebuilding yields byte-identical HLO (sha recorded in manifest)."""
+        out2 = str(tmp_path / "rebuild")
+        cfg = M.ModelConfig(name="ham", batch=2)
+        aot.build_config(cfg, out2, seed=0)
+        man1 = _manifest(built)
+        with open(os.path.join(out2, "ham", "manifest.json")) as f:
+            man2 = json.load(f)
+        for name in EXPECTED_ARTIFACTS:
+            assert man1["artifacts"][name]["sha256"] == \
+                man2["artifacts"][name]["sha256"], name

@@ -1,0 +1,176 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/values; fixed cases pin the exact configurations
+the AOT artifacts are built at (C=32, N=8192).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import entropy_kernel, qdq_kernel, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed=0, scale=1.0, offset=0.0):
+    rng = np.random.RandomState(seed)
+    return (rng.randn(*shape) * scale + offset).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# channel entropy
+# --------------------------------------------------------------------------
+
+class TestEntropyKernel:
+    def test_matches_ref_basic(self):
+        x = _rand((8, 256))
+        got = np.asarray(entropy_kernel.channel_entropy(jnp.array(x)))
+        want = np.asarray(ref.channel_entropy_ref(jnp.array(x)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_artifact_shape(self):
+        """The exact (C, N) the AOT artifact is compiled at."""
+        x = _rand((32, 32 * 16 * 16), seed=3)
+        got = np.asarray(entropy_kernel.channel_entropy(jnp.array(x)))
+        want = np.asarray(ref.channel_entropy_ref(jnp.array(x)))
+        assert got.shape == (32,)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_nchw_wrapper_matches_2d(self):
+        acts = _rand((4, 8, 6, 6), seed=1)
+        got = np.asarray(entropy_kernel.channel_entropy_nchw(jnp.array(acts)))
+        x2d = np.transpose(acts, (1, 0, 2, 3)).reshape(8, -1)
+        want = np.asarray(ref.channel_entropy_ref(jnp.array(x2d)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_constant_channel_max_entropy(self):
+        """A flat channel normalizes to all-zeros -> uniform softmax -> ln N."""
+        n = 128
+        x = np.zeros((1, n), np.float32)
+        got = float(entropy_kernel.channel_entropy(jnp.array(x))[0])
+        assert got == pytest.approx(np.log(n), rel=1e-5)
+
+    def test_peaked_channel_lower_entropy(self):
+        """One huge element concentrates mass -> entropy below ln N."""
+        n = 256
+        x = np.zeros((1, n), np.float32)
+        x[0, 0] = 1000.0
+        flat = float(entropy_kernel.channel_entropy(jnp.zeros((1, n)))[0])
+        peaked = float(entropy_kernel.channel_entropy(jnp.array(x))[0])
+        assert peaked < flat
+
+    def test_entropy_bounds(self):
+        """0 <= H <= ln N for any input."""
+        for seed in range(5):
+            x = _rand((16, 333), seed=seed, scale=10 ** (seed - 2))
+            h = np.asarray(entropy_kernel.channel_entropy(jnp.array(x)))
+            assert np.all(h >= 0.0)
+            assert np.all(h <= np.log(333) + 1e-4)
+
+    def test_shift_invariance(self):
+        """Min-max normalization makes entropy shift-invariant."""
+        x = _rand((4, 64), seed=7)
+        h1 = np.asarray(entropy_kernel.channel_entropy(jnp.array(x)))
+        h2 = np.asarray(entropy_kernel.channel_entropy(jnp.array(x + 37.5)))
+        np.testing.assert_allclose(h1, h2, rtol=1e-4, atol=1e-4)
+
+    def test_scale_invariance(self):
+        """...and positive-scale invariant."""
+        x = _rand((4, 64), seed=8)
+        h1 = np.asarray(entropy_kernel.channel_entropy(jnp.array(x)))
+        h2 = np.asarray(entropy_kernel.channel_entropy(jnp.array(x * 5.0)))
+        np.testing.assert_allclose(h1, h2, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        c=st.integers(1, 12),
+        n=st.integers(2, 300),
+        seed=st.integers(0, 2 ** 16),
+        scale=st.floats(1e-3, 1e3),
+    )
+    def test_matches_ref_hypothesis(self, c, n, seed, scale):
+        x = _rand((c, n), seed=seed, scale=scale)
+        got = np.asarray(entropy_kernel.channel_entropy(jnp.array(x)))
+        want = np.asarray(ref.channel_entropy_ref(jnp.array(x)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# quantize-dequantize
+# --------------------------------------------------------------------------
+
+def _qdq_params(x, bits):
+    qmin = x.min(axis=1, keepdims=True)
+    qmax = x.max(axis=1, keepdims=True)
+    lv = np.full((x.shape[0], 1), float(2 ** bits - 1), np.float32)
+    return qmin, qmax, lv
+
+
+class TestQdqKernel:
+    @pytest.mark.parametrize("bits", [2, 3, 4, 6, 8])
+    def test_matches_ref(self, bits):
+        x = _rand((8, 200), seed=bits)
+        qmin, qmax, lv = _qdq_params(x, bits)
+        got = np.asarray(qdq_kernel.qdq(*map(jnp.array, (x, qmin, qmax, lv))))
+        want = np.asarray(ref.qdq_ref(*map(jnp.array, (x, qmin, qmax, lv))))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_error_bounded_by_half_step(self):
+        """|x - qdq(x)| <= scale/2 + eps for in-range values."""
+        x = _rand((4, 500), seed=11)
+        qmin, qmax, lv = _qdq_params(x, 4)
+        y = np.asarray(qdq_kernel.qdq(*map(jnp.array, (x, qmin, qmax, lv))))
+        step = (qmax - qmin) / lv
+        assert np.all(np.abs(x - y) <= step / 2 + 1e-5)
+
+    def test_idempotent(self):
+        """qdq(qdq(x)) == qdq(x): quantized values are fixed points."""
+        x = _rand((4, 100), seed=12)
+        qmin, qmax, lv = _qdq_params(x, 3)
+        y1 = np.asarray(qdq_kernel.qdq(*map(jnp.array, (x, qmin, qmax, lv))))
+        y2 = np.asarray(qdq_kernel.qdq(*map(jnp.array, (y1, qmin, qmax, lv))))
+        np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)
+
+    def test_flat_channel_collapses_to_qmin(self):
+        x = np.full((2, 16), 3.25, np.float32)
+        qmin = np.full((2, 1), 3.25, np.float32)
+        qmax = np.full((2, 1), 3.25, np.float32)
+        lv = np.full((2, 1), 15.0, np.float32)
+        y = np.asarray(qdq_kernel.qdq(*map(jnp.array, (x, qmin, qmax, lv))))
+        np.testing.assert_allclose(y, 3.25)
+
+    def test_endpoints_exact(self):
+        """qmin and qmax are representable exactly."""
+        x = np.array([[0.0, 1.0, 0.5]], np.float32)
+        qmin = np.array([[0.0]], np.float32)
+        qmax = np.array([[1.0]], np.float32)
+        lv = np.array([[3.0]], np.float32)
+        y = np.asarray(qdq_kernel.qdq(*map(jnp.array, (x, qmin, qmax, lv))))
+        np.testing.assert_allclose(y[0, 0], 0.0, atol=1e-7)
+        np.testing.assert_allclose(y[0, 1], 1.0, atol=1e-7)
+
+    def test_nchw_wrapper_roundtrip_shape(self):
+        acts = _rand((4, 8, 6, 6), seed=13)
+        qmin = acts.transpose(1, 0, 2, 3).reshape(8, -1).min(1, keepdims=True)
+        qmax = acts.transpose(1, 0, 2, 3).reshape(8, -1).max(1, keepdims=True)
+        lv = np.full((8, 1), 255.0, np.float32)
+        y = np.asarray(qdq_kernel.qdq_nchw(*map(jnp.array, (acts, qmin, qmax, lv))))
+        assert y.shape == acts.shape
+        assert np.abs(y - acts).max() < (qmax - qmin).max() / 255.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        c=st.integers(1, 8),
+        n=st.integers(2, 200),
+        bits=st.integers(2, 8),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_matches_ref_hypothesis(self, c, n, bits, seed):
+        x = _rand((c, n), seed=seed, scale=3.0)
+        qmin, qmax, lv = _qdq_params(x, bits)
+        got = np.asarray(qdq_kernel.qdq(*map(jnp.array, (x, qmin, qmax, lv))))
+        want = np.asarray(ref.qdq_ref(*map(jnp.array, (x, qmin, qmax, lv))))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

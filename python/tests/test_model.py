@@ -1,0 +1,162 @@
+"""L2 correctness: split model shapes, gradient flow, split/full parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(name="ham", batch=4)
+
+
+@pytest.fixture(scope="module")
+def params():
+    key = jax.random.PRNGKey(0)
+    kc, ks = jax.random.split(key)
+    cp = M.init_params(M.client_spec(CFG), kc)
+    sp = M.init_params(M.server_spec(CFG), ks)
+    return cp, sp
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.RandomState(0)
+    x = jnp.array(rng.randn(4, 3, 32, 32), jnp.float32)
+    y = jnp.array([0, 1, 2, 3], jnp.int32)
+    return x, y
+
+
+class TestShapes:
+    def test_cut_shape(self, params, batch):
+        cp, _ = params
+        acts = M.client_forward(CFG, cp, batch[0])
+        assert acts.shape == CFG.cut_shape == (4, 32, 16, 16)
+
+    def test_logits_shape(self, params, batch):
+        cp, sp = params
+        acts = M.client_forward(CFG, cp, batch[0])
+        logits = M.server_forward(CFG, sp, acts)
+        assert logits.shape == (4, 7)
+
+    def test_mnist_config_shapes(self):
+        cfg = M.ModelConfig(name="mnist", in_ch=1, num_classes=10, batch=2)
+        cp = M.init_params(M.client_spec(cfg), jax.random.PRNGKey(1))
+        sp = M.init_params(M.server_spec(cfg), jax.random.PRNGKey(2))
+        x = jnp.zeros((2, 1, 32, 32), jnp.float32)
+        logits = M.server_forward(cfg, sp, M.client_forward(cfg, cp, x))
+        assert logits.shape == (2, 10)
+
+    def test_param_counts_match_spec(self, params):
+        cp, sp = params
+        assert sum(int(np.prod(p.shape)) for p in cp) == \
+            M.param_count(M.client_spec(CFG))
+        assert sum(int(np.prod(p.shape)) for p in sp) == \
+            M.param_count(M.server_spec(CFG))
+
+
+class TestServerStep:
+    def test_outputs(self, params, batch):
+        _, sp = params
+        cp, _ = params
+        acts = M.client_forward(CFG, cp, batch[0])
+        out = M.make_server_step(CFG)(*sp, acts, batch[1], jnp.float32(0.01))
+        assert len(out) == 2 + len(sp)
+        loss, g_acts = out[0], out[1]
+        assert loss.shape == ()
+        assert float(loss) > 0
+        assert g_acts.shape == acts.shape
+
+    def test_sgd_moves_params(self, params, batch):
+        cp, sp = params
+        acts = M.client_forward(CFG, cp, batch[0])
+        out = M.make_server_step(CFG)(*sp, acts, batch[1], jnp.float32(0.1))
+        new_sp = out[2:]
+        deltas = [float(jnp.abs(a - b).max()) for a, b in zip(sp, new_sp)]
+        assert max(deltas) > 0.0
+
+    def test_zero_lr_freezes_params(self, params, batch):
+        cp, sp = params
+        acts = M.client_forward(CFG, cp, batch[0])
+        out = M.make_server_step(CFG)(*sp, acts, batch[1], jnp.float32(0.0))
+        for a, b in zip(sp, out[2:]):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_loss_decreases_over_steps(self, params, batch):
+        """A few SGD steps on a fixed batch must reduce the loss."""
+        cp, sp = params
+        x, y = batch
+        acts = M.client_forward(CFG, cp, x)
+        step = jax.jit(M.make_server_step(CFG))
+        sp_cur = list(sp)
+        losses = []
+        for _ in range(8):
+            out = step(*sp_cur, acts, y, jnp.float32(0.05))
+            losses.append(float(out[0]))
+            sp_cur = list(out[2:])
+        assert losses[-1] < losses[0]
+
+
+class TestClientBwd:
+    def test_chain_rule_matches_end_to_end(self, params, batch):
+        """client_bwd(g_acts from server) == grad of the composed loss."""
+        cp, sp = params
+        x, y = batch
+        lr = 0.01
+
+        # end-to-end gradient
+        def full_loss(cp_in):
+            acts = M.client_forward(CFG, cp_in, x)
+            return M.cross_entropy(M.server_forward(CFG, sp, acts), y)
+
+        g_full = jax.grad(full_loss)(cp)
+        expected = [p - lr * g for p, g in zip(cp, g_full)]
+
+        # split pipeline
+        acts = M.client_forward(CFG, cp, x)
+        out = M.make_server_step(CFG)(*sp, acts, y, jnp.float32(0.0))
+        g_acts = out[1]
+        got = M.make_client_bwd(CFG)(*cp, x, g_acts, jnp.float32(lr))
+
+        for e, g in zip(expected, got):
+            np.testing.assert_allclose(np.asarray(e), np.asarray(g),
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_zero_gradient_noop(self, params, batch):
+        cp, _ = params
+        g0 = jnp.zeros(CFG.cut_shape, jnp.float32)
+        got = M.make_client_bwd(CFG)(*cp, batch[0], g0, jnp.float32(1.0))
+        for a, b in zip(cp, got):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+class TestEvalAndParity:
+    def test_eval_matches_split_pipeline(self, params, batch):
+        cp, sp = params
+        logits_eval = M.make_eval_logits(CFG)(*cp, *sp, batch[0])[0]
+        acts = M.client_forward(CFG, cp, batch[0])
+        logits_split = M.server_forward(CFG, sp, acts)
+        np.testing.assert_allclose(np.asarray(logits_eval),
+                                   np.asarray(logits_split),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_cross_entropy_uniform(self):
+        logits = jnp.zeros((2, 7))
+        y = jnp.array([3, 5], jnp.int32)
+        assert float(M.cross_entropy(logits, y)) == pytest.approx(np.log(7), rel=1e-5)
+
+    def test_deterministic_init(self):
+        a = M.init_params(M.client_spec(CFG), jax.random.PRNGKey(42))
+        b = M.init_params(M.client_spec(CFG), jax.random.PRNGKey(42))
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_group_norm_normalizes(self):
+        rng = np.random.RandomState(0)
+        x = jnp.array(rng.randn(2, 8, 4, 4) * 10 + 5, jnp.float32)
+        y = M.group_norm(x, jnp.ones(8), jnp.zeros(8), groups=4)
+        yg = np.asarray(y).reshape(2, 4, 2, 4, 4)
+        np.testing.assert_allclose(yg.mean(axis=(2, 3, 4)), 0.0, atol=1e-4)
+        np.testing.assert_allclose(yg.std(axis=(2, 3, 4)), 1.0, atol=1e-2)

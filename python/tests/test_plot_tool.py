@@ -1,0 +1,57 @@
+"""tools/plot.py: parsing + rendering of the bench JSON sidecars."""
+
+import json
+import os
+import subprocess
+import sys
+
+TOOL = os.path.join(os.path.dirname(__file__), "..", "..", "tools", "plot.py")
+
+
+def _doc():
+    return {
+        "title": "fig_test",
+        "rows": [
+            {"codec": "slacc", "final_acc%": 71.9, "MB_total": 12.3},
+            {"codec": "powerquant", "final_acc%": 65.0, "MB_total": 20.0},
+            {"series": "slacc_acc_vs_time",
+             "points": [[0.0, 0.1], [1.0, 0.5], [2.0, 0.7]]},
+            {"series": "powerquant_acc_vs_time",
+             "points": [[0.0, 0.1], [1.5, 0.4], [3.0, 0.6]]},
+        ],
+    }
+
+
+def test_plot_renders_table_and_chart(tmp_path):
+    p = tmp_path / "fig_test.json"
+    p.write_text(json.dumps(_doc()))
+    out = subprocess.run(
+        [sys.executable, TOOL, str(p)], capture_output=True, text=True, check=True
+    )
+    assert "fig_test" in out.stdout
+    assert "slacc" in out.stdout
+    assert "powerquant" in out.stdout
+    # chart frame + legend markers
+    assert "+----" in out.stdout.replace("-" * 20, "----")
+    assert "o slacc_acc_vs_time" in out.stdout
+
+
+def test_plot_no_files_is_graceful(tmp_path):
+    out = subprocess.run(
+        [sys.executable, TOOL, str(tmp_path / "nope*.json")],
+        capture_output=True,
+        text=True,
+    )
+    assert out.returncode == 1
+    assert "no bench_results" in out.stdout
+
+
+def test_plot_handles_flat_series(tmp_path):
+    doc = {"title": "flat", "rows": [
+        {"series": "s", "points": [[0.0, 0.5], [1.0, 0.5]]}]}
+    p = tmp_path / "flat.json"
+    p.write_text(json.dumps(doc))
+    out = subprocess.run(
+        [sys.executable, TOOL, str(p)], capture_output=True, text=True, check=True
+    )
+    assert "flat" in out.stdout

@@ -1,0 +1,53 @@
+//! Fig. 3 — instantaneous vs historical entropy: train transmitting the
+//! single channel with the highest instantaneous / historical entropy and
+//! compare (a) the accuracy trajectory and (b) its stability (STD of the
+//! accuracy over the evaluation tail).
+//!
+//! Paper shape: instantaneous converges faster early but is less stable /
+//! lower final; historical is smoother but adapts more slowly.
+//!
+//!     cargo bench --bench fig3_entropy_modes
+
+#[path = "common.rs"]
+mod common;
+
+use slacc::bench::Table;
+use slacc::codecs::selection::Selection;
+use slacc::config::CodecChoice;
+
+fn main() {
+    common::require_artifacts("ham");
+    let modes = [
+        ("instantaneous", Selection::EntropyInstant),
+        ("historical", Selection::EntropyHistorical),
+    ];
+
+    let mut table = Table::new(
+        "fig3: highest-entropy channel selection (synth-HAM, IID)",
+        &["mode", "final_acc%", "best_acc%", "tail_acc_mean%", "tail_acc_std%"],
+    );
+
+    for (name, strategy) in modes {
+        let mut cfg = common::base_cfg("ham");
+        cfg.devices = 2;
+        cfg.eval_every = (common::rounds() / 16).max(1); // dense eval for STD
+        cfg.codec = CodecChoice::Select { strategy, n_select: 1 };
+        let report = common::run(cfg, &format!("fig3 {name}"));
+        let (tail_mean, tail_std) = common::tail_acc_stats(&report, 6);
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}", report.final_accuracy * 100.0),
+            format!("{:.2}", report.best_accuracy * 100.0),
+            format!("{:.2}", tail_mean * 100.0),
+            format!("{:.2}", tail_std * 100.0),
+        ]);
+        let curve: Vec<(f64, f64)> = report
+            .metrics
+            .accuracy_curve()
+            .into_iter()
+            .map(|(r, a)| (r as f64, a))
+            .collect();
+        table.series(&format!("fig3_{name}_acc_vs_round"), &curve);
+    }
+    table.finish();
+}

@@ -1,0 +1,59 @@
+//! Fig. 4 — the balancing hyperparameter α (Eq. 2/3): accuracy and
+//! time-to-accuracy for fixed α ∈ {0, 0.25, 0.5, 0.75, 1.0} vs the paper's
+//! adaptive α = t/T, with the full SL-ACC codec active.
+//!
+//! Paper shape: fixed α trades convergence speed vs final accuracy; the
+//! optimal fixed α shifts over training; adaptive t/T dominates.
+//!
+//!     cargo bench --bench fig4_alpha
+
+#[path = "common.rs"]
+mod common;
+
+use slacc::bench::Table;
+use slacc::config::CodecChoice;
+use slacc::entropy::AlphaSchedule;
+
+fn main() {
+    common::require_artifacts("ham");
+    let schedules = [
+        ("0.00", Some(AlphaSchedule::Fixed(0.0))),
+        ("0.25", Some(AlphaSchedule::Fixed(0.25))),
+        ("0.50", Some(AlphaSchedule::Fixed(0.5))),
+        ("0.75", Some(AlphaSchedule::Fixed(0.75))),
+        ("1.00", Some(AlphaSchedule::Fixed(1.0))),
+        ("t/T (adaptive)", None),
+    ];
+
+    let mut table = Table::new(
+        "fig4: balancing hyperparameter alpha (SL-ACC, synth-HAM, IID)",
+        &["alpha", "final_acc%", "best_acc%", "sim_time_s", "time_to_55%_s"],
+    );
+
+    for (name, schedule) in schedules {
+        let mut cfg = common::base_cfg("ham");
+        cfg.devices = 2;
+        cfg.codec = CodecChoice::Named("slacc".into());
+        cfg.alpha = schedule;
+        let report = common::run(cfg, &format!("fig4 alpha={name}"));
+        let ttt = report
+            .metrics
+            .time_to_accuracy(0.55)
+            .map_or("-".to_string(), |t| format!("{t:.1}"));
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}", report.final_accuracy * 100.0),
+            format!("{:.2}", report.best_accuracy * 100.0),
+            format!("{:.1}", report.total_sim_time_s),
+            ttt,
+        ]);
+        let curve: Vec<(f64, f64)> = report
+            .metrics
+            .accuracy_curve()
+            .into_iter()
+            .map(|(r, a)| (r as f64, a))
+            .collect();
+        table.series(&format!("fig4b_alpha_{name}_acc_vs_round"), &curve);
+    }
+    table.finish();
+}

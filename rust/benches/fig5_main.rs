@@ -1,0 +1,67 @@
+//! Fig. 5 — the headline result: SL-ACC vs PowerQuant-SL vs RandTopk-SL vs
+//! SplitFC on both datasets under IID and Dirichlet(0.5) non-IID, reported
+//! as test accuracy vs *simulated wall-clock time* (the paper's axes) plus
+//! final accuracy and communication volume.
+//!
+//! Expected shape (paper): SL-ACC reaches any target accuracy first and
+//! ends highest; SplitFC > PowerQuant-SL > RandTopk-SL.
+//!
+//!     cargo bench --bench fig5_main
+//!
+//! Scale with SLACC_BENCH_ROUNDS / SLACC_BENCH_TRAIN_N (see common.rs).
+
+#[path = "common.rs"]
+mod common;
+
+use slacc::bench::Table;
+use slacc::config::CodecChoice;
+use slacc::data::partition::Partition;
+
+const CODECS: &[&str] = &["slacc", "powerquant", "randtopk", "splitfc"];
+
+fn main() {
+    let datasets = ["ham", "mnist"];
+    for d in datasets {
+        common::require_artifacts(d);
+    }
+
+    for dataset in datasets {
+        for (setting, part) in [
+            ("IID", Partition::Iid),
+            ("non-IID", Partition::Dirichlet { beta: 0.5 }),
+        ] {
+            let mut table = Table::new(
+                &format!("fig5: {dataset} {setting}"),
+                &["codec", "final_acc%", "best_acc%", "MB_total", "sim_time_s",
+                  "time_to_50%_s"],
+            );
+            for codec in CODECS {
+                let mut cfg = common::base_cfg(dataset);
+                cfg.partition = part;
+                cfg.codec = CodecChoice::Named(codec.to_string());
+                let report =
+                    common::run(cfg, &format!("fig5 {dataset} {setting} {codec}"));
+                let ttt = report
+                    .metrics
+                    .time_to_accuracy(0.5)
+                    .map_or("-".to_string(), |t| format!("{t:.1}"));
+                table.row(vec![
+                    codec.to_string(),
+                    format!("{:.2}", report.final_accuracy * 100.0),
+                    format!("{:.2}", report.best_accuracy * 100.0),
+                    format!(
+                        "{:.2}",
+                        (report.total_bytes_up + report.total_bytes_down) as f64 / 1e6
+                    ),
+                    format!("{:.1}", report.total_sim_time_s),
+                    ttt,
+                ]);
+                table.series(
+                    &format!("fig5_{dataset}_{setting}_{codec}_acc_vs_time"),
+                    &report.metrics.accuracy_vs_time(),
+                );
+            }
+            table.finish();
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Fig. 6 — ACII ablation: channel selection by blended entropy (ACII) vs
+//! highest-STD vs random, on synth-HAM under IID and non-IID.
+//!
+//! Paper shape: ACII > STD > Random in both convergence speed and final
+//! accuracy.
+//!
+//!     cargo bench --bench fig6_acii_ablation
+
+#[path = "common.rs"]
+mod common;
+
+use slacc::bench::Table;
+use slacc::codecs::selection::Selection;
+use slacc::config::CodecChoice;
+use slacc::data::partition::Partition;
+
+fn main() {
+    common::require_artifacts("ham");
+    let strategies = [
+        ("ACII", Selection::EntropyBlended),
+        ("STD", Selection::MaxStd),
+        ("Random", Selection::Random),
+    ];
+
+    for (setting, part) in [
+        ("IID", Partition::Iid),
+        ("non-IID", Partition::Dirichlet { beta: 0.5 }),
+    ] {
+        let mut table = Table::new(
+            &format!("fig6: ACII ablation (synth-HAM, {setting})"),
+            &["selection", "final_acc%", "best_acc%", "mean_loss_tail"],
+        );
+        for (name, strategy) in strategies {
+            let mut cfg = common::base_cfg("ham");
+            cfg.devices = 2;
+            cfg.partition = part;
+            // transmit a quarter of the channels, chosen by the strategy:
+            // isolates the selection criterion itself (Fig. 6's question)
+            cfg.codec = CodecChoice::Select {
+                strategy,
+                n_select: 8,
+            };
+            let report = common::run(cfg, &format!("fig6 {setting} {name}"));
+            table.row(vec![
+                name.to_string(),
+                format!("{:.2}", report.final_accuracy * 100.0),
+                format!("{:.2}", report.best_accuracy * 100.0),
+                format!("{:.4}", report.metrics.mean_loss_tail(5)),
+            ]);
+            let curve: Vec<(f64, f64)> = report
+                .metrics
+                .accuracy_curve()
+                .into_iter()
+                .map(|(r, a)| (r as f64, a))
+                .collect();
+            table.series(&format!("fig6_{setting}_{name}_acc_vs_round"), &curve);
+        }
+        table.finish();
+    }
+}

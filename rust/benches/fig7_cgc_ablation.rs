@@ -1,0 +1,54 @@
+//! Fig. 7 — CGC ablation: SL-ACC's grouped adaptive bit allocation vs
+//! fixed-bit PowerQuant and EasyQuant (uniform allocation across channels),
+//! on synth-HAM under IID and non-IID. Also includes the verbatim Eq. 6
+//! bit-allocation variant (`slacc-paper-eq6`) to quantify the floor-rule
+//! degeneracy documented in DESIGN.md.
+//!
+//! Paper shape: CGC (SL-ACC) > PowerQuant > EasyQuant at matched/ lower
+//! communication volume.
+//!
+//!     cargo bench --bench fig7_cgc_ablation
+
+#[path = "common.rs"]
+mod common;
+
+use slacc::bench::Table;
+use slacc::config::CodecChoice;
+use slacc::data::partition::Partition;
+
+const CODECS: &[&str] = &["slacc", "slacc-paper-eq6", "powerquant", "easyquant"];
+
+fn main() {
+    common::require_artifacts("ham");
+
+    for (setting, part) in [
+        ("IID", Partition::Iid),
+        ("non-IID", Partition::Dirichlet { beta: 0.5 }),
+    ] {
+        let mut table = Table::new(
+            &format!("fig7: CGC ablation (synth-HAM, {setting})"),
+            &["quantizer", "final_acc%", "best_acc%", "MB_total", "sim_time_s"],
+        );
+        for codec in CODECS {
+            let mut cfg = common::base_cfg("ham");
+            cfg.partition = part;
+            cfg.codec = CodecChoice::Named(codec.to_string());
+            let report = common::run(cfg, &format!("fig7 {setting} {codec}"));
+            table.row(vec![
+                codec.to_string(),
+                format!("{:.2}", report.final_accuracy * 100.0),
+                format!("{:.2}", report.best_accuracy * 100.0),
+                format!(
+                    "{:.2}",
+                    (report.total_bytes_up + report.total_bytes_down) as f64 / 1e6
+                ),
+                format!("{:.1}", report.total_sim_time_s),
+            ]);
+            table.series(
+                &format!("fig7_{setting}_{codec}_acc_vs_time"),
+                &report.metrics.accuracy_vs_time(),
+            );
+        }
+        table.finish();
+    }
+}

@@ -1,0 +1,137 @@
+//! §Perf micro-benchmarks: the L3 hot paths (codec compress/decompress,
+//! host entropy, relayout, k-means, bit packing) and the PJRT executes
+//! (client_fwd / server_step / entropy kernel) at the real smashed-data
+//! shape. This is the before/after instrument for EXPERIMENTS.md §Perf.
+//!
+//!     cargo bench --bench microbench
+
+#[path = "common.rs"]
+mod common;
+
+use slacc::bench::Bencher;
+use slacc::cluster::kmeans_1d;
+use slacc::codecs::{self, Codec, RoundCtx};
+use slacc::entropy::shannon;
+use slacc::quant::bitpack;
+use slacc::runtime::{Arg, Engine};
+use slacc::tensor::Tensor;
+use slacc::util::rng::Pcg32;
+
+fn real_shape_acts(seed: u64) -> Tensor {
+    // the artifact shape: (32, 32, 16, 16) = 1 MiB of smashed data
+    let (b, c, h, w) = (32usize, 32usize, 16usize, 16usize);
+    let mut rng = Pcg32::seeded(seed);
+    let data: Vec<f32> = (0..b * c * h * w)
+        .map(|_| rng.next_gaussian().max(0.0))
+        .collect();
+    Tensor::new(vec![b, c, h, w], data)
+}
+
+fn main() {
+    let acts = real_shape_acts(1);
+    let cm = acts.to_channel_major();
+    let raw_bytes = cm.data().len() * 4;
+    let mut results = Vec::new();
+
+    // --- L3 pure-Rust hot paths ---
+    results.push(
+        Bencher::new("relayout: NCHW -> channel-major (1 MiB)")
+            .run_bytes(|| {
+                std::hint::black_box(acts.to_channel_major());
+                raw_bytes
+            }),
+    );
+    results.push(
+        Bencher::new("host entropy: 32ch x 8192 (mirror of L1 kernel)")
+            .run_bytes(|| {
+                std::hint::black_box(shannon::entropies(&cm));
+                raw_bytes
+            }),
+    );
+    let ent = shannon::entropies(&cm);
+    let mut rng = Pcg32::seeded(2);
+    results.push(Bencher::new("kmeans_1d: 32 entropies, g=4 (x4 restarts)").run(|| {
+        std::hint::black_box(kmeans_1d(&ent, 4, &mut rng));
+    }));
+
+    let codes: Vec<u32> = (0..8192u32).map(|i| i % 32).collect();
+    results.push(
+        Bencher::new("bitpack: 8192 codes @ 5 bits")
+            .run_bytes(|| bitpack::pack(&codes, 5).len()),
+    );
+    let packed = bitpack::pack(&codes, 5);
+    results.push(
+        Bencher::new("bitunpack: 8192 codes @ 5 bits")
+            .run_bytes(|| bitpack::unpack(&packed, 5, 8192).len() * 4),
+    );
+
+    for name in ["slacc", "uniform4", "powerquant", "randtopk", "splitfc", "easyquant"] {
+        let mut codec = codecs::by_name(name, cm.channels, 1000, 3).unwrap();
+        let mut wire = Vec::new();
+        results.push(
+            Bencher::new(&format!("compress[{name}]: 1 MiB activations"))
+                .run_bytes(|| {
+                    wire = codec.compress(&cm, RoundCtx { entropy: Some(&ent) });
+                    raw_bytes
+                }),
+        );
+        results.push(
+            Bencher::new(&format!("decompress[{name}]"))
+                .run_bytes(|| {
+                    std::hint::black_box(codec.decompress(&wire).unwrap());
+                    raw_bytes
+                }),
+        );
+    }
+
+    // --- PJRT executes at the real artifact shape ---
+    let dir = std::path::Path::new("artifacts/ham");
+    if dir.join("manifest.json").exists() {
+        let mut engine = Engine::load(dir).unwrap();
+        let man = engine.manifest().clone();
+        let cp = man.load_client_init().unwrap();
+        let sp = man.load_server_init().unwrap();
+        let mut rng = Pcg32::seeded(4);
+        let x: Vec<f32> = (0..man.batch * man.in_ch * man.img * man.img)
+            .map(|_| rng.next_f32())
+            .collect();
+        let x_dims = [man.batch, man.in_ch, man.img, man.img];
+        let y: Vec<i32> = (0..man.batch).map(|i| (i % man.classes) as i32).collect();
+        let y_dims = [man.batch];
+
+        results.push(Bencher::new("pjrt: entropy kernel (Pallas, AOT)").samples(20).run(|| {
+            engine
+                .execute("entropy", &[Arg::F32(acts.data(), acts.dims())])
+                .unwrap();
+        }));
+        results.push(Bencher::new("pjrt: client_fwd").samples(20).run(|| {
+            let mut args: Vec<Arg> =
+                cp.iter().map(|t| Arg::F32(t.data(), t.dims())).collect();
+            args.push(Arg::F32(&x, &x_dims));
+            engine.execute("client_fwd", &args).unwrap();
+        }));
+        results.push(Bencher::new("pjrt: server_step (fwd+bwd+sgd)").samples(20).run(|| {
+            let mut args: Vec<Arg> =
+                sp.iter().map(|t| Arg::F32(t.data(), t.dims())).collect();
+            args.push(Arg::F32(acts.data(), acts.dims()));
+            args.push(Arg::I32(&y, &y_dims));
+            args.push(Arg::ScalarF32(0.001));
+            engine.execute("server_step", &args).unwrap();
+        }));
+        results.push(Bencher::new("pjrt: client_bwd").samples(20).run(|| {
+            let mut args: Vec<Arg> =
+                cp.iter().map(|t| Arg::F32(t.data(), t.dims())).collect();
+            args.push(Arg::F32(&x, &x_dims));
+            args.push(Arg::F32(acts.data(), acts.dims()));
+            args.push(Arg::ScalarF32(0.001));
+            engine.execute("client_bwd", &args).unwrap();
+        }));
+    } else {
+        eprintln!("artifacts/ham missing: skipping PJRT microbenches");
+    }
+
+    println!("\n=== microbench ===");
+    for r in &results {
+        println!("{}", r.row());
+    }
+}

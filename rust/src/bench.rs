@@ -1,0 +1,250 @@
+//! Criterion-free benchmark harness (criterion is not vendored).
+//!
+//! Two layers:
+//!
+//! * [`Bencher`] — wall-clock micro-benchmarks with warmup, percentile
+//!   summaries and throughput, used by `rust/benches/microbench.rs`.
+//! * [`Table`] — aligned experiment tables (one per paper figure), with a
+//!   JSON sidecar written under `bench_results/` so figures can be
+//!   regenerated/plotted without re-running.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Micro-benchmark runner.
+pub struct Bencher {
+    name: String,
+    warmup: usize,
+    samples: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// optional bytes processed per iteration (enables MB/s reporting)
+    pub bytes_per_iter: Option<usize>,
+}
+
+impl BenchResult {
+    pub fn throughput_mbs(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| b as f64 / self.summary.mean / 1e6)
+    }
+
+    pub fn row(&self) -> String {
+        let tp = self
+            .throughput_mbs()
+            .map_or(String::new(), |t| format!("  {t:9.1} MB/s"));
+        format!(
+            "{:<44} {:>10.3} us  p50 {:>10.3} us  p95 {:>10.3} us{}",
+            self.name,
+            self.summary.mean * 1e6,
+            self.summary.p50 * 1e6,
+            self.summary.p95 * 1e6,
+            tp
+        )
+    }
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Bencher {
+        Bencher { name: name.to_string(), warmup: 3, samples: 30 }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    /// Time `f` (which should perform one full iteration).
+    pub fn run<F: FnMut()>(self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: self.name,
+            summary: Summary::of(&times),
+            bytes_per_iter: None,
+        }
+    }
+
+    /// Like `run`, recording bytes/iter for throughput reporting.
+    pub fn run_bytes<F: FnMut() -> usize>(self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        let mut bytes = 0usize;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            bytes = f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: self.name,
+            summary: Summary::of(&times),
+            bytes_per_iter: Some(bytes),
+        }
+    }
+}
+
+/// An experiment result table (one per paper figure/bench binary).
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+    json_rows: Vec<Json>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            json_rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len());
+        let obj = Json::Obj(
+            self.columns
+                .iter()
+                .zip(&cells)
+                .map(|(c, v)| {
+                    let val = v
+                        .parse::<f64>()
+                        .map(Json::Num)
+                        .unwrap_or_else(|_| Json::Str(v.clone()));
+                    (c.clone(), val)
+                })
+                .collect(),
+        );
+        self.json_rows.push(obj);
+        self.rows.push(cells);
+    }
+
+    /// Attach raw series data (e.g. a full accuracy-vs-time curve) to the
+    /// JSON sidecar without cluttering the printed table.
+    pub fn series(&mut self, name: &str, points: &[(f64, f64)]) {
+        let arr = Json::Arr(
+            points
+                .iter()
+                .map(|&(x, y)| Json::Arr(vec![Json::Num(x), Json::Num(y)]))
+                .collect(),
+        );
+        self.json_rows.push(Json::obj(vec![
+            ("series", Json::str(name)),
+            ("points", arr),
+        ]));
+    }
+
+    /// Print aligned and write the JSON sidecar to `bench_results/`.
+    pub fn finish(self) {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect();
+        println!("{}", header.join("  "));
+        println!("{}", "-".repeat(header.join("  ").len()));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+
+        let slug: String = self
+            .title
+            .to_lowercase()
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c } else { '_' })
+            .collect();
+        let path = std::path::Path::new("bench_results").join(format!("{slug}.json"));
+        if std::fs::create_dir_all("bench_results").is_ok() {
+            let doc = Json::obj(vec![
+                ("title", Json::str(&self.title)),
+                ("rows", Json::Arr(self.json_rows)),
+            ]);
+            if std::fs::write(&path, doc.dump()).is_ok() {
+                println!("[saved {}]", path.display());
+            }
+        }
+    }
+}
+
+/// Format seconds for human-readable tables.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}s")
+    } else if s >= 1.0 {
+        format!("{s:.1}s")
+    } else {
+        format!("{:.0}ms", s * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures_something() {
+        let r = Bencher::new("spin").warmup(1).samples(5).run(|| {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.summary.n, 5);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            summary: Summary::of(&[0.001, 0.001]),
+            bytes_per_iter: Some(1_000_000),
+        };
+        let tp = r.throughput_mbs().unwrap();
+        assert!((tp - 1000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(0.05), "50ms");
+        assert_eq!(fmt_secs(2.34), "2.3s");
+        assert_eq!(fmt_secs(250.0), "250s");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_width() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

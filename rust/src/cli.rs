@@ -1,0 +1,179 @@
+//! Minimal CLI argument substrate (clap is not vendored on this image).
+//!
+//! Supports `--key value`, `--key=value`, bare flags, and one positional
+//! subcommand, with typed getters that accumulate error messages so the
+//! launcher can print everything wrong at once.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    errors: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.errors.push(format!("unexpected positional argument '{tok}'"));
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn note(&mut self, key: &str) {
+        if !self.known.contains(&key.to_string()) {
+            self.known.push(key.to_string());
+        }
+    }
+
+    pub fn str_opt(&mut self, key: &str) -> Option<String> {
+        self.note(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn str_or(&mut self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&mut self, key: &str, default: usize) -> usize {
+        self.note(key);
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                self.errors.push(format!("--{key}: '{v}' is not an integer"));
+                default
+            }),
+        }
+    }
+
+    pub fn f64_or(&mut self, key: &str, default: f64) -> f64 {
+        self.note(key);
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                self.errors.push(format!("--{key}: '{v}' is not a number"));
+                default
+            }),
+        }
+    }
+
+    pub fn f64_opt(&mut self, key: &str) -> Option<f64> {
+        self.note(key);
+        match self.flags.get(key) {
+            None => None,
+            Some(v) => match v.parse() {
+                Ok(x) => Some(x),
+                Err(_) => {
+                    self.errors.push(format!("--{key}: '{v}' is not a number"));
+                    None
+                }
+            },
+        }
+    }
+
+    pub fn bool_or(&mut self, key: &str, default: bool) -> bool {
+        self.note(key);
+        match self.flags.get(key).map(|s| s.as_str()) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => {
+                self.errors.push(format!("--{key}: '{v}' is not a boolean"));
+                default
+            }
+        }
+    }
+
+    /// After all getters ran: unknown flags + type errors, if any.
+    pub fn finish(mut self) -> Result<(), String> {
+        for key in self.flags.keys() {
+            if !self.known.contains(key) {
+                self.errors.push(format!(
+                    "unknown flag --{key} (known: {})",
+                    self.known.join(", ")
+                ));
+            }
+        }
+        if self.errors.is_empty() {
+            Ok(())
+        } else {
+            Err(self.errors.join("\n"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let mut a = parse(&["train", "--rounds", "50", "--codec=slacc", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("rounds", 10), 50);
+        assert_eq!(a.str_or("codec", "x"), "slacc");
+        assert!(a.bool_or("verbose", false));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = parse(&["train"]);
+        assert_eq!(a.usize_or("rounds", 10), 10);
+        assert_eq!(a.f64_or("lr", 0.5), 0.5);
+        assert!(a.f64_opt("target").is_none());
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        let mut a = parse(&["--bogus", "3"]);
+        let _ = a.usize_or("rounds", 1);
+        assert!(a.finish().unwrap_err().contains("--bogus"));
+    }
+
+    #[test]
+    fn type_error_reported() {
+        let mut a = parse(&["--rounds", "abc"]);
+        assert_eq!(a.usize_or("rounds", 7), 7);
+        assert!(a.finish().unwrap_err().contains("not an integer"));
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let mut a = parse(&["--offset", "-3.5"]);
+        // "-3.5" doesn't start with "--" so it's consumed as the value
+        assert_eq!(a.f64_or("offset", 0.0), -3.5);
+        a.finish().unwrap();
+    }
+}

@@ -1,0 +1,380 @@
+//! 1-D clustering substrate for CGC (paper Eq. 4).
+//!
+//! CGC clusters per-channel entropies — scalars — into `g` groups. Two
+//! implementations:
+//!
+//! * [`kmeans_1d`]: Lloyd's algorithm with k-means++ seeding, what the paper
+//!   names. Deterministic given the RNG seed.
+//! * [`kmeans_1d_exact`]: optimal 1-D k-means via dynamic programming over
+//!   the sorted values (O(k·n²) — trivial at n = #channels). Used by the
+//!   ablation bench to quantify how far Lloyd lands from the optimum, and
+//!   by tests as the ground truth.
+//!
+//! Empty clusters are repaired by stealing the point farthest from its
+//! centroid, so the output always has exactly `min(g, #distinct)` non-empty
+//! groups.
+
+use crate::util::rng::Pcg32;
+
+/// Result of a 1-D clustering: per-point group assignment + group centroids.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Clustering {
+    /// assignment[i] = group index of point i (0..groups)
+    pub assignment: Vec<usize>,
+    /// centroid (mean) of each group
+    pub centroids: Vec<f32>,
+}
+
+impl Clustering {
+    pub fn groups(&self) -> usize {
+        self.centroids.len()
+    }
+
+    /// Member indices per group.
+    pub fn members(&self) -> Vec<Vec<usize>> {
+        let mut m = vec![Vec::new(); self.centroids.len()];
+        for (i, &g) in self.assignment.iter().enumerate() {
+            m[g].push(i);
+        }
+        m
+    }
+
+    /// Within-cluster sum of squares (the Eq. 4 objective).
+    pub fn wcss(&self, xs: &[f32]) -> f64 {
+        self.assignment
+            .iter()
+            .zip(xs)
+            .map(|(&g, &x)| {
+                let d = (x - self.centroids[g]) as f64;
+                d * d
+            })
+            .sum()
+    }
+}
+
+/// Lloyd's k-means on scalars with k-means++ seeding, best of
+/// `RESTARTS` runs by WCSS (cheap at n = #channels, and removes most of
+/// Lloyd's seeding variance).
+pub fn kmeans_1d(xs: &[f32], g: usize, rng: &mut Pcg32) -> Clustering {
+    const RESTARTS: usize = 4;
+    let mut best: Option<(f64, Clustering)> = None;
+    for _ in 0..RESTARTS {
+        let c = kmeans_1d_once(xs, g, rng);
+        let w = c.wcss(xs);
+        if best.as_ref().is_none_or(|(bw, _)| w < *bw) {
+            best = Some((w, c));
+        }
+    }
+    best.unwrap().1
+}
+
+/// One Lloyd run with k-means++ seeding.
+fn kmeans_1d_once(xs: &[f32], g: usize, rng: &mut Pcg32) -> Clustering {
+    assert!(!xs.is_empty());
+    let g = effective_k(xs, g);
+    let mut centroids = kpp_seed(xs, g, rng);
+    let mut assignment = vec![0usize; xs.len()];
+    for _iter in 0..100 {
+        // assign
+        let mut changed = false;
+        for (i, &x) in xs.iter().enumerate() {
+            let best = nearest(&centroids, x);
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // update
+        let mut sums = vec![0.0f64; g];
+        let mut counts = vec![0usize; g];
+        for (i, &x) in xs.iter().enumerate() {
+            sums[assignment[i]] += x as f64;
+            counts[assignment[i]] += 1;
+        }
+        for j in 0..g {
+            if counts[j] > 0 {
+                centroids[j] = (sums[j] / counts[j] as f64) as f32;
+            }
+        }
+        repair_empty(xs, &mut assignment, &mut centroids, &counts);
+        if !changed {
+            break;
+        }
+    }
+    normalize_order(xs, assignment, centroids)
+}
+
+/// Optimal 1-D k-means via DP on sorted order (Wang & Song 2011 style,
+/// quadratic variant). Ground truth for tests/ablation.
+pub fn kmeans_1d_exact(xs: &[f32], g: usize) -> Clustering {
+    assert!(!xs.is_empty());
+    let g = effective_k(xs, g);
+    let n = xs.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let sorted: Vec<f64> = order.iter().map(|&i| xs[i] as f64).collect();
+
+    // prefix sums for O(1) segment cost
+    let mut ps = vec![0.0f64; n + 1];
+    let mut ps2 = vec![0.0f64; n + 1];
+    for i in 0..n {
+        ps[i + 1] = ps[i] + sorted[i];
+        ps2[i + 1] = ps2[i] + sorted[i] * sorted[i];
+    }
+    let seg_cost = |a: usize, b: usize| -> f64 {
+        // cost of sorted[a..=b] as one cluster
+        let m = (b - a + 1) as f64;
+        let s = ps[b + 1] - ps[a];
+        let s2 = ps2[b + 1] - ps2[a];
+        (s2 - s * s / m).max(0.0)
+    };
+
+    // dp[k][i]: min cost of first i+1 points in k+1 clusters
+    let mut dp = vec![vec![f64::INFINITY; n]; g];
+    let mut cut = vec![vec![0usize; n]; g];
+    for i in 0..n {
+        dp[0][i] = seg_cost(0, i);
+    }
+    for k in 1..g {
+        for i in k..n {
+            for j in k..=i {
+                let cost = dp[k - 1][j - 1] + seg_cost(j, i);
+                if cost < dp[k][i] {
+                    dp[k][i] = cost;
+                    cut[k][i] = j;
+                }
+            }
+        }
+    }
+
+    // backtrack segment boundaries
+    let mut bounds = Vec::with_capacity(g + 1);
+    bounds.push(n);
+    let mut i = n - 1;
+    for k in (1..g).rev() {
+        let j = cut[k][i];
+        bounds.push(j);
+        i = j - 1;
+    }
+    bounds.push(0);
+    bounds.reverse(); // [0, b1, ..., n]
+
+    let mut assignment = vec![0usize; n];
+    let mut centroids = vec![0.0f32; g];
+    for k in 0..g {
+        let (a, b) = (bounds[k], bounds[k + 1]);
+        let mean = (ps[b] - ps[a]) / (b - a) as f64;
+        centroids[k] = mean as f32;
+        for &orig in &order[a..b] {
+            assignment[orig] = k;
+        }
+    }
+    Clustering { assignment, centroids }
+}
+
+fn effective_k(xs: &[f32], g: usize) -> usize {
+    let mut distinct: Vec<f32> = xs.to_vec();
+    distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    distinct.dedup();
+    g.max(1).min(distinct.len())
+}
+
+fn nearest(centroids: &[f32], x: f32) -> usize {
+    let mut best = 0;
+    let mut bd = f32::INFINITY;
+    for (j, &c) in centroids.iter().enumerate() {
+        let d = (x - c).abs();
+        if d < bd {
+            bd = d;
+            best = j;
+        }
+    }
+    best
+}
+
+fn kpp_seed(xs: &[f32], g: usize, rng: &mut Pcg32) -> Vec<f32> {
+    let mut centroids = Vec::with_capacity(g);
+    centroids.push(xs[rng.below(xs.len() as u32) as usize]);
+    while centroids.len() < g {
+        let d2: Vec<f64> = xs
+            .iter()
+            .map(|&x| {
+                let d = (x - centroids[nearest(&centroids, x)]) as f64;
+                d * d
+            })
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total <= 0.0 {
+            // all points coincide with centroids; fill with copies
+            centroids.push(xs[rng.below(xs.len() as u32) as usize]);
+            continue;
+        }
+        let mut r = rng.next_f64() * total;
+        let mut pick = xs.len() - 1;
+        for (i, &d) in d2.iter().enumerate() {
+            r -= d;
+            if r <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        centroids.push(xs[pick]);
+    }
+    centroids
+}
+
+fn repair_empty(xs: &[f32], assignment: &mut [usize], centroids: &mut [f32],
+                counts: &[usize]) {
+    for j in 0..centroids.len() {
+        if counts[j] == 0 {
+            // steal the point farthest from its centroid
+            let (mut far_i, mut far_d) = (0usize, -1.0f32);
+            for (i, &x) in xs.iter().enumerate() {
+                let d = (x - centroids[assignment[i]]).abs();
+                if d > far_d {
+                    far_d = d;
+                    far_i = i;
+                }
+            }
+            assignment[far_i] = j;
+            centroids[j] = xs[far_i];
+        }
+    }
+}
+
+/// Relabel groups so centroids ascend (deterministic output order: group 0
+/// is the lowest-entropy group). Drops empty groups.
+fn normalize_order(xs: &[f32], assignment: Vec<usize>, centroids: Vec<f32>)
+                   -> Clustering {
+    let g = centroids.len();
+    let mut counts = vec![0usize; g];
+    for &a in &assignment {
+        counts[a] += 1;
+    }
+    let mut order: Vec<usize> = (0..g).filter(|&j| counts[j] > 0).collect();
+    order.sort_by(|&a, &b| centroids[a].partial_cmp(&centroids[b]).unwrap());
+    let mut relabel = vec![usize::MAX; g];
+    for (new, &old) in order.iter().enumerate() {
+        relabel[old] = new;
+    }
+    let new_assignment: Vec<usize> = assignment.iter().map(|&a| relabel[a]).collect();
+    // recompute centroids exactly
+    let ng = order.len();
+    let mut sums = vec![0.0f64; ng];
+    let mut cnt = vec![0usize; ng];
+    for (i, &a) in new_assignment.iter().enumerate() {
+        sums[a] += xs[i] as f64;
+        cnt[a] += 1;
+    }
+    let new_centroids: Vec<f32> =
+        (0..ng).map(|j| (sums[j] / cnt[j] as f64) as f32).collect();
+    Clustering { assignment: new_assignment, centroids: new_centroids }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn two_obvious_clusters() {
+        let xs = [1.0, 1.1, 0.9, 10.0, 10.2, 9.8];
+        let mut rng = Pcg32::seeded(1);
+        let c = kmeans_1d(&xs, 2, &mut rng);
+        assert_eq!(c.groups(), 2);
+        assert_eq!(c.assignment[..3], [0, 0, 0]);
+        assert_eq!(c.assignment[3..], [1, 1, 1]);
+        assert!((c.centroids[0] - 1.0).abs() < 0.2);
+        assert!((c.centroids[1] - 10.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn exact_matches_known_optimum() {
+        let xs = [0.0, 0.1, 0.2, 5.0, 5.1, 9.9, 10.0];
+        let c = kmeans_1d_exact(&xs, 3);
+        assert_eq!(c.assignment, vec![0, 0, 0, 1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn k_larger_than_distinct_values() {
+        let xs = [2.0, 2.0, 2.0];
+        let mut rng = Pcg32::seeded(2);
+        let c = kmeans_1d(&xs, 5, &mut rng);
+        assert_eq!(c.groups(), 1);
+        assert_eq!(c.assignment, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn single_point() {
+        let c = kmeans_1d_exact(&[3.5], 4);
+        assert_eq!(c.groups(), 1);
+        assert_eq!(c.centroids, vec![3.5]);
+    }
+
+    #[test]
+    fn centroids_ascend() {
+        let mut rng = Pcg32::seeded(3);
+        let xs: Vec<f32> = (0..64).map(|_| rng.next_f32() * 8.0).collect();
+        let c = kmeans_1d(&xs, 4, &mut rng);
+        for w in c.centroids.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn lloyd_near_exact_property() {
+        // Lloyd with k-means++ should land within 2x of the DP optimum WCSS
+        // on scalar data (usually equal; bound is generous for adversarial
+        // random draws).
+        Prop::new("lloyd within 2x of optimal wcss").cases(60).max_size(48)
+            .run(|rng, size| {
+                let n = (size + 2).min(48);
+                let xs: Vec<f32> = (0..n).map(|_| rng.next_f32() * 10.0).collect();
+                let g = 1 + rng.below(6) as usize;
+                let lloyd = kmeans_1d(&xs, g, rng);
+                let exact = kmeans_1d_exact(&xs, g);
+                let (lw, ew) = (lloyd.wcss(&xs), exact.wcss(&xs));
+                if lw + 1e-9 < ew {
+                    return Err(format!("lloyd beat exact?! {lw} < {ew}"));
+                }
+                if lw > 2.0 * ew + 1e-6 {
+                    return Err(format!("lloyd {lw} much worse than optimal {ew}"));
+                }
+                Ok(())
+            });
+    }
+
+    #[test]
+    fn assignment_is_voronoi_property() {
+        // every point must be assigned to its nearest centroid
+        Prop::new("kmeans voronoi consistency").cases(50).max_size(64)
+            .run(|rng, size| {
+                let n = (size + 2).min(64);
+                let xs: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+                let g = 1 + rng.below(5) as usize;
+                let c = kmeans_1d(&xs, g, rng);
+                for (i, &x) in xs.iter().enumerate() {
+                    let d_mine = (x - c.centroids[c.assignment[i]]).abs();
+                    for &cc in &c.centroids {
+                        if (x - cc).abs() + 1e-6 < d_mine {
+                            return Err(format!("point {i} not at nearest centroid"));
+                        }
+                    }
+                }
+                Ok(())
+            });
+    }
+
+    #[test]
+    fn members_partition_everything() {
+        let mut rng = Pcg32::seeded(5);
+        let xs: Vec<f32> = (0..32).map(|_| rng.next_f32()).collect();
+        let c = kmeans_1d(&xs, 4, &mut rng);
+        let members = c.members();
+        let total: usize = members.iter().map(|m| m.len()).sum();
+        assert_eq!(total, xs.len());
+        for m in &members {
+            assert!(!m.is_empty());
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! EasyQuant baseline (Tang et al., EMNLP 2023, as used in the paper's
+//! Fig. 7 CGC ablation).
+//!
+//! Data-free-style per-channel quantization with two EasyQuant signatures:
+//! (1) the clip range is *optimized* per channel (grid search shrinking the
+//! range to minimize reconstruction MSE rather than using raw min/max), and
+//! (2) outliers beyond the clip range are transmitted exactly (index +
+//! value) so they do not stretch the quantization grid. Bit width is fixed
+//! for all channels — uniform allocation, the property CGC replaces.
+
+use crate::codecs::{ids, Codec, RoundCtx};
+use crate::quant::{bitpack, linear};
+use crate::quant::payload::{ByteReader, ByteWriter, Header};
+use crate::tensor::{view, ChannelMajor, Tensor};
+
+/// Candidate clip shrink factors (fraction of the full half-range kept).
+const CLIP_GRID: &[f32] = &[1.0, 0.9, 0.8, 0.7, 0.6, 0.5];
+
+#[derive(Debug)]
+pub struct EasyQuantCodec {
+    bits: u32,
+}
+
+impl EasyQuantCodec {
+    pub fn new(bits: u32) -> Self {
+        assert!((2..=16).contains(&bits));
+        EasyQuantCodec { bits }
+    }
+
+    /// Pick the clip factor minimizing reconstruction MSE for one channel.
+    ///
+    /// The search must model exactly what `compress` will do: at most
+    /// `cap = max(N/100, 1)` outliers are transmitted exactly (scanning in
+    /// element order); any further out-of-range values get clamped into the
+    /// grid and pay the full clipping error.
+    fn best_clip(row: &[f32], mn: f32, mx: f32, bits: u32) -> f32 {
+        let mid = 0.5 * (mn + mx);
+        let half = 0.5 * (mx - mn);
+        if half <= 0.0 {
+            return 1.0;
+        }
+        let cap = (row.len() / 100).max(1);
+        let mut best = 1.0f32;
+        let mut best_mse = f64::INFINITY;
+        for &f in CLIP_GRID {
+            let (cmn, cmx) = (mid - half * f, mid + half * f);
+            let mut mse = 0.0f64;
+            let mut n_out = 0usize;
+            for &x in row {
+                let exact_outlier = (x < cmn || x > cmx) && n_out < cap;
+                if x < cmn || x > cmx {
+                    n_out += 1;
+                }
+                if exact_outlier {
+                    continue; // transmitted exactly, zero error
+                }
+                // scalar fake-quant inline (same numerics as linear::fake_quant,
+                // without the per-element Vec allocations — this loop runs
+                // |CLIP_GRID| x N times per channel)
+                let levels = ((1u32 << bits) - 1) as f32;
+                let rng = cmx - cmn;
+                let y = if rng <= linear::EPS {
+                    cmn
+                } else {
+                    let t = (x.clamp(cmn, cmx) - cmn) * (levels / rng);
+                    let code = (t + 0.5).floor().min(levels);
+                    cmn + code * (rng / levels)
+                };
+                let d = (x - y) as f64;
+                mse += d * d;
+            }
+            // tie-break: prefer the wider range (fewer outlier bytes)
+            let cost_penalty = n_out.min(cap) as f64 * 1e-9;
+            if mse + cost_penalty < best_mse {
+                best_mse = mse + cost_penalty;
+                best = f;
+            }
+        }
+        best
+    }
+}
+
+impl Codec for EasyQuantCodec {
+    fn name(&self) -> &'static str {
+        "easyquant"
+    }
+
+    fn compress(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>) -> Vec<u8> {
+        let (b, c, h, w) = data.geometry();
+        let n = data.n_per_channel;
+        let mut out = ByteWriter::with_capacity(
+            Header::BYTES + 1 + c * (12 + bitpack::packed_len(n, self.bits)),
+        );
+        Header { codec_id: ids::EASYQUANT, dims: [b as u32, c as u32, h as u32, w as u32] }
+            .write(&mut out);
+        out.u8(self.bits as u8);
+
+        let mut codes = Vec::new();
+        for ch in 0..c {
+            let row = data.channel(ch);
+            let (mn, mx) = view::min_max(row);
+            let f = Self::best_clip(row, mn, mx, self.bits);
+            let mid = 0.5 * (mn + mx);
+            let half = 0.5 * (mx - mn);
+            let (cmn, cmx) = (mid - half * f, mid + half * f);
+
+            // outliers: exact (index, value) pairs, capped at 1% of N; if
+            // more would overflow the cap they are clamped into the grid.
+            let cap = (n / 100).max(1);
+            let mut outliers: Vec<(u32, f32)> = Vec::new();
+            for (i, &x) in row.iter().enumerate() {
+                if (x < cmn || x > cmx) && outliers.len() < cap {
+                    outliers.push((i as u32, x));
+                }
+            }
+            out.f32(cmn);
+            out.f32(cmx);
+            out.u32(outliers.len() as u32);
+            for &(i, v) in &outliers {
+                out.u32(i);
+                out.f32(v);
+            }
+            linear::quantize(row, cmn, cmx, self.bits, &mut codes);
+            out.bytes(&bitpack::pack(&codes, self.bits));
+        }
+        out.finish()
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+        let mut r = ByteReader::new(bytes);
+        let header = Header::read(&mut r)?;
+        if header.codec_id != ids::EASYQUANT {
+            return Err(format!("not an easyquant payload (codec {})", header.codec_id));
+        }
+        let [b, c, h, w] = header.dims.map(|d| d as usize);
+        let n = header.n_per_channel();
+        let bits = r.u8()? as u32;
+        if !(2..=16).contains(&bits) {
+            return Err(format!("bad bit width {bits}"));
+        }
+        let mut rows = vec![0.0f32; c * n];
+        let mut vals = Vec::new();
+        for ch in 0..c {
+            let cmn = r.f32()?;
+            let cmx = r.f32()?;
+            let n_out = r.u32()? as usize;
+            if n_out > n {
+                return Err(format!("outlier count {n_out} > N {n}"));
+            }
+            let mut outliers = Vec::with_capacity(n_out);
+            for _ in 0..n_out {
+                let i = r.u32()? as usize;
+                if i >= n {
+                    return Err(format!("outlier index {i} out of range"));
+                }
+                outliers.push((i, r.f32()?));
+            }
+            let packed = r.bytes(bitpack::packed_len(n, bits))?;
+            let codes = bitpack::unpack(packed, bits, n);
+            linear::dequantize(&codes, cmn, cmx, bits, &mut vals);
+            let dst = &mut rows[ch * n..(ch + 1) * n];
+            dst.copy_from_slice(&vals);
+            for (i, v) in outliers {
+                dst[i] = v;
+            }
+        }
+        Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::test_support::random_cm;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let cm = random_cm(2, 8, 4, 4, 1);
+        let mut c = EasyQuantCodec::new(6);
+        let wire = c.compress(&cm, RoundCtx::default());
+        let out = c.decompress(&wire).unwrap();
+        let orig = cm.to_nchw();
+        assert!(orig.mean_abs_diff(&out) < 0.1);
+    }
+
+    #[test]
+    fn outliers_transmitted_exactly() {
+        // one huge spike per channel; clip search shrinks the range, the
+        // spike must come back exact.
+        let n = 100;
+        let mut data = vec![0.1f32; 2 * n];
+        // add mild noise so range isn't flat
+        for (i, v) in data.iter_mut().enumerate() {
+            *v += (i % 7) as f32 * 0.01;
+        }
+        data[5] = 50.0; // channel 0 outlier
+        data[n + 9] = -40.0; // channel 1 outlier
+        let cm = Tensor::new(vec![1, 2, 10, 10], data.clone()).to_channel_major();
+        let mut c = EasyQuantCodec::new(4);
+        let wire = c.compress(&cm, RoundCtx::default());
+        let out = c.decompress(&wire).unwrap();
+        let rec = out.to_channel_major();
+        assert_eq!(rec.channel(0)[5], 50.0);
+        assert_eq!(rec.channel(1)[9], -40.0);
+        // and the bulk is finely quantized despite the spike
+        let bulk_err: f32 = rec.channel(0)[20..40]
+            .iter()
+            .zip(&cm.channel(0)[20..40])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(bulk_err < 0.5, "bulk err {bulk_err}");
+    }
+
+    #[test]
+    fn clip_factor_search_is_stable_on_uniformish_data() {
+        let row: Vec<f32> = (0..1000).map(|i| i as f32 / 999.0).collect();
+        let f = EasyQuantCodec::best_clip(&row, 0.0, 1.0, 8);
+        // uniform data: no benefit from clipping
+        assert_eq!(f, 1.0);
+    }
+}

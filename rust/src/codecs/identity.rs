@@ -1,0 +1,68 @@
+//! Identity codec: raw f32 transmission (the uncompressed-SL reference).
+//!
+//! This is what vanilla split learning sends; every compression curve in
+//! the benches is normalized against its byte count.
+
+use crate::codecs::{ids, Codec, RoundCtx};
+use crate::quant::payload::{ByteReader, ByteWriter, Header};
+use crate::tensor::{ChannelMajor, Tensor};
+
+#[derive(Debug, Default)]
+pub struct IdentityCodec;
+
+impl IdentityCodec {
+    pub fn new() -> Self {
+        IdentityCodec
+    }
+}
+
+impl Codec for IdentityCodec {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn compress(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>) -> Vec<u8> {
+        let (b, c, h, w) = data.geometry();
+        let mut out =
+            ByteWriter::with_capacity(Header::BYTES + data.data().len() * 4);
+        Header { codec_id: ids::IDENTITY, dims: [b as u32, c as u32, h as u32, w as u32] }
+            .write(&mut out);
+        out.f32s(data.data());
+        out.finish()
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+        let mut r = ByteReader::new(bytes);
+        let header = Header::read(&mut r)?;
+        if header.codec_id != ids::IDENTITY {
+            return Err(format!("not an identity payload (codec {})", header.codec_id));
+        }
+        let [b, c, h, w] = header.dims.map(|d| d as usize);
+        let n = header.n_per_channel();
+        let rows = r.f32s(c * n)?;
+        Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::test_support::random_cm;
+
+    #[test]
+    fn lossless_roundtrip() {
+        let cm = random_cm(2, 4, 3, 3, 1);
+        let mut c = IdentityCodec::new();
+        let wire = c.compress(&cm, RoundCtx::default());
+        let out = c.decompress(&wire).unwrap();
+        assert_eq!(out, cm.to_nchw());
+    }
+
+    #[test]
+    fn wire_size_is_raw_plus_header() {
+        let cm = random_cm(2, 4, 3, 3, 2);
+        let mut c = IdentityCodec::new();
+        let wire = c.compress(&cm, RoundCtx::default());
+        assert_eq!(wire.len(), Header::BYTES + 2 * 4 * 3 * 3 * 4);
+    }
+}

@@ -1,0 +1,179 @@
+//! Smashed-data compression codecs.
+//!
+//! The paper's contribution ([`slacc::SlAccCodec`], ACII + CGC) plus every
+//! baseline its evaluation compares against:
+//!
+//! | codec | paper role |
+//! |---|---|
+//! | [`slacc::SlAccCodec`] | SL-ACC (Fig. 5–7) |
+//! | [`powerquant::PowerQuantCodec`] | PowerQuant-SL (Fig. 5, 7) |
+//! | [`randtopk::RandTopkCodec`] | RandTopk-SL (Fig. 5) |
+//! | [`splitfc::SplitFcCodec`] | SplitFC (Fig. 5) |
+//! | [`easyquant::EasyQuantCodec`] | EasyQuant (Fig. 7) |
+//! | [`uniform::UniformCodec`] | fixed-bit ablation substrate |
+//! | [`identity::IdentityCodec`] | uncompressed SL reference |
+//! | [`selection::SelectionCodec`] | single/subset-channel ablations (Fig. 2, 3, 6) |
+//!
+//! A codec maps channel-major smashed data to wire bytes and back. Codecs
+//! are stateful across rounds (ACII history, RNG streams), so each
+//! device-direction stream owns its own instance.
+
+pub mod easyquant;
+pub mod ef;
+pub mod identity;
+pub mod powerquant;
+pub mod randtopk;
+pub mod selection;
+pub mod slacc;
+pub mod splitfc;
+pub mod uniform;
+
+use crate::tensor::{ChannelMajor, Tensor};
+
+/// Stable codec ids for the wire header.
+pub mod ids {
+    pub const IDENTITY: u8 = 0;
+    pub const UNIFORM: u8 = 1;
+    pub const SLACC: u8 = 2;
+    pub const POWERQUANT: u8 = 3;
+    pub const RANDTOPK: u8 = 4;
+    pub const SPLITFC: u8 = 5;
+    pub const EASYQUANT: u8 = 6;
+    pub const SELECTION: u8 = 7;
+}
+
+/// Per-round side information handed to `compress`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundCtx<'a> {
+    /// Instantaneous per-channel entropy, if the coordinator already ran the
+    /// AOT Pallas kernel on this tensor. Codecs that need entropy fall back
+    /// to the host mirror when `None`.
+    pub entropy: Option<&'a [f32]>,
+}
+
+/// A smashed-data compressor/decompressor.
+pub trait Codec: Send {
+    /// Short stable name for logs/benches/CSV.
+    fn name(&self) -> &'static str;
+
+    /// Compress one round's smashed data into wire bytes.
+    fn compress(&mut self, data: &ChannelMajor, ctx: RoundCtx<'_>) -> Vec<u8>;
+
+    /// Reconstruct the NCHW tensor from wire bytes.
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String>;
+}
+
+/// Compression ratio helper: raw f32 bytes / wire bytes.
+pub fn compression_ratio(data: &ChannelMajor, wire_len: usize) -> f64 {
+    let raw = data.channels * data.n_per_channel * 4;
+    raw as f64 / wire_len.max(1) as f64
+}
+
+/// Factory: build a codec by CLI name. `seed` namespaces stochastic codecs,
+/// `total_rounds` feeds ACII's α schedule.
+pub fn by_name(name: &str, channels: usize, total_rounds: usize, seed: u64)
+               -> Result<Box<dyn Codec>, String> {
+    // `ef:<codec>` wraps any codec with error-feedback (extension; see ef.rs)
+    if let Some(inner) = name.strip_prefix("ef:") {
+        let base = by_name(inner, channels, total_rounds, seed)?;
+        return Ok(Box::new(ef::EfCodec::new(base, 1.0)));
+    }
+    let c: Box<dyn Codec> = match name {
+        "identity" | "none" => Box::new(identity::IdentityCodec::new()),
+        "uniform4" => Box::new(uniform::UniformCodec::new(4)),
+        "uniform8" => Box::new(uniform::UniformCodec::new(8)),
+        "slacc" => Box::new(slacc::SlAccCodec::new(
+            slacc::SlAccConfig::default(), channels, total_rounds, seed)),
+        "slacc-paper-eq6" => {
+            let cfg = slacc::SlAccConfig {
+                bit_alloc: slacc::BitAlloc::FloorEntropy,
+                ..slacc::SlAccConfig::default()
+            };
+            Box::new(slacc::SlAccCodec::new(cfg, channels, total_rounds, seed))
+        }
+        "powerquant" => Box::new(powerquant::PowerQuantCodec::new(4)),
+        "randtopk" => Box::new(randtopk::RandTopkCodec::new(0.1, 0.01, seed)),
+        "splitfc" => Box::new(splitfc::SplitFcCodec::new(0.5, 6)),
+        "easyquant" => Box::new(easyquant::EasyQuantCodec::new(4)),
+        _ => return Err(format!("unknown codec '{name}'")),
+    };
+    Ok(c)
+}
+
+/// All codec names `by_name` accepts (for CLI help / sweep benches).
+pub const ALL_CODECS: &[&str] = &[
+    "identity", "uniform4", "uniform8", "slacc", "slacc-paper-eq6",
+    "powerquant", "randtopk", "splitfc", "easyquant",
+];
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use crate::tensor::{ChannelMajor, Tensor};
+    use crate::util::rng::Pcg32;
+
+    /// Random NCHW smashed data in channel-major form.
+    pub fn random_cm(b: usize, c: usize, h: usize, w: usize, seed: u64) -> ChannelMajor {
+        let mut rng = Pcg32::seeded(seed);
+        let data: Vec<f32> = (0..b * c * h * w)
+            .map(|_| rng.next_gaussian() * rng.range_f32(0.5, 2.0))
+            .collect();
+        Tensor::new(vec![b, c, h, w], data).to_channel_major()
+    }
+
+    /// ReLU-like (non-negative, sparse-ish) activations.
+    pub fn relu_cm(b: usize, c: usize, h: usize, w: usize, seed: u64) -> ChannelMajor {
+        let mut rng = Pcg32::seeded(seed);
+        let data: Vec<f32> = (0..b * c * h * w)
+            .map(|_| rng.next_gaussian().max(0.0))
+            .collect();
+        Tensor::new(vec![b, c, h, w], data).to_channel_major()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use test_support::random_cm;
+
+    #[test]
+    fn factory_builds_every_listed_codec() {
+        for name in ALL_CODECS {
+            let c = by_name(name, 8, 100, 7).unwrap_or_else(|e| panic!("{e}"));
+            assert!(!c.name().is_empty());
+        }
+        assert!(by_name("bogus", 8, 100, 7).is_err());
+    }
+
+    #[test]
+    fn every_codec_roundtrips_shape() {
+        let cm = random_cm(2, 8, 4, 4, 1);
+        for name in ALL_CODECS {
+            let mut c = by_name(name, 8, 100, 7).unwrap();
+            let wire = c.compress(&cm, RoundCtx::default());
+            let out = c.decompress(&wire).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(out.dims(), &[2, 8, 4, 4], "codec {name}");
+        }
+    }
+
+    #[test]
+    fn lossy_codecs_actually_compress() {
+        let cm = random_cm(4, 16, 8, 8, 2);
+        let raw = cm.channels * cm.n_per_channel * 4;
+        for name in ["slacc", "powerquant", "randtopk", "splitfc", "easyquant", "uniform4"] {
+            let mut c = by_name(name, 16, 100, 7).unwrap();
+            let wire = c.compress(&cm, RoundCtx::default());
+            assert!(
+                wire.len() < raw,
+                "{name}: wire {} >= raw {raw}",
+                wire.len()
+            );
+        }
+    }
+
+    #[test]
+    fn decompress_rejects_garbage() {
+        let c = by_name("slacc", 8, 100, 7).unwrap();
+        assert!(c.decompress(&[1, 2, 3]).is_err());
+        assert!(c.decompress(&[]).is_err());
+    }
+}

@@ -1,0 +1,221 @@
+//! PowerQuant-SL baseline (Yvinec et al., ICLR 2023, adapted to SL as in
+//! the paper's Sec. III-A3).
+//!
+//! PowerQuant replaces uniform quantization with a power-law automorphism:
+//! values are normalized to v ∈ [0, 1] per channel, companded u = v^a, and
+//! u is uniformly quantized at a fixed bit width. The exponent `a` is found
+//! by automorphism *search*: a grid over a ∈ [0.25, 3] minimizing the
+//! per-tensor reconstruction MSE each round. One exponent per tensor, one
+//! (min, max) pair per channel, fixed bits for all channels — i.e. uniform
+//! bit allocation, which is exactly the property SL-ACC's CGC improves on.
+
+use crate::codecs::{ids, Codec, RoundCtx};
+use crate::quant::bitpack;
+use crate::quant::payload::{ByteReader, ByteWriter, Header};
+use crate::tensor::{view, ChannelMajor, Tensor};
+
+const EXP_GRID: &[f32] = &[
+    0.25, 0.35, 0.5, 0.65, 0.8, 1.0, 1.25, 1.5, 1.75, 2.0, 2.5, 3.0,
+];
+const EPS: f32 = 1e-8;
+
+#[derive(Debug)]
+pub struct PowerQuantCodec {
+    bits: u32,
+}
+
+impl PowerQuantCodec {
+    pub fn new(bits: u32) -> Self {
+        assert!((2..=16).contains(&bits));
+        PowerQuantCodec { bits }
+    }
+
+    /// Companded quantize one channel at exponent `a`; returns codes.
+    fn quantize_channel(row: &[f32], mn: f32, mx: f32, a: f32, levels: f32,
+                        out: &mut Vec<u32>) {
+        out.clear();
+        let rng = (mx - mn).max(EPS);
+        for &x in row {
+            let v = ((x - mn) / rng).clamp(0.0, 1.0);
+            let u = v.powf(a);
+            out.push(((u * levels + 0.5).floor() as u32).min(levels as u32));
+        }
+    }
+
+    fn dequantize_channel(codes: &[u32], mn: f32, mx: f32, a: f32, levels: f32,
+                          out: &mut Vec<f32>) {
+        out.clear();
+        let rng = mx - mn;
+        for &cde in codes {
+            let u = cde as f32 / levels;
+            let v = u.powf(1.0 / a);
+            out.push(mn + v * rng);
+        }
+    }
+
+    /// MSE of quantizing the whole tensor at exponent `a` (search objective),
+    /// estimated on a strided sample for speed.
+    fn mse_at(data: &ChannelMajor, ranges: &[(f32, f32)], a: f32, levels: f32) -> f64 {
+        let stride = (data.n_per_channel / 64).max(1);
+        let mut err = 0.0f64;
+        let mut count = 0usize;
+        for ch in 0..data.channels {
+            let (mn, mx) = ranges[ch];
+            let rng = (mx - mn).max(EPS);
+            let row = data.channel(ch);
+            let mut i = 0;
+            while i < row.len() {
+                let x = row[i];
+                let v = ((x - mn) / rng).clamp(0.0, 1.0);
+                let u = v.powf(a);
+                let code = (u * levels + 0.5).floor().min(levels);
+                let xh = mn + (code / levels).powf(1.0 / a) * rng;
+                let d = (x - xh) as f64;
+                err += d * d;
+                count += 1;
+                i += stride;
+            }
+        }
+        err / count.max(1) as f64
+    }
+}
+
+impl Codec for PowerQuantCodec {
+    fn name(&self) -> &'static str {
+        "powerquant"
+    }
+
+    fn compress(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>) -> Vec<u8> {
+        let (b, c, h, w) = data.geometry();
+        let n = data.n_per_channel;
+        let levels = ((1u32 << self.bits) - 1) as f32;
+
+        let ranges: Vec<(f32, f32)> =
+            (0..c).map(|ch| view::min_max(data.channel(ch))).collect();
+
+        // automorphism search: best exponent on this round's tensor
+        let mut best_a = 1.0f32;
+        let mut best_mse = f64::INFINITY;
+        for &a in EXP_GRID {
+            let m = Self::mse_at(data, &ranges, a, levels);
+            if m < best_mse {
+                best_mse = m;
+                best_a = a;
+            }
+        }
+
+        let mut out = ByteWriter::with_capacity(
+            Header::BYTES + 5 + c * (8 + bitpack::packed_len(n, self.bits)),
+        );
+        Header { codec_id: ids::POWERQUANT, dims: [b as u32, c as u32, h as u32, w as u32] }
+            .write(&mut out);
+        out.u8(self.bits as u8);
+        out.f32(best_a);
+        let mut codes = Vec::new();
+        for ch in 0..c {
+            let (mn, mx) = ranges[ch];
+            out.f32(mn);
+            out.f32(mx);
+            Self::quantize_channel(data.channel(ch), mn, mx, best_a, levels, &mut codes);
+            out.bytes(&bitpack::pack(&codes, self.bits));
+        }
+        out.finish()
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+        let mut r = ByteReader::new(bytes);
+        let header = Header::read(&mut r)?;
+        if header.codec_id != ids::POWERQUANT {
+            return Err(format!("not a powerquant payload (codec {})", header.codec_id));
+        }
+        let [b, c, h, w] = header.dims.map(|d| d as usize);
+        let n = header.n_per_channel();
+        let bits = r.u8()? as u32;
+        if !(2..=16).contains(&bits) {
+            return Err(format!("bad bit width {bits}"));
+        }
+        let a = r.f32()?;
+        if !(a.is_finite() && a > 0.0) {
+            return Err(format!("bad exponent {a}"));
+        }
+        let levels = ((1u32 << bits) - 1) as f32;
+        let mut rows = vec![0.0f32; c * n];
+        let mut vals = Vec::new();
+        for ch in 0..c {
+            let mn = r.f32()?;
+            let mx = r.f32()?;
+            let packed = r.bytes(bitpack::packed_len(n, bits))?;
+            let codes = bitpack::unpack(packed, bits, n);
+            Self::dequantize_channel(&codes, mn, mx, a, levels, &mut vals);
+            rows[ch * n..(ch + 1) * n].copy_from_slice(&vals);
+        }
+        Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::test_support::{random_cm, relu_cm};
+
+    #[test]
+    fn roundtrip_reasonable_error() {
+        let cm = relu_cm(2, 8, 4, 4, 1);
+        let mut c = PowerQuantCodec::new(4);
+        let wire = c.compress(&cm, RoundCtx::default());
+        let out = c.decompress(&wire).unwrap();
+        let orig = cm.to_nchw();
+        // 4-bit companded quantization: error well under the value range
+        let (mn, mx) = view::min_max(orig.data());
+        assert!(orig.mean_abs_diff(&out) < ((mx - mn) as f64) / 8.0);
+    }
+
+    #[test]
+    fn identity_exponent_matches_linear() {
+        // with a=1 the compander is linear; exponent search may pick
+        // something else, so test the primitive directly
+        let row = [0.0f32, 0.25, 0.5, 0.75, 1.0];
+        let mut codes = Vec::new();
+        PowerQuantCodec::quantize_channel(&row, 0.0, 1.0, 1.0, 15.0, &mut codes);
+        let mut lin = Vec::new();
+        crate::quant::linear::quantize(&row, 0.0, 1.0, 4, &mut lin);
+        assert_eq!(codes, lin);
+    }
+
+    #[test]
+    fn skewed_data_prefers_nonunit_exponent() {
+        // heavily skewed (relu-like, mass near zero) data should pick a != 1
+        // ... or at least not hurt: companded MSE <= linear MSE on the grid.
+        let cm = relu_cm(4, 8, 8, 8, 2);
+        let ranges: Vec<(f32, f32)> =
+            (0..8).map(|ch| view::min_max(cm.channel(ch))).collect();
+        let m1 = PowerQuantCodec::mse_at(&cm, &ranges, 1.0, 15.0);
+        let best = EXP_GRID
+            .iter()
+            .map(|&a| PowerQuantCodec::mse_at(&cm, &ranges, a, 15.0))
+            .fold(f64::INFINITY, f64::min);
+        assert!(best <= m1 * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn wire_size_matches_bits() {
+        let cm = random_cm(2, 4, 4, 4, 3);
+        let n = cm.n_per_channel;
+        let mut c = PowerQuantCodec::new(4);
+        let wire = c.compress(&cm, RoundCtx::default());
+        assert_eq!(wire.len(), Header::BYTES + 5 + 4 * (8 + n / 2));
+    }
+
+    #[test]
+    fn monotone_codes() {
+        // companding is monotone: larger x -> larger (or equal) code
+        let row: Vec<f32> = (0..100).map(|i| i as f32 / 99.0).collect();
+        for &a in EXP_GRID {
+            let mut codes = Vec::new();
+            PowerQuantCodec::quantize_channel(&row, 0.0, 1.0, a, 15.0, &mut codes);
+            for w in codes.windows(2) {
+                assert!(w[0] <= w[1], "a={a}");
+            }
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! RandTopk-SL baseline (Zheng et al., IJCAI 2023, adapted to SL as in the
+//! paper's Sec. III-A3).
+//!
+//! Randomized top-k sparsification: keep the ρ_k fraction of elements with
+//! the largest magnitude, plus a uniformly random ρ_r fraction of the
+//! remaining elements scaled by 1/p (p = the sampling probability) so the
+//! sparsified tensor is an unbiased estimate of the dense one. The wire
+//! carries (index u32, value f32) pairs — the classic sparse format, whose
+//! 8-byte-per-kept-element cost is what quantization-based schemes beat.
+
+use crate::codecs::{ids, Codec, RoundCtx};
+use crate::quant::payload::{ByteReader, ByteWriter, Header};
+use crate::tensor::{ChannelMajor, Tensor};
+use crate::util::rng::Pcg32;
+
+#[derive(Debug)]
+pub struct RandTopkCodec {
+    /// fraction of elements kept by magnitude
+    top_frac: f64,
+    /// fraction of *all* elements additionally sampled from the non-top set
+    rand_frac: f64,
+    rng: Pcg32,
+}
+
+impl RandTopkCodec {
+    pub fn new(top_frac: f64, rand_frac: f64, seed: u64) -> Self {
+        assert!(top_frac > 0.0 && top_frac <= 1.0);
+        assert!(rand_frac >= 0.0 && rand_frac < 1.0);
+        RandTopkCodec { top_frac, rand_frac, rng: Pcg32::new(seed, 0x70b0) }
+    }
+}
+
+impl Codec for RandTopkCodec {
+    fn name(&self) -> &'static str {
+        "randtopk"
+    }
+
+    fn compress(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>) -> Vec<u8> {
+        let (b, c, h, w) = data.geometry();
+        let flat = data.data();
+        let total = flat.len();
+        let k = ((total as f64 * self.top_frac).ceil() as usize).clamp(1, total);
+
+        // top-k by |x|: select_nth on an index array (O(n) average)
+        let mut idx: Vec<u32> = (0..total as u32).collect();
+        if k < total {
+            idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                flat[b as usize]
+                    .abs()
+                    .partial_cmp(&flat[a as usize].abs())
+                    .unwrap()
+            });
+        }
+        let (top, rest) = idx.split_at(k.min(total));
+
+        // random subset of the non-top elements, unbiased 1/p scaling
+        let n_rand = ((total as f64 * self.rand_frac).round() as usize).min(rest.len());
+        let p = if rest.is_empty() {
+            1.0
+        } else {
+            n_rand as f64 / rest.len() as f64
+        };
+        let mut rest_owned = rest.to_vec();
+        // partial shuffle: first n_rand entries are a uniform sample
+        for i in 0..n_rand {
+            let j = i + self.rng.below((rest_owned.len() - i) as u32) as usize;
+            rest_owned.swap(i, j);
+        }
+
+        let mut out = ByteWriter::with_capacity(
+            Header::BYTES + 8 + (k + n_rand) * 8,
+        );
+        Header { codec_id: ids::RANDTOPK, dims: [b as u32, c as u32, h as u32, w as u32] }
+            .write(&mut out);
+        out.u32(k as u32);
+        out.u32(n_rand as u32);
+        for &i in top {
+            out.u32(i);
+            out.f32(flat[i as usize]);
+        }
+        let scale = if p > 0.0 { (1.0 / p) as f32 } else { 0.0 };
+        for &i in &rest_owned[..n_rand] {
+            out.u32(i);
+            out.f32(flat[i as usize] * scale);
+        }
+        out.finish()
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+        let mut r = ByteReader::new(bytes);
+        let header = Header::read(&mut r)?;
+        if header.codec_id != ids::RANDTOPK {
+            return Err(format!("not a randtopk payload (codec {})", header.codec_id));
+        }
+        let [b, c, h, w] = header.dims.map(|d| d as usize);
+        let n = header.n_per_channel();
+        let total = c * n;
+        let k = r.u32()? as usize;
+        let n_rand = r.u32()? as usize;
+        if k + n_rand > total {
+            return Err(format!("kept {} > total {total}", k + n_rand));
+        }
+        let mut rows = vec![0.0f32; total];
+        for _ in 0..k + n_rand {
+            let i = r.u32()? as usize;
+            if i >= total {
+                return Err(format!("index {i} out of range"));
+            }
+            rows[i] = r.f32()?;
+        }
+        Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::test_support::random_cm;
+
+    #[test]
+    fn top_elements_survive_exactly() {
+        let cm = random_cm(2, 4, 4, 4, 1);
+        let mut c = RandTopkCodec::new(0.25, 0.0, 7);
+        let wire = c.compress(&cm, RoundCtx::default());
+        let out = c.decompress(&wire).unwrap();
+        let orig = cm.to_nchw();
+        let rec_cm = out.to_channel_major();
+
+        // threshold = k-th largest |x|
+        let mut mags: Vec<f32> = cm.data().iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let k = (cm.data().len() as f64 * 0.25).ceil() as usize;
+        let thresh = mags[k - 1];
+
+        let orig_cm = orig.to_channel_major();
+        for ch in 0..4 {
+            for (a, b) in orig_cm.channel(ch).iter().zip(rec_cm.channel(ch)) {
+                if a.abs() > thresh {
+                    assert_eq!(a, b, "top element must be exact");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_structure() {
+        let cm = random_cm(2, 8, 4, 4, 2);
+        let mut c = RandTopkCodec::new(0.1, 0.0, 7);
+        let wire = c.compress(&cm, RoundCtx::default());
+        let out = c.decompress(&wire).unwrap();
+        let nonzero = out.data().iter().filter(|&&x| x != 0.0).count();
+        let k = (cm.data().len() as f64 * 0.1).ceil() as usize;
+        assert!(nonzero <= k);
+    }
+
+    #[test]
+    fn random_subset_is_rescaled() {
+        // with top_frac tiny and rand_frac = 0.5, surviving non-top values
+        // must be ~2x their originals (p = 0.5 over the rest)
+        let cm = random_cm(1, 2, 4, 4, 3);
+        let mut c = RandTopkCodec::new(1.0 / 32.0, 0.5, 9);
+        let wire = c.compress(&cm, RoundCtx::default());
+        let out = c.decompress(&wire).unwrap();
+        let orig = cm.to_nchw();
+        let mut checked = 0;
+        for (a, b) in orig.data().iter().zip(out.data()) {
+            if *b != 0.0 && (b / a - 1.0).abs() > 1e-4 {
+                // rescaled element: ratio should be 1/p = rest/n_rand
+                let ratio = b / a;
+                assert!(ratio > 1.5 && ratio < 2.6, "ratio {ratio}");
+                checked += 1;
+            }
+        }
+        assert!(checked > 0, "no rescaled elements found");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cm = random_cm(1, 4, 4, 4, 4);
+        let w1 = RandTopkCodec::new(0.2, 0.1, 5).compress(&cm, RoundCtx::default());
+        let w2 = RandTopkCodec::new(0.2, 0.1, 5).compress(&cm, RoundCtx::default());
+        assert_eq!(w1, w2);
+    }
+
+    #[test]
+    fn wire_size_formula() {
+        let cm = random_cm(2, 4, 4, 4, 5);
+        let total = cm.data().len();
+        let mut c = RandTopkCodec::new(0.1, 0.05, 6);
+        let wire = c.compress(&cm, RoundCtx::default());
+        let k = (total as f64 * 0.1).ceil() as usize;
+        let nr = (total as f64 * 0.05).round() as usize;
+        assert_eq!(wire.len(), Header::BYTES + 8 + (k + nr) * 8);
+    }
+}

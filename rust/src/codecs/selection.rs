@@ -1,0 +1,276 @@
+//! Channel-selection codecs — the paper's motivating / ablation experiments.
+//!
+//! These transmit a *subset* of channels verbatim (f32) and zero the rest:
+//!
+//! * Fig. 2: `Selection::Fixed(c)` — train with a single fixed channel.
+//! * Fig. 3: `Selection::EntropyInstant` vs `Selection::EntropyHistorical` —
+//!   transmit the channel(s) with the highest instantaneous / historical
+//!   entropy each round.
+//! * Fig. 6: `Selection::EntropyBlended` (ACII) vs `Selection::MaxStd` vs
+//!   `Selection::Random`.
+
+use crate::codecs::{ids, Codec, RoundCtx};
+use crate::entropy::{shannon, Acii, AlphaSchedule};
+use crate::quant::payload::{ByteReader, ByteWriter, Header};
+use crate::tensor::{view, ChannelMajor, Tensor};
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Selection {
+    /// Always the given channel (Fig. 2 single-channel probes).
+    Fixed(usize),
+    /// Uniformly random channel(s) each round (Fig. 6 "Random").
+    Random,
+    /// Highest standard deviation (Fig. 6 "STD-based").
+    MaxStd,
+    /// Highest instantaneous entropy H_c^(t) (Fig. 3).
+    EntropyInstant,
+    /// Highest historical entropy H̃_c (Fig. 3).
+    EntropyHistorical,
+    /// Highest ACII-blended entropy (Eq. 2; Fig. 6 "ACII").
+    EntropyBlended,
+}
+
+impl Selection {
+    pub fn label(&self) -> String {
+        match self {
+            Selection::Fixed(c) => format!("fixed#{c}"),
+            Selection::Random => "random".into(),
+            Selection::MaxStd => "std".into(),
+            Selection::EntropyInstant => "entropy-instant".into(),
+            Selection::EntropyHistorical => "entropy-historical".into(),
+            Selection::EntropyBlended => "acii".into(),
+        }
+    }
+}
+
+pub struct SelectionCodec {
+    strategy: Selection,
+    n_select: usize,
+    acii: Acii,
+    rng: Pcg32,
+    /// channels picked by the most recent compress (diagnostics)
+    last_selected: Vec<usize>,
+}
+
+impl SelectionCodec {
+    pub fn new(strategy: Selection, n_select: usize, channels: usize,
+               history_window: usize, total_rounds: usize, seed: u64) -> Self {
+        assert!(n_select >= 1 && n_select <= channels);
+        SelectionCodec {
+            strategy,
+            n_select,
+            acii: Acii::new(channels, history_window, total_rounds,
+                            AlphaSchedule::Adaptive),
+            rng: Pcg32::new(seed, 0x5e1ec7),
+            last_selected: Vec::new(),
+        }
+    }
+
+    pub fn last_selected(&self) -> &[usize] {
+        &self.last_selected
+    }
+
+    /// Indices of the `n` largest scores (descending).
+    fn top_n(scores: &[f32], n: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        idx.truncate(n);
+        idx
+    }
+
+    fn select(&mut self, data: &ChannelMajor, ctx: RoundCtx<'_>) -> Vec<usize> {
+        let c = data.channels;
+        // ACII state advances every round regardless of strategy so the
+        // entropy modes stay comparable round-for-round.
+        let inst: Vec<f32> = match ctx.entropy {
+            Some(h) => h.to_vec(),
+            None => shannon::entropies(data),
+        };
+        let hist = self.acii.historical(&inst);
+        let blended = self.acii.update(&inst);
+
+        match self.strategy {
+            Selection::Fixed(ch) => vec![ch.min(c - 1)],
+            Selection::Random => self
+                .rng
+                .sample_indices(c, self.n_select),
+            Selection::MaxStd => {
+                let stds: Vec<f32> =
+                    (0..c).map(|ch| view::mean_std(data.channel(ch)).1).collect();
+                Self::top_n(&stds, self.n_select)
+            }
+            Selection::EntropyInstant => Self::top_n(&inst, self.n_select),
+            Selection::EntropyHistorical => Self::top_n(&hist, self.n_select),
+            Selection::EntropyBlended => Self::top_n(&blended, self.n_select),
+        }
+    }
+}
+
+impl Codec for SelectionCodec {
+    fn name(&self) -> &'static str {
+        match self.strategy {
+            Selection::Fixed(_) => "select-fixed",
+            Selection::Random => "select-random",
+            Selection::MaxStd => "select-std",
+            Selection::EntropyInstant => "select-entropy-instant",
+            Selection::EntropyHistorical => "select-entropy-historical",
+            Selection::EntropyBlended => "select-acii",
+        }
+    }
+
+    fn compress(&mut self, data: &ChannelMajor, ctx: RoundCtx<'_>) -> Vec<u8> {
+        let (b, c, h, w) = data.geometry();
+        let mut picked = self.select(data, ctx);
+        picked.sort_unstable();
+        picked.dedup();
+        self.last_selected = picked.clone();
+
+        let n = data.n_per_channel;
+        let mut out = ByteWriter::with_capacity(
+            Header::BYTES + 2 + picked.len() * (2 + n * 4),
+        );
+        Header { codec_id: ids::SELECTION, dims: [b as u32, c as u32, h as u32, w as u32] }
+            .write(&mut out);
+        out.u16(picked.len() as u16);
+        for &ch in &picked {
+            out.u16(ch as u16);
+        }
+        for &ch in &picked {
+            out.f32s(data.channel(ch));
+        }
+        out.finish()
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+        let mut r = ByteReader::new(bytes);
+        let header = Header::read(&mut r)?;
+        if header.codec_id != ids::SELECTION {
+            return Err(format!("not a selection payload (codec {})", header.codec_id));
+        }
+        let [b, c, h, w] = header.dims.map(|d| d as usize);
+        let n = header.n_per_channel();
+        let n_sel = r.u16()? as usize;
+        if n_sel > c {
+            return Err(format!("selected {n_sel} > C {c}"));
+        }
+        let mut chans = Vec::with_capacity(n_sel);
+        for _ in 0..n_sel {
+            let ch = r.u16()? as usize;
+            if ch >= c {
+                return Err(format!("channel {ch} out of range"));
+            }
+            chans.push(ch);
+        }
+        let mut rows = vec![0.0f32; c * n];
+        for &ch in &chans {
+            let vals = r.f32s(n)?;
+            rows[ch * n..(ch + 1) * n].copy_from_slice(&vals);
+        }
+        Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::test_support::random_cm;
+    use crate::tensor::Tensor;
+
+    fn codec(strategy: Selection, n_select: usize, channels: usize) -> SelectionCodec {
+        SelectionCodec::new(strategy, n_select, channels, 5, 100, 3)
+    }
+
+    #[test]
+    fn fixed_transmits_exactly_that_channel() {
+        let cm = random_cm(2, 6, 4, 4, 1);
+        let mut c = codec(Selection::Fixed(3), 1, 6);
+        let wire = c.compress(&cm, RoundCtx::default());
+        let out = c.decompress(&wire).unwrap();
+        let rec = out.to_channel_major();
+        assert_eq!(rec.channel(3), cm.channel(3));
+        for ch in [0usize, 1, 2, 4, 5] {
+            assert!(rec.channel(ch).iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn max_std_picks_highest_variance() {
+        // channel 2 has much higher variance
+        let mut data = vec![0.01f32; 4 * 16];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = (i % 3) as f32 * 0.001;
+        }
+        for i in 0..16 {
+            data[2 * 16 + i] = if i % 2 == 0 { 10.0 } else { -10.0 };
+        }
+        let cm = Tensor::new(vec![1, 4, 4, 4], data).to_channel_major();
+        let mut c = codec(Selection::MaxStd, 1, 4);
+        let _ = c.compress(&cm, RoundCtx::default());
+        assert_eq!(c.last_selected(), &[2]);
+    }
+
+    #[test]
+    fn entropy_instant_uses_external_entropy() {
+        let cm = random_cm(2, 4, 4, 4, 2);
+        let ent = [0.1f32, 5.0, 0.2, 0.3];
+        let mut c = codec(Selection::EntropyInstant, 1, 4);
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&ent) });
+        assert_eq!(c.last_selected(), &[1]);
+    }
+
+    #[test]
+    fn historical_lags_instantaneous() {
+        let cm = random_cm(2, 2, 4, 4, 3);
+        let mut c = codec(Selection::EntropyHistorical, 1, 2);
+        // round 0: channel 0 hot (no history -> falls back to inst)
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[5.0, 0.1]) });
+        assert_eq!(c.last_selected(), &[0]);
+        // round 1: channel 1 suddenly hot, but HISTORY still says 0
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[0.1, 5.0]) });
+        assert_eq!(c.last_selected(), &[0], "historical must lag");
+        // after enough rounds the history flips
+        for _ in 0..6 {
+            let _ = c.compress(&cm, RoundCtx { entropy: Some(&[0.1, 5.0]) });
+        }
+        assert_eq!(c.last_selected(), &[1]);
+    }
+
+    #[test]
+    fn random_selection_varies() {
+        let cm = random_cm(2, 16, 4, 4, 4);
+        let mut c = codec(Selection::Random, 2, 16);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..20 {
+            let _ = c.compress(&cm, RoundCtx::default());
+            seen.extend(c.last_selected().iter().copied());
+        }
+        assert!(seen.len() > 4, "random selection stuck on {seen:?}");
+    }
+
+    #[test]
+    fn multi_channel_roundtrip() {
+        let cm = random_cm(2, 8, 4, 4, 5);
+        let mut c = codec(Selection::MaxStd, 3, 8);
+        let wire = c.compress(&cm, RoundCtx::default());
+        let out = c.decompress(&wire).unwrap();
+        let rec = out.to_channel_major();
+        let sel = c.last_selected().to_vec();
+        assert_eq!(sel.len(), 3);
+        for &ch in &sel {
+            assert_eq!(rec.channel(ch), cm.channel(ch));
+        }
+    }
+
+    #[test]
+    fn wire_size_proportional_to_selection() {
+        let cm = random_cm(2, 8, 4, 4, 6);
+        let n = cm.n_per_channel;
+        let mut c1 = codec(Selection::MaxStd, 1, 8);
+        let mut c3 = codec(Selection::MaxStd, 3, 8);
+        let w1 = c1.compress(&cm, RoundCtx::default());
+        let w3 = c3.compress(&cm, RoundCtx::default());
+        assert_eq!(w1.len(), Header::BYTES + 2 + 2 + n * 4);
+        assert_eq!(w3.len(), Header::BYTES + 2 + 3 * (2 + n * 4));
+    }
+}

@@ -1,0 +1,392 @@
+//! SL-ACC codec: ACII + CGC — the paper's contribution (Sec. II).
+//!
+//! Per round:
+//! 1. **ACII** — instantaneous per-channel entropy H_c^(t) (Eq. 1, from the
+//!    AOT Pallas kernel when the coordinator provides it, host mirror
+//!    otherwise) blended with the k-round historical mean H̃_c via
+//!    α^(t) = t/T (Eqs. 2–3).
+//! 2. **CGC** — 1-D K-means over the blended entropies into g groups
+//!    (Eq. 4); per-group mean entropy H̃_j (Eq. 5); per-group bit width
+//!    (Eq. 6); per-group min/max linear quantization with
+//!    round-half-away-from-zero (Eq. 7); bit-packed wire payload.
+//!
+//! ## Eq. 6 degeneracy and the `BitAlloc` knob
+//!
+//! Eq. 6 sets b_j = clamp(⌊H̃_j⌋, b_min, b_max) with H in nats. For smashed
+//! data with N = B·H·W elements per channel, the softmax entropy lives in
+//! roughly [ln N − 1, ln N]; at the paper's own scale (N ≳ 10⁵) ⌊H̃_j⌋
+//! saturates b_max for every group and the allocation degenerates to
+//! uniform 8-bit. We implement Eq. 6 verbatim ([`BitAlloc::FloorEntropy`],
+//! exposed as codec `slacc-paper-eq6`) and default to the intent-preserving
+//! [`BitAlloc::MinMaxScaled`]: affinely map the group entropies' observed
+//! range onto [b_min, b_max], so higher-entropy groups still get more bits
+//! (the paper's stated goal) at every tensor size. The fig7 ablation bench
+//! quantifies the difference.
+
+use crate::cluster::{kmeans_1d, Clustering};
+use crate::codecs::{ids, Codec, RoundCtx};
+use crate::entropy::{shannon, Acii, AlphaSchedule};
+use crate::quant::bitpack;
+use crate::quant::linear;
+use crate::quant::payload::{ByteReader, ByteWriter, Header};
+use crate::tensor::{view, ChannelMajor, Tensor};
+use crate::util::rng::Pcg32;
+
+/// Bit-width allocation rule (Eq. 6 and its non-degenerate variant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BitAlloc {
+    /// Paper Eq. 6 verbatim: b_j = clamp(⌊H̃_j⌋, b_min, b_max).
+    FloorEntropy,
+    /// b_j = b_min + round((H̃_j − min_j H̃)/(max_j H̃ − min_j H̃) · (b_max − b_min));
+    /// midpoint when all groups tie. Default.
+    MinMaxScaled,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SlAccConfig {
+    /// g of Eq. 4: number of channel groups.
+    pub groups: usize,
+    /// k of Eq. 2: historical entropy window (rounds).
+    pub history_window: usize,
+    /// Quantization bit-width bounds of Eq. 6.
+    pub b_min: u32,
+    pub b_max: u32,
+    pub bit_alloc: BitAlloc,
+    /// α^(t) policy (Eq. 3; `Fixed` variants drive the Fig. 4 ablation).
+    pub alpha: AlphaSchedule,
+}
+
+impl Default for SlAccConfig {
+    fn default() -> Self {
+        SlAccConfig {
+            groups: 4,
+            history_window: 5,
+            b_min: 2,
+            b_max: 8,
+            bit_alloc: BitAlloc::MinMaxScaled,
+            alpha: AlphaSchedule::Adaptive,
+        }
+    }
+}
+
+/// Diagnostics from the most recent `compress` call (ablation benches and
+/// the `inspect-entropy` example read these).
+#[derive(Debug, Clone, Default)]
+pub struct LastRound {
+    pub blended_entropy: Vec<f32>,
+    pub group_of_channel: Vec<usize>,
+    pub group_entropy: Vec<f32>,
+    pub group_bits: Vec<u32>,
+    pub avg_bits_per_element: f64,
+}
+
+pub struct SlAccCodec {
+    cfg: SlAccConfig,
+    acii: Acii,
+    rng: Pcg32,
+    last: Option<LastRound>,
+}
+
+impl SlAccCodec {
+    pub fn new(cfg: SlAccConfig, channels: usize, total_rounds: usize, seed: u64) -> Self {
+        assert!(cfg.b_min >= 1 && cfg.b_max <= 16 && cfg.b_min <= cfg.b_max);
+        assert!(cfg.groups >= 1);
+        SlAccCodec {
+            cfg,
+            acii: Acii::new(channels, cfg.history_window, total_rounds, cfg.alpha),
+            rng: Pcg32::new(seed, 0x51acc),
+            last: None,
+        }
+    }
+
+    pub fn config(&self) -> &SlAccConfig {
+        &self.cfg
+    }
+
+    pub fn last_round(&self) -> Option<&LastRound> {
+        self.last.as_ref()
+    }
+
+    /// Eq. 6 / variant: per-group bit widths from group mean entropies.
+    fn allocate_bits(&self, group_entropy: &[f32]) -> Vec<u32> {
+        let (bmin, bmax) = (self.cfg.b_min, self.cfg.b_max);
+        match self.cfg.bit_alloc {
+            BitAlloc::FloorEntropy => group_entropy
+                .iter()
+                .map(|&h| (h.max(0.0).floor() as u32).clamp(bmin, bmax))
+                .collect(),
+            BitAlloc::MinMaxScaled => {
+                let mn = group_entropy.iter().cloned().fold(f32::INFINITY, f32::min);
+                let mx = group_entropy.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                if (mx - mn) < 1e-6 {
+                    let mid = (bmin + bmax).div_ceil(2);
+                    return vec![mid; group_entropy.len()];
+                }
+                group_entropy
+                    .iter()
+                    .map(|&h| {
+                        let t = (h - mn) / (mx - mn);
+                        bmin + (t * (bmax - bmin) as f32).round() as u32
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+impl Codec for SlAccCodec {
+    fn name(&self) -> &'static str {
+        match self.cfg.bit_alloc {
+            BitAlloc::FloorEntropy => "slacc-paper-eq6",
+            BitAlloc::MinMaxScaled => "slacc",
+        }
+    }
+
+    fn compress(&mut self, data: &ChannelMajor, ctx: RoundCtx<'_>) -> Vec<u8> {
+        let c = data.channels;
+        assert_eq!(c, self.acii.channels(), "codec built for different C");
+
+        // --- ACII: blended channel importance (Eqs. 1-3) ---
+        let inst: Vec<f32> = match ctx.entropy {
+            Some(h) => h.to_vec(),
+            None => shannon::entropies(data),
+        };
+        let blended = self.acii.update(&inst);
+
+        // --- CGC: group by entropy (Eq. 4), bits per group (Eqs. 5-6) ---
+        let clustering: Clustering = kmeans_1d(&blended, self.cfg.groups, &mut self.rng);
+        let members = clustering.members();
+        // Eq. 5: group mean entropy == cluster centroid by construction.
+        let group_entropy: Vec<f32> = clustering.centroids.clone();
+        let group_bits = self.allocate_bits(&group_entropy);
+
+        // --- serialize (Eq. 7 per group) ---
+        let (b, _, h, w) = data.geometry();
+        let mut out = ByteWriter::with_capacity(
+            Header::BYTES + 2 + members.len() * 16 + c * data.n_per_channel,
+        );
+        Header { codec_id: ids::SLACC, dims: [b as u32, c as u32, h as u32, w as u32] }
+            .write(&mut out);
+        out.u16(members.len() as u16);
+
+        let mut codes = Vec::new();
+        let mut total_bits = 0u64;
+        for (j, chans) in members.iter().enumerate() {
+            // group-wide quantization boundaries x_{j,min/max} (Eq. 7)
+            let mut gmin = f32::INFINITY;
+            let mut gmax = f32::NEG_INFINITY;
+            for &ch in chans {
+                let (mn, mx) = view::min_max(data.channel(ch));
+                gmin = gmin.min(mn);
+                gmax = gmax.max(mx);
+            }
+            let bits = group_bits[j];
+            out.u8(bits as u8);
+            out.u16(chans.len() as u16);
+            out.f32(gmin);
+            out.f32(gmax);
+            for &ch in chans {
+                out.u16(ch as u16);
+            }
+            for &ch in chans {
+                linear::quantize(data.channel(ch), gmin, gmax, bits, &mut codes);
+                out.bytes(&bitpack::pack(&codes, bits));
+                total_bits += (codes.len() as u64) * bits as u64;
+            }
+        }
+
+        self.last = Some(LastRound {
+            blended_entropy: blended,
+            group_of_channel: clustering.assignment,
+            group_entropy,
+            group_bits,
+            avg_bits_per_element: total_bits as f64 / (c * data.n_per_channel) as f64,
+        });
+        out.finish()
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+        let mut r = ByteReader::new(bytes);
+        let header = Header::read(&mut r)?;
+        if header.codec_id != ids::SLACC {
+            return Err(format!("not an SL-ACC payload (codec {})", header.codec_id));
+        }
+        let [b, c, h, w] = header.dims.map(|d| d as usize);
+        let n = header.n_per_channel();
+        let n_groups = r.u16()? as usize;
+
+        let mut rows = vec![0.0f32; c * n];
+        let mut seen = vec![false; c];
+        let mut vals = Vec::new();
+        for _ in 0..n_groups {
+            let bits = r.u8()? as u32;
+            if !(1..=16).contains(&bits) {
+                return Err(format!("bad group bit width {bits}"));
+            }
+            let n_chans = r.u16()? as usize;
+            let gmin = r.f32()?;
+            let gmax = r.f32()?;
+            let mut chans = Vec::with_capacity(n_chans);
+            for _ in 0..n_chans {
+                let ch = r.u16()? as usize;
+                if ch >= c {
+                    return Err(format!("channel id {ch} out of range (C={c})"));
+                }
+                chans.push(ch);
+            }
+            for &ch in &chans {
+                let packed = r.bytes(bitpack::packed_len(n, bits))?;
+                let codes = bitpack::unpack(packed, bits, n);
+                linear::dequantize(&codes, gmin, gmax, bits, &mut vals);
+                rows[ch * n..(ch + 1) * n].copy_from_slice(&vals);
+                seen[ch] = true;
+            }
+        }
+        if let Some(missing) = seen.iter().position(|&s| !s) {
+            return Err(format!("payload missing channel {missing}"));
+        }
+        Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::test_support::{random_cm, relu_cm};
+
+    fn codec(channels: usize) -> SlAccCodec {
+        SlAccCodec::new(SlAccConfig::default(), channels, 100, 42)
+    }
+
+    #[test]
+    fn roundtrip_reconstructs_within_quant_error() {
+        let cm = random_cm(2, 8, 4, 4, 1);
+        let mut c = codec(8);
+        let wire = c.compress(&cm, RoundCtx::default());
+        let out = c.decompress(&wire).unwrap();
+        let orig = cm.to_nchw();
+        // worst-case group: b_min=2 bits over the group's min/max range
+        let (mn, mx) = view::min_max(orig.data());
+        let bound = (mx - mn) / 3.0; // step at 2 bits
+        for (a, b) in orig.data().iter().zip(out.data()) {
+            assert!((a - b).abs() <= bound + 1e-5);
+        }
+    }
+
+    #[test]
+    fn eight_bit_group_high_fidelity() {
+        // single group => every channel gets the same bits (midpoint = 5);
+        // with b_min=b_max=8 reconstruction error is tiny.
+        let cfg = SlAccConfig { groups: 1, b_min: 8, b_max: 8, ..Default::default() };
+        let cm = relu_cm(2, 4, 4, 4, 2);
+        let mut c = SlAccCodec::new(cfg, 4, 100, 1);
+        let wire = c.compress(&cm, RoundCtx::default());
+        let out = c.decompress(&wire).unwrap();
+        let orig = cm.to_nchw();
+        assert!(orig.mean_abs_diff(&out) < 0.02);
+    }
+
+    #[test]
+    fn respects_bit_bounds() {
+        let cm = random_cm(2, 16, 4, 4, 3);
+        let mut c = codec(16);
+        let _ = c.compress(&cm, RoundCtx::default());
+        let last = c.last_round().unwrap();
+        for &b in &last.group_bits {
+            assert!((2..=8).contains(&b), "bits {b} out of [2,8]");
+        }
+        assert!(last.avg_bits_per_element >= 2.0 - 1e-9);
+        assert!(last.avg_bits_per_element <= 8.0 + 1e-9);
+    }
+
+    #[test]
+    fn external_entropy_is_used() {
+        // Feed a synthetic entropy vector that forces a specific grouping:
+        // channels 0..4 low, 4..8 high. Groups=2 must split exactly there.
+        let cm = random_cm(2, 8, 4, 4, 4);
+        let ent = [1.0f32, 1.1, 0.9, 1.05, 6.0, 6.1, 5.9, 6.05];
+        let cfg = SlAccConfig { groups: 2, ..Default::default() };
+        let mut c = SlAccCodec::new(cfg, 8, 100, 5);
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&ent) });
+        let last = c.last_round().unwrap();
+        let g0 = last.group_of_channel[0];
+        for ch in 0..4 {
+            assert_eq!(last.group_of_channel[ch], g0);
+        }
+        for ch in 4..8 {
+            assert_ne!(last.group_of_channel[ch], g0);
+        }
+        // higher-entropy group gets at least as many bits (MinMaxScaled)
+        let g_hi = last.group_of_channel[4];
+        assert!(last.group_bits[g_hi] >= last.group_bits[g0]);
+        assert_eq!(last.group_bits[g_hi], 8);
+        assert_eq!(last.group_bits[g0], 2);
+    }
+
+    #[test]
+    fn floor_entropy_matches_eq6() {
+        let cm = random_cm(2, 4, 4, 4, 6);
+        let ent = [3.7f32, 3.7, 3.7, 3.7];
+        let cfg = SlAccConfig {
+            groups: 1,
+            bit_alloc: BitAlloc::FloorEntropy,
+            ..Default::default()
+        };
+        let mut c = SlAccCodec::new(cfg, 4, 100, 7);
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&ent) });
+        assert_eq!(c.last_round().unwrap().group_bits, vec![3]); // floor(3.7)
+    }
+
+    #[test]
+    fn floor_entropy_clamps() {
+        let cm = random_cm(1, 2, 2, 2, 7);
+        let cfg = SlAccConfig {
+            groups: 2,
+            bit_alloc: BitAlloc::FloorEntropy,
+            ..Default::default()
+        };
+        let mut c = SlAccCodec::new(cfg, 2, 100, 7);
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[0.5, 20.0]) });
+        assert_eq!(c.last_round().unwrap().group_bits, vec![2, 8]);
+    }
+
+    #[test]
+    fn history_changes_grouping_over_rounds() {
+        // With Fixed(1.0) alpha the codec uses pure history; feeding very
+        // different inst entropies each round must still give stable groups.
+        let cm = random_cm(2, 4, 4, 4, 8);
+        let cfg = SlAccConfig {
+            alpha: AlphaSchedule::Fixed(1.0),
+            groups: 2,
+            ..Default::default()
+        };
+        let mut c = SlAccCodec::new(cfg, 4, 100, 9);
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[1.0, 1.0, 9.0, 9.0]) });
+        // round 2: wildly different inst entropy, but history dominates
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[9.0, 9.0, 1.0, 1.0]) });
+        let last = c.last_round().unwrap();
+        assert_eq!(last.group_of_channel[0], last.group_of_channel[1]);
+        assert_eq!(last.group_of_channel[2], last.group_of_channel[3]);
+        assert_ne!(last.group_of_channel[0], last.group_of_channel[2]);
+        // blended followed history (round-1 values), not the new inst
+        assert!(last.blended_entropy[2] > last.blended_entropy[0]);
+    }
+
+    #[test]
+    fn wire_smaller_than_raw() {
+        let cm = random_cm(4, 32, 8, 8, 9);
+        let mut c = codec(32);
+        let wire = c.compress(&cm, RoundCtx::default());
+        assert!(wire.len() < 32 * cm.n_per_channel * 4);
+    }
+
+    #[test]
+    fn truncated_payload_is_error() {
+        let cm = random_cm(2, 4, 4, 4, 10);
+        let mut c = codec(4);
+        let wire = c.compress(&cm, RoundCtx::default());
+        for cut in [3usize, Header::BYTES, wire.len() - 1] {
+            assert!(c.decompress(&wire[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+}

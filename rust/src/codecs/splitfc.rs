@@ -1,0 +1,187 @@
+//! SplitFC baseline (Oh et al., TNNLS 2025, as described in the paper's
+//! Sec. III-A3): standard-deviation-based feature dropping + quantization.
+//!
+//! Per round: rank channels by their standard deviation, keep the top
+//! `keep_frac` fraction, and uniformly quantize the kept channels at a
+//! fixed bit width. Dropped channels are reconstructed from their
+//! transmitted mean (one f32 each) — the cheapest compensation that keeps
+//! the server-side GroupNorm statistics finite. The paper's critique —
+//! "sensitive to noise and often discards low-variance yet informative
+//! channels" — is exactly what the Fig. 5/6 benches surface.
+
+use crate::codecs::{ids, Codec, RoundCtx};
+use crate::quant::{bitpack, linear};
+use crate::quant::payload::{ByteReader, ByteWriter, Header};
+use crate::tensor::{view, ChannelMajor, Tensor};
+
+#[derive(Debug)]
+pub struct SplitFcCodec {
+    keep_frac: f64,
+    bits: u32,
+}
+
+impl SplitFcCodec {
+    pub fn new(keep_frac: f64, bits: u32) -> Self {
+        assert!(keep_frac > 0.0 && keep_frac <= 1.0);
+        assert!((2..=16).contains(&bits));
+        SplitFcCodec { keep_frac, bits }
+    }
+}
+
+impl Codec for SplitFcCodec {
+    fn name(&self) -> &'static str {
+        "splitfc"
+    }
+
+    fn compress(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>) -> Vec<u8> {
+        let (b, c, h, w) = data.geometry();
+        let n = data.n_per_channel;
+        let n_keep = ((c as f64 * self.keep_frac).ceil() as usize).clamp(1, c);
+
+        // rank channels by std (descending)
+        let stats: Vec<(f32, f32)> = (0..c).map(|ch| view::mean_std(data.channel(ch))).collect();
+        let mut order: Vec<usize> = (0..c).collect();
+        order.sort_by(|&a, &b| stats[b].1.partial_cmp(&stats[a].1).unwrap());
+        let mut kept = order[..n_keep].to_vec();
+        kept.sort_unstable(); // canonical order on the wire
+        let dropped: Vec<usize> = (0..c).filter(|ch| !kept.contains(ch)).collect();
+
+        let mut out = ByteWriter::with_capacity(
+            Header::BYTES + 5 + c * 2 + dropped.len() * 4
+                + n_keep * (8 + bitpack::packed_len(n, self.bits)),
+        );
+        Header { codec_id: ids::SPLITFC, dims: [b as u32, c as u32, h as u32, w as u32] }
+            .write(&mut out);
+        out.u8(self.bits as u8);
+        out.u16(kept.len() as u16);
+        for &ch in &kept {
+            out.u16(ch as u16);
+        }
+        // dropped channels: transmit mean only
+        for &ch in &dropped {
+            out.f32(stats[ch].0);
+        }
+        let mut codes = Vec::new();
+        for &ch in &kept {
+            let row = data.channel(ch);
+            let (mn, mx) = view::min_max(row);
+            out.f32(mn);
+            out.f32(mx);
+            linear::quantize(row, mn, mx, self.bits, &mut codes);
+            out.bytes(&bitpack::pack(&codes, self.bits));
+        }
+        out.finish()
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+        let mut r = ByteReader::new(bytes);
+        let header = Header::read(&mut r)?;
+        if header.codec_id != ids::SPLITFC {
+            return Err(format!("not a splitfc payload (codec {})", header.codec_id));
+        }
+        let [b, c, h, w] = header.dims.map(|d| d as usize);
+        let n = header.n_per_channel();
+        let bits = r.u8()? as u32;
+        if !(2..=16).contains(&bits) {
+            return Err(format!("bad bit width {bits}"));
+        }
+        let n_keep = r.u16()? as usize;
+        if n_keep > c {
+            return Err(format!("kept {n_keep} > C {c}"));
+        }
+        let mut kept = Vec::with_capacity(n_keep);
+        let mut is_kept = vec![false; c];
+        for _ in 0..n_keep {
+            let ch = r.u16()? as usize;
+            if ch >= c {
+                return Err(format!("channel {ch} out of range"));
+            }
+            kept.push(ch);
+            is_kept[ch] = true;
+        }
+        let dropped: Vec<usize> = (0..c).filter(|&ch| !is_kept[ch]).collect();
+
+        let mut rows = vec![0.0f32; c * n];
+        for &ch in &dropped {
+            let mean = r.f32()?;
+            rows[ch * n..(ch + 1) * n].fill(mean);
+        }
+        let mut vals = Vec::new();
+        for &ch in &kept {
+            let mn = r.f32()?;
+            let mx = r.f32()?;
+            let packed = r.bytes(bitpack::packed_len(n, bits))?;
+            let codes = bitpack::unpack(packed, bits, n);
+            linear::dequantize(&codes, mn, mx, bits, &mut vals);
+            rows[ch * n..(ch + 1) * n].copy_from_slice(&vals);
+        }
+        Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg32;
+
+    /// Data where channel std is strictly increasing with channel index.
+    fn graded_cm(b: usize, c: usize, hw: usize) -> ChannelMajor {
+        let mut rng = Pcg32::seeded(11);
+        let mut data = vec![0.0f32; b * c * hw * hw];
+        for bi in 0..b {
+            for ch in 0..c {
+                let scale = 0.1 + ch as f32;
+                for i in 0..hw * hw {
+                    data[(bi * c + ch) * hw * hw + i] = rng.next_gaussian() * scale;
+                }
+            }
+        }
+        Tensor::new(vec![b, c, hw, hw], data).to_channel_major()
+    }
+
+    #[test]
+    fn keeps_high_std_channels() {
+        let cm = graded_cm(2, 8, 4);
+        let mut c = SplitFcCodec::new(0.5, 8);
+        let wire = c.compress(&cm, RoundCtx::default());
+        let out = c.decompress(&wire).unwrap();
+        let rec = out.to_channel_major();
+        // high-std channels (4..8) must be near-exact (8-bit quant)
+        for ch in 4..8 {
+            let row = cm.channel(ch);
+            let (mn, mx) = view::min_max(row);
+            let bound = linear::max_error(mn, mx, 8) + 1e-5;
+            for (a, b) in row.iter().zip(rec.channel(ch)) {
+                assert!((a - b).abs() <= bound, "kept channel {ch}");
+            }
+        }
+        // dropped channels (0..4) are constant = their mean
+        for ch in 0..4 {
+            let rec_row = rec.channel(ch);
+            assert!(rec_row.iter().all(|&x| x == rec_row[0]), "dropped {ch}");
+            let (mean, _) = view::mean_std(cm.channel(ch));
+            assert!((rec_row[0] - mean).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn keep_all_equals_uniform_quant() {
+        let cm = graded_cm(1, 4, 4);
+        let mut sfc = SplitFcCodec::new(1.0, 6);
+        let mut uni = crate::codecs::uniform::UniformCodec::new(6);
+        let a = sfc.compress(&cm, RoundCtx::default());
+        let b = uni.compress(&cm, RoundCtx::default());
+        let ta = sfc.decompress(&a).unwrap();
+        let tb = uni.decompress(&b).unwrap();
+        assert_eq!(ta.data(), tb.data());
+    }
+
+    #[test]
+    fn wire_smaller_with_lower_keep() {
+        let cm = graded_cm(2, 16, 4);
+        let w25 = SplitFcCodec::new(0.25, 6).compress(&cm, RoundCtx::default());
+        let w100 = SplitFcCodec::new(1.0, 6).compress(&cm, RoundCtx::default());
+        assert!(w25.len() < w100.len() / 2);
+    }
+}

@@ -1,0 +1,133 @@
+//! Uniform fixed-bit codec: per-channel min/max linear quantization at one
+//! global bit width. The "uniform compression across all channels" strawman
+//! the paper argues against (Sec. I), and the fixed-bit substrate inside
+//! SplitFC/EasyQuant.
+
+use crate::codecs::{ids, Codec, RoundCtx};
+use crate::quant::{bitpack, linear};
+use crate::quant::payload::{ByteReader, ByteWriter, Header};
+use crate::tensor::{view, ChannelMajor, Tensor};
+
+#[derive(Debug)]
+pub struct UniformCodec {
+    bits: u32,
+}
+
+impl UniformCodec {
+    pub fn new(bits: u32) -> Self {
+        assert!((1..=16).contains(&bits));
+        UniformCodec { bits }
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+}
+
+impl Codec for UniformCodec {
+    fn name(&self) -> &'static str {
+        match self.bits {
+            4 => "uniform4",
+            8 => "uniform8",
+            _ => "uniform",
+        }
+    }
+
+    fn compress(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>) -> Vec<u8> {
+        let (b, c, h, w) = data.geometry();
+        let n = data.n_per_channel;
+        let mut out = ByteWriter::with_capacity(
+            Header::BYTES + 1 + c * (8 + bitpack::packed_len(n, self.bits)),
+        );
+        Header { codec_id: ids::UNIFORM, dims: [b as u32, c as u32, h as u32, w as u32] }
+            .write(&mut out);
+        out.u8(self.bits as u8);
+        let mut codes = Vec::new();
+        for ch in 0..c {
+            let row = data.channel(ch);
+            let (mn, mx) = view::min_max(row);
+            out.f32(mn);
+            out.f32(mx);
+            linear::quantize(row, mn, mx, self.bits, &mut codes);
+            out.bytes(&bitpack::pack(&codes, self.bits));
+        }
+        out.finish()
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+        let mut r = ByteReader::new(bytes);
+        let header = Header::read(&mut r)?;
+        if header.codec_id != ids::UNIFORM {
+            return Err(format!("not a uniform payload (codec {})", header.codec_id));
+        }
+        let [b, c, h, w] = header.dims.map(|d| d as usize);
+        let n = header.n_per_channel();
+        let bits = r.u8()? as u32;
+        if !(1..=16).contains(&bits) {
+            return Err(format!("bad bit width {bits}"));
+        }
+        let mut rows = vec![0.0f32; c * n];
+        let mut vals = Vec::new();
+        for ch in 0..c {
+            let mn = r.f32()?;
+            let mx = r.f32()?;
+            let packed = r.bytes(bitpack::packed_len(n, bits))?;
+            let codes = bitpack::unpack(packed, bits, n);
+            linear::dequantize(&codes, mn, mx, bits, &mut vals);
+            rows[ch * n..(ch + 1) * n].copy_from_slice(&vals);
+        }
+        Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::test_support::random_cm;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let cm = random_cm(2, 6, 4, 4, 1);
+        for bits in [2u32, 4, 8] {
+            let mut c = UniformCodec::new(bits);
+            let wire = c.compress(&cm, RoundCtx::default());
+            let out = c.decompress(&wire).unwrap();
+            for ch in 0..6 {
+                let row = cm.channel(ch);
+                let (mn, mx) = view::min_max(row);
+                let bound = linear::max_error(mn, mx, bits) + 1e-5;
+                let rec = out.to_channel_major();
+                for (a, b) in row.iter().zip(rec.channel(ch)) {
+                    assert!((a - b).abs() <= bound, "bits={bits}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wire_size_scales_with_bits() {
+        let cm = random_cm(2, 8, 8, 8, 2);
+        let w4 = UniformCodec::new(4).compress(&cm, RoundCtx::default());
+        let w8 = UniformCodec::new(8).compress(&cm, RoundCtx::default());
+        assert!(w8.len() > w4.len());
+        let n = cm.n_per_channel;
+        assert_eq!(w4.len(), Header::BYTES + 1 + 8 * (8 + n / 2));
+    }
+
+    #[test]
+    fn eight_bit_beats_two_bit_fidelity() {
+        let cm = random_cm(2, 4, 8, 8, 3);
+        let orig = cm.to_nchw();
+        let e2 = {
+            let mut c = UniformCodec::new(2);
+            let w = c.compress(&cm, RoundCtx::default());
+            orig.mean_abs_diff(&c.decompress(&w).unwrap())
+        };
+        let e8 = {
+            let mut c = UniformCodec::new(8);
+            let w = c.compress(&cm, RoundCtx::default());
+            orig.mean_abs_diff(&c.decompress(&w).unwrap())
+        };
+        assert!(e8 < e2 / 10.0, "e8={e8} e2={e2}");
+    }
+}

@@ -1,0 +1,232 @@
+//! Experiment configuration: everything a training run needs, buildable
+//! from CLI flags (see [`crate::cli`]) or programmatically from the benches.
+
+use crate::codecs;
+use crate::codecs::selection::Selection;
+use crate::data::partition::Partition;
+use crate::entropy::AlphaSchedule;
+use crate::net::{DeviceLink, ServerModel};
+
+/// Which compressor runs on the smashed-data streams.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CodecChoice {
+    /// A codec from [`codecs::by_name`] ("slacc", "powerquant", ...).
+    Named(String),
+    /// Channel-selection ablation (Figs. 2/3/6): strategy + #channels.
+    Select { strategy: Selection, n_select: usize },
+}
+
+impl CodecChoice {
+    pub fn label(&self) -> String {
+        match self {
+            CodecChoice::Named(n) => n.clone(),
+            CodecChoice::Select { strategy, n_select } => {
+                format!("select-{}x{}", strategy.label(), n_select)
+            }
+        }
+    }
+}
+
+/// Full specification of one training run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// model/dataset config name: "ham" | "mnist"
+    pub dataset: String,
+    /// root of the AOT artifacts (contains `<dataset>/manifest.json`)
+    pub artifacts_root: String,
+    pub devices: usize,
+    pub rounds: usize,
+    pub lr: f32,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub partition: Partition,
+    pub codec: CodecChoice,
+    /// evaluate test accuracy every this many rounds
+    pub eval_every: usize,
+    /// stop early once this test accuracy is reached
+    pub target_accuracy: Option<f64>,
+    /// FedAvg the client sub-models every this many rounds (1 = every round)
+    pub client_agg_every: usize,
+    /// ACII/CGC overrides (apply to the "slacc" codec)
+    pub slacc: crate::codecs::slacc::SlAccConfig,
+    /// override the α schedule for slacc / selection codecs (Fig. 4)
+    pub alpha: Option<AlphaSchedule>,
+    pub link: DeviceLink,
+    pub server: ServerModel,
+    /// per-device speed factors (empty = homogeneous 1.0)
+    pub device_speeds: Vec<f64>,
+    pub seed: u64,
+    /// compute entropy with the AOT Pallas kernel (true) or the host mirror
+    /// (false). The kernel path is the paper-faithful hot path; the host
+    /// mirror exists for engine-less unit tests and perf comparison.
+    pub entropy_via_kernel: bool,
+    /// also compress the downlink gradients (paper does both directions)
+    pub compress_gradients: bool,
+}
+
+impl ExperimentConfig {
+    /// Paper-default configuration for a dataset ("ham" | "mnist").
+    pub fn default_for(dataset: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            dataset: dataset.to_string(),
+            artifacts_root: "artifacts".into(),
+            devices: 5,            // paper Sec. III-A4
+            rounds: 300,
+            lr: 1e-3,
+            train_n: 2000,
+            test_n: 512,
+            partition: Partition::Iid,
+            codec: CodecChoice::Named("slacc".into()),
+            eval_every: 10,
+            target_accuracy: None,
+            client_agg_every: 1,
+            slacc: crate::codecs::slacc::SlAccConfig::default(),
+            alpha: None,
+            link: DeviceLink::default(),
+            server: ServerModel::default(),
+            device_speeds: Vec::new(),
+            seed: 0,
+            entropy_via_kernel: true,
+            compress_gradients: true,
+        }
+    }
+
+    /// Artifacts directory for this run.
+    pub fn artifacts_dir(&self) -> std::path::PathBuf {
+        std::path::Path::new(&self.artifacts_root).join(&self.dataset)
+    }
+
+    /// Instantiate the uplink/downlink codec for one device stream.
+    /// `stream` namespaces the RNG so every device/direction differs.
+    pub fn build_codec(&self, channels: usize, stream: u64)
+                       -> Result<Box<dyn codecs::Codec>, String> {
+        let seed = self.seed ^ (0x0dec << 16) ^ stream;
+        match &self.codec {
+            CodecChoice::Named(name) => {
+                if name == "slacc" || name == "slacc-paper-eq6" {
+                    let mut cfg = self.slacc;
+                    if name == "slacc-paper-eq6" {
+                        cfg.bit_alloc = crate::codecs::slacc::BitAlloc::FloorEntropy;
+                    }
+                    if let Some(a) = self.alpha {
+                        cfg.alpha = a;
+                    }
+                    Ok(Box::new(crate::codecs::slacc::SlAccCodec::new(
+                        cfg, channels, self.rounds, seed,
+                    )))
+                } else {
+                    codecs::by_name(name, channels, self.rounds, seed)
+                }
+            }
+            CodecChoice::Select { strategy, n_select } => {
+                Ok(Box::new(codecs::selection::SelectionCodec::new(
+                    *strategy,
+                    *n_select,
+                    channels,
+                    self.slacc.history_window,
+                    self.rounds,
+                    seed,
+                )))
+            }
+        }
+    }
+
+    /// The fleet's network simulator.
+    pub fn network(&self) -> crate::net::NetworkSim {
+        if self.device_speeds.is_empty() {
+            crate::net::NetworkSim::homogeneous(self.devices, self.link, self.server)
+        } else {
+            assert_eq!(self.device_speeds.len(), self.devices);
+            crate::net::NetworkSim::heterogeneous(self.link, &self.device_speeds, self.server)
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.devices == 0 {
+            return Err("devices must be >= 1".into());
+        }
+        if self.rounds == 0 {
+            return Err("rounds must be >= 1".into());
+        }
+        if self.eval_every == 0 {
+            return Err("eval_every must be >= 1".into());
+        }
+        if self.client_agg_every == 0 {
+            return Err("client_agg_every must be >= 1".into());
+        }
+        if !(self.lr > 0.0) {
+            return Err("lr must be > 0".into());
+        }
+        if !self.device_speeds.is_empty() && self.device_speeds.len() != self.devices {
+            return Err(format!(
+                "device_speeds has {} entries for {} devices",
+                self.device_speeds.len(),
+                self.devices
+            ));
+        }
+        if let CodecChoice::Named(n) = &self.codec {
+            let base = n.strip_prefix("ef:").unwrap_or(n);
+            if !codecs::ALL_CODECS.contains(&base) {
+                return Err(format!("unknown codec '{n}'"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default_for("ham").validate().unwrap();
+        ExperimentConfig::default_for("mnist").validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ExperimentConfig::default_for("ham");
+        c.devices = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default_for("ham");
+        c.codec = CodecChoice::Named("nope".into());
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default_for("ham");
+        c.device_speeds = vec![1.0, 2.0];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn build_codec_named_and_selection() {
+        let mut c = ExperimentConfig::default_for("ham");
+        assert_eq!(c.build_codec(32, 0).unwrap().name(), "slacc");
+        c.codec = CodecChoice::Named("powerquant".into());
+        assert_eq!(c.build_codec(32, 0).unwrap().name(), "powerquant");
+        c.codec = CodecChoice::Select {
+            strategy: Selection::EntropyBlended,
+            n_select: 1,
+        };
+        assert_eq!(c.build_codec(32, 0).unwrap().name(), "select-acii");
+    }
+
+    #[test]
+    fn alpha_override_applies_to_slacc() {
+        let mut c = ExperimentConfig::default_for("ham");
+        c.alpha = Some(AlphaSchedule::Fixed(0.25));
+        let codec = c.build_codec(8, 0).unwrap();
+        assert_eq!(codec.name(), "slacc"); // built without panic
+    }
+
+    #[test]
+    fn network_heterogeneous() {
+        let mut c = ExperimentConfig::default_for("ham");
+        c.devices = 3;
+        c.device_speeds = vec![1.0, 0.5, 2.0];
+        let net = c.network();
+        assert_eq!(net.devices(), 3);
+        assert!(net.links[1].t_client_fwd > net.links[0].t_client_fwd);
+    }
+}

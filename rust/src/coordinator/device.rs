@@ -1,0 +1,98 @@
+//! Per-edge-device state: client sub-model replica, data shard loader, and
+//! the two stateful codec streams (uplink activations / downlink gradients).
+//!
+//! Codec state is per-device *and* per-direction, matching the paper: ACII
+//! tracks the entropy history of each smashed-data stream independently
+//! (device activations differ, and gradients have different statistics
+//! than activations).
+
+use crate::codecs::Codec;
+use crate::data::loader::BatchLoader;
+use crate::tensor::Tensor;
+
+pub struct DeviceState {
+    pub id: usize,
+    /// flat client sub-model parameters (manifest order)
+    pub client_params: Vec<Tensor>,
+    pub loader: BatchLoader,
+    pub up_codec: Box<dyn Codec>,
+    pub down_codec: Box<dyn Codec>,
+}
+
+impl DeviceState {
+    pub fn new(
+        id: usize,
+        client_params: Vec<Tensor>,
+        loader: BatchLoader,
+        up_codec: Box<dyn Codec>,
+        down_codec: Box<dyn Codec>,
+    ) -> DeviceState {
+        DeviceState { id, client_params, loader, up_codec, down_codec }
+    }
+}
+
+/// FedAvg: weighted average of every device's client sub-model, written
+/// back to all devices (paper workflow step iv + SFL aggregation).
+pub fn fedavg_clients(devices: &mut [DeviceState], weights: &[f64]) {
+    assert_eq!(devices.len(), weights.len());
+    assert!(!devices.is_empty());
+    let wsum: f64 = weights.iter().sum();
+    assert!(wsum > 0.0);
+    let n_params = devices[0].client_params.len();
+
+    let mut avg: Vec<Tensor> = devices[0]
+        .client_params
+        .iter()
+        .map(|t| Tensor::zeros(t.dims().to_vec()))
+        .collect();
+    for (dev, &w) in devices.iter().zip(weights) {
+        assert_eq!(dev.client_params.len(), n_params);
+        let scale = (w / wsum) as f32;
+        for (acc, t) in avg.iter_mut().zip(&dev.client_params) {
+            for (a, &x) in acc.data_mut().iter_mut().zip(t.data()) {
+                *a += scale * x;
+            }
+        }
+    }
+    for dev in devices.iter_mut() {
+        dev.client_params = avg.clone();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::identity::IdentityCodec;
+
+    fn dev(id: usize, value: f32) -> DeviceState {
+        DeviceState::new(
+            id,
+            vec![Tensor::new(vec![2], vec![value, value * 2.0])],
+            BatchLoader::new(&[0, 1, 2], 2, id as u64),
+            Box::new(IdentityCodec::new()),
+            Box::new(IdentityCodec::new()),
+        )
+    }
+
+    #[test]
+    fn fedavg_equal_weights() {
+        let mut devs = vec![dev(0, 1.0), dev(1, 3.0)];
+        fedavg_clients(&mut devs, &[1.0, 1.0]);
+        assert_eq!(devs[0].client_params[0].data(), &[2.0, 4.0]);
+        assert_eq!(devs[1].client_params[0].data(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn fedavg_weighted() {
+        let mut devs = vec![dev(0, 0.0), dev(1, 4.0)];
+        fedavg_clients(&mut devs, &[3.0, 1.0]);
+        assert_eq!(devs[0].client_params[0].data(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn fedavg_single_device_noop() {
+        let mut devs = vec![dev(0, 5.0)];
+        fedavg_clients(&mut devs, &[2.0]);
+        assert_eq!(devs[0].client_params[0].data(), &[5.0, 10.0]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Training metrics: per-round records, accuracy observations, and
+//! CSV/JSON export for the bench harness and plots.
+
+use crate::util::json::Json;
+
+/// One training round's measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// mean training loss across devices this round
+    pub loss: f64,
+    /// test accuracy if this was an eval round
+    pub accuracy: Option<f64>,
+    pub bytes_up: usize,
+    pub bytes_down: usize,
+    /// cumulative simulated seconds after this round
+    pub sim_time_s: f64,
+    /// real wall-clock milliseconds spent on this round
+    pub wall_ms: f64,
+}
+
+/// Append-only metrics log for one run.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsLog {
+    pub records: Vec<RoundRecord>,
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// (round, accuracy) pairs for eval rounds.
+    pub fn accuracy_curve(&self) -> Vec<(usize, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.accuracy.map(|a| (r.round, a)))
+            .collect()
+    }
+
+    /// (sim_time_s, accuracy) pairs — the paper's Fig. 5 axes.
+    pub fn accuracy_vs_time(&self) -> Vec<(f64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.accuracy.map(|a| (r.sim_time_s, a)))
+            .collect()
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.accuracy)
+    }
+
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.records
+            .iter()
+            .filter_map(|r| r.accuracy)
+            .fold(None, |m, a| Some(m.map_or(a, |m: f64| m.max(a))))
+    }
+
+    /// First simulated time at which accuracy >= target.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.accuracy.is_some_and(|a| a >= target))
+            .map(|r| r.sim_time_s)
+    }
+
+    pub fn total_bytes(&self) -> (usize, usize) {
+        (
+            self.records.iter().map(|r| r.bytes_up).sum(),
+            self.records.iter().map(|r| r.bytes_down).sum(),
+        )
+    }
+
+    pub fn mean_loss_tail(&self, window: usize) -> f64 {
+        let n = self.records.len();
+        let start = n.saturating_sub(window);
+        let tail = &self.records[start..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("round,loss,accuracy,bytes_up,bytes_down,sim_time_s,wall_ms\n");
+        for r in &self.records {
+            let acc = r.accuracy.map_or(String::new(), |a| format!("{a:.6}"));
+            out.push_str(&format!(
+                "{},{:.6},{},{},{},{:.4},{:.1}\n",
+                r.round, r.loss, acc, r.bytes_up, r.bytes_down, r.sim_time_s, r.wall_ms
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("round", Json::Num(r.round as f64)),
+                        ("loss", Json::Num(r.loss)),
+                        (
+                            "accuracy",
+                            r.accuracy.map_or(Json::Null, Json::Num),
+                        ),
+                        ("bytes_up", Json::Num(r.bytes_up as f64)),
+                        ("bytes_down", Json::Num(r.bytes_down as f64)),
+                        ("sim_time_s", Json::Num(r.sim_time_s)),
+                        ("wall_ms", Json::Num(r.wall_ms)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn write_csv(&self, path: &std::path::Path) -> Result<(), String> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).map_err(|e| e.to_string())?;
+        }
+        std::fs::write(path, self.to_csv()).map_err(|e| e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, loss: f64, acc: Option<f64>, t: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            loss,
+            accuracy: acc,
+            bytes_up: 100,
+            bytes_down: 50,
+            sim_time_s: t,
+            wall_ms: 1.0,
+        }
+    }
+
+    #[test]
+    fn curves_and_queries() {
+        let mut m = MetricsLog::new();
+        m.push(rec(0, 2.0, None, 1.0));
+        m.push(rec(1, 1.5, Some(0.4), 2.0));
+        m.push(rec(2, 1.2, None, 3.0));
+        m.push(rec(3, 1.0, Some(0.7), 4.0));
+        assert_eq!(m.accuracy_curve(), vec![(1, 0.4), (3, 0.7)]);
+        assert_eq!(m.final_accuracy(), Some(0.7));
+        assert_eq!(m.best_accuracy(), Some(0.7));
+        assert_eq!(m.time_to_accuracy(0.5), Some(4.0));
+        assert_eq!(m.time_to_accuracy(0.9), None);
+        assert_eq!(m.total_bytes(), (400, 200));
+        assert!((m.mean_loss_tail(2) - 1.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut m = MetricsLog::new();
+        m.push(rec(0, 2.0, Some(0.1), 1.0));
+        let csv = m.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("round,loss"));
+        assert!(lines[1].starts_with("0,2.0"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut m = MetricsLog::new();
+        m.push(rec(0, 2.0, None, 1.0));
+        let j = m.to_json();
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
+        assert_eq!(
+            parsed.as_arr().unwrap()[0].at(&["accuracy"]),
+            &Json::Null
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! The split-learning coordinator — the L3 system contribution.
+//!
+//! * [`trainer`] — the end-to-end SFL round loop over the PJRT runtime.
+//! * [`device`] — per-device state (client sub-model, loader, codecs) and
+//!   FedAvg aggregation.
+//! * [`server`] — the shared server sub-model state.
+//! * [`metrics`] — per-round records, accuracy curves, CSV/JSON export.
+
+pub mod device;
+pub mod metrics;
+pub mod server;
+pub mod trainer;

@@ -1,0 +1,40 @@
+//! Server-side state: the shared server sub-model parameters.
+//!
+//! In SFL there is a single server model updated sequentially with every
+//! device's (decompressed) smashed data each round; this is what
+//! `server_step` consumes and produces through the PJRT runtime.
+
+use crate::tensor::Tensor;
+
+pub struct ServerState {
+    pub server_params: Vec<Tensor>,
+}
+
+impl ServerState {
+    pub fn new(server_params: Vec<Tensor>) -> ServerState {
+        ServerState { server_params }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.server_params.iter().map(|t| t.len()).sum()
+    }
+
+    /// Replace parameters with a step result (post-SGD values).
+    pub fn update(&mut self, new_params: Vec<Tensor>) {
+        debug_assert_eq!(new_params.len(), self.server_params.len());
+        self.server_params = new_params;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn update_replaces() {
+        let mut s = ServerState::new(vec![Tensor::new(vec![2], vec![1.0, 2.0])]);
+        assert_eq!(s.param_count(), 2);
+        s.update(vec![Tensor::new(vec![2], vec![3.0, 4.0])]);
+        assert_eq!(s.server_params[0].data(), &[3.0, 4.0]);
+    }
+}

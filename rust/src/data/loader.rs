@@ -1,0 +1,110 @@
+//! Per-device batch loader: epoch shuffling over a shard, fixed batch size.
+//!
+//! The AOT artifacts are shape-specialized to one batch size, so the loader
+//! always yields full batches, wrapping (and reshuffling) at epoch
+//! boundaries — matching how the paper's per-round mini-batch sampling
+//! works with a fixed `batch_size`.
+
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct BatchLoader {
+    indices: Vec<usize>,
+    batch: usize,
+    cursor: usize,
+    rng: Pcg32,
+    epoch: usize,
+}
+
+impl BatchLoader {
+    pub fn new(shard: &[usize], batch: usize, seed: u64) -> BatchLoader {
+        assert!(batch >= 1);
+        assert!(!shard.is_empty(), "empty shard");
+        let mut rng = Pcg32::new(seed, 0x10ad);
+        let mut indices = shard.to_vec();
+        rng.shuffle(&mut indices);
+        BatchLoader { indices, batch, cursor: 0, rng, epoch: 0 }
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Next batch of exactly `batch` indices (wraps + reshuffles at epoch
+    /// end; shards smaller than a batch repeat within the batch).
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.batch);
+        while out.len() < self.batch {
+            if self.cursor >= self.indices.len() {
+                self.rng.shuffle(&mut self.indices);
+                self.cursor = 0;
+                self.epoch += 1;
+            }
+            let take = (self.batch - out.len()).min(self.indices.len() - self.cursor);
+            out.extend_from_slice(&self.indices[self.cursor..self.cursor + take]);
+            self.cursor += take;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_batches_always() {
+        let shard: Vec<usize> = (0..10).collect();
+        let mut l = BatchLoader::new(&shard, 4, 0);
+        for _ in 0..20 {
+            assert_eq!(l.next_batch().len(), 4);
+        }
+    }
+
+    #[test]
+    fn epoch_covers_shard() {
+        let shard: Vec<usize> = (100..108).collect();
+        let mut l = BatchLoader::new(&shard, 4, 1);
+        let mut seen: Vec<usize> = Vec::new();
+        seen.extend(l.next_batch());
+        seen.extend(l.next_batch());
+        seen.sort_unstable();
+        assert_eq!(seen, (100..108).collect::<Vec<_>>());
+        assert_eq!(l.epoch(), 0);
+        l.next_batch();
+        assert_eq!(l.epoch(), 1);
+    }
+
+    #[test]
+    fn tiny_shard_repeats() {
+        let mut l = BatchLoader::new(&[5, 6], 8, 2);
+        let b = l.next_batch();
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|&i| i == 5 || i == 6));
+        assert!(b.contains(&5) && b.contains(&6));
+    }
+
+    #[test]
+    fn reshuffles_between_epochs() {
+        let shard: Vec<usize> = (0..64).collect();
+        let mut l = BatchLoader::new(&shard, 64, 3);
+        let e0 = l.next_batch();
+        let e1 = l.next_batch();
+        assert_ne!(e0, e1, "epochs should reshuffle");
+        let mut s0 = e0.clone();
+        let mut s1 = e1.clone();
+        s0.sort_unstable();
+        s1.sort_unstable();
+        assert_eq!(s0, s1);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty shard")]
+    fn empty_shard_panics() {
+        let _ = BatchLoader::new(&[], 4, 0);
+    }
+}

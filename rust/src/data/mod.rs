@@ -1,0 +1,139 @@
+//! Dataset substrate.
+//!
+//! The paper evaluates on HAM10000 (7-class dermatoscopy) and MNIST. Both
+//! are gated on this image (no network access), so we build procedural
+//! generators that preserve the properties the experiments exercise —
+//! multi-class image classification with class-dependent spatial structure,
+//! HAM-like class imbalance, and enough intra-class variation that the
+//! model must actually learn (see DESIGN.md §Substitutions):
+//!
+//! * [`synth_ham`] — 7-class 3×32×32 "lesion" generator (class-coded blob
+//!   morphology / colour / border irregularity, imbalanced priors).
+//! * [`synth_mnist`] — 10-class 1×32×32 parametric digit strokes.
+//!
+//! [`partition`] implements the paper's IID and Dirichlet(β) non-IID splits;
+//! [`loader`] provides per-device shuffled batch iteration.
+
+pub mod loader;
+pub mod partition;
+pub mod synth_ham;
+pub mod synth_mnist;
+
+/// An in-memory labelled image dataset (NCHW f32, labels 0..classes).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub classes: usize,
+    /// n * channels * height * width, row-major NCHW
+    images: Vec<f32>,
+    labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn new(name: &str, channels: usize, height: usize, width: usize,
+               classes: usize, images: Vec<f32>, labels: Vec<u8>) -> Dataset {
+        let per = channels * height * width;
+        assert_eq!(images.len(), labels.len() * per);
+        assert!(labels.iter().all(|&l| (l as usize) < classes));
+        Dataset {
+            name: name.to_string(),
+            channels,
+            height,
+            width,
+            classes,
+            images,
+            labels,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let per = self.channels * self.height * self.width;
+        &self.images[i * per..(i + 1) * per]
+    }
+
+    pub fn label(&self, i: usize) -> u8 {
+        self.labels[i]
+    }
+
+    pub fn labels(&self) -> &[u8] {
+        &self.labels
+    }
+
+    /// Gather a batch into a contiguous NCHW buffer + i32 labels.
+    pub fn batch(&self, indices: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let per = self.channels * self.height * self.width;
+        let mut x = Vec::with_capacity(indices.len() * per);
+        let mut y = Vec::with_capacity(indices.len());
+        for &i in indices {
+            x.extend_from_slice(self.image(i));
+            y.push(self.labels[i] as i32);
+        }
+        (x, y)
+    }
+
+    /// Per-class sample counts.
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.classes];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+
+    /// Build the train/test pair for a named config ("ham" | "mnist").
+    pub fn for_config(name: &str, train_n: usize, test_n: usize, seed: u64)
+                      -> Result<(Dataset, Dataset), String> {
+        match name {
+            "ham" => Ok((
+                synth_ham::generate(train_n, seed),
+                synth_ham::generate(test_n, seed ^ 0x7e57),
+            )),
+            "mnist" => Ok((
+                synth_mnist::generate(train_n, seed),
+                synth_mnist::generate(test_n, seed ^ 0x7e57),
+            )),
+            other => Err(format!("unknown dataset '{other}' (want ham|mnist)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_gathers_correct_samples() {
+        let d = synth_mnist::generate(16, 0);
+        let (x, y) = d.batch(&[3, 7]);
+        assert_eq!(x.len(), 2 * 32 * 32);
+        assert_eq!(y.len(), 2);
+        assert_eq!(&x[..1024], d.image(3));
+        assert_eq!(y[0], d.label(3) as i32);
+    }
+
+    #[test]
+    fn for_config_dispatches() {
+        let (tr, te) = Dataset::for_config("ham", 32, 16, 1).unwrap();
+        assert_eq!(tr.len(), 32);
+        assert_eq!(te.len(), 16);
+        assert_eq!(tr.channels, 3);
+        assert!(Dataset::for_config("bogus", 1, 1, 0).is_err());
+    }
+
+    #[test]
+    fn train_test_differ() {
+        let (tr, te) = Dataset::for_config("mnist", 8, 8, 5).unwrap();
+        assert_ne!(tr.image(0), te.image(0));
+    }
+}

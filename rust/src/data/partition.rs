@@ -1,0 +1,203 @@
+//! Train-set partitioning across edge devices (paper Sec. III-A2).
+//!
+//! * IID: global shuffle, equal contiguous shards.
+//! * Non-IID: Dirichlet(β) label-skew — for every class, the class's
+//!   samples are split across devices with proportions drawn from
+//!   Dirichlet(β); β = 0.5 in the paper. Smaller β ⇒ more skew.
+
+use super::Dataset;
+use crate::util::rng::Pcg32;
+
+/// How the training set is split across devices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Partition {
+    Iid,
+    Dirichlet { beta: f64 },
+}
+
+impl Partition {
+    pub fn label(&self) -> String {
+        match self {
+            Partition::Iid => "iid".into(),
+            Partition::Dirichlet { beta } => format!("dirichlet{beta}"),
+        }
+    }
+}
+
+/// Per-device sample indices into the parent dataset.
+#[derive(Debug, Clone)]
+pub struct Shards {
+    pub shards: Vec<Vec<usize>>,
+}
+
+impl Shards {
+    pub fn device(&self, d: usize) -> &[usize] {
+        &self.shards[d]
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Assert the shards form a partition of 0..n.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        let mut seen = vec![false; n];
+        for (d, shard) in self.shards.iter().enumerate() {
+            for &i in shard {
+                if i >= n {
+                    return Err(format!("device {d}: index {i} >= {n}"));
+                }
+                if seen[i] {
+                    return Err(format!("index {i} assigned twice"));
+                }
+                seen[i] = true;
+            }
+        }
+        match seen.iter().position(|&s| !s) {
+            Some(i) => Err(format!("index {i} unassigned")),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Split `data` across `devices` according to `p`.
+pub fn partition(data: &Dataset, devices: usize, p: Partition, seed: u64) -> Shards {
+    assert!(devices >= 1);
+    let n = data.len();
+    let mut rng = Pcg32::new(seed, 0x9a47);
+    match p {
+        Partition::Iid => {
+            let mut idx: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut idx);
+            let mut shards = vec![Vec::with_capacity(n / devices + 1); devices];
+            for (j, i) in idx.into_iter().enumerate() {
+                shards[j % devices].push(i);
+            }
+            Shards { shards }
+        }
+        Partition::Dirichlet { beta } => {
+            let mut shards = vec![Vec::new(); devices];
+            for class in 0..data.classes {
+                let mut members: Vec<usize> =
+                    (0..n).filter(|&i| data.label(i) as usize == class).collect();
+                if members.is_empty() {
+                    continue;
+                }
+                rng.shuffle(&mut members);
+                let props = rng.dirichlet(beta, devices);
+                // cumulative proportional cut points
+                let m = members.len();
+                let mut start = 0usize;
+                let mut acc = 0.0f64;
+                for (d, &p_d) in props.iter().enumerate() {
+                    acc += p_d;
+                    let end = if d + 1 == devices {
+                        m
+                    } else {
+                        (acc * m as f64).round() as usize
+                    };
+                    let end = end.clamp(start, m);
+                    shards[d].extend_from_slice(&members[start..end]);
+                    start = end;
+                }
+            }
+            // guarantee every device has at least one sample (steal from the
+            // largest shard) so training never divides by zero
+            for d in 0..devices {
+                if shards[d].is_empty() {
+                    let donor = (0..devices)
+                        .max_by_key(|&j| shards[j].len())
+                        .unwrap();
+                    if shards[donor].len() > 1 {
+                        let x = shards[donor].pop().unwrap();
+                        shards[d].push(x);
+                    }
+                }
+            }
+            Shards { shards }
+        }
+    }
+}
+
+/// Label-distribution skew measure: mean total-variation distance between
+/// each device's label distribution and the global one. 0 = perfectly IID.
+pub fn label_skew(data: &Dataset, shards: &Shards) -> f64 {
+    let classes = data.classes;
+    let global = data.class_histogram();
+    let n = data.len() as f64;
+    let gp: Vec<f64> = global.iter().map(|&c| c as f64 / n).collect();
+    let mut total = 0.0;
+    for shard in &shards.shards {
+        let mut h = vec![0usize; classes];
+        for &i in shard {
+            h[data.label(i) as usize] += 1;
+        }
+        let sn = shard.len().max(1) as f64;
+        let tv: f64 = (0..classes)
+            .map(|c| (h[c] as f64 / sn - gp[c]).abs())
+            .sum::<f64>()
+            / 2.0;
+        total += tv;
+    }
+    total / shards.n_devices() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_mnist;
+
+    #[test]
+    fn iid_is_a_partition() {
+        let d = synth_mnist::generate(103, 0);
+        let s = partition(&d, 5, Partition::Iid, 1);
+        s.validate(103).unwrap();
+        // near-equal sizes
+        for shard in &s.shards {
+            assert!((20..=21).contains(&shard.len()));
+        }
+    }
+
+    #[test]
+    fn dirichlet_is_a_partition() {
+        let d = synth_mnist::generate(200, 0);
+        let s = partition(&d, 5, Partition::Dirichlet { beta: 0.5 }, 1);
+        s.validate(200).unwrap();
+        for shard in &s.shards {
+            assert!(!shard.is_empty());
+        }
+    }
+
+    #[test]
+    fn dirichlet_skews_more_than_iid() {
+        let d = synth_mnist::generate(1000, 2);
+        let iid = partition(&d, 5, Partition::Iid, 3);
+        let nid = partition(&d, 5, Partition::Dirichlet { beta: 0.5 }, 3);
+        let (s_iid, s_nid) = (label_skew(&d, &iid), label_skew(&d, &nid));
+        assert!(s_nid > s_iid + 0.05, "iid {s_iid} vs dirichlet {s_nid}");
+    }
+
+    #[test]
+    fn smaller_beta_skews_more() {
+        let d = synth_mnist::generate(1000, 4);
+        let mild = partition(&d, 5, Partition::Dirichlet { beta: 10.0 }, 5);
+        let harsh = partition(&d, 5, Partition::Dirichlet { beta: 0.1 }, 5);
+        assert!(label_skew(&d, &harsh) > label_skew(&d, &mild));
+    }
+
+    #[test]
+    fn deterministic() {
+        let d = synth_mnist::generate(100, 5);
+        let a = partition(&d, 4, Partition::Dirichlet { beta: 0.5 }, 7);
+        let b = partition(&d, 4, Partition::Dirichlet { beta: 0.5 }, 7);
+        assert_eq!(a.shards, b.shards);
+    }
+
+    #[test]
+    fn single_device_gets_everything() {
+        let d = synth_mnist::generate(50, 6);
+        let s = partition(&d, 1, Partition::Iid, 0);
+        assert_eq!(s.shards[0].len(), 50);
+        s.validate(50).unwrap();
+    }
+}

@@ -1,0 +1,273 @@
+//! Synthetic HAM10000 surrogate: 7-class dermatoscopy-like image generator.
+//!
+//! HAM10000 is a gated medical dataset; this generator preserves the
+//! properties the SL-ACC experiments exercise (DESIGN.md §Substitutions):
+//! RGB images whose class is encoded in *spatial structure* (lesion shape,
+//! border irregularity, satellites) and *photometric structure* (colour,
+//! texture), with HAM-like long-tailed class priors. Each class is a
+//! distinct region of the generative parameter space with within-class
+//! jitter, so a CNN has real signal to learn and per-channel activations
+//! develop the uneven importance profile ACII exploits.
+//!
+//! Classes mirror the HAM10000 taxonomy:
+//!   0 nv (melanocytic nevus)  1 mel (melanoma)        2 bkl (keratosis)
+//!   3 bcc (basal cell carc.)  4 akiec (actinic ker.)  5 vasc (vascular)
+//!   6 df (dermatofibroma)
+
+use super::Dataset;
+use crate::util::rng::Pcg32;
+
+pub const CLASSES: usize = 7;
+pub const SIZE: usize = 32;
+
+/// HAM10000's empirical long-tailed class distribution (approx.).
+pub const CLASS_PRIORS: [f64; CLASSES] = [0.67, 0.11, 0.11, 0.05, 0.033, 0.014, 0.013];
+
+/// Per-class generative parameters.
+struct ClassParams {
+    /// lesion base colour (r, g, b)
+    color: [f32; 3],
+    /// mean radius in pixels
+    radius: f32,
+    /// ellipse eccentricity (1 = circle)
+    ecc: f32,
+    /// border irregularity amplitude (fraction of radius)
+    border: f32,
+    /// ring structure strength (keratosis-like)
+    ring: f32,
+    /// number of satellite blobs
+    satellites: usize,
+    /// internal texture frequency
+    tex_freq: f32,
+}
+
+fn class_params(class: usize) -> ClassParams {
+    match class {
+        // nv: regular brown round lesion
+        0 => ClassParams { color: [0.45, 0.28, 0.18], radius: 8.0, ecc: 1.05,
+                           border: 0.06, ring: 0.0, satellites: 0, tex_freq: 2.0 },
+        // mel: dark, asymmetric, irregular border, satellites
+        1 => ClassParams { color: [0.22, 0.12, 0.10], radius: 9.0, ecc: 1.6,
+                           border: 0.30, ring: 0.0, satellites: 3, tex_freq: 5.0 },
+        // bkl: tan, waxy, ringed texture
+        2 => ClassParams { color: [0.55, 0.38, 0.22], radius: 7.5, ecc: 1.15,
+                           border: 0.12, ring: 0.5, satellites: 0, tex_freq: 7.0 },
+        // bcc: pink-pearly, rolled ring border
+        3 => ClassParams { color: [0.72, 0.45, 0.42], radius: 6.5, ecc: 1.1,
+                           border: 0.10, ring: 0.8, satellites: 0, tex_freq: 3.0 },
+        // akiec: red-brown rough patch, elongated
+        4 => ClassParams { color: [0.60, 0.30, 0.24], radius: 7.0, ecc: 1.9,
+                           border: 0.22, ring: 0.0, satellites: 1, tex_freq: 9.0 },
+        // vasc: bright red, sharply round
+        5 => ClassParams { color: [0.75, 0.15, 0.15], radius: 5.5, ecc: 1.0,
+                           border: 0.03, ring: 0.0, satellites: 0, tex_freq: 1.0 },
+        // df: small firm pink-brown with halo ring
+        6 => ClassParams { color: [0.50, 0.32, 0.28], radius: 4.5, ecc: 1.05,
+                           border: 0.08, ring: 1.0, satellites: 0, tex_freq: 2.5 },
+        _ => unreachable!("class {class} out of range"),
+    }
+}
+
+/// Sample a class from the HAM-like prior.
+fn sample_class(rng: &mut Pcg32) -> usize {
+    let u = rng.next_f64();
+    let mut acc = 0.0;
+    for (c, &p) in CLASS_PRIORS.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return c;
+        }
+    }
+    CLASSES - 1
+}
+
+/// Render one 3×32×32 sample of `class` into `out` (CHW layout).
+pub fn render(class: usize, rng: &mut Pcg32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 3 * SIZE * SIZE);
+    let p = class_params(class);
+
+    // skin background with per-image tone jitter + mild vertical gradient
+    let skin = [
+        0.86 + rng.range_f32(-0.06, 0.06),
+        0.66 + rng.range_f32(-0.06, 0.06),
+        0.55 + rng.range_f32(-0.06, 0.06),
+    ];
+
+    // lesion pose jitter
+    let cx = SIZE as f32 / 2.0 + rng.range_f32(-4.0, 4.0);
+    let cy = SIZE as f32 / 2.0 + rng.range_f32(-4.0, 4.0);
+    let radius = p.radius * rng.range_f32(0.8, 1.25);
+    let theta = rng.range_f32(0.0, std::f32::consts::PI);
+    let (sin_t, cos_t) = theta.sin_cos();
+    let ecc = p.ecc * rng.range_f32(0.9, 1.15);
+
+    // border irregularity: low-order random Fourier wobble of the radius
+    let harmonics: Vec<(f32, f32, f32)> = (0..4)
+        .map(|k| {
+            (
+                (k + 2) as f32,
+                rng.range_f32(0.0, p.border),
+                rng.range_f32(0.0, 2.0 * std::f32::consts::PI),
+            )
+        })
+        .collect();
+
+    // satellites
+    let sats: Vec<(f32, f32, f32)> = (0..p.satellites)
+        .map(|_| {
+            let ang = rng.range_f32(0.0, 2.0 * std::f32::consts::PI);
+            let dist = radius * rng.range_f32(1.2, 1.8);
+            (cx + dist * ang.cos(), cy + dist * ang.sin(), rng.range_f32(1.0, 2.5))
+        })
+        .collect();
+
+    let tex_phase = rng.range_f32(0.0, 6.28);
+    let color_jit = [
+        rng.range_f32(-0.05, 0.05),
+        rng.range_f32(-0.05, 0.05),
+        rng.range_f32(-0.05, 0.05),
+    ];
+
+    for y in 0..SIZE {
+        for x in 0..SIZE {
+            let fx = x as f32 - cx;
+            let fy = y as f32 - cy;
+            // rotate into lesion frame, apply eccentricity
+            let u = (fx * cos_t + fy * sin_t) * ecc;
+            let v = -fx * sin_t + fy * cos_t;
+            let r = (u * u + v * v).sqrt();
+            let ang = v.atan2(u);
+            // wobbled boundary radius at this angle
+            let mut boundary = radius;
+            for &(k, amp, ph) in &harmonics {
+                boundary += radius * amp * (k * ang + ph).sin();
+            }
+            // soft membership
+            let d = (r - boundary) / (0.15 * radius).max(0.5);
+            let mut mask = 1.0 / (1.0 + d.max(-20.0).min(20.0).exp());
+
+            // satellites add their own blobs
+            for &(sx, sy, sr) in &sats {
+                let dd = ((x as f32 - sx).powi(2) + (y as f32 - sy).powi(2)).sqrt();
+                mask = mask.max(1.0 / (1.0 + ((dd - sr) / 0.6).exp()));
+            }
+
+            // ring structure: brighten an annulus near the boundary
+            let ring_w = 0.18 * radius;
+            let ring_term =
+                p.ring * (-((r - boundary).abs() - 0.0).powi(2) / (2.0 * ring_w * ring_w)).exp();
+
+            // internal texture
+            let tex = 0.5
+                + 0.5
+                    * ((p.tex_freq * (u / radius) + tex_phase).sin()
+                        * (p.tex_freq * 0.8 * (v / radius) - tex_phase).cos());
+
+            let idx = y * SIZE + x;
+            for ch in 0..3 {
+                let lesion =
+                    (p.color[ch] + color_jit[ch]) * (0.75 + 0.35 * tex) + 0.20 * ring_term;
+                let bg = skin[ch] * (1.0 - 0.002 * y as f32);
+                let val = bg * (1.0 - mask) + lesion.clamp(0.0, 1.0) * mask
+                    + rng.next_gaussian() * 0.025;
+                out[ch * SIZE * SIZE + idx] = val.clamp(0.0, 1.0);
+            }
+        }
+    }
+}
+
+/// Generate `n` samples with HAM-like class imbalance.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0x4a6d);
+    let per = 3 * SIZE * SIZE;
+    let mut images = vec![0.0f32; n * per];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let class = sample_class(&mut rng);
+        labels[i] = class as u8;
+        render(class, &mut rng, &mut images[i * per..(i + 1) * per]);
+    }
+    Dataset::new("synth-ham", 3, SIZE, SIZE, CLASSES, images, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::view::mean_std;
+
+    #[test]
+    fn generates_requested_count() {
+        let d = generate(64, 0);
+        assert_eq!(d.len(), 64);
+        assert_eq!(d.channels, 3);
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let d = generate(16, 1);
+        for i in 0..d.len() {
+            assert!(d.image(i).iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn class_imbalance_matches_priors() {
+        let d = generate(4000, 2);
+        let h = d.class_histogram();
+        let p0 = h[0] as f64 / 4000.0;
+        assert!((p0 - CLASS_PRIORS[0]).abs() < 0.05, "nv prior {p0}");
+        assert!(h[0] > h[1], "nv must dominate");
+    }
+
+    #[test]
+    fn same_class_samples_differ() {
+        let mut rng = Pcg32::seeded(3);
+        let mut a = vec![0.0f32; 3 * SIZE * SIZE];
+        let mut b = vec![0.0f32; 3 * SIZE * SIZE];
+        render(1, &mut rng, &mut a);
+        render(1, &mut rng, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn classes_are_photometrically_distinct() {
+        // mean red-channel intensity inside the image differs between the
+        // bright-red vascular class (5) and the dark melanoma class (1)
+        let mut rng = Pcg32::seeded(4);
+        let mut mel = vec![0.0f32; 3 * SIZE * SIZE];
+        let mut vasc = vec![0.0f32; 3 * SIZE * SIZE];
+        let mut mel_red = 0.0;
+        let mut vasc_red = 0.0;
+        for _ in 0..8 {
+            render(1, &mut rng, &mut mel);
+            render(5, &mut rng, &mut vasc);
+            // center crop 16x16 red channel
+            for y in 8..24 {
+                for x in 8..24 {
+                    mel_red += mel[y * SIZE + x];
+                    vasc_red += vasc[y * SIZE + x];
+                }
+            }
+        }
+        // melanoma lesions are darker than vascular ones in the red channel
+        assert!(mel_red < vasc_red, "mel {mel_red} vs vasc {vasc_red}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(8, 9);
+        let b = generate(8, 9);
+        assert_eq!(a.image(5), b.image(5));
+        assert_eq!(a.labels(), b.labels());
+    }
+
+    #[test]
+    fn images_have_structure_not_noise() {
+        // within-image std should be non-trivial (lesion vs background)
+        let d = generate(8, 10);
+        for i in 0..8 {
+            let (_, s) = mean_std(d.image(i));
+            assert!(s > 0.03, "image {i} looks flat (std {s})");
+        }
+    }
+}

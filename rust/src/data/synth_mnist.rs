@@ -1,0 +1,177 @@
+//! Synthetic MNIST surrogate: 10-class parametric digit-stroke generator.
+//!
+//! Each digit class is a fixed polyline skeleton in the unit square (the
+//! canonical 7-segment-ish stroke layout of that digit); samples apply a
+//! random affine transform (translation / scale / rotation / shear), stroke
+//! thickness jitter, and pixel noise, then render with a smooth
+//! distance-to-segment intensity profile. 1×32×32, balanced classes —
+//! matching MNIST's role in the paper as the "easy, near-balanced" dataset
+//! against HAM's "hard, imbalanced" one.
+
+use super::Dataset;
+use crate::util::rng::Pcg32;
+
+pub const CLASSES: usize = 10;
+pub const SIZE: usize = 32;
+
+type Seg = ((f32, f32), (f32, f32));
+
+/// Stroke skeleton per digit, coordinates in [0,1]² (y down).
+fn skeleton(digit: usize) -> Vec<Seg> {
+    // corner shorthand (7-segment-style box 0.2..0.8 x 0.1..0.9)
+    let tl = (0.25, 0.12);
+    let tr = (0.75, 0.12);
+    let ml = (0.25, 0.50);
+    let mr = (0.75, 0.50);
+    let bl = (0.25, 0.88);
+    let br = (0.75, 0.88);
+    match digit {
+        0 => vec![(tl, tr), (tr, br), (br, bl), (bl, tl)],
+        1 => vec![((0.5, 0.10), (0.5, 0.90)), ((0.35, 0.25), (0.5, 0.10))],
+        2 => vec![(tl, tr), (tr, mr), (mr, ml), (ml, bl), (bl, br)],
+        3 => vec![(tl, tr), (tr, mr), (ml, mr), (mr, br), (br, bl)],
+        4 => vec![(tl, ml), (ml, mr), (tr, mr), (mr, br)],
+        5 => vec![(tr, tl), (tl, ml), (ml, mr), (mr, br), (br, bl)],
+        6 => vec![(tr, tl), (tl, bl), (bl, br), (br, mr), (mr, ml)],
+        7 => vec![(tl, tr), (tr, (0.45, 0.88))],
+        8 => vec![(tl, tr), (tr, br), (br, bl), (bl, tl), (ml, mr)],
+        9 => vec![(mr, ml), (ml, tl), (tl, tr), (tr, br), (br, bl)],
+        _ => unreachable!("digit {digit} out of range"),
+    }
+}
+
+/// Distance from point to segment.
+fn seg_dist(px: f32, py: f32, ((x1, y1), (x2, y2)): Seg) -> f32 {
+    let (dx, dy) = (x2 - x1, y2 - y1);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 > 0.0 {
+        (((px - x1) * dx + (py - y1) * dy) / len2).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let (cx, cy) = (x1 + t * dx, y1 + t * dy);
+    ((px - cx).powi(2) + (py - cy).powi(2)).sqrt()
+}
+
+/// Render one 1×32×32 sample of `digit` into `out`.
+pub fn render(digit: usize, rng: &mut Pcg32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), SIZE * SIZE);
+    let segs = skeleton(digit);
+
+    // random affine: rotation, anisotropic scale, shear, translation
+    let theta = rng.range_f32(-0.25, 0.25);
+    let (sin_t, cos_t) = theta.sin_cos();
+    let sx = rng.range_f32(0.8, 1.15);
+    let sy = rng.range_f32(0.8, 1.15);
+    let shear = rng.range_f32(-0.15, 0.15);
+    let tx = rng.range_f32(-0.08, 0.08);
+    let ty = rng.range_f32(-0.08, 0.08);
+    let thick = rng.range_f32(0.035, 0.065);
+
+    let transform = |(x, y): (f32, f32)| -> (f32, f32) {
+        // center, affine, re-center
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        let (ax, ay) = (sx * (cx + shear * cy), sy * cy);
+        let (rx, ry) = (ax * cos_t - ay * sin_t, ax * sin_t + ay * cos_t);
+        (rx + 0.5 + tx, ry + 0.5 + ty)
+    };
+    let tsegs: Vec<Seg> = segs.iter().map(|&(a, b)| (transform(a), transform(b))).collect();
+
+    for y in 0..SIZE {
+        for x in 0..SIZE {
+            let px = (x as f32 + 0.5) / SIZE as f32;
+            let py = (y as f32 + 0.5) / SIZE as f32;
+            let mut d = f32::INFINITY;
+            for &s in &tsegs {
+                d = d.min(seg_dist(px, py, s));
+            }
+            let ink = (-d * d / (2.0 * thick * thick)).exp();
+            let val = ink + rng.next_gaussian() * 0.04;
+            out[y * SIZE + x] = val.clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// Generate `n` balanced samples (class = i mod 10 before shuffling).
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0x6e157);
+    let per = SIZE * SIZE;
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut images = vec![0.0f32; n * per];
+    let mut labels = vec![0u8; n];
+    for (slot, &i) in order.iter().enumerate() {
+        let class = i % CLASSES;
+        labels[slot] = class as u8;
+        render(class, &mut rng, &mut images[slot * per..(slot + 1) * per]);
+    }
+    Dataset::new("synth-mnist", 1, SIZE, SIZE, CLASSES, images, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_classes() {
+        let d = generate(1000, 0);
+        let h = d.class_histogram();
+        for (c, &count) in h.iter().enumerate() {
+            assert!(count == 100, "class {c}: {count}");
+        }
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let d = generate(20, 1);
+        for i in 0..d.len() {
+            assert!(d.image(i).iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn digit_one_thinner_than_eight() {
+        // total ink of '1' must be well below '8'
+        let mut rng = Pcg32::seeded(2);
+        let mut one = vec![0.0f32; SIZE * SIZE];
+        let mut eight = vec![0.0f32; SIZE * SIZE];
+        let (mut ink1, mut ink8) = (0.0f32, 0.0f32);
+        for _ in 0..8 {
+            render(1, &mut rng, &mut one);
+            render(8, &mut rng, &mut eight);
+            ink1 += one.iter().sum::<f32>();
+            ink8 += eight.iter().sum::<f32>();
+        }
+        assert!(ink1 * 1.5 < ink8, "ink1={ink1} ink8={ink8}");
+    }
+
+    #[test]
+    fn same_digit_varies() {
+        let mut rng = Pcg32::seeded(3);
+        let mut a = vec![0.0f32; SIZE * SIZE];
+        let mut b = vec![0.0f32; SIZE * SIZE];
+        render(7, &mut rng, &mut a);
+        render(7, &mut rng, &mut b);
+        assert_ne!(a, b);
+        // but both still contain ink
+        assert!(a.iter().sum::<f32>() > 10.0);
+        assert!(b.iter().sum::<f32>() > 10.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(10, 4);
+        let b = generate(10, 4);
+        assert_eq!(a.image(3), b.image(3));
+    }
+
+    #[test]
+    fn seg_dist_basics() {
+        // point on segment
+        assert!(seg_dist(0.5, 0.5, ((0.0, 0.5), (1.0, 0.5))) < 1e-6);
+        // perpendicular distance
+        assert!((seg_dist(0.5, 0.8, ((0.0, 0.5), (1.0, 0.5))) - 0.3).abs() < 1e-6);
+        // beyond endpoint
+        assert!((seg_dist(1.5, 0.5, ((0.0, 0.5), (1.0, 0.5))) - 0.5).abs() < 1e-6);
+    }
+}

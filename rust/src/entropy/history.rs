@@ -1,0 +1,144 @@
+//! Per-channel entropy history: the H̃_c term of ACII (paper Eq. 2).
+//!
+//! Historical entropy is the mean of each channel's instantaneous entropy
+//! over the last `k` rounds, maintained as a ring buffer with running sums
+//! so a round update is O(C) regardless of window size.
+
+#[derive(Debug, Clone)]
+pub struct EntropyHistory {
+    window: usize,
+    channels: usize,
+    /// ring[r][c]: entropy of channel c at slot r
+    ring: Vec<Vec<f32>>,
+    /// running per-channel sums over the ring
+    sums: Vec<f64>,
+    /// number of rounds pushed so far (saturates reporting at `window`)
+    filled: usize,
+    /// next slot to overwrite
+    head: usize,
+}
+
+impl EntropyHistory {
+    pub fn new(channels: usize, window: usize) -> Self {
+        assert!(window >= 1, "history window must be >= 1");
+        EntropyHistory {
+            window,
+            channels,
+            ring: vec![vec![0.0; channels]; window],
+            sums: vec![0.0; channels],
+            filled: 0,
+            head: 0,
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Rounds currently contributing to the mean (<= window).
+    pub fn depth(&self) -> usize {
+        self.filled.min(self.window)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.filled == 0
+    }
+
+    /// Record one round of instantaneous entropies.
+    pub fn push(&mut self, inst: &[f32]) {
+        assert_eq!(inst.len(), self.channels);
+        let slot = &mut self.ring[self.head];
+        for c in 0..self.channels {
+            if self.filled >= self.window {
+                self.sums[c] -= slot[c] as f64;
+            }
+            slot[c] = inst[c];
+            self.sums[c] += inst[c] as f64;
+        }
+        self.head = (self.head + 1) % self.window;
+        self.filled += 1;
+    }
+
+    /// Historical entropy H̃_c: mean over the stored rounds. Falls back to
+    /// the provided instantaneous value when no history exists yet.
+    pub fn historical(&self, fallback: &[f32]) -> Vec<f32> {
+        let d = self.depth();
+        if d == 0 {
+            return fallback.to_vec();
+        }
+        self.sums.iter().map(|&s| (s / d as f64) as f32).collect()
+    }
+
+    /// Historical entropy of a single channel (None if no history).
+    pub fn historical_channel(&self, c: usize) -> Option<f32> {
+        let d = self.depth();
+        if d == 0 {
+            None
+        } else {
+            Some((self.sums[c] / d as f64) as f32)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_uses_fallback() {
+        let h = EntropyHistory::new(3, 4);
+        assert_eq!(h.historical(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn mean_over_partial_window() {
+        let mut h = EntropyHistory::new(2, 5);
+        h.push(&[1.0, 10.0]);
+        h.push(&[3.0, 20.0]);
+        let m = h.historical(&[0.0, 0.0]);
+        assert!((m[0] - 2.0).abs() < 1e-6);
+        assert!((m[1] - 15.0).abs() < 1e-6);
+        assert_eq!(h.depth(), 2);
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let mut h = EntropyHistory::new(1, 3);
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            h.push(&[v]);
+        }
+        // window holds [2, 3, 4]
+        assert!((h.historical(&[0.0])[0] - 3.0).abs() < 1e-6);
+        assert_eq!(h.depth(), 3);
+    }
+
+    #[test]
+    fn running_sum_matches_recompute_long_run() {
+        let mut h = EntropyHistory::new(4, 7);
+        let mut rng = crate::util::rng::Pcg32::seeded(2);
+        let mut log: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..50 {
+            let row: Vec<f32> = (0..4).map(|_| rng.next_f32() * 5.0).collect();
+            h.push(&row);
+            log.push(row);
+        }
+        let tail = &log[log.len() - 7..];
+        for c in 0..4 {
+            let want: f32 = tail.iter().map(|r| r[c]).sum::<f32>() / 7.0;
+            let got = h.historical_channel(c).unwrap();
+            assert!((want - got).abs() < 1e-4, "c={c}: {want} vs {got}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let mut h = EntropyHistory::new(3, 2);
+        h.push(&[1.0, 2.0]);
+    }
+}

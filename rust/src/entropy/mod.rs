@@ -1,0 +1,180 @@
+//! ACII — Adaptive Channel Importance Identification (paper Sec. II-B).
+//!
+//! Combines the instantaneous per-channel entropy H_c^(t) (Eq. 1, computed
+//! either by the AOT Pallas kernel or the host mirror in `shannon`) with the
+//! historical mean H̃_c over the last k rounds (Eq. 2) using the balancing
+//! hyperparameter α^(t) (Eq. 3, α = t/T by default).
+//!
+//! `AlphaSchedule` also exposes the fixed-α and pure-instant/pure-historical
+//! modes used by the paper's own ablations (Figs. 3 and 4).
+
+pub mod history;
+pub mod shannon;
+
+use history::EntropyHistory;
+
+/// Balancing hyperparameter α^(t) policy (paper Eq. 3 + Fig. 4 ablations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AlphaSchedule {
+    /// Paper default: α = t/T (shift from instantaneous to historical).
+    Adaptive,
+    /// Fixed α ∈ [0,1]: 0 = pure instantaneous, 1 = pure historical.
+    Fixed(f32),
+}
+
+impl AlphaSchedule {
+    pub fn alpha(&self, round: usize, total_rounds: usize) -> f32 {
+        match *self {
+            AlphaSchedule::Adaptive => {
+                if total_rounds == 0 {
+                    0.0
+                } else {
+                    (round as f32 / total_rounds as f32).clamp(0.0, 1.0)
+                }
+            }
+            AlphaSchedule::Fixed(a) => a.clamp(0.0, 1.0),
+        }
+    }
+}
+
+/// ACII state for one smashed-data stream (one per device per direction).
+#[derive(Debug, Clone)]
+pub struct Acii {
+    history: EntropyHistory,
+    schedule: AlphaSchedule,
+    total_rounds: usize,
+    round: usize,
+}
+
+impl Acii {
+    /// `window` = k of Eq. 2; `total_rounds` = T of Eq. 3.
+    pub fn new(channels: usize, window: usize, total_rounds: usize,
+               schedule: AlphaSchedule) -> Self {
+        Acii {
+            history: EntropyHistory::new(channels, window),
+            schedule,
+            total_rounds,
+            round: 0,
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.history.channels()
+    }
+
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    pub fn alpha(&self) -> f32 {
+        self.schedule.alpha(self.round, self.total_rounds)
+    }
+
+    /// Blend instantaneous entropies with history (Eq. 2), then absorb the
+    /// round into the history window and advance t. Returns blended H_c.
+    ///
+    /// Note the ordering matters and matches the paper: H̃_c is the average
+    /// over the *past* k rounds (i = t-k .. t-1), excluding the current one.
+    pub fn update(&mut self, instantaneous: &[f32]) -> Vec<f32> {
+        assert_eq!(instantaneous.len(), self.channels());
+        let alpha = self.alpha();
+        let hist = self.history.historical(instantaneous);
+        let blended: Vec<f32> = instantaneous
+            .iter()
+            .zip(&hist)
+            .map(|(&hi, &hh)| (1.0 - alpha) * hi + alpha * hh)
+            .collect();
+        self.history.push(instantaneous);
+        self.round += 1;
+        blended
+    }
+
+    /// Blend from raw channel-major smashed data using the host entropy
+    /// mirror (used when the PJRT kernel output isn't already available).
+    pub fn update_from_data(&mut self, rows: &crate::tensor::ChannelMajor) -> Vec<f32> {
+        let inst = shannon::entropies(rows);
+        self.update(&inst)
+    }
+
+    /// Peek at the historical means without advancing the round.
+    pub fn historical(&self, fallback: &[f32]) -> Vec<f32> {
+        self.history.historical(fallback)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_alpha_ramps() {
+        let s = AlphaSchedule::Adaptive;
+        assert_eq!(s.alpha(0, 100), 0.0);
+        assert!((s.alpha(50, 100) - 0.5).abs() < 1e-6);
+        assert_eq!(s.alpha(100, 100), 1.0);
+        assert_eq!(s.alpha(150, 100), 1.0); // clamped past T
+    }
+
+    #[test]
+    fn fixed_alpha_constant() {
+        let s = AlphaSchedule::Fixed(0.3);
+        assert_eq!(s.alpha(0, 10), 0.3);
+        assert_eq!(s.alpha(9, 10), 0.3);
+    }
+
+    #[test]
+    fn first_round_is_pure_instantaneous() {
+        // alpha=0 at t=0 AND no history yet -> blended == instantaneous.
+        let mut acii = Acii::new(2, 5, 100, AlphaSchedule::Adaptive);
+        let out = acii.update(&[1.5, 2.5]);
+        assert_eq!(out, vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn pure_historical_ignores_current() {
+        let mut acii = Acii::new(1, 10, 100, AlphaSchedule::Fixed(1.0));
+        acii.update(&[2.0]); // history: [2.0] (first round falls back)
+        let out = acii.update(&[100.0]); // alpha=1 -> pure history mean = 2.0
+        assert!((out[0] - 2.0).abs() < 1e-6, "{out:?}");
+    }
+
+    #[test]
+    fn pure_instantaneous_tracks_current() {
+        let mut acii = Acii::new(1, 10, 100, AlphaSchedule::Fixed(0.0));
+        acii.update(&[2.0]);
+        let out = acii.update(&[100.0]);
+        assert!((out[0] - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn blend_halfway() {
+        let mut acii = Acii::new(1, 10, 2, AlphaSchedule::Adaptive);
+        acii.update(&[4.0]); // t=0, alpha 0
+        // t=1, alpha = 0.5, hist mean = 4.0, inst = 8.0 -> 6.0
+        let out = acii.update(&[8.0]);
+        assert!((out[0] - 6.0).abs() < 1e-6, "{out:?}");
+    }
+
+    #[test]
+    fn history_excludes_current_round() {
+        let mut acii = Acii::new(1, 3, 100, AlphaSchedule::Fixed(1.0));
+        acii.update(&[1.0]);
+        acii.update(&[3.0]);
+        // history before this call: mean(1,3) = 2; current 99 must not count
+        let out = acii.update(&[99.0]);
+        assert!((out[0] - 2.0).abs() < 1e-6, "{out:?}");
+    }
+
+    #[test]
+    fn update_from_data_matches_manual() {
+        use crate::tensor::Tensor;
+        let mut rng = crate::util::rng::Pcg32::seeded(3);
+        let data: Vec<f32> = (0..2 * 4 * 3 * 3).map(|_| rng.next_gaussian()).collect();
+        let cm = Tensor::new(vec![2, 4, 3, 3], data).to_channel_major();
+        let inst = shannon::entropies(&cm);
+
+        let mut a = Acii::new(4, 5, 10, AlphaSchedule::Adaptive);
+        let mut b = Acii::new(4, 5, 10, AlphaSchedule::Adaptive);
+        assert_eq!(a.update_from_data(&cm), b.update(&inst));
+    }
+}

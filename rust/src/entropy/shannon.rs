@@ -1,0 +1,146 @@
+//! Rust mirror of the L1 Pallas entropy kernel (paper Eq. 1).
+//!
+//! The coordinator normally obtains instantaneous entropy from the AOT
+//! `entropy.hlo.txt` artifact (the Pallas kernel). This module implements
+//! the identical computation on the host for (a) parity tests against the
+//! kernel, (b) codec unit tests that run without a PJRT client, and (c) the
+//! downlink gradient path in configurations where the engine is bypassed.
+//!
+//! Pipeline per channel: min-max normalize to [0,1] → softmax over the N
+//! elements → Shannon entropy −Σ p ln p. Must stay numerically in lockstep
+//! with `python/compile/kernels/entropy_kernel.py` / `ref.py` (EPS, max
+//! subtraction, natural log).
+
+pub const EPS: f32 = 1e-8;
+
+/// Shannon entropy (natural log) of one channel's elements.
+pub fn channel_entropy(xs: &[f32]) -> f32 {
+    assert!(!xs.is_empty());
+    let mut mn = xs[0];
+    let mut mx = xs[0];
+    for &x in xs {
+        if x < mn {
+            mn = x;
+        }
+        if x > mx {
+            mx = x;
+        }
+    }
+    let denom = (mx - mn).max(EPS);
+
+    // z in [0,1]; stable softmax: subtract max(z).
+    // max(z) is (mx-mn)/denom which is 1 unless the channel is flat (then 0).
+    let zmax = (mx - mn) / denom;
+    let mut sum = 0.0f64;
+    // two-pass: exp sum, then entropy via H = ln S - (1/S) Σ e_i s_i
+    // where s_i = z_i - zmax and e_i = exp(s_i).
+    let mut dot = 0.0f64; // Σ e_i * s_i
+    for &x in xs {
+        let z = (x - mn) / denom;
+        let s = (z - zmax) as f64;
+        let e = s.exp();
+        sum += e;
+        dot += e * s;
+    }
+    // H = -Σ p ln p,  p_i = e_i / S,  ln p_i = s_i - ln S
+    // H = -Σ (e_i/S)(s_i - ln S) = ln S - dot/S
+    (sum.ln() - dot / sum) as f32
+}
+
+/// Per-channel entropies of channel-major rows.
+pub fn entropies(rows: &crate::tensor::ChannelMajor) -> Vec<f32> {
+    (0..rows.channels).map(|c| channel_entropy(rows.channel(c))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::prop::{vec_f32, Prop};
+    use crate::util::rng::Pcg32;
+
+    /// Literal transcription of ref.py (softmax materialized) for testing.
+    fn entropy_naive(xs: &[f32]) -> f32 {
+        let mn = xs.iter().cloned().fold(f32::INFINITY, f32::min);
+        let mx = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let denom = (mx - mn).max(EPS);
+        let z: Vec<f64> = xs.iter().map(|&x| ((x - mn) / denom) as f64).collect();
+        let zmax = z.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = z.iter().map(|&v| (v - zmax).exp()).collect();
+        let s: f64 = e.iter().sum();
+        -e.iter().map(|&ei| (ei / s) * (ei / s).ln()).sum::<f64>() as f32
+    }
+
+    #[test]
+    fn matches_naive() {
+        let mut rng = Pcg32::seeded(1);
+        for len in [2usize, 7, 64, 1000] {
+            let xs: Vec<f32> = (0..len).map(|_| rng.next_gaussian() * 3.0).collect();
+            let fast = channel_entropy(&xs);
+            let slow = entropy_naive(&xs);
+            assert!((fast - slow).abs() < 1e-4, "len {len}: {fast} vs {slow}");
+        }
+    }
+
+    #[test]
+    fn flat_channel_is_ln_n() {
+        let xs = vec![4.2f32; 100];
+        let h = channel_entropy(&xs);
+        assert!((h - (100f32).ln()).abs() < 1e-4, "{h}");
+    }
+
+    #[test]
+    fn peaked_below_flat() {
+        let mut xs = vec![0.0f32; 256];
+        xs[0] = 1000.0;
+        assert!(channel_entropy(&xs) < channel_entropy(&vec![0.0f32; 256]));
+    }
+
+    #[test]
+    fn bounds_property() {
+        Prop::new("0 <= H <= ln N").cases(200).max_size(512).run(|rng, size| {
+            let n = (size + 1).max(2);
+            let xs = vec_f32(rng, n);
+            let h = channel_entropy(&xs);
+            if h < -1e-4 {
+                return Err(format!("H={h} < 0"));
+            }
+            if h > (n as f32).ln() + 1e-3 {
+                return Err(format!("H={h} > ln {n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shift_scale_invariance_property() {
+        Prop::new("entropy invariant to affine + scale > 0")
+            .cases(100)
+            .max_size(256)
+            .run(|rng, size| {
+                let n = (size + 1).max(2);
+                let xs = vec_f32(rng, n);
+                let shift = rng.range_f32(-100.0, 100.0);
+                let scale = rng.range_f32(0.1, 10.0);
+                let ys: Vec<f32> = xs.iter().map(|&x| x * scale + shift).collect();
+                let (h1, h2) = (channel_entropy(&xs), channel_entropy(&ys));
+                if (h1 - h2).abs() > 2e-3 {
+                    return Err(format!("{h1} vs {h2}"));
+                }
+                Ok(())
+            });
+    }
+
+    #[test]
+    fn entropies_match_per_channel() {
+        let mut rng = Pcg32::seeded(5);
+        let data: Vec<f32> = (0..2 * 3 * 4 * 4).map(|_| rng.next_gaussian()).collect();
+        let t = Tensor::new(vec![2, 3, 4, 4], data);
+        let cm = t.to_channel_major();
+        let hs = entropies(&cm);
+        assert_eq!(hs.len(), 3);
+        for c in 0..3 {
+            assert_eq!(hs[c], channel_entropy(cm.channel(c)));
+        }
+    }
+}

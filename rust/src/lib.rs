@@ -1,0 +1,32 @@
+//! # slacc — SL-ACC: Communication-Efficient Split Learning with Adaptive
+//! Channel-wise Compression
+//!
+//! Production-grade reproduction of Lin et al., *"SL-ACC: A
+//! Communication-Efficient Split Learning Framework with Adaptive
+//! Channel-wise Compression"* (2025) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **L3 (this crate)** — the split-learning coordinator: device fleet,
+//!   round orchestration, the SL-ACC codec (ACII + CGC) and all baseline
+//!   codecs, the network simulator, datasets, and metrics.
+//! * **L2 (python/compile/model.py)** — the split GN-ResNet in JAX, AOT
+//!   lowered to HLO text once at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the per-round
+//!   channel-entropy hot-spot and fused quantize-dequantize.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts through PJRT and the coordinator drives them from Rust.
+
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod codecs;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod entropy;
+pub mod net;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,226 @@
+//! `slacc` — launcher for the SL-ACC split-learning framework.
+//!
+//! Subcommands:
+//!   train     run a full SL training experiment (the default)
+//!   eval      load artifacts + init params and report test accuracy
+//!   inspect   one round of ACII+CGC diagnostics on real activations
+//!   codecs    offline codec comparison on synthetic smashed data
+//!
+//! Examples:
+//!   slacc train --dataset ham --codec slacc --rounds 300 --devices 5
+//!   slacc train --dataset mnist --codec powerquant --noniid --beta 0.5
+//!   slacc inspect --dataset ham
+//!   slacc codecs
+
+use slacc::cli::Args;
+use slacc::codecs::{self, RoundCtx};
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::coordinator::trainer::Trainer;
+use slacc::data::partition::Partition;
+use slacc::entropy::AlphaSchedule;
+use slacc::util::logging;
+
+fn main() {
+    logging::init_from_env();
+    let mut args = Args::from_env();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "train".to_string());
+    if let Some(level) = args.str_opt("log-level") {
+        match logging::level_from_str(&level) {
+            Some(l) => logging::set_level(l),
+            None => {
+                eprintln!("invalid --log-level '{level}'");
+                std::process::exit(2);
+            }
+        }
+    }
+    let result = match sub.as_str() {
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "inspect" => cmd_inspect(args),
+        "codecs" => cmd_codecs(args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}' (try: slacc help)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "slacc — SL-ACC split learning framework\n\n\
+         USAGE: slacc [train|eval|inspect|codecs] [--flags]\n\n\
+         train flags:\n\
+           --dataset ham|mnist     model/dataset config    [ham]\n\
+           --codec NAME            {:?}\n\
+           --select STRATEGY       channel-selection ablation instead of a codec\n\
+                                   (random|std|entropy-instant|entropy-historical|acii|fixed:N)\n\
+           --n-select N            channels kept by --select [1]\n\
+           --rounds N              training rounds         [300]\n\
+           --devices N             edge devices            [5]\n\
+           --lr X                  SGD learning rate       [0.001]\n\
+           --noniid                Dirichlet partition instead of IID\n\
+           --beta X                Dirichlet concentration [0.5]\n\
+           --train-n N / --test-n N  dataset sizes         [2000 / 512]\n\
+           --eval-every N          eval cadence            [10]\n\
+           --target X              stop at this test accuracy\n\
+           --alpha X               fixed ACII alpha in [0,1] (default: t/T)\n\
+           --groups N              CGC groups g            [4]\n\
+           --window N              ACII history window k   [5]\n\
+           --bmin N / --bmax N     quantization bit bounds [2 / 8]\n\
+           --agg-every N           FedAvg cadence          [1]\n\
+           --seed N                RNG seed                [0]\n\
+           --artifacts DIR         artifacts root          [artifacts]\n\
+           --csv PATH              write per-round metrics CSV\n\
+           --no-grad-compress      leave downlink gradients uncompressed\n\
+           --host-entropy          host entropy instead of the Pallas kernel\n\
+         common:\n\
+           --log-level error|warn|info|debug|trace",
+        codecs::ALL_CODECS
+    );
+}
+
+/// Shared train/eval config construction from CLI flags.
+fn config_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
+    let dataset = args.str_or("dataset", "ham");
+    let mut cfg = ExperimentConfig::default_for(&dataset);
+    cfg.artifacts_root = args.str_or("artifacts", "artifacts");
+    cfg.rounds = args.usize_or("rounds", cfg.rounds);
+    cfg.devices = args.usize_or("devices", cfg.devices);
+    cfg.lr = args.f64_or("lr", cfg.lr as f64) as f32;
+    cfg.train_n = args.usize_or("train-n", cfg.train_n);
+    cfg.test_n = args.usize_or("test-n", cfg.test_n);
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every);
+    cfg.client_agg_every = args.usize_or("agg-every", cfg.client_agg_every);
+    cfg.seed = args.usize_or("seed", 0) as u64;
+    cfg.target_accuracy = args.f64_opt("target");
+    if args.bool_or("noniid", false) {
+        cfg.partition = Partition::Dirichlet { beta: args.f64_or("beta", 0.5) };
+    } else {
+        let _ = args.f64_or("beta", 0.5);
+    }
+    if let Some(a) = args.f64_opt("alpha") {
+        cfg.alpha = Some(AlphaSchedule::Fixed(a as f32));
+    }
+    cfg.slacc.groups = args.usize_or("groups", cfg.slacc.groups);
+    cfg.slacc.history_window = args.usize_or("window", cfg.slacc.history_window);
+    cfg.slacc.b_min = args.usize_or("bmin", cfg.slacc.b_min as usize) as u32;
+    cfg.slacc.b_max = args.usize_or("bmax", cfg.slacc.b_max as usize) as u32;
+    cfg.entropy_via_kernel = !args.bool_or("host-entropy", false);
+    cfg.compress_gradients = !args.bool_or("no-grad-compress", false);
+
+    if let Some(sel) = args.str_opt("select") {
+        use slacc::codecs::selection::Selection;
+        let strategy = match sel.as_str() {
+            "random" => Selection::Random,
+            "std" => Selection::MaxStd,
+            "entropy-instant" => Selection::EntropyInstant,
+            "entropy-historical" => Selection::EntropyHistorical,
+            "acii" => Selection::EntropyBlended,
+            s if s.starts_with("fixed:") => {
+                let c = s[6..]
+                    .parse()
+                    .map_err(|_| format!("bad --select '{s}'"))?;
+                Selection::Fixed(c)
+            }
+            s => return Err(format!("unknown --select '{s}'")),
+        };
+        cfg.codec = CodecChoice::Select {
+            strategy,
+            n_select: args.usize_or("n-select", 1),
+        };
+    } else {
+        cfg.codec = CodecChoice::Named(args.str_or("codec", "slacc"));
+        let _ = args.usize_or("n-select", 1);
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(mut args: Args) -> Result<(), String> {
+    let cfg = config_from_args(&mut args)?;
+    let csv = args.str_opt("csv");
+    args.finish()?;
+
+    let mut trainer = Trainer::new(cfg)?;
+    let report = trainer.run()?;
+
+    println!("\n=== training report: {} ===", report.label);
+    println!("rounds run        : {}", report.rounds_run);
+    println!("final accuracy    : {:.2}%", report.final_accuracy * 100.0);
+    println!("best accuracy     : {:.2}%", report.best_accuracy * 100.0);
+    println!("simulated time    : {:.1}s", report.total_sim_time_s);
+    println!(
+        "smashed data bytes: {:.2} MB up / {:.2} MB down",
+        report.total_bytes_up as f64 / 1e6,
+        report.total_bytes_down as f64 / 1e6
+    );
+    if let Some(t) = report.time_to_target_s {
+        println!("time to target    : {t:.1}s");
+    }
+    if let Some(path) = csv {
+        report.metrics.write_csv(std::path::Path::new(&path))?;
+        println!("metrics CSV       : {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(mut args: Args) -> Result<(), String> {
+    let mut cfg = config_from_args(&mut args)?;
+    args.finish()?;
+    cfg.rounds = 1;
+    let mut trainer = Trainer::new(cfg)?;
+    let acc = trainer.evaluate()?;
+    println!("test accuracy at init: {:.2}%", acc * 100.0);
+    Ok(())
+}
+
+/// One round of real activations -> ACII/CGC diagnostics.
+fn cmd_inspect(mut args: Args) -> Result<(), String> {
+    let mut cfg = config_from_args(&mut args)?;
+    args.finish()?;
+    cfg.rounds = 1;
+    cfg.eval_every = 1;
+    cfg.codec = CodecChoice::Named("slacc".into());
+    let mut trainer = Trainer::new(cfg)?;
+    let report = trainer.run()?;
+    println!("ran 1 inspection round; loss {:.4}", report.metrics.records[0].loss);
+    println!("see `slacc train --log-level debug` for per-round detail, or");
+    println!("`cargo run --release --example inspect_entropy` for full dumps");
+    Ok(())
+}
+
+/// Offline codec comparison (no PJRT engine).
+fn cmd_codecs(mut args: Args) -> Result<(), String> {
+    let seed = args.usize_or("seed", 0) as u64;
+    args.finish()?;
+    use slacc::tensor::Tensor;
+    use slacc::util::rng::Pcg32;
+
+    let (b, c, h, w) = (32usize, 32usize, 16usize, 16usize);
+    let mut rng = Pcg32::seeded(seed);
+    let data: Vec<f32> = (0..b * c * h * w)
+        .map(|_| rng.next_gaussian().max(0.0))
+        .collect();
+    let cm = Tensor::new(vec![b, c, h, w], data).to_channel_major();
+    let raw = cm.data().len() * 4;
+    let orig = cm.to_nchw();
+
+    println!("{:<16} {:>10} {:>8} {:>12}", "codec", "bytes", "ratio", "mean|err|");
+    for name in codecs::ALL_CODECS {
+        let mut codec = codecs::by_name(name, c, 100, seed)?;
+        let wire = codec.compress(&cm, RoundCtx::default());
+        let rec = codec.decompress(&wire)?;
+        println!(
+            "{:<16} {:>10} {:>7.1}x {:>12.5}",
+            name,
+            wire.len(),
+            raw as f64 / wire.len() as f64,
+            orig.mean_abs_diff(&rec)
+        );
+    }
+    Ok(())
+}

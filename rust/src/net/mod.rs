@@ -1,0 +1,184 @@
+//! Network + device-time simulator.
+//!
+//! The paper's headline metric is *time to target accuracy* on a fleet of
+//! edge devices behind constrained links; what SL-ACC changes is the byte
+//! volume of smashed-data transfers. This module converts the exact wire
+//! bytes produced by the codecs into simulated wall-clock time:
+//!
+//!   round_time = max_d (client_fwd_d + up_d) + server_compute
+//!              + max_d (down_d + client_bwd_d)
+//!
+//! (devices proceed in parallel, the server step is shared — the paper's
+//! DDP emulation). Link and compute parameters default to a WiFi-class
+//! edge deployment and are per-device configurable for heterogeneity
+//! experiments.
+
+pub mod timeline;
+
+/// Link + compute model for one device.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceLink {
+    /// uplink bandwidth, bits/s
+    pub uplink_bps: f64,
+    /// downlink bandwidth, bits/s
+    pub downlink_bps: f64,
+    /// one-way latency, seconds (paid once per transfer)
+    pub latency_s: f64,
+    /// client-side sub-model forward time per batch, seconds
+    pub t_client_fwd: f64,
+    /// client-side backward+update time per batch, seconds
+    pub t_client_bwd: f64,
+}
+
+impl Default for DeviceLink {
+    fn default() -> Self {
+        // WiFi-class edge device: 50/50 Mbps, 10 ms RTT/2, tens of ms of
+        // client compute for the 3-layer sub-model on a mobile SoC.
+        DeviceLink {
+            uplink_bps: 50e6,
+            downlink_bps: 50e6,
+            latency_s: 0.005,
+            t_client_fwd: 0.030,
+            t_client_bwd: 0.045,
+        }
+    }
+}
+
+impl DeviceLink {
+    /// Time to push `bytes` up to the server.
+    pub fn uplink_time(&self, bytes: usize) -> f64 {
+        self.latency_s + (bytes as f64 * 8.0) / self.uplink_bps
+    }
+
+    /// Time to receive `bytes` from the server.
+    pub fn downlink_time(&self, bytes: usize) -> f64 {
+        self.latency_s + (bytes as f64 * 8.0) / self.downlink_bps
+    }
+
+    /// Scale compute+bandwidth for heterogeneous fleets (factor < 1 =
+    /// slower device).
+    pub fn scaled(&self, speed: f64) -> DeviceLink {
+        assert!(speed > 0.0);
+        DeviceLink {
+            uplink_bps: self.uplink_bps * speed,
+            downlink_bps: self.downlink_bps * speed,
+            latency_s: self.latency_s,
+            t_client_fwd: self.t_client_fwd / speed,
+            t_client_bwd: self.t_client_bwd / speed,
+        }
+    }
+}
+
+/// Server-side compute model.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerModel {
+    /// server fwd+bwd+update time per device batch, seconds
+    pub t_server_step: f64,
+}
+
+impl Default for ServerModel {
+    fn default() -> Self {
+        ServerModel { t_server_step: 0.008 }
+    }
+}
+
+/// Whole-fleet network simulator.
+#[derive(Debug, Clone)]
+pub struct NetworkSim {
+    pub links: Vec<DeviceLink>,
+    pub server: ServerModel,
+}
+
+/// Byte/time accounting for one training round.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RoundCost {
+    pub bytes_up: usize,
+    pub bytes_down: usize,
+    pub time_s: f64,
+}
+
+impl NetworkSim {
+    pub fn homogeneous(devices: usize, link: DeviceLink, server: ServerModel) -> Self {
+        NetworkSim { links: vec![link; devices], server }
+    }
+
+    /// Heterogeneous fleet: device d runs at `speeds[d]` × the base link.
+    pub fn heterogeneous(base: DeviceLink, speeds: &[f64], server: ServerModel) -> Self {
+        NetworkSim {
+            links: speeds.iter().map(|&s| base.scaled(s)).collect(),
+            server,
+        }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Simulated time + bytes for one round given each device's uplink and
+    /// downlink payload sizes. Devices compute/transmit in parallel; the
+    /// server processes sequentially (one shared server model, as in SFL).
+    pub fn round_cost(&self, up_bytes: &[usize], down_bytes: &[usize]) -> RoundCost {
+        assert_eq!(up_bytes.len(), self.links.len());
+        assert_eq!(down_bytes.len(), self.links.len());
+        let up_phase = self
+            .links
+            .iter()
+            .zip(up_bytes)
+            .map(|(l, &b)| l.t_client_fwd + l.uplink_time(b))
+            .fold(0.0f64, f64::max);
+        let server_phase = self.server.t_server_step * self.links.len() as f64;
+        let down_phase = self
+            .links
+            .iter()
+            .zip(down_bytes)
+            .map(|(l, &b)| l.downlink_time(b) + l.t_client_bwd)
+            .fold(0.0f64, f64::max);
+        RoundCost {
+            bytes_up: up_bytes.iter().sum(),
+            bytes_down: down_bytes.iter().sum(),
+            time_s: up_phase + server_phase + down_phase,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_formula() {
+        let l = DeviceLink { uplink_bps: 8e6, latency_s: 0.01, ..Default::default() };
+        // 1 MB over 8 Mbps = 1 s + 10 ms latency
+        assert!((l.uplink_time(1_000_000) - 1.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fewer_bytes_less_time() {
+        let sim = NetworkSim::homogeneous(3, DeviceLink::default(), ServerModel::default());
+        let big = sim.round_cost(&[1_000_000; 3], &[1_000_000; 3]);
+        let small = sim.round_cost(&[10_000; 3], &[10_000; 3]);
+        assert!(small.time_s < big.time_s);
+        assert_eq!(big.bytes_up, 3_000_000);
+    }
+
+    #[test]
+    fn straggler_dominates() {
+        let base = DeviceLink::default();
+        let sim = NetworkSim::heterogeneous(base, &[1.0, 1.0, 0.1], ServerModel::default());
+        let cost = sim.round_cost(&[100_000; 3], &[100_000; 3]);
+        // the 10x-slower device alone would take:
+        let slow = base.scaled(0.1);
+        let expected_up = slow.t_client_fwd + slow.uplink_time(100_000);
+        assert!(cost.time_s >= expected_up);
+    }
+
+    #[test]
+    fn server_time_scales_with_devices() {
+        let s = ServerModel { t_server_step: 0.01 };
+        let sim2 = NetworkSim::homogeneous(2, DeviceLink::default(), s);
+        let sim8 = NetworkSim::homogeneous(8, DeviceLink::default(), s);
+        let c2 = sim2.round_cost(&[0; 2], &[0; 2]);
+        let c8 = sim8.round_cost(&[0; 8], &[0; 8]);
+        assert!((c8.time_s - c2.time_s - 0.06).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,96 @@
+//! Cumulative simulated-time tracking across rounds + time-to-accuracy
+//! queries (the paper's headline "time to reach a target accuracy" metric).
+
+use super::RoundCost;
+
+/// Accumulates per-round costs into a cumulative timeline.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    rounds: Vec<RoundCost>,
+    cum_time: Vec<f64>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, cost: RoundCost) {
+        let prev = self.cum_time.last().copied().unwrap_or(0.0);
+        self.cum_time.push(prev + cost.time_s);
+        self.rounds.push(cost);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rounds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rounds.is_empty()
+    }
+
+    /// Cumulative simulated seconds after round `r` (0-based).
+    pub fn time_after_round(&self, r: usize) -> f64 {
+        self.cum_time[r]
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.cum_time.last().copied().unwrap_or(0.0)
+    }
+
+    pub fn total_bytes_up(&self) -> usize {
+        self.rounds.iter().map(|r| r.bytes_up).sum()
+    }
+
+    pub fn total_bytes_down(&self) -> usize {
+        self.rounds.iter().map(|r| r.bytes_down).sum()
+    }
+
+    pub fn round(&self, r: usize) -> &RoundCost {
+        &self.rounds[r]
+    }
+
+    /// Given (round, accuracy) observations, simulated time at which
+    /// `target` accuracy was first reached (None if never).
+    pub fn time_to_accuracy(&self, observations: &[(usize, f64)], target: f64)
+                            -> Option<f64> {
+        observations
+            .iter()
+            .find(|&&(_, acc)| acc >= target)
+            .map(|&(round, _)| self.time_after_round(round.min(self.len() - 1)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(t: f64, b: usize) -> RoundCost {
+        RoundCost { bytes_up: b, bytes_down: b / 2, time_s: t }
+    }
+
+    #[test]
+    fn cumulative_time() {
+        let mut tl = Timeline::new();
+        tl.push(cost(1.0, 100));
+        tl.push(cost(2.0, 100));
+        tl.push(cost(3.0, 100));
+        assert!((tl.time_after_round(0) - 1.0).abs() < 1e-12);
+        assert!((tl.time_after_round(2) - 6.0).abs() < 1e-12);
+        assert!((tl.total_time() - 6.0).abs() < 1e-12);
+        assert_eq!(tl.total_bytes_up(), 300);
+        assert_eq!(tl.total_bytes_down(), 150);
+    }
+
+    #[test]
+    fn time_to_accuracy_finds_first_crossing() {
+        let mut tl = Timeline::new();
+        for _ in 0..10 {
+            tl.push(cost(1.0, 1));
+        }
+        let obs = vec![(1, 0.3), (4, 0.55), (7, 0.7)];
+        assert_eq!(tl.time_to_accuracy(&obs, 0.5), Some(5.0));
+        assert_eq!(tl.time_to_accuracy(&obs, 0.9), None);
+        assert_eq!(tl.time_to_accuracy(&obs, 0.2), Some(2.0));
+    }
+}

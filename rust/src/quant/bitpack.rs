@@ -1,0 +1,133 @@
+//! Bit-level packing of quantization codes into the wire byte stream.
+//!
+//! Codes are b-bit unsigned integers (2 <= b <= 32 supported; CGC uses
+//! 2..=8), packed LSB-first through a u64 accumulator so the hot loop is a
+//! shift+or per code and one byte store per 8 bits — no per-bit branching.
+
+/// Pack `codes` (each < 2^bits) into bytes, LSB-first.
+pub fn pack(codes: &[u32], bits: u32) -> Vec<u8> {
+    assert!((1..=32).contains(&bits), "bits must be 1..=32, got {bits}");
+    let total_bits = codes.len() * bits as usize;
+    let mut out = Vec::with_capacity(total_bits.div_ceil(8));
+    let mut acc: u64 = 0;
+    let mut acc_bits: u32 = 0;
+    let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+    for &code in codes {
+        debug_assert!(
+            (code as u64) <= mask,
+            "code {code} does not fit in {bits} bits"
+        );
+        acc |= ((code as u64) & mask) << acc_bits;
+        acc_bits += bits;
+        while acc_bits >= 8 {
+            out.push((acc & 0xff) as u8);
+            acc >>= 8;
+            acc_bits -= 8;
+        }
+    }
+    if acc_bits > 0 {
+        out.push((acc & 0xff) as u8);
+    }
+    out
+}
+
+/// Unpack `count` b-bit codes from bytes (inverse of [`pack`]).
+pub fn unpack(bytes: &[u8], bits: u32, count: usize) -> Vec<u32> {
+    assert!((1..=32).contains(&bits));
+    let needed = (count * bits as usize).div_ceil(8);
+    assert!(
+        bytes.len() >= needed,
+        "need {needed} bytes for {count}x{bits}-bit codes, have {}",
+        bytes.len()
+    );
+    let mut out = Vec::with_capacity(count);
+    let mut acc: u64 = 0;
+    let mut acc_bits: u32 = 0;
+    let mut pos = 0usize;
+    let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+    for _ in 0..count {
+        while acc_bits < bits {
+            acc |= (bytes[pos] as u64) << acc_bits;
+            pos += 1;
+            acc_bits += 8;
+        }
+        out.push((acc & mask) as u32);
+        acc >>= bits;
+        acc_bits -= bits;
+    }
+    out
+}
+
+/// Exact byte length of `count` codes at `bits` width.
+pub fn packed_len(count: usize, bits: u32) -> usize {
+    (count * bits as usize).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn roundtrip_simple() {
+        let codes = vec![0, 1, 2, 3, 3, 2, 1, 0];
+        let packed = pack(&codes, 2);
+        assert_eq!(packed.len(), 2);
+        assert_eq!(unpack(&packed, 2, 8), codes);
+    }
+
+    #[test]
+    fn roundtrip_odd_bits() {
+        for bits in [3u32, 5, 7] {
+            let max = (1u32 << bits) - 1;
+            let codes: Vec<u32> = (0..100).map(|i| (i * 7) % (max + 1)).collect();
+            let packed = pack(&codes, bits);
+            assert_eq!(packed.len(), packed_len(100, bits));
+            assert_eq!(unpack(&packed, bits, 100), codes);
+        }
+    }
+
+    #[test]
+    fn eight_bit_is_bytes() {
+        let codes = vec![0u32, 255, 128, 7];
+        assert_eq!(pack(&codes, 8), vec![0u8, 255, 128, 7]);
+    }
+
+    #[test]
+    fn empty() {
+        assert!(pack(&[], 4).is_empty());
+        assert!(unpack(&[], 4, 0).is_empty());
+    }
+
+    #[test]
+    fn wide_codes() {
+        let codes = vec![u32::MAX, 0, 0xdead_beef];
+        let packed = pack(&codes, 32);
+        assert_eq!(unpack(&packed, 32, 3), codes);
+    }
+
+    #[test]
+    #[should_panic(expected = "need")]
+    fn unpack_short_buffer_panics() {
+        let _ = unpack(&[0xff], 8, 3);
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        Prop::new("pack/unpack roundtrip").cases(300).max_size(200).run(|rng, size| {
+            let bits = 1 + rng.below(16);
+            let max = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let codes: Vec<u32> = (0..size)
+                .map(|_| if max == 0 { 0 } else { rng.next_u32() & max })
+                .collect();
+            let packed = pack(&codes, bits);
+            if packed.len() != packed_len(size, bits) {
+                return Err("length mismatch".into());
+            }
+            if unpack(&packed, bits, size) != codes {
+                return Err(format!("roundtrip failed bits={bits} n={size}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,172 @@
+//! Linear (uniform) quantizer — the CGC primitive (paper Eq. 7).
+//!
+//! `quantize` maps f32 values in [qmin, qmax] to b-bit codes with
+//! round-half-away-from-zero; `dequantize` reconstructs midpoint-free
+//! (code * scale + qmin). Numerics match the Pallas QDQ kernel and ref.py
+//! exactly (same EPS, same rounding), which the cross-layer parity tests
+//! assert.
+
+pub const EPS: f32 = 1e-8;
+
+/// code = round((x - qmin) / (qmax - qmin) * (2^b - 1)), clamped.
+pub fn quantize(xs: &[f32], qmin: f32, qmax: f32, bits: u32, out: &mut Vec<u32>) {
+    debug_assert!((1..=16).contains(&bits));
+    let levels = ((1u32 << bits) - 1) as f32;
+    let rng = qmax - qmin;
+    out.clear();
+    out.reserve(xs.len());
+    if rng <= EPS {
+        // flat channel: every value collapses to code 0 (dequant -> qmin)
+        out.extend(std::iter::repeat_n(0u32, xs.len()));
+        return;
+    }
+    // Eq. 7 form: t = (x - qmin)/(qmax - qmin) * levels. Computing the
+    // multiplier directly (rather than 1/(rng/levels)) avoids a double
+    // rounding that can drop a code at exact half-steps.
+    let inv = levels / rng;
+    for &x in xs {
+        let xc = x.clamp(qmin, qmax);
+        let t = (xc - qmin) * inv;
+        // t >= 0 so floor(t + 0.5) == round-half-away-from-zero
+        let code = (t + 0.5).floor();
+        out.push((code as u32).min(levels as u32));
+    }
+}
+
+/// Inverse of [`quantize`]: x̂ = qmin + code * scale.
+pub fn dequantize(codes: &[u32], qmin: f32, qmax: f32, bits: u32, out: &mut Vec<f32>) {
+    debug_assert!((1..=16).contains(&bits));
+    let levels = ((1u32 << bits) - 1) as f32;
+    let rng = qmax - qmin;
+    out.clear();
+    out.reserve(codes.len());
+    if rng <= EPS {
+        out.extend(std::iter::repeat_n(qmin, codes.len()));
+        return;
+    }
+    let scale = rng / levels;
+    for &c in codes {
+        out.push(qmin + c as f32 * scale);
+    }
+}
+
+/// One-shot fake-quant (quantize + dequantize); mirrors the L1 QDQ kernel.
+pub fn fake_quant(xs: &[f32], qmin: f32, qmax: f32, bits: u32) -> Vec<f32> {
+    let mut codes = Vec::new();
+    quantize(xs, qmin, qmax, bits, &mut codes);
+    let mut out = Vec::new();
+    dequantize(&codes, qmin, qmax, bits, &mut out);
+    out
+}
+
+/// Worst-case reconstruction error: half a quantization step.
+pub fn max_error(qmin: f32, qmax: f32, bits: u32) -> f32 {
+    let levels = ((1u32 << bits) - 1) as f32;
+    ((qmax - qmin).max(0.0) / levels) * 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{vec_f32_nonflat, Prop};
+
+    #[test]
+    fn endpoints_exact() {
+        let xs = [0.0f32, 1.0];
+        let y = fake_quant(&xs, 0.0, 1.0, 4);
+        assert_eq!(y, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32) / 999.0 * 6.0 - 3.0).collect();
+        for bits in [2u32, 4, 8] {
+            let y = fake_quant(&xs, -3.0, 3.0, bits);
+            let bound = max_error(-3.0, 3.0, bits) + 1e-6;
+            for (a, b) in xs.iter().zip(&y) {
+                assert!((a - b).abs() <= bound, "bits={bits}: |{a}-{b}| > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_range_collapses() {
+        let xs = [5.0f32, 5.0, 5.0];
+        let y = fake_quant(&xs, 5.0, 5.0, 4);
+        assert_eq!(y, vec![5.0, 5.0, 5.0]);
+    }
+
+    #[test]
+    fn out_of_range_clamped() {
+        let y = fake_quant(&[-10.0, 10.0], 0.0, 1.0, 8);
+        assert_eq!(y, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn half_rounds_away_from_zero() {
+        // qmin=0, qmax=3, bits=2 -> levels=3, scale=1. x=0.5 -> t=0.5 -> code 1.
+        let mut codes = Vec::new();
+        quantize(&[0.5], 0.0, 3.0, 2, &mut codes);
+        assert_eq!(codes, vec![1]);
+        // x=1.5 -> code 2
+        quantize(&[1.5], 0.0, 3.0, 2, &mut codes);
+        assert_eq!(codes, vec![2]);
+    }
+
+    #[test]
+    fn idempotent_property() {
+        Prop::new("fake_quant idempotent").cases(150).max_size(128).run(|rng, size| {
+            let xs = vec_f32_nonflat(rng, size + 2);
+            let (mut mn, mut mx) = (xs[0], xs[0]);
+            for &x in &xs {
+                mn = mn.min(x);
+                mx = mx.max(x);
+            }
+            let bits = 2 + rng.below(7);
+            let y1 = fake_quant(&xs, mn, mx, bits);
+            let y2 = fake_quant(&y1, mn, mx, bits);
+            for (a, b) in y1.iter().zip(&y2) {
+                if (a - b).abs() > 1e-5 {
+                    return Err(format!("not idempotent: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn error_bound_property() {
+        Prop::new("quant error <= step/2").cases(150).max_size(256).run(|rng, size| {
+            let xs = vec_f32_nonflat(rng, size + 2);
+            let (mut mn, mut mx) = (xs[0], xs[0]);
+            for &x in &xs {
+                mn = mn.min(x);
+                mx = mx.max(x);
+            }
+            let bits = 2 + rng.below(7);
+            let y = fake_quant(&xs, mn, mx, bits);
+            let bound = max_error(mn, mx, bits) * (1.0 + 1e-4) + 1e-6;
+            for (a, b) in xs.iter().zip(&y) {
+                if (a - b).abs() > bound {
+                    return Err(format!("bits={bits}: err {} > {bound}", (a - b).abs()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn codes_fit_in_bits_property() {
+        Prop::new("codes < 2^bits").cases(100).max_size(64).run(|rng, size| {
+            let xs = vec_f32_nonflat(rng, size + 2);
+            let bits = 2 + rng.below(7);
+            let mut codes = Vec::new();
+            quantize(&xs, -1.0, 1.0, bits, &mut codes);
+            let max = (1u32 << bits) - 1;
+            if codes.iter().any(|&c| c > max) {
+                return Err("code overflow".into());
+            }
+            Ok(())
+        });
+    }
+}

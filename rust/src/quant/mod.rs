@@ -1,0 +1,7 @@
+//! Quantization substrate: linear quantizer (Eq. 7), bit-level packing, and
+//! the wire-format envelope shared by every codec.
+
+pub mod bitpack;
+pub mod feedback;
+pub mod linear;
+pub mod payload;

@@ -1,0 +1,276 @@
+//! Wire format substrate: byte reader/writer + the common payload header.
+//!
+//! Every codec serializes to this envelope so the network simulator can
+//! account bytes uniformly and the server can dispatch decompression:
+//!
+//! ```text
+//! magic  u16 = 0x51AC          codec_id u8     version u8
+//! dims   u32 x 4 (B, C, H, W)
+//! body   codec-specific
+//! ```
+//!
+//! All integers little-endian. The byte count of the full envelope is what
+//! the paper's "communication overhead" axis measures.
+
+pub const MAGIC: u16 = 0x51AC;
+pub const VERSION: u8 = 1;
+
+/// Upper bound on the element count a payload header may claim (2^28
+/// elements = 1 GiB of f32). Decompressors allocate from header dims, so
+/// without this cap a 17-byte hostile header could demand terabytes.
+pub const MAX_ELEMENTS: usize = 1 << 28;
+
+/// Little-endian byte sink.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        ByteWriter { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn f32s(&mut self, vs: &[f32]) {
+        self.buf.reserve(vs.len() * 4);
+        for &v in vs {
+            self.f32(v);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Little-endian byte source with explicit error handling.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "payload truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+        self.take(n)
+    }
+
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+}
+
+/// Common payload header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub codec_id: u8,
+    pub dims: [u32; 4], // B, C, H, W
+}
+
+impl Header {
+    pub const BYTES: usize = 2 + 1 + 1 + 16;
+
+    pub fn write(&self, w: &mut ByteWriter) {
+        w.u16(MAGIC);
+        w.u8(self.codec_id);
+        w.u8(VERSION);
+        for d in self.dims {
+            w.u32(d);
+        }
+    }
+
+    pub fn read(r: &mut ByteReader) -> Result<Header, String> {
+        let magic = r.u16()?;
+        if magic != MAGIC {
+            return Err(format!("bad magic {magic:#06x}"));
+        }
+        let codec_id = r.u8()?;
+        let version = r.u8()?;
+        if version != VERSION {
+            return Err(format!("unsupported payload version {version}"));
+        }
+        let mut dims = [0u32; 4];
+        for d in &mut dims {
+            *d = r.u32()?;
+        }
+        let elems = dims
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d as usize))
+            .ok_or("header dims overflow")?;
+        if elems == 0 || elems > MAX_ELEMENTS {
+            return Err(format!("header claims {elems} elements (cap {MAX_ELEMENTS})"));
+        }
+        Ok(Header { codec_id, dims })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+
+    pub fn n_per_channel(&self) -> usize {
+        (self.dims[0] * self.dims[2] * self.dims[3]) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u16(0xbeef);
+        w.u32(0xdead_beef);
+        w.f32(-1.5);
+        w.f32s(&[1.0, 2.0]);
+        w.bytes(&[9, 9]);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 0xbeef);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f32s(2).unwrap(), vec![1.0, 2.0]);
+        assert_eq!(r.bytes(2).unwrap(), &[9, 9]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_is_error_not_panic() {
+        let mut r = ByteReader::new(&[1, 2]);
+        assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = Header { codec_id: 3, dims: [32, 32, 16, 16] };
+        let mut w = ByteWriter::new();
+        h.write(&mut w);
+        let buf = w.finish();
+        assert_eq!(buf.len(), Header::BYTES);
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(Header::read(&mut r).unwrap(), h);
+    }
+
+    #[test]
+    fn header_rejects_bad_magic() {
+        let mut w = ByteWriter::new();
+        w.u16(0x1111);
+        w.u8(0);
+        w.u8(VERSION);
+        for _ in 0..4 {
+            w.u32(1);
+        }
+        let buf = w.finish();
+        assert!(Header::read(&mut ByteReader::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn header_rejects_hostile_dims() {
+        // terabyte-scale claim
+        let mut w = ByteWriter::new();
+        w.u16(MAGIC);
+        w.u8(0);
+        w.u8(VERSION);
+        for d in [60000u32, 60000, 60000, 4] {
+            w.u32(d);
+        }
+        let buf = w.finish();
+        assert!(Header::read(&mut ByteReader::new(&buf)).is_err());
+        // zero-element claim
+        let mut w = ByteWriter::new();
+        w.u16(MAGIC);
+        w.u8(0);
+        w.u8(VERSION);
+        for d in [0u32, 4, 4, 4] {
+            w.u32(d);
+        }
+        let buf = w.finish();
+        assert!(Header::read(&mut ByteReader::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn header_geometry_helpers() {
+        let h = Header { codec_id: 0, dims: [4, 8, 2, 3] };
+        assert_eq!(h.element_count(), 4 * 8 * 2 * 3);
+        assert_eq!(h.n_per_channel(), 4 * 2 * 3);
+    }
+}

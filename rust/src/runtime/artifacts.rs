@@ -1,0 +1,306 @@
+//! AOT artifact manifest: the contract with `python/compile/aot.py`.
+//!
+//! `manifest.json` describes, per model config, every HLO artifact's I/O
+//! signature (names/dims/dtypes in positional order), the flat parameter
+//! layout of the client/server sub-models, and the cut-layer geometry. Any
+//! schema change must be mirrored in aot.py (SCHEMA_VERSION guards drift).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+pub const SCHEMA_VERSION: usize = 1;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType, String> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(format!("unknown dtype '{other}'")),
+        }
+    }
+}
+
+/// One input/output slot of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT-compiled HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// One named parameter tensor in the flat init blob.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+    /// element offset into the f32 blob
+    pub offset: usize,
+    /// element count
+    pub size: usize,
+}
+
+/// Cut-layer geometry (the smashed-data shape).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CutShape {
+    pub b: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl CutShape {
+    pub fn n_per_channel(&self) -> usize {
+        self.b * self.h * self.w
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        vec![self.b, self.c, self.h, self.w]
+    }
+}
+
+/// Parsed manifest for one model config directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config_name: String,
+    pub in_ch: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub img: usize,
+    pub cut: CutShape,
+    pub client_params: Vec<ParamSpec>,
+    pub server_params: Vec<ParamSpec>,
+    pub client_param_count: usize,
+    pub server_param_count: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec, String> {
+    let name = j.at(&["name"]).as_str().ok_or("io name")?.to_string();
+    let dims = j
+        .at(&["dims"])
+        .as_arr()
+        .ok_or("io dims")?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| "dim".to_string()))
+        .collect::<Result<Vec<_>, _>>()?;
+    let dtype = DType::parse(j.at(&["dtype"]).as_str().ok_or("io dtype")?)?;
+    Ok(IoSpec { name, dims, dtype })
+}
+
+fn parse_param(j: &Json) -> Result<ParamSpec, String> {
+    Ok(ParamSpec {
+        name: j.at(&["name"]).as_str().ok_or("param name")?.to_string(),
+        dims: j
+            .at(&["dims"])
+            .as_arr()
+            .ok_or("param dims")?
+            .iter()
+            .map(|d| d.as_usize().unwrap())
+            .collect(),
+        offset: j.at(&["offset"]).as_usize().ok_or("param offset")?,
+        size: j.at(&["size"]).as_usize().ok_or("param size")?,
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+
+        let schema = j.at(&["schema"]).as_usize().ok_or("schema")?;
+        if schema != SCHEMA_VERSION {
+            return Err(format!(
+                "manifest schema {schema} != supported {SCHEMA_VERSION}; \
+                 re-run `make artifacts`"
+            ));
+        }
+        let cfg = j.at(&["config"]);
+        let cut = cfg.at(&["cut"]);
+        let cut = CutShape {
+            b: cut.at(&["b"]).as_usize().ok_or("cut.b")?,
+            c: cut.at(&["c"]).as_usize().ok_or("cut.c")?,
+            h: cut.at(&["h"]).as_usize().ok_or("cut.h")?,
+            w: cut.at(&["w"]).as_usize().ok_or("cut.w")?,
+        };
+
+        let mut artifacts = Vec::new();
+        if let Json::Obj(m) = j.at(&["artifacts"]) {
+            for (name, a) in m {
+                artifacts.push(ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(a.at(&["file"]).as_str().ok_or("artifact file")?),
+                    inputs: a
+                        .at(&["inputs"])
+                        .as_arr()
+                        .ok_or("inputs")?
+                        .iter()
+                        .map(parse_io)
+                        .collect::<Result<Vec<_>, _>>()?,
+                    outputs: a
+                        .at(&["outputs"])
+                        .as_arr()
+                        .ok_or("outputs")?
+                        .iter()
+                        .map(parse_io)
+                        .collect::<Result<Vec<_>, _>>()?,
+                });
+            }
+        } else {
+            return Err("manifest: artifacts is not an object".into());
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config_name: cfg.at(&["name"]).as_str().ok_or("config.name")?.to_string(),
+            in_ch: cfg.at(&["in_ch"]).as_usize().ok_or("in_ch")?,
+            classes: cfg.at(&["classes"]).as_usize().ok_or("classes")?,
+            batch: cfg.at(&["batch"]).as_usize().ok_or("batch")?,
+            img: cfg.at(&["img"]).as_usize().ok_or("img")?,
+            cut,
+            client_params: j
+                .at(&["client_params"])
+                .as_arr()
+                .ok_or("client_params")?
+                .iter()
+                .map(parse_param)
+                .collect::<Result<Vec<_>, _>>()?,
+            server_params: j
+                .at(&["server_params"])
+                .as_arr()
+                .ok_or("server_params")?
+                .iter()
+                .map(parse_param)
+                .collect::<Result<Vec<_>, _>>()?,
+            client_param_count: j.at(&["client_param_count"]).as_usize().ok_or("cpc")?,
+            server_param_count: j.at(&["server_param_count"]).as_usize().ok_or("spc")?,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec, String> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// Load a raw little-endian f32 blob (client_init.bin / server_init.bin)
+    /// split into per-parameter tensors per the spec layout.
+    pub fn load_param_blob(&self, file: &str, specs: &[ParamSpec])
+                           -> Result<Vec<crate::tensor::Tensor>, String> {
+        let path = self.dir.join(file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let total: usize = specs.iter().map(|s| s.size).sum();
+        if bytes.len() != total * 4 {
+            return Err(format!(
+                "{}: {} bytes, expected {}",
+                path.display(),
+                bytes.len(),
+                total * 4
+            ));
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(specs
+            .iter()
+            .map(|s| {
+                crate::tensor::Tensor::new(
+                    s.dims.clone(),
+                    floats[s.offset..s.offset + s.size].to_vec(),
+                )
+            })
+            .collect())
+    }
+
+    pub fn load_client_init(&self) -> Result<Vec<crate::tensor::Tensor>, String> {
+        self.load_param_blob("client_init.bin", &self.client_params)
+    }
+
+    pub fn load_server_init(&self) -> Result<Vec<crate::tensor::Tensor>, String> {
+        self.load_param_blob("server_init.bin", &self.server_params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/ham");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn load_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config_name, "ham");
+        assert_eq!(m.in_ch, 3);
+        assert_eq!(m.classes, 7);
+        assert_eq!(m.cut.c, 32);
+        assert_eq!(m.cut.h, m.img / 2);
+        for name in ["client_fwd", "server_step", "client_bwd", "eval_logits",
+                     "entropy", "qdq"] {
+            let a = m.artifact(name).unwrap();
+            assert!(a.file.exists(), "{name} missing");
+            assert!(!a.inputs.is_empty());
+            assert!(!a.outputs.is_empty());
+        }
+    }
+
+    #[test]
+    fn param_blobs_match_specs() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let cp = m.load_client_init().unwrap();
+        assert_eq!(cp.len(), m.client_params.len());
+        let total: usize = cp.iter().map(|t| t.len()).sum();
+        assert_eq!(total, m.client_param_count);
+        // GN scales init to 1.0
+        let scale_idx = m
+            .client_params
+            .iter()
+            .position(|p| p.name == "stem.gn.scale")
+            .unwrap();
+        assert!(cp[scale_idx].data().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

@@ -1,0 +1,221 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! This is the only bridge between the L3 coordinator and the L2/L1
+//! compiled model. `Engine::load` parses the manifest, compiles every
+//! `*.hlo.txt` once on the PJRT CPU client (`xla` crate 0.1.6 /
+//! xla_extension 0.5.1), and `execute` runs a named artifact on host
+//! tensors. HLO *text* is the interchange format — see aot.py and
+//! /opt/xla-example/README.md for why serialized protos don't round-trip.
+//!
+//! Python is never involved here; after `make artifacts` the binary is
+//! self-contained.
+
+pub mod artifacts;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::tensor::Tensor;
+use artifacts::{ArtifactSpec, DType, Manifest};
+
+/// A host-side argument for `Engine::execute`.
+#[derive(Debug, Clone, Copy)]
+pub enum Arg<'a> {
+    /// f32 tensor data with explicit dims
+    F32(&'a [f32], &'a [usize]),
+    /// i32 tensor data with explicit dims (labels)
+    I32(&'a [i32], &'a [usize]),
+    /// f32 scalar (learning rate)
+    ScalarF32(f32),
+}
+
+impl Arg<'_> {
+    fn dims(&self) -> Vec<usize> {
+        match self {
+            Arg::F32(_, d) | Arg::I32(_, d) => d.to_vec(),
+            Arg::ScalarF32(_) => vec![],
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            Arg::F32(..) | Arg::ScalarF32(_) => DType::F32,
+            Arg::I32(..) => DType::I32,
+        }
+    }
+}
+
+/// Cumulative per-artifact execution statistics (perf accounting).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// The PJRT execution engine: one compiled executable per artifact.
+pub struct Engine {
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: HashMap<String, ExecStats>,
+}
+
+impl Engine {
+    /// Load and compile every artifact under `dir` (e.g. `artifacts/ham`).
+    pub fn load(dir: &Path) -> Result<Engine, String> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e}"))?;
+        crate::log_info!(
+            "runtime: PJRT platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let mut executables = HashMap::new();
+        for spec in &manifest.artifacts {
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file.to_str().ok_or("non-utf8 artifact path")?,
+            )
+            .map_err(|e| format!("parse {}: {e}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| format!("compile {}: {e}", spec.name))?;
+            crate::log_debug!(
+                "runtime: compiled {} in {:.2}s",
+                spec.name,
+                t0.elapsed().as_secs_f64()
+            );
+            executables.insert(spec.name.clone(), exe);
+        }
+        Ok(Engine { manifest, executables, stats: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute artifact `name` with positional `args`; returns the output
+    /// tuple as f32 host tensors (in the manifest's output order).
+    pub fn execute(&mut self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Tensor>, String> {
+        let spec = self.manifest.artifact(name)?.clone();
+        self.validate(&spec, args)?;
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| format!("artifact '{name}' not compiled"))?;
+
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| Self::to_literal(a))
+            .collect::<Result<_, _>>()?;
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("execute {name}: {e}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch {name} result: {e}"))?;
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| format!("untuple {name}: {e}"))?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        let st = self.stats.entry(name.to_string()).or_default();
+        st.calls += 1;
+        st.total_secs += elapsed;
+
+        if parts.len() != spec.outputs.len() {
+            return Err(format!(
+                "{name}: {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, out)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| format!("{name}.{}: {e}", out.name))?;
+                if data.len() != out.element_count() {
+                    return Err(format!(
+                        "{name}.{}: {} elements, expected {}",
+                        out.name,
+                        data.len(),
+                        out.element_count()
+                    ));
+                }
+                Ok(Tensor::new(out.dims.clone(), data))
+            })
+            .collect()
+    }
+
+    fn to_literal(arg: &Arg<'_>) -> Result<xla::Literal, String> {
+        let lit = match arg {
+            Arg::ScalarF32(x) => xla::Literal::scalar(*x),
+            Arg::F32(data, dims) => {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims_i64)
+                    .map_err(|e| format!("reshape f32 arg: {e}"))?
+            }
+            Arg::I32(data, dims) => {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims_i64)
+                    .map_err(|e| format!("reshape i32 arg: {e}"))?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn validate(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<(), String> {
+        if args.len() != spec.inputs.len() {
+            return Err(format!(
+                "{}: {} args, manifest says {}",
+                spec.name,
+                args.len(),
+                spec.inputs.len()
+            ));
+        }
+        for (i, (arg, inp)) in args.iter().zip(&spec.inputs).enumerate() {
+            if arg.dims() != inp.dims {
+                return Err(format!(
+                    "{} arg {i} ({}): dims {:?}, expected {:?}",
+                    spec.name,
+                    inp.name,
+                    arg.dims(),
+                    inp.dims
+                ));
+            }
+            if arg.dtype() != inp.dtype {
+                return Err(format!(
+                    "{} arg {i} ({}): dtype mismatch",
+                    spec.name, inp.name
+                ));
+            }
+            let len = match arg {
+                Arg::F32(d, _) => d.len(),
+                Arg::I32(d, _) => d.len(),
+                Arg::ScalarF32(_) => 1,
+            };
+            if len != inp.element_count() {
+                return Err(format!(
+                    "{} arg {i} ({}): {len} elements, expected {}",
+                    spec.name,
+                    inp.name,
+                    inp.element_count()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-artifact cumulative execution stats.
+    pub fn stats(&self) -> &HashMap<String, ExecStats> {
+        &self.stats
+    }
+}

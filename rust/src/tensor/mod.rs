@@ -1,0 +1,245 @@
+//! Dense f32 tensor substrate for the coordinator.
+//!
+//! The coordinator moves smashed data (NCHW activations / gradients) between
+//! the PJRT runtime and the compression codecs. Codecs are channel-wise, so
+//! the central utility here is the NCHW ⇄ channel-major (C, N) relayout:
+//! channel c owns the N = B·H·W elements `x[b, c, h, w]` for all b/h/w —
+//! exactly the grouping ACII's entropy and CGC's quantizer operate over
+//! (mirrors `channel_entropy_nchw` on the Python side).
+
+pub mod view;
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "dims {:?} don't match data length {}",
+            dims,
+            data.len()
+        );
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Tensor {
+        let len = dims.iter().product();
+        Tensor { dims, data: vec![0.0; len] }
+    }
+
+    pub fn scalar(x: f32) -> Tensor {
+        Tensor { dims: vec![], data: vec![x] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with new dims (same element count).
+    pub fn reshape(mut self, dims: Vec<usize>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), self.data.len());
+        self.dims = dims;
+        self
+    }
+
+    /// NCHW accessor helpers. Panics if not 4-D.
+    pub fn nchw(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.dims.len(), 4, "expected NCHW tensor, got {:?}", self.dims);
+        (self.dims[0], self.dims[1], self.dims[2], self.dims[3])
+    }
+
+    /// Relayout NCHW -> channel-major (C, N), N = B·H·W.
+    pub fn to_channel_major(&self) -> ChannelMajor {
+        let (b, c, h, w) = self.nchw();
+        let hw = h * w;
+        let n = b * hw;
+        let mut out = vec![0.0f32; c * n];
+        for bi in 0..b {
+            for ci in 0..c {
+                let src = (bi * c + ci) * hw;
+                let dst = ci * n + bi * hw;
+                out[dst..dst + hw].copy_from_slice(&self.data[src..src + hw]);
+            }
+        }
+        ChannelMajor { channels: c, n_per_channel: n, batch: b, height: h, width: w, data: out }
+    }
+
+    /// Mean absolute difference against another tensor of identical shape.
+    pub fn mean_abs_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.dims, other.dims);
+        let s: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum();
+        s / self.data.len().max(1) as f64
+    }
+}
+
+/// Channel-major view of smashed data: row c = channel c's N elements.
+#[derive(Debug, Clone)]
+pub struct ChannelMajor {
+    pub channels: usize,
+    pub n_per_channel: usize,
+    batch: usize,
+    height: usize,
+    width: usize,
+    data: Vec<f32>,
+}
+
+impl ChannelMajor {
+    /// Build directly from (C, N) data with explicit original geometry.
+    pub fn from_rows(
+        channels: usize,
+        n_per_channel: usize,
+        batch: usize,
+        height: usize,
+        width: usize,
+        data: Vec<f32>,
+    ) -> ChannelMajor {
+        assert_eq!(channels * n_per_channel, data.len());
+        assert_eq!(batch * height * width, n_per_channel);
+        ChannelMajor { channels, n_per_channel, batch, height, width, data }
+    }
+
+    pub fn channel(&self, c: usize) -> &[f32] {
+        let n = self.n_per_channel;
+        &self.data[c * n..(c + 1) * n]
+    }
+
+    pub fn channel_mut(&mut self, c: usize) -> &mut [f32] {
+        let n = self.n_per_channel;
+        &mut self.data[c * n..(c + 1) * n]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Relayout back to NCHW.
+    pub fn to_nchw(&self) -> Tensor {
+        let (b, c, hw) = (self.batch, self.channels, self.height * self.width);
+        let n = self.n_per_channel;
+        let mut out = vec![0.0f32; c * n];
+        for bi in 0..b {
+            for ci in 0..c {
+                let src = ci * n + bi * hw;
+                let dst = (bi * c + ci) * hw;
+                out[dst..dst + hw].copy_from_slice(&self.data[src..src + hw]);
+            }
+        }
+        Tensor::new(vec![b, c, self.height, self.width], out)
+    }
+
+    pub fn geometry(&self) -> (usize, usize, usize, usize) {
+        (self.batch, self.channels, self.height, self.width)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_nchw(dims: (usize, usize, usize, usize), seed: u64) -> Tensor {
+        let (b, c, h, w) = dims;
+        let mut rng = Pcg32::seeded(seed);
+        let data: Vec<f32> = (0..b * c * h * w).map(|_| rng.next_gaussian()).collect();
+        Tensor::new(vec![b, c, h, w], data)
+    }
+
+    #[test]
+    fn channel_major_roundtrip() {
+        let t = random_nchw((3, 5, 4, 2), 1);
+        let cm = t.to_channel_major();
+        assert_eq!(cm.channels, 5);
+        assert_eq!(cm.n_per_channel, 3 * 4 * 2);
+        assert_eq!(cm.to_nchw(), t);
+    }
+
+    #[test]
+    fn channel_contents_match_strided_access() {
+        let (b, c, h, w) = (2, 3, 2, 2);
+        let t = random_nchw((b, c, h, w), 2);
+        let cm = t.to_channel_major();
+        for ci in 0..c {
+            let row = cm.channel(ci);
+            let mut k = 0;
+            for bi in 0..b {
+                for hi in 0..h {
+                    for wi in 0..w {
+                        let idx = ((bi * c + ci) * h + hi) * w + wi;
+                        assert_eq!(row[k], t.data()[idx]);
+                        k += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let r = t.clone().reshape(vec![3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.dims(), &[3, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_dims_panic() {
+        let _ = Tensor::new(vec![2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn mean_abs_diff_zero_for_identical() {
+        let t = random_nchw((1, 2, 3, 3), 3);
+        assert_eq!(t.mean_abs_diff(&t), 0.0);
+    }
+
+    #[test]
+    fn channel_mut_writes_back() {
+        let t = random_nchw((2, 2, 2, 2), 4);
+        let mut cm = t.to_channel_major();
+        for v in cm.channel_mut(1) {
+            *v = 7.0;
+        }
+        let back = cm.to_nchw();
+        let (b, c, h, w) = back.nchw();
+        for bi in 0..b {
+            for hi in 0..h {
+                for wi in 0..w {
+                    let idx = ((bi * c + 1) * h + hi) * w + wi;
+                    assert_eq!(back.data()[idx], 7.0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Lightweight per-channel statistics views over channel-major data.
+//!
+//! These are the scalar reductions the codecs need per channel (min/max for
+//! quantizer boundaries, mean/std for the SplitFC and STD-selection
+//! baselines) computed in one pass each.
+
+/// Min and max of a slice in a single pass. Returns (0, 0) for empty input.
+pub fn min_max(xs: &[f32]) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut mn = xs[0];
+    let mut mx = xs[0];
+    for &x in &xs[1..] {
+        if x < mn {
+            mn = x;
+        }
+        if x > mx {
+            mx = x;
+        }
+    }
+    (mn, mx)
+}
+
+/// Mean and population standard deviation in one pass.
+pub fn mean_std(xs: &[f32]) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mut sum = 0.0f64;
+    let mut sumsq = 0.0f64;
+    for &x in xs {
+        sum += x as f64;
+        sumsq += (x as f64) * (x as f64);
+    }
+    let mean = sum / n;
+    let var = (sumsq / n - mean * mean).max(0.0);
+    (mean as f32, var.sqrt() as f32)
+}
+
+/// Squared L2 norm.
+pub fn sq_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_max_basic() {
+        assert_eq!(min_max(&[3.0, -1.0, 2.0]), (-1.0, 3.0));
+        assert_eq!(min_max(&[]), (0.0, 0.0));
+        assert_eq!(min_max(&[5.0]), (5.0, 5.0));
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m - 2.5).abs() < 1e-6);
+        assert!((s - (1.25f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_std_constant() {
+        let (m, s) = mean_std(&[7.0; 100]);
+        assert!((m - 7.0).abs() < 1e-6);
+        assert!(s.abs() < 1e-6);
+    }
+
+    #[test]
+    fn sq_norm_basic() {
+        assert!((sq_norm(&[3.0, 4.0]) - 25.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,92 @@
+//! Tiny leveled logger (no `log`/`env_logger` runtime deps on the hot path).
+//!
+//! Level is process-global, set once by the CLI (`--log-level`) or the
+//! `SLACC_LOG` environment variable. Macros compile to a branch on a relaxed
+//! atomic load, so disabled levels cost ~1ns.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level_from_str(s: &str) -> Option<Level> {
+    match s.to_ascii_lowercase().as_str() {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
+/// Initialize from `SLACC_LOG` if set; call once at startup.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("SLACC_LOG") {
+        if let Some(l) = level_from_str(&v) {
+            set_level(l);
+        }
+    }
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(level_from_str("DEBUG"), Some(Level::Debug));
+        assert_eq!(level_from_str("nope"), None);
+    }
+}

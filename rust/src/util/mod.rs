@@ -1,0 +1,11 @@
+//! Foundation substrates: deterministic RNG, JSON, statistics, logging, and
+//! a mini property-testing harness. Everything here is dependency-free —
+//! only `xla` and `anyhow` are vendored on this image, so the usual crates
+//! (rand/serde/log/proptest) are reimplemented at the scale this project
+//! needs.
+
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

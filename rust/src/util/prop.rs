@@ -1,0 +1,136 @@
+//! Mini property-testing harness (proptest is not vendored on this image).
+//!
+//! `Prop` drives a closure over many PCG-seeded cases and, on failure,
+//! re-runs a deterministic shrink loop over the failing seed's "size" knob.
+//! It is intentionally small: generators are free functions over `Pcg32`
+//! plus a `size` hint, which is all the coordinator invariants need
+//! (routing/batching/codec round-trips over random tensors).
+//!
+//! ```ignore
+//! Prop::new("quant roundtrip").cases(200).run(|rng, size| {
+//!     let n = 1 + rng.below(size as u32) as usize;
+//!     ...check invariant, return Err(msg) to fail...
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+pub struct Prop {
+    name: &'static str,
+    cases: usize,
+    seed: u64,
+    max_size: usize,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Self {
+        Prop { name, cases: 100, seed: 0x5eed, max_size: 64 }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn max_size(mut self, s: usize) -> Self {
+        self.max_size = s;
+        self
+    }
+
+    /// Run the property. The closure gets a fresh deterministic RNG per case
+    /// and a size hint that ramps up 1..=max_size over the run.
+    pub fn run<F>(self, mut f: F)
+    where
+        F: FnMut(&mut Pcg32, usize) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let size = 1 + (case * self.max_size) / self.cases.max(1);
+            let mut rng = Pcg32::new(self.seed, case as u64);
+            if let Err(msg) = f(&mut rng, size) {
+                // shrink: retry the same case stream with smaller sizes
+                let mut min_fail = (size, msg.clone());
+                let mut s = size / 2;
+                while s >= 1 {
+                    let mut rng2 = Pcg32::new(self.seed, case as u64);
+                    match f(&mut rng2, s) {
+                        Err(m) => {
+                            min_fail = (s, m);
+                            if s == 1 {
+                                break;
+                            }
+                            s /= 2;
+                        }
+                        Ok(()) => break,
+                    }
+                }
+                panic!(
+                    "property '{}' failed (case {case}, seed {:#x}, size {}): {}",
+                    self.name, self.seed, min_fail.0, min_fail.1
+                );
+            }
+        }
+    }
+}
+
+/// Generate a random f32 vector with mixed magnitudes (exercises both
+/// subnormal-ish and large values).
+pub fn vec_f32(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+    let scale = 10f32.powi(rng.below(7) as i32 - 3);
+    (0..len).map(|_| rng.next_gaussian() * scale).collect()
+}
+
+/// Random vector guaranteed to contain at least two distinct values.
+pub fn vec_f32_nonflat(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+    let mut v = vec_f32(rng, len.max(2));
+    if v.iter().all(|&x| x == v[0]) {
+        v[0] += 1.0;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::new("reverse twice").cases(50).run(|rng, size| {
+            let v: Vec<u32> = (0..size).map(|_| rng.next_u32()).collect();
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if v == w { Ok(()) } else { Err("reverse^2 != id".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_name() {
+        Prop::new("always fails").cases(10).run(|_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrink_reports_small_size() {
+        let result = std::panic::catch_unwind(|| {
+            Prop::new("fails for all sizes").cases(5).max_size(64).run(|_, size| {
+                if size >= 1 { Err(format!("size {size}")) } else { Ok(()) }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("size 1"), "shrunk message: {msg}");
+    }
+
+    #[test]
+    fn nonflat_vec_has_two_values() {
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..100 {
+            let v = vec_f32_nonflat(&mut rng, 4);
+            assert!(v.iter().any(|&x| x != v[0]));
+        }
+    }
+}

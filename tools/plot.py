@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Render bench_results/*.json into terminal/markdown plots.
+
+The Rust bench harness saves every figure's table rows plus the raw
+accuracy-vs-round / accuracy-vs-time series as JSON sidecars. This tool
+draws them as unicode line charts so the paper-figure *shapes* (who wins,
+where curves cross) can be inspected without matplotlib (not installed on
+this image).
+
+Usage:
+    python tools/plot.py                      # plot every saved result
+    python tools/plot.py bench_results/fig5*  # subset
+"""
+
+import glob
+import json
+import sys
+
+WIDTH = 72
+HEIGHT = 14
+MARKS = "ox+*#@%&"
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def series_of(doc):
+    out = []
+    for row in doc.get("rows", []):
+        if "series" in row:
+            pts = [(float(x), float(y)) for x, y in row["points"]]
+            if pts:
+                out.append((row["series"], pts))
+    return out
+
+
+def ascii_plot(title, named_series):
+    xs = [x for _, pts in named_series for x, _ in pts]
+    ys = [y for _, pts in named_series for _, y in pts]
+    if not xs:
+        return
+    x0, x1 = min(xs), max(xs)
+    y0, y1 = min(ys), max(ys)
+    if x1 - x0 < 1e-12:
+        x1 = x0 + 1.0
+    if y1 - y0 < 1e-12:
+        y1 = y0 + 1.0
+    grid = [[" "] * WIDTH for _ in range(HEIGHT)]
+    for si, (_, pts) in enumerate(named_series):
+        mark = MARKS[si % len(MARKS)]
+        for x, y in pts:
+            col = int((x - x0) / (x1 - x0) * (WIDTH - 1))
+            row = HEIGHT - 1 - int((y - y0) / (y1 - y0) * (HEIGHT - 1))
+            grid[row][col] = mark
+    print(f"\n--- {title} ---")
+    print(f"y: [{y0:.3f}, {y1:.3f}]   x: [{x0:.1f}, {x1:.1f}]")
+    for row in grid:
+        print("|" + "".join(row) + "|")
+    print("+" + "-" * WIDTH + "+")
+    for si, (name, _) in enumerate(named_series):
+        print(f"  {MARKS[si % len(MARKS)]} {name}")
+
+
+def print_table(doc):
+    rows = [r for r in doc.get("rows", []) if "series" not in r]
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    widths = {c: max(len(c), max(len(str(r.get(c, ""))) for r in rows)) for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+
+
+def main():
+    patterns = sys.argv[1:] or ["bench_results/*.json"]
+    paths = sorted(p for pat in patterns for p in glob.glob(pat))
+    if not paths:
+        print("no bench_results/*.json found — run `make bench` first")
+        return 1
+    for path in paths:
+        doc = load(path)
+        print(f"\n================ {doc.get('title', path)} ================")
+        print_table(doc)
+        named = series_of(doc)
+        if named:
+            ascii_plot(doc.get("title", path), named)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
