@@ -1,0 +1,220 @@
+//! Distributed SL over localhost TCP: one server process + 4 device-worker
+//! processes, then a byte-for-byte parity check against the in-process
+//! loopback path.
+//!
+//!     cargo run --release --example distributed
+//!
+//! The orchestrator re-spawns this example binary in `--role server` /
+//! `--role device` mode (same idea as `slacc serve` / `slacc device`),
+//! waits for the fleet to finish >= 3 training rounds, then runs the
+//! identical config through the in-process loopback transport and asserts
+//! that every round's `bytes_up`/`bytes_down` match exactly — the codec
+//! envelopes on the wire are the ones the simulator always accounted.
+//!
+//! With AOT artifacts present this trains the real model through PJRT in
+//! every process; without them it falls back to the deterministic mock
+//! model (real codecs, real protocol, fake math — see
+//! `slacc::transport::compute::MockCompute`).
+//!
+//! Flags: --rounds N [3] --devices N [4] --port P [47613] --seed N [0]
+
+use std::net::TcpListener;
+use std::process::Command;
+use std::sync::Arc;
+use std::time::Duration;
+
+use slacc::cli::Args;
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::coordinator::trainer::{engine_runtime, engine_worker, Trainer};
+use slacc::data::Dataset;
+use slacc::transport::device::{mock_worker, run_blocking};
+use slacc::transport::server::{accept_and_serve, mock_runtime, run_mock_loopback};
+use slacc::transport::tcp::TcpTransport;
+use slacc::transport::Transport;
+
+fn session_cfg(devices: usize, rounds: usize, seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for("ham");
+    cfg.devices = devices;
+    cfg.rounds = rounds;
+    cfg.seed = seed;
+    cfg.train_n = 256;
+    cfg.test_n = 64;
+    cfg.lr = 1e-3;
+    cfg.codec = CodecChoice::Named("slacc".into());
+    cfg
+}
+
+fn main() -> Result<(), String> {
+    slacc::util::logging::init_from_env();
+    let mut args = Args::from_env();
+    let role = args.str_or("role", "main");
+    let devices = args.usize_or("devices", 4);
+    let rounds = args.usize_or("rounds", 3);
+    let seed = args.usize_or("seed", 0) as u64;
+    let port = args.usize_or("port", 47613);
+    let id = args.usize_or("id", 0);
+    let csv = args.str_opt("csv");
+    args.finish()?;
+    let cfg = session_cfg(devices, rounds, seed);
+    cfg.validate()?;
+    match role.as_str() {
+        "main" => orchestrate(cfg, port),
+        "server" => role_server(cfg, port, csv),
+        "device" => role_device(cfg, port, id),
+        other => Err(format!("unknown --role '{other}'")),
+    }
+}
+
+fn role_server(cfg: ExperimentConfig, port: usize, csv: Option<String>) -> Result<(), String> {
+    let bind = format!("127.0.0.1:{port}");
+    let listener = TcpListener::bind(&bind).map_err(|e| format!("bind {bind}: {e}"))?;
+    println!("[server] listening on {bind} for {} devices", cfg.devices);
+    let report = if cfg.have_artifacts() {
+        let mut rt = engine_runtime(&cfg)?;
+        accept_and_serve(&mut rt, &listener)?
+    } else {
+        let (_, test) =
+            Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+        let mut rt = mock_runtime(&cfg, Arc::new(test))?;
+        accept_and_serve(&mut rt, &listener)?
+    };
+    println!(
+        "[server] {} rounds done: {:.2} KB up / {:.2} KB down",
+        report.rounds_run,
+        report.total_bytes_up as f64 / 1e3,
+        report.total_bytes_down as f64 / 1e3
+    );
+    if let Some(path) = csv {
+        report.metrics.write_csv(std::path::Path::new(&path))?;
+    }
+    Ok(())
+}
+
+fn role_device(cfg: ExperimentConfig, port: usize, id: usize) -> Result<(), String> {
+    let addr = format!("127.0.0.1:{port}");
+    let mut conn = TcpTransport::connect_retry(&addr, 80, Duration::from_millis(250))?;
+    if cfg.have_artifacts() {
+        let mut worker = engine_worker(&cfg, id)?;
+        run_blocking(&mut worker, &mut conn)?;
+    } else {
+        let (train, _) =
+            Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+        let mut worker = mock_worker(&cfg, Arc::new(train), id)?;
+        run_blocking(&mut worker, &mut conn)?;
+    }
+    println!("[device {id}] done ({} bytes sent)", conn.stats().bytes_sent);
+    Ok(())
+}
+
+fn orchestrate(cfg: ExperimentConfig, port: usize) -> Result<(), String> {
+    let exe = std::env::current_exe().map_err(|e| e.to_string())?;
+    let csv = std::env::temp_dir()
+        .join(format!("slacc_distributed_{}.csv", std::process::id()));
+    let common = [
+        ("--devices", cfg.devices.to_string()),
+        ("--rounds", cfg.rounds.to_string()),
+        ("--seed", cfg.seed.to_string()),
+        ("--port", port.to_string()),
+    ];
+    println!(
+        "orchestrator: {} devices x {} rounds over 127.0.0.1:{port} ({})",
+        cfg.devices,
+        cfg.rounds,
+        if cfg.have_artifacts() { "PJRT artifacts" } else { "mock model" }
+    );
+
+    let mut server = Command::new(&exe);
+    server.args(["--role", "server", "--csv", &csv.to_string_lossy()]);
+    for (k, v) in &common {
+        server.args([*k, v.as_str()]);
+    }
+    let mut server = server.spawn().map_err(|e| format!("spawn server: {e}"))?;
+
+    let mut workers = Vec::new();
+    for d in 0..cfg.devices {
+        let mut c = Command::new(&exe);
+        c.args(["--role", "device", "--id", &d.to_string()]);
+        for (k, v) in &common {
+            c.args([*k, v.as_str()]);
+        }
+        workers.push(c.spawn().map_err(|e| format!("spawn device {d}: {e}"))?);
+    }
+
+    for (d, mut w) in workers.into_iter().enumerate() {
+        let st = w.wait().map_err(|e| e.to_string())?;
+        if !st.success() {
+            let _ = server.kill();
+            return Err(format!("device {d} exited with {st}"));
+        }
+    }
+    let st = server.wait().map_err(|e| e.to_string())?;
+    if !st.success() {
+        return Err(format!("server exited with {st}"));
+    }
+
+    // per-round wire bytes from the TCP run
+    let text = std::fs::read_to_string(&csv)
+        .map_err(|e| format!("read {}: {e}", csv.display()))?;
+    let tcp_rounds: Vec<(usize, usize)> = text
+        .lines()
+        .skip(1)
+        .map(|line| {
+            let f: Vec<&str> = line.split(',').collect();
+            Ok((
+                f[3].parse::<usize>().map_err(|e| format!("csv bytes_up: {e}"))?,
+                f[4].parse::<usize>().map_err(|e| format!("csv bytes_down: {e}"))?,
+            ))
+        })
+        .collect::<Result<_, String>>()?;
+    let _ = std::fs::remove_file(&csv);
+
+    // the same session through the in-process loopback transport
+    println!("orchestrator: re-running in-process over loopback for parity check");
+    let reference = if cfg.have_artifacts() {
+        Trainer::new(cfg.clone())?.run()?
+    } else {
+        run_mock_loopback(&cfg)?
+    };
+
+    if tcp_rounds.len() != cfg.rounds {
+        return Err(format!(
+            "TCP session ran {} rounds, expected {}",
+            tcp_rounds.len(),
+            cfg.rounds
+        ));
+    }
+    if tcp_rounds.len() != reference.metrics.records.len() {
+        return Err(format!(
+            "round-count mismatch: TCP {} vs loopback {}",
+            tcp_rounds.len(),
+            reference.metrics.records.len()
+        ));
+    }
+    println!("round  tcp-up  loop-up  tcp-down  loop-down");
+    let mut ok = true;
+    for (i, (rec, &(up, down))) in
+        reference.metrics.records.iter().zip(&tcp_rounds).enumerate()
+    {
+        let row_ok = rec.bytes_up == up && rec.bytes_down == down;
+        ok &= row_ok;
+        println!(
+            "{:>5}  {:>6}  {:>7}  {:>8}  {:>9}  {}",
+            i,
+            up,
+            rec.bytes_up,
+            down,
+            rec.bytes_down,
+            if row_ok { "ok" } else { "MISMATCH" }
+        );
+    }
+    if !ok {
+        return Err("TCP and loopback sessions disagree on wire bytes".into());
+    }
+    println!(
+        "PARITY OK: {} rounds, {} devices — TCP wire bytes identical to the \
+         in-process loopback run",
+        tcp_rounds.len(),
+        cfg.devices
+    );
+    Ok(())
+}

@@ -131,6 +131,87 @@ impl ExperimentConfig {
         }
     }
 
+    /// The uplink (activations) codec for device `device`. The compressing
+    /// instance lives on the device; the server builds an identical twin to
+    /// decompress (the wire envelopes are self-describing).
+    pub fn uplink_codec(&self, channels: usize, device: usize)
+                        -> Result<Box<dyn codecs::Codec>, String> {
+        self.build_codec(channels, (device as u64) * 2)
+    }
+
+    /// The downlink (gradients) codec for device `device`. When gradient
+    /// compression is off this is [`codecs::identity::IdentityCodec`], so
+    /// the uncompressed path still pays the payload envelope header and the
+    /// "communication overhead" axis stays comparable across configs.
+    pub fn downlink_codec(&self, channels: usize, device: usize)
+                          -> Result<Box<dyn codecs::Codec>, String> {
+        if self.compress_gradients {
+            self.build_codec(channels, (device as u64) * 2 + 1)
+        } else {
+            Ok(Box::new(codecs::identity::IdentityCodec::new()))
+        }
+    }
+
+    /// Project this experiment onto the shape a transport server session
+    /// enforces. `eval_batch` comes from the model geometry (the artifact
+    /// manifest's batch, or the mock batch).
+    pub fn serve_config(&self, eval_batch: usize) -> crate::transport::server::ServeConfig {
+        crate::transport::server::ServeConfig {
+            devices: self.devices,
+            rounds: self.rounds,
+            lr: self.lr,
+            eval_every: self.eval_every,
+            client_agg_every: self.client_agg_every,
+            target_accuracy: self.target_accuracy,
+            compress_gradients: self.compress_gradients,
+            label: self.codec.label(),
+            eval_batch,
+            config_fp: self.fingerprint(),
+        }
+    }
+
+    /// Whether the AOT artifacts for this config exist on disk (if not,
+    /// only `--mock` transport sessions can run).
+    pub fn have_artifacts(&self) -> bool {
+        self.artifacts_dir().join("manifest.json").exists()
+    }
+
+    /// Stable 64-bit digest of every field that changes a session's
+    /// numerics or byte accounting. The transport Hello carries it so a
+    /// `slacc device` launched with different flags than the server (lr,
+    /// seed, dataset sizes, partition, codec parameters, ...) is rejected
+    /// at handshake instead of silently corrupting the run. FNV-1a over a
+    /// canonical string, so it is identical across processes and builds.
+    pub fn fingerprint(&self) -> u64 {
+        let repr = format!(
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}",
+            self.dataset,
+            self.seed,
+            self.lr.to_bits(),
+            self.train_n,
+            self.test_n,
+            self.devices,
+            self.rounds,
+            self.eval_every,
+            self.client_agg_every,
+            self.compress_gradients,
+            self.entropy_via_kernel,
+            self.partition.label(),
+            self.codec.label(),
+            self.slacc.groups,
+            self.slacc.history_window,
+            self.slacc.b_min,
+            self.slacc.b_max,
+            self.alpha,
+        );
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in repr.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
     /// The fleet's network simulator.
     pub fn network(&self) -> crate::net::NetworkSim {
         if self.device_speeds.is_empty() {
@@ -218,6 +299,52 @@ mod tests {
         c.alpha = Some(AlphaSchedule::Fixed(0.25));
         let codec = c.build_codec(8, 0).unwrap();
         assert_eq!(codec.name(), "slacc"); // built without panic
+    }
+
+    #[test]
+    fn downlink_codec_is_identity_when_uncompressed() {
+        let mut c = ExperimentConfig::default_for("ham");
+        assert_eq!(c.downlink_codec(8, 0).unwrap().name(), "slacc");
+        c.compress_gradients = false;
+        assert_eq!(c.downlink_codec(8, 0).unwrap().name(), "identity");
+        // uplink is unaffected by the gradient-compression switch
+        assert_eq!(c.uplink_codec(8, 0).unwrap().name(), "slacc");
+    }
+
+    #[test]
+    fn serve_config_projection() {
+        let mut c = ExperimentConfig::default_for("ham");
+        c.devices = 4;
+        c.rounds = 3;
+        let s = c.serve_config(32);
+        assert_eq!(s.devices, 4);
+        assert_eq!(s.rounds, 3);
+        assert_eq!(s.eval_batch, 32);
+        assert_eq!(s.label, "slacc");
+        assert_eq!(s.config_fp, c.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_tracks_numerics_affecting_flags() {
+        let a = ExperimentConfig::default_for("ham");
+        assert_eq!(a.fingerprint(), ExperimentConfig::default_for("ham").fingerprint());
+
+        let mut b = ExperimentConfig::default_for("ham");
+        b.lr = 0.1;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+
+        let mut b = ExperimentConfig::default_for("ham");
+        b.seed = 1;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+
+        let mut b = ExperimentConfig::default_for("ham");
+        b.partition = Partition::Dirichlet { beta: 0.5 };
+        assert_ne!(a.fingerprint(), b.fingerprint());
+
+        // artifacts location is deployment detail, not numerics
+        let mut b = ExperimentConfig::default_for("ham");
+        b.artifacts_root = "elsewhere".into();
+        assert_eq!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

@@ -31,29 +31,37 @@ impl DeviceState {
     }
 }
 
-/// FedAvg: weighted average of every device's client sub-model, written
-/// back to all devices (paper workflow step iv + SFL aggregation).
-pub fn fedavg_clients(devices: &mut [DeviceState], weights: &[f64]) {
-    assert_eq!(devices.len(), weights.len());
-    assert!(!devices.is_empty());
+/// FedAvg over parameter sets: the weighted average of `sets[d]`, device
+/// order preserved so the f32 accumulation is reproducible wherever the
+/// aggregation runs (in-process trainer or the transport server runtime).
+pub fn fedavg_params(sets: &[&[Tensor]], weights: &[f64]) -> Vec<Tensor> {
+    assert_eq!(sets.len(), weights.len());
+    assert!(!sets.is_empty());
     let wsum: f64 = weights.iter().sum();
     assert!(wsum > 0.0);
-    let n_params = devices[0].client_params.len();
+    let n_params = sets[0].len();
 
-    let mut avg: Vec<Tensor> = devices[0]
-        .client_params
+    let mut avg: Vec<Tensor> = sets[0]
         .iter()
         .map(|t| Tensor::zeros(t.dims().to_vec()))
         .collect();
-    for (dev, &w) in devices.iter().zip(weights) {
-        assert_eq!(dev.client_params.len(), n_params);
+    for (set, &w) in sets.iter().zip(weights) {
+        assert_eq!(set.len(), n_params);
         let scale = (w / wsum) as f32;
-        for (acc, t) in avg.iter_mut().zip(&dev.client_params) {
+        for (acc, t) in avg.iter_mut().zip(set.iter()) {
             for (a, &x) in acc.data_mut().iter_mut().zip(t.data()) {
                 *a += scale * x;
             }
         }
     }
+    avg
+}
+
+/// FedAvg: weighted average of every device's client sub-model, written
+/// back to all devices (paper workflow step iv + SFL aggregation).
+pub fn fedavg_clients(devices: &mut [DeviceState], weights: &[f64]) {
+    let sets: Vec<&[Tensor]> = devices.iter().map(|d| d.client_params.as_slice()).collect();
+    let avg = fedavg_params(&sets, weights);
     for dev in devices.iter_mut() {
         dev.client_params = avg.clone();
     }

@@ -19,6 +19,21 @@ pub struct RoundRecord {
     pub wall_ms: f64,
 }
 
+/// Result of a completed training session (in-process or over a real
+/// transport — see [`crate::transport::server::ServerRuntime`]).
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub label: String,
+    pub metrics: MetricsLog,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    pub total_sim_time_s: f64,
+    pub total_bytes_up: usize,
+    pub total_bytes_down: usize,
+    pub time_to_target_s: Option<f64>,
+    pub rounds_run: usize,
+}
+
 /// Append-only metrics log for one run.
 #[derive(Debug, Clone, Default)]
 pub struct MetricsLog {

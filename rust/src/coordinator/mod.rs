@@ -1,10 +1,14 @@
 //! The split-learning coordinator — the L3 system contribution.
 //!
-//! * [`trainer`] — the end-to-end SFL round loop over the PJRT runtime.
+//! * [`trainer`] — the end-to-end SFL session over the PJRT runtime: N
+//!   in-process device workers wired to the server runtime through
+//!   deterministic loopback transports (see [`crate::transport`]; the
+//!   `slacc serve`/`slacc device` CLI runs the same protocol over TCP).
 //! * [`device`] — per-device state (client sub-model, loader, codecs) and
 //!   FedAvg aggregation.
 //! * [`server`] — the shared server sub-model state.
-//! * [`metrics`] — per-round records, accuracy curves, CSV/JSON export.
+//! * [`metrics`] — per-round records, accuracy curves, CSV/JSON export,
+//!   and the [`metrics::TrainReport`] a session returns.
 
 pub mod device;
 pub mod metrics;

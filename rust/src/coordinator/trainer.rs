@@ -14,65 +14,135 @@
 //!
 //! then client sub-models are FedAvg-aggregated (SFL semantics) and the
 //! network simulator converts the exact wire bytes into simulated time.
-//! Periodically the full model is evaluated on the test set through the
-//! `eval_logits` artifact.
+//!
+//! Since the transport subsystem landed, the round loop itself lives in
+//! [`ServerRuntime`] and [`DeviceWorker`] — this trainer wires N in-process
+//! device workers to the server runtime over deterministic loopback
+//! transports and pumps them on one thread. A `slacc serve` + N × `slacc
+//! device` deployment runs the *same* protocol code over TCP; given the
+//! same config and seed both produce identical per-round wire bytes.
 
-use std::time::Instant;
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
 
-use crate::codecs::RoundCtx;
 use crate::config::ExperimentConfig;
-use crate::coordinator::device::{fedavg_clients, DeviceState};
-use crate::coordinator::metrics::{MetricsLog, RoundRecord};
-use crate::coordinator::server::ServerState;
+use crate::coordinator::device::DeviceState;
+use crate::coordinator::metrics::MetricsLog;
+pub use crate::coordinator::metrics::TrainReport;
 use crate::data::loader::BatchLoader;
 use crate::data::{partition, Dataset};
-use crate::net::NetworkSim;
-use crate::net::timeline::Timeline;
-use crate::runtime::{Arg, Engine};
-use crate::tensor::Tensor;
+use crate::runtime::Engine;
+use crate::transport::compute::EngineCompute;
+use crate::transport::device::{pump, DeviceWorker};
+use crate::transport::server::{handshake, ServerRuntime};
+use crate::transport::{loopback, Transport};
 
-/// Result of a completed run.
-#[derive(Debug, Clone)]
-pub struct TrainReport {
-    pub label: String,
-    pub metrics: MetricsLog,
-    pub final_accuracy: f64,
-    pub best_accuracy: f64,
-    pub total_sim_time_s: f64,
-    pub total_bytes_up: usize,
-    pub total_bytes_down: usize,
-    pub time_to_target_s: Option<f64>,
-    pub rounds_run: usize,
+/// Shared geometry/init loaded from one engine's manifest.
+struct ModelGeom {
+    channels: usize,
+    batch: usize,
+    client_init: Vec<crate::tensor::Tensor>,
+    server_init: Vec<crate::tensor::Tensor>,
 }
 
+fn load_geom(engine: &Engine, train: &Dataset) -> Result<ModelGeom, String> {
+    let man = engine.manifest();
+    if train.channels != man.in_ch || train.classes != man.classes {
+        return Err(format!(
+            "dataset/model mismatch: data {}ch/{}cls vs manifest {}ch/{}cls",
+            train.channels, train.classes, man.in_ch, man.classes
+        ));
+    }
+    Ok(ModelGeom {
+        channels: man.cut.c,
+        batch: man.batch,
+        client_init: man.load_client_init()?,
+        server_init: man.load_server_init()?,
+    })
+}
+
+fn build_device_state(
+    cfg: &ExperimentConfig,
+    geom: &ModelGeom,
+    shard: &[usize],
+    d: usize,
+) -> Result<DeviceState, String> {
+    let loader = BatchLoader::new(shard, geom.batch, cfg.seed ^ ((d as u64) << 8));
+    Ok(DeviceState::new(
+        d,
+        geom.client_init.clone(),
+        loader,
+        cfg.uplink_codec(geom.channels, d)?,
+        cfg.downlink_codec(geom.channels, d)?,
+    ))
+}
+
+/// Build the PJRT-backed server runtime for a standalone `slacc serve`
+/// process (loads its own engine).
+pub fn engine_runtime(cfg: &ExperimentConfig) -> Result<ServerRuntime<EngineCompute>, String> {
+    cfg.validate()?;
+    let engine = Rc::new(RefCell::new(Engine::load(&cfg.artifacts_dir())?));
+    let (train, test) = Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+    let geom = load_geom(&engine.borrow(), &train)?;
+    let mut ups = Vec::with_capacity(cfg.devices);
+    let mut downs = Vec::with_capacity(cfg.devices);
+    for d in 0..cfg.devices {
+        ups.push(cfg.uplink_codec(geom.channels, d)?);
+        downs.push(cfg.downlink_codec(geom.channels, d)?);
+    }
+    ServerRuntime::new(
+        cfg.serve_config(geom.batch),
+        EngineCompute::new(engine, cfg.entropy_via_kernel),
+        geom.server_init,
+        ups,
+        downs,
+        Arc::new(test),
+        cfg.network(),
+    )
+}
+
+/// Build the PJRT-backed worker for a standalone `slacc device` process
+/// (loads its own engine; the shard split and codec streams match the
+/// in-process trainer exactly).
+pub fn engine_worker(
+    cfg: &ExperimentConfig,
+    id: usize,
+) -> Result<DeviceWorker<EngineCompute>, String> {
+    cfg.validate()?;
+    if id >= cfg.devices {
+        return Err(format!("device id {id} out of range (devices={})", cfg.devices));
+    }
+    let engine = Rc::new(RefCell::new(Engine::load(&cfg.artifacts_dir())?));
+    let (train, _) = Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+    let geom = load_geom(&engine.borrow(), &train)?;
+    let shards = partition::partition(&train, cfg.devices, cfg.partition, cfg.seed);
+    let state = build_device_state(cfg, &geom, shards.device(id), id)?;
+    Ok(DeviceWorker::new(
+        state,
+        EngineCompute::new(engine, cfg.entropy_via_kernel),
+        Arc::new(train),
+        cfg,
+    ))
+}
+
+/// The in-process trainer: one shared PJRT engine, N device workers, and
+/// the server runtime, connected by loopback transports.
 pub struct Trainer {
     cfg: ExperimentConfig,
-    engine: Engine,
-    train: Dataset,
-    test: Dataset,
-    devices: Vec<DeviceState>,
-    shard_sizes: Vec<f64>,
-    server: ServerState,
-    net: NetworkSim,
-    timeline: Timeline,
-    metrics: MetricsLog,
+    runtime: ServerRuntime<EngineCompute>,
+    workers: Vec<DeviceWorker<EngineCompute>>,
+    dev_conns: Vec<loopback::Loopback>,
+    srv_conns: Vec<Box<dyn Transport>>,
 }
 
 impl Trainer {
     pub fn new(cfg: ExperimentConfig) -> Result<Trainer, String> {
         cfg.validate()?;
-        let engine = Engine::load(&cfg.artifacts_dir())?;
-        let man = engine.manifest();
-        let channels = man.cut.c;
-
+        let engine = Rc::new(RefCell::new(Engine::load(&cfg.artifacts_dir())?));
         let (train, test) =
             Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
-        if train.channels != man.in_ch || train.classes != man.classes {
-            return Err(format!(
-                "dataset/model mismatch: data {}ch/{}cls vs manifest {}ch/{}cls",
-                train.channels, train.classes, man.in_ch, man.classes
-            ));
-        }
+        let geom = load_geom(&engine.borrow(), &train)?;
 
         let shards = partition::partition(&train, cfg.devices, cfg.partition, cfg.seed);
         crate::log_info!(
@@ -85,261 +155,64 @@ impl Trainer {
             partition::label_skew(&train, &shards)
         );
 
-        let client_init = man.load_client_init()?;
-        let server_init = man.load_server_init()?;
-
-        let mut devices = Vec::with_capacity(cfg.devices);
-        let mut shard_sizes = Vec::with_capacity(cfg.devices);
+        let train = Arc::new(train);
+        let mut workers = Vec::with_capacity(cfg.devices);
+        let mut dev_conns = Vec::with_capacity(cfg.devices);
+        let mut srv_conns: Vec<Box<dyn Transport>> = Vec::with_capacity(cfg.devices);
+        let mut ups = Vec::with_capacity(cfg.devices);
+        let mut downs = Vec::with_capacity(cfg.devices);
         for d in 0..cfg.devices {
-            let loader =
-                BatchLoader::new(shards.device(d), man.batch, cfg.seed ^ (d as u64) << 8);
-            let up = cfg.build_codec(channels, (d as u64) * 2)?;
-            let down = cfg.build_codec(channels, (d as u64) * 2 + 1)?;
-            shard_sizes.push(shards.device(d).len() as f64);
-            devices.push(DeviceState::new(d, client_init.clone(), loader, up, down));
+            let state = build_device_state(&cfg, &geom, shards.device(d), d)?;
+            workers.push(DeviceWorker::new(
+                state,
+                EngineCompute::new(engine.clone(), cfg.entropy_via_kernel),
+                train.clone(),
+                &cfg,
+            ));
+            let (dev_end, srv_end) = loopback::pair(&format!("dev{d}"));
+            dev_conns.push(dev_end);
+            srv_conns.push(Box::new(srv_end));
+            ups.push(cfg.uplink_codec(geom.channels, d)?);
+            downs.push(cfg.downlink_codec(geom.channels, d)?);
         }
 
-        let net = cfg.network();
-        Ok(Trainer {
-            cfg,
-            engine,
-            train,
-            test,
-            devices,
-            shard_sizes,
-            server: ServerState::new(server_init),
-            net,
-            timeline: Timeline::new(),
-            metrics: MetricsLog::new(),
-        })
+        let runtime = ServerRuntime::new(
+            cfg.serve_config(geom.batch),
+            EngineCompute::new(engine, cfg.entropy_via_kernel),
+            geom.server_init,
+            ups,
+            downs,
+            Arc::new(test),
+            cfg.network(),
+        )?;
+        Ok(Trainer { cfg, runtime, workers, dev_conns, srv_conns })
     }
 
     pub fn config(&self) -> &ExperimentConfig {
         &self.cfg
     }
 
-    pub fn engine(&self) -> &Engine {
-        &self.engine
-    }
-
     pub fn metrics(&self) -> &MetricsLog {
-        &self.metrics
+        self.runtime.metrics()
     }
 
-    /// Instantaneous per-channel entropy of smashed data, through the AOT
-    /// Pallas kernel (paper path) or the host mirror.
-    fn entropy_of(&mut self, acts: &Tensor) -> Result<Vec<f32>, String> {
-        if self.cfg.entropy_via_kernel {
-            let out = self
-                .engine
-                .execute("entropy", &[Arg::F32(acts.data(), acts.dims())])?;
-            Ok(out.into_iter().next().unwrap().into_data())
-        } else {
-            Ok(crate::entropy::shannon::entropies(&acts.to_channel_major()))
-        }
-    }
-
-    /// Run one global round. Returns (mean loss, per-device up/down bytes).
-    fn run_round(&mut self, round: usize) -> Result<(f64, Vec<usize>, Vec<usize>), String> {
-        let lr = self.cfg.lr;
-        let mut up_bytes = vec![0usize; self.devices.len()];
-        let mut down_bytes = vec![0usize; self.devices.len()];
-        let mut loss_sum = 0.0f64;
-
-        for d in 0..self.devices.len() {
-            // stage i: client forward
-            let batch_idx = self.devices[d].loader.next_batch();
-            let (x, y) = self.train.batch(&batch_idx);
-            let x_dims = [
-                batch_idx.len(),
-                self.train.channels,
-                self.train.height,
-                self.train.width,
-            ];
-            let mut args: Vec<Arg> = self.devices[d]
-                .client_params
-                .iter()
-                .map(|t| Arg::F32(t.data(), t.dims()))
-                .collect();
-            args.push(Arg::F32(&x, &x_dims));
-            let acts = self
-                .engine
-                .execute("client_fwd", &args)?
-                .into_iter()
-                .next()
-                .unwrap();
-
-            // stage ii: ACII (Pallas kernel) + uplink compression
-            let h_inst = self.entropy_of(&acts)?;
-            let acts_cm = acts.to_channel_major();
-            let wire_up = self.devices[d]
-                .up_codec
-                .compress(&acts_cm, RoundCtx { entropy: Some(&h_inst) });
-            up_bytes[d] = wire_up.len();
-            let acts_hat = self.devices[d].up_codec.decompress(&wire_up)?;
-
-            // stage iii: server fwd+bwd+SGD
-            let y_dims = [y.len()];
-            let mut args: Vec<Arg> = self
-                .server
-                .server_params
-                .iter()
-                .map(|t| Arg::F32(t.data(), t.dims()))
-                .collect();
-            args.push(Arg::F32(acts_hat.data(), acts_hat.dims()));
-            args.push(Arg::I32(&y, &y_dims));
-            args.push(Arg::ScalarF32(lr));
-            let mut out = self.engine.execute("server_step", &args)?;
-            let new_sp = out.split_off(2);
-            let g_acts = out.pop().unwrap();
-            let loss = out.pop().unwrap().data()[0] as f64;
-            if !loss.is_finite() {
-                return Err(format!("round {round} device {d}: loss diverged ({loss})"));
-            }
-            loss_sum += loss;
-            self.server.update(new_sp);
-
-            // stage iv: downlink gradient compression + client backward
-            let g_hat = if self.cfg.compress_gradients {
-                let g_ent = self.entropy_of(&g_acts)?;
-                let g_cm = g_acts.to_channel_major();
-                let wire_down = self.devices[d]
-                    .down_codec
-                    .compress(&g_cm, RoundCtx { entropy: Some(&g_ent) });
-                down_bytes[d] = wire_down.len();
-                self.devices[d].down_codec.decompress(&wire_down)?
-            } else {
-                down_bytes[d] = g_acts.len() * 4;
-                g_acts
-            };
-
-            let mut args: Vec<Arg> = self.devices[d]
-                .client_params
-                .iter()
-                .map(|t| Arg::F32(t.data(), t.dims()))
-                .collect();
-            args.push(Arg::F32(&x, &x_dims));
-            args.push(Arg::F32(g_hat.data(), g_hat.dims()));
-            args.push(Arg::ScalarF32(lr));
-            let new_cp = self.engine.execute("client_bwd", &args)?;
-            self.devices[d].client_params = new_cp;
-        }
-
-        // SFL aggregation of client sub-models
-        if (round + 1) % self.cfg.client_agg_every == 0 {
-            fedavg_clients(&mut self.devices, &self.shard_sizes);
-        }
-
-        Ok((loss_sum / self.devices.len() as f64, up_bytes, down_bytes))
-    }
-
-    /// Test accuracy of the aggregated model over the test set.
+    /// Test accuracy of the current model (device 0's client sub-model +
+    /// the server sub-model), without training.
     pub fn evaluate(&mut self) -> Result<f64, String> {
-        let batch = self.engine.manifest().batch;
-        let n_batches = self.test.len() / batch;
-        if n_batches == 0 {
-            return Err("test set smaller than one batch".into());
-        }
-        let mut correct = 0usize;
-        let mut total = 0usize;
-        for bi in 0..n_batches {
-            let idx: Vec<usize> = (bi * batch..(bi + 1) * batch).collect();
-            let (x, y) = self.test.batch(&idx);
-            let x_dims = [batch, self.test.channels, self.test.height, self.test.width];
-            let mut args: Vec<Arg> = self.devices[0]
-                .client_params
-                .iter()
-                .map(|t| Arg::F32(t.data(), t.dims()))
-                .collect();
-            for t in &self.server.server_params {
-                args.push(Arg::F32(t.data(), t.dims()));
-            }
-            args.push(Arg::F32(&x, &x_dims));
-            let logits = self
-                .engine
-                .execute("eval_logits", &args)?
-                .into_iter()
-                .next()
-                .unwrap();
-            let classes = self.test.classes;
-            for (i, &label) in y.iter().enumerate() {
-                let row = &logits.data()[i * classes..(i + 1) * classes];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
-                if pred == label as usize {
-                    correct += 1;
-                }
-                total += 1;
-            }
-        }
-        Ok(correct as f64 / total as f64)
+        self.runtime.evaluate_with(self.workers[0].client_params())
     }
 
     /// Run the configured number of rounds (early-stopping at the target
     /// accuracy if one is set) and return the report.
     pub fn run(&mut self) -> Result<TrainReport, String> {
-        let label = self.cfg.codec.label();
-        let mut time_to_target = None;
-        let mut rounds_run = 0;
-
-        for round in 0..self.cfg.rounds {
-            let wall = Instant::now();
-            let (loss, up, down) = self.run_round(round)?;
-            let cost = self.net.round_cost(&up, &down);
-            self.timeline.push(cost);
-            rounds_run = round + 1;
-
-            let accuracy = if (round + 1) % self.cfg.eval_every == 0
-                || round + 1 == self.cfg.rounds
-            {
-                Some(self.evaluate()?)
-            } else {
-                None
-            };
-
-            let rec = RoundRecord {
-                round,
-                loss,
-                accuracy,
-                bytes_up: cost.bytes_up,
-                bytes_down: cost.bytes_down,
-                sim_time_s: self.timeline.total_time(),
-                wall_ms: wall.elapsed().as_secs_f64() * 1e3,
-            };
-            if let Some(acc) = accuracy {
-                crate::log_info!(
-                    "[{label}] round {round}: loss {loss:.4} acc {:.2}% sim_t {:.1}s",
-                    acc * 100.0,
-                    rec.sim_time_s
-                );
-                if let Some(target) = self.cfg.target_accuracy {
-                    if acc >= target && time_to_target.is_none() {
-                        time_to_target = Some(rec.sim_time_s);
-                        self.metrics.push(rec);
-                        break;
-                    }
-                }
-            } else {
-                crate::log_debug!("[{label}] round {round}: loss {loss:.4}");
-            }
-            self.metrics.push(rec);
+        let Trainer { runtime, workers, dev_conns, srv_conns, .. } = self;
+        if srv_conns.is_empty() {
+            return Err("trainer session already consumed (run() is one-shot)".into());
         }
-
-        let (bytes_up, bytes_down) = self.metrics.total_bytes();
-        Ok(TrainReport {
-            label,
-            final_accuracy: self.metrics.final_accuracy().unwrap_or(0.0),
-            best_accuracy: self.metrics.best_accuracy().unwrap_or(0.0),
-            total_sim_time_s: self.timeline.total_time(),
-            total_bytes_up: bytes_up,
-            total_bytes_down: bytes_down,
-            time_to_target_s: time_to_target,
-            rounds_run,
-            metrics: std::mem::take(&mut self.metrics),
-        })
+        for (w, c) in workers.iter().zip(dev_conns.iter_mut()) {
+            c.send(&w.hello())?;
+        }
+        let (mut conns, hellos) = handshake(std::mem::take(srv_conns), runtime.devices())?;
+        runtime.serve(&mut conns, &hellos, |d| pump(&mut workers[d], &mut dev_conns[d]))
     }
 }

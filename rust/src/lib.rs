@@ -8,7 +8,8 @@
 //!
 //! * **L3 (this crate)** — the split-learning coordinator: device fleet,
 //!   round orchestration, the SL-ACC codec (ACII + CGC) and all baseline
-//!   codecs, the network simulator, datasets, and metrics.
+//!   codecs, the framed wire [`transport`] (loopback + TCP), the network
+//!   simulator, datasets, and metrics.
 //! * **L2 (python/compile/model.py)** — the split GN-ResNet in JAX, AOT
 //!   lowered to HLO text once at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the per-round
@@ -29,4 +30,5 @@ pub mod net;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;
+pub mod transport;
 pub mod util;

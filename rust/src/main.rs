@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train     run a full SL training experiment (the default)
+//!   serve     run the SL server over TCP and wait for device workers
+//!   device    run one edge-device worker against a remote server
 //!   eval      load artifacts + init params and report test accuracy
 //!   inspect   one round of ACII+CGC diagnostics on real activations
 //!   codecs    offline codec comparison on synthetic smashed data
@@ -9,15 +11,32 @@
 //! Examples:
 //!   slacc train --dataset ham --codec slacc --rounds 300 --devices 5
 //!   slacc train --dataset mnist --codec powerquant --noniid --beta 0.5
+//!   slacc serve --devices 4 --rounds 50 --bind 127.0.0.1:7878
+//!   slacc device --id 0 --devices 4 --rounds 50 --connect 127.0.0.1:7878
 //!   slacc inspect --dataset ham
 //!   slacc codecs
+//!
+//! `serve`/`device` must be launched with the same dataset/codec/seed
+//! flags — the Hello handshake rejects mismatched fleets. With `--mock`
+//! (or when AOT artifacts are missing) the session runs the real codecs
+//! and wire protocol over a deterministic mock model, which is enough to
+//! measure communication behavior without PJRT.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
 
 use slacc::cli::Args;
 use slacc::codecs::{self, RoundCtx};
 use slacc::config::{CodecChoice, ExperimentConfig};
-use slacc::coordinator::trainer::Trainer;
+use slacc::coordinator::trainer::{engine_runtime, engine_worker, TrainReport, Trainer};
 use slacc::data::partition::Partition;
+use slacc::data::Dataset;
 use slacc::entropy::AlphaSchedule;
+use slacc::transport::device::{mock_worker, run_blocking};
+use slacc::transport::server::{accept_and_serve, mock_runtime};
+use slacc::transport::tcp::TcpTransport;
+use slacc::transport::Transport;
 use slacc::util::logging;
 
 fn main() {
@@ -35,6 +54,8 @@ fn main() {
     }
     let result = match sub.as_str() {
         "train" => cmd_train(args),
+        "serve" => cmd_serve(args),
+        "device" => cmd_device(args),
         "eval" => cmd_eval(args),
         "inspect" => cmd_inspect(args),
         "codecs" => cmd_codecs(args),
@@ -53,7 +74,7 @@ fn main() {
 fn print_help() {
     println!(
         "slacc — SL-ACC split learning framework\n\n\
-         USAGE: slacc [train|eval|inspect|codecs] [--flags]\n\n\
+         USAGE: slacc [train|serve|device|eval|inspect|codecs] [--flags]\n\n\
          train flags:\n\
            --dataset ham|mnist     model/dataset config    [ham]\n\
            --codec NAME            {:?}\n\
@@ -78,6 +99,13 @@ fn print_help() {
            --csv PATH              write per-round metrics CSV\n\
            --no-grad-compress      leave downlink gradients uncompressed\n\
            --host-entropy          host entropy instead of the Pallas kernel\n\
+         serve flags (train flags plus):\n\
+           --bind ADDR             listen address          [127.0.0.1:7878]\n\
+           --mock                  mock model (no PJRT artifacts needed)\n\
+         device flags (train flags plus):\n\
+           --id N                  this device's slot in 0..devices (required)\n\
+           --connect ADDR          server address          [127.0.0.1:7878]\n\
+           --mock                  mock model (must match the server)\n\
          common:\n\
            --log-level error|warn|info|debug|trace",
         codecs::ALL_CODECS
@@ -140,14 +168,7 @@ fn config_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
     Ok(cfg)
 }
 
-fn cmd_train(mut args: Args) -> Result<(), String> {
-    let cfg = config_from_args(&mut args)?;
-    let csv = args.str_opt("csv");
-    args.finish()?;
-
-    let mut trainer = Trainer::new(cfg)?;
-    let report = trainer.run()?;
-
+fn print_report(report: &TrainReport, csv: Option<String>) -> Result<(), String> {
     println!("\n=== training report: {} ===", report.label);
     println!("rounds run        : {}", report.rounds_run);
     println!("final accuracy    : {:.2}%", report.final_accuracy * 100.0);
@@ -165,6 +186,91 @@ fn cmd_train(mut args: Args) -> Result<(), String> {
         report.metrics.write_csv(std::path::Path::new(&path))?;
         println!("metrics CSV       : {path}");
     }
+    Ok(())
+}
+
+fn cmd_train(mut args: Args) -> Result<(), String> {
+    let cfg = config_from_args(&mut args)?;
+    let csv = args.str_opt("csv");
+    args.finish()?;
+
+    let mut trainer = Trainer::new(cfg)?;
+    let report = trainer.run()?;
+    print_report(&report, csv)
+}
+
+/// Decide engine vs mock compute for a transport role.
+fn use_mock(cfg: &ExperimentConfig, mock_flag: bool) -> Result<bool, String> {
+    if mock_flag {
+        return Ok(true);
+    }
+    if cfg.have_artifacts() {
+        return Ok(false);
+    }
+    Err(format!(
+        "no AOT artifacts under {} — run `make artifacts`, point --artifacts at \
+         them, or pass --mock for an engine-free protocol session",
+        cfg.artifacts_dir().display()
+    ))
+}
+
+fn cmd_serve(mut args: Args) -> Result<(), String> {
+    let cfg = config_from_args(&mut args)?;
+    let bind = args.str_or("bind", "127.0.0.1:7878");
+    let mock = args.bool_or("mock", false);
+    let csv = args.str_opt("csv");
+    args.finish()?;
+    cfg.validate()?;
+
+    let mock = use_mock(&cfg, mock)?;
+    let listener =
+        TcpListener::bind(&bind).map_err(|e| format!("bind {bind}: {e}"))?;
+    let addr = listener.local_addr().map_err(|e| e.to_string())?;
+    println!(
+        "slacc serve: listening on {addr}, waiting for {} device(s) [codec={}, mock={mock}]",
+        cfg.devices,
+        cfg.codec.label(),
+    );
+
+    let report = if mock {
+        let (_, test) =
+            Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+        let mut rt = mock_runtime(&cfg, Arc::new(test))?;
+        accept_and_serve(&mut rt, &listener)?
+    } else {
+        let mut rt = engine_runtime(&cfg)?;
+        accept_and_serve(&mut rt, &listener)?
+    };
+    print_report(&report, csv)
+}
+
+fn cmd_device(mut args: Args) -> Result<(), String> {
+    let cfg = config_from_args(&mut args)?;
+    let id = args.usize_or("id", usize::MAX);
+    let connect = args.str_or("connect", "127.0.0.1:7878");
+    let mock = args.bool_or("mock", false);
+    args.finish()?;
+    cfg.validate()?;
+    if id == usize::MAX {
+        return Err("--id is required (this device's slot in 0..devices)".into());
+    }
+
+    let mut conn =
+        TcpTransport::connect_retry(&connect, 40, Duration::from_millis(250))?;
+    if use_mock(&cfg, mock)? {
+        let (train, _) =
+            Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+        let mut worker = mock_worker(&cfg, Arc::new(train), id)?;
+        run_blocking(&mut worker, &mut conn)?;
+    } else {
+        let mut worker = engine_worker(&cfg, id)?;
+        run_blocking(&mut worker, &mut conn)?;
+    }
+    let stats = conn.stats();
+    println!(
+        "device {id}: session complete ({} frames / {} bytes sent, {} frames / {} bytes received)",
+        stats.frames_sent, stats.bytes_sent, stats.frames_recv, stats.bytes_recv
+    );
     Ok(())
 }
 

@@ -12,6 +12,15 @@
 //! DDP emulation). Link and compute parameters default to a WiFi-class
 //! edge deployment and are per-device configurable for heterogeneity
 //! experiments.
+//!
+//! The byte counts fed in here are *measured*, not modeled: they are the
+//! codec payload envelopes that [`crate::transport`] carries — over
+//! in-process loopback queues in simulated runs, over real TCP sockets in
+//! `slacc serve`/`slacc device` deployments. Both transports report
+//! identical envelope bytes for the same config and seed; frame headers
+//! and handshake/sync traffic are tracked separately per connection
+//! ([`crate::transport::WireStats`]) and deliberately excluded from the
+//! paper's "communication overhead" axis.
 
 pub mod timeline;
 
@@ -95,6 +104,13 @@ pub struct RoundCost {
     pub bytes_up: usize,
     pub bytes_down: usize,
     pub time_s: f64,
+}
+
+impl RoundCost {
+    /// Total smashed-data bytes this round, both directions.
+    pub fn total_bytes(&self) -> usize {
+        self.bytes_up + self.bytes_down
+    }
 }
 
 impl NetworkSim {

@@ -47,6 +47,10 @@ impl ByteWriter {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
     pub fn f32(&mut self, v: f32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -110,6 +114,10 @@ impl<'a> ByteReader<'a> {
 
     pub fn u32(&mut self) -> Result<u32, String> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     pub fn f32(&mut self) -> Result<f32, String> {
@@ -199,6 +207,7 @@ mod tests {
         w.u8(7);
         w.u16(0xbeef);
         w.u32(0xdead_beef);
+        w.u64(0x0123_4567_89ab_cdef);
         w.f32(-1.5);
         w.f32s(&[1.0, 2.0]);
         w.bytes(&[9, 9]);
@@ -207,6 +216,7 @@ mod tests {
         assert_eq!(r.u8().unwrap(), 7);
         assert_eq!(r.u16().unwrap(), 0xbeef);
         assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), 0x0123_4567_89ab_cdef);
         assert_eq!(r.f32().unwrap(), -1.5);
         assert_eq!(r.f32s(2).unwrap(), vec![1.0, 2.0]);
         assert_eq!(r.bytes(2).unwrap(), &[9, 9]);

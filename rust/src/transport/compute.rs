@@ -1,0 +1,355 @@
+//! The model-execution boundary of the round loop.
+//!
+//! [`DeviceWorker`](super::device::DeviceWorker) and
+//! [`ServerRuntime`](super::server::ServerRuntime) never call PJRT
+//! directly; they go through [`Compute`], with two implementations:
+//!
+//! * [`EngineCompute`] — the real path: the AOT artifacts through
+//!   [`crate::runtime::Engine`]. `Rc<RefCell<_>>` lets the in-process
+//!   trainer share one compiled engine between the server runtime and all
+//!   device workers (PJRT objects never cross threads).
+//! * [`MockCompute`] — a deterministic, engine-free stand-in used by the
+//!   transport tests, the `--mock` CLI flag, and `examples/distributed.rs`
+//!   when artifacts are absent. It produces shaped, channel-varying
+//!   activations so the real codecs and the wire protocol are exercised
+//!   end-to-end; only the model math is fake.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::runtime::{Arg, Engine};
+use crate::tensor::Tensor;
+
+/// Result of one server training step (stage iii).
+pub struct StepOut {
+    pub loss: f64,
+    pub g_acts: Tensor,
+    pub new_params: Vec<Tensor>,
+}
+
+/// Model execution for the four round-loop stages plus evaluation.
+pub trait Compute {
+    /// Short tag naming the execution backend ("engine" / "mock"); folded
+    /// into the session fingerprint so an engine server rejects mock
+    /// devices and vice versa.
+    fn kind(&self) -> &'static str;
+
+    /// Stage i: client sub-model forward → cut-layer activations.
+    fn client_fwd(
+        &mut self,
+        params: &[Tensor],
+        x: &[f32],
+        x_dims: &[usize],
+    ) -> Result<Tensor, String>;
+
+    /// Stage iv: client backward + SGD → new client params.
+    fn client_bwd(
+        &mut self,
+        params: &[Tensor],
+        x: &[f32],
+        x_dims: &[usize],
+        g: &Tensor,
+        lr: f32,
+    ) -> Result<Vec<Tensor>, String>;
+
+    /// Stage iii: server forward+backward+SGD on (decompressed) smashed data.
+    fn server_step(
+        &mut self,
+        params: &[Tensor],
+        acts: &Tensor,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<StepOut, String>;
+
+    /// Per-channel ACII entropy of a smashed-data tensor.
+    fn entropy(&mut self, t: &Tensor) -> Result<Vec<f32>, String>;
+
+    /// Full-model logits for test evaluation.
+    fn eval_logits(
+        &mut self,
+        client: &[Tensor],
+        server: &[Tensor],
+        x: &[f32],
+        x_dims: &[usize],
+    ) -> Result<Tensor, String>;
+}
+
+/// The real PJRT-backed compute path.
+pub struct EngineCompute {
+    engine: Rc<RefCell<Engine>>,
+    entropy_via_kernel: bool,
+}
+
+impl EngineCompute {
+    pub fn new(engine: Rc<RefCell<Engine>>, entropy_via_kernel: bool) -> EngineCompute {
+        EngineCompute { engine, entropy_via_kernel }
+    }
+
+    pub fn engine(&self) -> Rc<RefCell<Engine>> {
+        self.engine.clone()
+    }
+}
+
+fn param_args(params: &[Tensor]) -> Vec<Arg<'_>> {
+    params.iter().map(|t| Arg::F32(t.data(), t.dims())).collect()
+}
+
+impl Compute for EngineCompute {
+    fn kind(&self) -> &'static str {
+        "engine"
+    }
+
+    fn client_fwd(
+        &mut self,
+        params: &[Tensor],
+        x: &[f32],
+        x_dims: &[usize],
+    ) -> Result<Tensor, String> {
+        let mut args = param_args(params);
+        args.push(Arg::F32(x, x_dims));
+        let out = self.engine.borrow_mut().execute("client_fwd", &args)?;
+        out.into_iter().next().ok_or_else(|| "client_fwd returned no output".into())
+    }
+
+    fn client_bwd(
+        &mut self,
+        params: &[Tensor],
+        x: &[f32],
+        x_dims: &[usize],
+        g: &Tensor,
+        lr: f32,
+    ) -> Result<Vec<Tensor>, String> {
+        let mut args = param_args(params);
+        args.push(Arg::F32(x, x_dims));
+        args.push(Arg::F32(g.data(), g.dims()));
+        args.push(Arg::ScalarF32(lr));
+        self.engine.borrow_mut().execute("client_bwd", &args)
+    }
+
+    fn server_step(
+        &mut self,
+        params: &[Tensor],
+        acts: &Tensor,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<StepOut, String> {
+        let y_dims = [y.len()];
+        let mut args = param_args(params);
+        args.push(Arg::F32(acts.data(), acts.dims()));
+        args.push(Arg::I32(y, &y_dims));
+        args.push(Arg::ScalarF32(lr));
+        let mut out = self.engine.borrow_mut().execute("server_step", &args)?;
+        if out.len() < 2 {
+            return Err(format!("server_step returned {} outputs, need >= 2", out.len()));
+        }
+        let new_params = out.split_off(2);
+        let g_acts = out.pop().unwrap();
+        let loss = out.pop().unwrap().data()[0] as f64;
+        Ok(StepOut { loss, g_acts, new_params })
+    }
+
+    fn entropy(&mut self, t: &Tensor) -> Result<Vec<f32>, String> {
+        if self.entropy_via_kernel {
+            let out = self
+                .engine
+                .borrow_mut()
+                .execute("entropy", &[Arg::F32(t.data(), t.dims())])?;
+            Ok(out
+                .into_iter()
+                .next()
+                .ok_or("entropy kernel returned no output")?
+                .into_data())
+        } else {
+            Ok(crate::entropy::shannon::entropies(&t.to_channel_major()))
+        }
+    }
+
+    fn eval_logits(
+        &mut self,
+        client: &[Tensor],
+        server: &[Tensor],
+        x: &[f32],
+        x_dims: &[usize],
+    ) -> Result<Tensor, String> {
+        let mut args = param_args(client);
+        args.extend(param_args(server));
+        args.push(Arg::F32(x, x_dims));
+        let out = self.engine.borrow_mut().execute("eval_logits", &args)?;
+        out.into_iter().next().ok_or_else(|| "eval_logits returned no output".into())
+    }
+}
+
+/// Cut-layer shape (C, H, W) the mock model emits.
+pub const MOCK_CUT: (usize, usize, usize) = (8, 4, 4);
+/// Batch size mock sessions run with.
+pub const MOCK_BATCH: usize = 8;
+
+/// Initial "client sub-model" for mock sessions: one scalar-ish parameter.
+pub fn mock_client_init() -> Vec<Tensor> {
+    vec![Tensor::new(vec![2], vec![1.0, 0.5])]
+}
+
+/// Initial "server sub-model" for mock sessions.
+pub fn mock_server_init() -> Vec<Tensor> {
+    vec![Tensor::new(vec![2], vec![0.25, -0.25])]
+}
+
+/// Deterministic engine-free compute (see module docs). All math is simple
+/// elementwise arithmetic, so two processes with the same inputs produce
+/// bit-identical activations, gradients, and therefore wire bytes.
+pub struct MockCompute {
+    classes: usize,
+}
+
+impl MockCompute {
+    pub fn new(classes: usize) -> MockCompute {
+        assert!(classes >= 1);
+        MockCompute { classes }
+    }
+}
+
+fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f32>() / xs.len() as f32
+    }
+}
+
+impl Compute for MockCompute {
+    fn kind(&self) -> &'static str {
+        "mock"
+    }
+
+    fn client_fwd(
+        &mut self,
+        params: &[Tensor],
+        x: &[f32],
+        x_dims: &[usize],
+    ) -> Result<Tensor, String> {
+        if x_dims.len() != 4 {
+            return Err(format!("mock client_fwd wants NCHW input, got {x_dims:?}"));
+        }
+        let (b, ic, ih, iw) = (x_dims[0], x_dims[1], x_dims[2], x_dims[3]);
+        let p = params.first().map(|t| t.data()[0]).unwrap_or(1.0);
+        let (c, h, w) = MOCK_CUT;
+        let mut data = Vec::with_capacity(b * c * h * w);
+        for bi in 0..b {
+            for ci in 0..c {
+                for hi in 0..h {
+                    for wi in 0..w {
+                        let src =
+                            ((bi * ic + ci % ic) * ih + hi % ih) * iw + wi % iw;
+                        let gain = 1.0 + 0.11 * ci as f32;
+                        data.push((p * x[src] * gain).max(0.0));
+                    }
+                }
+            }
+        }
+        Ok(Tensor::new(vec![b, c, h, w], data))
+    }
+
+    fn client_bwd(
+        &mut self,
+        params: &[Tensor],
+        _x: &[f32],
+        _x_dims: &[usize],
+        g: &Tensor,
+        lr: f32,
+    ) -> Result<Vec<Tensor>, String> {
+        let step = lr * mean(g.data());
+        Ok(params
+            .iter()
+            .map(|t| {
+                let data = t.data().iter().map(|&v| v - step).collect();
+                Tensor::new(t.dims().to_vec(), data)
+            })
+            .collect())
+    }
+
+    fn server_step(
+        &mut self,
+        params: &[Tensor],
+        acts: &Tensor,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<StepOut, String> {
+        if y.is_empty() {
+            return Err("mock server_step: empty labels".into());
+        }
+        let m2 = acts.data().iter().map(|&v| (v * v) as f64).sum::<f64>()
+            / acts.len().max(1) as f64;
+        let loss = m2 + 0.01 * params.first().map(|t| t.data()[0].abs() as f64).unwrap_or(0.0);
+        let g_data: Vec<f32> = acts.data().iter().map(|&v| 0.3 * v - 0.01).collect();
+        let g_acts = Tensor::new(acts.dims().to_vec(), g_data);
+        let step = lr * loss as f32;
+        let new_params = params
+            .iter()
+            .map(|t| {
+                let data = t.data().iter().map(|&v| v - step * 0.1).collect();
+                Tensor::new(t.dims().to_vec(), data)
+            })
+            .collect();
+        Ok(StepOut { loss, g_acts, new_params })
+    }
+
+    fn entropy(&mut self, t: &Tensor) -> Result<Vec<f32>, String> {
+        Ok(crate::entropy::shannon::entropies(&t.to_channel_major()))
+    }
+
+    fn eval_logits(
+        &mut self,
+        client: &[Tensor],
+        _server: &[Tensor],
+        x: &[f32],
+        x_dims: &[usize],
+    ) -> Result<Tensor, String> {
+        let b = *x_dims.first().unwrap_or(&1);
+        let p = client.first().map(|t| t.data()[0]).unwrap_or(1.0);
+        let per = x.len() / b.max(1);
+        let mut data = Vec::with_capacity(b * self.classes);
+        for bi in 0..b {
+            let xm = mean(&x[bi * per..(bi + 1) * per]);
+            for k in 0..self.classes {
+                data.push(p * xm + 0.1 * k as f32);
+            }
+        }
+        Ok(Tensor::new(vec![b, self.classes], data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_is_deterministic_and_shaped() {
+        let mut m = MockCompute::new(7);
+        let params = mock_client_init();
+        let x: Vec<f32> = (0..2 * 3 * 5 * 5).map(|i| (i % 13) as f32 * 0.1).collect();
+        let dims = [2usize, 3, 5, 5];
+        let a1 = m.client_fwd(&params, &x, &dims).unwrap();
+        let a2 = m.client_fwd(&params, &x, &dims).unwrap();
+        assert_eq!(a1, a2);
+        assert_eq!(a1.dims(), &[2, MOCK_CUT.0, MOCK_CUT.1, MOCK_CUT.2]);
+
+        let StepOut { loss, g_acts, new_params } = m
+            .server_step(&mock_server_init(), &a1, &[0, 1], 1e-2)
+            .unwrap();
+        assert!(loss.is_finite());
+        assert_eq!(g_acts.dims(), a1.dims());
+        assert_eq!(new_params.len(), mock_server_init().len());
+
+        let np = m.client_bwd(&params, &x, &dims, &g_acts, 1e-2).unwrap();
+        assert_eq!(np.len(), params.len());
+        assert_ne!(np[0].data(), params[0].data());
+
+        let e = m.entropy(&a1).unwrap();
+        assert_eq!(e.len(), MOCK_CUT.0);
+
+        let logits = m
+            .eval_logits(&params, &mock_server_init(), &x, &dims)
+            .unwrap();
+        assert_eq!(logits.dims(), &[2, 7]);
+    }
+}

@@ -1,0 +1,257 @@
+//! Device-side protocol logic: stages i (client forward + uplink
+//! compression) and iv (downlink decompression + client backward) of the
+//! round loop, expressed as a message-driven state machine.
+//!
+//! [`DeviceWorker::handle`] consumes one server message and returns the
+//! replies to send; it is transport-agnostic, so the same worker runs
+//! behind an in-process loopback (pumped by the trainer) or a TCP
+//! connection in a separate `slacc device` process ([`run_blocking`]).
+
+use std::sync::Arc;
+
+use crate::codecs::RoundCtx;
+use crate::config::ExperimentConfig;
+use crate::coordinator::device::DeviceState;
+use crate::data::loader::BatchLoader;
+use crate::data::{partition, Dataset};
+
+use super::compute::{self, Compute, MockCompute};
+use super::proto::Message;
+use super::Transport;
+
+struct Pending {
+    round: u32,
+    x: Vec<f32>,
+    x_dims: [usize; 4],
+    sync: bool,
+}
+
+/// One edge device's half of an SL session.
+pub struct DeviceWorker<C: Compute> {
+    compute: C,
+    data: Arc<Dataset>,
+    state: DeviceState,
+    devices: usize,
+    rounds: usize,
+    lr: f32,
+    session_fp: u64,
+    pending: Option<Pending>,
+    done: bool,
+}
+
+impl<C: Compute> DeviceWorker<C> {
+    pub fn new(
+        state: DeviceState,
+        compute: C,
+        data: Arc<Dataset>,
+        cfg: &ExperimentConfig,
+    ) -> DeviceWorker<C> {
+        let session_fp = super::session_fingerprint(cfg.fingerprint(), compute.kind());
+        DeviceWorker {
+            compute,
+            data,
+            state,
+            devices: cfg.devices,
+            rounds: cfg.rounds,
+            lr: cfg.lr,
+            session_fp,
+            pending: None,
+            done: false,
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.state.id
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    pub fn client_params(&self) -> &[crate::tensor::Tensor] {
+        &self.state.client_params
+    }
+
+    /// The handshake frame this worker opens its connection with.
+    pub fn hello(&self) -> Message {
+        Message::Hello {
+            device_id: self.state.id as u32,
+            devices: self.devices as u32,
+            shard_len: self.state.loader.shard_len() as u32,
+            codec: self.state.up_codec.name().to_string(),
+            config_fp: self.session_fp,
+        }
+    }
+
+    /// Consume one server message; return the replies to send, in order.
+    pub fn handle(&mut self, msg: Message) -> Result<Vec<Message>, String> {
+        let me = self.state.id;
+        match msg {
+            Message::HelloAck { device_id, rounds, .. } => {
+                if device_id as usize != me {
+                    return Err(format!(
+                        "device {me}: HelloAck addressed to device {device_id}"
+                    ));
+                }
+                if rounds as usize != self.rounds {
+                    return Err(format!(
+                        "device {me}: server runs {rounds} rounds, local config says {}",
+                        self.rounds
+                    ));
+                }
+                Ok(Vec::new())
+            }
+            Message::RoundOpen { round, sync } => {
+                if self.pending.is_some() {
+                    return Err(format!("device {me}: RoundOpen {round} while a round is open"));
+                }
+                // stage i: client forward on the next local batch
+                let idx = self.state.loader.next_batch();
+                let (x, y) = self.data.batch(&idx);
+                let x_dims = [
+                    idx.len(),
+                    self.data.channels,
+                    self.data.height,
+                    self.data.width,
+                ];
+                let acts = self
+                    .compute
+                    .client_fwd(&self.state.client_params, &x, &x_dims)?;
+                // stage ii (device half): ACII entropy + uplink compression
+                let h_inst = self.compute.entropy(&acts)?;
+                let acts_cm = acts.to_channel_major();
+                let payload = self
+                    .state
+                    .up_codec
+                    .compress(&acts_cm, RoundCtx { entropy: Some(&h_inst) });
+                self.pending = Some(Pending { round, x, x_dims, sync });
+                Ok(vec![Message::Activations {
+                    round,
+                    device_id: me as u32,
+                    labels: y,
+                    payload,
+                }])
+            }
+            Message::Gradients { round, device_id, payload, .. } => {
+                let pending = self
+                    .pending
+                    .take()
+                    .ok_or_else(|| format!("device {me}: Gradients without an open round"))?;
+                if round != pending.round || device_id as usize != me {
+                    return Err(format!(
+                        "device {me}: Gradients for round {round}/device {device_id}, \
+                         expected round {}",
+                        pending.round
+                    ));
+                }
+                // stage iv: downlink decompression + client backward
+                let g_hat = self.state.down_codec.decompress(&payload)?;
+                let new_params = self.compute.client_bwd(
+                    &self.state.client_params,
+                    &pending.x,
+                    &pending.x_dims,
+                    &g_hat,
+                    self.lr,
+                )?;
+                self.state.client_params = new_params;
+                if pending.sync {
+                    Ok(vec![Message::ModelSync {
+                        round,
+                        device_id: me as u32,
+                        tensors: self.state.client_params.clone(),
+                    }])
+                } else {
+                    Ok(Vec::new())
+                }
+            }
+            Message::ModelSync { tensors, device_id, .. } => {
+                if device_id as usize != me {
+                    return Err(format!(
+                        "device {me}: ModelSync addressed to device {device_id}"
+                    ));
+                }
+                // empty tensor list = "keep your local params" (non-agg round)
+                if !tensors.is_empty() {
+                    if tensors.len() != self.state.client_params.len() {
+                        return Err(format!(
+                            "device {me}: ModelSync has {} tensors, model has {}",
+                            tensors.len(),
+                            self.state.client_params.len()
+                        ));
+                    }
+                    self.state.client_params = tensors;
+                }
+                Ok(Vec::new())
+            }
+            Message::Shutdown { reason } => {
+                crate::log_debug!("device {me}: shutdown ({reason})");
+                self.done = true;
+                Ok(Vec::new())
+            }
+            other => Err(format!(
+                "device {me}: unexpected {} from server",
+                other.type_name()
+            )),
+        }
+    }
+}
+
+/// Drain every queued message on `conn` through the worker (non-blocking).
+/// This is how the single-threaded loopback trainer gives a device its
+/// turn; TCP sessions use [`run_blocking`] instead.
+pub fn pump<C: Compute>(
+    worker: &mut DeviceWorker<C>,
+    conn: &mut dyn Transport,
+) -> Result<(), String> {
+    while let Some(msg) = conn.try_recv()? {
+        for reply in worker.handle(msg)? {
+            conn.send(&reply)?;
+        }
+    }
+    Ok(())
+}
+
+/// Run a device's full session over a blocking transport: send Hello, then
+/// serve messages until Shutdown.
+pub fn run_blocking<C: Compute>(
+    worker: &mut DeviceWorker<C>,
+    conn: &mut dyn Transport,
+) -> Result<(), String> {
+    conn.send(&worker.hello())?;
+    while !worker.is_done() {
+        let msg = conn.recv()?;
+        for reply in worker.handle(msg)? {
+            conn.send(&reply)?;
+        }
+    }
+    Ok(())
+}
+
+/// Build the engine-free worker for device `id` of a mock session. The
+/// shard split, loader seeding, and codec streams match the real path
+/// exactly, so wire bytes are comparable across transports.
+pub fn mock_worker(
+    cfg: &ExperimentConfig,
+    train: Arc<Dataset>,
+    id: usize,
+) -> Result<DeviceWorker<MockCompute>, String> {
+    if id >= cfg.devices {
+        return Err(format!("device id {id} out of range (devices={})", cfg.devices));
+    }
+    let channels = compute::MOCK_CUT.0;
+    let shards = partition::partition(&train, cfg.devices, cfg.partition, cfg.seed);
+    let loader = BatchLoader::new(
+        shards.device(id),
+        compute::MOCK_BATCH,
+        cfg.seed ^ ((id as u64) << 8),
+    );
+    let state = DeviceState::new(
+        id,
+        compute::mock_client_init(),
+        loader,
+        cfg.uplink_codec(channels, id)?,
+        cfg.downlink_codec(channels, id)?,
+    );
+    let classes = train.classes;
+    Ok(DeviceWorker::new(state, MockCompute::new(classes), train, cfg))
+}

@@ -1,0 +1,117 @@
+//! In-process loopback transport: a deterministic pair of byte queues.
+//!
+//! Messages are fully framed ([`proto::Message::encode_frame`]) and decoded
+//! on receive, so a loopback session exercises the exact bytes a socket
+//! would carry — the trainer's simulated runs and the TCP runtime differ
+//! only in who pumps the queues.
+//!
+//! Loopback is single-threaded (`Rc`-shared queues). `recv` on an empty
+//! queue is therefore an *error*, not a block: the driver must run the peer
+//! (see [`crate::transport::device::pump`]) before receiving.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use super::proto::Message;
+use super::{Transport, WireStats};
+
+type Queue = Rc<RefCell<VecDeque<Vec<u8>>>>;
+
+/// One end of a loopback pair.
+pub struct Loopback {
+    inbox: Queue,
+    outbox: Queue,
+    stats: WireStats,
+    name: String,
+}
+
+/// Create a connected pair: `(device_end, server_end)`.
+pub fn pair(label: &str) -> (Loopback, Loopback) {
+    let to_server: Queue = Rc::new(RefCell::new(VecDeque::new()));
+    let to_device: Queue = Rc::new(RefCell::new(VecDeque::new()));
+    let device_end = Loopback {
+        inbox: to_device.clone(),
+        outbox: to_server.clone(),
+        stats: WireStats::default(),
+        name: format!("{label}/device"),
+    };
+    let server_end = Loopback {
+        inbox: to_server,
+        outbox: to_device,
+        stats: WireStats::default(),
+        name: format!("{label}/server"),
+    };
+    (device_end, server_end)
+}
+
+impl Transport for Loopback {
+    fn send(&mut self, msg: &Message) -> Result<(), String> {
+        let frame = msg.encode_frame();
+        self.stats.frames_sent += 1;
+        self.stats.bytes_sent += frame.len() as u64;
+        self.outbox.borrow_mut().push_back(frame);
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message, String> {
+        match self.try_recv()? {
+            Some(msg) => Ok(msg),
+            None => Err(format!(
+                "loopback '{}': recv on empty queue (single-threaded loopback \
+                 cannot block; pump the peer first)",
+                self.name
+            )),
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Message>, String> {
+        let frame = self.inbox.borrow_mut().pop_front();
+        match frame {
+            None => Ok(None),
+            Some(frame) => {
+                self.stats.frames_recv += 1;
+                self.stats.bytes_recv += frame.len() as u64;
+                Ok(Some(Message::decode_frame(&frame)?))
+            }
+        }
+    }
+
+    fn stats(&self) -> WireStats {
+        self.stats
+    }
+
+    fn peer(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delivers_in_order_and_counts_bytes() {
+        let (mut dev, mut srv) = pair("t");
+        let a = Message::RoundOpen { round: 0, sync: false };
+        let b = Message::Shutdown { reason: "x".into() };
+        dev.send(&a).unwrap();
+        dev.send(&b).unwrap();
+        assert_eq!(srv.recv().unwrap(), a);
+        assert_eq!(srv.recv().unwrap(), b);
+        assert_eq!(dev.stats().frames_sent, 2);
+        assert_eq!(srv.stats().frames_recv, 2);
+        assert_eq!(dev.stats().bytes_sent, srv.stats().bytes_recv);
+        assert!(dev.stats().bytes_sent > 0);
+    }
+
+    #[test]
+    fn empty_recv_is_error_try_recv_is_none() {
+        let (mut dev, mut srv) = pair("t");
+        assert!(srv.try_recv().unwrap().is_none());
+        assert!(srv.recv().is_err());
+        dev.send(&Message::RoundOpen { round: 1, sync: true }).unwrap();
+        assert!(srv.try_recv().unwrap().is_some());
+        assert!(srv.try_recv().unwrap().is_none());
+    }
+}

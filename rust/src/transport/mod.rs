@@ -1,0 +1,75 @@
+//! Real wire transport for the split-learning round loop.
+//!
+//! The codecs shrink the smashed-data bytes; this subsystem actually moves
+//! them. It carries the codec payload envelopes ([`crate::quant::payload`])
+//! inside a framed message protocol ([`proto`]) over one of two transports:
+//!
+//! * [`loopback`] — an in-process, deterministic byte-queue pair. The
+//!   [`crate::coordinator::trainer::Trainer`] drives every simulated run
+//!   through it, so the simulator path and the real-socket path execute the
+//!   same protocol code.
+//! * [`tcp`] — `std::net` streams, one reader thread per accepted
+//!   connection on the server side (`slacc serve` / `slacc device`).
+//!
+//! The round loop itself lives in [`server::ServerRuntime`] (stages ii–iii:
+//! decompress → `server_step` → compress gradients) and
+//! [`device::DeviceWorker`] (stages i and iv), both expressed against the
+//! [`Transport`] trait, with the PJRT engine abstracted behind
+//! [`compute::Compute`] so protocol tests and `--mock` sessions run without
+//! AOT artifacts.
+//!
+//! Byte accounting: `NetworkSim::round_cost` is fed the codec *envelope*
+//! bytes (identical to what the in-process simulator always measured);
+//! [`WireStats`] additionally tracks full framed bytes per connection so
+//! the protocol overhead is observable.
+
+pub mod compute;
+pub mod device;
+pub mod loopback;
+pub mod proto;
+pub mod server;
+pub mod tcp;
+
+use proto::Message;
+
+/// Fold a config fingerprint ([`crate::config::ExperimentConfig::fingerprint`])
+/// with the compute backend tag ([`compute::Compute::kind`]): both ends of a
+/// session must agree on every numerics-affecting flag AND on engine-vs-mock
+/// execution, and this is the digest the Hello handshake compares.
+pub fn session_fingerprint(config_fp: u64, compute_kind: &str) -> u64 {
+    let mut h = config_fp ^ 0x9e37_79b9_7f4a_7c15;
+    for b in compute_kind.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Cumulative framed-byte accounting for one transport endpoint.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireStats {
+    pub frames_sent: u64,
+    pub frames_recv: u64,
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+}
+
+/// A duplex, ordered, framed message channel between one device and the
+/// server. Implementations: [`loopback::Loopback`], [`tcp::TcpTransport`].
+pub trait Transport {
+    /// Serialize and send one message.
+    fn send(&mut self, msg: &Message) -> Result<(), String>;
+
+    /// Receive the next message. TCP blocks; loopback (single-threaded)
+    /// errors if the peer has not been pumped — see [`loopback`].
+    fn recv(&mut self) -> Result<Message, String>;
+
+    /// Non-blocking receive: `Ok(None)` when nothing is queued.
+    fn try_recv(&mut self) -> Result<Option<Message>, String>;
+
+    /// Framed bytes sent/received so far on this endpoint.
+    fn stats(&self) -> WireStats;
+
+    /// Human-readable peer label for logs.
+    fn peer(&self) -> String;
+}

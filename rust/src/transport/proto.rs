@@ -1,0 +1,508 @@
+//! Framed SL wire protocol: the messages a device and the server exchange
+//! during one split-learning session, serialized as length-prefixed frames.
+//!
+//! ```text
+//! magic    u32 = 0x534C4143 ("SLAC")
+//! version  u8  = 1
+//! type     u8  (msg_type::*)
+//! body_len u32 (little-endian, <= MAX_FRAME_BODY)
+//! body     type-specific, encoded with ByteWriter/ByteReader
+//! ```
+//!
+//! The codec payload envelopes from [`crate::quant::payload`] travel as
+//! opaque byte blobs inside [`Message::Activations`] / [`Message::Gradients`]
+//! — the transport never re-encodes smashed data, so the byte count the
+//! network simulator accounts is exactly the envelope the codec produced.
+//!
+//! Like the payload header's `MAX_ELEMENTS` guard, every length field read
+//! off the wire is capped *before* allocation so a hostile 10-byte frame
+//! header cannot demand gigabytes.
+
+use crate::quant::payload::{ByteReader, ByteWriter, MAX_ELEMENTS};
+use crate::tensor::Tensor;
+
+/// Frame magic: "SLAC" in ASCII.
+pub const FRAME_MAGIC: u32 = 0x534C_4143;
+/// Wire-protocol version (frames, not payload envelopes).
+pub const PROTO_VERSION: u8 = 1;
+/// Fixed frame-header size in bytes (magic + version + type + body_len).
+pub const FRAME_HEADER_BYTES: usize = 4 + 1 + 1 + 4;
+/// Hard cap on a frame body: 1 GiB, matching the payload header's
+/// 2^28-element (1 GiB of f32) guard.
+pub const MAX_FRAME_BODY: usize = 1 << 30;
+/// Cap on a label vector per batch (a batch is never near this).
+const MAX_LABELS: usize = 1 << 20;
+/// Cap on tensors per ModelSync (a sub-model has a handful of params).
+const MAX_TENSORS: usize = 1 << 12;
+/// Cap on tensor rank.
+const MAX_RANK: usize = 8;
+/// Cap on string fields (codec names, shutdown reasons).
+const MAX_STR: usize = 4096;
+
+/// Stable message-type ids for the frame header.
+pub mod msg_type {
+    pub const HELLO: u8 = 1;
+    pub const HELLO_ACK: u8 = 2;
+    pub const ROUND_OPEN: u8 = 3;
+    pub const ACTIVATIONS: u8 = 4;
+    pub const GRADIENTS: u8 = 5;
+    pub const MODEL_SYNC: u8 = 6;
+    pub const SHUTDOWN: u8 = 7;
+}
+
+/// One SL-protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// device → server: first frame on a connection. Declares which device
+    /// slot this connection serves, the fleet size, codec, and session
+    /// fingerprint (config digest + compute kind) the device was configured
+    /// with — the server rejects mismatches — plus the shard size (the
+    /// FedAvg weight).
+    Hello {
+        device_id: u32,
+        devices: u32,
+        shard_len: u32,
+        codec: String,
+        config_fp: u64,
+    },
+    /// server → device: handshake accept, echoing the negotiated run shape.
+    HelloAck { device_id: u32, rounds: u32, agg_every: u32 },
+    /// server → device: start round `round`. `sync` asks the device to push
+    /// its client sub-model (ModelSync) after the backward pass.
+    RoundOpen { round: u32, sync: bool },
+    /// device → server: stage-ii uplink — the codec's wire envelope plus
+    /// this batch's labels (standard label-sharing SL; labels are not part
+    /// of the smashed-data byte accounting).
+    Activations { round: u32, device_id: u32, labels: Vec<i32>, payload: Vec<u8> },
+    /// server → device: stage-iv downlink — compressed cut-layer gradients
+    /// and this device's training loss for the round.
+    Gradients { round: u32, device_id: u32, loss: f32, payload: Vec<u8> },
+    /// Both directions: client sub-model parameters. Device → server pushes
+    /// the post-backward params; server → device returns the FedAvg result
+    /// (an empty tensor list means "keep what you have").
+    ModelSync { round: u32, device_id: u32, tensors: Vec<Tensor> },
+    /// server → device: session over (completed, early-stopped, or failed).
+    Shutdown { reason: String },
+}
+
+impl Message {
+    pub fn type_id(&self) -> u8 {
+        match self {
+            Message::Hello { .. } => msg_type::HELLO,
+            Message::HelloAck { .. } => msg_type::HELLO_ACK,
+            Message::RoundOpen { .. } => msg_type::ROUND_OPEN,
+            Message::Activations { .. } => msg_type::ACTIVATIONS,
+            Message::Gradients { .. } => msg_type::GRADIENTS,
+            Message::ModelSync { .. } => msg_type::MODEL_SYNC,
+            Message::Shutdown { .. } => msg_type::SHUTDOWN,
+        }
+    }
+
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Message::Hello { .. } => "Hello",
+            Message::HelloAck { .. } => "HelloAck",
+            Message::RoundOpen { .. } => "RoundOpen",
+            Message::Activations { .. } => "Activations",
+            Message::Gradients { .. } => "Gradients",
+            Message::ModelSync { .. } => "ModelSync",
+            Message::Shutdown { .. } => "Shutdown",
+        }
+    }
+
+    fn write_body(&self, w: &mut ByteWriter) {
+        match self {
+            Message::Hello { device_id, devices, shard_len, codec, config_fp } => {
+                w.u32(*device_id);
+                w.u32(*devices);
+                w.u32(*shard_len);
+                w.u64(*config_fp);
+                write_str(w, codec);
+            }
+            Message::HelloAck { device_id, rounds, agg_every } => {
+                w.u32(*device_id);
+                w.u32(*rounds);
+                w.u32(*agg_every);
+            }
+            Message::RoundOpen { round, sync } => {
+                w.u32(*round);
+                w.u8(*sync as u8);
+            }
+            Message::Activations { round, device_id, labels, payload } => {
+                w.u32(*round);
+                w.u32(*device_id);
+                w.u32(labels.len() as u32);
+                for &l in labels {
+                    w.u32(l as u32);
+                }
+                write_blob(w, payload);
+            }
+            Message::Gradients { round, device_id, loss, payload } => {
+                w.u32(*round);
+                w.u32(*device_id);
+                w.f32(*loss);
+                write_blob(w, payload);
+            }
+            Message::ModelSync { round, device_id, tensors } => {
+                w.u32(*round);
+                w.u32(*device_id);
+                w.u32(tensors.len() as u32);
+                for t in tensors {
+                    write_tensor(w, t);
+                }
+            }
+            Message::Shutdown { reason } => {
+                write_str(w, reason);
+            }
+        }
+    }
+
+    fn read_body(ty: u8, r: &mut ByteReader) -> Result<Message, String> {
+        let msg = match ty {
+            msg_type::HELLO => Message::Hello {
+                device_id: r.u32()?,
+                devices: r.u32()?,
+                shard_len: r.u32()?,
+                config_fp: r.u64()?,
+                codec: read_str(r)?,
+            },
+            msg_type::HELLO_ACK => Message::HelloAck {
+                device_id: r.u32()?,
+                rounds: r.u32()?,
+                agg_every: r.u32()?,
+            },
+            msg_type::ROUND_OPEN => Message::RoundOpen {
+                round: r.u32()?,
+                sync: r.u8()? != 0,
+            },
+            msg_type::ACTIVATIONS => {
+                let round = r.u32()?;
+                let device_id = r.u32()?;
+                let n = r.u32()? as usize;
+                if n > MAX_LABELS {
+                    return Err(format!("frame claims {n} labels (cap {MAX_LABELS})"));
+                }
+                let mut labels = Vec::with_capacity(n);
+                for _ in 0..n {
+                    labels.push(r.u32()? as i32);
+                }
+                let payload = read_blob(r)?;
+                Message::Activations { round, device_id, labels, payload }
+            }
+            msg_type::GRADIENTS => Message::Gradients {
+                round: r.u32()?,
+                device_id: r.u32()?,
+                loss: r.f32()?,
+                payload: read_blob(r)?,
+            },
+            msg_type::MODEL_SYNC => {
+                let round = r.u32()?;
+                let device_id = r.u32()?;
+                let n = r.u32()? as usize;
+                if n > MAX_TENSORS {
+                    return Err(format!("frame claims {n} tensors (cap {MAX_TENSORS})"));
+                }
+                let mut tensors = Vec::with_capacity(n);
+                for _ in 0..n {
+                    tensors.push(read_tensor(r)?);
+                }
+                Message::ModelSync { round, device_id, tensors }
+            }
+            msg_type::SHUTDOWN => Message::Shutdown { reason: read_str(r)? },
+            other => return Err(format!("unknown message type {other}")),
+        };
+        Ok(msg)
+    }
+
+    /// Serialize to one complete frame (header + body).
+    pub fn encode_frame(&self) -> Vec<u8> {
+        let mut body = ByteWriter::new();
+        self.write_body(&mut body);
+        let body = body.finish();
+        // hard check: past this cap the receiver rejects the frame anyway,
+        // and past u32::MAX the length prefix would wrap and desync the
+        // stream — fail loudly at the source instead
+        assert!(
+            body.len() <= MAX_FRAME_BODY,
+            "{} body is {} bytes (cap {MAX_FRAME_BODY})",
+            self.type_name(),
+            body.len()
+        );
+        let mut w = ByteWriter::with_capacity(FRAME_HEADER_BYTES + body.len());
+        w.u32(FRAME_MAGIC);
+        w.u8(PROTO_VERSION);
+        w.u8(self.type_id());
+        w.u32(body.len() as u32);
+        w.bytes(&body);
+        w.finish()
+    }
+
+    /// Parse exactly one frame from `buf`; trailing bytes are an error.
+    pub fn decode_frame(buf: &[u8]) -> Result<Message, String> {
+        let mut r = ByteReader::new(buf);
+        let (ty, body_len) = read_frame_header(&mut r)?;
+        if r.remaining() != body_len {
+            return Err(format!(
+                "frame length mismatch: header says {body_len} body bytes, have {}",
+                r.remaining()
+            ));
+        }
+        let msg = Message::read_body(ty, &mut r)?;
+        if r.remaining() != 0 {
+            return Err(format!("{} bytes of trailing garbage after body", r.remaining()));
+        }
+        Ok(msg)
+    }
+}
+
+fn read_frame_header(r: &mut ByteReader) -> Result<(u8, usize), String> {
+    let magic = r.u32()?;
+    if magic != FRAME_MAGIC {
+        return Err(format!("bad frame magic {magic:#010x}"));
+    }
+    let version = r.u8()?;
+    if version != PROTO_VERSION {
+        return Err(format!("unsupported protocol version {version}"));
+    }
+    let ty = r.u8()?;
+    let body_len = r.u32()? as usize;
+    if body_len > MAX_FRAME_BODY {
+        return Err(format!("frame claims {body_len} body bytes (cap {MAX_FRAME_BODY})"));
+    }
+    Ok((ty, body_len))
+}
+
+/// Read one frame from a byte stream (blocking). Returns the message and
+/// the total frame size in bytes. The body-length cap is enforced before
+/// the body buffer is allocated.
+pub fn read_frame(stream: &mut impl std::io::Read) -> Result<(Message, usize), String> {
+    let mut head = [0u8; FRAME_HEADER_BYTES];
+    stream
+        .read_exact(&mut head)
+        .map_err(|e| format!("read frame header: {e}"))?;
+    let mut r = ByteReader::new(&head);
+    let (ty, body_len) = read_frame_header(&mut r)?;
+    let mut body = vec![0u8; body_len];
+    stream
+        .read_exact(&mut body)
+        .map_err(|e| format!("read frame body ({body_len} bytes): {e}"))?;
+    let mut r = ByteReader::new(&body);
+    let msg = Message::read_body(ty, &mut r)?;
+    if r.remaining() != 0 {
+        return Err(format!("{} bytes of trailing garbage after body", r.remaining()));
+    }
+    Ok((msg, FRAME_HEADER_BYTES + body_len))
+}
+
+/// Write one frame to a byte stream. Returns the frame size in bytes.
+pub fn write_frame(stream: &mut impl std::io::Write, msg: &Message) -> Result<usize, String> {
+    let frame = msg.encode_frame();
+    stream
+        .write_all(&frame)
+        .map_err(|e| format!("write {} frame: {e}", msg.type_name()))?;
+    stream.flush().map_err(|e| format!("flush {} frame: {e}", msg.type_name()))?;
+    Ok(frame.len())
+}
+
+fn write_str(w: &mut ByteWriter, s: &str) {
+    w.u32(s.len() as u32);
+    w.bytes(s.as_bytes());
+}
+
+fn read_str(r: &mut ByteReader) -> Result<String, String> {
+    let n = r.u32()? as usize;
+    if n > MAX_STR {
+        return Err(format!("frame claims {n}-byte string (cap {MAX_STR})"));
+    }
+    let raw = r.bytes(n)?;
+    String::from_utf8(raw.to_vec()).map_err(|_| "string field is not UTF-8".to_string())
+}
+
+fn write_blob(w: &mut ByteWriter, b: &[u8]) {
+    w.u32(b.len() as u32);
+    w.bytes(b);
+}
+
+fn read_blob(r: &mut ByteReader) -> Result<Vec<u8>, String> {
+    let n = r.u32()? as usize;
+    if n > MAX_FRAME_BODY {
+        return Err(format!("frame claims {n}-byte payload (cap {MAX_FRAME_BODY})"));
+    }
+    Ok(r.bytes(n)?.to_vec())
+}
+
+fn write_tensor(w: &mut ByteWriter, t: &Tensor) {
+    w.u8(t.dims().len() as u8);
+    for &d in t.dims() {
+        w.u32(d as u32);
+    }
+    w.f32s(t.data());
+}
+
+fn read_tensor(r: &mut ByteReader) -> Result<Tensor, String> {
+    let rank = r.u8()? as usize;
+    if rank > MAX_RANK {
+        return Err(format!("tensor rank {rank} exceeds cap {MAX_RANK}"));
+    }
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        dims.push(r.u32()? as usize);
+    }
+    let elems = dims
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or("tensor dims overflow")?;
+    if elems > MAX_ELEMENTS {
+        return Err(format!("tensor claims {elems} elements (cap {MAX_ELEMENTS})"));
+    }
+    let data = r.f32s(elems)?;
+    Ok(Tensor::new(dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<Message> {
+        vec![
+            Message::Hello {
+                device_id: 3,
+                devices: 4,
+                shard_len: 128,
+                codec: "slacc".into(),
+                config_fp: 0xfeed_beef_dead_cafe,
+            },
+            Message::HelloAck { device_id: 3, rounds: 300, agg_every: 1 },
+            Message::RoundOpen { round: 7, sync: true },
+            Message::Activations {
+                round: 7,
+                device_id: 3,
+                labels: vec![0, 5, -1, 6],
+                payload: vec![1, 2, 3, 4, 5],
+            },
+            Message::Gradients {
+                round: 7,
+                device_id: 3,
+                loss: 0.25,
+                payload: vec![9; 17],
+            },
+            Message::ModelSync {
+                round: 7,
+                device_id: 3,
+                tensors: vec![
+                    Tensor::new(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0]),
+                    Tensor::scalar(4.0),
+                ],
+            },
+            Message::Shutdown { reason: "done".into() },
+        ]
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        for m in samples() {
+            let frame = m.encode_frame();
+            let back = Message::decode_frame(&frame)
+                .unwrap_or_else(|e| panic!("{}: {e}", m.type_name()));
+            assert_eq!(back, m, "{}", m.type_name());
+        }
+    }
+
+    #[test]
+    fn stream_roundtrip_and_size() {
+        let mut buf = Vec::new();
+        let mut sizes = Vec::new();
+        for m in samples() {
+            sizes.push(write_frame(&mut buf, &m).unwrap());
+        }
+        let mut cur = std::io::Cursor::new(buf);
+        for (m, want) in samples().into_iter().zip(sizes) {
+            let (back, n) = read_frame(&mut cur).unwrap();
+            assert_eq!(back, m);
+            assert_eq!(n, want);
+        }
+    }
+
+    #[test]
+    fn truncated_frames_rejected() {
+        for m in samples() {
+            let frame = m.encode_frame();
+            // every strict prefix must fail, never panic
+            for cut in [0, 1, FRAME_HEADER_BYTES - 1, FRAME_HEADER_BYTES, frame.len() - 1] {
+                if cut < frame.len() {
+                    assert!(
+                        Message::decode_frame(&frame[..cut]).is_err(),
+                        "{} cut at {cut}",
+                        m.type_name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_type_rejected() {
+        let good = Message::RoundOpen { round: 1, sync: false }.encode_frame();
+        let mut bad = good.clone();
+        bad[0] ^= 0xff; // magic
+        assert!(Message::decode_frame(&bad).is_err());
+        let mut bad = good.clone();
+        bad[4] = 99; // version
+        assert!(Message::decode_frame(&bad).is_err());
+        let mut bad = good.clone();
+        bad[5] = 200; // type
+        assert!(Message::decode_frame(&bad).is_err());
+    }
+
+    #[test]
+    fn oversized_body_rejected() {
+        let mut w = ByteWriter::new();
+        w.u32(FRAME_MAGIC);
+        w.u8(PROTO_VERSION);
+        w.u8(msg_type::SHUTDOWN);
+        w.u32((MAX_FRAME_BODY + 1) as u32);
+        let frame = w.finish();
+        assert!(Message::decode_frame(&frame).is_err());
+        let mut cur = std::io::Cursor::new(frame);
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn hostile_inner_lengths_rejected() {
+        // a Shutdown whose string length claims 1 GiB
+        let mut body = ByteWriter::new();
+        body.u32(u32::MAX);
+        let body = body.finish();
+        let mut w = ByteWriter::new();
+        w.u32(FRAME_MAGIC);
+        w.u8(PROTO_VERSION);
+        w.u8(msg_type::SHUTDOWN);
+        w.u32(body.len() as u32);
+        w.bytes(&body);
+        assert!(Message::decode_frame(&w.finish()).is_err());
+        // a ModelSync tensor claiming terabytes of elements
+        let mut body = ByteWriter::new();
+        body.u32(0); // round
+        body.u32(0); // device
+        body.u32(1); // one tensor
+        body.u8(4);
+        for _ in 0..4 {
+            body.u32(60000);
+        }
+        let body = body.finish();
+        let mut w = ByteWriter::new();
+        w.u32(FRAME_MAGIC);
+        w.u8(PROTO_VERSION);
+        w.u8(msg_type::MODEL_SYNC);
+        w.u32(body.len() as u32);
+        w.bytes(&body);
+        assert!(Message::decode_frame(&w.finish()).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut frame = Message::RoundOpen { round: 1, sync: false }.encode_frame();
+        frame.push(0);
+        assert!(Message::decode_frame(&frame).is_err());
+    }
+}

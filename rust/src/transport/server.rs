@@ -1,0 +1,542 @@
+//! Server-side session runtime: accepts N device connections and drives
+//! stages ii–iii of the round loop per device — decompress the uplink
+//! envelope, `server_step` through [`Compute`], compress the downlink
+//! gradients — plus FedAvg aggregation, evaluation, metrics, and the
+//! simulated-time accounting.
+//!
+//! The runtime is transport-agnostic: the in-process trainer hands it
+//! loopback connections plus a `pump` callback that runs each device
+//! worker's turn, while `slacc serve` hands it TCP connections and a
+//! no-op pump (remote devices run themselves). Either way the round loop
+//! is this one code path, and `NetworkSim::round_cost` is fed the same
+//! codec-envelope byte counts the simulator always measured.
+//!
+//! Devices are *processed* in device-id order every round (the shared
+//! server sub-model makes stage iii inherently sequential, as in SFL), so
+//! a session's numerics and wire bytes are identical across transports
+//! and timings.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::codecs::{Codec, RoundCtx};
+use crate::config::ExperimentConfig;
+use crate::coordinator::device::fedavg_params;
+use crate::coordinator::metrics::{MetricsLog, RoundRecord, TrainReport};
+use crate::coordinator::server::ServerState;
+use crate::data::Dataset;
+use crate::net::timeline::Timeline;
+use crate::net::NetworkSim;
+use crate::tensor::Tensor;
+
+use super::compute::{self, Compute, MockCompute, StepOut};
+use super::proto::Message;
+use super::Transport;
+
+/// The run shape a server session enforces (a projection of
+/// [`ExperimentConfig`] plus the model's batch geometry).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub devices: usize,
+    pub rounds: usize,
+    pub lr: f32,
+    pub eval_every: usize,
+    pub client_agg_every: usize,
+    pub target_accuracy: Option<f64>,
+    pub compress_gradients: bool,
+    /// codec label for logs and the report
+    pub label: String,
+    /// evaluation batch size (the artifacts are shape-specialized)
+    pub eval_batch: usize,
+    /// [`ExperimentConfig::fingerprint`] of the launching config; devices
+    /// must present the same digest in their Hello
+    pub config_fp: u64,
+}
+
+/// What a device declared in its Hello frame.
+#[derive(Debug, Clone)]
+pub struct DeviceHello {
+    pub device_id: usize,
+    pub shard_len: usize,
+    pub codec: String,
+    pub config_fp: u64,
+}
+
+/// Receive one Hello per connection and order connections by device id.
+/// Connections may arrive in any order (TCP accept order is racy); the
+/// Hello tells the server which slot each one serves.
+pub fn handshake(
+    conns: Vec<Box<dyn Transport>>,
+    devices: usize,
+) -> Result<(Vec<Box<dyn Transport>>, Vec<DeviceHello>), String> {
+    if conns.len() != devices {
+        return Err(format!("handshake: {} connections for {devices} devices", conns.len()));
+    }
+    let mut slots: Vec<Option<(Box<dyn Transport>, DeviceHello)>> =
+        (0..devices).map(|_| None).collect();
+    for mut conn in conns {
+        let msg = conn.recv()?;
+        let (device_id, fleet, shard_len, codec, config_fp) = match msg {
+            Message::Hello { device_id, devices, shard_len, codec, config_fp } => {
+                (device_id as usize, devices as usize, shard_len as usize, codec, config_fp)
+            }
+            other => {
+                return Err(format!(
+                    "handshake: expected Hello from {}, got {}",
+                    conn.peer(),
+                    other.type_name()
+                ))
+            }
+        };
+        if fleet != devices {
+            return Err(format!(
+                "device {device_id} was configured for {fleet} devices, server for {devices}"
+            ));
+        }
+        if device_id >= devices {
+            return Err(format!("device id {device_id} out of range (devices={devices})"));
+        }
+        if shard_len == 0 {
+            return Err(format!("device {device_id} declares an empty data shard"));
+        }
+        if slots[device_id].is_some() {
+            return Err(format!("two connections claim device id {device_id}"));
+        }
+        crate::log_info!(
+            "transport: device {device_id} connected from {} (shard={shard_len}, codec={codec})",
+            conn.peer()
+        );
+        slots[device_id] =
+            Some((conn, DeviceHello { device_id, shard_len, codec, config_fp }));
+    }
+    let mut out_conns = Vec::with_capacity(devices);
+    let mut hellos = Vec::with_capacity(devices);
+    for (d, slot) in slots.into_iter().enumerate() {
+        let (conn, hello) = slot.ok_or_else(|| format!("no connection for device {d}"))?;
+        out_conns.push(conn);
+        hellos.push(hello);
+    }
+    Ok((out_conns, hellos))
+}
+
+/// The server half of an SL training session.
+pub struct ServerRuntime<C: Compute> {
+    cfg: ServeConfig,
+    compute: C,
+    server: ServerState,
+    /// per-device uplink codec twins (decompression is wire-driven, so a
+    /// fresh instance mirrors the device's compressor exactly)
+    up_codecs: Vec<Box<dyn Codec>>,
+    /// per-device downlink compressors (the compress-side state lives here)
+    down_codecs: Vec<Box<dyn Codec>>,
+    /// last client sub-model each device pushed via ModelSync
+    client_params: Vec<Option<Vec<Tensor>>>,
+    test: Arc<Dataset>,
+    net: NetworkSim,
+    timeline: Timeline,
+    metrics: MetricsLog,
+}
+
+impl<C: Compute> ServerRuntime<C> {
+    pub fn new(
+        cfg: ServeConfig,
+        compute: C,
+        server_init: Vec<Tensor>,
+        up_codecs: Vec<Box<dyn Codec>>,
+        down_codecs: Vec<Box<dyn Codec>>,
+        test: Arc<Dataset>,
+        net: NetworkSim,
+    ) -> Result<ServerRuntime<C>, String> {
+        if up_codecs.len() != cfg.devices || down_codecs.len() != cfg.devices {
+            return Err(format!(
+                "runtime wants {} up / {} down codecs for {} devices",
+                up_codecs.len(),
+                down_codecs.len(),
+                cfg.devices
+            ));
+        }
+        let client_params = (0..cfg.devices).map(|_| None).collect();
+        Ok(ServerRuntime {
+            cfg,
+            compute,
+            server: ServerState::new(server_init),
+            up_codecs,
+            down_codecs,
+            client_params,
+            test,
+            net,
+            timeline: Timeline::new(),
+            metrics: MetricsLog::new(),
+        })
+    }
+
+    pub fn devices(&self) -> usize {
+        self.cfg.devices
+    }
+
+    pub fn metrics(&self) -> &MetricsLog {
+        &self.metrics
+    }
+
+    /// Test accuracy of (client, server) params over the held-out set.
+    pub fn evaluate_with(&mut self, client: &[Tensor]) -> Result<f64, String> {
+        let batch = self.cfg.eval_batch;
+        let n_batches = self.test.len() / batch;
+        if n_batches == 0 {
+            return Err("test set smaller than one batch".into());
+        }
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..n_batches {
+            let idx: Vec<usize> = (bi * batch..(bi + 1) * batch).collect();
+            let (x, y) = self.test.batch(&idx);
+            let x_dims = [batch, self.test.channels, self.test.height, self.test.width];
+            let logits = self.compute.eval_logits(
+                client,
+                &self.server.server_params,
+                &x,
+                &x_dims,
+            )?;
+            let classes = self.test.classes;
+            for (i, &label) in y.iter().enumerate() {
+                let row = &logits.data()[i * classes..(i + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == label as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    fn evaluate(&mut self) -> Result<f64, String> {
+        let client = self.client_params[0]
+            .take()
+            .ok_or("evaluate: device 0 has not synced its client sub-model")?;
+        let acc = self.evaluate_with(&client);
+        self.client_params[0] = Some(client);
+        acc
+    }
+
+    /// Drive a full training session over the given (handshaken, device-id
+    /// ordered) connections. `pump(d)` gives in-process device workers
+    /// their turn; pass a no-op for remote transports.
+    pub fn serve(
+        &mut self,
+        conns: &mut [Box<dyn Transport>],
+        hellos: &[DeviceHello],
+        mut pump: impl FnMut(usize) -> Result<(), String>,
+    ) -> Result<TrainReport, String> {
+        let n = self.cfg.devices;
+        if conns.len() != n || hellos.len() != n {
+            return Err(format!(
+                "serve: {} connections / {} hellos for {n} devices",
+                conns.len(),
+                hellos.len()
+            ));
+        }
+        let want_fp = super::session_fingerprint(self.cfg.config_fp, self.compute.kind());
+        for (d, hello) in hellos.iter().enumerate() {
+            let want = self.up_codecs[d].name();
+            if hello.codec != want {
+                return Err(format!(
+                    "device {d} runs codec '{}', server expects '{want}' — \
+                     launch both sides with the same --codec flags",
+                    hello.codec
+                ));
+            }
+            if hello.config_fp != want_fp {
+                return Err(format!(
+                    "device {d} presents session fingerprint {:#018x}, server expects \
+                     {want_fp:#018x} — launch both sides with identical flags \
+                     (lr/seed/dataset/partition/...) and the same engine-vs-mock mode",
+                    hello.config_fp
+                ));
+            }
+        }
+        let weights: Vec<f64> = hellos.iter().map(|h| h.shard_len as f64).collect();
+        for (d, conn) in conns.iter_mut().enumerate() {
+            conn.send(&Message::HelloAck {
+                device_id: d as u32,
+                rounds: self.cfg.rounds as u32,
+                agg_every: self.cfg.client_agg_every as u32,
+            })?;
+        }
+        for d in 0..n {
+            pump(d)?;
+        }
+
+        let label = self.cfg.label.clone();
+        let mut time_to_target = None;
+        let mut rounds_run = 0;
+        'rounds: for round in 0..self.cfg.rounds {
+            let wall = Instant::now();
+            let agg_due = (round + 1) % self.cfg.client_agg_every == 0;
+            let eval_due =
+                (round + 1) % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds;
+            // aggregation needs every device's sub-model; evaluation only
+            // device 0's — don't ship N-1 unused full models on eval-only
+            // rounds (ModelSync is outside the smashed-data byte axis, but
+            // it is real wall-clock on a wide fleet)
+            let wants_sync = |d: usize| agg_due || (eval_due && d == 0);
+
+            // stage i fans out to every device in parallel
+            for (d, conn) in conns.iter_mut().enumerate() {
+                conn.send(&Message::RoundOpen { round: round as u32, sync: wants_sync(d) })?;
+            }
+            for d in 0..n {
+                pump(d)?;
+            }
+
+            // stages ii-iii, sequential in device order (shared server model)
+            let mut up_bytes = vec![0usize; n];
+            let mut down_bytes = vec![0usize; n];
+            let mut loss_sum = 0.0f64;
+            for d in 0..n {
+                let msg = conns[d].recv()?;
+                let (r2, dev, labels, payload) = match msg {
+                    Message::Activations { round, device_id, labels, payload } => {
+                        (round as usize, device_id as usize, labels, payload)
+                    }
+                    other => {
+                        return Err(format!(
+                            "round {round}: expected Activations from device {d}, got {}",
+                            other.type_name()
+                        ))
+                    }
+                };
+                if r2 != round || dev != d {
+                    return Err(format!(
+                        "round {round}: device {d} sent activations for round {r2} as device {dev}"
+                    ));
+                }
+                up_bytes[d] = payload.len();
+                let acts_hat = self.up_codecs[d].decompress(&payload)?;
+
+                let StepOut { loss, g_acts, new_params } = self.compute.server_step(
+                    &self.server.server_params,
+                    &acts_hat,
+                    &labels,
+                    self.cfg.lr,
+                )?;
+                if !loss.is_finite() {
+                    return Err(format!("round {round} device {d}: loss diverged ({loss})"));
+                }
+                loss_sum += loss;
+                self.server.update(new_params);
+
+                // downlink: every path goes through a codec envelope (the
+                // uncompressed config uses IdentityCodec), so byte
+                // accounting is comparable across configs
+                let g_ent = if self.cfg.compress_gradients {
+                    Some(self.compute.entropy(&g_acts)?)
+                } else {
+                    None
+                };
+                let g_cm = g_acts.to_channel_major();
+                let payload_down = self.down_codecs[d]
+                    .compress(&g_cm, RoundCtx { entropy: g_ent.as_deref() });
+                down_bytes[d] = payload_down.len();
+                conns[d].send(&Message::Gradients {
+                    round: round as u32,
+                    device_id: d as u32,
+                    loss: loss as f32,
+                    payload: payload_down,
+                })?;
+            }
+            for d in 0..n {
+                pump(d)?;
+            }
+
+            // SFL aggregation / model sync
+            if agg_due || eval_due {
+                for d in 0..n {
+                    if !wants_sync(d) {
+                        continue;
+                    }
+                    let msg = conns[d].recv()?;
+                    match msg {
+                        Message::ModelSync { device_id, tensors, .. }
+                            if device_id as usize == d && !tensors.is_empty() =>
+                        {
+                            self.client_params[d] = Some(tensors);
+                        }
+                        other => {
+                            return Err(format!(
+                                "round {round}: expected non-empty ModelSync from device {d}, got {}",
+                                other.type_name()
+                            ))
+                        }
+                    }
+                }
+                if agg_due {
+                    let sets: Vec<&[Tensor]> = self
+                        .client_params
+                        .iter()
+                        .map(|p| p.as_deref().expect("all devices just synced"))
+                        .collect();
+                    // peers are remote: reject mismatched sub-models here
+                    // rather than panicking (or silently truncating) inside
+                    // the weighted average
+                    for (d, set) in sets.iter().enumerate().skip(1) {
+                        let shapes_match = set.len() == sets[0].len()
+                            && set
+                                .iter()
+                                .zip(sets[0].iter())
+                                .all(|(a, b)| a.dims() == b.dims());
+                        if !shapes_match {
+                            return Err(format!(
+                                "round {round}: device {d} synced a client sub-model \
+                                 whose shape differs from device 0's"
+                            ));
+                        }
+                    }
+                    let reply = fedavg_params(&sets, &weights);
+                    for (d, conn) in conns.iter_mut().enumerate() {
+                        conn.send(&Message::ModelSync {
+                            round: round as u32,
+                            device_id: d as u32,
+                            tensors: reply.clone(),
+                        })?;
+                    }
+                    for p in self.client_params.iter_mut() {
+                        *p = Some(reply.clone());
+                    }
+                }
+                for d in 0..n {
+                    pump(d)?;
+                }
+            }
+
+            // accounting + evaluation, identical to the simulator semantics
+            let cost = self.net.round_cost(&up_bytes, &down_bytes);
+            self.timeline.push(cost);
+            rounds_run = round + 1;
+            let loss = loss_sum / n as f64;
+            let accuracy = if eval_due { Some(self.evaluate()?) } else { None };
+            let rec = RoundRecord {
+                round,
+                loss,
+                accuracy,
+                bytes_up: cost.bytes_up,
+                bytes_down: cost.bytes_down,
+                sim_time_s: self.timeline.total_time(),
+                wall_ms: wall.elapsed().as_secs_f64() * 1e3,
+            };
+            if let Some(acc) = accuracy {
+                crate::log_info!(
+                    "[{label}] round {round}: loss {loss:.4} acc {:.2}% sim_t {:.1}s",
+                    acc * 100.0,
+                    rec.sim_time_s
+                );
+                if let Some(target) = self.cfg.target_accuracy {
+                    if acc >= target && time_to_target.is_none() {
+                        time_to_target = Some(rec.sim_time_s);
+                        self.metrics.push(rec);
+                        break 'rounds;
+                    }
+                }
+            } else {
+                crate::log_debug!("[{label}] round {round}: loss {loss:.4}");
+            }
+            self.metrics.push(rec);
+        }
+
+        for conn in conns.iter_mut() {
+            conn.send(&Message::Shutdown { reason: "training complete".into() })?;
+        }
+        for d in 0..n {
+            pump(d)?;
+        }
+        let framed: u64 = conns.iter().map(|c| c.stats().bytes_sent + c.stats().bytes_recv).sum();
+        let (bytes_up, bytes_down) = self.metrics.total_bytes();
+        crate::log_info!(
+            "[{label}] session done: {rounds_run} rounds, {} payload bytes, {framed} framed bytes",
+            bytes_up + bytes_down
+        );
+        Ok(TrainReport {
+            label,
+            final_accuracy: self.metrics.final_accuracy().unwrap_or(0.0),
+            best_accuracy: self.metrics.best_accuracy().unwrap_or(0.0),
+            total_sim_time_s: self.timeline.total_time(),
+            total_bytes_up: bytes_up,
+            total_bytes_down: bytes_down,
+            time_to_target_s: time_to_target,
+            rounds_run,
+            metrics: std::mem::take(&mut self.metrics),
+        })
+    }
+}
+
+/// Accept `runtime.devices()` TCP connections on `listener`, handshake,
+/// and run the session (remote devices pump themselves).
+pub fn accept_and_serve<C: Compute>(
+    runtime: &mut ServerRuntime<C>,
+    listener: &std::net::TcpListener,
+) -> Result<TrainReport, String> {
+    let n = runtime.devices();
+    let mut conns: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+    for i in 0..n {
+        crate::log_info!("transport: waiting for device connection {}/{n}", i + 1);
+        conns.push(Box::new(super::tcp::TcpTransport::accept(listener)?));
+    }
+    let (mut conns, hellos) = handshake(conns, n)?;
+    runtime.serve(&mut conns, &hellos, |_| Ok(()))
+}
+
+/// Build the engine-free server runtime for a mock session (the twin of
+/// [`super::device::mock_worker`]).
+pub fn mock_runtime(
+    cfg: &ExperimentConfig,
+    test: Arc<Dataset>,
+) -> Result<ServerRuntime<MockCompute>, String> {
+    let channels = compute::MOCK_CUT.0;
+    let mut ups = Vec::with_capacity(cfg.devices);
+    let mut downs = Vec::with_capacity(cfg.devices);
+    for d in 0..cfg.devices {
+        ups.push(cfg.uplink_codec(channels, d)?);
+        downs.push(cfg.downlink_codec(channels, d)?);
+    }
+    let classes = test.classes;
+    ServerRuntime::new(
+        cfg.serve_config(compute::MOCK_BATCH),
+        MockCompute::new(classes),
+        compute::mock_server_init(),
+        ups,
+        downs,
+        test,
+        cfg.network(),
+    )
+}
+
+/// Run a complete mock session over in-process loopback transports:
+/// N device workers + the server runtime on one thread. This is the
+/// engine-free twin of `Trainer::run`, used by the transport tests and
+/// `examples/distributed.rs` to check loopback/TCP byte parity.
+pub fn run_mock_loopback(cfg: &ExperimentConfig) -> Result<TrainReport, String> {
+    cfg.validate()?;
+    let (train, test) = Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+    let train = Arc::new(train);
+    let mut runtime = mock_runtime(cfg, Arc::new(test))?;
+    let mut workers = Vec::with_capacity(cfg.devices);
+    let mut dev_conns = Vec::with_capacity(cfg.devices);
+    let mut srv_conns: Vec<Box<dyn Transport>> = Vec::with_capacity(cfg.devices);
+    for d in 0..cfg.devices {
+        let worker = super::device::mock_worker(cfg, train.clone(), d)?;
+        let (mut dev_end, srv_end) = super::loopback::pair(&format!("mock{d}"));
+        dev_end.send(&worker.hello())?;
+        workers.push(worker);
+        dev_conns.push(dev_end);
+        srv_conns.push(Box::new(srv_end));
+    }
+    let (mut conns, hellos) = handshake(srv_conns, cfg.devices)?;
+    runtime.serve(&mut conns, &hellos, |d| {
+        super::device::pump(&mut workers[d], &mut dev_conns[d])
+    })
+}

@@ -1,0 +1,228 @@
+//! TCP transport: framed SL protocol over `std::net` streams.
+//!
+//! Two modes:
+//!
+//! * **direct** (device side, [`TcpTransport::connect`]) — blocking
+//!   request/response reads on the caller's thread; the device loop is
+//!   strictly lock-step so no reader thread is needed.
+//! * **threaded** (server side, [`TcpTransport::accept`]) — one reader
+//!   thread per accepted connection decodes frames into an in-memory
+//!   channel, so the next device's uplink is parsed while the server is
+//!   still stepping the previous one. The PJRT engine never crosses a
+//!   thread boundary: only decoded [`Message`] values do.
+
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use super::proto::{self, Message};
+use super::{Transport, WireStats};
+
+enum Reader {
+    Direct(TcpStream),
+    Threaded(mpsc::Receiver<Result<(Message, usize), String>>),
+}
+
+/// One framed TCP connection (either end).
+pub struct TcpTransport {
+    writer: TcpStream,
+    reader: Reader,
+    stats: WireStats,
+    peer: String,
+}
+
+impl TcpTransport {
+    /// Client side: connect once.
+    pub fn connect(addr: &str) -> Result<TcpTransport, String> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        Self::direct(stream)
+    }
+
+    /// Client side: retry until the server is listening (covers the
+    /// serve/device startup race in scripts and examples).
+    pub fn connect_retry(
+        addr: &str,
+        attempts: u32,
+        delay: Duration,
+    ) -> Result<TcpTransport, String> {
+        let mut last = String::new();
+        for _ in 0..attempts.max(1) {
+            match Self::connect(addr) {
+                Ok(t) => return Ok(t),
+                Err(e) => last = e,
+            }
+            thread::sleep(delay);
+        }
+        Err(format!("{last} (after {attempts} attempts)"))
+    }
+
+    fn direct(stream: TcpStream) -> Result<TcpTransport, String> {
+        let peer = peer_label(&stream);
+        stream.set_nodelay(true).map_err(|e| format!("set_nodelay: {e}"))?;
+        let reader = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+        Ok(TcpTransport {
+            writer: stream,
+            reader: Reader::Direct(reader),
+            stats: WireStats::default(),
+            peer,
+        })
+    }
+
+    /// Server side: accept one connection and spawn its reader thread.
+    pub fn accept(listener: &TcpListener) -> Result<TcpTransport, String> {
+        let (stream, _) = listener.accept().map_err(|e| format!("accept: {e}"))?;
+        let peer = peer_label(&stream);
+        stream.set_nodelay(true).map_err(|e| format!("set_nodelay: {e}"))?;
+        let mut read_half =
+            stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+        // bounded: the protocol is lock-step, so a couple of frames of
+        // read-ahead is all pipelining needs — and a peer that floods valid
+        // frames blocks in our TCP window instead of ballooning server RAM
+        let (tx, rx) = mpsc::sync_channel(2);
+        thread::Builder::new()
+            .name(format!("slacc-rx-{peer}"))
+            .spawn(move || loop {
+                match proto::read_frame(&mut read_half) {
+                    Ok(item) => {
+                        if tx.send(Ok(item)).is_err() {
+                            break; // transport dropped
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Err(e));
+                        break;
+                    }
+                }
+            })
+            .map_err(|e| format!("spawn reader thread: {e}"))?;
+        Ok(TcpTransport {
+            writer: stream,
+            reader: Reader::Threaded(rx),
+            stats: WireStats::default(),
+            peer,
+        })
+    }
+
+    fn note_recv(&mut self, n: usize) {
+        self.stats.frames_recv += 1;
+        self.stats.bytes_recv += n as u64;
+    }
+}
+
+fn peer_label(stream: &TcpStream) -> String {
+    stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "tcp:unknown".to_string())
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, msg: &Message) -> Result<(), String> {
+        let n = proto::write_frame(&mut self.writer, msg)
+            .map_err(|e| format!("{} -> {e}", self.peer))?;
+        self.stats.frames_sent += 1;
+        self.stats.bytes_sent += n as u64;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message, String> {
+        match &mut self.reader {
+            Reader::Direct(stream) => {
+                let (msg, n) = proto::read_frame(stream)
+                    .map_err(|e| format!("{} -> {e}", self.peer))?;
+                self.note_recv(n);
+                Ok(msg)
+            }
+            Reader::Threaded(rx) => {
+                let item = rx
+                    .recv()
+                    .map_err(|_| format!("{}: connection reader exited", self.peer))?;
+                let (msg, n) = item.map_err(|e| format!("{} -> {e}", self.peer))?;
+                self.note_recv(n);
+                Ok(msg)
+            }
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Message>, String> {
+        match &mut self.reader {
+            Reader::Direct(_) => Err(format!(
+                "{}: try_recv is not supported on a direct TCP transport",
+                self.peer
+            )),
+            Reader::Threaded(rx) => match rx.try_recv() {
+                Ok(item) => {
+                    let (msg, n) = item.map_err(|e| format!("{} -> {e}", self.peer))?;
+                    self.note_recv(n);
+                    Ok(Some(msg))
+                }
+                Err(mpsc::TryRecvError::Empty) => Ok(None),
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    Err(format!("{}: connection reader exited", self.peer))
+                }
+            },
+        }
+    }
+
+    fn stats(&self) -> WireStats {
+        self.stats
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // unblock a parked reader thread; errors on an already-dead socket
+        // are expected
+        let _ = self.writer.shutdown(Shutdown::Both);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_cross_a_real_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let client = thread::spawn(move || {
+            let mut t = TcpTransport::connect(&addr).unwrap();
+            t.send(&Message::Hello {
+                device_id: 0,
+                devices: 1,
+                shard_len: 10,
+                codec: "identity".into(),
+                config_fp: 7,
+            })
+            .unwrap();
+            let ack = t.recv().unwrap();
+            assert!(matches!(ack, Message::HelloAck { device_id: 0, .. }));
+        });
+        let mut server = TcpTransport::accept(&listener).unwrap();
+        let hello = server.recv().unwrap();
+        assert!(matches!(hello, Message::Hello { device_id: 0, .. }));
+        server
+            .send(&Message::HelloAck { device_id: 0, rounds: 1, agg_every: 1 })
+            .unwrap();
+        client.join().unwrap();
+        assert_eq!(server.stats().frames_recv, 1);
+        assert_eq!(server.stats().frames_sent, 1);
+    }
+
+    #[test]
+    fn connect_to_nothing_fails() {
+        assert!(TcpTransport::connect("127.0.0.1:1").is_err());
+        assert!(TcpTransport::connect_retry(
+            "127.0.0.1:1",
+            2,
+            Duration::from_millis(10)
+        )
+        .is_err());
+    }
+}

@@ -166,10 +166,78 @@ fn uncompressed_gradients_option() {
     let mut cfg = tiny_cfg("slacc");
     cfg.compress_gradients = false;
     let r = Trainer::new(cfg).unwrap().run().unwrap();
-    // downlink is raw f32: B*C*H*W*4 per device per round
-    let raw = 32 * 32 * 16 * 16 * 4 * 3; // batch*c*h*w*4 bytes * devices
+    // downlink rides an IdentityCodec envelope: payload header + raw f32
+    // B*C*H*W tensor, per device per round — so the "communication
+    // overhead" axis stays comparable with every compressed config
+    use slacc::quant::payload::Header;
+    let raw = (Header::BYTES + 32 * 32 * 16 * 16 * 4) * 3; // (hdr + batch*c*h*w*4) * devices
     assert_eq!(r.metrics.records[0].bytes_down, raw);
     assert!(r.metrics.records[0].bytes_up < raw / 3, "uplink still compressed");
+}
+
+/// The real engine through the real CLI transport pair: `slacc serve` +
+/// 3 x `slacc device` over localhost TCP must reproduce the in-process
+/// (loopback) trainer's per-round wire bytes exactly.
+#[test]
+fn tcp_engine_pair_matches_in_process_trainer() {
+    require_artifacts!();
+    use std::process::Command;
+
+    let reference = Trainer::new(tiny_cfg("slacc")).unwrap().run().unwrap();
+
+    let exe = env!("CARGO_BIN_EXE_slacc");
+    let port = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let bind = format!("127.0.0.1:{port}");
+    let csv = std::env::temp_dir()
+        .join(format!("slacc_tcp_engine_{}.csv", std::process::id()));
+    let cfg = tiny_cfg("slacc");
+    let flags = |extra: &[&str]| -> Vec<String> {
+        let mut v: Vec<String> = vec![
+            "--dataset".into(), "ham".into(),
+            "--artifacts".into(), cfg.artifacts_root.clone(),
+            "--codec".into(), "slacc".into(),
+            "--devices".into(), "3".into(),
+            "--rounds".into(), "6".into(),
+            "--train-n".into(), "128".into(),
+            "--test-n".into(), "64".into(),
+            "--eval-every".into(), "3".into(),
+            "--lr".into(), "0.003".into(),
+            "--seed".into(), "0".into(),
+        ];
+        v.extend(extra.iter().map(|s| s.to_string()));
+        v
+    };
+    let mut server = Command::new(exe)
+        .arg("serve")
+        .args(flags(&["--bind", &bind, "--csv", &csv.to_string_lossy()]))
+        .spawn()
+        .unwrap();
+    let devices: Vec<_> = (0..3)
+        .map(|d| {
+            Command::new(exe)
+                .arg("device")
+                .args(flags(&["--id", &d.to_string(), "--connect", &bind]))
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    for (d, mut p) in devices.into_iter().enumerate() {
+        assert!(p.wait().unwrap().success(), "device {d} failed");
+    }
+    assert!(server.wait().unwrap().success(), "server failed");
+
+    let text = std::fs::read_to_string(&csv).unwrap();
+    let _ = std::fs::remove_file(&csv);
+    let lines: Vec<&str> = text.trim().lines().skip(1).collect();
+    assert_eq!(lines.len(), reference.metrics.len());
+    for (line, rec) in lines.iter().zip(&reference.metrics.records) {
+        let f: Vec<&str> = line.split(',').collect();
+        assert_eq!(f[3].parse::<usize>().unwrap(), rec.bytes_up, "round {}", rec.round);
+        assert_eq!(f[4].parse::<usize>().unwrap(), rec.bytes_down, "round {}", rec.round);
+    }
 }
 
 #[test]

@@ -1,0 +1,312 @@
+//! Transport-subsystem integration: framed protocol sessions end-to-end
+//! over loopback and real TCP sockets, engine-free via the deterministic
+//! mock compute (plus an artifact-gated run through the real CLI pair).
+//!
+//! The load-bearing property: for one config and seed, the per-round
+//! smashed-data byte counts are *identical* across the in-process loopback
+//! path and a concurrent multi-process/multi-thread TCP deployment.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::coordinator::metrics::TrainReport;
+use slacc::data::Dataset;
+use slacc::quant::payload::Header;
+use slacc::transport::compute::{MOCK_BATCH, MOCK_CUT};
+use slacc::transport::device::{mock_worker, run_blocking};
+use slacc::transport::server::{accept_and_serve, mock_runtime, run_mock_loopback};
+use slacc::transport::tcp::TcpTransport;
+use slacc::transport::Transport;
+
+fn tiny_cfg(codec: &str, devices: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for("ham");
+    cfg.devices = devices;
+    cfg.rounds = rounds;
+    cfg.train_n = 64;
+    cfg.test_n = 16;
+    cfg.eval_every = 2;
+    cfg.lr = 1e-3;
+    cfg.seed = 3;
+    cfg.codec = CodecChoice::Named(codec.into());
+    cfg
+}
+
+fn run_tcp_session(cfg: &ExperimentConfig) -> TrainReport {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut handles = Vec::new();
+    for d in 0..cfg.devices {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        handles.push(thread::spawn(move || -> Result<(), String> {
+            let (train, _) =
+                Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+            let mut worker = mock_worker(&cfg, Arc::new(train), d)?;
+            let mut conn =
+                TcpTransport::connect_retry(&addr, 40, Duration::from_millis(100))?;
+            run_blocking(&mut worker, &mut conn)
+        }));
+    }
+    let (_, test) =
+        Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed).unwrap();
+    let mut rt = mock_runtime(cfg, Arc::new(test)).unwrap();
+    let report = accept_and_serve(&mut rt, &listener).unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    report
+}
+
+#[test]
+fn mock_loopback_session_trains_and_accounts_bytes() {
+    let cfg = tiny_cfg("slacc", 3, 4);
+    let report = run_mock_loopback(&cfg).unwrap();
+    assert_eq!(report.rounds_run, 4);
+    assert_eq!(report.metrics.len(), 4);
+    for r in &report.metrics.records {
+        assert!(r.loss.is_finite());
+        assert!(r.bytes_up > 0);
+        assert!(r.bytes_down > 0);
+    }
+    // eval rounds: 2 and 4
+    assert_eq!(report.metrics.accuracy_curve().len(), 2);
+    assert!(report.total_sim_time_s > 0.0);
+}
+
+#[test]
+fn mock_loopback_is_deterministic() {
+    let cfg = tiny_cfg("slacc", 3, 3);
+    let a = run_mock_loopback(&cfg).unwrap();
+    let b = run_mock_loopback(&cfg).unwrap();
+    assert_eq!(a.metrics.len(), b.metrics.len());
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_eq!(x.loss, y.loss, "round {}", x.round);
+        assert_eq!(x.bytes_up, y.bytes_up, "round {}", x.round);
+        assert_eq!(x.bytes_down, y.bytes_down, "round {}", x.round);
+        assert_eq!(x.accuracy, y.accuracy, "round {}", x.round);
+    }
+}
+
+#[test]
+fn every_codec_survives_a_loopback_session() {
+    for codec in ["identity", "uniform4", "slacc", "powerquant", "randtopk", "splitfc"] {
+        let cfg = tiny_cfg(codec, 2, 2);
+        let report = run_mock_loopback(&cfg)
+            .unwrap_or_else(|e| panic!("codec {codec}: {e}"));
+        assert_eq!(report.rounds_run, 2, "codec {codec}");
+        assert!(report.metrics.records.iter().all(|r| r.loss.is_finite()));
+    }
+}
+
+#[test]
+fn uncompressed_downlink_pays_the_envelope_header() {
+    let mut cfg = tiny_cfg("slacc", 3, 2);
+    cfg.compress_gradients = false;
+    let report = run_mock_loopback(&cfg).unwrap();
+    // identity envelope per device: payload header + raw f32 cut tensor
+    let (c, h, w) = MOCK_CUT;
+    let per_device = Header::BYTES + MOCK_BATCH * c * h * w * 4;
+    assert_eq!(report.metrics.records[0].bytes_down, 3 * per_device);
+    // uplink stays compressed
+    assert!(report.metrics.records[0].bytes_up < 3 * per_device);
+}
+
+#[test]
+fn tcp_session_matches_loopback_byte_for_byte() {
+    let cfg = tiny_cfg("slacc", 4, 3);
+    let loopback = run_mock_loopback(&cfg).unwrap();
+    let tcp = run_tcp_session(&cfg);
+    assert_eq!(tcp.rounds_run, 3);
+    assert_eq!(tcp.metrics.len(), loopback.metrics.len());
+    for (l, t) in loopback.metrics.records.iter().zip(&tcp.metrics.records) {
+        assert_eq!(l.bytes_up, t.bytes_up, "round {}", l.round);
+        assert_eq!(l.bytes_down, t.bytes_down, "round {}", l.round);
+        assert_eq!(l.loss, t.loss, "round {}", l.round);
+        assert_eq!(l.accuracy, t.accuracy, "round {}", l.round);
+    }
+}
+
+#[test]
+fn tcp_session_matches_loopback_with_identity_codec() {
+    let mut cfg = tiny_cfg("identity", 2, 3);
+    cfg.compress_gradients = false;
+    let loopback = run_mock_loopback(&cfg).unwrap();
+    let tcp = run_tcp_session(&cfg);
+    for (l, t) in loopback.metrics.records.iter().zip(&tcp.metrics.records) {
+        assert_eq!((l.bytes_up, l.bytes_down), (t.bytes_up, t.bytes_down));
+    }
+}
+
+#[test]
+fn config_mismatch_is_rejected_at_handshake() {
+    // same fleet size and codec, but the device runs a different lr —
+    // the session fingerprint must catch it before any training happens
+    let server_cfg = tiny_cfg("slacc", 2, 3);
+    let mut device_cfg = tiny_cfg("slacc", 2, 3);
+    device_cfg.lr = 0.1;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handles: Vec<_> = (0..2)
+        .map(|d| {
+            let cfg = device_cfg.clone();
+            let addr = addr.clone();
+            thread::spawn(move || -> Result<(), String> {
+                let (train, _) =
+                    Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+                let mut worker = mock_worker(&cfg, Arc::new(train), d)?;
+                let mut conn =
+                    TcpTransport::connect_retry(&addr, 40, Duration::from_millis(100))?;
+                run_blocking(&mut worker, &mut conn)
+            })
+        })
+        .collect();
+    let (_, test) = Dataset::for_config(
+        &server_cfg.dataset,
+        server_cfg.train_n,
+        server_cfg.test_n,
+        server_cfg.seed,
+    )
+    .unwrap();
+    let mut rt = mock_runtime(&server_cfg, Arc::new(test)).unwrap();
+    let err = accept_and_serve(&mut rt, &listener).unwrap_err();
+    assert!(err.contains("fingerprint"), "unexpected error: {err}");
+    for h in handles {
+        assert!(h.join().unwrap().is_err());
+    }
+}
+
+#[test]
+fn device_count_mismatch_is_rejected() {
+    // server expects 2 devices; the lone worker claims a 3-device fleet
+    let server_cfg = tiny_cfg("slacc", 2, 2);
+    let device_cfg = tiny_cfg("slacc", 3, 2);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handles: Vec<_> = (0..2)
+        .map(|d| {
+            let cfg = device_cfg.clone();
+            let addr = addr.clone();
+            thread::spawn(move || -> Result<(), String> {
+                let (train, _) =
+                    Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+                let mut worker = mock_worker(&cfg, Arc::new(train), d)?;
+                let mut conn =
+                    TcpTransport::connect_retry(&addr, 40, Duration::from_millis(100))?;
+                run_blocking(&mut worker, &mut conn)
+            })
+        })
+        .collect();
+    let (_, test) = Dataset::for_config(
+        &server_cfg.dataset,
+        server_cfg.train_n,
+        server_cfg.test_n,
+        server_cfg.seed,
+    )
+    .unwrap();
+    let mut rt = mock_runtime(&server_cfg, Arc::new(test)).unwrap();
+    let err = accept_and_serve(&mut rt, &listener).unwrap_err();
+    assert!(err.contains("devices"), "unexpected error: {err}");
+    // workers end with an error (connection dropped), not a hang
+    for h in handles {
+        assert!(h.join().unwrap().is_err());
+    }
+}
+
+/// End-to-end through the real CLI binaries: `slacc serve --mock` + N x
+/// `slacc device --mock` over localhost TCP, then parity against the
+/// in-process loopback run. Exercises main.rs, the handshake, and the CSV
+/// export with zero artifacts.
+#[test]
+fn cli_serve_device_pair_matches_loopback() {
+    use std::process::Command;
+
+    let exe = env!("CARGO_BIN_EXE_slacc");
+    // reserve a port, then free it for the server (minor race, fine in CI)
+    let port = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let bind = format!("127.0.0.1:{port}");
+    let csv = std::env::temp_dir()
+        .join(format!("slacc_cli_transport_{}.csv", std::process::id()));
+    let flags = |extra: &[&str]| -> Vec<String> {
+        let mut v: Vec<String> = [
+            "--mock", "--dataset", "ham", "--codec", "slacc", "--devices", "2",
+            "--rounds", "3", "--train-n", "64", "--test-n", "16", "--eval-every",
+            "2", "--seed", "3",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        v.extend(extra.iter().map(|s| s.to_string()));
+        v
+    };
+
+    let mut server = Command::new(exe)
+        .arg("serve")
+        .args(flags(&["--bind", &bind, "--csv", &csv.to_string_lossy()]))
+        .spawn()
+        .unwrap();
+    let devices: Vec<_> = (0..2)
+        .map(|d| {
+            Command::new(exe)
+                .arg("device")
+                .args(flags(&["--id", &d.to_string(), "--connect", &bind]))
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    for (d, mut p) in devices.into_iter().enumerate() {
+        let st = p.wait().unwrap();
+        assert!(st.success(), "device {d} exited with {st}");
+    }
+    let st = server.wait().unwrap();
+    assert!(st.success(), "server exited with {st}");
+
+    let text = std::fs::read_to_string(&csv).unwrap();
+    let _ = std::fs::remove_file(&csv);
+    let reference = run_mock_loopback(&tiny_cfg("slacc", 2, 3)).unwrap();
+    let lines: Vec<&str> = text.trim().lines().skip(1).collect();
+    assert_eq!(lines.len(), reference.metrics.len());
+    for (line, rec) in lines.iter().zip(&reference.metrics.records) {
+        let f: Vec<&str> = line.split(',').collect();
+        assert_eq!(f[3].parse::<usize>().unwrap(), rec.bytes_up, "round {}", rec.round);
+        assert_eq!(f[4].parse::<usize>().unwrap(), rec.bytes_down, "round {}", rec.round);
+        let loss: f64 = f[1].parse().unwrap();
+        assert!((loss - rec.loss).abs() < 1e-5, "round {}", rec.round);
+    }
+}
+
+/// Wire-stats sanity on a raw transport pair: framed bytes exceed payload
+/// bytes (the protocol overhead is observable, not hidden).
+#[test]
+fn wire_stats_track_framing_overhead() {
+    use slacc::transport::proto::Message;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let payload = vec![7u8; 1000];
+    let sent = payload.clone();
+    let client = thread::spawn(move || {
+        let mut t = TcpTransport::connect(&addr).unwrap();
+        t.send(&Message::Activations {
+            round: 0,
+            device_id: 0,
+            labels: vec![1, 2, 3],
+            payload: sent,
+        })
+        .unwrap();
+        t.stats().bytes_sent
+    });
+    let mut server = TcpTransport::accept(&listener).unwrap();
+    let msg = server.recv().unwrap();
+    let bytes_sent = client.join().unwrap();
+    match msg {
+        Message::Activations { payload: p, .. } => assert_eq!(p, payload),
+        other => panic!("unexpected {}", other.type_name()),
+    }
+    assert!(bytes_sent > 1000, "framed bytes {bytes_sent} must exceed payload");
+    assert_eq!(server.stats().bytes_recv, bytes_sent);
+}
