@@ -1,0 +1,146 @@
+//! Straggler handling over real sockets: a 5-device mock fleet where one
+//! device is ~10x slower than the rest, served by the single-threaded poll
+//! event loop under `ArrivalOrder { straggler_timeout, min_quorum }`.
+//!
+//!     cargo run --release --example stragglers
+//!
+//! The point being demonstrated (and asserted):
+//! * every round completes without blocking on the slow device — total
+//!   wall time stays well under the `rounds x slow_delay` floor that the
+//!   default InOrder schedule would pay;
+//! * the slow device is carried (straggler events > 0) and its stale
+//!   rounds are served when they finally land;
+//! * ModelSync traffic is byte-accounted on its own axis.
+//!
+//! Engine-free on purpose: the mock model runs the real codecs, the real
+//! framed protocol, and the real scheduler — only the model math is fake,
+//! so this example works with zero PJRT artifacts (e.g. in CI).
+//!
+//! Flags: --rounds N [6] --devices N [5] --slow-ms N [500] --timeout-ms N [120]
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use slacc::cli::Args;
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::data::Dataset;
+use slacc::sched::Policy;
+use slacc::transport::device::{mock_worker, run_blocking};
+use slacc::transport::server::{accept_and_serve, mock_runtime};
+use slacc::transport::tcp::TcpTransport;
+use slacc::transport::DelayedTransport;
+
+fn main() -> Result<(), String> {
+    slacc::util::logging::init_from_env();
+    let mut args = Args::from_env();
+    let rounds = args.usize_or("rounds", 6);
+    let devices = args.usize_or("devices", 5);
+    let slow_ms = args.usize_or("slow-ms", 500);
+    let timeout_ms = args.usize_or("timeout-ms", 120);
+    args.finish()?;
+    if devices < 2 {
+        return Err("need at least 2 devices (one of them slow)".into());
+    }
+
+    let mut cfg = ExperimentConfig::default_for("ham");
+    cfg.devices = devices;
+    cfg.rounds = rounds;
+    cfg.train_n = 128;
+    cfg.test_n = 16;
+    cfg.eval_every = rounds.max(1);
+    cfg.codec = CodecChoice::Named("slacc".into());
+    cfg.schedule = Policy::arrival_with_timeout(
+        timeout_ms as f64 / 1e3,
+        devices - 1, // close once everyone but the straggler delivered
+    );
+    cfg.validate()?;
+
+    let listener =
+        TcpListener::bind("127.0.0.1:0").map_err(|e| format!("bind: {e}"))?;
+    let addr = listener.local_addr().map_err(|e| e.to_string())?.to_string();
+    println!(
+        "stragglers: {devices} devices x {rounds} rounds on {addr}; device {} \
+         sleeps {slow_ms} ms per round (timeout {timeout_ms} ms)",
+        devices - 1
+    );
+
+    let slow_id = devices - 1;
+    let mut handles = Vec::new();
+    for d in 0..devices {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        let delay = Duration::from_millis(slow_ms as u64);
+        handles.push(thread::spawn(move || -> Result<(), String> {
+            let (train, _) =
+                Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+            let mut worker = mock_worker(&cfg, Arc::new(train), d)?;
+            let inner =
+                TcpTransport::connect_retry(&addr, 80, Duration::from_millis(100))?;
+            if d == cfg.devices - 1 {
+                let mut conn = DelayedTransport::slow_activations(inner, delay);
+                run_blocking(&mut worker, &mut conn)
+            } else {
+                let mut conn = inner;
+                run_blocking(&mut worker, &mut conn)
+            }
+        }));
+    }
+
+    let (_, test) = Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+    let mut rt = mock_runtime(&cfg, Arc::new(test))?;
+    let t0 = Instant::now();
+    let report = accept_and_serve(&mut rt, &listener)?;
+    let wall = t0.elapsed();
+
+    println!("\nround  participants  stragglers  max_wait_ms");
+    for rec in rt.sched_records() {
+        println!(
+            "{:>5}  {:>12}  {:>10}  {:>11.1}",
+            rec.round,
+            rec.participants.len(),
+            rec.stragglers.len(),
+            rec.max_wait_s() * 1e3
+        );
+    }
+    println!(
+        "\n{} rounds in {:.0} ms wall; {} straggler carry-overs; \
+         {:.1} KB smashed / {:.1} KB sync",
+        report.rounds_run,
+        wall.as_secs_f64() * 1e3,
+        report.straggler_events,
+        (report.total_bytes_up + report.total_bytes_down) as f64 / 1e3,
+        report.total_bytes_sync as f64 / 1e3,
+    );
+
+    // the InOrder floor: every round waits the full slow-device delay
+    let blocking_floor = Duration::from_millis((slow_ms * rounds) as u64);
+    if report.rounds_run != rounds {
+        return Err(format!("ran {} rounds, wanted {rounds}", report.rounds_run));
+    }
+    if report.straggler_events == 0 {
+        return Err("the slow device was never carried as a straggler".into());
+    }
+    if wall >= blocking_floor {
+        return Err(format!(
+            "fleet blocked on the straggler: {wall:?} >= {blocking_floor:?}"
+        ));
+    }
+    println!(
+        "OK: arrival-order fleet finished in {:.0} ms < {:.0} ms in-order floor \
+         (device {slow_id} was carried, not waited on)",
+        wall.as_secs_f64() * 1e3,
+        blocking_floor.as_secs_f64() * 1e3
+    );
+
+    // fast devices must exit cleanly; the straggler may have been cut off
+    // by session end mid-sleep (acceptable — the server no longer waits)
+    for (d, h) in handles.into_iter().enumerate() {
+        let out = h.join().map_err(|_| format!("device {d} panicked"))?;
+        if d != slow_id {
+            out?;
+        }
+    }
+    Ok(())
+}

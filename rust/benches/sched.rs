@@ -1,0 +1,166 @@
+//! Scheduler / event-loop benchmarks — engine-free (mock compute), so they
+//! run on any machine and in CI.
+//!
+//!     cargo bench --bench sched            # full sweep
+//!     cargo bench --bench sched -- --smoke # seconds-fast CI smoke
+//!
+//! Three angles:
+//! * **policy** — the same heterogeneous 5-device fleet (one 10x-slower
+//!   straggler) under InOrder, ArrivalOrder, and ArrivalOrder + straggler
+//!   timeout, on the deterministic loopback delay shim: simulated
+//!   time-to-accuracy is the paper's axis, and the timeout policy must win
+//!   it by not paying the straggler's link every round.
+//! * **event loop** — real sockets: N mock devices against the
+//!   single-threaded poll server, wall seconds per session.
+//! * **decoder** — the incremental frame decoder's reassembly throughput
+//!   (it sits on every byte the event loop reads).
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use slacc::bench::{Bencher, Table};
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::data::Dataset;
+use slacc::sched::Policy;
+use slacc::transport::device::{mock_worker, run_blocking};
+use slacc::transport::proto::{FrameDecoder, Message};
+use slacc::transport::server::{accept_and_serve, mock_runtime, run_mock_loopback_delayed};
+use slacc::transport::tcp::TcpTransport;
+
+fn bench_cfg(devices: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for("ham");
+    cfg.devices = devices;
+    cfg.rounds = rounds;
+    cfg.train_n = 64.max(devices * 4);
+    cfg.test_n = 16;
+    cfg.eval_every = rounds.max(1);
+    cfg.lr = 1e-3;
+    cfg.seed = 3;
+    cfg.codec = CodecChoice::Named("slacc".into());
+    cfg
+}
+
+fn policy_comparison(rounds: usize) {
+    let mut table = Table::new(
+        "sched: policy comparison (1 straggler @ 10x slow)",
+        &["policy", "rounds", "final_acc%", "sim_time_s", "stragglers", "sync_KB"],
+    );
+    let policies = [
+        ("inorder", Policy::InOrder),
+        ("arrival", Policy::arrival()),
+        ("arrival+timeout", Policy::arrival_with_timeout(0.08, 4)),
+    ];
+    for (name, policy) in policies {
+        let mut cfg = bench_cfg(5, rounds);
+        cfg.schedule = policy;
+        // the cost model sees a 10x-slower link; the delay shim makes the
+        // same device actually arrive late so the timeout policy engages
+        cfg.device_speeds = vec![1.0, 1.0, 1.0, 1.0, 0.1];
+        let delays = [0.005, 0.005, 0.005, 0.005, 0.5];
+        let (report, _) = run_mock_loopback_delayed(&cfg, &delays, 11)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        table.row(vec![
+            name.to_string(),
+            report.rounds_run.to_string(),
+            format!("{:.2}", report.final_accuracy * 100.0),
+            format!("{:.2}", report.total_sim_time_s),
+            report.straggler_events.to_string(),
+            format!("{:.1}", report.total_bytes_sync as f64 / 1e3),
+        ]);
+    }
+    table.finish();
+}
+
+fn event_loop_session(devices: usize, rounds: usize) -> f64 {
+    let cfg = bench_cfg(devices, rounds);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut handles = Vec::new();
+    for d in 0..devices {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        handles.push(thread::spawn(move || {
+            let (train, _) =
+                Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)
+                    .unwrap();
+            let mut worker = mock_worker(&cfg, Arc::new(train), d).unwrap();
+            let mut conn =
+                TcpTransport::connect_retry(&addr, 80, Duration::from_millis(100))
+                    .unwrap();
+            run_blocking(&mut worker, &mut conn).unwrap();
+        }));
+    }
+    let (_, test) =
+        Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed).unwrap();
+    let mut rt = mock_runtime(&cfg, Arc::new(test)).unwrap();
+    let t0 = Instant::now();
+    let report = accept_and_serve(&mut rt, &listener).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(report.rounds_run, rounds);
+    for h in handles {
+        h.join().unwrap();
+    }
+    wall
+}
+
+fn event_loop_scaling(fleets: &[usize], rounds: usize) {
+    let mut table = Table::new(
+        "sched: poll event loop scaling (mock devices over TCP)",
+        &["devices", "rounds", "wall_s", "rounds_per_s"],
+    );
+    for &devices in fleets {
+        let wall = event_loop_session(devices, rounds);
+        table.row(vec![
+            devices.to_string(),
+            rounds.to_string(),
+            format!("{wall:.3}"),
+            format!("{:.1}", rounds as f64 / wall.max(1e-9)),
+        ]);
+    }
+    table.finish();
+}
+
+fn decoder_throughput(samples: usize) {
+    let payload = vec![0x5a_u8; 1 << 20];
+    let frame = Message::Activations {
+        round: 1,
+        device_id: 0,
+        labels: vec![1; 64],
+        payload,
+    }
+    .encode_frame();
+    let frame_len = frame.len();
+    let result = Bencher::new("frame decoder, 1 MiB frames in 4 KiB chunks")
+        .warmup(2)
+        .samples(samples)
+        .run_bytes(|| {
+            let mut dec = FrameDecoder::new();
+            let mut out = 0usize;
+            for chunk in frame.chunks(4096) {
+                dec.feed(chunk);
+                while let Some((_, n)) = dec.next().unwrap() {
+                    out += n;
+                }
+            }
+            assert_eq!(out, frame_len);
+            out
+        });
+    println!("{}", result.row());
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // `cargo bench` forwards a `--bench` flag; ignore anything unknown
+    if smoke {
+        println!("[sched bench: smoke mode]");
+        policy_comparison(4);
+        event_loop_scaling(&[4], 2);
+        decoder_throughput(3);
+    } else {
+        policy_comparison(20);
+        event_loop_scaling(&[8, 32, 64], 5);
+        decoder_throughput(20);
+    }
+}

@@ -72,6 +72,20 @@ impl Args {
         }
     }
 
+    pub fn usize_opt(&mut self, key: &str) -> Option<usize> {
+        self.note(key);
+        match self.flags.get(key) {
+            None => None,
+            Some(v) => match v.parse() {
+                Ok(x) => Some(x),
+                Err(_) => {
+                    self.errors.push(format!("--{key}: '{v}' is not an integer"));
+                    None
+                }
+            },
+        }
+    }
+
     pub fn f64_or(&mut self, key: &str, default: f64) -> f64 {
         self.note(key);
         match self.flags.get(key) {

@@ -6,6 +6,7 @@ use crate::codecs::selection::Selection;
 use crate::data::partition::Partition;
 use crate::entropy::AlphaSchedule;
 use crate::net::{DeviceLink, ServerModel};
+use crate::sched::Policy;
 
 /// Which compressor runs on the smashed-data streams.
 #[derive(Debug, Clone, PartialEq)]
@@ -62,6 +63,12 @@ pub struct ExperimentConfig {
     pub entropy_via_kernel: bool,
     /// also compress the downlink gradients (paper does both directions)
     pub compress_gradients: bool,
+    /// round-scheduling policy: InOrder (deterministic default) or
+    /// ArrivalOrder with optional straggler timeout + quorum
+    pub schedule: Policy,
+    /// codec name for the ModelSync (FedAvg) streams; None = "identity"
+    /// (lossless, envelope-wrapped raw f32)
+    pub sync_codec: Option<String>,
 }
 
 impl ExperimentConfig {
@@ -88,6 +95,8 @@ impl ExperimentConfig {
             seed: 0,
             entropy_via_kernel: true,
             compress_gradients: true,
+            schedule: Policy::InOrder,
+            sync_codec: None,
         }
     }
 
@@ -152,6 +161,37 @@ impl ExperimentConfig {
         }
     }
 
+    /// The ModelSync codec name ("identity" unless `--sync-codec` set).
+    pub fn sync_codec_name(&self) -> &str {
+        self.sync_codec.as_deref().unwrap_or("identity")
+    }
+
+    fn sync_stream_codec(&self, stream: u64) -> Result<Box<dyn codecs::Codec>, String> {
+        // sync streams are independent of the smashed-data streams: their
+        // own seed offset, one "channel" (params are flattened), and the
+        // configured sync codec family
+        codecs::by_name(
+            self.sync_codec_name(),
+            1,
+            self.rounds,
+            self.seed ^ (0x5106 << 20) ^ stream,
+        )
+    }
+
+    /// The ModelSync compressor for device `device`'s pushes (the server
+    /// builds an identical twin to decompress).
+    pub fn sync_uplink_codec(&self, device: usize)
+                             -> Result<Box<dyn codecs::Codec>, String> {
+        self.sync_stream_codec((device as u64) * 2)
+    }
+
+    /// The ModelSync compressor for the server's FedAvg broadcast to
+    /// device `device` (the device builds the decompress twin).
+    pub fn sync_downlink_codec(&self, device: usize)
+                               -> Result<Box<dyn codecs::Codec>, String> {
+        self.sync_stream_codec((device as u64) * 2 + 1)
+    }
+
     /// Project this experiment onto the shape a transport server session
     /// enforces. `eval_batch` comes from the model geometry (the artifact
     /// manifest's batch, or the mock batch).
@@ -167,6 +207,7 @@ impl ExperimentConfig {
             label: self.codec.label(),
             eval_batch,
             config_fp: self.fingerprint(),
+            schedule: self.schedule,
         }
     }
 
@@ -184,7 +225,7 @@ impl ExperimentConfig {
     /// canonical string, so it is identical across processes and builds.
     pub fn fingerprint(&self) -> u64 {
         let repr = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}|{}",
             self.dataset,
             self.seed,
             self.lr.to_bits(),
@@ -203,6 +244,8 @@ impl ExperimentConfig {
             self.slacc.b_min,
             self.slacc.b_max,
             self.alpha,
+            self.schedule.label(),
+            self.sync_codec_name(),
         );
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
         for b in repr.bytes() {
@@ -249,6 +292,35 @@ impl ExperimentConfig {
             let base = n.strip_prefix("ef:").unwrap_or(n);
             if !codecs::ALL_CODECS.contains(&base) {
                 return Err(format!("unknown codec '{n}'"));
+            }
+        }
+        {
+            let n = self.sync_codec_name();
+            let base = n.strip_prefix("ef:").unwrap_or(n);
+            if !codecs::ALL_CODECS.contains(&base) {
+                return Err(format!("unknown sync codec '{n}'"));
+            }
+        }
+        if let Policy::ArrivalOrder { straggler_timeout_s, min_quorum } = self.schedule {
+            if let Some(t) = straggler_timeout_s {
+                if !(t > 0.0) {
+                    return Err("straggler timeout must be > 0".into());
+                }
+            }
+            if let Some(q) = min_quorum {
+                if q == 0 || q > self.devices {
+                    return Err(format!(
+                        "min quorum {q} out of range (devices={})",
+                        self.devices
+                    ));
+                }
+                if straggler_timeout_s.is_none() {
+                    return Err(
+                        "--min-quorum needs --straggler-timeout (a quorum only \
+                         matters when a timed-out round can close early)"
+                            .into(),
+                    );
+                }
             }
         }
         Ok(())
@@ -345,6 +417,46 @@ mod tests {
         let mut b = ExperimentConfig::default_for("ham");
         b.artifacts_root = "elsewhere".into();
         assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn schedule_and_sync_codec_are_fingerprinted() {
+        let a = ExperimentConfig::default_for("ham");
+        let mut b = ExperimentConfig::default_for("ham");
+        b.schedule = Policy::arrival();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut b2 = ExperimentConfig::default_for("ham");
+        b2.schedule = Policy::arrival_with_timeout(0.5, 3);
+        assert_ne!(b.fingerprint(), b2.fingerprint());
+        let mut c = ExperimentConfig::default_for("ham");
+        c.sync_codec = Some("uniform8".into());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_eq!(c.sync_uplink_codec(0).unwrap().name(), "uniform8");
+        assert_eq!(a.sync_uplink_codec(0).unwrap().name(), "identity");
+        assert_eq!(a.sync_downlink_codec(1).unwrap().name(), "identity");
+    }
+
+    #[test]
+    fn schedule_validation() {
+        let mut c = ExperimentConfig::default_for("ham");
+        c.schedule = Policy::arrival();
+        c.validate().unwrap();
+        c.schedule =
+            Policy::ArrivalOrder { straggler_timeout_s: Some(-1.0), min_quorum: None };
+        assert!(c.validate().is_err());
+        c.schedule =
+            Policy::ArrivalOrder { straggler_timeout_s: Some(0.5), min_quorum: Some(0) };
+        assert!(c.validate().is_err());
+        // quorum without a timeout is meaningless
+        c.schedule = Policy::ArrivalOrder { straggler_timeout_s: None, min_quorum: Some(2) };
+        assert!(c.validate().is_err());
+        // quorum larger than the fleet
+        c.schedule = Policy::arrival_with_timeout(0.5, 99);
+        assert!(c.validate().is_err());
+        c.schedule = Policy::arrival_with_timeout(0.5, 3);
+        c.validate().unwrap();
+        c.sync_codec = Some("bogus".into());
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -13,6 +13,14 @@ pub struct RoundRecord {
     pub accuracy: Option<f64>,
     pub bytes_up: usize,
     pub bytes_down: usize,
+    /// ModelSync (FedAvg) traffic this round, both directions — its own
+    /// axis, separate from the paper's smashed-data bytes
+    pub bytes_sync: usize,
+    /// devices that participated in this round's close (arrival-order
+    /// scheduling can close a round on a quorum)
+    pub participants: usize,
+    /// devices carried past this round's close as stragglers
+    pub stragglers: usize,
     /// cumulative simulated seconds after this round
     pub sim_time_s: f64,
     /// real wall-clock milliseconds spent on this round
@@ -30,8 +38,12 @@ pub struct TrainReport {
     pub total_sim_time_s: f64,
     pub total_bytes_up: usize,
     pub total_bytes_down: usize,
+    /// total ModelSync bytes (separate from the smashed-data axis)
+    pub total_bytes_sync: usize,
     pub time_to_target_s: Option<f64>,
     pub rounds_run: usize,
+    /// straggler carry-overs across the session (0 under InOrder)
+    pub straggler_events: usize,
 }
 
 /// Append-only metrics log for one run.
@@ -99,6 +111,16 @@ impl MetricsLog {
         )
     }
 
+    /// Total ModelSync bytes across the session.
+    pub fn total_bytes_sync(&self) -> usize {
+        self.records.iter().map(|r| r.bytes_sync).sum()
+    }
+
+    /// Total straggler carry-overs across the session.
+    pub fn straggler_events(&self) -> usize {
+        self.records.iter().map(|r| r.stragglers).sum()
+    }
+
     pub fn mean_loss_tail(&self, window: usize) -> f64 {
         let n = self.records.len();
         let start = n.saturating_sub(window);
@@ -110,13 +132,17 @@ impl MetricsLog {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut out =
-            String::from("round,loss,accuracy,bytes_up,bytes_down,sim_time_s,wall_ms\n");
+        // bytes_up/bytes_down keep their historical columns (3/4) — the
+        // distributed-parity checks parse by index; new axes go at the end
+        let mut out = String::from(
+            "round,loss,accuracy,bytes_up,bytes_down,sim_time_s,wall_ms,bytes_sync,stragglers\n",
+        );
         for r in &self.records {
             let acc = r.accuracy.map_or(String::new(), |a| format!("{a:.6}"));
             out.push_str(&format!(
-                "{},{:.6},{},{},{},{:.4},{:.1}\n",
-                r.round, r.loss, acc, r.bytes_up, r.bytes_down, r.sim_time_s, r.wall_ms
+                "{},{:.6},{},{},{},{:.4},{:.1},{},{}\n",
+                r.round, r.loss, acc, r.bytes_up, r.bytes_down, r.sim_time_s,
+                r.wall_ms, r.bytes_sync, r.stragglers
             ));
         }
         out
@@ -136,6 +162,9 @@ impl MetricsLog {
                         ),
                         ("bytes_up", Json::Num(r.bytes_up as f64)),
                         ("bytes_down", Json::Num(r.bytes_down as f64)),
+                        ("bytes_sync", Json::Num(r.bytes_sync as f64)),
+                        ("participants", Json::Num(r.participants as f64)),
+                        ("stragglers", Json::Num(r.stragglers as f64)),
                         ("sim_time_s", Json::Num(r.sim_time_s)),
                         ("wall_ms", Json::Num(r.wall_ms)),
                     ])
@@ -163,6 +192,9 @@ mod tests {
             accuracy: acc,
             bytes_up: 100,
             bytes_down: 50,
+            bytes_sync: 25,
+            participants: 1,
+            stragglers: 0,
             sim_time_s: t,
             wall_ms: 1.0,
         }

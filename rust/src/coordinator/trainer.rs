@@ -16,11 +16,13 @@
 //! network simulator converts the exact wire bytes into simulated time.
 //!
 //! Since the transport subsystem landed, the round loop itself lives in
-//! [`ServerRuntime`] and [`DeviceWorker`] — this trainer wires N in-process
-//! device workers to the server runtime over deterministic loopback
-//! transports and pumps them on one thread. A `slacc serve` + N × `slacc
-//! device` deployment runs the *same* protocol code over TCP; given the
-//! same config and seed both produce identical per-round wire bytes.
+//! [`ServerRuntime`] + [`crate::sched::round::RoundScheduler`] and
+//! [`DeviceWorker`] — this trainer wires N in-process device workers to the
+//! server runtime over deterministic loopback transports and pumps them on
+//! one thread. A `slacc serve` + N × `slacc device` deployment runs the
+//! *same* protocol and scheduling code over poll-driven TCP; given the same
+//! config and seed both produce identical per-round wire bytes (under the
+//! default InOrder schedule).
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -87,9 +89,13 @@ pub fn engine_runtime(cfg: &ExperimentConfig) -> Result<ServerRuntime<EngineComp
     let geom = load_geom(&engine.borrow(), &train)?;
     let mut ups = Vec::with_capacity(cfg.devices);
     let mut downs = Vec::with_capacity(cfg.devices);
+    let mut sync_ups = Vec::with_capacity(cfg.devices);
+    let mut sync_downs = Vec::with_capacity(cfg.devices);
     for d in 0..cfg.devices {
         ups.push(cfg.uplink_codec(geom.channels, d)?);
         downs.push(cfg.downlink_codec(geom.channels, d)?);
+        sync_ups.push(cfg.sync_uplink_codec(d)?);
+        sync_downs.push(cfg.sync_downlink_codec(d)?);
     }
     ServerRuntime::new(
         cfg.serve_config(geom.batch),
@@ -97,6 +103,8 @@ pub fn engine_runtime(cfg: &ExperimentConfig) -> Result<ServerRuntime<EngineComp
         geom.server_init,
         ups,
         downs,
+        sync_ups,
+        sync_downs,
         Arc::new(test),
         cfg.network(),
     )
@@ -118,12 +126,12 @@ pub fn engine_worker(
     let geom = load_geom(&engine.borrow(), &train)?;
     let shards = partition::partition(&train, cfg.devices, cfg.partition, cfg.seed);
     let state = build_device_state(cfg, &geom, shards.device(id), id)?;
-    Ok(DeviceWorker::new(
+    DeviceWorker::new(
         state,
         EngineCompute::new(engine, cfg.entropy_via_kernel),
         Arc::new(train),
         cfg,
-    ))
+    )
 }
 
 /// The in-process trainer: one shared PJRT engine, N device workers, and
@@ -161,6 +169,8 @@ impl Trainer {
         let mut srv_conns: Vec<Box<dyn Transport>> = Vec::with_capacity(cfg.devices);
         let mut ups = Vec::with_capacity(cfg.devices);
         let mut downs = Vec::with_capacity(cfg.devices);
+        let mut sync_ups = Vec::with_capacity(cfg.devices);
+        let mut sync_downs = Vec::with_capacity(cfg.devices);
         for d in 0..cfg.devices {
             let state = build_device_state(&cfg, &geom, shards.device(d), d)?;
             workers.push(DeviceWorker::new(
@@ -168,12 +178,14 @@ impl Trainer {
                 EngineCompute::new(engine.clone(), cfg.entropy_via_kernel),
                 train.clone(),
                 &cfg,
-            ));
+            )?);
             let (dev_end, srv_end) = loopback::pair(&format!("dev{d}"));
             dev_conns.push(dev_end);
             srv_conns.push(Box::new(srv_end));
             ups.push(cfg.uplink_codec(geom.channels, d)?);
             downs.push(cfg.downlink_codec(geom.channels, d)?);
+            sync_ups.push(cfg.sync_uplink_codec(d)?);
+            sync_downs.push(cfg.sync_downlink_codec(d)?);
         }
 
         let runtime = ServerRuntime::new(
@@ -182,6 +194,8 @@ impl Trainer {
             geom.server_init,
             ups,
             downs,
+            sync_ups,
+            sync_downs,
             Arc::new(test),
             cfg.network(),
         )?;

@@ -8,8 +8,9 @@
 //!
 //! * **L3 (this crate)** — the split-learning coordinator: device fleet,
 //!   round orchestration, the SL-ACC codec (ACII + CGC) and all baseline
-//!   codecs, the framed wire [`transport`] (loopback + TCP), the network
-//!   simulator, datasets, and metrics.
+//!   codecs, the framed wire [`transport`] (loopback + TCP), the
+//!   poll-based event-loop server and out-of-order round scheduler
+//!   ([`sched`]), the network simulator, datasets, and metrics.
 //! * **L2 (python/compile/model.py)** — the split GN-ResNet in JAX, AOT
 //!   lowered to HLO text once at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the per-round
@@ -29,6 +30,7 @@ pub mod entropy;
 pub mod net;
 pub mod quant;
 pub mod runtime;
+pub mod sched;
 pub mod tensor;
 pub mod transport;
 pub mod util;

@@ -33,6 +33,7 @@ use slacc::coordinator::trainer::{engine_runtime, engine_worker, TrainReport, Tr
 use slacc::data::partition::Partition;
 use slacc::data::Dataset;
 use slacc::entropy::AlphaSchedule;
+use slacc::sched::Policy;
 use slacc::transport::device::{mock_worker, run_blocking};
 use slacc::transport::server::{accept_and_serve, mock_runtime};
 use slacc::transport::tcp::TcpTransport;
@@ -99,6 +100,11 @@ fn print_help() {
            --csv PATH              write per-round metrics CSV\n\
            --no-grad-compress      leave downlink gradients uncompressed\n\
            --host-entropy          host entropy instead of the Pallas kernel\n\
+           --schedule MODE         round scheduling: inorder|arrival [inorder]\n\
+           --straggler-timeout S   (arrival) close a round after S seconds\n\
+           --min-quorum N          (arrival) devices required to close a\n\
+                                   timed-out round [all]\n\
+           --sync-codec NAME       codec for ModelSync traffic [identity]\n\
          serve flags (train flags plus):\n\
            --bind ADDR             listen address          [127.0.0.1:7878]\n\
            --mock                  mock model (no PJRT artifacts needed)\n\
@@ -141,6 +147,30 @@ fn config_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
     cfg.entropy_via_kernel = !args.bool_or("host-entropy", false);
     cfg.compress_gradients = !args.bool_or("no-grad-compress", false);
 
+    let schedule = args.str_or("schedule", "inorder");
+    let straggler_timeout = args.f64_opt("straggler-timeout");
+    let min_quorum = args.usize_opt("min-quorum");
+    cfg.schedule = match schedule.as_str() {
+        "inorder" => {
+            if straggler_timeout.is_some() || min_quorum.is_some() {
+                return Err(
+                    "--straggler-timeout/--min-quorum need --schedule arrival".into()
+                );
+            }
+            Policy::InOrder
+        }
+        // an explicit `--min-quorum 0` flows through as Some(0) and is
+        // rejected by validate(), rather than silently meaning "all"
+        "arrival" => Policy::ArrivalOrder {
+            straggler_timeout_s: straggler_timeout,
+            min_quorum,
+        },
+        other => return Err(format!("unknown --schedule '{other}' (inorder|arrival)")),
+    };
+    if let Some(name) = args.str_opt("sync-codec") {
+        cfg.sync_codec = Some(name);
+    }
+
     if let Some(sel) = args.str_opt("select") {
         use slacc::codecs::selection::Selection;
         let strategy = match sel.as_str() {
@@ -179,6 +209,13 @@ fn print_report(report: &TrainReport, csv: Option<String>) -> Result<(), String>
         report.total_bytes_up as f64 / 1e6,
         report.total_bytes_down as f64 / 1e6
     );
+    println!(
+        "model sync bytes  : {:.2} MB",
+        report.total_bytes_sync as f64 / 1e6
+    );
+    if report.straggler_events > 0 {
+        println!("straggler events  : {}", report.straggler_events);
+    }
     if let Some(t) = report.time_to_target_s {
         println!("time to target    : {t:.1}s");
     }
@@ -227,9 +264,11 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
         TcpListener::bind(&bind).map_err(|e| format!("bind {bind}: {e}"))?;
     let addr = listener.local_addr().map_err(|e| e.to_string())?;
     println!(
-        "slacc serve: listening on {addr}, waiting for {} device(s) [codec={}, mock={mock}]",
+        "slacc serve: listening on {addr}, waiting for {} device(s) \
+         [codec={}, schedule={}, mock={mock}]",
         cfg.devices,
         cfg.codec.label(),
+        cfg.schedule.label(),
     );
 
     let report = if mock {

@@ -103,11 +103,17 @@ pub struct NetworkSim {
 pub struct RoundCost {
     pub bytes_up: usize,
     pub bytes_down: usize,
+    /// ModelSync (FedAvg) traffic, both directions. Accounted separately
+    /// from the paper's smashed-data byte axis — the codecs shrink
+    /// `bytes_up`/`bytes_down`; sync volume is a property of the model and
+    /// the `--sync-codec` stream.
+    pub bytes_sync: usize,
     pub time_s: f64,
 }
 
 impl RoundCost {
-    /// Total smashed-data bytes this round, both directions.
+    /// Total smashed-data bytes this round, both directions (ModelSync
+    /// traffic is deliberately excluded — see `bytes_sync`).
     pub fn total_bytes(&self) -> usize {
         self.bytes_up + self.bytes_down
     }
@@ -133,26 +139,73 @@ impl NetworkSim {
     /// Simulated time + bytes for one round given each device's uplink and
     /// downlink payload sizes. Devices compute/transmit in parallel; the
     /// server processes sequentially (one shared server model, as in SFL).
+    /// This is the all-devices-active / no-sync special case of
+    /// [`NetworkSim::round_cost_sched`].
     pub fn round_cost(&self, up_bytes: &[usize], down_bytes: &[usize]) -> RoundCost {
+        let zeros = vec![0usize; self.links.len()];
+        let active = vec![true; self.links.len()];
+        self.round_cost_sched(up_bytes, down_bytes, &zeros, &zeros, &active)
+    }
+
+    /// Scheduler-aware round cost: only `active` devices (the ones that
+    /// actually ran stages i–iv this round) contribute compute and transfer
+    /// time, so a round that closed past the straggler timeout is *not*
+    /// charged the straggler's slow link — that is the whole point of
+    /// arrival-order scheduling. ModelSync pack bytes ride the same links
+    /// (an extra up/down phase on aggregation rounds) but are accounted on
+    /// their own `bytes_sync` axis.
+    pub fn round_cost_sched(
+        &self,
+        up_bytes: &[usize],
+        down_bytes: &[usize],
+        sync_up: &[usize],
+        sync_down: &[usize],
+        active: &[bool],
+    ) -> RoundCost {
         assert_eq!(up_bytes.len(), self.links.len());
         assert_eq!(down_bytes.len(), self.links.len());
+        assert_eq!(sync_up.len(), self.links.len());
+        assert_eq!(sync_down.len(), self.links.len());
+        assert_eq!(active.len(), self.links.len());
+        let act = |d: usize| active[d];
         let up_phase = self
             .links
             .iter()
-            .zip(up_bytes)
-            .map(|(l, &b)| l.t_client_fwd + l.uplink_time(b))
+            .enumerate()
+            .filter(|&(d, _)| act(d))
+            .map(|(d, l)| l.t_client_fwd + l.uplink_time(up_bytes[d]))
             .fold(0.0f64, f64::max);
-        let server_phase = self.server.t_server_step * self.links.len() as f64;
+        let active_n = active.iter().filter(|&&a| a).count();
+        let server_phase = self.server.t_server_step * active_n as f64;
         let down_phase = self
             .links
             .iter()
-            .zip(down_bytes)
-            .map(|(l, &b)| l.downlink_time(b) + l.t_client_bwd)
+            .enumerate()
+            .filter(|&(d, _)| act(d))
+            .map(|(d, l)| l.downlink_time(down_bytes[d]) + l.t_client_bwd)
+            .fold(0.0f64, f64::max);
+        // sync transfers are charged wherever their bytes landed, even for
+        // a device that ran no training step this round (a carried
+        // straggler finishing its ModelSync push still used the link)
+        let sync_up_phase = self
+            .links
+            .iter()
+            .enumerate()
+            .filter(|&(d, _)| sync_up[d] > 0)
+            .map(|(d, l)| l.uplink_time(sync_up[d]))
+            .fold(0.0f64, f64::max);
+        let sync_down_phase = self
+            .links
+            .iter()
+            .enumerate()
+            .filter(|&(d, _)| sync_down[d] > 0)
+            .map(|(d, l)| l.downlink_time(sync_down[d]))
             .fold(0.0f64, f64::max);
         RoundCost {
             bytes_up: up_bytes.iter().sum(),
             bytes_down: down_bytes.iter().sum(),
-            time_s: up_phase + server_phase + down_phase,
+            bytes_sync: sync_up.iter().sum::<usize>() + sync_down.iter().sum::<usize>(),
+            time_s: up_phase + server_phase + down_phase + sync_up_phase + sync_down_phase,
         }
     }
 }
@@ -186,6 +239,41 @@ mod tests {
         let slow = base.scaled(0.1);
         let expected_up = slow.t_client_fwd + slow.uplink_time(100_000);
         assert!(cost.time_s >= expected_up);
+    }
+
+    #[test]
+    fn sched_cost_excludes_inactive_stragglers() {
+        let base = DeviceLink::default();
+        let sim = NetworkSim::heterogeneous(base, &[1.0, 1.0, 0.1], ServerModel::default());
+        let zero = [0usize; 3];
+        let all = sim.round_cost_sched(
+            &[100_000; 3], &[100_000; 3], &zero, &zero, &[true; 3]);
+        let partial = sim.round_cost_sched(
+            &[100_000, 100_000, 0], &[100_000, 100_000, 0], &zero, &zero,
+            &[true, true, false]);
+        // dropping the 10x-slower straggler must shrink the round time
+        assert!(partial.time_s < all.time_s);
+        assert_eq!(partial.bytes_up, 200_000);
+        assert_eq!(all.bytes_sync, 0);
+    }
+
+    #[test]
+    fn sync_bytes_ride_their_own_axis() {
+        let sim = NetworkSim::homogeneous(2, DeviceLink::default(), ServerModel::default());
+        let zero = [0usize; 2];
+        let no_sync = sim.round_cost_sched(
+            &[1000; 2], &[1000; 2], &zero, &zero, &[true; 2]);
+        let with_sync = sim.round_cost_sched(
+            &[1000; 2], &[1000; 2], &[50_000; 2], &[50_000; 2], &[true; 2]);
+        // smashed-data axis untouched; sync accounted separately but paid
+        // in time
+        assert_eq!(with_sync.bytes_up, no_sync.bytes_up);
+        assert_eq!(with_sync.bytes_down, no_sync.bytes_down);
+        assert_eq!(with_sync.bytes_sync, 200_000);
+        assert!(with_sync.time_s > no_sync.time_s);
+        // and matches the legacy formula when sync is zero and all active
+        let legacy = sim.round_cost(&[1000; 2], &[1000; 2]);
+        assert_eq!(no_sync, legacy);
     }
 
     #[test]

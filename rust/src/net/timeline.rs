@@ -1,13 +1,42 @@
 //! Cumulative simulated-time tracking across rounds + time-to-accuracy
-//! queries (the paper's headline "time to reach a target accuracy" metric).
+//! queries (the paper's headline "time to reach a target accuracy" metric),
+//! plus per-round scheduling records (who participated, who straggled, and
+//! how long the server waited per device) so time-to-accuracy can be
+//! compared across scheduling policies.
 
 use super::RoundCost;
+
+/// One round's scheduling outcome, recorded by
+/// [`crate::sched::round::RoundScheduler`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SchedRecord {
+    pub round: usize,
+    /// devices whose Activations for *this* round made the close
+    pub participants: Vec<usize>,
+    /// straggler completions: devices whose Activations for an *earlier*
+    /// round finally landed (and were processed) during this round
+    pub stale: Vec<usize>,
+    /// devices newly carried past this round's close (straggler timeout)
+    pub stragglers: Vec<usize>,
+    /// per-device fleet-clock seconds between round-open and arrival; for
+    /// stragglers, open → close (the wait the server actually burned).
+    /// 0.0 for devices that were not opened this round.
+    pub wait_s: Vec<f64>,
+}
+
+impl SchedRecord {
+    /// Longest per-device wait this round.
+    pub fn max_wait_s(&self) -> f64 {
+        self.wait_s.iter().copied().fold(0.0, f64::max)
+    }
+}
 
 /// Accumulates per-round costs into a cumulative timeline.
 #[derive(Debug, Clone, Default)]
 pub struct Timeline {
     rounds: Vec<RoundCost>,
     cum_time: Vec<f64>,
+    sched: Vec<Option<SchedRecord>>,
 }
 
 impl Timeline {
@@ -19,6 +48,13 @@ impl Timeline {
         let prev = self.cum_time.last().copied().unwrap_or(0.0);
         self.cum_time.push(prev + cost.time_s);
         self.rounds.push(cost);
+        self.sched.push(None);
+    }
+
+    /// Push a round with its scheduling outcome attached.
+    pub fn push_with_sched(&mut self, cost: RoundCost, rec: SchedRecord) {
+        self.push(cost);
+        *self.sched.last_mut().unwrap() = Some(rec);
     }
 
     pub fn len(&self) -> usize {
@@ -46,8 +82,32 @@ impl Timeline {
         self.rounds.iter().map(|r| r.bytes_down).sum()
     }
 
+    /// Total ModelSync bytes across the session (separate axis).
+    pub fn total_bytes_sync(&self) -> usize {
+        self.rounds.iter().map(|r| r.bytes_sync).sum()
+    }
+
     pub fn round(&self, r: usize) -> &RoundCost {
         &self.rounds[r]
+    }
+
+    /// Scheduling record for round `r`, if the scheduler attached one.
+    pub fn sched_record(&self, r: usize) -> Option<&SchedRecord> {
+        self.sched.get(r).and_then(|s| s.as_ref())
+    }
+
+    /// All attached scheduling records, in round order.
+    pub fn sched_records(&self) -> Vec<SchedRecord> {
+        self.sched.iter().flatten().cloned().collect()
+    }
+
+    /// Total straggler carry-overs across the session.
+    pub fn straggler_events(&self) -> usize {
+        self.sched
+            .iter()
+            .flatten()
+            .map(|s| s.stragglers.len())
+            .sum()
     }
 
     /// Given (round, accuracy) observations, simulated time at which
@@ -66,7 +126,7 @@ mod tests {
     use super::*;
 
     fn cost(t: f64, b: usize) -> RoundCost {
-        RoundCost { bytes_up: b, bytes_down: b / 2, time_s: t }
+        RoundCost { bytes_up: b, bytes_down: b / 2, bytes_sync: b / 4, time_s: t }
     }
 
     #[test]
@@ -80,6 +140,7 @@ mod tests {
         assert!((tl.total_time() - 6.0).abs() < 1e-12);
         assert_eq!(tl.total_bytes_up(), 300);
         assert_eq!(tl.total_bytes_down(), 150);
+        assert_eq!(tl.total_bytes_sync(), 75);
     }
 
     #[test]
@@ -92,5 +153,31 @@ mod tests {
         assert_eq!(tl.time_to_accuracy(&obs, 0.5), Some(5.0));
         assert_eq!(tl.time_to_accuracy(&obs, 0.9), None);
         assert_eq!(tl.time_to_accuracy(&obs, 0.2), Some(2.0));
+    }
+
+    #[test]
+    fn sched_records_attach_to_rounds() {
+        let mut tl = Timeline::new();
+        tl.push(cost(1.0, 1)); // un-scheduled round (legacy push)
+        tl.push_with_sched(
+            cost(1.0, 1),
+            SchedRecord {
+                round: 1,
+                participants: vec![0, 1],
+                stale: vec![],
+                stragglers: vec![2],
+                wait_s: vec![0.1, 0.2, 0.5],
+            },
+        );
+        tl.push_with_sched(
+            cost(1.0, 1),
+            SchedRecord { round: 2, stragglers: vec![2], ..Default::default() },
+        );
+        assert!(tl.sched_record(0).is_none());
+        let r1 = tl.sched_record(1).unwrap();
+        assert_eq!(r1.participants, vec![0, 1]);
+        assert!((r1.max_wait_s() - 0.5).abs() < 1e-12);
+        assert_eq!(tl.straggler_events(), 2);
+        assert_eq!(tl.sched_records().len(), 2);
     }
 }

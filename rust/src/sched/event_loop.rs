@@ -1,0 +1,505 @@
+//! The event-loop server transport: every accepted device socket is
+//! non-blocking and driven from **one** thread.
+//!
+//! PR 1's `slacc serve` spawned a reader thread per connection
+//! ([`crate::transport::tcp::TcpTransport::accept`]); that caps a server at
+//! a few hundred devices and buys nothing — the protocol is frame-oriented
+//! and the server's work per frame is CPU-bound PJRT stepping anyway.
+//! [`PollFleet`] replaces it: sockets sit in a `poll(2)` set
+//! ([`crate::sched::poll`]), reads drain into per-connection
+//! [`FrameDecoder`]s, and completed messages surface through the
+//! [`Fleet`] interface in true arrival order — which is exactly what the
+//! arrival-order round scheduler wants to consume.
+//!
+//! Writes are also non-blocking: a `WouldBlock` mid-frame parks on
+//! `poll(POLLOUT)` for that one socket. The PJRT engine never crosses a
+//! thread boundary because there are no other threads.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+use crate::sched::fleet::Fleet;
+use crate::sched::poll;
+use crate::transport::proto::{FrameDecoder, Message};
+use crate::transport::server::{hello_from_message, DeviceHello};
+use crate::transport::{TransportError, WireStats};
+
+/// Read chunk size per `read` call; frames larger than this reassemble
+/// across poll wake-ups in the decoder.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// Per-connection cap on decoded-but-unconsumed frames. The protocol is
+/// lock-step, so a handful of read-ahead is all pipelining needs — this is
+/// the poll-loop equivalent of the threaded path's `sync_channel(2)`
+/// bound: a peer that floods valid frames blocks in our TCP window (we
+/// stop reading its socket) instead of ballooning server RAM.
+const MAX_QUEUED_FRAMES: usize = 8;
+
+struct PollConn {
+    stream: TcpStream,
+    decoder: FrameDecoder,
+    inbox: VecDeque<Message>,
+    stats: WireStats,
+    peer: String,
+    closed: bool,
+    /// terminal error to surface when the inbox drains
+    failure: Option<TransportError>,
+}
+
+impl PollConn {
+    fn terminal_error(&self) -> TransportError {
+        self.failure
+            .clone()
+            .unwrap_or_else(|| TransportError::PeerClosed { peer: self.peer.clone() })
+    }
+}
+
+/// A fleet of non-blocking TCP device connections behind one poll loop.
+pub struct PollFleet {
+    conns: Vec<PollConn>,
+    /// connection indices in frame-completion order, one entry per queued
+    /// message (the arrival-order queue)
+    order: VecDeque<usize>,
+    /// reusable read buffer (poll_step runs on every recv; don't allocate
+    /// 64 KiB per wake-up)
+    rbuf: Vec<u8>,
+    start: Instant,
+}
+
+impl PollFleet {
+    /// Accept `devices` connections, run the Hello handshake through the
+    /// poll loop, and return the fleet with connections re-indexed by
+    /// device id (TCP accept order is racy; the Hello says which slot each
+    /// connection serves).
+    pub fn accept(
+        listener: &TcpListener,
+        devices: usize,
+    ) -> Result<(PollFleet, Vec<DeviceHello>), String> {
+        let mut conns = Vec::with_capacity(devices);
+        for i in 0..devices {
+            crate::log_info!("sched: waiting for device connection {}/{devices}", i + 1);
+            let (stream, _) = listener.accept().map_err(|e| format!("accept: {e}"))?;
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "tcp:unknown".to_string());
+            stream.set_nodelay(true).map_err(|e| format!("set_nodelay: {e}"))?;
+            stream
+                .set_nonblocking(true)
+                .map_err(|e| format!("set_nonblocking: {e}"))?;
+            conns.push(PollConn {
+                stream,
+                decoder: FrameDecoder::new(),
+                inbox: VecDeque::new(),
+                stats: WireStats::default(),
+                peer,
+                closed: false,
+                failure: None,
+            });
+        }
+        let mut fleet = PollFleet {
+            conns,
+            order: VecDeque::new(),
+            rbuf: vec![0u8; READ_CHUNK],
+            start: Instant::now(),
+        };
+
+        // one Hello per connection, in whatever order they land
+        let mut by_conn: Vec<Option<DeviceHello>> = (0..devices).map(|_| None).collect();
+        let mut got = 0usize;
+        while got < devices {
+            let (i, msg) = match fleet.recv_any(None) {
+                Ok(Some(pair)) => pair,
+                Ok(None) => unreachable!("recv_any(None) cannot time out"),
+                Err(e) => return Err(format!("handshake: {e}")),
+            };
+            if by_conn[i].is_some() {
+                return Err(format!(
+                    "handshake: {} sent a second frame before HelloAck",
+                    fleet.conns[i].peer
+                ));
+            }
+            let peer = fleet.conns[i].peer.clone();
+            let hello = hello_from_message(msg, devices, &peer)?;
+            crate::log_info!(
+                "sched: device {} connected from {peer} (shard={}, codec={})",
+                hello.device_id,
+                hello.shard_len,
+                hello.codec
+            );
+            by_conn[i] = Some(hello);
+            got += 1;
+        }
+        // devices are lock-step (they wait for HelloAck before anything
+        // else); a frame already queued behind a Hello would desync the
+        // rebuilt arrival queue below, so reject it outright
+        if !fleet.order.is_empty() {
+            return Err("handshake: a device pipelined frames before HelloAck".into());
+        }
+
+        // re-index connections by declared device id
+        let mut slots: Vec<Option<(PollConn, DeviceHello)>> =
+            (0..devices).map(|_| None).collect();
+        for (conn, hello) in fleet.conns.into_iter().zip(by_conn.into_iter()) {
+            let hello = hello.expect("every connection delivered a Hello");
+            let id = hello.device_id;
+            if slots[id].is_some() {
+                return Err(format!("two connections claim device id {id}"));
+            }
+            slots[id] = Some((conn, hello));
+        }
+        let mut conns = Vec::with_capacity(devices);
+        let mut hellos = Vec::with_capacity(devices);
+        for (d, slot) in slots.into_iter().enumerate() {
+            let (conn, hello) =
+                slot.ok_or_else(|| format!("no connection for device {d}"))?;
+            conns.push(conn);
+            hellos.push(hello);
+        }
+        // every inbox was verified empty above, so the rebuilt fleet
+        // starts with a consistent (empty) arrival queue
+        Ok((
+            PollFleet {
+                conns,
+                order: VecDeque::new(),
+                rbuf: vec![0u8; READ_CHUNK],
+                start: fleet.start,
+            },
+            hellos,
+        ))
+    }
+
+    /// One poll pass: wait up to `timeout_ms` (-1 = forever) for readable
+    /// sockets, drain them, decode complete frames into inboxes. Returns
+    /// how many frames were decoded.
+    fn poll_step(&mut self, timeout_ms: i32) -> Result<usize, TransportError> {
+        // connections whose inbox is at the read-ahead cap are left out of
+        // the poll set entirely: their bytes back up into the TCP window
+        // until the scheduler drains them
+        let open: Vec<usize> = (0..self.conns.len())
+            .filter(|&i| {
+                !self.conns[i].closed && self.conns[i].inbox.len() < MAX_QUEUED_FRAMES
+            })
+            .collect();
+        if open.is_empty() {
+            return Ok(0);
+        }
+        let ready = {
+            let streams: Vec<&TcpStream> =
+                open.iter().map(|&i| &self.conns[i].stream).collect();
+            poll::wait_readable(&streams, timeout_ms).map_err(TransportError::Io)?
+        };
+        let mut decoded = 0usize;
+        for (&i, &is_ready) in open.iter().zip(ready.iter()) {
+            if !is_ready {
+                continue;
+            }
+            // drain this socket completely, then extract complete frames;
+            // whether an EOF was clean is only decidable *after* the
+            // extraction pass (the final frames and the hang-up often land
+            // in the same poll wake-up)
+            let mut hit_eof = false;
+            loop {
+                match self.conns[i].stream.read(&mut self.rbuf) {
+                    Ok(0) => {
+                        hit_eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        let conn = &mut self.conns[i];
+                        conn.decoder.feed(&self.rbuf[..n]);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        let conn = &mut self.conns[i];
+                        conn.closed = true;
+                        conn.failure = Some(TransportError::Io(format!(
+                            "{}: read: {e}",
+                            conn.peer
+                        )));
+                        break;
+                    }
+                }
+            }
+            loop {
+                match self.conns[i].decoder.next() {
+                    Ok(Some((msg, n))) => {
+                        let conn = &mut self.conns[i];
+                        conn.stats.frames_recv += 1;
+                        conn.stats.bytes_recv += n as u64;
+                        conn.inbox.push_back(msg);
+                        self.order.push_back(i);
+                        decoded += 1;
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        let conn = &mut self.conns[i];
+                        conn.closed = true;
+                        conn.failure = Some(TransportError::Protocol(format!(
+                            "{}: {e}",
+                            conn.peer
+                        )));
+                        break;
+                    }
+                }
+            }
+            if hit_eof {
+                let conn = &mut self.conns[i];
+                conn.closed = true;
+                // leftover bytes after extracting every complete frame =
+                // a genuine mid-frame truncation; none = clean hang-up
+                // (surfaces as PeerClosed via terminal_error)
+                if conn.failure.is_none() && conn.decoder.buffered() > 0 {
+                    conn.failure = Some(TransportError::Io(format!(
+                        "{}: connection closed mid-frame ({} bytes buffered)",
+                        conn.peer,
+                        conn.decoder.buffered()
+                    )));
+                }
+            }
+        }
+        Ok(decoded)
+    }
+
+    /// The terminal error of the first dead connection. Called when the
+    /// arrival queue is drained and at least one socket has closed: a
+    /// device that vanishes mid-session is fatal to the session (matching
+    /// the in-order `recv_from` semantics), never a silent hang.
+    fn first_dead_error(&self) -> Option<TransportError> {
+        self.conns.iter().find(|c| c.closed).map(|c| c.terminal_error())
+    }
+}
+
+impl Fleet for PollFleet {
+    fn devices(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn now_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn send(&mut self, d: usize, msg: &Message) -> Result<(), TransportError> {
+        let frame = msg.encode_frame();
+        let conn = &mut self.conns[d];
+        if conn.closed {
+            return Err(conn.terminal_error());
+        }
+        let mut off = 0usize;
+        while off < frame.len() {
+            match conn.stream.write(&frame[off..]) {
+                Ok(0) => {
+                    return Err(TransportError::Io(format!(
+                        "{}: write returned 0",
+                        conn.peer
+                    )))
+                }
+                Ok(n) => off += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    // a peer that stops reading must not wedge the whole
+                    // single-threaded loop: bound the stall and fail the
+                    // connection instead of retrying forever
+                    if !poll::wait_writable(&conn.stream, 10_000)
+                        .map_err(TransportError::Io)?
+                    {
+                        return Err(TransportError::Io(format!(
+                            "{}: write of {} stalled for 10s (peer not reading)",
+                            conn.peer,
+                            msg.type_name()
+                        )));
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    return Err(TransportError::Io(format!(
+                        "{}: write {}: {e}",
+                        conn.peer,
+                        msg.type_name()
+                    )))
+                }
+            }
+        }
+        conn.stats.frames_sent += 1;
+        conn.stats.bytes_sent += frame.len() as u64;
+        Ok(())
+    }
+
+    fn recv_from(&mut self, d: usize) -> Result<Message, TransportError> {
+        loop {
+            if let Some(pos) = self.order.iter().position(|&i| i == d) {
+                let _ = self.order.remove(pos);
+                return Ok(self.conns[d]
+                    .inbox
+                    .pop_front()
+                    .expect("order entry implies a queued message"));
+            }
+            if self.conns[d].closed {
+                return Err(self.conns[d].terminal_error());
+            }
+            self.poll_step(-1)?;
+        }
+    }
+
+    fn recv_any(
+        &mut self,
+        timeout_s: Option<f64>,
+    ) -> Result<Option<(usize, Message)>, TransportError> {
+        let deadline = timeout_s
+            .map(|t| Instant::now() + std::time::Duration::from_secs_f64(t.max(0.0)));
+        loop {
+            if let Some(i) = self.order.pop_front() {
+                let msg = self.conns[i]
+                    .inbox
+                    .pop_front()
+                    .expect("order entry implies a queued message");
+                return Ok(Some((i, msg)));
+            }
+            // queue drained (so every inbox is empty): any closed socket
+            // means a device is gone for good — surface it instead of
+            // waiting on the survivors forever
+            if let Some(err) = self.first_dead_error() {
+                return Err(err);
+            }
+            let timeout_ms = match deadline {
+                None => -1,
+                Some(dl) => {
+                    let rem = dl.saturating_duration_since(Instant::now());
+                    if rem.is_zero() {
+                        return Ok(None);
+                    }
+                    rem.as_millis().clamp(1, i32::MAX as u128) as i32
+                }
+            };
+            self.poll_step(timeout_ms)?;
+        }
+    }
+
+    fn pump(&mut self, _d: usize) -> Result<(), String> {
+        Ok(()) // remote devices run themselves
+    }
+
+    fn stats(&self, d: usize) -> WireStats {
+        self.conns[d].stats
+    }
+
+    fn peer(&self, d: usize) -> String {
+        self.conns[d].peer.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::tcp::TcpTransport;
+    use crate::transport::Transport;
+    use std::thread;
+
+    fn hello(d: u32, devices: u32) -> Message {
+        Message::Hello {
+            device_id: d,
+            devices,
+            shard_len: 8,
+            codec: "identity".into(),
+            config_fp: 1,
+        }
+    }
+
+    #[test]
+    fn accepts_and_orders_by_device_id() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut handles = Vec::new();
+        // connect in reverse id order to force re-indexing
+        for d in [2u32, 0, 1] {
+            let addr = addr.clone();
+            handles.push(thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr).unwrap();
+                t.send(&hello(d, 3)).unwrap();
+                // wait for one reply so the server-side test can send
+                let ack = t.recv().unwrap();
+                assert!(matches!(ack, Message::HelloAck { .. }));
+            }));
+        }
+        let (mut fleet, hellos) = PollFleet::accept(&listener, 3).unwrap();
+        assert_eq!(fleet.devices(), 3);
+        for (d, h) in hellos.iter().enumerate() {
+            assert_eq!(h.device_id, d);
+        }
+        for d in 0..3 {
+            fleet
+                .send(d, &Message::HelloAck { device_id: d as u32, rounds: 1, agg_every: 1 })
+                .unwrap();
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn recv_any_surfaces_arrival_order() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut handles = Vec::new();
+        for d in 0..2u32 {
+            let addr = addr.clone();
+            handles.push(thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr).unwrap();
+                t.send(&hello(d, 2)).unwrap();
+                // device 1 answers immediately; device 0 after a pause
+                if d == 0 {
+                    thread::sleep(std::time::Duration::from_millis(300));
+                }
+                t.send(&Message::RoundOpen { round: d, sync: false }).unwrap();
+                let _ = t.recv(); // hold the socket open until shutdown
+            }));
+        }
+        let (mut fleet, _) = PollFleet::accept(&listener, 2).unwrap();
+        let (first, _) = fleet.recv_any(None).unwrap().unwrap();
+        assert_eq!(first, 1, "the fast device must surface first");
+        let (second, _) = fleet.recv_any(None).unwrap().unwrap();
+        assert_eq!(second, 0);
+        for d in 0..2 {
+            fleet.send(d, &Message::Shutdown { reason: "t".into() }).unwrap();
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn recv_any_times_out_without_traffic() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = thread::spawn(move || {
+            let mut t = TcpTransport::connect(&addr).unwrap();
+            t.send(&hello(0, 1)).unwrap();
+            let _ = t.recv(); // blocks until shutdown
+        });
+        let (mut fleet, _) = PollFleet::accept(&listener, 1).unwrap();
+        let t0 = Instant::now();
+        assert!(fleet.recv_any(Some(0.05)).unwrap().is_none());
+        let waited = t0.elapsed().as_secs_f64();
+        assert!(waited >= 0.04, "returned too early ({waited}s)");
+        assert!(waited < 2.0, "timeout wildly overshot ({waited}s)");
+        fleet.send(0, &Message::Shutdown { reason: "t".into() }).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn disconnect_surfaces_peer_closed() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = thread::spawn(move || {
+            let mut t = TcpTransport::connect(&addr).unwrap();
+            t.send(&hello(0, 1)).unwrap();
+            // drop: clean close after the handshake
+        });
+        let (mut fleet, _) = PollFleet::accept(&listener, 1).unwrap();
+        handle.join().unwrap();
+        let err = fleet.recv_from(0).unwrap_err();
+        assert!(err.is_peer_closed(), "want PeerClosed, got {err:?}");
+    }
+}

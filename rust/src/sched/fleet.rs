@@ -1,0 +1,332 @@
+//! The fleet abstraction the round scheduler drives, plus the in-process
+//! implementation.
+//!
+//! [`Fleet`] is the seam between *scheduling* (which device to step next,
+//! when to give up on a straggler) and *transport* (how bytes move).
+//! Implementations:
+//!
+//! * [`PumpFleet`] — wraps the loopback connections of an in-process
+//!   session. Single-threaded, so "time" is a **virtual clock**: each
+//!   message is stamped with an arrival time derived from an optional
+//!   per-device artificial delay (plus seeded jitter), and `recv_any`
+//!   replays messages in stamped order, advancing the clock. This makes
+//!   arrival-order scheduling, straggler timeouts, and quorum closes fully
+//!   deterministic in unit tests — no real sleeping anywhere.
+//! * [`crate::sched::event_loop::PollFleet`] — real non-blocking TCP
+//!   sockets behind `poll`, wall-clock time.
+
+use std::collections::VecDeque;
+
+use crate::transport::proto::Message;
+use crate::transport::{Transport, TransportError, WireStats};
+use crate::util::rng::Pcg32;
+
+/// A set of device connections the scheduler can step in any order.
+pub trait Fleet {
+    fn devices(&self) -> usize;
+
+    /// Fleet-clock seconds since session start: virtual for in-process
+    /// fleets, wall-clock for socket fleets. Monotone non-decreasing.
+    fn now_s(&self) -> f64;
+
+    /// Send one message to device `d`.
+    fn send(&mut self, d: usize, msg: &Message) -> Result<(), TransportError>;
+
+    /// Next message from device `d` specifically (the in-order path).
+    /// Messages other devices deliver in the meantime stay queued.
+    fn recv_from(&mut self, d: usize) -> Result<Message, TransportError>;
+
+    /// Next message from *any* device, in arrival order. `Ok(None)` once
+    /// `timeout_s` elapses with nothing arriving; `None` timeout waits
+    /// indefinitely.
+    fn recv_any(
+        &mut self,
+        timeout_s: Option<f64>,
+    ) -> Result<Option<(usize, Message)>, TransportError>;
+
+    /// Give an in-process device worker its turn (no-op on socket fleets,
+    /// where remote devices run themselves).
+    fn pump(&mut self, d: usize) -> Result<(), String>;
+
+    /// Framed-byte accounting for device `d`'s connection.
+    fn stats(&self, d: usize) -> WireStats;
+
+    /// Peer label for logs.
+    fn peer(&self, d: usize) -> String;
+}
+
+/// In-process fleet over loopback transports (see module docs).
+pub struct PumpFleet<'a, P: FnMut(usize) -> Result<(), String>> {
+    conns: &'a mut [Box<dyn Transport>],
+    pump_fn: P,
+    /// per-device queue of (message, virtual arrival time)
+    pending: Vec<VecDeque<(Message, f64)>>,
+    /// per-device artificial delay in virtual seconds (0 = instant)
+    delays: Vec<f64>,
+    rng: Pcg32,
+    now: f64,
+}
+
+impl<'a, P: FnMut(usize) -> Result<(), String>> PumpFleet<'a, P> {
+    /// Plain fleet: no artificial delays, arrival ties broken by device id
+    /// (which makes zero-delay arrival-order runs identical to in-order).
+    pub fn new(conns: &'a mut [Box<dyn Transport>], pump_fn: P) -> PumpFleet<'a, P> {
+        let n = conns.len();
+        Self::with_delays(conns, pump_fn, vec![0.0; n], 0)
+    }
+
+    /// Fleet with a seeded artificial-delay shim: every message from
+    /// device `d` arrives `delays[d]` virtual seconds after it was handed
+    /// to the transport, jittered ±10% from `seed` so arrival interleaving
+    /// is exercised but exactly reproducible.
+    pub fn with_delays(
+        conns: &'a mut [Box<dyn Transport>],
+        pump_fn: P,
+        delays: Vec<f64>,
+        seed: u64,
+    ) -> PumpFleet<'a, P> {
+        let n = conns.len();
+        assert_eq!(delays.len(), n, "one delay per device");
+        PumpFleet {
+            conns,
+            pump_fn,
+            pending: (0..n).map(|_| VecDeque::new()).collect(),
+            delays,
+            rng: Pcg32::new(seed, 0x57AC_4EED),
+            now: 0.0,
+        }
+    }
+
+    /// Virtual clock (exposed for tests).
+    pub fn clock_s(&self) -> f64 {
+        self.now
+    }
+
+    /// Pump device `d` and stamp anything it produced with an arrival time.
+    fn fill(&mut self, d: usize) -> Result<(), TransportError> {
+        (self.pump_fn)(d).map_err(TransportError::Protocol)?;
+        while let Some(msg) = self.conns[d].try_recv()? {
+            let arrival = if self.delays[d] > 0.0 {
+                let jitter = self.rng.range_f32(0.9, 1.1) as f64;
+                self.now + self.delays[d] * jitter
+            } else {
+                self.now
+            };
+            self.pending[d].push_back((msg, arrival));
+        }
+        Ok(())
+    }
+
+    /// Earliest pending head across all devices: (arrival, device).
+    fn earliest_head(&self) -> Option<(f64, usize)> {
+        let mut best: Option<(f64, usize)> = None;
+        for (d, q) in self.pending.iter().enumerate() {
+            if let Some((_, a)) = q.front() {
+                let a = *a;
+                let better = match best {
+                    None => true,
+                    Some((ba, bd)) => a < ba || (a == ba && d < bd),
+                };
+                if better {
+                    best = Some((a, d));
+                }
+            }
+        }
+        best
+    }
+}
+
+impl<P: FnMut(usize) -> Result<(), String>> Fleet for PumpFleet<'_, P> {
+    fn devices(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn now_s(&self) -> f64 {
+        self.now
+    }
+
+    fn send(&mut self, d: usize, msg: &Message) -> Result<(), TransportError> {
+        self.conns[d].send(msg)
+    }
+
+    fn recv_from(&mut self, d: usize) -> Result<Message, TransportError> {
+        if self.pending[d].is_empty() {
+            self.fill(d)?;
+        }
+        match self.pending[d].pop_front() {
+            Some((msg, arrival)) => {
+                if arrival > self.now {
+                    self.now = arrival;
+                }
+                Ok(msg)
+            }
+            None => Err(TransportError::Protocol(format!(
+                "no message queued from device {d} \
+                 (single-threaded in-process fleet cannot block)"
+            ))),
+        }
+    }
+
+    fn recv_any(
+        &mut self,
+        timeout_s: Option<f64>,
+    ) -> Result<Option<(usize, Message)>, TransportError> {
+        for d in 0..self.conns.len() {
+            if self.pending[d].is_empty() {
+                self.fill(d)?;
+            }
+        }
+        match self.earliest_head() {
+            None => match timeout_s {
+                Some(t) => {
+                    // nothing in flight: burn the timeout on the virtual clock
+                    self.now += t.max(0.0);
+                    Ok(None)
+                }
+                None => Err(TransportError::Protocol(
+                    "recv_any: every queue is empty and nothing is in flight \
+                     (single-threaded in-process fleet cannot block)"
+                        .to_string(),
+                )),
+            },
+            Some((arrival, d)) => {
+                if let Some(t) = timeout_s {
+                    if arrival > self.now + t {
+                        // earliest message lands past the deadline: time out
+                        self.now += t.max(0.0);
+                        return Ok(None);
+                    }
+                }
+                if arrival > self.now {
+                    self.now = arrival;
+                }
+                let (msg, _) = self.pending[d].pop_front().unwrap();
+                Ok(Some((d, msg)))
+            }
+        }
+    }
+
+    fn pump(&mut self, d: usize) -> Result<(), String> {
+        (self.pump_fn)(d)
+    }
+
+    fn stats(&self, d: usize) -> WireStats {
+        self.conns[d].stats()
+    }
+
+    fn peer(&self, d: usize) -> String {
+        self.conns[d].peer()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::loopback;
+
+    fn fleet_pair(
+        n: usize,
+    ) -> (Vec<loopback::Loopback>, Vec<Box<dyn Transport>>) {
+        let mut dev = Vec::new();
+        let mut srv: Vec<Box<dyn Transport>> = Vec::new();
+        for d in 0..n {
+            let (de, se) = loopback::pair(&format!("f{d}"));
+            dev.push(de);
+            srv.push(Box::new(se));
+        }
+        (dev, srv)
+    }
+
+    #[test]
+    fn zero_delay_recv_any_is_id_order() {
+        let (mut dev, mut srv) = fleet_pair(3);
+        for (d, end) in dev.iter_mut().enumerate() {
+            end.send(&Message::RoundOpen { round: d as u32, sync: false }).unwrap();
+        }
+        let mut fleet = PumpFleet::new(&mut srv, |_| Ok(()));
+        for want in 0..3 {
+            let (d, msg) = fleet.recv_any(None).unwrap().unwrap();
+            assert_eq!(d, want);
+            assert!(matches!(msg, Message::RoundOpen { .. }));
+        }
+        assert_eq!(fleet.now_s(), 0.0);
+    }
+
+    #[test]
+    fn delays_reorder_and_advance_the_clock() {
+        let (mut dev, mut srv) = fleet_pair(2);
+        for end in dev.iter_mut() {
+            end.send(&Message::RoundOpen { round: 0, sync: false }).unwrap();
+        }
+        // device 0 is slow (1.0 s), device 1 fast (0.01 s)
+        let mut fleet =
+            PumpFleet::with_delays(&mut srv, |_| Ok(()), vec![1.0, 0.01], 7);
+        let (first, _) = fleet.recv_any(None).unwrap().unwrap();
+        assert_eq!(first, 1, "fast device must arrive first");
+        let t1 = fleet.now_s();
+        assert!(t1 > 0.0 && t1 < 0.1);
+        let (second, _) = fleet.recv_any(None).unwrap().unwrap();
+        assert_eq!(second, 0);
+        assert!(fleet.now_s() > 0.8, "clock must advance to the slow arrival");
+    }
+
+    #[test]
+    fn timeout_expires_before_slow_arrival() {
+        let (mut dev, mut srv) = fleet_pair(2);
+        for end in dev.iter_mut() {
+            end.send(&Message::RoundOpen { round: 0, sync: false }).unwrap();
+        }
+        let mut fleet =
+            PumpFleet::with_delays(&mut srv, |_| Ok(()), vec![5.0, 0.0], 7);
+        // fast one arrives inside the window
+        let got = fleet.recv_any(Some(0.5)).unwrap();
+        assert_eq!(got.map(|(d, _)| d), Some(1));
+        // slow one does not: timeout, clock advances by the timeout
+        let before = fleet.now_s();
+        assert!(fleet.recv_any(Some(0.5)).unwrap().is_none());
+        assert!((fleet.now_s() - before - 0.5).abs() < 1e-9);
+        // eventually (unbounded wait) it lands
+        let got = fleet.recv_any(None).unwrap();
+        assert_eq!(got.map(|(d, _)| d), Some(0));
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let order_for = |seed: u64| -> Vec<usize> {
+            let (mut dev, mut srv) = fleet_pair(3);
+            for end in dev.iter_mut() {
+                for r in 0..3 {
+                    end.send(&Message::RoundOpen { round: r, sync: false }).unwrap();
+                }
+            }
+            let mut fleet = PumpFleet::with_delays(
+                &mut srv,
+                |_| Ok(()),
+                vec![0.3, 0.2, 0.25],
+                seed,
+            );
+            let mut order = Vec::new();
+            while let Ok(Some((d, _))) = fleet.recv_any(None) {
+                order.push(d);
+                if order.len() == 9 {
+                    break;
+                }
+            }
+            order
+        };
+        assert_eq!(order_for(42), order_for(42), "seeded shim must be deterministic");
+    }
+
+    #[test]
+    fn recv_from_skips_other_devices() {
+        let (mut dev, mut srv) = fleet_pair(2);
+        dev[0].send(&Message::RoundOpen { round: 0, sync: false }).unwrap();
+        dev[1].send(&Message::Shutdown { reason: "x".into() }).unwrap();
+        let mut fleet = PumpFleet::new(&mut srv, |_| Ok(()));
+        let msg = fleet.recv_from(1).unwrap();
+        assert!(matches!(msg, Message::Shutdown { .. }));
+        let msg = fleet.recv_from(0).unwrap();
+        assert!(matches!(msg, Message::RoundOpen { .. }));
+        assert!(fleet.recv_from(0).is_err(), "empty queue cannot block");
+    }
+}

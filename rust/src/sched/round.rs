@@ -1,0 +1,550 @@
+//! The out-of-order round scheduler: owns round state and decides which
+//! device to step next.
+//!
+//! [`RoundScheduler::run`] drives a handshaken session over any
+//! [`Fleet`], calling back into [`ServerRuntime`] for the compute work
+//! (decompress → `server_step` → compress). Three behaviors, selected by
+//! [`Policy`]:
+//!
+//! * **InOrder** — the PR 1 baseline, replicated message-for-message:
+//!   devices are processed in id order every round, so a session's
+//!   numerics and wire bytes are identical across transports and timings.
+//! * **ArrivalOrder** — stages ii–iii run for whichever device's
+//!   Activations frame lands first. Numerics depend on arrival order (the
+//!   shared server sub-model makes stage iii order-sensitive), which is
+//!   exactly the accuracy/time trade-off this mode exists to measure.
+//! * **ArrivalOrder + straggler timeout / quorum** — a round closes once
+//!   the timeout expires with at least `min_quorum` arrivals; devices that
+//!   missed the close are *carried*: their stale Activations are served
+//!   whenever they land (against the then-current server model), after
+//!   which the device rejoins at the next round boundary. Aggregation
+//!   rounds FedAvg over whatever sub-models are available (partial
+//!   aggregation), and the broadcast goes only to devices at a round
+//!   boundary — a straggler mid-backward must not have its params swapped
+//!   underneath it.
+//!
+//! Every round's participants, stragglers, and per-device waits are
+//! recorded into [`crate::net::timeline::Timeline`] via [`SchedRecord`],
+//! and the simulated round time excludes carried stragglers
+//! ([`crate::net::NetworkSim::round_cost_sched`]) — closing a round
+//! without the slow device is the whole point.
+
+use std::time::Instant;
+
+use crate::coordinator::metrics::RoundRecord;
+use crate::net::timeline::SchedRecord;
+use crate::sched::fleet::Fleet;
+use crate::sched::Policy;
+use crate::transport::compute::Compute;
+use crate::transport::proto::Message;
+use crate::transport::server::ServerRuntime;
+
+/// Where one device stands in the round protocol.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    /// At a round boundary: safe to open a new round or receive a FedAvg
+    /// broadcast.
+    Idle,
+    /// RoundOpen sent; owes Activations for `round`.
+    Open { round: usize, sync: bool, opened_s: f64 },
+    /// Gradients sent for `round`; owes a ModelSync push.
+    AwaitSync { round: usize },
+}
+
+/// Outcome of a scheduled session (the runtime assembles the report).
+pub struct SchedOutcome {
+    pub rounds_run: usize,
+    pub time_to_target_s: Option<f64>,
+}
+
+/// Drives the per-round message flow for one session.
+pub struct RoundScheduler {
+    policy: Policy,
+}
+
+impl RoundScheduler {
+    pub fn new(policy: Policy) -> RoundScheduler {
+        RoundScheduler { policy }
+    }
+
+    pub fn run<C: Compute>(
+        &mut self,
+        rt: &mut ServerRuntime<C>,
+        fleet: &mut dyn Fleet,
+    ) -> Result<SchedOutcome, String> {
+        match self.policy {
+            Policy::InOrder => run_in_order(rt, fleet),
+            Policy::ArrivalOrder { straggler_timeout_s, min_quorum } => {
+                run_arrival(rt, fleet, straggler_timeout_s, min_quorum)
+            }
+        }
+    }
+}
+
+/// Shared per-round bookkeeping: record cost + metrics, evaluate, check
+/// the early-stop target. Returns `true` when the session should stop.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn close_round<C: Compute>(
+    rt: &mut ServerRuntime<C>,
+    round: usize,
+    wall: Instant,
+    eval_due: bool,
+    loss: f64,
+    bytes: (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>),
+    active: Vec<bool>,
+    sched: SchedRecord,
+    time_to_target: &mut Option<f64>,
+) -> Result<bool, String> {
+    let label = rt.cfg.label.clone();
+    let (up, down, sync_up, sync_down) = bytes;
+    let cost = rt.net.round_cost_sched(&up, &down, &sync_up, &sync_down, &active);
+    let participants = sched.participants.len();
+    let stragglers = sched.stragglers.len();
+    rt.timeline.push_with_sched(cost, sched);
+    // a straggling device 0 has no fresh sub-model to evaluate; skip the
+    // eval rather than fail the session (InOrder never hits this)
+    let accuracy = if eval_due && rt.client_params[0].is_some() {
+        Some(rt.evaluate()?)
+    } else {
+        None
+    };
+    let rec = RoundRecord {
+        round,
+        loss,
+        accuracy,
+        bytes_up: cost.bytes_up,
+        bytes_down: cost.bytes_down,
+        bytes_sync: cost.bytes_sync,
+        participants,
+        stragglers,
+        sim_time_s: rt.timeline.total_time(),
+        wall_ms: wall.elapsed().as_secs_f64() * 1e3,
+    };
+    let mut stop = false;
+    if let Some(acc) = accuracy {
+        crate::log_info!(
+            "[{label}] round {round}: loss {loss:.4} acc {:.2}% sim_t {:.1}s",
+            acc * 100.0,
+            rec.sim_time_s
+        );
+        if let Some(target) = rt.cfg.target_accuracy {
+            if acc >= target && time_to_target.is_none() {
+                *time_to_target = Some(rec.sim_time_s);
+                stop = true;
+            }
+        }
+    } else {
+        crate::log_debug!("[{label}] round {round}: loss {loss:.4}");
+    }
+    rt.metrics.push(rec);
+    Ok(stop)
+}
+
+/// The deterministic baseline: PR 1's device-id-order round loop,
+/// message-for-message (byte parity with the pre-scheduler goldens).
+fn run_in_order<C: Compute>(
+    rt: &mut ServerRuntime<C>,
+    fleet: &mut dyn Fleet,
+) -> Result<SchedOutcome, String> {
+    let n = rt.cfg.devices;
+    let mut time_to_target = None;
+    let mut rounds_run = 0;
+    for round in 0..rt.cfg.rounds {
+        let wall = Instant::now();
+        let agg_due = (round + 1) % rt.cfg.client_agg_every == 0;
+        let eval_due =
+            (round + 1) % rt.cfg.eval_every == 0 || round + 1 == rt.cfg.rounds;
+        // aggregation needs every device's sub-model; evaluation only
+        // device 0's — don't ship N-1 unused full models on eval-only
+        // rounds (ModelSync is outside the smashed-data byte axis, but
+        // it is real wall-clock on a wide fleet)
+        let wants_sync = |d: usize| agg_due || (eval_due && d == 0);
+
+        // stage i fans out to every device in parallel
+        for d in 0..n {
+            fleet.send(d, &Message::RoundOpen { round: round as u32, sync: wants_sync(d) })?;
+        }
+        for d in 0..n {
+            fleet.pump(d)?;
+        }
+
+        // stages ii-iii, sequential in device order (shared server model)
+        let mut up = vec![0usize; n];
+        let mut down = vec![0usize; n];
+        let mut sync_up = vec![0usize; n];
+        let mut sync_down = vec![0usize; n];
+        let mut loss_sum = 0.0f64;
+        for d in 0..n {
+            let msg = fleet.recv_from(d)?;
+            let (r2, dev, labels, payload) = match msg {
+                Message::Activations { round, device_id, labels, payload } => {
+                    (round as usize, device_id as usize, labels, payload)
+                }
+                other => {
+                    return Err(format!(
+                        "round {round}: expected Activations from device {d}, got {}",
+                        other.type_name()
+                    ))
+                }
+            };
+            if r2 != round || dev != d {
+                return Err(format!(
+                    "round {round}: device {d} sent activations for round {r2} as device {dev}"
+                ));
+            }
+            up[d] = payload.len();
+            let (loss, payload_down) = rt.step_device(d, round, &labels, &payload)?;
+            loss_sum += loss;
+            down[d] = payload_down.len();
+            fleet.send(d, &Message::Gradients {
+                round: round as u32,
+                device_id: d as u32,
+                loss: loss as f32,
+                payload: payload_down,
+            })?;
+        }
+        for d in 0..n {
+            fleet.pump(d)?;
+        }
+
+        // SFL aggregation / model sync
+        if agg_due || eval_due {
+            for d in 0..n {
+                if !wants_sync(d) {
+                    continue;
+                }
+                let msg = fleet.recv_from(d)?;
+                match msg {
+                    Message::ModelSync { device_id, payload, .. }
+                        if device_id as usize == d && !payload.is_empty() =>
+                    {
+                        sync_up[d] = payload.len();
+                        rt.accept_sync(d, &payload)?;
+                    }
+                    other => {
+                        return Err(format!(
+                            "round {round}: expected non-empty ModelSync from device {d}, got {}",
+                            other.type_name()
+                        ))
+                    }
+                }
+            }
+            if agg_due {
+                let basis: Vec<usize> = (0..n).collect();
+                let reply = rt.fedavg_over(&basis, round)?;
+                for d in 0..n {
+                    let payload = rt.pack_broadcast(d, &reply);
+                    sync_down[d] = payload.len();
+                    fleet.send(d, &Message::ModelSync {
+                        round: round as u32,
+                        device_id: d as u32,
+                        payload,
+                    })?;
+                }
+                rt.set_all_params(reply);
+            }
+            for d in 0..n {
+                fleet.pump(d)?;
+            }
+        }
+
+        rounds_run = round + 1;
+        let loss = loss_sum / n as f64;
+        let sched = SchedRecord {
+            round,
+            participants: (0..n).collect(),
+            stale: Vec::new(),
+            stragglers: Vec::new(),
+            wait_s: vec![0.0; n],
+        };
+        let stop = close_round(
+            rt,
+            round,
+            wall,
+            eval_due,
+            loss,
+            (up, down, sync_up, sync_down),
+            vec![true; n],
+            sched,
+            &mut time_to_target,
+        )?;
+        if stop {
+            break;
+        }
+    }
+    Ok(SchedOutcome { rounds_run, time_to_target_s: time_to_target })
+}
+
+/// Arrival-order scheduling with optional straggler timeout + quorum.
+fn run_arrival<C: Compute>(
+    rt: &mut ServerRuntime<C>,
+    fleet: &mut dyn Fleet,
+    timeout_s: Option<f64>,
+    min_quorum: Option<usize>,
+) -> Result<SchedOutcome, String> {
+    let n = rt.cfg.devices;
+    let label = rt.cfg.label.clone();
+    let mut phase = vec![Phase::Idle; n];
+    let mut time_to_target = None;
+    let mut rounds_run = 0;
+    for round in 0..rt.cfg.rounds {
+        let wall = Instant::now();
+        let agg_due = (round + 1) % rt.cfg.client_agg_every == 0;
+        let eval_due =
+            (round + 1) % rt.cfg.eval_every == 0 || round + 1 == rt.cfg.rounds;
+        let wants_sync = |d: usize| agg_due || (eval_due && d == 0);
+
+        let mut opened = Vec::new();
+        let mut open_s = fleet.now_s();
+
+        let mut up = vec![0usize; n];
+        let mut down = vec![0usize; n];
+        let mut sync_up = vec![0usize; n];
+        let mut sync_down = vec![0usize; n];
+        let mut wait_s = vec![0.0f64; n];
+        let mut active = vec![false; n];
+        let mut participants: Vec<usize> = Vec::new();
+        let mut stale: Vec<usize> = Vec::new();
+        let mut loss_sum = 0.0f64;
+        let mut steps = 0usize;
+
+        loop {
+            // open the round for devices at a round boundary. Opening is
+            // *lazy*: if every device is mid-carry (all straggling or
+            // finishing old syncs), the loop below serves their carried
+            // work until one reaches a boundary, and THAT device opens
+            // this round — so every recorded round runs at least one real
+            // step and the fleet can never deadlock waiting for a
+            // RoundOpen nobody is eligible to receive. Once a first batch
+            // has opened, later-freed devices wait for the next round.
+            if opened.is_empty() {
+                for d in 0..n {
+                    if phase[d] == Phase::Idle {
+                        fleet.send(d, &Message::RoundOpen {
+                            round: round as u32,
+                            sync: wants_sync(d),
+                        })?;
+                        phase[d] = Phase::Open {
+                            round,
+                            sync: wants_sync(d),
+                            opened_s: fleet.now_s(),
+                        };
+                        opened.push(d);
+                    }
+                }
+                if !opened.is_empty() {
+                    for d in 0..n {
+                        fleet.pump(d)?;
+                    }
+                    open_s = fleet.now_s();
+                }
+            }
+            // a timeout with no explicit quorum closes with whoever has
+            // delivered (>= 1 step) — `--straggler-timeout` must do what
+            // it says on its own; clamped to what was opened this round
+            let required = min_quorum.unwrap_or(1).min(opened.len());
+            // completion close: everyone opened this round has delivered
+            // (Activations, plus the ModelSync push when requested)
+            let outstanding = opened
+                .iter()
+                .filter(|&&d| match phase[d] {
+                    Phase::Open { round: r, .. } => r == round,
+                    Phase::AwaitSync { round: r } => r == round,
+                    Phase::Idle => false,
+                })
+                .count();
+            let worked = participants.len() + stale.len();
+            if outstanding == 0 && worked > 0 {
+                break;
+            }
+            // timeout close: deadline passed with a quorum of this round's
+            // Activations processed (a round with zero server steps would
+            // be meaningless, hence `worked > 0`). `rem` is computed once
+            // per iteration so the close test and the recv timeout agree
+            // at the float boundary.
+            let mut timeout_arg = None;
+            if let Some(t) = timeout_s {
+                if !opened.is_empty() {
+                    let rem = open_s + t - fleet.now_s();
+                    if rem <= 0.0 {
+                        if worked > 0 && participants.len() >= required {
+                            break;
+                        }
+                        // past the deadline but below quorum: wait unbounded
+                    } else {
+                        timeout_arg = Some(rem);
+                    }
+                }
+                // nobody opened yet: block until carried work frees someone
+            }
+            let Some((d, msg)) = fleet.recv_any(timeout_arg)? else {
+                continue; // timeout expired; re-evaluate the close conditions
+            };
+            match msg {
+                Message::Activations { round: r2, device_id, labels, payload } => {
+                    if device_id as usize != d {
+                        return Err(format!(
+                            "round {round}: device {d} sent activations labeled device {device_id}"
+                        ));
+                    }
+                    let (oround, osync, opened_at) = match phase[d] {
+                        Phase::Open { round, sync, opened_s } => (round, sync, opened_s),
+                        _ => {
+                            return Err(format!(
+                                "round {round}: unsolicited Activations from device {d}"
+                            ))
+                        }
+                    };
+                    if r2 as usize != oround {
+                        return Err(format!(
+                            "round {round}: device {d} sent activations for round {r2}, \
+                             was opened for {oround}"
+                        ));
+                    }
+                    up[d] += payload.len();
+                    let (loss, payload_down) =
+                        rt.step_device(d, oround, &labels, &payload)?;
+                    loss_sum += loss;
+                    steps += 1;
+                    down[d] += payload_down.len();
+                    fleet.send(d, &Message::Gradients {
+                        round: oround as u32,
+                        device_id: d as u32,
+                        loss: loss as f32,
+                        payload: payload_down,
+                    })?;
+                    fleet.pump(d)?;
+                    active[d] = true;
+                    wait_s[d] = fleet.now_s() - opened_at;
+                    if oround == round {
+                        participants.push(d);
+                    } else {
+                        stale.push(d);
+                        crate::log_info!(
+                            "[{label}] round {round}: straggler device {d} caught up \
+                             (round {oround} activations, waited {:.3}s)",
+                            wait_s[d]
+                        );
+                    }
+                    phase[d] = if osync {
+                        Phase::AwaitSync { round: oround }
+                    } else {
+                        Phase::Idle
+                    };
+                }
+                Message::ModelSync { round: r2, device_id, payload } => {
+                    if device_id as usize != d {
+                        return Err(format!(
+                            "round {round}: device {d} sent ModelSync labeled device {device_id}"
+                        ));
+                    }
+                    let owed = match phase[d] {
+                        Phase::AwaitSync { round } => round,
+                        _ => {
+                            return Err(format!(
+                                "round {round}: unsolicited ModelSync from device {d}"
+                            ))
+                        }
+                    };
+                    if r2 as usize != owed {
+                        return Err(format!(
+                            "round {round}: device {d} pushed ModelSync for round {r2}, \
+                             owes round {owed}"
+                        ));
+                    }
+                    if payload.is_empty() {
+                        return Err(format!(
+                            "round {round}: empty ModelSync push from device {d}"
+                        ));
+                    }
+                    sync_up[d] += payload.len();
+                    rt.accept_sync(d, &payload)?;
+                    // sync-only progress: the device ran no training step
+                    // this round, so it is NOT marked active (no phantom
+                    // fwd/bwd/server time) — round_cost_sched still
+                    // charges the sync bytes themselves. The loop top
+                    // opens it for this round if nobody has opened yet.
+                    phase[d] = Phase::Idle;
+                }
+                other => {
+                    return Err(format!(
+                        "round {round}: unexpected {} from device {d}",
+                        other.type_name()
+                    ))
+                }
+            }
+        }
+
+        // mark devices carried past this close
+        let close_s = fleet.now_s();
+        let required = min_quorum.unwrap_or(1).min(opened.len());
+        let mut stragglers = Vec::new();
+        for &d in &opened {
+            if let Phase::Open { round: r, opened_s, .. } = phase[d] {
+                if r == round {
+                    stragglers.push(d);
+                    wait_s[d] = close_s - opened_s;
+                    crate::log_info!(
+                        "[{label}] round {round}: carrying straggler device {d} \
+                         (waited {:.3}s, quorum {}/{})",
+                        wait_s[d],
+                        participants.len(),
+                        required
+                    );
+                }
+            }
+        }
+
+        // partial FedAvg over whatever sub-models are available; the
+        // broadcast goes only to devices at a round boundary
+        if agg_due {
+            let basis: Vec<usize> =
+                (0..n).filter(|&d| rt.client_params[d].is_some()).collect();
+            if basis.is_empty() {
+                crate::log_debug!(
+                    "[{label}] round {round}: no sub-models available, skipping FedAvg"
+                );
+            } else {
+                let reply = rt.fedavg_over(&basis, round)?;
+                for d in 0..n {
+                    if phase[d] == Phase::Idle {
+                        let payload = rt.pack_broadcast(d, &reply);
+                        sync_down[d] += payload.len();
+                        fleet.send(d, &Message::ModelSync {
+                            round: round as u32,
+                            device_id: d as u32,
+                            payload,
+                        })?;
+                        fleet.pump(d)?;
+                        rt.client_params[d] = Some(reply.clone());
+                    }
+                }
+            }
+        }
+
+        rounds_run = round + 1;
+        let loss = loss_sum / steps.max(1) as f64;
+        let sched = SchedRecord {
+            round,
+            participants: participants.clone(),
+            stale,
+            stragglers,
+            wait_s: wait_s.clone(),
+        };
+        let stop = close_round(
+            rt,
+            round,
+            wall,
+            eval_due,
+            loss,
+            (up, down, sync_up, sync_down),
+            active,
+            sched,
+            &mut time_to_target,
+        )?;
+        if stop {
+            break;
+        }
+    }
+    Ok(SchedOutcome { rounds_run, time_to_target_s: time_to_target })
+}

@@ -6,10 +6,15 @@
 //! replies to send; it is transport-agnostic, so the same worker runs
 //! behind an in-process loopback (pumped by the trainer) or a TCP
 //! connection in a separate `slacc device` process ([`run_blocking`]).
+//!
+//! ModelSync pushes ride the device's *sync codec stream*
+//! ([`crate::transport::sync`], `--sync-codec`, identity by default), so
+//! FedAvg traffic is byte-accounted and compressible like everything else
+//! on the wire.
 
 use std::sync::Arc;
 
-use crate::codecs::RoundCtx;
+use crate::codecs::{Codec, RoundCtx};
 use crate::config::ExperimentConfig;
 use crate::coordinator::device::DeviceState;
 use crate::data::loader::BatchLoader;
@@ -17,7 +22,7 @@ use crate::data::{partition, Dataset};
 
 use super::compute::{self, Compute, MockCompute};
 use super::proto::Message;
-use super::Transport;
+use super::{sync, Transport};
 
 struct Pending {
     round: u32,
@@ -35,6 +40,10 @@ pub struct DeviceWorker<C: Compute> {
     rounds: usize,
     lr: f32,
     session_fp: u64,
+    /// compresses this device's ModelSync pushes
+    sync_up: Box<dyn Codec>,
+    /// decompress twin for the server's FedAvg broadcasts
+    sync_down: Box<dyn Codec>,
     pending: Option<Pending>,
     done: bool,
 }
@@ -45,9 +54,11 @@ impl<C: Compute> DeviceWorker<C> {
         compute: C,
         data: Arc<Dataset>,
         cfg: &ExperimentConfig,
-    ) -> DeviceWorker<C> {
+    ) -> Result<DeviceWorker<C>, String> {
         let session_fp = super::session_fingerprint(cfg.fingerprint(), compute.kind());
-        DeviceWorker {
+        let sync_up = cfg.sync_uplink_codec(state.id)?;
+        let sync_down = cfg.sync_downlink_codec(state.id)?;
+        Ok(DeviceWorker {
             compute,
             data,
             state,
@@ -55,9 +66,11 @@ impl<C: Compute> DeviceWorker<C> {
             rounds: cfg.rounds,
             lr: cfg.lr,
             session_fp,
+            sync_up,
+            sync_down,
             pending: None,
             done: false,
-        }
+        })
     }
 
     pub fn id(&self) -> usize {
@@ -155,29 +168,47 @@ impl<C: Compute> DeviceWorker<C> {
                 )?;
                 self.state.client_params = new_params;
                 if pending.sync {
+                    let payload = sync::pack_params(
+                        &self.state.client_params,
+                        self.sync_up.as_mut(),
+                    );
                     Ok(vec![Message::ModelSync {
                         round,
                         device_id: me as u32,
-                        tensors: self.state.client_params.clone(),
+                        payload,
                     }])
                 } else {
                     Ok(Vec::new())
                 }
             }
-            Message::ModelSync { tensors, device_id, .. } => {
+            Message::ModelSync { payload, device_id, .. } => {
                 if device_id as usize != me {
                     return Err(format!(
                         "device {me}: ModelSync addressed to device {device_id}"
                     ));
                 }
-                // empty tensor list = "keep your local params" (non-agg round)
-                if !tensors.is_empty() {
+                // empty pack = "keep your local params" (non-agg round)
+                if !payload.is_empty() {
+                    let tensors = sync::unpack_params(&payload, self.sync_down.as_ref())
+                        .map_err(|e| format!("device {me}: ModelSync: {e}"))?;
+                    if tensors.is_empty() {
+                        return Ok(Vec::new());
+                    }
                     if tensors.len() != self.state.client_params.len() {
                         return Err(format!(
                             "device {me}: ModelSync has {} tensors, model has {}",
                             tensors.len(),
                             self.state.client_params.len()
                         ));
+                    }
+                    for (t, p) in tensors.iter().zip(self.state.client_params.iter()) {
+                        if t.dims() != p.dims() {
+                            return Err(format!(
+                                "device {me}: ModelSync tensor shape {:?} != model {:?}",
+                                t.dims(),
+                                p.dims()
+                            ));
+                        }
                     }
                     self.state.client_params = tensors;
                 }
@@ -253,5 +284,5 @@ pub fn mock_worker(
         cfg.downlink_codec(channels, id)?,
     );
     let classes = train.classes;
-    Ok(DeviceWorker::new(state, MockCompute::new(classes), train, cfg))
+    DeviceWorker::new(state, MockCompute::new(classes), train, cfg)
 }

@@ -14,7 +14,7 @@ use std::collections::VecDeque;
 use std::rc::Rc;
 
 use super::proto::Message;
-use super::{Transport, WireStats};
+use super::{Transport, TransportError, WireStats};
 
 type Queue = Rc<RefCell<VecDeque<Vec<u8>>>>;
 
@@ -46,7 +46,7 @@ pub fn pair(label: &str) -> (Loopback, Loopback) {
 }
 
 impl Transport for Loopback {
-    fn send(&mut self, msg: &Message) -> Result<(), String> {
+    fn send(&mut self, msg: &Message) -> Result<(), TransportError> {
         let frame = msg.encode_frame();
         self.stats.frames_sent += 1;
         self.stats.bytes_sent += frame.len() as u64;
@@ -54,25 +54,27 @@ impl Transport for Loopback {
         Ok(())
     }
 
-    fn recv(&mut self) -> Result<Message, String> {
+    fn recv(&mut self) -> Result<Message, TransportError> {
         match self.try_recv()? {
             Some(msg) => Ok(msg),
-            None => Err(format!(
+            None => Err(TransportError::Protocol(format!(
                 "loopback '{}': recv on empty queue (single-threaded loopback \
                  cannot block; pump the peer first)",
                 self.name
-            )),
+            ))),
         }
     }
 
-    fn try_recv(&mut self) -> Result<Option<Message>, String> {
+    fn try_recv(&mut self) -> Result<Option<Message>, TransportError> {
         let frame = self.inbox.borrow_mut().pop_front();
         match frame {
             None => Ok(None),
             Some(frame) => {
                 self.stats.frames_recv += 1;
                 self.stats.bytes_recv += frame.len() as u64;
-                Ok(Some(Message::decode_frame(&frame)?))
+                Ok(Some(
+                    Message::decode_frame(&frame).map_err(TransportError::Protocol)?,
+                ))
             }
         }
     }

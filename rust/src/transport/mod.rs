@@ -8,26 +8,32 @@
 //!   [`crate::coordinator::trainer::Trainer`] drives every simulated run
 //!   through it, so the simulator path and the real-socket path execute the
 //!   same protocol code.
-//! * [`tcp`] — `std::net` streams, one reader thread per accepted
-//!   connection on the server side (`slacc serve` / `slacc device`).
+//! * [`tcp`] — `std::net` streams. The device side reads lock-step on the
+//!   caller's thread; the server side no longer spawns a reader thread per
+//!   connection — `slacc serve` drives every accepted socket from one
+//!   non-blocking poll loop ([`crate::sched::event_loop`]). The threaded
+//!   accept mode in [`tcp`] remains for generic [`Transport`] consumers.
 //!
 //! The round loop itself lives in [`server::ServerRuntime`] (stages ii–iii:
 //! decompress → `server_step` → compress gradients) and
 //! [`device::DeviceWorker`] (stages i and iv), both expressed against the
 //! [`Transport`] trait, with the PJRT engine abstracted behind
 //! [`compute::Compute`] so protocol tests and `--mock` sessions run without
-//! AOT artifacts.
+//! AOT artifacts. Round *ordering* — in-order vs arrival-order, straggler
+//! timeouts, quorum closes — is owned by [`crate::sched::round`].
 //!
 //! Byte accounting: `NetworkSim::round_cost` is fed the codec *envelope*
 //! bytes (identical to what the in-process simulator always measured);
-//! [`WireStats`] additionally tracks full framed bytes per connection so
-//! the protocol overhead is observable.
+//! ModelSync traffic is packed through its own codec stream ([`sync`]) and
+//! accounted separately, and [`WireStats`] additionally tracks full framed
+//! bytes per connection so the protocol overhead is observable.
 
 pub mod compute;
 pub mod device;
 pub mod loopback;
 pub mod proto;
 pub mod server;
+pub mod sync;
 pub mod tcp;
 
 use proto::Message;
@@ -45,6 +51,85 @@ pub fn session_fingerprint(config_fp: u64, compute_kind: &str) -> u64 {
     h
 }
 
+/// What went wrong on a transport endpoint. Callers that only propagate
+/// context keep using `Result<_, String>` (`?` converts via
+/// `From<TransportError> for String`); callers that *react* to disconnects
+/// — the scheduler dropping a dead device, tests asserting clean-close
+/// semantics — match on [`TransportError::PeerClosed`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// The peer closed the connection cleanly (EOF at a frame boundary).
+    PeerClosed { peer: String },
+    /// The connection is alive but carried bytes that violate the framed
+    /// protocol (bad magic, oversized lengths, unexpected message, ...).
+    Protocol(String),
+    /// OS-level I/O failure: reset, refused, or a mid-frame truncation.
+    Io(String),
+}
+
+impl TransportError {
+    pub fn is_peer_closed(&self) -> bool {
+        matches!(self, TransportError::PeerClosed { .. })
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::PeerClosed { peer } => {
+                write!(f, "{peer}: peer closed the connection")
+            }
+            TransportError::Protocol(m) => write!(f, "protocol error: {m}"),
+            TransportError::Io(m) => write!(f, "i/o error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<TransportError> for String {
+    fn from(e: TransportError) -> String {
+        e.to_string()
+    }
+}
+
+/// A [`Transport`] decorator that sleeps before forwarding Activations —
+/// latency injection for straggler tests, benches, and examples (a real
+/// slow device on a real socket, not a simulated one).
+pub struct DelayedTransport<T: Transport> {
+    inner: T,
+    delay: std::time::Duration,
+}
+
+impl<T: Transport> DelayedTransport<T> {
+    /// Delay every Activations send by `delay` (the straggler shape:
+    /// slow client compute / slow uplink).
+    pub fn slow_activations(inner: T, delay: std::time::Duration) -> DelayedTransport<T> {
+        DelayedTransport { inner, delay }
+    }
+}
+
+impl<T: Transport> Transport for DelayedTransport<T> {
+    fn send(&mut self, msg: &Message) -> Result<(), TransportError> {
+        if matches!(msg, Message::Activations { .. }) {
+            std::thread::sleep(self.delay);
+        }
+        self.inner.send(msg)
+    }
+    fn recv(&mut self) -> Result<Message, TransportError> {
+        self.inner.recv()
+    }
+    fn try_recv(&mut self) -> Result<Option<Message>, TransportError> {
+        self.inner.try_recv()
+    }
+    fn stats(&self) -> WireStats {
+        self.inner.stats()
+    }
+    fn peer(&self) -> String {
+        self.inner.peer()
+    }
+}
+
 /// Cumulative framed-byte accounting for one transport endpoint.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct WireStats {
@@ -58,14 +143,14 @@ pub struct WireStats {
 /// server. Implementations: [`loopback::Loopback`], [`tcp::TcpTransport`].
 pub trait Transport {
     /// Serialize and send one message.
-    fn send(&mut self, msg: &Message) -> Result<(), String>;
+    fn send(&mut self, msg: &Message) -> Result<(), TransportError>;
 
     /// Receive the next message. TCP blocks; loopback (single-threaded)
     /// errors if the peer has not been pumped — see [`loopback`].
-    fn recv(&mut self) -> Result<Message, String>;
+    fn recv(&mut self) -> Result<Message, TransportError>;
 
     /// Non-blocking receive: `Ok(None)` when nothing is queued.
-    fn try_recv(&mut self) -> Result<Option<Message>, String>;
+    fn try_recv(&mut self) -> Result<Option<Message>, TransportError>;
 
     /// Framed bytes sent/received so far on this endpoint.
     fn stats(&self) -> WireStats;

@@ -13,13 +13,20 @@
 //! opaque byte blobs inside [`Message::Activations`] / [`Message::Gradients`]
 //! — the transport never re-encodes smashed data, so the byte count the
 //! network simulator accounts is exactly the envelope the codec produced.
+//! [`Message::ModelSync`] likewise carries an opaque blob: the sub-model
+//! pack produced by [`crate::transport::sync`], which routes FedAvg traffic
+//! through its own codec stream.
 //!
 //! Like the payload header's `MAX_ELEMENTS` guard, every length field read
 //! off the wire is capped *before* allocation so a hostile 10-byte frame
 //! header cannot demand gigabytes.
+//!
+//! Two read paths exist: [`read_frame`] / [`read_frame_or_eof`] for
+//! blocking streams (one `read_exact` per header/body), and
+//! [`FrameDecoder`] for non-blocking sockets driven by a poll loop — feed
+//! it whatever bytes `read` produced, pop complete messages.
 
-use crate::quant::payload::{ByteReader, ByteWriter, MAX_ELEMENTS};
-use crate::tensor::Tensor;
+use crate::quant::payload::{ByteReader, ByteWriter};
 
 /// Frame magic: "SLAC" in ASCII.
 pub const FRAME_MAGIC: u32 = 0x534C_4143;
@@ -32,10 +39,6 @@ pub const FRAME_HEADER_BYTES: usize = 4 + 1 + 1 + 4;
 pub const MAX_FRAME_BODY: usize = 1 << 30;
 /// Cap on a label vector per batch (a batch is never near this).
 const MAX_LABELS: usize = 1 << 20;
-/// Cap on tensors per ModelSync (a sub-model has a handful of params).
-const MAX_TENSORS: usize = 1 << 12;
-/// Cap on tensor rank.
-const MAX_RANK: usize = 8;
 /// Cap on string fields (codec names, shutdown reasons).
 const MAX_STR: usize = 4096;
 
@@ -77,10 +80,12 @@ pub enum Message {
     /// server → device: stage-iv downlink — compressed cut-layer gradients
     /// and this device's training loss for the round.
     Gradients { round: u32, device_id: u32, loss: f32, payload: Vec<u8> },
-    /// Both directions: client sub-model parameters. Device → server pushes
-    /// the post-backward params; server → device returns the FedAvg result
-    /// (an empty tensor list means "keep what you have").
-    ModelSync { round: u32, device_id: u32, tensors: Vec<Tensor> },
+    /// Both directions: client sub-model parameters, packed through the
+    /// session's ModelSync codec stream ([`crate::transport::sync`]).
+    /// Device → server pushes the post-backward params; server → device
+    /// returns the FedAvg result (an empty payload means "keep what you
+    /// have").
+    ModelSync { round: u32, device_id: u32, payload: Vec<u8> },
     /// server → device: session over (completed, early-stopped, or failed).
     Shutdown { reason: String },
 }
@@ -143,13 +148,10 @@ impl Message {
                 w.f32(*loss);
                 write_blob(w, payload);
             }
-            Message::ModelSync { round, device_id, tensors } => {
+            Message::ModelSync { round, device_id, payload } => {
                 w.u32(*round);
                 w.u32(*device_id);
-                w.u32(tensors.len() as u32);
-                for t in tensors {
-                    write_tensor(w, t);
-                }
+                write_blob(w, payload);
             }
             Message::Shutdown { reason } => {
                 write_str(w, reason);
@@ -195,19 +197,11 @@ impl Message {
                 loss: r.f32()?,
                 payload: read_blob(r)?,
             },
-            msg_type::MODEL_SYNC => {
-                let round = r.u32()?;
-                let device_id = r.u32()?;
-                let n = r.u32()? as usize;
-                if n > MAX_TENSORS {
-                    return Err(format!("frame claims {n} tensors (cap {MAX_TENSORS})"));
-                }
-                let mut tensors = Vec::with_capacity(n);
-                for _ in 0..n {
-                    tensors.push(read_tensor(r)?);
-                }
-                Message::ModelSync { round, device_id, tensors }
-            }
+            msg_type::MODEL_SYNC => Message::ModelSync {
+                round: r.u32()?,
+                device_id: r.u32()?,
+                payload: read_blob(r)?,
+            },
             msg_type::SHUTDOWN => Message::Shutdown { reason: read_str(r)? },
             other => return Err(format!("unknown message type {other}")),
         };
@@ -247,12 +241,21 @@ impl Message {
                 r.remaining()
             ));
         }
-        let msg = Message::read_body(ty, &mut r)?;
-        if r.remaining() != 0 {
-            return Err(format!("{} bytes of trailing garbage after body", r.remaining()));
-        }
-        Ok(msg)
+        decode_body(ty, &buf[FRAME_HEADER_BYTES..])
     }
+}
+
+/// Decode one complete frame body, enforcing the trailing-garbage check —
+/// the single implementation behind the blocking reader, the incremental
+/// [`FrameDecoder`], and [`Message::decode_frame`], so the device side and
+/// the poll server can never disagree on what constitutes a valid frame.
+fn decode_body(ty: u8, body: &[u8]) -> Result<Message, String> {
+    let mut r = ByteReader::new(body);
+    let msg = Message::read_body(ty, &mut r)?;
+    if r.remaining() != 0 {
+        return Err(format!("{} bytes of trailing garbage after body", r.remaining()));
+    }
+    Ok(msg)
 }
 
 fn read_frame_header(r: &mut ByteReader) -> Result<(u8, usize), String> {
@@ -272,26 +275,91 @@ fn read_frame_header(r: &mut ByteReader) -> Result<(u8, usize), String> {
     Ok((ty, body_len))
 }
 
-/// Read one frame from a byte stream (blocking). Returns the message and
-/// the total frame size in bytes. The body-length cap is enforced before
-/// the body buffer is allocated.
-pub fn read_frame(stream: &mut impl std::io::Read) -> Result<(Message, usize), String> {
-    let mut head = [0u8; FRAME_HEADER_BYTES];
-    stream
-        .read_exact(&mut head)
-        .map_err(|e| format!("read frame header: {e}"))?;
-    let mut r = ByteReader::new(&head);
-    let (ty, body_len) = read_frame_header(&mut r)?;
-    let mut body = vec![0u8; body_len];
-    stream
-        .read_exact(&mut body)
-        .map_err(|e| format!("read frame body ({body_len} bytes): {e}"))?;
-    let mut r = ByteReader::new(&body);
-    let msg = Message::read_body(ty, &mut r)?;
-    if r.remaining() != 0 {
-        return Err(format!("{} bytes of trailing garbage after body", r.remaining()));
+/// Outcome of reading one frame from a blocking byte stream.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A complete frame: the decoded message + total framed byte count.
+    Frame(Message, usize),
+    /// The stream ended cleanly *between* frames (0 bytes of the next
+    /// header had arrived) — a peer hang-up, not a protocol violation.
+    Eof,
+}
+
+/// Stream-read failures, split so transports can type their errors: `Io`
+/// is the socket failing (reset, mid-frame truncation), `Protocol` is the
+/// peer sending bytes that violate the framing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    Io(String),
+    Protocol(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(m) | FrameError::Protocol(m) => write!(f, "{m}"),
+        }
     }
-    Ok((msg, FRAME_HEADER_BYTES + body_len))
+}
+
+/// Read exactly `buf.len()` bytes, distinguishing "closed before the first
+/// byte" (`Ok(false)`) from "closed mid-way" (`Err`).
+fn read_exact_or_eof(
+    stream: &mut impl std::io::Read,
+    buf: &mut [u8],
+    what: &str,
+) -> Result<bool, FrameError> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(false);
+                }
+                return Err(FrameError::Io(format!(
+                    "connection closed mid-{what} ({got}/{} bytes)",
+                    buf.len()
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(format!("read frame {what}: {e}"))),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame from a blocking byte stream, surfacing a clean peer
+/// hang-up as [`FrameRead::Eof`]. The body-length cap is enforced before
+/// the body buffer is allocated.
+pub fn read_frame_or_eof(
+    stream: &mut impl std::io::Read,
+) -> Result<FrameRead, FrameError> {
+    let mut head = [0u8; FRAME_HEADER_BYTES];
+    if !read_exact_or_eof(stream, &mut head, "header")? {
+        return Ok(FrameRead::Eof);
+    }
+    let mut r = ByteReader::new(&head);
+    let (ty, body_len) = read_frame_header(&mut r).map_err(FrameError::Protocol)?;
+    let mut body = vec![0u8; body_len];
+    if body_len > 0 && !read_exact_or_eof(stream, &mut body, "body")? {
+        return Err(FrameError::Io(format!(
+            "connection closed before {body_len}-byte body"
+        )));
+    }
+    let msg = decode_body(ty, &body).map_err(FrameError::Protocol)?;
+    Ok(FrameRead::Frame(msg, FRAME_HEADER_BYTES + body_len))
+}
+
+/// Read one frame from a byte stream (blocking). Returns the message and
+/// the total frame size in bytes; a clean EOF is an error here — use
+/// [`read_frame_or_eof`] to react to hang-ups.
+pub fn read_frame(stream: &mut impl std::io::Read) -> Result<(Message, usize), String> {
+    match read_frame_or_eof(stream) {
+        Ok(FrameRead::Frame(msg, n)) => Ok((msg, n)),
+        Ok(FrameRead::Eof) => Err("read frame header: connection closed".to_string()),
+        Err(e) => Err(e.to_string()),
+    }
 }
 
 /// Write one frame to a byte stream. Returns the frame size in bytes.
@@ -302,6 +370,52 @@ pub fn write_frame(stream: &mut impl std::io::Write, msg: &Message) -> Result<us
         .map_err(|e| format!("write {} frame: {e}", msg.type_name()))?;
     stream.flush().map_err(|e| format!("flush {} frame: {e}", msg.type_name()))?;
     Ok(frame.len())
+}
+
+/// Incremental frame decoder for non-blocking sockets: [`feed`] whatever
+/// bytes the last `read` produced, then [`next`] pops complete messages.
+/// Partial frames stay buffered between poll wake-ups; length caps are
+/// enforced from the header alone, before the body has arrived.
+///
+/// [`feed`]: FrameDecoder::feed
+/// [`next`]: FrameDecoder::next
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Append raw stream bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet returned as a frame (0 means the stream
+    /// is at a frame boundary — a hang-up here is a clean close).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Pop the next complete frame, if fully buffered. Returns the message
+    /// plus its framed size.
+    pub fn next(&mut self) -> Result<Option<(Message, usize)>, String> {
+        if self.buf.len() < FRAME_HEADER_BYTES {
+            return Ok(None);
+        }
+        let mut r = ByteReader::new(&self.buf);
+        let (ty, body_len) = read_frame_header(&mut r)?;
+        let total = FRAME_HEADER_BYTES + body_len;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let msg = decode_body(ty, &self.buf[FRAME_HEADER_BYTES..total])?;
+        self.buf.drain(..total);
+        Ok(Some((msg, total)))
+    }
 }
 
 fn write_str(w: &mut ByteWriter, s: &str) {
@@ -329,34 +443,6 @@ fn read_blob(r: &mut ByteReader) -> Result<Vec<u8>, String> {
         return Err(format!("frame claims {n}-byte payload (cap {MAX_FRAME_BODY})"));
     }
     Ok(r.bytes(n)?.to_vec())
-}
-
-fn write_tensor(w: &mut ByteWriter, t: &Tensor) {
-    w.u8(t.dims().len() as u8);
-    for &d in t.dims() {
-        w.u32(d as u32);
-    }
-    w.f32s(t.data());
-}
-
-fn read_tensor(r: &mut ByteReader) -> Result<Tensor, String> {
-    let rank = r.u8()? as usize;
-    if rank > MAX_RANK {
-        return Err(format!("tensor rank {rank} exceeds cap {MAX_RANK}"));
-    }
-    let mut dims = Vec::with_capacity(rank);
-    for _ in 0..rank {
-        dims.push(r.u32()? as usize);
-    }
-    let elems = dims
-        .iter()
-        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
-        .ok_or("tensor dims overflow")?;
-    if elems > MAX_ELEMENTS {
-        return Err(format!("tensor claims {elems} elements (cap {MAX_ELEMENTS})"));
-    }
-    let data = r.f32s(elems)?;
-    Ok(Tensor::new(dims, data))
 }
 
 #[cfg(test)]
@@ -389,10 +475,7 @@ mod tests {
             Message::ModelSync {
                 round: 7,
                 device_id: 3,
-                tensors: vec![
-                    Tensor::new(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0]),
-                    Tensor::scalar(4.0),
-                ],
+                payload: vec![42; 33],
             },
             Message::Shutdown { reason: "done".into() },
         ]
@@ -480,15 +563,11 @@ mod tests {
         w.u32(body.len() as u32);
         w.bytes(&body);
         assert!(Message::decode_frame(&w.finish()).is_err());
-        // a ModelSync tensor claiming terabytes of elements
+        // a ModelSync whose blob length claims ~4 GiB with a 12-byte body
         let mut body = ByteWriter::new();
         body.u32(0); // round
         body.u32(0); // device
-        body.u32(1); // one tensor
-        body.u8(4);
-        for _ in 0..4 {
-            body.u32(60000);
-        }
+        body.u32(u32::MAX); // blob length
         let body = body.finish();
         let mut w = ByteWriter::new();
         w.u32(FRAME_MAGIC);
@@ -504,5 +583,47 @@ mod tests {
         let mut frame = Message::RoundOpen { round: 1, sync: false }.encode_frame();
         frame.push(0);
         assert!(Message::decode_frame(&frame).is_err());
+    }
+
+    #[test]
+    fn clean_eof_is_typed_midframe_is_error() {
+        // empty stream: clean EOF
+        let mut cur = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(matches!(read_frame_or_eof(&mut cur), Ok(FrameRead::Eof)));
+        // half a header: an I/O error, not a clean close
+        let frame = Message::RoundOpen { round: 1, sync: true }.encode_frame();
+        let mut cur = std::io::Cursor::new(frame[..3].to_vec());
+        assert!(matches!(read_frame_or_eof(&mut cur), Err(FrameError::Io(_))));
+        // header but truncated body: also an I/O error
+        let mut cur = std::io::Cursor::new(frame[..frame.len() - 1].to_vec());
+        assert!(matches!(read_frame_or_eof(&mut cur), Err(FrameError::Io(_))));
+    }
+
+    #[test]
+    fn frame_decoder_reassembles_chunked_streams() {
+        let mut wire = Vec::new();
+        for m in samples() {
+            wire.extend_from_slice(&m.encode_frame());
+        }
+        // feed in awkward 3-byte chunks; every message must come out intact
+        let mut dec = FrameDecoder::new();
+        let mut out = Vec::new();
+        for chunk in wire.chunks(3) {
+            dec.feed(chunk);
+            while let Some((msg, _)) = dec.next().unwrap() {
+                out.push(msg);
+            }
+        }
+        assert_eq!(out, samples());
+        assert_eq!(dec.buffered(), 0);
+    }
+
+    #[test]
+    fn frame_decoder_rejects_bad_magic() {
+        let mut frame = Message::RoundOpen { round: 1, sync: false }.encode_frame();
+        frame[0] ^= 0xff;
+        let mut dec = FrameDecoder::new();
+        dec.feed(&frame);
+        assert!(dec.next().is_err());
     }
 }

@@ -1,37 +1,43 @@
-//! Server-side session runtime: accepts N device connections and drives
-//! stages ii–iii of the round loop per device — decompress the uplink
+//! Server-side session runtime: accepts N device connections and performs
+//! the compute half of stages ii–iii per device — decompress the uplink
 //! envelope, `server_step` through [`Compute`], compress the downlink
 //! gradients — plus FedAvg aggregation, evaluation, metrics, and the
 //! simulated-time accounting.
 //!
-//! The runtime is transport-agnostic: the in-process trainer hands it
-//! loopback connections plus a `pump` callback that runs each device
-//! worker's turn, while `slacc serve` hands it TCP connections and a
-//! no-op pump (remote devices run themselves). Either way the round loop
-//! is this one code path, and `NetworkSim::round_cost` is fed the same
+//! The runtime is transport-agnostic *and* schedule-agnostic: the round
+//! flow (who is stepped when, straggler handling) is owned by
+//! [`crate::sched::round::RoundScheduler`] driving a
+//! [`crate::sched::fleet::Fleet`] — the in-process trainer hands it
+//! loopback connections behind a [`crate::sched::fleet::PumpFleet`], while
+//! `slacc serve` hands it the poll-driven
+//! [`crate::sched::event_loop::PollFleet`]. Either way the compute path is
+//! this one code path, and `NetworkSim::round_cost_sched` is fed the same
 //! codec-envelope byte counts the simulator always measured.
 //!
-//! Devices are *processed* in device-id order every round (the shared
-//! server sub-model makes stage iii inherently sequential, as in SFL), so
-//! a session's numerics and wire bytes are identical across transports
-//! and timings.
+//! Under the default `InOrder` policy devices are processed in device-id
+//! order every round (the shared server sub-model makes stage iii
+//! inherently sequential, as in SFL), so a session's numerics and wire
+//! bytes are identical across transports and timings. `ArrivalOrder`
+//! trades that determinism for wall-clock: see the scheduler docs.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::codecs::{Codec, RoundCtx};
 use crate::config::ExperimentConfig;
 use crate::coordinator::device::fedavg_params;
-use crate::coordinator::metrics::{MetricsLog, RoundRecord, TrainReport};
+use crate::coordinator::metrics::{MetricsLog, TrainReport};
 use crate::coordinator::server::ServerState;
 use crate::data::Dataset;
-use crate::net::timeline::Timeline;
+use crate::net::timeline::{SchedRecord, Timeline};
 use crate::net::NetworkSim;
+use crate::sched::fleet::{Fleet, PumpFleet};
+use crate::sched::round::RoundScheduler;
+use crate::sched::Policy;
 use crate::tensor::Tensor;
 
 use super::compute::{self, Compute, MockCompute, StepOut};
 use super::proto::Message;
-use super::Transport;
+use super::{sync, Transport};
 
 /// The run shape a server session enforces (a projection of
 /// [`ExperimentConfig`] plus the model's batch geometry).
@@ -51,6 +57,8 @@ pub struct ServeConfig {
     /// [`ExperimentConfig::fingerprint`] of the launching config; devices
     /// must present the same digest in their Hello
     pub config_fp: u64,
+    /// round-scheduling policy (see [`crate::sched::Policy`])
+    pub schedule: Policy,
 }
 
 /// What a device declared in its Hello frame.
@@ -60,6 +68,39 @@ pub struct DeviceHello {
     pub shard_len: usize,
     pub codec: String,
     pub config_fp: u64,
+}
+
+/// Validate one handshake frame against the fleet shape. Shared by the
+/// blocking [`handshake`] and the poll-loop accept
+/// ([`crate::sched::event_loop::PollFleet::accept`]).
+pub fn hello_from_message(
+    msg: Message,
+    devices: usize,
+    peer: &str,
+) -> Result<DeviceHello, String> {
+    let (device_id, fleet, shard_len, codec, config_fp) = match msg {
+        Message::Hello { device_id, devices, shard_len, codec, config_fp } => {
+            (device_id as usize, devices as usize, shard_len as usize, codec, config_fp)
+        }
+        other => {
+            return Err(format!(
+                "handshake: expected Hello from {peer}, got {}",
+                other.type_name()
+            ))
+        }
+    };
+    if fleet != devices {
+        return Err(format!(
+            "device {device_id} was configured for {fleet} devices, server for {devices}"
+        ));
+    }
+    if device_id >= devices {
+        return Err(format!("device id {device_id} out of range (devices={devices})"));
+    }
+    if shard_len == 0 {
+        return Err(format!("device {device_id} declares an empty data shard"));
+    }
+    Ok(DeviceHello { device_id, shard_len, codec, config_fp })
 }
 
 /// Receive one Hello per connection and order connections by device id.
@@ -76,38 +117,18 @@ pub fn handshake(
         (0..devices).map(|_| None).collect();
     for mut conn in conns {
         let msg = conn.recv()?;
-        let (device_id, fleet, shard_len, codec, config_fp) = match msg {
-            Message::Hello { device_id, devices, shard_len, codec, config_fp } => {
-                (device_id as usize, devices as usize, shard_len as usize, codec, config_fp)
-            }
-            other => {
-                return Err(format!(
-                    "handshake: expected Hello from {}, got {}",
-                    conn.peer(),
-                    other.type_name()
-                ))
-            }
-        };
-        if fleet != devices {
-            return Err(format!(
-                "device {device_id} was configured for {fleet} devices, server for {devices}"
-            ));
-        }
-        if device_id >= devices {
-            return Err(format!("device id {device_id} out of range (devices={devices})"));
-        }
-        if shard_len == 0 {
-            return Err(format!("device {device_id} declares an empty data shard"));
-        }
-        if slots[device_id].is_some() {
-            return Err(format!("two connections claim device id {device_id}"));
+        let peer = conn.peer();
+        let hello = hello_from_message(msg, devices, &peer)?;
+        if slots[hello.device_id].is_some() {
+            return Err(format!("two connections claim device id {}", hello.device_id));
         }
         crate::log_info!(
-            "transport: device {device_id} connected from {} (shard={shard_len}, codec={codec})",
-            conn.peer()
+            "transport: device {} connected from {peer} (shard={}, codec={})",
+            hello.device_id,
+            hello.shard_len,
+            hello.codec
         );
-        slots[device_id] =
-            Some((conn, DeviceHello { device_id, shard_len, codec, config_fp }));
+        slots[hello.device_id] = Some((conn, hello));
     }
     let mut out_conns = Vec::with_capacity(devices);
     let mut hellos = Vec::with_capacity(devices);
@@ -121,29 +142,38 @@ pub fn handshake(
 
 /// The server half of an SL training session.
 pub struct ServerRuntime<C: Compute> {
-    cfg: ServeConfig,
-    compute: C,
-    server: ServerState,
+    pub(crate) cfg: ServeConfig,
+    pub(crate) compute: C,
+    pub(crate) server: ServerState,
     /// per-device uplink codec twins (decompression is wire-driven, so a
     /// fresh instance mirrors the device's compressor exactly)
-    up_codecs: Vec<Box<dyn Codec>>,
+    pub(crate) up_codecs: Vec<Box<dyn Codec>>,
     /// per-device downlink compressors (the compress-side state lives here)
-    down_codecs: Vec<Box<dyn Codec>>,
+    pub(crate) down_codecs: Vec<Box<dyn Codec>>,
+    /// per-device ModelSync decompress twins (device → server pushes)
+    pub(crate) sync_up_codecs: Vec<Box<dyn Codec>>,
+    /// per-device ModelSync compressors (server → device broadcasts)
+    pub(crate) sync_down_codecs: Vec<Box<dyn Codec>>,
     /// last client sub-model each device pushed via ModelSync
-    client_params: Vec<Option<Vec<Tensor>>>,
-    test: Arc<Dataset>,
-    net: NetworkSim,
-    timeline: Timeline,
-    metrics: MetricsLog,
+    pub(crate) client_params: Vec<Option<Vec<Tensor>>>,
+    /// FedAvg weights (shard sizes), filled in at handshake
+    pub(crate) weights: Vec<f64>,
+    pub(crate) test: Arc<Dataset>,
+    pub(crate) net: NetworkSim,
+    pub(crate) timeline: Timeline,
+    pub(crate) metrics: MetricsLog,
 }
 
 impl<C: Compute> ServerRuntime<C> {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         cfg: ServeConfig,
         compute: C,
         server_init: Vec<Tensor>,
         up_codecs: Vec<Box<dyn Codec>>,
         down_codecs: Vec<Box<dyn Codec>>,
+        sync_up_codecs: Vec<Box<dyn Codec>>,
+        sync_down_codecs: Vec<Box<dyn Codec>>,
         test: Arc<Dataset>,
         net: NetworkSim,
     ) -> Result<ServerRuntime<C>, String> {
@@ -155,6 +185,14 @@ impl<C: Compute> ServerRuntime<C> {
                 cfg.devices
             ));
         }
+        if sync_up_codecs.len() != cfg.devices || sync_down_codecs.len() != cfg.devices {
+            return Err(format!(
+                "runtime wants {} / {} sync codecs for {} devices",
+                sync_up_codecs.len(),
+                sync_down_codecs.len(),
+                cfg.devices
+            ));
+        }
         let client_params = (0..cfg.devices).map(|_| None).collect();
         Ok(ServerRuntime {
             cfg,
@@ -162,7 +200,10 @@ impl<C: Compute> ServerRuntime<C> {
             server: ServerState::new(server_init),
             up_codecs,
             down_codecs,
+            sync_up_codecs,
+            sync_down_codecs,
             client_params,
+            weights: Vec::new(),
             test,
             net,
             timeline: Timeline::new(),
@@ -176,6 +217,12 @@ impl<C: Compute> ServerRuntime<C> {
 
     pub fn metrics(&self) -> &MetricsLog {
         &self.metrics
+    }
+
+    /// Per-round scheduling records (participants/stragglers/waits), for
+    /// policy comparisons and tests.
+    pub fn sched_records(&self) -> Vec<SchedRecord> {
+        self.timeline.sched_records()
     }
 
     /// Test accuracy of (client, server) params over the held-out set.
@@ -215,7 +262,7 @@ impl<C: Compute> ServerRuntime<C> {
         Ok(correct as f64 / total as f64)
     }
 
-    fn evaluate(&mut self) -> Result<f64, String> {
+    pub(crate) fn evaluate(&mut self) -> Result<f64, String> {
         let client = self.client_params[0]
             .take()
             .ok_or("evaluate: device 0 has not synced its client sub-model")?;
@@ -224,20 +271,121 @@ impl<C: Compute> ServerRuntime<C> {
         acc
     }
 
+    /// Stages ii–iii for one device's uplink: decompress, `server_step`,
+    /// update the shared server model, compress the downlink gradients.
+    /// Returns (loss, downlink payload).
+    pub(crate) fn step_device(
+        &mut self,
+        d: usize,
+        round: usize,
+        labels: &[i32],
+        payload: &[u8],
+    ) -> Result<(f64, Vec<u8>), String> {
+        let acts_hat = self.up_codecs[d].decompress(payload)?;
+        let StepOut { loss, g_acts, new_params } = self.compute.server_step(
+            &self.server.server_params,
+            &acts_hat,
+            labels,
+            self.cfg.lr,
+        )?;
+        if !loss.is_finite() {
+            return Err(format!("round {round} device {d}: loss diverged ({loss})"));
+        }
+        self.server.update(new_params);
+        // downlink: every path goes through a codec envelope (the
+        // uncompressed config uses IdentityCodec), so byte accounting is
+        // comparable across configs
+        let g_ent = if self.cfg.compress_gradients {
+            Some(self.compute.entropy(&g_acts)?)
+        } else {
+            None
+        };
+        let g_cm = g_acts.to_channel_major();
+        let payload_down =
+            self.down_codecs[d].compress(&g_cm, RoundCtx { entropy: g_ent.as_deref() });
+        Ok((loss, payload_down))
+    }
+
+    /// Accept a device's ModelSync push (unpack through its sync stream).
+    pub(crate) fn accept_sync(&mut self, d: usize, payload: &[u8]) -> Result<(), String> {
+        let tensors = sync::unpack_params(payload, self.sync_up_codecs[d].as_ref())
+            .map_err(|e| format!("device {d} ModelSync: {e}"))?;
+        if tensors.is_empty() {
+            return Err(format!("device {d}: ModelSync push carried no tensors"));
+        }
+        self.client_params[d] = Some(tensors);
+        Ok(())
+    }
+
+    /// Pack the FedAvg result for device `d`'s downlink sync stream.
+    pub(crate) fn pack_broadcast(&mut self, d: usize, params: &[Tensor]) -> Vec<u8> {
+        sync::pack_params(params, self.sync_down_codecs[d].as_mut())
+    }
+
+    /// Weighted FedAvg over `basis` (device-id order preserved for f32
+    /// reproducibility). Rejects shape-mismatched sub-models — peers are
+    /// remote, so this must not panic.
+    pub(crate) fn fedavg_over(
+        &self,
+        basis: &[usize],
+        round: usize,
+    ) -> Result<Vec<Tensor>, String> {
+        let mut sets: Vec<&[Tensor]> = Vec::with_capacity(basis.len());
+        let mut weights = Vec::with_capacity(basis.len());
+        for &d in basis {
+            let set = self.client_params[d].as_deref().ok_or_else(|| {
+                format!("round {round}: device {d} has no synced sub-model to aggregate")
+            })?;
+            sets.push(set);
+            weights.push(self.weights[d]);
+        }
+        for (i, set) in sets.iter().enumerate().skip(1) {
+            let shapes_match = set.len() == sets[0].len()
+                && set.iter().zip(sets[0].iter()).all(|(a, b)| a.dims() == b.dims());
+            if !shapes_match {
+                return Err(format!(
+                    "round {round}: device {} synced a client sub-model \
+                     whose shape differs from device {}'s",
+                    basis[i], basis[0]
+                ));
+            }
+        }
+        Ok(fedavg_params(&sets, &weights))
+    }
+
+    /// After a full-fleet aggregation every device holds the reply.
+    pub(crate) fn set_all_params(&mut self, reply: Vec<Tensor>) {
+        for p in self.client_params.iter_mut() {
+            *p = Some(reply.clone());
+        }
+    }
+
     /// Drive a full training session over the given (handshaken, device-id
     /// ordered) connections. `pump(d)` gives in-process device workers
-    /// their turn; pass a no-op for remote transports.
+    /// their turn; pass a no-op for remote transports. Convenience wrapper
+    /// over [`ServerRuntime::serve_fleet`] with a [`PumpFleet`].
     pub fn serve(
         &mut self,
         conns: &mut [Box<dyn Transport>],
         hellos: &[DeviceHello],
-        mut pump: impl FnMut(usize) -> Result<(), String>,
+        pump: impl FnMut(usize) -> Result<(), String>,
+    ) -> Result<TrainReport, String> {
+        let mut fleet = PumpFleet::new(conns, pump);
+        self.serve_fleet(&mut fleet, hellos)
+    }
+
+    /// Drive a full training session over any [`Fleet`]: validate the
+    /// handshakes, ack, run the configured scheduling policy, shut down.
+    pub fn serve_fleet(
+        &mut self,
+        fleet: &mut dyn Fleet,
+        hellos: &[DeviceHello],
     ) -> Result<TrainReport, String> {
         let n = self.cfg.devices;
-        if conns.len() != n || hellos.len() != n {
+        if fleet.devices() != n || hellos.len() != n {
             return Err(format!(
                 "serve: {} connections / {} hellos for {n} devices",
-                conns.len(),
+                fleet.devices(),
                 hellos.len()
             ));
         }
@@ -255,209 +403,45 @@ impl<C: Compute> ServerRuntime<C> {
                 return Err(format!(
                     "device {d} presents session fingerprint {:#018x}, server expects \
                      {want_fp:#018x} — launch both sides with identical flags \
-                     (lr/seed/dataset/partition/...) and the same engine-vs-mock mode",
+                     (lr/seed/dataset/partition/schedule/...) and the same \
+                     engine-vs-mock mode",
                     hello.config_fp
                 ));
             }
         }
-        let weights: Vec<f64> = hellos.iter().map(|h| h.shard_len as f64).collect();
-        for (d, conn) in conns.iter_mut().enumerate() {
-            conn.send(&Message::HelloAck {
+        self.weights = hellos.iter().map(|h| h.shard_len as f64).collect();
+        for d in 0..n {
+            fleet.send(d, &Message::HelloAck {
                 device_id: d as u32,
                 rounds: self.cfg.rounds as u32,
                 agg_every: self.cfg.client_agg_every as u32,
             })?;
         }
         for d in 0..n {
-            pump(d)?;
+            fleet.pump(d)?;
         }
 
         let label = self.cfg.label.clone();
-        let mut time_to_target = None;
-        let mut rounds_run = 0;
-        'rounds: for round in 0..self.cfg.rounds {
-            let wall = Instant::now();
-            let agg_due = (round + 1) % self.cfg.client_agg_every == 0;
-            let eval_due =
-                (round + 1) % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds;
-            // aggregation needs every device's sub-model; evaluation only
-            // device 0's — don't ship N-1 unused full models on eval-only
-            // rounds (ModelSync is outside the smashed-data byte axis, but
-            // it is real wall-clock on a wide fleet)
-            let wants_sync = |d: usize| agg_due || (eval_due && d == 0);
+        let policy = self.cfg.schedule;
+        crate::log_info!("[{label}] serving {n} devices, schedule={}", policy.label());
+        let outcome = RoundScheduler::new(policy).run(self, fleet)?;
 
-            // stage i fans out to every device in parallel
-            for (d, conn) in conns.iter_mut().enumerate() {
-                conn.send(&Message::RoundOpen { round: round as u32, sync: wants_sync(d) })?;
-            }
-            for d in 0..n {
-                pump(d)?;
-            }
-
-            // stages ii-iii, sequential in device order (shared server model)
-            let mut up_bytes = vec![0usize; n];
-            let mut down_bytes = vec![0usize; n];
-            let mut loss_sum = 0.0f64;
-            for d in 0..n {
-                let msg = conns[d].recv()?;
-                let (r2, dev, labels, payload) = match msg {
-                    Message::Activations { round, device_id, labels, payload } => {
-                        (round as usize, device_id as usize, labels, payload)
-                    }
-                    other => {
-                        return Err(format!(
-                            "round {round}: expected Activations from device {d}, got {}",
-                            other.type_name()
-                        ))
-                    }
-                };
-                if r2 != round || dev != d {
-                    return Err(format!(
-                        "round {round}: device {d} sent activations for round {r2} as device {dev}"
-                    ));
-                }
-                up_bytes[d] = payload.len();
-                let acts_hat = self.up_codecs[d].decompress(&payload)?;
-
-                let StepOut { loss, g_acts, new_params } = self.compute.server_step(
-                    &self.server.server_params,
-                    &acts_hat,
-                    &labels,
-                    self.cfg.lr,
-                )?;
-                if !loss.is_finite() {
-                    return Err(format!("round {round} device {d}: loss diverged ({loss})"));
-                }
-                loss_sum += loss;
-                self.server.update(new_params);
-
-                // downlink: every path goes through a codec envelope (the
-                // uncompressed config uses IdentityCodec), so byte
-                // accounting is comparable across configs
-                let g_ent = if self.cfg.compress_gradients {
-                    Some(self.compute.entropy(&g_acts)?)
-                } else {
-                    None
-                };
-                let g_cm = g_acts.to_channel_major();
-                let payload_down = self.down_codecs[d]
-                    .compress(&g_cm, RoundCtx { entropy: g_ent.as_deref() });
-                down_bytes[d] = payload_down.len();
-                conns[d].send(&Message::Gradients {
-                    round: round as u32,
-                    device_id: d as u32,
-                    loss: loss as f32,
-                    payload: payload_down,
-                })?;
-            }
-            for d in 0..n {
-                pump(d)?;
-            }
-
-            // SFL aggregation / model sync
-            if agg_due || eval_due {
-                for d in 0..n {
-                    if !wants_sync(d) {
-                        continue;
-                    }
-                    let msg = conns[d].recv()?;
-                    match msg {
-                        Message::ModelSync { device_id, tensors, .. }
-                            if device_id as usize == d && !tensors.is_empty() =>
-                        {
-                            self.client_params[d] = Some(tensors);
-                        }
-                        other => {
-                            return Err(format!(
-                                "round {round}: expected non-empty ModelSync from device {d}, got {}",
-                                other.type_name()
-                            ))
-                        }
-                    }
-                }
-                if agg_due {
-                    let sets: Vec<&[Tensor]> = self
-                        .client_params
-                        .iter()
-                        .map(|p| p.as_deref().expect("all devices just synced"))
-                        .collect();
-                    // peers are remote: reject mismatched sub-models here
-                    // rather than panicking (or silently truncating) inside
-                    // the weighted average
-                    for (d, set) in sets.iter().enumerate().skip(1) {
-                        let shapes_match = set.len() == sets[0].len()
-                            && set
-                                .iter()
-                                .zip(sets[0].iter())
-                                .all(|(a, b)| a.dims() == b.dims());
-                        if !shapes_match {
-                            return Err(format!(
-                                "round {round}: device {d} synced a client sub-model \
-                                 whose shape differs from device 0's"
-                            ));
-                        }
-                    }
-                    let reply = fedavg_params(&sets, &weights);
-                    for (d, conn) in conns.iter_mut().enumerate() {
-                        conn.send(&Message::ModelSync {
-                            round: round as u32,
-                            device_id: d as u32,
-                            tensors: reply.clone(),
-                        })?;
-                    }
-                    for p in self.client_params.iter_mut() {
-                        *p = Some(reply.clone());
-                    }
-                }
-                for d in 0..n {
-                    pump(d)?;
-                }
-            }
-
-            // accounting + evaluation, identical to the simulator semantics
-            let cost = self.net.round_cost(&up_bytes, &down_bytes);
-            self.timeline.push(cost);
-            rounds_run = round + 1;
-            let loss = loss_sum / n as f64;
-            let accuracy = if eval_due { Some(self.evaluate()?) } else { None };
-            let rec = RoundRecord {
-                round,
-                loss,
-                accuracy,
-                bytes_up: cost.bytes_up,
-                bytes_down: cost.bytes_down,
-                sim_time_s: self.timeline.total_time(),
-                wall_ms: wall.elapsed().as_secs_f64() * 1e3,
-            };
-            if let Some(acc) = accuracy {
-                crate::log_info!(
-                    "[{label}] round {round}: loss {loss:.4} acc {:.2}% sim_t {:.1}s",
-                    acc * 100.0,
-                    rec.sim_time_s
-                );
-                if let Some(target) = self.cfg.target_accuracy {
-                    if acc >= target && time_to_target.is_none() {
-                        time_to_target = Some(rec.sim_time_s);
-                        self.metrics.push(rec);
-                        break 'rounds;
-                    }
-                }
-            } else {
-                crate::log_debug!("[{label}] round {round}: loss {loss:.4}");
-            }
-            self.metrics.push(rec);
-        }
-
-        for conn in conns.iter_mut() {
-            conn.send(&Message::Shutdown { reason: "training complete".into() })?;
+        for d in 0..n {
+            fleet.send(d, &Message::Shutdown { reason: "training complete".into() })?;
         }
         for d in 0..n {
-            pump(d)?;
+            fleet.pump(d)?;
         }
-        let framed: u64 = conns.iter().map(|c| c.stats().bytes_sent + c.stats().bytes_recv).sum();
+        let framed: u64 = (0..n)
+            .map(|d| {
+                let s = fleet.stats(d);
+                s.bytes_sent + s.bytes_recv
+            })
+            .sum();
         let (bytes_up, bytes_down) = self.metrics.total_bytes();
         crate::log_info!(
-            "[{label}] session done: {rounds_run} rounds, {} payload bytes, {framed} framed bytes",
+            "[{label}] session done: {} rounds, {} payload bytes, {framed} framed bytes",
+            outcome.rounds_run,
             bytes_up + bytes_down
         );
         Ok(TrainReport {
@@ -467,27 +451,25 @@ impl<C: Compute> ServerRuntime<C> {
             total_sim_time_s: self.timeline.total_time(),
             total_bytes_up: bytes_up,
             total_bytes_down: bytes_down,
-            time_to_target_s: time_to_target,
-            rounds_run,
+            total_bytes_sync: self.metrics.total_bytes_sync(),
+            time_to_target_s: outcome.time_to_target_s,
+            rounds_run: outcome.rounds_run,
+            straggler_events: self.metrics.straggler_events(),
             metrics: std::mem::take(&mut self.metrics),
         })
     }
 }
 
-/// Accept `runtime.devices()` TCP connections on `listener`, handshake,
-/// and run the session (remote devices pump themselves).
+/// Accept `runtime.devices()` TCP connections on `listener` into the
+/// poll-driven event loop and run the session (remote devices pump
+/// themselves). One thread, no reader thread per connection.
 pub fn accept_and_serve<C: Compute>(
     runtime: &mut ServerRuntime<C>,
     listener: &std::net::TcpListener,
 ) -> Result<TrainReport, String> {
     let n = runtime.devices();
-    let mut conns: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
-    for i in 0..n {
-        crate::log_info!("transport: waiting for device connection {}/{n}", i + 1);
-        conns.push(Box::new(super::tcp::TcpTransport::accept(listener)?));
-    }
-    let (mut conns, hellos) = handshake(conns, n)?;
-    runtime.serve(&mut conns, &hellos, |_| Ok(()))
+    let (mut fleet, hellos) = crate::sched::event_loop::PollFleet::accept(listener, n)?;
+    runtime.serve_fleet(&mut fleet, &hellos)
 }
 
 /// Build the engine-free server runtime for a mock session (the twin of
@@ -499,9 +481,13 @@ pub fn mock_runtime(
     let channels = compute::MOCK_CUT.0;
     let mut ups = Vec::with_capacity(cfg.devices);
     let mut downs = Vec::with_capacity(cfg.devices);
+    let mut sync_ups = Vec::with_capacity(cfg.devices);
+    let mut sync_downs = Vec::with_capacity(cfg.devices);
     for d in 0..cfg.devices {
         ups.push(cfg.uplink_codec(channels, d)?);
         downs.push(cfg.downlink_codec(channels, d)?);
+        sync_ups.push(cfg.sync_uplink_codec(d)?);
+        sync_downs.push(cfg.sync_downlink_codec(d)?);
     }
     let classes = test.classes;
     ServerRuntime::new(
@@ -510,6 +496,8 @@ pub fn mock_runtime(
         compute::mock_server_init(),
         ups,
         downs,
+        sync_ups,
+        sync_downs,
         test,
         cfg.network(),
     )
@@ -520,7 +508,28 @@ pub fn mock_runtime(
 /// engine-free twin of `Trainer::run`, used by the transport tests and
 /// `examples/distributed.rs` to check loopback/TCP byte parity.
 pub fn run_mock_loopback(cfg: &ExperimentConfig) -> Result<TrainReport, String> {
+    let n = cfg.devices;
+    run_mock_loopback_delayed(cfg, &vec![0.0; n], 0).map(|(report, _)| report)
+}
+
+/// [`run_mock_loopback`] with the artificial-delay shim: every message
+/// from device `d` arrives `delays[d]` virtual seconds late (±10% seeded
+/// jitter), which makes arrival-order scheduling, straggler timeouts, and
+/// quorum closes deterministically testable. Also returns the per-round
+/// scheduling records.
+pub fn run_mock_loopback_delayed(
+    cfg: &ExperimentConfig,
+    delays: &[f64],
+    shim_seed: u64,
+) -> Result<(TrainReport, Vec<SchedRecord>), String> {
     cfg.validate()?;
+    if delays.len() != cfg.devices {
+        return Err(format!(
+            "{} delays for {} devices",
+            delays.len(),
+            cfg.devices
+        ));
+    }
     let (train, test) = Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
     let train = Arc::new(train);
     let mut runtime = mock_runtime(cfg, Arc::new(test))?;
@@ -536,7 +545,14 @@ pub fn run_mock_loopback(cfg: &ExperimentConfig) -> Result<TrainReport, String> 
         srv_conns.push(Box::new(srv_end));
     }
     let (mut conns, hellos) = handshake(srv_conns, cfg.devices)?;
-    runtime.serve(&mut conns, &hellos, |d| {
-        super::device::pump(&mut workers[d], &mut dev_conns[d])
-    })
+    let report = {
+        let mut fleet = PumpFleet::with_delays(
+            &mut conns,
+            |d| super::device::pump(&mut workers[d], &mut dev_conns[d]),
+            delays.to_vec(),
+            shim_seed,
+        );
+        runtime.serve_fleet(&mut fleet, &hellos)?
+    };
+    Ok((report, runtime.sched_records()))
 }

@@ -1,0 +1,220 @@
+//! ModelSync payload packing: FedAvg traffic through the codec stack.
+//!
+//! Client sub-model pushes used to travel as raw f32 tensor lists baked
+//! into the frame. They now ride the same payload-envelope machinery as
+//! smashed data: the parameter tensors are flattened into one 1×1×1×N
+//! channel-major tensor, compressed through the session's *ModelSync codec
+//! stream* (`--sync-codec`, identity by default so the default path stays
+//! lossless), and prefixed with a shape table so the receiver can rebuild
+//! the original tensor list.
+//!
+//! ```text
+//! n_tensors  u32 (<= MAX_TENSORS)
+//! per tensor: rank u8 (<= MAX_RANK), dims u32 x rank
+//! blob_len   u32
+//! blob       codec envelope of the flattened parameters
+//! ```
+//!
+//! Like the frame protocol, every length is capped before allocation. The
+//! byte count of the full pack is what `RoundCost::bytes_sync` accounts —
+//! separately from the paper's smashed-data axis.
+
+use crate::codecs::{Codec, RoundCtx};
+use crate::quant::payload::{ByteReader, ByteWriter, MAX_ELEMENTS};
+use crate::tensor::Tensor;
+
+/// Cap on tensors per pack (a sub-model has a handful of params).
+pub const MAX_TENSORS: usize = 1 << 12;
+/// Cap on tensor rank.
+pub const MAX_RANK: usize = 8;
+
+/// Pack a parameter list through `codec`. An empty list encodes to a
+/// shape-table-only pack (the "keep what you have" reply).
+pub fn pack_params(params: &[Tensor], codec: &mut dyn Codec) -> Vec<u8> {
+    assert!(params.len() <= MAX_TENSORS, "{} params exceed pack cap", params.len());
+    let total: usize = params.iter().map(|t| t.len()).sum();
+    let mut w = ByteWriter::with_capacity(8 + params.len() * 8 + total * 4);
+    w.u32(params.len() as u32);
+    for t in params {
+        assert!(t.dims().len() <= MAX_RANK, "rank {} exceeds pack cap", t.dims().len());
+        w.u8(t.dims().len() as u8);
+        for &d in t.dims() {
+            w.u32(d as u32);
+        }
+    }
+    if params.is_empty() {
+        return w.finish();
+    }
+    let mut flat = Vec::with_capacity(total);
+    for t in params {
+        flat.extend_from_slice(t.data());
+    }
+    let cm = Tensor::new(vec![1, 1, 1, total], flat).to_channel_major();
+    let blob = codec.compress(&cm, RoundCtx::default());
+    w.u32(blob.len() as u32);
+    w.bytes(&blob);
+    w.finish()
+}
+
+/// Rebuild the parameter list from a pack. `codec` must be a stream twin
+/// of the packer's (the envelopes are self-describing, so any instance of
+/// the same codec family decodes them).
+pub fn unpack_params(bytes: &[u8], codec: &dyn Codec) -> Result<Vec<Tensor>, String> {
+    let mut r = ByteReader::new(bytes);
+    let n = r.u32()? as usize;
+    if n > MAX_TENSORS {
+        return Err(format!("sync pack claims {n} tensors (cap {MAX_TENSORS})"));
+    }
+    let mut shapes = Vec::with_capacity(n);
+    let mut total = 0usize;
+    for _ in 0..n {
+        let rank = r.u8()? as usize;
+        if rank > MAX_RANK {
+            return Err(format!("sync tensor rank {rank} exceeds cap {MAX_RANK}"));
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(r.u32()? as usize);
+        }
+        let elems = dims
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or("sync tensor dims overflow")?;
+        if elems > MAX_ELEMENTS {
+            return Err(format!("sync tensor claims {elems} elements (cap {MAX_ELEMENTS})"));
+        }
+        total = total
+            .checked_add(elems)
+            .ok_or("sync pack element count overflow")?;
+        shapes.push((dims, elems));
+    }
+    if total > MAX_ELEMENTS {
+        return Err(format!("sync pack claims {total} elements (cap {MAX_ELEMENTS})"));
+    }
+    if n == 0 {
+        if r.remaining() != 0 {
+            return Err(format!(
+                "{} bytes of trailing garbage after empty sync pack",
+                r.remaining()
+            ));
+        }
+        return Ok(Vec::new());
+    }
+    let blob_len = r.u32()? as usize;
+    if blob_len != r.remaining() {
+        return Err(format!(
+            "sync pack blob length {blob_len} disagrees with {} remaining bytes",
+            r.remaining()
+        ));
+    }
+    let blob = r.bytes(blob_len)?;
+    let flat = codec.decompress(blob)?;
+    if flat.len() != total {
+        return Err(format!(
+            "sync pack decompressed to {} elements, shape table wants {total}",
+            flat.len()
+        ));
+    }
+    let data = flat.data();
+    let mut out = Vec::with_capacity(n);
+    let mut off = 0usize;
+    for (dims, elems) in shapes {
+        out.push(Tensor::new(dims, data[off..off + elems].to_vec()));
+        off += elems;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::by_name;
+
+    fn params() -> Vec<Tensor> {
+        vec![
+            Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 0.25, -7.0]),
+            Tensor::scalar(4.0),
+            Tensor::new(vec![4], vec![0.1, 0.2, 0.3, 0.4]),
+        ]
+    }
+
+    #[test]
+    fn identity_pack_is_lossless() {
+        let mut up = by_name("identity", 1, 10, 0).unwrap();
+        let twin = by_name("identity", 1, 10, 0).unwrap();
+        let pack = pack_params(&params(), up.as_mut());
+        let back = unpack_params(&pack, twin.as_ref()).unwrap();
+        assert_eq!(back, params());
+    }
+
+    #[test]
+    fn empty_pack_roundtrips() {
+        let mut up = by_name("identity", 1, 10, 0).unwrap();
+        let pack = pack_params(&[], up.as_mut());
+        let back = unpack_params(&pack, up.as_ref()).unwrap();
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn lossy_pack_preserves_shapes_and_compresses() {
+        let big: Vec<Tensor> = vec![Tensor::new(
+            vec![32, 16],
+            (0..512).map(|i| (i % 17) as f32 * 0.3 - 1.0).collect(),
+        )];
+        let mut up = by_name("uniform4", 1, 10, 0).unwrap();
+        let twin = by_name("uniform4", 1, 10, 0).unwrap();
+        let pack = pack_params(&big, up.as_mut());
+        let back = unpack_params(&pack, twin.as_ref()).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].dims(), &[32, 16]);
+        // 4-bit quantization: the pack must be well under raw f32
+        assert!(pack.len() < 512 * 4, "pack {} >= raw {}", pack.len(), 512 * 4);
+    }
+
+    #[test]
+    fn hostile_shape_tables_rejected() {
+        let codec = by_name("identity", 1, 10, 0).unwrap();
+        // claims 2^20 tensors
+        let mut w = ByteWriter::new();
+        w.u32(1 << 20);
+        assert!(unpack_params(&w.finish(), codec.as_ref()).is_err());
+        // one tensor claiming terabytes of elements
+        let mut w = ByteWriter::new();
+        w.u32(1);
+        w.u8(4);
+        for _ in 0..4 {
+            w.u32(60000);
+        }
+        assert!(unpack_params(&w.finish(), codec.as_ref()).is_err());
+        // truncated shape table
+        let mut w = ByteWriter::new();
+        w.u32(2);
+        w.u8(1);
+        assert!(unpack_params(&w.finish(), codec.as_ref()).is_err());
+        // blob length lies about the remaining bytes
+        let mut w = ByteWriter::new();
+        w.u32(1);
+        w.u8(1);
+        w.u32(2);
+        w.u32(9999);
+        w.f32(1.0);
+        assert!(unpack_params(&w.finish(), codec.as_ref()).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_against_blob_rejected() {
+        // pack two floats but advertise three in the shape table
+        let mut up = by_name("identity", 1, 10, 0).unwrap();
+        let good = pack_params(&[Tensor::new(vec![2], vec![1.0, 2.0])], up.as_mut());
+        // rebuild with a lying shape table: rank-1 dim 3
+        let mut w = ByteWriter::new();
+        w.u32(1);
+        w.u8(1);
+        w.u32(3);
+        // splice the original blob (skip n=4, rank=1, dim=4 ... recompute)
+        // simplest: take everything after the original 10-byte shape table
+        let blob_and_len = &good[4 + 1 + 4..];
+        w.bytes(blob_and_len);
+        assert!(unpack_params(&w.finish(), up.as_ref()).is_err());
+    }
+}

@@ -5,23 +5,29 @@
 //! * **direct** (device side, [`TcpTransport::connect`]) — blocking
 //!   request/response reads on the caller's thread; the device loop is
 //!   strictly lock-step so no reader thread is needed.
-//! * **threaded** (server side, [`TcpTransport::accept`]) — one reader
-//!   thread per accepted connection decodes frames into an in-memory
-//!   channel, so the next device's uplink is parsed while the server is
-//!   still stepping the previous one. The PJRT engine never crosses a
-//!   thread boundary: only decoded [`Message`] values do.
+//! * **threaded** ([`TcpTransport::accept`]) — one reader thread per
+//!   accepted connection decodes frames into an in-memory channel. This is
+//!   the generic [`Transport`]-object accept path (tests, ad-hoc tools);
+//!   `slacc serve` itself no longer uses it — the server runtime drives
+//!   every accepted socket from one non-blocking poll loop
+//!   ([`crate::sched::event_loop::PollFleet`]), which scales past a few
+//!   hundred connections without a thread apiece.
+//!
+//! Peer hang-ups are *typed*: a clean close at a frame boundary surfaces
+//! as [`TransportError::PeerClosed`], never as a generic recv error, so
+//! callers can tell "the device went away" from "the stream is corrupt".
 
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::thread;
 use std::time::Duration;
 
-use super::proto::{self, Message};
-use super::{Transport, WireStats};
+use super::proto::{self, FrameError, FrameRead, Message};
+use super::{Transport, TransportError, WireStats};
 
 enum Reader {
     Direct(TcpStream),
-    Threaded(mpsc::Receiver<Result<(Message, usize), String>>),
+    Threaded(mpsc::Receiver<Result<(Message, usize), TransportError>>),
 }
 
 /// One framed TCP connection (either end).
@@ -30,6 +36,13 @@ pub struct TcpTransport {
     reader: Reader,
     stats: WireStats,
     peer: String,
+}
+
+fn classify(e: FrameError, peer: &str) -> TransportError {
+    match e {
+        FrameError::Io(m) => TransportError::Io(format!("{peer}: {m}")),
+        FrameError::Protocol(m) => TransportError::Protocol(format!("{peer}: {m}")),
+    }
 }
 
 impl TcpTransport {
@@ -81,17 +94,26 @@ impl TcpTransport {
         // read-ahead is all pipelining needs — and a peer that floods valid
         // frames blocks in our TCP window instead of ballooning server RAM
         let (tx, rx) = mpsc::sync_channel(2);
+        let thread_peer = peer.clone();
         thread::Builder::new()
             .name(format!("slacc-rx-{peer}"))
             .spawn(move || loop {
-                match proto::read_frame(&mut read_half) {
-                    Ok(item) => {
-                        if tx.send(Ok(item)).is_err() {
+                match proto::read_frame_or_eof(&mut read_half) {
+                    Ok(FrameRead::Frame(msg, n)) => {
+                        if tx.send(Ok((msg, n))).is_err() {
                             break; // transport dropped
                         }
                     }
+                    Ok(FrameRead::Eof) => {
+                        // clean hang-up at a frame boundary: typed, so the
+                        // consumer can react to disconnects specifically
+                        let _ = tx.send(Err(TransportError::PeerClosed {
+                            peer: thread_peer.clone(),
+                        }));
+                        break;
+                    }
                     Err(e) => {
-                        let _ = tx.send(Err(e));
+                        let _ = tx.send(Err(classify(e, &thread_peer)));
                         break;
                     }
                 }
@@ -119,48 +141,55 @@ fn peer_label(stream: &TcpStream) -> String {
 }
 
 impl Transport for TcpTransport {
-    fn send(&mut self, msg: &Message) -> Result<(), String> {
+    fn send(&mut self, msg: &Message) -> Result<(), TransportError> {
         let n = proto::write_frame(&mut self.writer, msg)
-            .map_err(|e| format!("{} -> {e}", self.peer))?;
+            .map_err(|e| TransportError::Io(format!("{} -> {e}", self.peer)))?;
         self.stats.frames_sent += 1;
         self.stats.bytes_sent += n as u64;
         Ok(())
     }
 
-    fn recv(&mut self) -> Result<Message, String> {
+    fn recv(&mut self) -> Result<Message, TransportError> {
         match &mut self.reader {
-            Reader::Direct(stream) => {
-                let (msg, n) = proto::read_frame(stream)
-                    .map_err(|e| format!("{} -> {e}", self.peer))?;
-                self.note_recv(n);
-                Ok(msg)
-            }
+            Reader::Direct(stream) => match proto::read_frame_or_eof(stream) {
+                Ok(FrameRead::Frame(msg, n)) => {
+                    self.note_recv(n);
+                    Ok(msg)
+                }
+                Ok(FrameRead::Eof) => {
+                    Err(TransportError::PeerClosed { peer: self.peer.clone() })
+                }
+                Err(e) => Err(classify(e, &self.peer)),
+            },
             Reader::Threaded(rx) => {
-                let item = rx
-                    .recv()
-                    .map_err(|_| format!("{}: connection reader exited", self.peer))?;
-                let (msg, n) = item.map_err(|e| format!("{} -> {e}", self.peer))?;
+                // a Disconnected channel means the reader delivered its
+                // terminal item (already consumed) and exited — the
+                // connection is over either way
+                let item = rx.recv().map_err(|_| TransportError::PeerClosed {
+                    peer: self.peer.clone(),
+                })?;
+                let (msg, n) = item?;
                 self.note_recv(n);
                 Ok(msg)
             }
         }
     }
 
-    fn try_recv(&mut self) -> Result<Option<Message>, String> {
+    fn try_recv(&mut self) -> Result<Option<Message>, TransportError> {
         match &mut self.reader {
-            Reader::Direct(_) => Err(format!(
+            Reader::Direct(_) => Err(TransportError::Protocol(format!(
                 "{}: try_recv is not supported on a direct TCP transport",
                 self.peer
-            )),
+            ))),
             Reader::Threaded(rx) => match rx.try_recv() {
                 Ok(item) => {
-                    let (msg, n) = item.map_err(|e| format!("{} -> {e}", self.peer))?;
+                    let (msg, n) = item?;
                     self.note_recv(n);
                     Ok(Some(msg))
                 }
                 Err(mpsc::TryRecvError::Empty) => Ok(None),
                 Err(mpsc::TryRecvError::Disconnected) => {
-                    Err(format!("{}: connection reader exited", self.peer))
+                    Err(TransportError::PeerClosed { peer: self.peer.clone() })
                 }
             },
         }
@@ -224,5 +253,59 @@ mod tests {
             Duration::from_millis(10)
         )
         .is_err());
+    }
+
+    #[test]
+    fn threaded_peer_disconnect_is_typed() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let client = thread::spawn(move || {
+            let mut t = TcpTransport::connect(&addr).unwrap();
+            t.send(&Message::RoundOpen { round: 3, sync: false }).unwrap();
+            // drop: clean close after one frame
+        });
+        let mut server = TcpTransport::accept(&listener).unwrap();
+        // the queued frame still arrives...
+        assert!(matches!(server.recv().unwrap(), Message::RoundOpen { round: 3, .. }));
+        client.join().unwrap();
+        // ...then the hang-up surfaces as PeerClosed, not a generic error
+        let err = server.recv().unwrap_err();
+        assert!(err.is_peer_closed(), "want PeerClosed, got {err:?}");
+        // and stays typed on subsequent receives
+        let err = server.recv().unwrap_err();
+        assert!(err.is_peer_closed(), "want PeerClosed again, got {err:?}");
+    }
+
+    #[test]
+    fn direct_peer_disconnect_is_typed() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let client = thread::spawn(move || {
+            let t = TcpTransport::connect(&addr).unwrap();
+            drop(t); // immediate clean close
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut server = TcpTransport::direct(stream).unwrap();
+        client.join().unwrap();
+        let err = server.recv().unwrap_err();
+        assert!(err.is_peer_closed(), "want PeerClosed, got {err:?}");
+    }
+
+    #[test]
+    fn garbage_bytes_are_protocol_not_peer_closed() {
+        use std::io::Write;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let client = thread::spawn(move || {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(&[0xde, 0xad, 0xbe, 0xef, 1, 2, 3, 4, 5, 6]).unwrap();
+        });
+        let mut server = TcpTransport::accept(&listener).unwrap();
+        client.join().unwrap();
+        let err = server.recv().unwrap_err();
+        assert!(
+            matches!(err, TransportError::Protocol(_)),
+            "want Protocol, got {err:?}"
+        );
     }
 }

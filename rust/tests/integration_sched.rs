@@ -1,0 +1,327 @@
+//! Scheduler-subsystem integration: the three scheduling policies end to
+//! end, over the deterministic loopback delay shim and over real sockets
+//! behind the poll-driven event loop.
+//!
+//! Load-bearing properties:
+//! * `InOrder` stays byte-for-byte identical across policies at zero delay
+//!   (the PR 1 parity goldens keep holding — see integration_transport.rs,
+//!   whose TCP paths now run through the poll event loop).
+//! * `ArrivalOrder` is deterministic under the seeded artificial-delay
+//!   shim.
+//! * A straggler timeout + quorum closes rounds without the slow device
+//!   and carries it over; the carried device's stale work is served when
+//!   it lands.
+//! * One single-threaded poll loop sustains ≥ 64 concurrent mock-compute
+//!   device connections.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::data::Dataset;
+use slacc::sched::Policy;
+use slacc::transport::device::{mock_worker, run_blocking};
+use slacc::transport::proto::Message;
+use slacc::transport::server::{
+    accept_and_serve, mock_runtime, run_mock_loopback, run_mock_loopback_delayed,
+};
+use slacc::transport::tcp::TcpTransport;
+use slacc::transport::{DelayedTransport, Transport};
+
+fn tiny_cfg(codec: &str, devices: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for("ham");
+    cfg.devices = devices;
+    cfg.rounds = rounds;
+    cfg.train_n = 64;
+    cfg.test_n = 16;
+    cfg.eval_every = 2;
+    cfg.lr = 1e-3;
+    cfg.seed = 3;
+    cfg.codec = CodecChoice::Named(codec.into());
+    cfg
+}
+
+#[test]
+fn arrival_order_at_zero_delay_matches_inorder_exactly() {
+    // with no artificial delay, arrival order degenerates to id order, so
+    // the two policies must agree on every number — this pins the
+    // scheduler refactor to the PR 1 baseline
+    let cfg = tiny_cfg("slacc", 3, 4);
+    let inorder = run_mock_loopback(&cfg).unwrap();
+    let mut cfg2 = tiny_cfg("slacc", 3, 4);
+    cfg2.schedule = Policy::arrival();
+    let arrival = run_mock_loopback(&cfg2).unwrap();
+    assert_eq!(inorder.metrics.len(), arrival.metrics.len());
+    for (a, b) in inorder.metrics.records.iter().zip(&arrival.metrics.records) {
+        assert_eq!(a.loss, b.loss, "round {}", a.round);
+        assert_eq!(a.bytes_up, b.bytes_up, "round {}", a.round);
+        assert_eq!(a.bytes_down, b.bytes_down, "round {}", a.round);
+        assert_eq!(a.bytes_sync, b.bytes_sync, "round {}", a.round);
+        assert_eq!(a.accuracy, b.accuracy, "round {}", a.round);
+    }
+    assert_eq!(arrival.straggler_events, 0);
+}
+
+#[test]
+fn arrival_order_is_deterministic_under_the_delay_shim() {
+    let mut cfg = tiny_cfg("slacc", 3, 4);
+    cfg.schedule = Policy::arrival();
+    let delays = [0.03, 0.01, 0.02];
+    let (a, sched_a) = run_mock_loopback_delayed(&cfg, &delays, 42).unwrap();
+    let (b, sched_b) = run_mock_loopback_delayed(&cfg, &delays, 42).unwrap();
+    assert_eq!(a.metrics.len(), b.metrics.len());
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_eq!(x.loss, y.loss, "round {}", x.round);
+        assert_eq!(x.bytes_up, y.bytes_up, "round {}", x.round);
+        assert_eq!(x.accuracy, y.accuracy, "round {}", x.round);
+    }
+    assert_eq!(sched_a, sched_b, "scheduling records must be reproducible");
+    assert_eq!(a.rounds_run, 4);
+    // no timeout configured: everyone participates every round
+    for rec in &sched_a {
+        assert_eq!(rec.participants.len(), 3, "round {}", rec.round);
+        assert!(rec.stragglers.is_empty(), "round {}", rec.round);
+    }
+}
+
+#[test]
+fn quorum_close_carries_the_straggler_and_serves_its_stale_work() {
+    let mut cfg = tiny_cfg("slacc", 3, 10);
+    cfg.eval_every = 20; // eval only at the end
+    cfg.schedule = Policy::arrival_with_timeout(0.4, 2);
+    // device 2 is ~20x slower than the 0.4 s timeout window allows
+    let delays = [0.06, 0.06, 1.2];
+    let (report, sched) = run_mock_loopback_delayed(&cfg, &delays, 7).unwrap();
+    assert_eq!(report.rounds_run, 10);
+    assert!(report.straggler_events >= 1, "no straggler was ever carried");
+
+    // round 0 must close on the timeout with exactly the fast quorum
+    // (participants are in arrival order, so compare as a set)
+    let r0 = &sched[0];
+    let mut p0 = r0.participants.clone();
+    p0.sort_unstable();
+    assert_eq!(p0, vec![0, 1]);
+    assert_eq!(r0.stragglers, vec![2]);
+    assert!((r0.wait_s[2] - 0.4).abs() < 1e-6, "straggler wait = timeout burn");
+
+    // the carried device's stale round-0 Activations must land and be
+    // served in some later round (virtual arrival ~1.2 s, session ~1.5 s)
+    assert!(
+        sched.iter().any(|r| r.stale.contains(&2)),
+        "straggler never caught up: {sched:?}"
+    );
+    // fast devices keep making progress every round
+    for rec in &sched {
+        assert!(!rec.participants.is_empty(), "round {} had no participants", rec.round);
+    }
+}
+
+#[test]
+fn unmet_quorum_blocks_the_close_until_the_slow_device_arrives() {
+    let mut cfg = tiny_cfg("slacc", 3, 3);
+    cfg.eval_every = 10;
+    // quorum == fleet size: the timeout alone may never drop anyone
+    cfg.schedule = Policy::arrival_with_timeout(0.2, 3);
+    let delays = [0.0, 0.0, 3.0];
+    let (report, sched) = run_mock_loopback_delayed(&cfg, &delays, 7).unwrap();
+    assert_eq!(report.rounds_run, 3);
+    // nobody is ever *dropped* — the quorum requires the whole fleet
+    assert_eq!(report.straggler_events, 0);
+    // round 0 blocked past the timeout until the slow device delivered
+    assert_eq!(sched[0].participants.len(), 3);
+    assert!(sched[0].wait_s[2] > 2.0, "slow device wait not recorded");
+    // its ModelSync push is still in flight afterwards, so later rounds
+    // proceed with the fast pair while it finishes the handoff
+    for rec in &sched[1..] {
+        assert!(rec.participants.len() >= 2, "round {}", rec.round);
+        assert!(rec.stragglers.is_empty(), "round {}", rec.round);
+    }
+}
+
+#[test]
+fn modelsync_bytes_ride_their_own_axis_and_compress() {
+    // default (identity) sync stream: lossless, but accounted
+    let cfg = tiny_cfg("slacc", 3, 4);
+    let report = run_mock_loopback(&cfg).unwrap();
+    assert!(report.total_bytes_sync > 0, "sync traffic must be accounted");
+    for rec in &report.metrics.records {
+        // agg_every=1: every round pushes + broadcasts sub-models
+        assert!(rec.bytes_sync > 0, "round {}", rec.round);
+        assert!(rec.bytes_up > 0 && rec.bytes_down > 0);
+    }
+    // a lossy sync codec runs end to end and changes the sync byte count
+    let mut cfg2 = tiny_cfg("slacc", 3, 4);
+    cfg2.sync_codec = Some("uniform8".into());
+    let lossy = run_mock_loopback(&cfg2).unwrap();
+    assert_eq!(lossy.rounds_run, 4);
+    assert!(lossy.metrics.records.iter().all(|r| r.loss.is_finite()));
+    assert!(lossy.total_bytes_sync > 0);
+    assert_ne!(
+        lossy.total_bytes_sync, report.total_bytes_sync,
+        "sync codec choice must be visible in the sync byte axis"
+    );
+    // smashed-data axes are untouched by the sync codec choice
+    assert_eq!(report.total_bytes_up, lossy.total_bytes_up);
+    assert_eq!(report.total_bytes_down, lossy.total_bytes_down);
+}
+
+/// ≥ 64 concurrent mock-compute devices against the single-threaded poll
+/// loop (the acceptance bar for the event-loop server).
+#[test]
+fn poll_server_sustains_64_concurrent_connections() {
+    let devices = 64;
+    let mut cfg = tiny_cfg("uniform4", devices, 2);
+    cfg.train_n = 256;
+    cfg.eval_every = 10;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut handles = Vec::new();
+    for d in 0..devices {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        handles.push(thread::spawn(move || -> Result<(), String> {
+            let (train, _) =
+                Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+            let mut worker = mock_worker(&cfg, Arc::new(train), d)?;
+            let mut conn =
+                TcpTransport::connect_retry(&addr, 80, Duration::from_millis(100))?;
+            run_blocking(&mut worker, &mut conn)
+        }));
+    }
+    let (_, test) =
+        Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed).unwrap();
+    let mut rt = mock_runtime(&cfg, Arc::new(test)).unwrap();
+    let report = accept_and_serve(&mut rt, &listener).unwrap();
+    assert_eq!(report.rounds_run, 2);
+    for (d, h) in handles.into_iter().enumerate() {
+        h.join().unwrap().unwrap_or_else(|e| panic!("device {d}: {e}"));
+    }
+}
+
+/// TCP integration: arrival-order + straggler timeout against a device
+/// that is 3x slower than the whole session should take. The fleet must
+/// complete every round without serializing on it.
+#[test]
+fn tcp_arrival_order_does_not_block_on_a_slow_device() {
+    let devices = 3;
+    let rounds = 4;
+    let slow = Duration::from_millis(300);
+    let mut cfg = tiny_cfg("slacc", devices, rounds);
+    cfg.eval_every = 10;
+    cfg.schedule = Policy::arrival_with_timeout(0.1, 2);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut handles = Vec::new();
+    for d in 0..devices {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        handles.push(thread::spawn(move || -> Result<(), String> {
+            let (train, _) =
+                Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+            let mut worker = mock_worker(&cfg, Arc::new(train), d)?;
+            let inner =
+                TcpTransport::connect_retry(&addr, 80, Duration::from_millis(100))?;
+            if d == devices - 1 {
+                let mut conn = DelayedTransport::slow_activations(inner, slow);
+                run_blocking(&mut worker, &mut conn)
+            } else {
+                let mut conn = inner;
+                run_blocking(&mut worker, &mut conn)
+            }
+        }));
+    }
+    let (_, test) =
+        Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed).unwrap();
+    let mut rt = mock_runtime(&cfg, Arc::new(test)).unwrap();
+    let t0 = Instant::now();
+    let report = accept_and_serve(&mut rt, &listener).unwrap();
+    let wall = t0.elapsed();
+    assert_eq!(report.rounds_run, rounds);
+    assert!(report.straggler_events >= 1, "slow device was never carried");
+    // in-order would serialize on the slow device: >= rounds * 300 ms.
+    // arrival order pays at most ~one timeout per round.
+    let blocking_floor = slow * rounds as u32;
+    assert!(
+        wall < blocking_floor,
+        "event loop blocked on the straggler: {wall:?} >= {blocking_floor:?}"
+    );
+    // the slow device may exit Ok (buffered Shutdown) or with a closed
+    // socket, depending on timing; the fast devices must finish cleanly
+    for (d, h) in handles.into_iter().enumerate() {
+        let out = h.join().unwrap();
+        if d < devices - 1 {
+            out.unwrap_or_else(|e| panic!("device {d}: {e}"));
+        }
+    }
+}
+
+/// A device that vanishes mid-session must surface as a typed peer-closed
+/// transport error, failing the session cleanly rather than hanging —
+/// under BOTH scheduling policies (arrival order waits in `recv_any`,
+/// which must also notice dead sockets).
+fn run_mid_session_disconnect(schedule: Policy) {
+    let devices = 2;
+    let mut cfg = tiny_cfg("slacc", devices, 50);
+    cfg.eval_every = 100;
+    cfg.schedule = schedule;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut handles = Vec::new();
+    for d in 0..devices {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        handles.push(thread::spawn(move || {
+            let (train, _) =
+                Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)
+                    .unwrap();
+            let mut worker = mock_worker(&cfg, Arc::new(train), d).unwrap();
+            let mut conn =
+                TcpTransport::connect_retry(&addr, 80, Duration::from_millis(100))
+                    .unwrap();
+            if d == 1 {
+                // play two rounds then vanish
+                conn.send(&worker.hello()).unwrap();
+                let mut seen = 0;
+                while seen < 5 {
+                    let msg = conn.recv().unwrap();
+                    let rounds_seen = matches!(msg, Message::RoundOpen { .. });
+                    for reply in worker.handle(msg).unwrap() {
+                        conn.send(&reply).unwrap();
+                    }
+                    if rounds_seen {
+                        seen += 1;
+                    }
+                }
+                drop(conn);
+            } else {
+                let _ = run_blocking(&mut worker, &mut conn);
+            }
+        }));
+    }
+    let (_, test) =
+        Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed).unwrap();
+    let mut rt = mock_runtime(&cfg, Arc::new(test)).unwrap();
+    let err = accept_and_serve(&mut rt, &listener).unwrap_err();
+    // FIN-vs-RST timing decides whether the EOF or a reset surfaces first;
+    // either way the session fails promptly with a connection-level error
+    // (the PeerClosed *typing* itself is pinned by the tcp.rs unit tests)
+    assert!(
+        err.contains("peer closed") || err.contains("i/o error"),
+        "want a connection-level failure, got: {err}"
+    );
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn mid_session_disconnect_fails_with_peer_closed_inorder() {
+    run_mid_session_disconnect(Policy::InOrder);
+}
+
+#[test]
+fn mid_session_disconnect_fails_with_peer_closed_arrival() {
+    run_mid_session_disconnect(Policy::arrival());
+}
