@@ -102,7 +102,7 @@ fn main() -> Result<(), String> {
     );
 
     // verify the decompressed tensor round-trips within quantization error
-    let rec = codec.decompress(&wire)?;
+    let rec = codec.decode(&wire)?;
     println!("reconstruction mean|err| = {:.5}", acts.mean_abs_diff(&rec));
     Ok(())
 }

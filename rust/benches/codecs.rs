@@ -1,0 +1,154 @@
+//! Codec stream-pipeline benchmarks — engine-free, runs anywhere and in CI.
+//!
+//!     cargo bench --bench codecs            # full sweep
+//!     cargo bench --bench codecs -- --smoke # seconds-fast CI smoke
+//!
+//! Two angles:
+//! * **throughput** — per-codec encode/decode MB/s at a realistic smashed
+//!   data shape, through the reusable-buffer [`Codec::encode`] path.
+//! * **allocation** — a counting global allocator audits the steady-state
+//!   encode path. The redesign's contract: once the caller-owned buffer
+//!   and the codec's internal scratch are warmed, the pure quantization
+//!   codecs (`identity`, `uniform*`) perform **zero** allocations per
+//!   encode — asserted here, so a regression fails CI. The adaptive codecs
+//!   (slacc's clustering/diagnostics, selection, randtopk's index sort)
+//!   allocate by design; their counts are reported so drift is visible.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use slacc::codecs::{self, Codec, RoundCtx};
+use slacc::entropy::shannon;
+use slacc::quant::payload::ByteWriter;
+use slacc::tensor::Tensor;
+use slacc::util::rng::Pcg32;
+
+/// Counts every allocation/reallocation so the bench can assert the
+/// zero-alloc contract of the reusable-buffer encode path.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Specs the sweep covers: every base family plus a wrapped and a
+/// parameterized spec, all resolved through the registry.
+const SPECS: &[&str] = &[
+    "identity", "uniform4", "uniform8", "slacc", "powerquant", "randtopk",
+    "splitfc", "easyquant", "select:std:4", "ef:uniform4",
+];
+
+/// Codecs whose steady-state encode path must not allocate at all.
+const ZERO_ALLOC: &[&str] = &["identity", "uniform4", "uniform8"];
+
+fn activations(b: usize, c: usize, h: usize, w: usize) -> Tensor {
+    let mut rng = Pcg32::seeded(1);
+    let data: Vec<f32> = (0..b * c * h * w)
+        .map(|_| rng.next_gaussian().max(0.0))
+        .collect();
+    Tensor::new(vec![b, c, h, w], data)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (b, c, h, w, iters) = if smoke {
+        println!("[codecs bench: smoke mode]");
+        (8usize, 16usize, 8usize, 8usize, 5usize)
+    } else {
+        // the artifact shape: 1 MiB of smashed data
+        (32, 32, 16, 16, 30)
+    };
+    let acts = activations(b, c, h, w);
+    let cm = acts.to_channel_major();
+    let ent = shannon::entropies(&cm);
+    let raw_bytes = cm.data().len() * 4;
+
+    println!(
+        "{:<16} {:>8} {:>10} {:>10} {:>12} {:>12}",
+        "spec", "wire_B", "enc MB/s", "dec MB/s", "allocs/enc", "steady"
+    );
+    for spec in SPECS {
+        let mut codec: Box<dyn Codec> =
+            codecs::by_name(spec, c, 1000, 3).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        let mut buf = ByteWriter::new();
+        let ctx = || RoundCtx { entropy: Some(&ent) };
+
+        // warm the reusable buffer + internal scratch to steady state
+        for _ in 0..3 {
+            buf.clear();
+            codec.encode(&cm, ctx(), &mut buf);
+        }
+        let wire_len = buf.len();
+
+        // steady-state allocation audit
+        let a0 = allocs();
+        for _ in 0..iters {
+            buf.clear();
+            codec.encode(&cm, ctx(), &mut buf);
+        }
+        let per_encode = (allocs() - a0) as f64 / iters as f64;
+        let steady_ok = per_encode == 0.0;
+        if ZERO_ALLOC.contains(spec) {
+            assert!(
+                steady_ok,
+                "{spec}: {per_encode} allocations per steady-state encode \
+                 (reusable-buffer contract broken)"
+            );
+        }
+
+        // encode throughput
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            buf.clear();
+            codec.encode(&cm, ctx(), &mut buf);
+        }
+        let enc_mbs = raw_bytes as f64 * iters as f64 / t0.elapsed().as_secs_f64() / 1e6;
+
+        // decode throughput
+        let wire = buf.to_vec();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(codec.decode(&wire).unwrap());
+        }
+        let dec_mbs = raw_bytes as f64 * iters as f64 / t0.elapsed().as_secs_f64() / 1e6;
+
+        println!(
+            "{:<16} {:>8} {:>10.1} {:>10.1} {:>12.1} {:>12}",
+            spec,
+            wire_len,
+            enc_mbs,
+            dec_mbs,
+            per_encode,
+            if steady_ok { "zero-alloc" } else { "allocates" }
+        );
+    }
+    println!(
+        "\nzero-alloc contract held for {:?} ({} iters at {}x{}x{}x{})",
+        ZERO_ALLOC, iters, b, c, h, w
+    );
+}

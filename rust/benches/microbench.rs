@@ -78,7 +78,7 @@ fn main() {
         results.push(
             Bencher::new(&format!("decompress[{name}]"))
                 .run_bytes(|| {
-                    std::hint::black_box(codec.decompress(&wire).unwrap());
+                    std::hint::black_box(codec.decode(&wire).unwrap());
                     raw_bytes
                 }),
         );

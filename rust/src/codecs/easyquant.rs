@@ -8,7 +8,7 @@
 //! value) so they do not stretch the quantization grid. Bit width is fixed
 //! for all channels — uniform allocation, the property CGC replaces.
 
-use crate::codecs::{ids, Codec, RoundCtx};
+use crate::codecs::{ids, Codec, CodecError, RoundCtx};
 use crate::quant::{bitpack, linear};
 use crate::quant::payload::{ByteReader, ByteWriter, Header};
 use crate::tensor::{view, ChannelMajor, Tensor};
@@ -19,12 +19,15 @@ const CLIP_GRID: &[f32] = &[1.0, 0.9, 0.8, 0.7, 0.6, 0.5];
 #[derive(Debug)]
 pub struct EasyQuantCodec {
     bits: u32,
+    /// reusable quantization scratch (encode hot path)
+    codes: Vec<u32>,
+    packed: Vec<u8>,
 }
 
 impl EasyQuantCodec {
     pub fn new(bits: u32) -> Self {
         assert!((2..=16).contains(&bits));
-        EasyQuantCodec { bits }
+        EasyQuantCodec { bits, codes: Vec::new(), packed: Vec::new() }
     }
 
     /// Pick the clip factor minimizing reconstruction MSE for one channel.
@@ -85,17 +88,14 @@ impl Codec for EasyQuantCodec {
         "easyquant"
     }
 
-    fn compress(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>) -> Vec<u8> {
+    fn encode(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>, out: &mut ByteWriter) {
         let (b, c, h, w) = data.geometry();
         let n = data.n_per_channel;
-        let mut out = ByteWriter::with_capacity(
-            Header::BYTES + 1 + c * (12 + bitpack::packed_len(n, self.bits)),
-        );
+        out.reserve(Header::BYTES + 1 + c * (12 + bitpack::packed_len(n, self.bits)));
         Header { codec_id: ids::EASYQUANT, dims: [b as u32, c as u32, h as u32, w as u32] }
-            .write(&mut out);
+            .write(out);
         out.u8(self.bits as u8);
 
-        let mut codes = Vec::new();
         for ch in 0..c {
             let row = data.channel(ch);
             let (mn, mx) = view::min_max(row);
@@ -120,23 +120,26 @@ impl Codec for EasyQuantCodec {
                 out.u32(i);
                 out.f32(v);
             }
-            linear::quantize(row, cmn, cmx, self.bits, &mut codes);
-            out.bytes(&bitpack::pack(&codes, self.bits));
+            linear::quantize(row, cmn, cmx, self.bits, &mut self.codes);
+            bitpack::pack_into(&self.codes, self.bits, &mut self.packed);
+            out.bytes(&self.packed);
         }
-        out.finish()
     }
 
-    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+    fn decode(&mut self, bytes: &[u8]) -> Result<Tensor, CodecError> {
         let mut r = ByteReader::new(bytes);
         let header = Header::read(&mut r)?;
         if header.codec_id != ids::EASYQUANT {
-            return Err(format!("not an easyquant payload (codec {})", header.codec_id));
+            return Err(CodecError::WrongCodec {
+                expected: "easyquant",
+                found: header.codec_id,
+            });
         }
         let [b, c, h, w] = header.dims.map(|d| d as usize);
         let n = header.n_per_channel();
         let bits = r.u8()? as u32;
         if !(2..=16).contains(&bits) {
-            return Err(format!("bad bit width {bits}"));
+            return Err(CodecError::Malformed(format!("bad bit width {bits}")));
         }
         let mut rows = vec![0.0f32; c * n];
         let mut vals = Vec::new();
@@ -145,13 +148,19 @@ impl Codec for EasyQuantCodec {
             let cmx = r.f32()?;
             let n_out = r.u32()? as usize;
             if n_out > n {
-                return Err(format!("outlier count {n_out} > N {n}"));
+                return Err(CodecError::LimitExceeded {
+                    what: "easyquant outlier count",
+                    claimed: n_out,
+                    cap: n,
+                });
             }
             let mut outliers = Vec::with_capacity(n_out);
             for _ in 0..n_out {
                 let i = r.u32()? as usize;
                 if i >= n {
-                    return Err(format!("outlier index {i} out of range"));
+                    return Err(CodecError::Malformed(format!(
+                        "outlier index {i} out of range"
+                    )));
                 }
                 outliers.push((i, r.f32()?));
             }
@@ -164,6 +173,7 @@ impl Codec for EasyQuantCodec {
                 dst[i] = v;
             }
         }
+        r.expect_end()?;
         Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
     }
 }
@@ -179,7 +189,7 @@ mod tests {
         let cm = random_cm(2, 8, 4, 4, 1);
         let mut c = EasyQuantCodec::new(6);
         let wire = c.compress(&cm, RoundCtx::default());
-        let out = c.decompress(&wire).unwrap();
+        let out = c.decode(&wire).unwrap();
         let orig = cm.to_nchw();
         assert!(orig.mean_abs_diff(&out) < 0.1);
     }
@@ -199,7 +209,7 @@ mod tests {
         let cm = Tensor::new(vec![1, 2, 10, 10], data.clone()).to_channel_major();
         let mut c = EasyQuantCodec::new(4);
         let wire = c.compress(&cm, RoundCtx::default());
-        let out = c.decompress(&wire).unwrap();
+        let out = c.decode(&wire).unwrap();
         let rec = out.to_channel_major();
         assert_eq!(rec.channel(0)[5], 50.0);
         assert_eq!(rec.channel(1)[9], -40.0);

@@ -7,8 +7,9 @@
 //! compressed (x + carried error), so byte accounting and the server-side
 //! decompression path are identical.
 
-use crate::codecs::{Codec, RoundCtx};
+use crate::codecs::{Codec, CodecError, RoundCtx};
 use crate::quant::feedback::ErrorFeedback;
+use crate::quant::payload::ByteWriter;
 use crate::tensor::{ChannelMajor, Tensor};
 
 pub struct EfCodec {
@@ -31,9 +32,11 @@ impl EfCodec {
 
 impl Codec for EfCodec {
     fn name(&self) -> &'static str {
-        // leak once per codec instance construction pattern is avoided by
-        // returning a static prefix; the precise name is in `label()`-style
-        // call sites via Debug. Codec::name is used for logs only.
+        // `name()` returns `&'static str`, so only the common single-wrap
+        // names are spelled out; every other wrapped spec (parameterized
+        // bases, nested ef:) falls back to the generic label. Diagnostics
+        // that need the exact spec read the stream's canonical
+        // `StreamSpec` string, not `name()`.
         match self.name.as_str() {
             "ef:slacc" => "ef:slacc",
             "ef:uniform4" => "ef:uniform4",
@@ -46,7 +49,7 @@ impl Codec for EfCodec {
         }
     }
 
-    fn compress(&mut self, data: &ChannelMajor, ctx: RoundCtx<'_>) -> Vec<u8> {
+    fn encode(&mut self, data: &ChannelMajor, ctx: RoundCtx<'_>, out: &mut ByteWriter) {
         let (b, c, h, w) = data.geometry();
         let ef = self
             .ef
@@ -62,23 +65,25 @@ impl Codec for EfCodec {
         // compensated tensor differs, so recompute inside the inner codec
         // by dropping the hint (correctness > the small CPU saving).
         let _ = ctx; // entropy hint was computed on the raw tensor; see note
-        let wire = self.inner.compress(&comp_cm, RoundCtx { entropy: None });
+        let start = out.len();
+        self.inner.encode(&comp_cm, RoundCtx { entropy: None }, out);
 
-        // absorb: m = decay * (x' - D(C(x')))
-        match self.inner.decompress(&wire) {
+        // absorb: m = decay * (x' - D(C(x'))) — the wire bytes we just
+        // wrote are decoded in place (no interior-mutability workaround:
+        // decode is &mut self since the stream-pipeline redesign)
+        match self.inner.decode(&out.as_slice()[start..]) {
             Ok(rec) => {
                 let rec_cm = rec.to_channel_major();
                 ef.absorb(&comp, rec_cm.data());
             }
             Err(e) => {
-                crate::log_warn!("ef: inner decompress failed ({e}); memory frozen");
+                crate::log_warn!("ef: inner decode failed ({e}); memory frozen");
             }
         }
-        wire
     }
 
-    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
-        self.inner.decompress(bytes)
+    fn decode(&mut self, bytes: &[u8]) -> Result<Tensor, CodecError> {
+        self.inner.decode(bytes)
     }
 }
 
@@ -94,8 +99,8 @@ mod tests {
         let mut ef = EfCodec::new(Box::new(UniformCodec::new(2)), 1.0);
         let wire = ef.compress(&cm, RoundCtx::default());
         // decompressable by a bare inner codec (format unchanged)
-        let bare = UniformCodec::new(2);
-        assert!(bare.decompress(&wire).is_ok());
+        let mut bare = UniformCodec::new(2);
+        assert!(bare.decode(&wire).is_ok());
     }
 
     #[test]
@@ -122,14 +127,14 @@ mod tests {
         let mut bare = UniformCodec::new(2);
         use crate::codecs::Codec as _;
         let bare_wire = bare.compress(&cm, RoundCtx::default());
-        let bare_rec = bare.decompress(&bare_wire).unwrap();
+        let bare_rec = bare.decode(&bare_wire).unwrap();
         let bare_err = truth.mean_abs_diff(&bare_rec);
 
         let mut ef = EfCodec::new(Box::new(UniformCodec::new(2)), 1.0);
         let mut sum = vec![0.0f64; truth.len()];
         for _ in 0..rounds {
             let wire = ef.compress(&cm, RoundCtx::default());
-            let rec = ef.decompress(&wire).unwrap();
+            let rec = ef.decode(&wire).unwrap();
             for (s, &v) in sum.iter_mut().zip(rec.data()) {
                 *s += v as f64;
             }

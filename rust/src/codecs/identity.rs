@@ -3,7 +3,7 @@
 //! This is what vanilla split learning sends; every compression curve in
 //! the benches is normalized against its byte count.
 
-use crate::codecs::{ids, Codec, RoundCtx};
+use crate::codecs::{ids, Codec, CodecError, RoundCtx};
 use crate::quant::payload::{ByteReader, ByteWriter, Header};
 use crate::tensor::{ChannelMajor, Tensor};
 
@@ -21,25 +21,27 @@ impl Codec for IdentityCodec {
         "identity"
     }
 
-    fn compress(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>) -> Vec<u8> {
+    fn encode(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>, out: &mut ByteWriter) {
         let (b, c, h, w) = data.geometry();
-        let mut out =
-            ByteWriter::with_capacity(Header::BYTES + data.data().len() * 4);
+        out.reserve(Header::BYTES + data.data().len() * 4);
         Header { codec_id: ids::IDENTITY, dims: [b as u32, c as u32, h as u32, w as u32] }
-            .write(&mut out);
+            .write(out);
         out.f32s(data.data());
-        out.finish()
     }
 
-    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+    fn decode(&mut self, bytes: &[u8]) -> Result<Tensor, CodecError> {
         let mut r = ByteReader::new(bytes);
         let header = Header::read(&mut r)?;
         if header.codec_id != ids::IDENTITY {
-            return Err(format!("not an identity payload (codec {})", header.codec_id));
+            return Err(CodecError::WrongCodec {
+                expected: "identity",
+                found: header.codec_id,
+            });
         }
         let [b, c, h, w] = header.dims.map(|d| d as usize);
         let n = header.n_per_channel();
         let rows = r.f32s(c * n)?;
+        r.expect_end()?;
         Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
     }
 }
@@ -54,7 +56,7 @@ mod tests {
         let cm = random_cm(2, 4, 3, 3, 1);
         let mut c = IdentityCodec::new();
         let wire = c.compress(&cm, RoundCtx::default());
-        let out = c.decompress(&wire).unwrap();
+        let out = c.decode(&wire).unwrap();
         assert_eq!(out, cm.to_nchw());
     }
 

@@ -1,33 +1,67 @@
-//! Smashed-data compression codecs.
+//! Smashed-data compression codecs, organized as **stream pipelines**.
+//!
+//! A split-learning session moves three kinds of traffic, each of which
+//! wants its own compressor (the point of per-channel-adaptive schemes —
+//! activations, gradients, and parameters have different statistics):
+//!
+//! * **uplink** — device → server activations (the paper's main axis),
+//! * **downlink** — server → device cut-layer gradients,
+//! * **sync** — ModelSync / FedAvg parameter traffic.
+//!
+//! The surface has three layers:
+//!
+//! * [`Codec`] — one stateful compressor/decompressor instance. The hot
+//!   path is [`Codec::encode`], which writes the wire envelope into a
+//!   caller-owned reusable [`ByteWriter`] (zero steady-state allocation
+//!   for the quantizing codecs — `benches/codecs.rs` measures it), and
+//!   [`Codec::decode`], whose `&mut self` lets stateful wrappers (error
+//!   feedback) update without interior-mutability workarounds. Failures
+//!   are the typed [`CodecError`], never a panic: envelopes come off the
+//!   network.
+//! * [`registry::CodecRegistry`] — the single construction path. Every
+//!   codec family registers a spec grammar (`"slacc"`, `"uniform8"`,
+//!   `"select:acii:2"`, `"ef:"` wrappers); [`registry::CodecRegistry::parse`]
+//!   validates a spec string and [`registry::CodecRegistry::build`]
+//!   instantiates it for one stream. [`by_name`] is a thin convenience
+//!   wrapper over the registry with default SL-ACC parameters.
+//! * [`stream`] — the session-level stream model: [`stream::StreamKind`]
+//!   names the three streams, [`stream::StreamSpecs`] is the negotiated
+//!   per-stream spec table the Hello handshake fingerprints and compares,
+//!   and [`stream::StreamSet`] owns every per-device, per-direction codec
+//!   instance (including the stream-seed derivation, so stochastic codecs
+//!   differ per device and direction).
 //!
 //! The paper's contribution ([`slacc::SlAccCodec`], ACII + CGC) plus every
 //! baseline its evaluation compares against:
 //!
-//! | codec | paper role |
+//! | spec | paper role |
 //! |---|---|
-//! | [`slacc::SlAccCodec`] | SL-ACC (Fig. 5–7) |
-//! | [`powerquant::PowerQuantCodec`] | PowerQuant-SL (Fig. 5, 7) |
-//! | [`randtopk::RandTopkCodec`] | RandTopk-SL (Fig. 5) |
-//! | [`splitfc::SplitFcCodec`] | SplitFC (Fig. 5) |
-//! | [`easyquant::EasyQuantCodec`] | EasyQuant (Fig. 7) |
-//! | [`uniform::UniformCodec`] | fixed-bit ablation substrate |
-//! | [`identity::IdentityCodec`] | uncompressed SL reference |
-//! | [`selection::SelectionCodec`] | single/subset-channel ablations (Fig. 2, 3, 6) |
+//! | `slacc` / `slacc-paper-eq6` | SL-ACC (Fig. 5–7) |
+//! | `powerquant` | PowerQuant-SL (Fig. 5, 7) |
+//! | `randtopk` | RandTopk-SL (Fig. 5) |
+//! | `splitfc` | SplitFC (Fig. 5) |
+//! | `easyquant` | EasyQuant (Fig. 7) |
+//! | `uniform<bits>` | fixed-bit ablation substrate |
+//! | `identity` | uncompressed SL reference |
+//! | `select:<strategy>:<n>` | single/subset-channel ablations (Fig. 2, 3, 6) |
+//! | `ef:<spec>` | error-feedback wrapper (extension) |
 //!
-//! A codec maps channel-major smashed data to wire bytes and back. Codecs
-//! are stateful across rounds (ACII history, RNG streams), so each
-//! device-direction stream owns its own instance.
+//! Codecs are stateful across rounds (ACII history, RNG streams, EF
+//! memory), so each device-direction stream owns its own instance.
 
 pub mod easyquant;
 pub mod ef;
 pub mod identity;
 pub mod powerquant;
 pub mod randtopk;
+pub mod registry;
 pub mod selection;
 pub mod slacc;
 pub mod splitfc;
+pub mod stream;
 pub mod uniform;
 
+use crate::quant::payload::ByteWriter;
 use crate::tensor::{ChannelMajor, Tensor};
 
 /// Stable codec ids for the wire header.
@@ -42,7 +76,55 @@ pub mod ids {
     pub const SELECTION: u8 = 7;
 }
 
-/// Per-round side information handed to `compress`.
+/// What went wrong while decoding an envelope or resolving a stream spec.
+/// Decoders are exposed to the network, so every failure is a value, never
+/// a panic, and every hostile length claim is rejected *before* the
+/// allocation it would have demanded.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// The byte stream ended before a field could be read.
+    Truncated { need: usize, have: usize, at: usize },
+    /// Structurally invalid bytes: bad magic/version, out-of-range ids,
+    /// fields that disagree with each other, trailing garbage.
+    Malformed(String),
+    /// A length field claims more than a hard guard allows
+    /// ([`crate::quant::payload::MAX_ELEMENTS`] and friends).
+    LimitExceeded { what: &'static str, claimed: usize, cap: usize },
+    /// The envelope belongs to a different codec family than this stream
+    /// negotiated.
+    WrongCodec { expected: &'static str, found: u8 },
+    /// A stream spec string failed to parse or resolve in the registry.
+    UnknownSpec(String),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated { need, have, at } => write!(
+                f,
+                "payload truncated: need {need} bytes at offset {at}, have {have}"
+            ),
+            CodecError::Malformed(m) => write!(f, "malformed payload: {m}"),
+            CodecError::LimitExceeded { what, claimed, cap } => {
+                write!(f, "{what} claims {claimed} (cap {cap})")
+            }
+            CodecError::WrongCodec { expected, found } => {
+                write!(f, "not a {expected} payload (codec id {found})")
+            }
+            CodecError::UnknownSpec(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+impl From<CodecError> for String {
+    fn from(e: CodecError) -> String {
+        e.to_string()
+    }
+}
+
+/// Per-round side information handed to `encode`.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RoundCtx<'a> {
     /// Instantaneous per-channel entropy, if the coordinator already ran the
@@ -56,11 +138,27 @@ pub trait Codec: Send {
     /// Short stable name for logs/benches/CSV.
     fn name(&self) -> &'static str;
 
-    /// Compress one round's smashed data into wire bytes.
-    fn compress(&mut self, data: &ChannelMajor, ctx: RoundCtx<'_>) -> Vec<u8>;
+    /// Compress one round's smashed data, appending the wire envelope to
+    /// `out`. The buffer is caller-owned and reusable: callers `clear()`
+    /// it between rounds and its capacity persists, so the steady-state
+    /// encode path of the quantizing codecs performs no allocation
+    /// (internal scratch lives on the codec instance).
+    fn encode(&mut self, data: &ChannelMajor, ctx: RoundCtx<'_>, out: &mut ByteWriter);
 
-    /// Reconstruct the NCHW tensor from wire bytes.
-    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String>;
+    /// Reconstruct the NCHW tensor from wire bytes. `&mut self` so
+    /// stateful wrappers (error feedback) can fold decode-side state
+    /// without interior mutability.
+    fn decode(&mut self, bytes: &[u8]) -> Result<Tensor, CodecError>;
+
+    /// Encode into a fresh, exactly-consumed buffer — the path for
+    /// producing an owned frame payload (one allocation, no copy).
+    /// Callers that can reuse a buffer across rounds call
+    /// [`Codec::encode`] directly.
+    fn compress(&mut self, data: &ChannelMajor, ctx: RoundCtx<'_>) -> Vec<u8> {
+        let mut out = ByteWriter::new();
+        self.encode(data, ctx, &mut out);
+        out.finish()
+    }
 }
 
 /// Compression ratio helper: raw f32 bytes / wire bytes.
@@ -69,38 +167,34 @@ pub fn compression_ratio(data: &ChannelMajor, wire_len: usize) -> f64 {
     raw as f64 / wire_len.max(1) as f64
 }
 
-/// Factory: build a codec by CLI name. `seed` namespaces stochastic codecs,
-/// `total_rounds` feeds ACII's α schedule.
-pub fn by_name(name: &str, channels: usize, total_rounds: usize, seed: u64)
-               -> Result<Box<dyn Codec>, String> {
-    // `ef:<codec>` wraps any codec with error-feedback (extension; see ef.rs)
-    if let Some(inner) = name.strip_prefix("ef:") {
-        let base = by_name(inner, channels, total_rounds, seed)?;
-        return Ok(Box::new(ef::EfCodec::new(base, 1.0)));
-    }
-    let c: Box<dyn Codec> = match name {
-        "identity" | "none" => Box::new(identity::IdentityCodec::new()),
-        "uniform4" => Box::new(uniform::UniformCodec::new(4)),
-        "uniform8" => Box::new(uniform::UniformCodec::new(8)),
-        "slacc" => Box::new(slacc::SlAccCodec::new(
-            slacc::SlAccConfig::default(), channels, total_rounds, seed)),
-        "slacc-paper-eq6" => {
-            let cfg = slacc::SlAccConfig {
-                bit_alloc: slacc::BitAlloc::FloorEntropy,
-                ..slacc::SlAccConfig::default()
-            };
-            Box::new(slacc::SlAccCodec::new(cfg, channels, total_rounds, seed))
-        }
-        "powerquant" => Box::new(powerquant::PowerQuantCodec::new(4)),
-        "randtopk" => Box::new(randtopk::RandTopkCodec::new(0.1, 0.01, seed)),
-        "splitfc" => Box::new(splitfc::SplitFcCodec::new(0.5, 6)),
-        "easyquant" => Box::new(easyquant::EasyQuantCodec::new(4)),
-        _ => return Err(format!("unknown codec '{name}'")),
-    };
-    Ok(c)
+/// Convenience factory: build a codec by spec string with default SL-ACC
+/// parameters. `seed` namespaces stochastic codecs, `total_rounds` feeds
+/// ACII's α schedule. Thin wrapper over [`registry::CodecRegistry`] — the
+/// registry is the single construction path; sessions go through
+/// [`stream::StreamSet`], which also derives per-stream seeds.
+pub fn by_name(
+    name: &str,
+    channels: usize,
+    total_rounds: usize,
+    seed: u64,
+) -> Result<Box<dyn Codec>, CodecError> {
+    let reg = registry::CodecRegistry::standard();
+    let spec = reg.parse(name)?;
+    reg.build(
+        &spec,
+        &registry::StreamCtx {
+            channels,
+            total_rounds,
+            seed,
+            slacc: slacc::SlAccConfig::default(),
+            alpha: None,
+        },
+    )
 }
 
-/// All codec names `by_name` accepts (for CLI help / sweep benches).
+/// Base spec names the registry accepts (for CLI help / sweep benches).
+/// Parameterized families (`uniform<bits>`, `select:...`, `ef:`) accept
+/// more — see [`registry::CodecRegistry::grammar`].
 pub const ALL_CODECS: &[&str] = &[
     "identity", "uniform4", "uniform8", "slacc", "slacc-paper-eq6",
     "powerquant", "randtopk", "splitfc", "easyquant",
@@ -150,8 +244,26 @@ mod tests {
         for name in ALL_CODECS {
             let mut c = by_name(name, 8, 100, 7).unwrap();
             let wire = c.compress(&cm, RoundCtx::default());
-            let out = c.decompress(&wire).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let out = c.decode(&wire).unwrap_or_else(|e| panic!("{name}: {e}"));
             assert_eq!(out.dims(), &[2, 8, 4, 4], "codec {name}");
+        }
+    }
+
+    #[test]
+    fn encode_into_reused_buffer_matches_compress() {
+        // the reusable-buffer path and the convenience path must produce
+        // identical envelopes, and a warmed buffer must be reusable
+        let cm = random_cm(2, 8, 4, 4, 5);
+        for name in ALL_CODECS {
+            let mut a = by_name(name, 8, 100, 7).unwrap();
+            let mut b = by_name(name, 8, 100, 7).unwrap();
+            let mut buf = crate::quant::payload::ByteWriter::new();
+            for round in 0..3 {
+                let wire = a.compress(&cm, RoundCtx::default());
+                buf.clear();
+                b.encode(&cm, RoundCtx::default(), &mut buf);
+                assert_eq!(wire, buf.as_slice(), "{name} round {round}");
+            }
         }
     }
 
@@ -171,9 +283,18 @@ mod tests {
     }
 
     #[test]
-    fn decompress_rejects_garbage() {
-        let c = by_name("slacc", 8, 100, 7).unwrap();
-        assert!(c.decompress(&[1, 2, 3]).is_err());
-        assert!(c.decompress(&[]).is_err());
+    fn decode_rejects_garbage_for_every_codec() {
+        // the systematic prefix/bit-flip fuzz lives in
+        // tests/integration_codecs.rs; this pins the cheap invariants
+        let cm = random_cm(2, 8, 4, 4, 3);
+        for name in ALL_CODECS {
+            let mut c = by_name(name, 8, 100, 7).unwrap();
+            assert!(c.decode(&[1, 2, 3]).is_err(), "{name}");
+            assert!(c.decode(&[]).is_err(), "{name}");
+            // an envelope with trailing garbage disagrees with its header
+            let mut wire = c.compress(&cm, RoundCtx::default());
+            wire.push(0);
+            assert!(c.decode(&wire).is_err(), "{name}: trailing byte accepted");
+        }
     }
 }

@@ -9,7 +9,7 @@
 //! (min, max) pair per channel, fixed bits for all channels — i.e. uniform
 //! bit allocation, which is exactly the property SL-ACC's CGC improves on.
 
-use crate::codecs::{ids, Codec, RoundCtx};
+use crate::codecs::{ids, Codec, CodecError, RoundCtx};
 use crate::quant::bitpack;
 use crate::quant::payload::{ByteReader, ByteWriter, Header};
 use crate::tensor::{view, ChannelMajor, Tensor};
@@ -22,12 +22,15 @@ const EPS: f32 = 1e-8;
 #[derive(Debug)]
 pub struct PowerQuantCodec {
     bits: u32,
+    /// reusable quantization scratch (encode hot path)
+    codes: Vec<u32>,
+    packed: Vec<u8>,
 }
 
 impl PowerQuantCodec {
     pub fn new(bits: u32) -> Self {
         assert!((2..=16).contains(&bits));
-        PowerQuantCodec { bits }
+        PowerQuantCodec { bits, codes: Vec::new(), packed: Vec::new() }
     }
 
     /// Companded quantize one channel at exponent `a`; returns codes.
@@ -85,7 +88,7 @@ impl Codec for PowerQuantCodec {
         "powerquant"
     }
 
-    fn compress(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>) -> Vec<u8> {
+    fn encode(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>, out: &mut ByteWriter) {
         let (b, c, h, w) = data.geometry();
         let n = data.n_per_channel;
         let levels = ((1u32 << self.bits) - 1) as f32;
@@ -104,39 +107,39 @@ impl Codec for PowerQuantCodec {
             }
         }
 
-        let mut out = ByteWriter::with_capacity(
-            Header::BYTES + 5 + c * (8 + bitpack::packed_len(n, self.bits)),
-        );
+        out.reserve(Header::BYTES + 5 + c * (8 + bitpack::packed_len(n, self.bits)));
         Header { codec_id: ids::POWERQUANT, dims: [b as u32, c as u32, h as u32, w as u32] }
-            .write(&mut out);
+            .write(out);
         out.u8(self.bits as u8);
         out.f32(best_a);
-        let mut codes = Vec::new();
         for ch in 0..c {
             let (mn, mx) = ranges[ch];
             out.f32(mn);
             out.f32(mx);
-            Self::quantize_channel(data.channel(ch), mn, mx, best_a, levels, &mut codes);
-            out.bytes(&bitpack::pack(&codes, self.bits));
+            Self::quantize_channel(data.channel(ch), mn, mx, best_a, levels, &mut self.codes);
+            bitpack::pack_into(&self.codes, self.bits, &mut self.packed);
+            out.bytes(&self.packed);
         }
-        out.finish()
     }
 
-    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+    fn decode(&mut self, bytes: &[u8]) -> Result<Tensor, CodecError> {
         let mut r = ByteReader::new(bytes);
         let header = Header::read(&mut r)?;
         if header.codec_id != ids::POWERQUANT {
-            return Err(format!("not a powerquant payload (codec {})", header.codec_id));
+            return Err(CodecError::WrongCodec {
+                expected: "powerquant",
+                found: header.codec_id,
+            });
         }
         let [b, c, h, w] = header.dims.map(|d| d as usize);
         let n = header.n_per_channel();
         let bits = r.u8()? as u32;
         if !(2..=16).contains(&bits) {
-            return Err(format!("bad bit width {bits}"));
+            return Err(CodecError::Malformed(format!("bad bit width {bits}")));
         }
         let a = r.f32()?;
         if !(a.is_finite() && a > 0.0) {
-            return Err(format!("bad exponent {a}"));
+            return Err(CodecError::Malformed(format!("bad exponent {a}")));
         }
         let levels = ((1u32 << bits) - 1) as f32;
         let mut rows = vec![0.0f32; c * n];
@@ -149,6 +152,7 @@ impl Codec for PowerQuantCodec {
             Self::dequantize_channel(&codes, mn, mx, a, levels, &mut vals);
             rows[ch * n..(ch + 1) * n].copy_from_slice(&vals);
         }
+        r.expect_end()?;
         Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
     }
 }
@@ -163,7 +167,7 @@ mod tests {
         let cm = relu_cm(2, 8, 4, 4, 1);
         let mut c = PowerQuantCodec::new(4);
         let wire = c.compress(&cm, RoundCtx::default());
-        let out = c.decompress(&wire).unwrap();
+        let out = c.decode(&wire).unwrap();
         let orig = cm.to_nchw();
         // 4-bit companded quantization: error well under the value range
         let (mn, mx) = view::min_max(orig.data());

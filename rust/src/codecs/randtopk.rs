@@ -8,7 +8,7 @@
 //! carries (index u32, value f32) pairs — the classic sparse format, whose
 //! 8-byte-per-kept-element cost is what quantization-based schemes beat.
 
-use crate::codecs::{ids, Codec, RoundCtx};
+use crate::codecs::{ids, Codec, CodecError, RoundCtx};
 use crate::quant::payload::{ByteReader, ByteWriter, Header};
 use crate::tensor::{ChannelMajor, Tensor};
 use crate::util::rng::Pcg32;
@@ -35,7 +35,7 @@ impl Codec for RandTopkCodec {
         "randtopk"
     }
 
-    fn compress(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>) -> Vec<u8> {
+    fn encode(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>, out: &mut ByteWriter) {
         let (b, c, h, w) = data.geometry();
         let flat = data.data();
         let total = flat.len();
@@ -67,11 +67,13 @@ impl Codec for RandTopkCodec {
             rest_owned.swap(i, j);
         }
 
-        let mut out = ByteWriter::with_capacity(
-            Header::BYTES + 8 + (k + n_rand) * 8,
-        );
+        out.reserve(Header::BYTES + 12 + (k + n_rand) * 8);
         Header { codec_id: ids::RANDTOPK, dims: [b as u32, c as u32, h as u32, w as u32] }
-            .write(&mut out);
+            .write(out);
+        // total element count, redundantly: the sparse body's length does
+        // not otherwise depend on the header dims, so without this binding
+        // a corrupted header could silently re-shape the tensor
+        out.u32(total as u32);
         out.u32(k as u32);
         out.u32(n_rand as u32);
         for &i in top {
@@ -83,31 +85,44 @@ impl Codec for RandTopkCodec {
             out.u32(i);
             out.f32(flat[i as usize] * scale);
         }
-        out.finish()
     }
 
-    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+    fn decode(&mut self, bytes: &[u8]) -> Result<Tensor, CodecError> {
         let mut r = ByteReader::new(bytes);
         let header = Header::read(&mut r)?;
         if header.codec_id != ids::RANDTOPK {
-            return Err(format!("not a randtopk payload (codec {})", header.codec_id));
+            return Err(CodecError::WrongCodec {
+                expected: "randtopk",
+                found: header.codec_id,
+            });
         }
         let [b, c, h, w] = header.dims.map(|d| d as usize);
         let n = header.n_per_channel();
         let total = c * n;
+        let body_total = r.u32()? as usize;
+        if body_total != total {
+            return Err(CodecError::Malformed(format!(
+                "body claims {body_total} elements, header dims give {total}"
+            )));
+        }
         let k = r.u32()? as usize;
         let n_rand = r.u32()? as usize;
         if k + n_rand > total {
-            return Err(format!("kept {} > total {total}", k + n_rand));
+            return Err(CodecError::LimitExceeded {
+                what: "randtopk kept elements",
+                claimed: k + n_rand,
+                cap: total,
+            });
         }
         let mut rows = vec![0.0f32; total];
         for _ in 0..k + n_rand {
             let i = r.u32()? as usize;
             if i >= total {
-                return Err(format!("index {i} out of range"));
+                return Err(CodecError::Malformed(format!("index {i} out of range")));
             }
             rows[i] = r.f32()?;
         }
+        r.expect_end()?;
         Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
     }
 }
@@ -122,7 +137,7 @@ mod tests {
         let cm = random_cm(2, 4, 4, 4, 1);
         let mut c = RandTopkCodec::new(0.25, 0.0, 7);
         let wire = c.compress(&cm, RoundCtx::default());
-        let out = c.decompress(&wire).unwrap();
+        let out = c.decode(&wire).unwrap();
         let orig = cm.to_nchw();
         let rec_cm = out.to_channel_major();
 
@@ -147,7 +162,7 @@ mod tests {
         let cm = random_cm(2, 8, 4, 4, 2);
         let mut c = RandTopkCodec::new(0.1, 0.0, 7);
         let wire = c.compress(&cm, RoundCtx::default());
-        let out = c.decompress(&wire).unwrap();
+        let out = c.decode(&wire).unwrap();
         let nonzero = out.data().iter().filter(|&&x| x != 0.0).count();
         let k = (cm.data().len() as f64 * 0.1).ceil() as usize;
         assert!(nonzero <= k);
@@ -160,7 +175,7 @@ mod tests {
         let cm = random_cm(1, 2, 4, 4, 3);
         let mut c = RandTopkCodec::new(1.0 / 32.0, 0.5, 9);
         let wire = c.compress(&cm, RoundCtx::default());
-        let out = c.decompress(&wire).unwrap();
+        let out = c.decode(&wire).unwrap();
         let orig = cm.to_nchw();
         let mut checked = 0;
         for (a, b) in orig.data().iter().zip(out.data()) {
@@ -190,6 +205,6 @@ mod tests {
         let wire = c.compress(&cm, RoundCtx::default());
         let k = (total as f64 * 0.1).ceil() as usize;
         let nr = (total as f64 * 0.05).round() as usize;
-        assert_eq!(wire.len(), Header::BYTES + 8 + (k + nr) * 8);
+        assert_eq!(wire.len(), Header::BYTES + 12 + (k + nr) * 8);
     }
 }

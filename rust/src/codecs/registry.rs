@@ -1,0 +1,438 @@
+//! The codec registry: the **single construction path** for every codec.
+//!
+//! Each codec family registers one [`Entry`] owning its slice of the spec
+//! grammar (parse) and its instantiation (build). [`CodecRegistry::parse`]
+//! resolves a spec string like `"ef:slacc"`, `"uniform8"`, or
+//! `"select:acii:2"` into a validated [`StreamSpec`];
+//! [`CodecRegistry::build`] turns a spec into a live [`Codec`] for one
+//! stream, parameterized by [`StreamCtx`] (channels, rounds, the stream
+//! seed, and the SL-ACC/α overrides that used to be special-cased in
+//! `config::build_codec`).
+//!
+//! Adding a codec (or a stream layer — a cipher, a shard coordinator hop)
+//! means adding one entry here; `config.rs`, the CLI, and the Hello
+//! handshake pick it up through the grammar with no further plumbing.
+
+use super::slacc::{BitAlloc, SlAccConfig};
+use super::stream::{BaseSpec, StreamSpec};
+use super::selection::Selection;
+use super::{easyquant, ef, identity, powerquant, randtopk, selection, slacc, splitfc, uniform};
+use super::{Codec, CodecError};
+use crate::entropy::AlphaSchedule;
+
+/// Everything a registry build may need to instantiate one stream codec.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamCtx {
+    /// channels of the tensors this stream carries (1 for sync streams)
+    pub channels: usize,
+    /// total training rounds (feeds ACII's α schedule)
+    pub total_rounds: usize,
+    /// this stream's seed (derived per device/direction by
+    /// [`crate::codecs::stream::DeviceStreams::build`])
+    pub seed: u64,
+    /// SL-ACC parameter overrides (groups/window/bit bounds)
+    pub slacc: SlAccConfig,
+    /// α-schedule override for slacc / selection codecs
+    pub alpha: Option<AlphaSchedule>,
+}
+
+/// Cap on `ef:` wrapper nesting (each layer costs a full decode per
+/// encode; more than a couple is never useful).
+pub const MAX_EF_DEPTH: u8 = 4;
+
+type ParseFn = fn(&str) -> Option<Result<BaseSpec, CodecError>>;
+type BuildFn = fn(&BaseSpec, &StreamCtx) -> Option<Result<Box<dyn Codec>, CodecError>>;
+
+/// One codec family's registration: its slice of the spec grammar and its
+/// constructor. `parse`/`build` return `None` when the token/spec belongs
+/// to a different family.
+struct Entry {
+    grammar: &'static str,
+    parse: ParseFn,
+    build: BuildFn,
+}
+
+/// The registry itself — see the module docs.
+pub struct CodecRegistry {
+    entries: Vec<Entry>,
+}
+
+impl CodecRegistry {
+    /// The standard registry: every built-in codec family.
+    pub fn standard() -> CodecRegistry {
+        CodecRegistry {
+            entries: vec![
+                Entry {
+                    grammar: "identity (alias: none)",
+                    parse: parse_identity,
+                    build: build_identity,
+                },
+                Entry {
+                    grammar: "uniform<bits 1..=16> (e.g. uniform4, uniform8)",
+                    parse: parse_uniform,
+                    build: build_uniform,
+                },
+                Entry {
+                    grammar: "slacc | slacc-paper-eq6",
+                    parse: parse_slacc,
+                    build: build_slacc,
+                },
+                Entry {
+                    grammar: "powerquant",
+                    parse: parse_powerquant,
+                    build: build_powerquant,
+                },
+                Entry { grammar: "randtopk", parse: parse_randtopk, build: build_randtopk },
+                Entry { grammar: "splitfc", parse: parse_splitfc, build: build_splitfc },
+                Entry {
+                    grammar: "easyquant",
+                    parse: parse_easyquant,
+                    build: build_easyquant,
+                },
+                Entry {
+                    grammar: "select:<random|std|entropy-instant|entropy-historical|\
+                              acii|fixed#K>[:<n>]",
+                    parse: parse_select,
+                    build: build_select,
+                },
+            ],
+        }
+    }
+
+    /// One line per registered family, for CLI help and docs. The `ef:`
+    /// wrapper composes with every family.
+    pub fn grammar(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.grammar).collect()
+    }
+
+    /// Parse and validate one spec string (`[ef:]*<base>`).
+    pub fn parse(&self, spec: &str) -> Result<StreamSpec, CodecError> {
+        let mut rest = spec;
+        let mut ef_depth = 0u8;
+        while let Some(inner) = rest.strip_prefix("ef:") {
+            ef_depth += 1;
+            if ef_depth > MAX_EF_DEPTH {
+                return Err(CodecError::UnknownSpec(format!(
+                    "spec '{spec}' nests ef: deeper than {MAX_EF_DEPTH}"
+                )));
+            }
+            rest = inner;
+        }
+        for entry in &self.entries {
+            if let Some(parsed) = (entry.parse)(rest) {
+                return parsed.map(|base| StreamSpec::new(ef_depth, base));
+            }
+        }
+        Err(CodecError::UnknownSpec(format!(
+            "unknown codec spec '{rest}' (families: {})",
+            self.grammar().join("; ")
+        )))
+    }
+
+    /// Instantiate one stream's codec chain from a parsed spec.
+    pub fn build(
+        &self,
+        spec: &StreamSpec,
+        ctx: &StreamCtx,
+    ) -> Result<Box<dyn Codec>, CodecError> {
+        for entry in &self.entries {
+            if let Some(built) = (entry.build)(&spec.base, ctx) {
+                let mut codec = built?;
+                for _ in 0..spec.ef_depth {
+                    codec = Box::new(ef::EfCodec::new(codec, 1.0));
+                }
+                return Ok(codec);
+            }
+        }
+        Err(CodecError::UnknownSpec(format!(
+            "no registry entry builds spec '{spec}'"
+        )))
+    }
+}
+
+// --- per-family parse/build functions ---------------------------------
+
+fn parse_identity(s: &str) -> Option<Result<BaseSpec, CodecError>> {
+    if matches!(s, "identity" | "none") {
+        Some(Ok(BaseSpec::Identity))
+    } else {
+        None
+    }
+}
+
+fn build_identity(b: &BaseSpec, _ctx: &StreamCtx) -> Option<Result<Box<dyn Codec>, CodecError>> {
+    if matches!(b, BaseSpec::Identity) {
+        Some(Ok(Box::new(identity::IdentityCodec::new())))
+    } else {
+        None
+    }
+}
+
+fn parse_uniform(s: &str) -> Option<Result<BaseSpec, CodecError>> {
+    let rest = s.strip_prefix("uniform")?;
+    Some(match rest.parse::<u32>() {
+        Ok(bits) if (1..=16).contains(&bits) => Ok(BaseSpec::Uniform { bits }),
+        _ => Err(CodecError::UnknownSpec(format!(
+            "'{s}': uniform needs a bit width in 1..=16 (e.g. uniform8)"
+        ))),
+    })
+}
+
+fn build_uniform(b: &BaseSpec, _ctx: &StreamCtx) -> Option<Result<Box<dyn Codec>, CodecError>> {
+    let BaseSpec::Uniform { bits } = b else { return None };
+    Some(Ok(Box::new(uniform::UniformCodec::new(*bits))))
+}
+
+fn parse_slacc(s: &str) -> Option<Result<BaseSpec, CodecError>> {
+    match s {
+        "slacc" => Some(Ok(BaseSpec::SlAcc { paper_eq6: false })),
+        "slacc-paper-eq6" => Some(Ok(BaseSpec::SlAcc { paper_eq6: true })),
+        _ => None,
+    }
+}
+
+fn build_slacc(b: &BaseSpec, ctx: &StreamCtx) -> Option<Result<Box<dyn Codec>, CodecError>> {
+    let BaseSpec::SlAcc { paper_eq6 } = b else { return None };
+    let mut cfg = ctx.slacc;
+    if *paper_eq6 {
+        cfg.bit_alloc = BitAlloc::FloorEntropy;
+    }
+    if let Some(a) = ctx.alpha {
+        cfg.alpha = a;
+    }
+    Some(Ok(Box::new(slacc::SlAccCodec::new(
+        cfg,
+        ctx.channels,
+        ctx.total_rounds,
+        ctx.seed,
+    ))))
+}
+
+fn parse_powerquant(s: &str) -> Option<Result<BaseSpec, CodecError>> {
+    if s == "powerquant" {
+        Some(Ok(BaseSpec::PowerQuant))
+    } else {
+        None
+    }
+}
+
+fn build_powerquant(
+    b: &BaseSpec,
+    _ctx: &StreamCtx,
+) -> Option<Result<Box<dyn Codec>, CodecError>> {
+    if matches!(b, BaseSpec::PowerQuant) {
+        Some(Ok(Box::new(powerquant::PowerQuantCodec::new(4))))
+    } else {
+        None
+    }
+}
+
+fn parse_randtopk(s: &str) -> Option<Result<BaseSpec, CodecError>> {
+    if s == "randtopk" {
+        Some(Ok(BaseSpec::RandTopk))
+    } else {
+        None
+    }
+}
+
+fn build_randtopk(b: &BaseSpec, ctx: &StreamCtx) -> Option<Result<Box<dyn Codec>, CodecError>> {
+    if matches!(b, BaseSpec::RandTopk) {
+        Some(Ok(Box::new(randtopk::RandTopkCodec::new(0.1, 0.01, ctx.seed))))
+    } else {
+        None
+    }
+}
+
+fn parse_splitfc(s: &str) -> Option<Result<BaseSpec, CodecError>> {
+    if s == "splitfc" {
+        Some(Ok(BaseSpec::SplitFc))
+    } else {
+        None
+    }
+}
+
+fn build_splitfc(b: &BaseSpec, _ctx: &StreamCtx) -> Option<Result<Box<dyn Codec>, CodecError>> {
+    if matches!(b, BaseSpec::SplitFc) {
+        Some(Ok(Box::new(splitfc::SplitFcCodec::new(0.5, 6))))
+    } else {
+        None
+    }
+}
+
+fn parse_easyquant(s: &str) -> Option<Result<BaseSpec, CodecError>> {
+    if s == "easyquant" {
+        Some(Ok(BaseSpec::EasyQuant))
+    } else {
+        None
+    }
+}
+
+fn build_easyquant(
+    b: &BaseSpec,
+    _ctx: &StreamCtx,
+) -> Option<Result<Box<dyn Codec>, CodecError>> {
+    if matches!(b, BaseSpec::EasyQuant) {
+        Some(Ok(Box::new(easyquant::EasyQuantCodec::new(4))))
+    } else {
+        None
+    }
+}
+
+fn parse_select(s: &str) -> Option<Result<BaseSpec, CodecError>> {
+    let rest = s.strip_prefix("select:")?;
+    Some(parse_select_inner(s, rest))
+}
+
+fn parse_select_inner(full: &str, rest: &str) -> Result<BaseSpec, CodecError> {
+    let mut parts = rest.splitn(2, ':');
+    let strat_tok = parts.next().unwrap_or("");
+    let strategy = if let Some(k) = strat_tok.strip_prefix("fixed#") {
+        let ch: usize = k.parse().map_err(|_| {
+            CodecError::UnknownSpec(format!("'{full}': fixed#K needs an integer channel"))
+        })?;
+        Selection::Fixed(ch)
+    } else {
+        match strat_tok {
+            "random" => Selection::Random,
+            "std" => Selection::MaxStd,
+            "entropy-instant" => Selection::EntropyInstant,
+            "entropy-historical" => Selection::EntropyHistorical,
+            "acii" => Selection::EntropyBlended,
+            other => {
+                return Err(CodecError::UnknownSpec(format!(
+                    "'{full}': unknown selection strategy '{other}' \
+                     (random|std|entropy-instant|entropy-historical|acii|fixed#K)"
+                )))
+            }
+        }
+    };
+    let n_select = match parts.next() {
+        None => 1,
+        Some(n) => n.parse::<usize>().map_err(|_| {
+            CodecError::UnknownSpec(format!("'{full}': select count must be an integer"))
+        })?,
+    };
+    if n_select == 0 {
+        return Err(CodecError::UnknownSpec(format!(
+            "'{full}': select count must be >= 1"
+        )));
+    }
+    Ok(BaseSpec::Select { strategy, n_select })
+}
+
+fn build_select(b: &BaseSpec, ctx: &StreamCtx) -> Option<Result<Box<dyn Codec>, CodecError>> {
+    let BaseSpec::Select { strategy, n_select } = b else { return None };
+    if *n_select > ctx.channels {
+        return Some(Err(CodecError::Malformed(format!(
+            "select wants {n_select} of {} channels",
+            ctx.channels
+        ))));
+    }
+    if let Selection::Fixed(ch) = strategy {
+        if *ch >= ctx.channels {
+            return Some(Err(CodecError::Malformed(format!(
+                "select:fixed#{ch} is out of range for {} channels",
+                ctx.channels
+            ))));
+        }
+    }
+    Some(Ok(Box::new(selection::SelectionCodec::new(
+        *strategy,
+        *n_select,
+        ctx.channels,
+        ctx.slacc.history_window,
+        ctx.total_rounds,
+        ctx.seed,
+    ))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(channels: usize) -> StreamCtx {
+        StreamCtx {
+            channels,
+            total_rounds: 50,
+            seed: 7,
+            slacc: SlAccConfig::default(),
+            alpha: None,
+        }
+    }
+
+    #[test]
+    fn parses_every_base_family() {
+        let reg = CodecRegistry::standard();
+        for (spec, canon) in [
+            ("identity", "identity"),
+            ("none", "identity"),
+            ("uniform4", "uniform4"),
+            ("uniform12", "uniform12"),
+            ("slacc", "slacc"),
+            ("slacc-paper-eq6", "slacc-paper-eq6"),
+            ("powerquant", "powerquant"),
+            ("randtopk", "randtopk"),
+            ("splitfc", "splitfc"),
+            ("easyquant", "easyquant"),
+            ("select:acii", "select:acii:1"),
+            ("select:std:3", "select:std:3"),
+            ("select:fixed#2:1", "select:fixed#2:1"),
+            ("ef:slacc", "ef:slacc"),
+            ("ef:ef:uniform8", "ef:ef:uniform8"),
+        ] {
+            let parsed = reg.parse(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(parsed.as_str(), canon, "spec {spec}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        let reg = CodecRegistry::standard();
+        for bad in [
+            "bogus",
+            "uniform",
+            "uniform0",
+            "uniform17",
+            "uniformx",
+            "select:",
+            "select:nope",
+            "select:acii:0",
+            "select:acii:x",
+            "select:fixed#",
+            "ef:bogus",
+            "ef:ef:ef:ef:ef:slacc",
+            "",
+        ] {
+            assert!(reg.parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn builds_with_overrides() {
+        let reg = CodecRegistry::standard();
+        // α override reaches slacc through the ctx (the old build_codec
+        // special case, now the one path)
+        let mut c = ctx(8);
+        c.alpha = Some(AlphaSchedule::Fixed(0.25));
+        let spec = reg.parse("slacc").unwrap();
+        assert_eq!(reg.build(&spec, &c).unwrap().name(), "slacc");
+        let spec = reg.parse("slacc-paper-eq6").unwrap();
+        assert_eq!(reg.build(&spec, &c).unwrap().name(), "slacc-paper-eq6");
+        // select count must fit the stream's channel count
+        let spec = reg.parse("select:std:9").unwrap();
+        assert!(reg.build(&spec, &ctx(8)).is_err());
+        assert!(reg.build(&spec, &ctx(16)).is_ok());
+        // a fixed channel index must exist, not silently clamp
+        let spec = reg.parse("select:fixed#8").unwrap();
+        assert!(reg.build(&spec, &ctx(8)).is_err());
+        assert!(reg.build(&spec, &ctx(9)).is_ok());
+    }
+
+    #[test]
+    fn ef_wrapping_composes() {
+        let reg = CodecRegistry::standard();
+        let spec = reg.parse("ef:uniform4").unwrap();
+        let c = reg.build(&spec, &ctx(4)).unwrap();
+        assert_eq!(c.name(), "ef:uniform4");
+    }
+}

@@ -9,7 +9,7 @@
 //! * Fig. 6: `Selection::EntropyBlended` (ACII) vs `Selection::MaxStd` vs
 //!   `Selection::Random`.
 
-use crate::codecs::{ids, Codec, RoundCtx};
+use crate::codecs::{ids, Codec, CodecError, RoundCtx};
 use crate::entropy::{shannon, Acii, AlphaSchedule};
 use crate::quant::payload::{ByteReader, ByteWriter, Header};
 use crate::tensor::{view, ChannelMajor, Tensor};
@@ -119,7 +119,7 @@ impl Codec for SelectionCodec {
         }
     }
 
-    fn compress(&mut self, data: &ChannelMajor, ctx: RoundCtx<'_>) -> Vec<u8> {
+    fn encode(&mut self, data: &ChannelMajor, ctx: RoundCtx<'_>, out: &mut ByteWriter) {
         let (b, c, h, w) = data.geometry();
         let mut picked = self.select(data, ctx);
         picked.sort_unstable();
@@ -127,11 +127,13 @@ impl Codec for SelectionCodec {
         self.last_selected = picked.clone();
 
         let n = data.n_per_channel;
-        let mut out = ByteWriter::with_capacity(
-            Header::BYTES + 2 + picked.len() * (2 + n * 4),
-        );
+        out.reserve(Header::BYTES + 6 + picked.len() * (2 + n * 4));
         Header { codec_id: ids::SELECTION, dims: [b as u32, c as u32, h as u32, w as u32] }
-            .write(&mut out);
+            .write(out);
+        // total element count, redundantly: the body length only depends
+        // on B*H*W, so without this binding a corrupted header could
+        // silently grow the channel count
+        out.u32((c * n) as u32);
         out.u16(picked.len() as u16);
         for &ch in &picked {
             out.u16(ch as u16);
@@ -139,26 +141,39 @@ impl Codec for SelectionCodec {
         for &ch in &picked {
             out.f32s(data.channel(ch));
         }
-        out.finish()
     }
 
-    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+    fn decode(&mut self, bytes: &[u8]) -> Result<Tensor, CodecError> {
         let mut r = ByteReader::new(bytes);
         let header = Header::read(&mut r)?;
         if header.codec_id != ids::SELECTION {
-            return Err(format!("not a selection payload (codec {})", header.codec_id));
+            return Err(CodecError::WrongCodec {
+                expected: "selection",
+                found: header.codec_id,
+            });
         }
         let [b, c, h, w] = header.dims.map(|d| d as usize);
         let n = header.n_per_channel();
+        let body_total = r.u32()? as usize;
+        if body_total != c * n {
+            return Err(CodecError::Malformed(format!(
+                "body claims {body_total} elements, header dims give {}",
+                c * n
+            )));
+        }
         let n_sel = r.u16()? as usize;
         if n_sel > c {
-            return Err(format!("selected {n_sel} > C {c}"));
+            return Err(CodecError::LimitExceeded {
+                what: "selected channels",
+                claimed: n_sel,
+                cap: c,
+            });
         }
         let mut chans = Vec::with_capacity(n_sel);
         for _ in 0..n_sel {
             let ch = r.u16()? as usize;
             if ch >= c {
-                return Err(format!("channel {ch} out of range"));
+                return Err(CodecError::Malformed(format!("channel {ch} out of range")));
             }
             chans.push(ch);
         }
@@ -167,6 +182,7 @@ impl Codec for SelectionCodec {
             let vals = r.f32s(n)?;
             rows[ch * n..(ch + 1) * n].copy_from_slice(&vals);
         }
+        r.expect_end()?;
         Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
     }
 }
@@ -186,7 +202,7 @@ mod tests {
         let cm = random_cm(2, 6, 4, 4, 1);
         let mut c = codec(Selection::Fixed(3), 1, 6);
         let wire = c.compress(&cm, RoundCtx::default());
-        let out = c.decompress(&wire).unwrap();
+        let out = c.decode(&wire).unwrap();
         let rec = out.to_channel_major();
         assert_eq!(rec.channel(3), cm.channel(3));
         for ch in [0usize, 1, 2, 4, 5] {
@@ -253,7 +269,7 @@ mod tests {
         let cm = random_cm(2, 8, 4, 4, 5);
         let mut c = codec(Selection::MaxStd, 3, 8);
         let wire = c.compress(&cm, RoundCtx::default());
-        let out = c.decompress(&wire).unwrap();
+        let out = c.decode(&wire).unwrap();
         let rec = out.to_channel_major();
         let sel = c.last_selected().to_vec();
         assert_eq!(sel.len(), 3);
@@ -270,7 +286,7 @@ mod tests {
         let mut c3 = codec(Selection::MaxStd, 3, 8);
         let w1 = c1.compress(&cm, RoundCtx::default());
         let w3 = c3.compress(&cm, RoundCtx::default());
-        assert_eq!(w1.len(), Header::BYTES + 2 + 2 + n * 4);
-        assert_eq!(w3.len(), Header::BYTES + 2 + 3 * (2 + n * 4));
+        assert_eq!(w1.len(), Header::BYTES + 4 + 2 + 2 + n * 4);
+        assert_eq!(w3.len(), Header::BYTES + 4 + 2 + 3 * (2 + n * 4));
     }
 }

@@ -24,7 +24,7 @@
 //! quantifies the difference.
 
 use crate::cluster::{kmeans_1d, Clustering};
-use crate::codecs::{ids, Codec, RoundCtx};
+use crate::codecs::{ids, Codec, CodecError, RoundCtx};
 use crate::entropy::{shannon, Acii, AlphaSchedule};
 use crate::quant::bitpack;
 use crate::quant::linear;
@@ -85,6 +85,9 @@ pub struct SlAccCodec {
     acii: Acii,
     rng: Pcg32,
     last: Option<LastRound>,
+    /// reusable per-channel quantization scratch (encode hot path)
+    codes: Vec<u32>,
+    packed: Vec<u8>,
 }
 
 impl SlAccCodec {
@@ -96,6 +99,8 @@ impl SlAccCodec {
             acii: Acii::new(channels, cfg.history_window, total_rounds, cfg.alpha),
             rng: Pcg32::new(seed, 0x51acc),
             last: None,
+            codes: Vec::new(),
+            packed: Vec::new(),
         }
     }
 
@@ -142,7 +147,7 @@ impl Codec for SlAccCodec {
         }
     }
 
-    fn compress(&mut self, data: &ChannelMajor, ctx: RoundCtx<'_>) -> Vec<u8> {
+    fn encode(&mut self, data: &ChannelMajor, ctx: RoundCtx<'_>, out: &mut ByteWriter) {
         let c = data.channels;
         assert_eq!(c, self.acii.channels(), "codec built for different C");
 
@@ -162,14 +167,11 @@ impl Codec for SlAccCodec {
 
         // --- serialize (Eq. 7 per group) ---
         let (b, _, h, w) = data.geometry();
-        let mut out = ByteWriter::with_capacity(
-            Header::BYTES + 2 + members.len() * 16 + c * data.n_per_channel,
-        );
+        out.reserve(Header::BYTES + 2 + members.len() * 16 + c * data.n_per_channel);
         Header { codec_id: ids::SLACC, dims: [b as u32, c as u32, h as u32, w as u32] }
-            .write(&mut out);
+            .write(out);
         out.u16(members.len() as u16);
 
-        let mut codes = Vec::new();
         let mut total_bits = 0u64;
         for (j, chans) in members.iter().enumerate() {
             // group-wide quantization boundaries x_{j,min/max} (Eq. 7)
@@ -189,9 +191,10 @@ impl Codec for SlAccCodec {
                 out.u16(ch as u16);
             }
             for &ch in chans {
-                linear::quantize(data.channel(ch), gmin, gmax, bits, &mut codes);
-                out.bytes(&bitpack::pack(&codes, bits));
-                total_bits += (codes.len() as u64) * bits as u64;
+                linear::quantize(data.channel(ch), gmin, gmax, bits, &mut self.codes);
+                bitpack::pack_into(&self.codes, bits, &mut self.packed);
+                out.bytes(&self.packed);
+                total_bits += (self.codes.len() as u64) * bits as u64;
             }
         }
 
@@ -202,14 +205,13 @@ impl Codec for SlAccCodec {
             group_bits,
             avg_bits_per_element: total_bits as f64 / (c * data.n_per_channel) as f64,
         });
-        out.finish()
     }
 
-    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+    fn decode(&mut self, bytes: &[u8]) -> Result<Tensor, CodecError> {
         let mut r = ByteReader::new(bytes);
         let header = Header::read(&mut r)?;
         if header.codec_id != ids::SLACC {
-            return Err(format!("not an SL-ACC payload (codec {})", header.codec_id));
+            return Err(CodecError::WrongCodec { expected: "SL-ACC", found: header.codec_id });
         }
         let [b, c, h, w] = header.dims.map(|d| d as usize);
         let n = header.n_per_channel();
@@ -221,7 +223,7 @@ impl Codec for SlAccCodec {
         for _ in 0..n_groups {
             let bits = r.u8()? as u32;
             if !(1..=16).contains(&bits) {
-                return Err(format!("bad group bit width {bits}"));
+                return Err(CodecError::Malformed(format!("bad group bit width {bits}")));
             }
             let n_chans = r.u16()? as usize;
             let gmin = r.f32()?;
@@ -230,7 +232,9 @@ impl Codec for SlAccCodec {
             for _ in 0..n_chans {
                 let ch = r.u16()? as usize;
                 if ch >= c {
-                    return Err(format!("channel id {ch} out of range (C={c})"));
+                    return Err(CodecError::Malformed(format!(
+                        "channel id {ch} out of range (C={c})"
+                    )));
                 }
                 chans.push(ch);
             }
@@ -243,8 +247,9 @@ impl Codec for SlAccCodec {
             }
         }
         if let Some(missing) = seen.iter().position(|&s| !s) {
-            return Err(format!("payload missing channel {missing}"));
+            return Err(CodecError::Malformed(format!("payload missing channel {missing}")));
         }
+        r.expect_end()?;
         Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
     }
 }
@@ -263,7 +268,7 @@ mod tests {
         let cm = random_cm(2, 8, 4, 4, 1);
         let mut c = codec(8);
         let wire = c.compress(&cm, RoundCtx::default());
-        let out = c.decompress(&wire).unwrap();
+        let out = c.decode(&wire).unwrap();
         let orig = cm.to_nchw();
         // worst-case group: b_min=2 bits over the group's min/max range
         let (mn, mx) = view::min_max(orig.data());
@@ -281,7 +286,7 @@ mod tests {
         let cm = relu_cm(2, 4, 4, 4, 2);
         let mut c = SlAccCodec::new(cfg, 4, 100, 1);
         let wire = c.compress(&cm, RoundCtx::default());
-        let out = c.decompress(&wire).unwrap();
+        let out = c.decode(&wire).unwrap();
         let orig = cm.to_nchw();
         assert!(orig.mean_abs_diff(&out) < 0.02);
     }
@@ -386,7 +391,7 @@ mod tests {
         let mut c = codec(4);
         let wire = c.compress(&cm, RoundCtx::default());
         for cut in [3usize, Header::BYTES, wire.len() - 1] {
-            assert!(c.decompress(&wire[..cut]).is_err(), "cut at {cut}");
+            assert!(c.decode(&wire[..cut]).is_err(), "cut at {cut}");
         }
     }
 }

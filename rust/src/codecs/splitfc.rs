@@ -9,7 +9,7 @@
 //! "sensitive to noise and often discards low-variance yet informative
 //! channels" — is exactly what the Fig. 5/6 benches surface.
 
-use crate::codecs::{ids, Codec, RoundCtx};
+use crate::codecs::{ids, Codec, CodecError, RoundCtx};
 use crate::quant::{bitpack, linear};
 use crate::quant::payload::{ByteReader, ByteWriter, Header};
 use crate::tensor::{view, ChannelMajor, Tensor};
@@ -18,13 +18,16 @@ use crate::tensor::{view, ChannelMajor, Tensor};
 pub struct SplitFcCodec {
     keep_frac: f64,
     bits: u32,
+    /// reusable quantization scratch (encode hot path)
+    codes: Vec<u32>,
+    packed: Vec<u8>,
 }
 
 impl SplitFcCodec {
     pub fn new(keep_frac: f64, bits: u32) -> Self {
         assert!(keep_frac > 0.0 && keep_frac <= 1.0);
         assert!((2..=16).contains(&bits));
-        SplitFcCodec { keep_frac, bits }
+        SplitFcCodec { keep_frac, bits, codes: Vec::new(), packed: Vec::new() }
     }
 }
 
@@ -33,7 +36,7 @@ impl Codec for SplitFcCodec {
         "splitfc"
     }
 
-    fn compress(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>) -> Vec<u8> {
+    fn encode(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>, out: &mut ByteWriter) {
         let (b, c, h, w) = data.geometry();
         let n = data.n_per_channel;
         let n_keep = ((c as f64 * self.keep_frac).ceil() as usize).clamp(1, c);
@@ -46,12 +49,12 @@ impl Codec for SplitFcCodec {
         kept.sort_unstable(); // canonical order on the wire
         let dropped: Vec<usize> = (0..c).filter(|ch| !kept.contains(ch)).collect();
 
-        let mut out = ByteWriter::with_capacity(
+        out.reserve(
             Header::BYTES + 5 + c * 2 + dropped.len() * 4
                 + n_keep * (8 + bitpack::packed_len(n, self.bits)),
         );
         Header { codec_id: ids::SPLITFC, dims: [b as u32, c as u32, h as u32, w as u32] }
-            .write(&mut out);
+            .write(out);
         out.u8(self.bits as u8);
         out.u16(kept.len() as u16);
         for &ch in &kept {
@@ -61,40 +64,46 @@ impl Codec for SplitFcCodec {
         for &ch in &dropped {
             out.f32(stats[ch].0);
         }
-        let mut codes = Vec::new();
         for &ch in &kept {
             let row = data.channel(ch);
             let (mn, mx) = view::min_max(row);
             out.f32(mn);
             out.f32(mx);
-            linear::quantize(row, mn, mx, self.bits, &mut codes);
-            out.bytes(&bitpack::pack(&codes, self.bits));
+            linear::quantize(row, mn, mx, self.bits, &mut self.codes);
+            bitpack::pack_into(&self.codes, self.bits, &mut self.packed);
+            out.bytes(&self.packed);
         }
-        out.finish()
     }
 
-    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+    fn decode(&mut self, bytes: &[u8]) -> Result<Tensor, CodecError> {
         let mut r = ByteReader::new(bytes);
         let header = Header::read(&mut r)?;
         if header.codec_id != ids::SPLITFC {
-            return Err(format!("not a splitfc payload (codec {})", header.codec_id));
+            return Err(CodecError::WrongCodec {
+                expected: "splitfc",
+                found: header.codec_id,
+            });
         }
         let [b, c, h, w] = header.dims.map(|d| d as usize);
         let n = header.n_per_channel();
         let bits = r.u8()? as u32;
         if !(2..=16).contains(&bits) {
-            return Err(format!("bad bit width {bits}"));
+            return Err(CodecError::Malformed(format!("bad bit width {bits}")));
         }
         let n_keep = r.u16()? as usize;
         if n_keep > c {
-            return Err(format!("kept {n_keep} > C {c}"));
+            return Err(CodecError::LimitExceeded {
+                what: "splitfc kept channels",
+                claimed: n_keep,
+                cap: c,
+            });
         }
         let mut kept = Vec::with_capacity(n_keep);
         let mut is_kept = vec![false; c];
         for _ in 0..n_keep {
             let ch = r.u16()? as usize;
             if ch >= c {
-                return Err(format!("channel {ch} out of range"));
+                return Err(CodecError::Malformed(format!("channel {ch} out of range")));
             }
             kept.push(ch);
             is_kept[ch] = true;
@@ -115,6 +124,7 @@ impl Codec for SplitFcCodec {
             linear::dequantize(&codes, mn, mx, bits, &mut vals);
             rows[ch * n..(ch + 1) * n].copy_from_slice(&vals);
         }
+        r.expect_end()?;
         Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
     }
 }
@@ -145,7 +155,7 @@ mod tests {
         let cm = graded_cm(2, 8, 4);
         let mut c = SplitFcCodec::new(0.5, 8);
         let wire = c.compress(&cm, RoundCtx::default());
-        let out = c.decompress(&wire).unwrap();
+        let out = c.decode(&wire).unwrap();
         let rec = out.to_channel_major();
         // high-std channels (4..8) must be near-exact (8-bit quant)
         for ch in 4..8 {
@@ -172,8 +182,8 @@ mod tests {
         let mut uni = crate::codecs::uniform::UniformCodec::new(6);
         let a = sfc.compress(&cm, RoundCtx::default());
         let b = uni.compress(&cm, RoundCtx::default());
-        let ta = sfc.decompress(&a).unwrap();
-        let tb = uni.decompress(&b).unwrap();
+        let ta = sfc.decode(&a).unwrap();
+        let tb = uni.decode(&b).unwrap();
         assert_eq!(ta.data(), tb.data());
     }
 

@@ -1,0 +1,383 @@
+//! The session-level stream model: which codec runs on which traffic.
+//!
+//! A split-learning session is three logical streams per device —
+//! [`StreamKind::Uplink`] activations, [`StreamKind::Downlink`] gradients,
+//! and [`StreamKind::Sync`] ModelSync parameter traffic — each negotiated
+//! independently (`--uplink-codec` / `--downlink-codec` / `--sync-codec`,
+//! with `--codec` as shorthand for both data directions).
+//!
+//! * [`StreamSpec`] — one stream's validated codec spec, parsed from the
+//!   grammar owned by [`crate::codecs::registry::CodecRegistry`]:
+//!   `[ef:]*<base>` where `<base>` is `identity`, `uniform<bits>`,
+//!   `slacc`, `slacc-paper-eq6`, `powerquant`, `randtopk`, `splitfc`,
+//!   `easyquant`, or `select:<strategy>[:<n>]`.
+//! * [`StreamSpecs`] — the full per-stream table. The Hello handshake
+//!   carries it verbatim plus its [`StreamSpecs::fingerprint`], so a fleet
+//!   whose members disagree on any stream is rejected at connect time with
+//!   an error naming the offending [`StreamKind`].
+//! * [`StreamSet`] / [`DeviceStreams`] — the owned codec instances, one
+//!   per device per direction. Stream seeds are derived here (and only
+//!   here): data streams get `seed ^ (0x0dec << 16) ^ (device*2 + dir)`,
+//!   sync streams `seed ^ (0x5106 << 20) ^ (device*2 + dir)` — the exact
+//!   scheme the pre-registry code used, so `--codec slacc` reproduces the
+//!   historical wire bytes byte-for-byte.
+
+use super::registry::{CodecRegistry, StreamCtx};
+use super::selection::Selection;
+use super::slacc::SlAccConfig;
+use super::{Codec, CodecError};
+use crate::entropy::AlphaSchedule;
+
+/// Which of a session's three per-device streams a spec applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamKind {
+    /// Device → server smashed activations (the paper's main byte axis).
+    Uplink,
+    /// Server → device cut-layer gradients.
+    Downlink,
+    /// ModelSync / FedAvg parameter traffic, both directions.
+    Sync,
+}
+
+impl StreamKind {
+    pub const ALL: [StreamKind; 3] =
+        [StreamKind::Uplink, StreamKind::Downlink, StreamKind::Sync];
+
+    /// Short name for logs, errors, and the report/CSV ratio columns.
+    pub fn label(&self) -> &'static str {
+        match self {
+            StreamKind::Uplink => "uplink",
+            StreamKind::Downlink => "downlink",
+            StreamKind::Sync => "sync",
+        }
+    }
+
+    /// The CLI flag that configures this stream.
+    pub fn flag(&self) -> &'static str {
+        match self {
+            StreamKind::Uplink => "--uplink-codec",
+            StreamKind::Downlink => "--downlink-codec",
+            StreamKind::Sync => "--sync-codec",
+        }
+    }
+}
+
+/// The base (innermost) codec family of a spec.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BaseSpec {
+    Identity,
+    Uniform { bits: u32 },
+    SlAcc { paper_eq6: bool },
+    PowerQuant,
+    RandTopk,
+    SplitFc,
+    EasyQuant,
+    Select { strategy: Selection, n_select: usize },
+}
+
+impl BaseSpec {
+    /// Canonical spec token (normalized: `none` → `identity`).
+    pub fn canon(&self) -> String {
+        match self {
+            BaseSpec::Identity => "identity".into(),
+            BaseSpec::Uniform { bits } => format!("uniform{bits}"),
+            BaseSpec::SlAcc { paper_eq6: false } => "slacc".into(),
+            BaseSpec::SlAcc { paper_eq6: true } => "slacc-paper-eq6".into(),
+            BaseSpec::PowerQuant => "powerquant".into(),
+            BaseSpec::RandTopk => "randtopk".into(),
+            BaseSpec::SplitFc => "splitfc".into(),
+            BaseSpec::EasyQuant => "easyquant".into(),
+            BaseSpec::Select { strategy, n_select } => {
+                format!("select:{}:{}", strategy.label(), n_select)
+            }
+        }
+    }
+}
+
+/// One stream's validated codec spec: `ef_depth` error-feedback wrappers
+/// around a [`BaseSpec`]. Obtained from
+/// [`CodecRegistry::parse`] (or the [`StreamSpec::parse`] convenience);
+/// the canonical string form is what travels in the Hello handshake.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSpec {
+    pub ef_depth: u8,
+    pub base: BaseSpec,
+    canon: String,
+}
+
+impl StreamSpec {
+    pub(crate) fn new(ef_depth: u8, base: BaseSpec) -> StreamSpec {
+        let canon = format!("{}{}", "ef:".repeat(ef_depth as usize), base.canon());
+        StreamSpec { ef_depth, base, canon }
+    }
+
+    /// Parse a spec string through the standard registry grammar.
+    pub fn parse(s: &str) -> Result<StreamSpec, CodecError> {
+        CodecRegistry::standard().parse(s)
+    }
+
+    /// Canonical string form (wire + fingerprint representation).
+    pub fn as_str(&self) -> &str {
+        &self.canon
+    }
+}
+
+impl std::fmt::Display for StreamSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.canon)
+    }
+}
+
+/// FNV-1a over a canonical string — shared with
+/// [`crate::config::ExperimentConfig::fingerprint`], so digests are
+/// identical across processes and builds.
+pub(crate) fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The negotiated per-stream spec table for a session. Both endpoints
+/// resolve their flags into one of these; the Hello handshake ships it and
+/// the server rejects any per-kind disagreement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSpecs {
+    pub uplink: StreamSpec,
+    pub downlink: StreamSpec,
+    pub sync: StreamSpec,
+}
+
+impl StreamSpecs {
+    /// Parse a full table from the three spec strings.
+    pub fn parse(uplink: &str, downlink: &str, sync: &str) -> Result<StreamSpecs, CodecError> {
+        let reg = CodecRegistry::standard();
+        Ok(StreamSpecs {
+            uplink: reg.parse(uplink).map_err(|e| kind_err(StreamKind::Uplink, e))?,
+            downlink: reg
+                .parse(downlink)
+                .map_err(|e| kind_err(StreamKind::Downlink, e))?,
+            sync: reg.parse(sync).map_err(|e| kind_err(StreamKind::Sync, e))?,
+        })
+    }
+
+    pub fn get(&self, kind: StreamKind) -> &StreamSpec {
+        match kind {
+            StreamKind::Uplink => &self.uplink,
+            StreamKind::Downlink => &self.downlink,
+            StreamKind::Sync => &self.sync,
+        }
+    }
+
+    /// Human-readable table for logs and handshake errors.
+    pub fn table(&self) -> String {
+        format!(
+            "uplink={} downlink={} sync={}",
+            self.uplink, self.downlink, self.sync
+        )
+    }
+
+    /// Stable digest of the table (carried in the Hello next to the spec
+    /// strings as a cross-check).
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a(&format!(
+            "{}|{}|{}",
+            self.uplink.as_str(),
+            self.downlink.as_str(),
+            self.sync.as_str()
+        ))
+    }
+}
+
+fn kind_err(kind: StreamKind, e: CodecError) -> CodecError {
+    CodecError::UnknownSpec(format!("{} stream ({}): {e}", kind.label(), kind.flag()))
+}
+
+/// Session parameters every stream build shares (a projection of
+/// `ExperimentConfig`, so the registry never needs the full config).
+#[derive(Debug, Clone, Copy)]
+pub struct SessionStreamCfg {
+    /// cut-layer channels of the data streams (sync streams always see 1)
+    pub channels: usize,
+    pub total_rounds: usize,
+    /// the experiment seed; per-stream seeds are derived from it here
+    pub seed: u64,
+    /// SL-ACC overrides (`--groups`/`--window`/`--bmin`/`--bmax`)
+    pub slacc: SlAccConfig,
+    /// α-schedule override for slacc / selection codecs (Fig. 4)
+    pub alpha: Option<AlphaSchedule>,
+}
+
+/// Seed for a data-direction stream (`dir` 0 = uplink, 1 = downlink).
+fn data_seed(seed: u64, device: usize, dir: u64) -> u64 {
+    seed ^ (0x0dec << 16) ^ ((device as u64) * 2 + dir)
+}
+
+/// Seed for a sync-direction stream (`dir` 0 = push, 1 = broadcast).
+fn sync_seed(seed: u64, device: usize, dir: u64) -> u64 {
+    seed ^ (0x5106 << 20) ^ ((device as u64) * 2 + dir)
+}
+
+/// The four codec instances serving one device's streams on one endpoint.
+/// The compressing side and its decompressing twin build identical
+/// instances (the envelopes are self-describing, and stream seeds are a
+/// pure function of the session seed + device + direction).
+pub struct DeviceStreams {
+    /// uplink activations (device compresses, server decodes)
+    pub up: Box<dyn Codec>,
+    /// downlink gradients (server compresses, device decodes)
+    pub down: Box<dyn Codec>,
+    /// ModelSync pushes, device → server
+    pub sync_up: Box<dyn Codec>,
+    /// ModelSync broadcasts, server → device
+    pub sync_down: Box<dyn Codec>,
+}
+
+impl DeviceStreams {
+    /// Build device `device`'s four stream codecs from the negotiated
+    /// table.
+    pub fn build(
+        specs: &StreamSpecs,
+        cfg: &SessionStreamCfg,
+        device: usize,
+    ) -> Result<DeviceStreams, CodecError> {
+        let reg = CodecRegistry::standard();
+        let ctx = |channels: usize, seed: u64| StreamCtx {
+            channels,
+            total_rounds: cfg.total_rounds,
+            seed,
+            slacc: cfg.slacc,
+            alpha: cfg.alpha,
+        };
+        Ok(DeviceStreams {
+            up: reg.build(&specs.uplink, &ctx(cfg.channels, data_seed(cfg.seed, device, 0)))?,
+            down: reg
+                .build(&specs.downlink, &ctx(cfg.channels, data_seed(cfg.seed, device, 1)))?,
+            // sync streams see flattened parameters: one logical channel
+            sync_up: reg.build(&specs.sync, &ctx(1, sync_seed(cfg.seed, device, 0)))?,
+            sync_down: reg.build(&specs.sync, &ctx(1, sync_seed(cfg.seed, device, 1)))?,
+        })
+    }
+}
+
+/// Every per-device, per-direction codec instance of one session endpoint
+/// (the server side owns one for the whole fleet; a device worker owns a
+/// single [`DeviceStreams`]).
+pub struct StreamSet {
+    specs: StreamSpecs,
+    streams: Vec<DeviceStreams>,
+}
+
+impl StreamSet {
+    /// Build the full fleet's stream codecs.
+    pub fn build(
+        specs: StreamSpecs,
+        cfg: &SessionStreamCfg,
+        devices: usize,
+    ) -> Result<StreamSet, CodecError> {
+        let mut streams = Vec::with_capacity(devices);
+        for d in 0..devices {
+            streams.push(DeviceStreams::build(&specs, cfg, d)?);
+        }
+        Ok(StreamSet { specs, streams })
+    }
+
+    /// The negotiated spec table this set was built from.
+    pub fn specs(&self) -> &StreamSpecs {
+        &self.specs
+    }
+
+    pub fn devices(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Device `d`'s stream codecs.
+    pub fn device(&mut self, d: usize) -> &mut DeviceStreams {
+        &mut self.streams[d]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn session() -> SessionStreamCfg {
+        SessionStreamCfg {
+            channels: 8,
+            total_rounds: 50,
+            seed: 3,
+            slacc: SlAccConfig::default(),
+            alpha: None,
+        }
+    }
+
+    #[test]
+    fn specs_parse_and_canonicalize() {
+        let s = StreamSpecs::parse("slacc", "uniform8", "none").unwrap();
+        assert_eq!(s.uplink.as_str(), "slacc");
+        assert_eq!(s.downlink.as_str(), "uniform8");
+        // `none` normalizes to `identity` so both ends agree on the wire
+        assert_eq!(s.sync.as_str(), "identity");
+        assert_eq!(s.table(), "uplink=slacc downlink=uniform8 sync=identity");
+    }
+
+    #[test]
+    fn bad_spec_names_the_stream_and_flag() {
+        let e = StreamSpecs::parse("slacc", "bogus", "identity").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("downlink"), "{msg}");
+        assert!(msg.contains("--downlink-codec"), "{msg}");
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_stream() {
+        let a = StreamSpecs::parse("slacc", "slacc", "identity").unwrap();
+        let b = StreamSpecs::parse("slacc", "uniform8", "identity").unwrap();
+        let c = StreamSpecs::parse("slacc", "slacc", "uniform8").unwrap();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_eq!(
+            a.fingerprint(),
+            StreamSpecs::parse("slacc", "slacc", "identity").unwrap().fingerprint()
+        );
+    }
+
+    #[test]
+    fn stream_set_builds_per_device_instances() {
+        let specs = StreamSpecs::parse("slacc", "uniform4", "identity").unwrap();
+        let mut set = StreamSet::build(specs, &session(), 3).unwrap();
+        assert_eq!(set.devices(), 3);
+        for d in 0..3 {
+            let ds = set.device(d);
+            assert_eq!(ds.up.name(), "slacc");
+            assert_eq!(ds.down.name(), "uniform4");
+            assert_eq!(ds.sync_up.name(), "identity");
+            assert_eq!(ds.sync_down.name(), "identity");
+        }
+    }
+
+    #[test]
+    fn stream_seeds_differ_per_device_and_direction() {
+        // stochastic codec (randtopk): same tensor, different streams must
+        // produce different envelopes (different RNG seeds)
+        use crate::codecs::test_support::random_cm;
+        use crate::codecs::RoundCtx;
+        let specs = StreamSpecs::parse("randtopk", "randtopk", "identity").unwrap();
+        let mut set = StreamSet::build(specs, &session(), 2).unwrap();
+        let cm = random_cm(2, 8, 4, 4, 1);
+        let w_up0 = set.device(0).up.compress(&cm, RoundCtx::default());
+        let w_down0 = set.device(0).down.compress(&cm, RoundCtx::default());
+        let w_up1 = set.device(1).up.compress(&cm, RoundCtx::default());
+        assert_ne!(w_up0, w_down0, "directions must not share RNG streams");
+        assert_ne!(w_up0, w_up1, "devices must not share RNG streams");
+    }
+
+    #[test]
+    fn kind_labels_and_flags() {
+        assert_eq!(StreamKind::Uplink.label(), "uplink");
+        assert_eq!(StreamKind::Sync.flag(), "--sync-codec");
+        assert_eq!(StreamKind::ALL.len(), 3);
+    }
+}

@@ -3,20 +3,25 @@
 //! the paper argues against (Sec. I), and the fixed-bit substrate inside
 //! SplitFC/EasyQuant.
 
-use crate::codecs::{ids, Codec, RoundCtx};
-use crate::quant::{bitpack, linear};
+use crate::codecs::{ids, Codec, CodecError, RoundCtx};
 use crate::quant::payload::{ByteReader, ByteWriter, Header};
+use crate::quant::{bitpack, linear};
 use crate::tensor::{view, ChannelMajor, Tensor};
 
 #[derive(Debug)]
 pub struct UniformCodec {
     bits: u32,
+    /// reusable quantization scratch (codes + packed bytes): the encode
+    /// hot path touches the allocator only until these reach their
+    /// steady-state capacity
+    codes: Vec<u32>,
+    packed: Vec<u8>,
 }
 
 impl UniformCodec {
     pub fn new(bits: u32) -> Self {
         assert!((1..=16).contains(&bits));
-        UniformCodec { bits }
+        UniformCodec { bits, codes: Vec::new(), packed: Vec::new() }
     }
 
     pub fn bits(&self) -> u32 {
@@ -33,38 +38,38 @@ impl Codec for UniformCodec {
         }
     }
 
-    fn compress(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>) -> Vec<u8> {
+    fn encode(&mut self, data: &ChannelMajor, _ctx: RoundCtx<'_>, out: &mut ByteWriter) {
         let (b, c, h, w) = data.geometry();
         let n = data.n_per_channel;
-        let mut out = ByteWriter::with_capacity(
-            Header::BYTES + 1 + c * (8 + bitpack::packed_len(n, self.bits)),
-        );
+        out.reserve(Header::BYTES + 1 + c * (8 + bitpack::packed_len(n, self.bits)));
         Header { codec_id: ids::UNIFORM, dims: [b as u32, c as u32, h as u32, w as u32] }
-            .write(&mut out);
+            .write(out);
         out.u8(self.bits as u8);
-        let mut codes = Vec::new();
         for ch in 0..c {
             let row = data.channel(ch);
             let (mn, mx) = view::min_max(row);
             out.f32(mn);
             out.f32(mx);
-            linear::quantize(row, mn, mx, self.bits, &mut codes);
-            out.bytes(&bitpack::pack(&codes, self.bits));
+            linear::quantize(row, mn, mx, self.bits, &mut self.codes);
+            bitpack::pack_into(&self.codes, self.bits, &mut self.packed);
+            out.bytes(&self.packed);
         }
-        out.finish()
     }
 
-    fn decompress(&self, bytes: &[u8]) -> Result<Tensor, String> {
+    fn decode(&mut self, bytes: &[u8]) -> Result<Tensor, CodecError> {
         let mut r = ByteReader::new(bytes);
         let header = Header::read(&mut r)?;
         if header.codec_id != ids::UNIFORM {
-            return Err(format!("not a uniform payload (codec {})", header.codec_id));
+            return Err(CodecError::WrongCodec {
+                expected: "uniform",
+                found: header.codec_id,
+            });
         }
         let [b, c, h, w] = header.dims.map(|d| d as usize);
         let n = header.n_per_channel();
         let bits = r.u8()? as u32;
         if !(1..=16).contains(&bits) {
-            return Err(format!("bad bit width {bits}"));
+            return Err(CodecError::Malformed(format!("bad bit width {bits}")));
         }
         let mut rows = vec![0.0f32; c * n];
         let mut vals = Vec::new();
@@ -76,6 +81,7 @@ impl Codec for UniformCodec {
             linear::dequantize(&codes, mn, mx, bits, &mut vals);
             rows[ch * n..(ch + 1) * n].copy_from_slice(&vals);
         }
+        r.expect_end()?;
         Ok(ChannelMajor::from_rows(c, n, b, h, w, rows).to_nchw())
     }
 }
@@ -91,7 +97,7 @@ mod tests {
         for bits in [2u32, 4, 8] {
             let mut c = UniformCodec::new(bits);
             let wire = c.compress(&cm, RoundCtx::default());
-            let out = c.decompress(&wire).unwrap();
+            let out = c.decode(&wire).unwrap();
             for ch in 0..6 {
                 let row = cm.channel(ch);
                 let (mn, mx) = view::min_max(row);
@@ -121,12 +127,12 @@ mod tests {
         let e2 = {
             let mut c = UniformCodec::new(2);
             let w = c.compress(&cm, RoundCtx::default());
-            orig.mean_abs_diff(&c.decompress(&w).unwrap())
+            orig.mean_abs_diff(&c.decode(&w).unwrap())
         };
         let e8 = {
             let mut c = UniformCodec::new(8);
             let w = c.compress(&cm, RoundCtx::default());
-            orig.mean_abs_diff(&c.decompress(&w).unwrap())
+            orig.mean_abs_diff(&c.decode(&w).unwrap())
         };
         assert!(e8 < e2 / 10.0, "e8={e8} e2={e2}");
     }

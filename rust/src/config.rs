@@ -1,17 +1,29 @@
 //! Experiment configuration: everything a training run needs, buildable
 //! from CLI flags (see [`crate::cli`]) or programmatically from the benches.
+//!
+//! Codec configuration is the per-stream spec table
+//! ([`crate::codecs::stream::StreamSpecs`]): `--codec` is shorthand for
+//! both data directions, `--uplink-codec` / `--downlink-codec` /
+//! `--sync-codec` override one stream each, and every codec instance is
+//! built through the registry by [`ExperimentConfig::stream_set`] /
+//! [`ExperimentConfig::device_streams`] — there is exactly one
+//! construction path and one place stream seeds are derived.
 
-use crate::codecs;
 use crate::codecs::selection::Selection;
+use crate::codecs::stream::{
+    DeviceStreams, SessionStreamCfg, StreamSet, StreamSpecs,
+};
 use crate::data::partition::Partition;
 use crate::entropy::AlphaSchedule;
 use crate::net::{DeviceLink, ServerModel};
 use crate::sched::Policy;
 
-/// Which compressor runs on the smashed-data streams.
+/// Which compressor runs on the smashed-data streams (the `--codec`
+/// shorthand: applied to uplink and downlink unless overridden per
+/// stream).
 #[derive(Debug, Clone, PartialEq)]
 pub enum CodecChoice {
-    /// A codec from [`codecs::by_name`] ("slacc", "powerquant", ...).
+    /// A registry spec string ("slacc", "uniform8", "ef:powerquant", ...).
     Named(String),
     /// Channel-selection ablation (Figs. 2/3/6): strategy + #channels.
     Select { strategy: Selection, n_select: usize },
@@ -23,6 +35,16 @@ impl CodecChoice {
             CodecChoice::Named(n) => n.clone(),
             CodecChoice::Select { strategy, n_select } => {
                 format!("select-{}x{}", strategy.label(), n_select)
+            }
+        }
+    }
+
+    /// The registry spec string this choice resolves to.
+    pub fn spec_str(&self) -> String {
+        match self {
+            CodecChoice::Named(n) => n.clone(),
+            CodecChoice::Select { strategy, n_select } => {
+                format!("select:{}:{}", strategy.label(), n_select)
             }
         }
     }
@@ -41,7 +63,12 @@ pub struct ExperimentConfig {
     pub train_n: usize,
     pub test_n: usize,
     pub partition: Partition,
+    /// shorthand codec for both data directions (see per-stream overrides)
     pub codec: CodecChoice,
+    /// `--uplink-codec`: override the activations stream only
+    pub uplink_codec: Option<String>,
+    /// `--downlink-codec`: override the gradients stream only
+    pub downlink_codec: Option<String>,
     /// evaluate test accuracy every this many rounds
     pub eval_every: usize,
     /// stop early once this test accuracy is reached
@@ -66,8 +93,8 @@ pub struct ExperimentConfig {
     /// round-scheduling policy: InOrder (deterministic default) or
     /// ArrivalOrder with optional straggler timeout + quorum
     pub schedule: Policy,
-    /// codec name for the ModelSync (FedAvg) streams; None = "identity"
-    /// (lossless, envelope-wrapped raw f32)
+    /// `--sync-codec`: codec spec for the ModelSync (FedAvg) streams;
+    /// None = "identity" (lossless, envelope-wrapped raw f32)
     pub sync_codec: Option<String>,
 }
 
@@ -84,6 +111,8 @@ impl ExperimentConfig {
             test_n: 512,
             partition: Partition::Iid,
             codec: CodecChoice::Named("slacc".into()),
+            uplink_codec: None,
+            downlink_codec: None,
             eval_every: 10,
             target_accuracy: None,
             client_agg_every: 1,
@@ -105,98 +134,57 @@ impl ExperimentConfig {
         std::path::Path::new(&self.artifacts_root).join(&self.dataset)
     }
 
-    /// Instantiate the uplink/downlink codec for one device stream.
-    /// `stream` namespaces the RNG so every device/direction differs.
-    pub fn build_codec(&self, channels: usize, stream: u64)
-                       -> Result<Box<dyn codecs::Codec>, String> {
-        let seed = self.seed ^ (0x0dec << 16) ^ stream;
-        match &self.codec {
-            CodecChoice::Named(name) => {
-                if name == "slacc" || name == "slacc-paper-eq6" {
-                    let mut cfg = self.slacc;
-                    if name == "slacc-paper-eq6" {
-                        cfg.bit_alloc = crate::codecs::slacc::BitAlloc::FloorEntropy;
-                    }
-                    if let Some(a) = self.alpha {
-                        cfg.alpha = a;
-                    }
-                    Ok(Box::new(crate::codecs::slacc::SlAccCodec::new(
-                        cfg, channels, self.rounds, seed,
-                    )))
-                } else {
-                    codecs::by_name(name, channels, self.rounds, seed)
-                }
-            }
-            CodecChoice::Select { strategy, n_select } => {
-                Ok(Box::new(codecs::selection::SelectionCodec::new(
-                    *strategy,
-                    *n_select,
-                    channels,
-                    self.slacc.history_window,
-                    self.rounds,
-                    seed,
-                )))
-            }
-        }
-    }
-
-    /// The uplink (activations) codec for device `device`. The compressing
-    /// instance lives on the device; the server builds an identical twin to
-    /// decompress (the wire envelopes are self-describing).
-    pub fn uplink_codec(&self, channels: usize, device: usize)
-                        -> Result<Box<dyn codecs::Codec>, String> {
-        self.build_codec(channels, (device as u64) * 2)
-    }
-
-    /// The downlink (gradients) codec for device `device`. When gradient
-    /// compression is off this is [`codecs::identity::IdentityCodec`], so
-    /// the uncompressed path still pays the payload envelope header and the
-    /// "communication overhead" axis stays comparable across configs.
-    pub fn downlink_codec(&self, channels: usize, device: usize)
-                          -> Result<Box<dyn codecs::Codec>, String> {
-        if self.compress_gradients {
-            self.build_codec(channels, (device as u64) * 2 + 1)
+    /// Resolve the flags into the negotiated per-stream spec table: the
+    /// `--codec` shorthand covers both data directions unless a per-stream
+    /// override is set; the downlink falls back to lossless identity when
+    /// gradient compression is off; sync defaults to identity.
+    pub fn stream_specs(&self) -> Result<StreamSpecs, String> {
+        let base = self.codec.spec_str();
+        let uplink = self.uplink_codec.clone().unwrap_or_else(|| base.clone());
+        let downlink = if self.compress_gradients {
+            self.downlink_codec.clone().unwrap_or(base)
         } else {
-            Ok(Box::new(codecs::identity::IdentityCodec::new()))
+            "identity".to_string()
+        };
+        let sync = self.sync_codec.clone().unwrap_or_else(|| "identity".to_string());
+        StreamSpecs::parse(&uplink, &downlink, &sync).map_err(String::from)
+    }
+
+    /// The shared session parameters every stream build uses.
+    fn session_stream_cfg(&self, channels: usize) -> SessionStreamCfg {
+        SessionStreamCfg {
+            channels,
+            total_rounds: self.rounds,
+            seed: self.seed,
+            slacc: self.slacc,
+            alpha: self.alpha,
         }
     }
 
-    /// The ModelSync codec name ("identity" unless `--sync-codec` set).
-    pub fn sync_codec_name(&self) -> &str {
-        self.sync_codec.as_deref().unwrap_or("identity")
+    /// Build the full fleet's per-device, per-direction codec instances
+    /// (the server side of a session).
+    pub fn stream_set(&self, channels: usize) -> Result<StreamSet, String> {
+        let specs = self.stream_specs()?;
+        StreamSet::build(specs, &self.session_stream_cfg(channels), self.devices)
+            .map_err(String::from)
     }
 
-    fn sync_stream_codec(&self, stream: u64) -> Result<Box<dyn codecs::Codec>, String> {
-        // sync streams are independent of the smashed-data streams: their
-        // own seed offset, one "channel" (params are flattened), and the
-        // configured sync codec family
-        codecs::by_name(
-            self.sync_codec_name(),
-            1,
-            self.rounds,
-            self.seed ^ (0x5106 << 20) ^ stream,
-        )
-    }
-
-    /// The ModelSync compressor for device `device`'s pushes (the server
-    /// builds an identical twin to decompress).
-    pub fn sync_uplink_codec(&self, device: usize)
-                             -> Result<Box<dyn codecs::Codec>, String> {
-        self.sync_stream_codec((device as u64) * 2)
-    }
-
-    /// The ModelSync compressor for the server's FedAvg broadcast to
-    /// device `device` (the device builds the decompress twin).
-    pub fn sync_downlink_codec(&self, device: usize)
-                               -> Result<Box<dyn codecs::Codec>, String> {
-        self.sync_stream_codec((device as u64) * 2 + 1)
+    /// Build one device's four stream codecs (the device side of a
+    /// session; the server's [`StreamSet`] holds the identical twins).
+    pub fn device_streams(&self, channels: usize, device: usize) -> Result<DeviceStreams, String> {
+        let specs = self.stream_specs()?;
+        DeviceStreams::build(&specs, &self.session_stream_cfg(channels), device)
+            .map_err(String::from)
     }
 
     /// Project this experiment onto the shape a transport server session
     /// enforces. `eval_batch` comes from the model geometry (the artifact
     /// manifest's batch, or the mock batch).
-    pub fn serve_config(&self, eval_batch: usize) -> crate::transport::server::ServeConfig {
-        crate::transport::server::ServeConfig {
+    pub fn serve_config(
+        &self,
+        eval_batch: usize,
+    ) -> Result<crate::transport::server::ServeConfig, String> {
+        Ok(crate::transport::server::ServeConfig {
             devices: self.devices,
             rounds: self.rounds,
             lr: self.lr,
@@ -208,7 +196,8 @@ impl ExperimentConfig {
             eval_batch,
             config_fp: self.fingerprint(),
             schedule: self.schedule,
-        }
+            specs: self.stream_specs()?,
+        })
     }
 
     /// Whether the AOT artifacts for this config exist on disk (if not,
@@ -220,12 +209,19 @@ impl ExperimentConfig {
     /// Stable 64-bit digest of every field that changes a session's
     /// numerics or byte accounting. The transport Hello carries it so a
     /// `slacc device` launched with different flags than the server (lr,
-    /// seed, dataset sizes, partition, codec parameters, ...) is rejected
+    /// seed, dataset sizes, partition, stream specs, ...) is rejected
     /// at handshake instead of silently corrupting the run. FNV-1a over a
     /// canonical string, so it is identical across processes and builds.
+    /// The per-stream spec table additionally travels verbatim in the
+    /// Hello, so a stream mismatch is reported by name instead of as an
+    /// opaque digest difference.
     pub fn fingerprint(&self) -> u64 {
+        let streams = self
+            .stream_specs()
+            .map(|s| s.table())
+            .unwrap_or_else(|e| format!("invalid({e})"));
         let repr = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}",
             self.dataset,
             self.seed,
             self.lr.to_bits(),
@@ -238,21 +234,15 @@ impl ExperimentConfig {
             self.compress_gradients,
             self.entropy_via_kernel,
             self.partition.label(),
-            self.codec.label(),
+            streams,
             self.slacc.groups,
             self.slacc.history_window,
             self.slacc.b_min,
             self.slacc.b_max,
             self.alpha,
             self.schedule.label(),
-            self.sync_codec_name(),
         );
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in repr.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-        h
+        crate::codecs::stream::fnv1a(&repr)
     }
 
     /// The fleet's network simulator.
@@ -288,19 +278,15 @@ impl ExperimentConfig {
                 self.devices
             ));
         }
-        if let CodecChoice::Named(n) = &self.codec {
-            let base = n.strip_prefix("ef:").unwrap_or(n);
-            if !codecs::ALL_CODECS.contains(&base) {
-                return Err(format!("unknown codec '{n}'"));
-            }
+        if !self.compress_gradients && self.downlink_codec.is_some() {
+            return Err(
+                "--downlink-codec contradicts --no-grad-compress (the uncompressed \
+                 downlink is always the identity stream)"
+                    .into(),
+            );
         }
-        {
-            let n = self.sync_codec_name();
-            let base = n.strip_prefix("ef:").unwrap_or(n);
-            if !codecs::ALL_CODECS.contains(&base) {
-                return Err(format!("unknown sync codec '{n}'"));
-            }
-        }
+        // parses (and therefore registry-validates) all three stream specs
+        self.stream_specs()?;
         if let Policy::ArrivalOrder { straggler_timeout_s, min_quorum } = self.schedule {
             if let Some(t) = straggler_timeout_s {
                 if !(t > 0.0) {
@@ -348,39 +334,70 @@ mod tests {
         assert!(c.validate().is_err());
 
         let mut c = ExperimentConfig::default_for("ham");
+        c.uplink_codec = Some("nope".into());
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default_for("ham");
         c.device_speeds = vec![1.0, 2.0];
+        assert!(c.validate().is_err());
+
+        // a downlink override is meaningless with gradient compression off
+        let mut c = ExperimentConfig::default_for("ham");
+        c.compress_gradients = false;
+        c.downlink_codec = Some("uniform8".into());
         assert!(c.validate().is_err());
     }
 
     #[test]
-    fn build_codec_named_and_selection() {
+    fn stream_specs_resolve_shorthand_and_overrides() {
         let mut c = ExperimentConfig::default_for("ham");
-        assert_eq!(c.build_codec(32, 0).unwrap().name(), "slacc");
-        c.codec = CodecChoice::Named("powerquant".into());
-        assert_eq!(c.build_codec(32, 0).unwrap().name(), "powerquant");
+        let s = c.stream_specs().unwrap();
+        assert_eq!(s.uplink.as_str(), "slacc");
+        assert_eq!(s.downlink.as_str(), "slacc");
+        assert_eq!(s.sync.as_str(), "identity");
+
+        c.downlink_codec = Some("uniform8".into());
+        c.sync_codec = Some("uniform8".into());
+        let s = c.stream_specs().unwrap();
+        assert_eq!(s.uplink.as_str(), "slacc");
+        assert_eq!(s.downlink.as_str(), "uniform8");
+        assert_eq!(s.sync.as_str(), "uniform8");
+
+        c.uplink_codec = Some("ef:powerquant".into());
+        let s = c.stream_specs().unwrap();
+        assert_eq!(s.uplink.as_str(), "ef:powerquant");
+    }
+
+    #[test]
+    fn selection_choice_resolves_through_the_registry() {
+        let mut c = ExperimentConfig::default_for("ham");
         c.codec = CodecChoice::Select {
             strategy: Selection::EntropyBlended,
             n_select: 1,
         };
-        assert_eq!(c.build_codec(32, 0).unwrap().name(), "select-acii");
+        let s = c.stream_specs().unwrap();
+        assert_eq!(s.uplink.as_str(), "select:acii:1");
+        let ds = c.device_streams(32, 0).unwrap();
+        assert_eq!(ds.up.name(), "select-acii");
     }
 
     #[test]
     fn alpha_override_applies_to_slacc() {
         let mut c = ExperimentConfig::default_for("ham");
         c.alpha = Some(AlphaSchedule::Fixed(0.25));
-        let codec = c.build_codec(8, 0).unwrap();
-        assert_eq!(codec.name(), "slacc"); // built without panic
+        let ds = c.device_streams(8, 0).unwrap();
+        assert_eq!(ds.up.name(), "slacc"); // built without panic
     }
 
     #[test]
-    fn downlink_codec_is_identity_when_uncompressed() {
+    fn downlink_is_identity_when_uncompressed() {
         let mut c = ExperimentConfig::default_for("ham");
-        assert_eq!(c.downlink_codec(8, 0).unwrap().name(), "slacc");
+        assert_eq!(c.device_streams(8, 0).unwrap().down.name(), "slacc");
         c.compress_gradients = false;
-        assert_eq!(c.downlink_codec(8, 0).unwrap().name(), "identity");
+        let ds = c.device_streams(8, 0).unwrap();
+        assert_eq!(ds.down.name(), "identity");
         // uplink is unaffected by the gradient-compression switch
-        assert_eq!(c.uplink_codec(8, 0).unwrap().name(), "slacc");
+        assert_eq!(ds.up.name(), "slacc");
     }
 
     #[test]
@@ -388,12 +405,13 @@ mod tests {
         let mut c = ExperimentConfig::default_for("ham");
         c.devices = 4;
         c.rounds = 3;
-        let s = c.serve_config(32);
+        let s = c.serve_config(32).unwrap();
         assert_eq!(s.devices, 4);
         assert_eq!(s.rounds, 3);
         assert_eq!(s.eval_batch, 32);
         assert_eq!(s.label, "slacc");
         assert_eq!(s.config_fp, c.fingerprint());
+        assert_eq!(s.specs, c.stream_specs().unwrap());
     }
 
     #[test]
@@ -411,6 +429,14 @@ mod tests {
 
         let mut b = ExperimentConfig::default_for("ham");
         b.partition = Partition::Dirichlet { beta: 0.5 };
+        assert_ne!(a.fingerprint(), b.fingerprint());
+
+        // every per-stream override is numerics-affecting
+        let mut b = ExperimentConfig::default_for("ham");
+        b.uplink_codec = Some("uniform8".into());
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut b = ExperimentConfig::default_for("ham");
+        b.downlink_codec = Some("uniform8".into());
         assert_ne!(a.fingerprint(), b.fingerprint());
 
         // artifacts location is deployment detail, not numerics
@@ -431,9 +457,9 @@ mod tests {
         let mut c = ExperimentConfig::default_for("ham");
         c.sync_codec = Some("uniform8".into());
         assert_ne!(a.fingerprint(), c.fingerprint());
-        assert_eq!(c.sync_uplink_codec(0).unwrap().name(), "uniform8");
-        assert_eq!(a.sync_uplink_codec(0).unwrap().name(), "identity");
-        assert_eq!(a.sync_downlink_codec(1).unwrap().name(), "identity");
+        assert_eq!(c.device_streams(8, 0).unwrap().sync_up.name(), "uniform8");
+        assert_eq!(a.device_streams(8, 0).unwrap().sync_up.name(), "identity");
+        assert_eq!(a.device_streams(8, 1).unwrap().sync_down.name(), "identity");
     }
 
     #[test]

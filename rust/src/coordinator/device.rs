@@ -1,12 +1,13 @@
 //! Per-edge-device state: client sub-model replica, data shard loader, and
-//! the two stateful codec streams (uplink activations / downlink gradients).
+//! the device's stream codecs (uplink activations / downlink gradients /
+//! ModelSync, see [`crate::codecs::stream::DeviceStreams`]).
 //!
 //! Codec state is per-device *and* per-direction, matching the paper: ACII
 //! tracks the entropy history of each smashed-data stream independently
 //! (device activations differ, and gradients have different statistics
 //! than activations).
 
-use crate::codecs::Codec;
+use crate::codecs::stream::DeviceStreams;
 use crate::data::loader::BatchLoader;
 use crate::tensor::Tensor;
 
@@ -15,8 +16,8 @@ pub struct DeviceState {
     /// flat client sub-model parameters (manifest order)
     pub client_params: Vec<Tensor>,
     pub loader: BatchLoader,
-    pub up_codec: Box<dyn Codec>,
-    pub down_codec: Box<dyn Codec>,
+    /// this device's four stream codec instances
+    pub streams: DeviceStreams,
 }
 
 impl DeviceState {
@@ -24,10 +25,9 @@ impl DeviceState {
         id: usize,
         client_params: Vec<Tensor>,
         loader: BatchLoader,
-        up_codec: Box<dyn Codec>,
-        down_codec: Box<dyn Codec>,
+        streams: DeviceStreams,
     ) -> DeviceState {
-        DeviceState { id, client_params, loader, up_codec, down_codec }
+        DeviceState { id, client_params, loader, streams }
     }
 }
 
@@ -77,8 +77,12 @@ mod tests {
             id,
             vec![Tensor::new(vec![2], vec![value, value * 2.0])],
             BatchLoader::new(&[0, 1, 2], 2, id as u64),
-            Box::new(IdentityCodec::new()),
-            Box::new(IdentityCodec::new()),
+            DeviceStreams {
+                up: Box::new(IdentityCodec::new()),
+                down: Box::new(IdentityCodec::new()),
+                sync_up: Box::new(IdentityCodec::new()),
+                sync_down: Box::new(IdentityCodec::new()),
+            },
         )
     }
 

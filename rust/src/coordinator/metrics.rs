@@ -16,6 +16,13 @@ pub struct RoundRecord {
     /// ModelSync (FedAvg) traffic this round, both directions — its own
     /// axis, separate from the paper's smashed-data bytes
     pub bytes_sync: usize,
+    /// raw (pre-codec) f32 bytes behind `bytes_up` — the denominator-free
+    /// side of the per-stream compression ratio
+    pub raw_up: usize,
+    /// raw f32 bytes behind `bytes_down`
+    pub raw_down: usize,
+    /// raw f32 bytes behind `bytes_sync`
+    pub raw_sync: usize,
     /// devices that participated in this round's close (arrival-order
     /// scheduling can close a round on a quorum)
     pub participants: usize,
@@ -40,10 +47,38 @@ pub struct TrainReport {
     pub total_bytes_down: usize,
     /// total ModelSync bytes (separate from the smashed-data axis)
     pub total_bytes_sync: usize,
+    /// session compression ratio (raw f32 / wire bytes) per stream kind —
+    /// the paper's Fig. 5 overhead axis broken down by direction
+    pub ratio_up: f64,
+    pub ratio_down: f64,
+    pub ratio_sync: f64,
     pub time_to_target_s: Option<f64>,
     pub rounds_run: usize,
     /// straggler carry-overs across the session (0 under InOrder)
     pub straggler_events: usize,
+}
+
+/// raw/wire compression ratio; 0 when the stream moved no bytes.
+pub fn ratio(raw: usize, wire: usize) -> f64 {
+    if wire == 0 {
+        0.0
+    } else {
+        raw as f64 / wire as f64
+    }
+}
+
+impl RoundRecord {
+    pub fn ratio_up(&self) -> f64 {
+        ratio(self.raw_up, self.bytes_up)
+    }
+
+    pub fn ratio_down(&self) -> f64 {
+        ratio(self.raw_down, self.bytes_down)
+    }
+
+    pub fn ratio_sync(&self) -> f64 {
+        ratio(self.raw_sync, self.bytes_sync)
+    }
 }
 
 /// Append-only metrics log for one run.
@@ -111,6 +146,23 @@ impl MetricsLog {
         )
     }
 
+    /// Total raw (pre-codec) bytes per stream kind: (up, down, sync).
+    pub fn total_raw(&self) -> (usize, usize, usize) {
+        (
+            self.records.iter().map(|r| r.raw_up).sum(),
+            self.records.iter().map(|r| r.raw_down).sum(),
+            self.records.iter().map(|r| r.raw_sync).sum(),
+        )
+    }
+
+    /// Session compression ratio per stream kind: (up, down, sync).
+    pub fn ratio_by_stream(&self) -> (f64, f64, f64) {
+        let (wu, wd) = self.total_bytes();
+        let ws = self.total_bytes_sync();
+        let (ru, rd, rs) = self.total_raw();
+        (ratio(ru, wu), ratio(rd, wd), ratio(rs, ws))
+    }
+
     /// Total ModelSync bytes across the session.
     pub fn total_bytes_sync(&self) -> usize {
         self.records.iter().map(|r| r.bytes_sync).sum()
@@ -135,14 +187,16 @@ impl MetricsLog {
         // bytes_up/bytes_down keep their historical columns (3/4) — the
         // distributed-parity checks parse by index; new axes go at the end
         let mut out = String::from(
-            "round,loss,accuracy,bytes_up,bytes_down,sim_time_s,wall_ms,bytes_sync,stragglers\n",
+            "round,loss,accuracy,bytes_up,bytes_down,sim_time_s,wall_ms,bytes_sync,\
+             stragglers,ratio_up,ratio_down,ratio_sync\n",
         );
         for r in &self.records {
             let acc = r.accuracy.map_or(String::new(), |a| format!("{a:.6}"));
             out.push_str(&format!(
-                "{},{:.6},{},{},{},{:.4},{:.1},{},{}\n",
+                "{},{:.6},{},{},{},{:.4},{:.1},{},{},{:.3},{:.3},{:.3}\n",
                 r.round, r.loss, acc, r.bytes_up, r.bytes_down, r.sim_time_s,
-                r.wall_ms, r.bytes_sync, r.stragglers
+                r.wall_ms, r.bytes_sync, r.stragglers, r.ratio_up(),
+                r.ratio_down(), r.ratio_sync()
             ));
         }
         out
@@ -163,6 +217,9 @@ impl MetricsLog {
                         ("bytes_up", Json::Num(r.bytes_up as f64)),
                         ("bytes_down", Json::Num(r.bytes_down as f64)),
                         ("bytes_sync", Json::Num(r.bytes_sync as f64)),
+                        ("ratio_up", Json::Num(r.ratio_up())),
+                        ("ratio_down", Json::Num(r.ratio_down())),
+                        ("ratio_sync", Json::Num(r.ratio_sync())),
                         ("participants", Json::Num(r.participants as f64)),
                         ("stragglers", Json::Num(r.stragglers as f64)),
                         ("sim_time_s", Json::Num(r.sim_time_s)),
@@ -193,6 +250,9 @@ mod tests {
             bytes_up: 100,
             bytes_down: 50,
             bytes_sync: 25,
+            raw_up: 400,
+            raw_down: 200,
+            raw_sync: 25,
             participants: 1,
             stragglers: 0,
             sim_time_s: t,
@@ -213,6 +273,11 @@ mod tests {
         assert_eq!(m.time_to_accuracy(0.5), Some(4.0));
         assert_eq!(m.time_to_accuracy(0.9), None);
         assert_eq!(m.total_bytes(), (400, 200));
+        assert_eq!(m.total_raw(), (1600, 800, 100));
+        let (ru, rd, rs) = m.ratio_by_stream();
+        assert!((ru - 4.0).abs() < 1e-12);
+        assert!((rd - 4.0).abs() < 1e-12);
+        assert!((rs - 1.0).abs() < 1e-12);
         assert!((m.mean_loss_tail(2) - 1.1).abs() < 1e-12);
     }
 

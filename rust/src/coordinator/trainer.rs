@@ -75,8 +75,7 @@ fn build_device_state(
         d,
         geom.client_init.clone(),
         loader,
-        cfg.uplink_codec(geom.channels, d)?,
-        cfg.downlink_codec(geom.channels, d)?,
+        cfg.device_streams(geom.channels, d)?,
     ))
 }
 
@@ -87,24 +86,11 @@ pub fn engine_runtime(cfg: &ExperimentConfig) -> Result<ServerRuntime<EngineComp
     let engine = Rc::new(RefCell::new(Engine::load(&cfg.artifacts_dir())?));
     let (train, test) = Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
     let geom = load_geom(&engine.borrow(), &train)?;
-    let mut ups = Vec::with_capacity(cfg.devices);
-    let mut downs = Vec::with_capacity(cfg.devices);
-    let mut sync_ups = Vec::with_capacity(cfg.devices);
-    let mut sync_downs = Vec::with_capacity(cfg.devices);
-    for d in 0..cfg.devices {
-        ups.push(cfg.uplink_codec(geom.channels, d)?);
-        downs.push(cfg.downlink_codec(geom.channels, d)?);
-        sync_ups.push(cfg.sync_uplink_codec(d)?);
-        sync_downs.push(cfg.sync_downlink_codec(d)?);
-    }
     ServerRuntime::new(
-        cfg.serve_config(geom.batch),
+        cfg.serve_config(geom.batch)?,
         EngineCompute::new(engine, cfg.entropy_via_kernel),
         geom.server_init,
-        ups,
-        downs,
-        sync_ups,
-        sync_downs,
+        cfg.stream_set(geom.channels)?,
         Arc::new(test),
         cfg.network(),
     )
@@ -167,10 +153,6 @@ impl Trainer {
         let mut workers = Vec::with_capacity(cfg.devices);
         let mut dev_conns = Vec::with_capacity(cfg.devices);
         let mut srv_conns: Vec<Box<dyn Transport>> = Vec::with_capacity(cfg.devices);
-        let mut ups = Vec::with_capacity(cfg.devices);
-        let mut downs = Vec::with_capacity(cfg.devices);
-        let mut sync_ups = Vec::with_capacity(cfg.devices);
-        let mut sync_downs = Vec::with_capacity(cfg.devices);
         for d in 0..cfg.devices {
             let state = build_device_state(&cfg, &geom, shards.device(d), d)?;
             workers.push(DeviceWorker::new(
@@ -182,20 +164,13 @@ impl Trainer {
             let (dev_end, srv_end) = loopback::pair(&format!("dev{d}"));
             dev_conns.push(dev_end);
             srv_conns.push(Box::new(srv_end));
-            ups.push(cfg.uplink_codec(geom.channels, d)?);
-            downs.push(cfg.downlink_codec(geom.channels, d)?);
-            sync_ups.push(cfg.sync_uplink_codec(d)?);
-            sync_downs.push(cfg.sync_downlink_codec(d)?);
         }
 
         let runtime = ServerRuntime::new(
-            cfg.serve_config(geom.batch),
+            cfg.serve_config(geom.batch)?,
             EngineCompute::new(engine, cfg.entropy_via_kernel),
             geom.server_init,
-            ups,
-            downs,
-            sync_ups,
-            sync_downs,
+            cfg.stream_set(geom.channels)?,
             Arc::new(test),
             cfg.network(),
         )?;

@@ -78,7 +78,12 @@ fn print_help() {
          USAGE: slacc [train|serve|device|eval|inspect|codecs] [--flags]\n\n\
          train flags:\n\
            --dataset ham|mnist     model/dataset config    [ham]\n\
-           --codec NAME            {:?}\n\
+           --codec SPEC            both data directions    [slacc]\n\
+                                   base specs: {:?}\n\
+                                   plus uniform<bits>, select:<strategy>[:<n>],\n\
+                                   and the ef:<spec> error-feedback wrapper\n\
+           --uplink-codec SPEC     override the activations stream only\n\
+           --downlink-codec SPEC   override the gradients stream only\n\
            --select STRATEGY       channel-selection ablation instead of a codec\n\
                                    (random|std|entropy-instant|entropy-historical|acii|fixed:N)\n\
            --n-select N            channels kept by --select [1]\n\
@@ -104,7 +109,7 @@ fn print_help() {
            --straggler-timeout S   (arrival) close a round after S seconds\n\
            --min-quorum N          (arrival) devices required to close a\n\
                                    timed-out round [all]\n\
-           --sync-codec NAME       codec for ModelSync traffic [identity]\n\
+           --sync-codec SPEC       codec for ModelSync traffic [identity]\n\
          serve flags (train flags plus):\n\
            --bind ADDR             listen address          [127.0.0.1:7878]\n\
            --mock                  mock model (no PJRT artifacts needed)\n\
@@ -170,6 +175,8 @@ fn config_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
     if let Some(name) = args.str_opt("sync-codec") {
         cfg.sync_codec = Some(name);
     }
+    cfg.uplink_codec = args.str_opt("uplink-codec");
+    cfg.downlink_codec = args.str_opt("downlink-codec");
 
     if let Some(sel) = args.str_opt("select") {
         use slacc::codecs::selection::Selection;
@@ -212,6 +219,10 @@ fn print_report(report: &TrainReport, csv: Option<String>) -> Result<(), String>
     println!(
         "model sync bytes  : {:.2} MB",
         report.total_bytes_sync as f64 / 1e6
+    );
+    println!(
+        "compression ratio : {:.1}x up / {:.1}x down / {:.1}x sync",
+        report.ratio_up, report.ratio_down, report.ratio_sync
     );
     if report.straggler_events > 0 {
         println!("straggler events  : {}", report.straggler_events);
@@ -265,9 +276,9 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
     let addr = listener.local_addr().map_err(|e| e.to_string())?;
     println!(
         "slacc serve: listening on {addr}, waiting for {} device(s) \
-         [codec={}, schedule={}, mock={mock}]",
+         [{}, schedule={}, mock={mock}]",
         cfg.devices,
-        cfg.codec.label(),
+        cfg.stream_specs().map(|s| s.table()).unwrap_or_default(),
         cfg.schedule.label(),
     );
 
@@ -358,7 +369,7 @@ fn cmd_codecs(mut args: Args) -> Result<(), String> {
     for name in codecs::ALL_CODECS {
         let mut codec = codecs::by_name(name, c, 100, seed)?;
         let wire = codec.compress(&cm, RoundCtx::default());
-        let rec = codec.decompress(&wire)?;
+        let rec = codec.decode(&wire)?;
         println!(
             "{:<16} {:>10} {:>7.1}x {:>12.5}",
             name,

@@ -6,9 +6,19 @@
 
 /// Pack `codes` (each < 2^bits) into bytes, LSB-first.
 pub fn pack(codes: &[u32], bits: u32) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_into(codes, bits, &mut out);
+    out
+}
+
+/// [`pack`] into a caller-owned buffer (cleared first). The zero-alloc
+/// sibling for the codec encode hot path: a warmed buffer is reused at its
+/// steady-state capacity.
+pub fn pack_into(codes: &[u32], bits: u32, out: &mut Vec<u8>) {
     assert!((1..=32).contains(&bits), "bits must be 1..=32, got {bits}");
     let total_bits = codes.len() * bits as usize;
-    let mut out = Vec::with_capacity(total_bits.div_ceil(8));
+    out.clear();
+    out.reserve(total_bits.div_ceil(8));
     let mut acc: u64 = 0;
     let mut acc_bits: u32 = 0;
     let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
@@ -28,7 +38,6 @@ pub fn pack(codes: &[u32], bits: u32) -> Vec<u8> {
     if acc_bits > 0 {
         out.push((acc & 0xff) as u8);
     }
-    out
 }
 
 /// Unpack `count` b-bit codes from bytes (inverse of [`pack`]).

@@ -11,6 +11,13 @@
 //!
 //! All integers little-endian. The byte count of the full envelope is what
 //! the paper's "communication overhead" axis measures.
+//!
+//! Reads fail with the typed [`CodecError`] — truncation, hostile length
+//! claims, and structural violations are distinct variants, and every
+//! length read off the wire is checked against its guard *before* any
+//! allocation.
+
+use crate::codecs::CodecError;
 
 pub const MAGIC: u16 = 0x51AC;
 pub const VERSION: u8 = 1;
@@ -74,6 +81,29 @@ impl ByteWriter {
         self.buf.is_empty()
     }
 
+    /// Drop the contents but keep the capacity — the reusable-buffer
+    /// contract of [`crate::codecs::Codec::encode`]: a warmed writer
+    /// re-encodes without touching the allocator.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Grow capacity ahead of a known write size (no-op once warmed).
+    pub fn reserve(&mut self, additional: usize) {
+        self.buf.reserve(additional);
+    }
+
+    /// The bytes written so far, without consuming the writer.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Copy the written bytes out, keeping the writer (and its capacity)
+    /// for the next round.
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.buf.clone()
+    }
+
     pub fn finish(self) -> Vec<u8> {
         self.buf
     }
@@ -91,49 +121,62 @@ impl<'a> ByteReader<'a> {
         ByteReader { buf, pos: 0 }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
         if self.pos + n > self.buf.len() {
-            return Err(format!(
-                "payload truncated: need {n} bytes at offset {}, have {}",
-                self.pos,
-                self.buf.len() - self.pos
-            ));
+            return Err(CodecError::Truncated {
+                need: n,
+                have: self.buf.len() - self.pos,
+                at: self.pos,
+            });
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
-    pub fn u8(&mut self) -> Result<u8, String> {
+    pub fn u8(&mut self) -> Result<u8, CodecError> {
         Ok(self.take(1)?[0])
     }
 
-    pub fn u16(&mut self) -> Result<u16, String> {
+    pub fn u16(&mut self) -> Result<u16, CodecError> {
         Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
-    pub fn u32(&mut self) -> Result<u32, String> {
+    pub fn u32(&mut self) -> Result<u32, CodecError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    pub fn u64(&mut self) -> Result<u64, String> {
+    pub fn u64(&mut self) -> Result<u64, CodecError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    pub fn f32(&mut self) -> Result<f32, String> {
+    pub fn f32(&mut self) -> Result<f32, CodecError> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
         self.take(n)
     }
 
-    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>, CodecError> {
         let raw = self.take(n * 4)?;
         Ok(raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
+    }
+
+    /// Structural check every decoder runs after its last read: leftover
+    /// bytes mean the envelope disagrees with its own header (a corrupted
+    /// header shrinking the claimed geometry, or spliced garbage).
+    pub fn expect_end(&self) -> Result<(), CodecError> {
+        if self.remaining() != 0 {
+            return Err(CodecError::Malformed(format!(
+                "{} trailing bytes after payload body",
+                self.remaining()
+            )));
+        }
+        Ok(())
     }
 
     pub fn remaining(&self) -> usize {
@@ -164,15 +207,17 @@ impl Header {
         }
     }
 
-    pub fn read(r: &mut ByteReader) -> Result<Header, String> {
+    pub fn read(r: &mut ByteReader) -> Result<Header, CodecError> {
         let magic = r.u16()?;
         if magic != MAGIC {
-            return Err(format!("bad magic {magic:#06x}"));
+            return Err(CodecError::Malformed(format!("bad magic {magic:#06x}")));
         }
         let codec_id = r.u8()?;
         let version = r.u8()?;
         if version != VERSION {
-            return Err(format!("unsupported payload version {version}"));
+            return Err(CodecError::Malformed(format!(
+                "unsupported payload version {version}"
+            )));
         }
         let mut dims = [0u32; 4];
         for d in &mut dims {
@@ -181,9 +226,20 @@ impl Header {
         let elems = dims
             .iter()
             .try_fold(1usize, |acc, &d| acc.checked_mul(d as usize))
-            .ok_or("header dims overflow")?;
-        if elems == 0 || elems > MAX_ELEMENTS {
-            return Err(format!("header claims {elems} elements (cap {MAX_ELEMENTS})"));
+            .ok_or(CodecError::LimitExceeded {
+                what: "header elements",
+                claimed: usize::MAX,
+                cap: MAX_ELEMENTS,
+            })?;
+        if elems == 0 {
+            return Err(CodecError::Malformed("header claims 0 elements".into()));
+        }
+        if elems > MAX_ELEMENTS {
+            return Err(CodecError::LimitExceeded {
+                what: "header elements",
+                claimed: elems,
+                cap: MAX_ELEMENTS,
+            });
         }
         Ok(Header { codec_id, dims })
     }

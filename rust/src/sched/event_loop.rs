@@ -124,10 +124,10 @@ impl PollFleet {
             let peer = fleet.conns[i].peer.clone();
             let hello = hello_from_message(msg, devices, &peer)?;
             crate::log_info!(
-                "sched: device {} connected from {peer} (shard={}, codec={})",
+                "sched: device {} connected from {peer} (shard={}, {})",
                 hello.device_id,
                 hello.shard_len,
-                hello.codec
+                hello.streams.table()
             );
             by_conn[i] = Some(hello);
             got += 1;
@@ -398,12 +398,19 @@ mod tests {
     use std::thread;
 
     fn hello(d: u32, devices: u32) -> Message {
+        let specs = crate::codecs::stream::StreamSpecs::parse(
+            "identity", "identity", "identity",
+        )
+        .unwrap();
         Message::Hello {
             device_id: d,
             devices,
             shard_len: 8,
-            codec: "identity".into(),
             config_fp: 1,
+            uplink: specs.uplink.as_str().to_string(),
+            downlink: specs.downlink.as_str().to_string(),
+            sync: specs.sync.as_str().to_string(),
+            streams_fp: specs.fingerprint(),
         }
     }
 

@@ -100,6 +100,9 @@ fn close_round<C: Compute>(
     let cost = rt.net.round_cost_sched(&up, &down, &sync_up, &sync_down, &active);
     let participants = sched.participants.len();
     let stragglers = sched.stragglers.len();
+    // raw (pre-codec) bytes this round, accumulated by the runtime's
+    // decode/encode/sync helpers — the per-stream compression-ratio axis
+    let [raw_up, raw_down, raw_sync] = rt.take_round_raw();
     rt.timeline.push_with_sched(cost, sched);
     // a straggling device 0 has no fresh sub-model to evaluate; skip the
     // eval rather than fail the session (InOrder never hits this)
@@ -115,6 +118,9 @@ fn close_round<C: Compute>(
         bytes_up: cost.bytes_up,
         bytes_down: cost.bytes_down,
         bytes_sync: cost.bytes_sync,
+        raw_up,
+        raw_down,
+        raw_sync,
         participants,
         stragglers,
         sim_time_s: rt.timeline.total_time(),

@@ -14,7 +14,8 @@
 
 use std::sync::Arc;
 
-use crate::codecs::{Codec, RoundCtx};
+use crate::codecs::stream::StreamSpecs;
+use crate::codecs::RoundCtx;
 use crate::config::ExperimentConfig;
 use crate::coordinator::device::DeviceState;
 use crate::data::loader::BatchLoader;
@@ -40,10 +41,8 @@ pub struct DeviceWorker<C: Compute> {
     rounds: usize,
     lr: f32,
     session_fp: u64,
-    /// compresses this device's ModelSync pushes
-    sync_up: Box<dyn Codec>,
-    /// decompress twin for the server's FedAvg broadcasts
-    sync_down: Box<dyn Codec>,
+    /// the negotiated per-stream spec table (declared in the Hello)
+    specs: StreamSpecs,
     pending: Option<Pending>,
     done: bool,
 }
@@ -56,8 +55,7 @@ impl<C: Compute> DeviceWorker<C> {
         cfg: &ExperimentConfig,
     ) -> Result<DeviceWorker<C>, String> {
         let session_fp = super::session_fingerprint(cfg.fingerprint(), compute.kind());
-        let sync_up = cfg.sync_uplink_codec(state.id)?;
-        let sync_down = cfg.sync_downlink_codec(state.id)?;
+        let specs = cfg.stream_specs()?;
         Ok(DeviceWorker {
             compute,
             data,
@@ -66,8 +64,7 @@ impl<C: Compute> DeviceWorker<C> {
             rounds: cfg.rounds,
             lr: cfg.lr,
             session_fp,
-            sync_up,
-            sync_down,
+            specs,
             pending: None,
             done: false,
         })
@@ -85,14 +82,18 @@ impl<C: Compute> DeviceWorker<C> {
         &self.state.client_params
     }
 
-    /// The handshake frame this worker opens its connection with.
+    /// The handshake frame this worker opens its connection with: device
+    /// slot, fleet shape, and the full per-stream spec table + digest.
     pub fn hello(&self) -> Message {
         Message::Hello {
             device_id: self.state.id as u32,
             devices: self.devices as u32,
             shard_len: self.state.loader.shard_len() as u32,
-            codec: self.state.up_codec.name().to_string(),
             config_fp: self.session_fp,
+            uplink: self.specs.uplink.as_str().to_string(),
+            downlink: self.specs.downlink.as_str().to_string(),
+            sync: self.specs.sync.as_str().to_string(),
+            streams_fp: self.specs.fingerprint(),
         }
     }
 
@@ -131,11 +132,14 @@ impl<C: Compute> DeviceWorker<C> {
                     .compute
                     .client_fwd(&self.state.client_params, &x, &x_dims)?;
                 // stage ii (device half): ACII entropy + uplink compression
+                // (the frame owns its payload: single-allocation compress,
+                // with the reusable-buffer encode as the primitive)
                 let h_inst = self.compute.entropy(&acts)?;
                 let acts_cm = acts.to_channel_major();
                 let payload = self
                     .state
-                    .up_codec
+                    .streams
+                    .up
                     .compress(&acts_cm, RoundCtx { entropy: Some(&h_inst) });
                 self.pending = Some(Pending { round, x, x_dims, sync });
                 Ok(vec![Message::Activations {
@@ -157,8 +161,13 @@ impl<C: Compute> DeviceWorker<C> {
                         pending.round
                     ));
                 }
-                // stage iv: downlink decompression + client backward
-                let g_hat = self.state.down_codec.decompress(&payload)?;
+                // stage iv: downlink decode + client backward
+                let g_hat = self
+                    .state
+                    .streams
+                    .down
+                    .decode(&payload)
+                    .map_err(|e| format!("device {me}: downlink stream: {e}"))?;
                 let new_params = self.compute.client_bwd(
                     &self.state.client_params,
                     &pending.x,
@@ -170,7 +179,7 @@ impl<C: Compute> DeviceWorker<C> {
                 if pending.sync {
                     let payload = sync::pack_params(
                         &self.state.client_params,
-                        self.sync_up.as_mut(),
+                        self.state.streams.sync_up.as_mut(),
                     );
                     Ok(vec![Message::ModelSync {
                         round,
@@ -189,8 +198,9 @@ impl<C: Compute> DeviceWorker<C> {
                 }
                 // empty pack = "keep your local params" (non-agg round)
                 if !payload.is_empty() {
-                    let tensors = sync::unpack_params(&payload, self.sync_down.as_ref())
-                        .map_err(|e| format!("device {me}: ModelSync: {e}"))?;
+                    let tensors =
+                        sync::unpack_params(&payload, self.state.streams.sync_down.as_mut())
+                            .map_err(|e| format!("device {me}: sync stream (broadcast): {e}"))?;
                     if tensors.is_empty() {
                         return Ok(Vec::new());
                     }
@@ -280,8 +290,7 @@ pub fn mock_worker(
         id,
         compute::mock_client_init(),
         loader,
-        cfg.uplink_codec(channels, id)?,
-        cfg.downlink_codec(channels, id)?,
+        cfg.device_streams(channels, id)?,
     );
     let classes = train.classes;
     DeviceWorker::new(state, MockCompute::new(classes), train, cfg)

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! magic    u32 = 0x534C4143 ("SLAC")
-//! version  u8  = 1
+//! version  u8  = 2 (v2: Hello carries the per-stream codec spec table)
 //! type     u8  (msg_type::*)
 //! body_len u32 (little-endian, <= MAX_FRAME_BODY)
 //! body     type-specific, encoded with ByteWriter/ByteReader
@@ -30,8 +30,9 @@ use crate::quant::payload::{ByteReader, ByteWriter};
 
 /// Frame magic: "SLAC" in ASCII.
 pub const FRAME_MAGIC: u32 = 0x534C_4143;
-/// Wire-protocol version (frames, not payload envelopes).
-pub const PROTO_VERSION: u8 = 1;
+/// Wire-protocol version (frames, not payload envelopes). v2 replaced
+/// Hello's single codec string with the full per-stream spec table.
+pub const PROTO_VERSION: u8 = 2;
 /// Fixed frame-header size in bytes (magic + version + type + body_len).
 pub const FRAME_HEADER_BYTES: usize = 4 + 1 + 1 + 4;
 /// Hard cap on a frame body: 1 GiB, matching the payload header's
@@ -57,16 +58,25 @@ pub mod msg_type {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// device → server: first frame on a connection. Declares which device
-    /// slot this connection serves, the fleet size, codec, and session
-    /// fingerprint (config digest + compute kind) the device was configured
-    /// with — the server rejects mismatches — plus the shard size (the
-    /// FedAvg weight).
+    /// slot this connection serves, the fleet size, the full per-stream
+    /// codec spec table (uplink/downlink/sync, canonical strings plus a
+    /// digest), and the session fingerprint (config digest + compute kind)
+    /// the device was configured with — the server rejects mismatches,
+    /// naming the offending stream — plus the shard size (the FedAvg
+    /// weight).
     Hello {
         device_id: u32,
         devices: u32,
         shard_len: u32,
-        codec: String,
         config_fp: u64,
+        /// canonical spec of the uplink stream
+        uplink: String,
+        /// canonical spec of the downlink stream
+        downlink: String,
+        /// canonical spec of the ModelSync streams
+        sync: String,
+        /// [`crate::codecs::stream::StreamSpecs::fingerprint`] of the table
+        streams_fp: u64,
     },
     /// server → device: handshake accept, echoing the negotiated run shape.
     HelloAck { device_id: u32, rounds: u32, agg_every: u32 },
@@ -117,12 +127,24 @@ impl Message {
 
     fn write_body(&self, w: &mut ByteWriter) {
         match self {
-            Message::Hello { device_id, devices, shard_len, codec, config_fp } => {
+            Message::Hello {
+                device_id,
+                devices,
+                shard_len,
+                config_fp,
+                uplink,
+                downlink,
+                sync,
+                streams_fp,
+            } => {
                 w.u32(*device_id);
                 w.u32(*devices);
                 w.u32(*shard_len);
                 w.u64(*config_fp);
-                write_str(w, codec);
+                w.u64(*streams_fp);
+                write_str(w, uplink);
+                write_str(w, downlink);
+                write_str(w, sync);
             }
             Message::HelloAck { device_id, rounds, agg_every } => {
                 w.u32(*device_id);
@@ -166,7 +188,10 @@ impl Message {
                 devices: r.u32()?,
                 shard_len: r.u32()?,
                 config_fp: r.u64()?,
-                codec: read_str(r)?,
+                streams_fp: r.u64()?,
+                uplink: read_str(r)?,
+                downlink: read_str(r)?,
+                sync: read_str(r)?,
             },
             msg_type::HELLO_ACK => Message::HelloAck {
                 device_id: r.u32()?,
@@ -455,8 +480,11 @@ mod tests {
                 device_id: 3,
                 devices: 4,
                 shard_len: 128,
-                codec: "slacc".into(),
                 config_fp: 0xfeed_beef_dead_cafe,
+                uplink: "slacc".into(),
+                downlink: "uniform8".into(),
+                sync: "identity".into(),
+                streams_fp: 0x0123_4567_89ab_cdef,
             },
             Message::HelloAck { device_id: 3, rounds: 300, agg_every: 1 },
             Message::RoundOpen { round: 7, sync: true },

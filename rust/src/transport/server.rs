@@ -22,7 +22,8 @@
 
 use std::sync::Arc;
 
-use crate::codecs::{Codec, RoundCtx};
+use crate::codecs::stream::{StreamKind, StreamSet, StreamSpecs};
+use crate::codecs::RoundCtx;
 use crate::config::ExperimentConfig;
 use crate::coordinator::device::fedavg_params;
 use crate::coordinator::metrics::{MetricsLog, TrainReport};
@@ -59,6 +60,10 @@ pub struct ServeConfig {
     pub config_fp: u64,
     /// round-scheduling policy (see [`crate::sched::Policy`])
     pub schedule: Policy,
+    /// the negotiated per-stream codec spec table; devices must present
+    /// an identical table in their Hello (mismatches are rejected naming
+    /// the offending stream)
+    pub specs: StreamSpecs,
 }
 
 /// What a device declared in its Hello frame.
@@ -66,7 +71,8 @@ pub struct ServeConfig {
 pub struct DeviceHello {
     pub device_id: usize,
     pub shard_len: usize,
-    pub codec: String,
+    /// the per-stream spec table the device was configured with
+    pub streams: StreamSpecs,
     pub config_fp: u64,
 }
 
@@ -78,17 +84,34 @@ pub fn hello_from_message(
     devices: usize,
     peer: &str,
 ) -> Result<DeviceHello, String> {
-    let (device_id, fleet, shard_len, codec, config_fp) = match msg {
-        Message::Hello { device_id, devices, shard_len, codec, config_fp } => {
-            (device_id as usize, devices as usize, shard_len as usize, codec, config_fp)
-        }
-        other => {
-            return Err(format!(
-                "handshake: expected Hello from {peer}, got {}",
-                other.type_name()
-            ))
-        }
-    };
+    let (device_id, fleet, shard_len, config_fp, uplink, downlink, sync, streams_fp) =
+        match msg {
+            Message::Hello {
+                device_id,
+                devices,
+                shard_len,
+                config_fp,
+                uplink,
+                downlink,
+                sync,
+                streams_fp,
+            } => (
+                device_id as usize,
+                devices as usize,
+                shard_len as usize,
+                config_fp,
+                uplink,
+                downlink,
+                sync,
+                streams_fp,
+            ),
+            other => {
+                return Err(format!(
+                    "handshake: expected Hello from {peer}, got {}",
+                    other.type_name()
+                ))
+            }
+        };
     if fleet != devices {
         return Err(format!(
             "device {device_id} was configured for {fleet} devices, server for {devices}"
@@ -100,7 +123,17 @@ pub fn hello_from_message(
     if shard_len == 0 {
         return Err(format!("device {device_id} declares an empty data shard"));
     }
-    Ok(DeviceHello { device_id, shard_len, codec, config_fp })
+    let streams = StreamSpecs::parse(&uplink, &downlink, &sync).map_err(|e| {
+        format!("device {device_id} presents an invalid stream spec table: {e}")
+    })?;
+    if streams.fingerprint() != streams_fp {
+        return Err(format!(
+            "device {device_id}: stream table digest {streams_fp:#018x} does not \
+             match its own spec strings ({}) — corrupted or mismatched Hello",
+            streams.table()
+        ));
+    }
+    Ok(DeviceHello { device_id, shard_len, streams, config_fp })
 }
 
 /// Receive one Hello per connection and order connections by device id.
@@ -123,10 +156,10 @@ pub fn handshake(
             return Err(format!("two connections claim device id {}", hello.device_id));
         }
         crate::log_info!(
-            "transport: device {} connected from {peer} (shard={}, codec={})",
+            "transport: device {} connected from {peer} (shard={}, {})",
             hello.device_id,
             hello.shard_len,
-            hello.codec
+            hello.streams.table()
         );
         slots[hello.device_id] = Some((conn, hello));
     }
@@ -145,15 +178,15 @@ pub struct ServerRuntime<C: Compute> {
     pub(crate) cfg: ServeConfig,
     pub(crate) compute: C,
     pub(crate) server: ServerState,
-    /// per-device uplink codec twins (decompression is wire-driven, so a
-    /// fresh instance mirrors the device's compressor exactly)
-    pub(crate) up_codecs: Vec<Box<dyn Codec>>,
-    /// per-device downlink compressors (the compress-side state lives here)
-    pub(crate) down_codecs: Vec<Box<dyn Codec>>,
-    /// per-device ModelSync decompress twins (device → server pushes)
-    pub(crate) sync_up_codecs: Vec<Box<dyn Codec>>,
-    /// per-device ModelSync compressors (server → device broadcasts)
-    pub(crate) sync_down_codecs: Vec<Box<dyn Codec>>,
+    /// every per-device, per-direction codec instance: decode twins for
+    /// the uplink/sync pushes (decoding is wire-driven, so fresh twins
+    /// mirror the devices' compressors exactly) and the compress-side
+    /// state for the downlink/sync broadcasts
+    pub(crate) streams: StreamSet,
+    /// raw (pre-codec) f32 bytes moved this round per stream kind
+    /// [uplink, downlink, sync] — drained by `take_round_raw` at each
+    /// round close for the per-stream compression-ratio axis
+    pub(crate) raw_round: [usize; 3],
     /// last client sub-model each device pushed via ModelSync
     pub(crate) client_params: Vec<Option<Vec<Tensor>>>,
     /// FedAvg weights (shard sizes), filled in at handshake
@@ -165,32 +198,27 @@ pub struct ServerRuntime<C: Compute> {
 }
 
 impl<C: Compute> ServerRuntime<C> {
-    #[allow(clippy::too_many_arguments)]
     pub fn new(
         cfg: ServeConfig,
         compute: C,
         server_init: Vec<Tensor>,
-        up_codecs: Vec<Box<dyn Codec>>,
-        down_codecs: Vec<Box<dyn Codec>>,
-        sync_up_codecs: Vec<Box<dyn Codec>>,
-        sync_down_codecs: Vec<Box<dyn Codec>>,
+        streams: StreamSet,
         test: Arc<Dataset>,
         net: NetworkSim,
     ) -> Result<ServerRuntime<C>, String> {
-        if up_codecs.len() != cfg.devices || down_codecs.len() != cfg.devices {
+        if streams.devices() != cfg.devices {
             return Err(format!(
-                "runtime wants {} up / {} down codecs for {} devices",
-                up_codecs.len(),
-                down_codecs.len(),
+                "runtime got a stream set for {} devices, session has {}",
+                streams.devices(),
                 cfg.devices
             ));
         }
-        if sync_up_codecs.len() != cfg.devices || sync_down_codecs.len() != cfg.devices {
+        if streams.specs() != &cfg.specs {
             return Err(format!(
-                "runtime wants {} / {} sync codecs for {} devices",
-                sync_up_codecs.len(),
-                sync_down_codecs.len(),
-                cfg.devices
+                "runtime stream set was built from a different spec table \
+                 ({} vs {})",
+                streams.specs().table(),
+                cfg.specs.table()
             ));
         }
         let client_params = (0..cfg.devices).map(|_| None).collect();
@@ -198,10 +226,8 @@ impl<C: Compute> ServerRuntime<C> {
             cfg,
             compute,
             server: ServerState::new(server_init),
-            up_codecs,
-            down_codecs,
-            sync_up_codecs,
-            sync_down_codecs,
+            streams,
+            raw_round: [0; 3],
             client_params,
             weights: Vec::new(),
             test,
@@ -209,6 +235,11 @@ impl<C: Compute> ServerRuntime<C> {
             timeline: Timeline::new(),
             metrics: MetricsLog::new(),
         })
+    }
+
+    /// Drain the per-round raw-byte counters ([uplink, downlink, sync]).
+    pub(crate) fn take_round_raw(&mut self) -> [usize; 3] {
+        std::mem::take(&mut self.raw_round)
     }
 
     pub fn devices(&self) -> usize {
@@ -271,8 +302,8 @@ impl<C: Compute> ServerRuntime<C> {
         acc
     }
 
-    /// Stages ii–iii for one device's uplink: decompress, `server_step`,
-    /// update the shared server model, compress the downlink gradients.
+    /// Stages ii–iii for one device's uplink: decode, `server_step`,
+    /// update the shared server model, encode the downlink gradients.
     /// Returns (loss, downlink payload).
     pub(crate) fn step_device(
         &mut self,
@@ -281,7 +312,10 @@ impl<C: Compute> ServerRuntime<C> {
         labels: &[i32],
         payload: &[u8],
     ) -> Result<(f64, Vec<u8>), String> {
-        let acts_hat = self.up_codecs[d].decompress(payload)?;
+        let acts_hat = self.streams.device(d).up.decode(payload).map_err(|e| {
+            format!("round {round}: device {d} uplink stream: {e}")
+        })?;
+        self.raw_round[0] += acts_hat.len() * 4;
         let StepOut { loss, g_acts, new_params } = self.compute.server_step(
             &self.server.server_params,
             &acts_hat,
@@ -293,33 +327,43 @@ impl<C: Compute> ServerRuntime<C> {
         }
         self.server.update(new_params);
         // downlink: every path goes through a codec envelope (the
-        // uncompressed config uses IdentityCodec), so byte accounting is
-        // comparable across configs
+        // uncompressed config uses the identity stream), so byte
+        // accounting is comparable across configs
         let g_ent = if self.cfg.compress_gradients {
             Some(self.compute.entropy(&g_acts)?)
         } else {
             None
         };
         let g_cm = g_acts.to_channel_major();
-        let payload_down =
-            self.down_codecs[d].compress(&g_cm, RoundCtx { entropy: g_ent.as_deref() });
+        self.raw_round[1] += g_cm.data().len() * 4;
+        // the frame owns its payload, so the message path takes the
+        // single-allocation `compress` convenience; the reusable-buffer
+        // `encode` is the primitive underneath (benches/codecs.rs audits
+        // its zero-steady-state-allocation contract)
+        let payload_down = self
+            .streams
+            .device(d)
+            .down
+            .compress(&g_cm, RoundCtx { entropy: g_ent.as_deref() });
         Ok((loss, payload_down))
     }
 
     /// Accept a device's ModelSync push (unpack through its sync stream).
     pub(crate) fn accept_sync(&mut self, d: usize, payload: &[u8]) -> Result<(), String> {
-        let tensors = sync::unpack_params(payload, self.sync_up_codecs[d].as_ref())
-            .map_err(|e| format!("device {d} ModelSync: {e}"))?;
+        let tensors = sync::unpack_params(payload, self.streams.device(d).sync_up.as_mut())
+            .map_err(|e| format!("device {d} sync stream (push): {e}"))?;
         if tensors.is_empty() {
             return Err(format!("device {d}: ModelSync push carried no tensors"));
         }
+        self.raw_round[2] += tensors.iter().map(|t| t.len() * 4).sum::<usize>();
         self.client_params[d] = Some(tensors);
         Ok(())
     }
 
     /// Pack the FedAvg result for device `d`'s downlink sync stream.
     pub(crate) fn pack_broadcast(&mut self, d: usize, params: &[Tensor]) -> Vec<u8> {
-        sync::pack_params(params, self.sync_down_codecs[d].as_mut())
+        self.raw_round[2] += params.iter().map(|t| t.len() * 4).sum::<usize>();
+        sync::pack_params(params, self.streams.device(d).sync_down.as_mut())
     }
 
     /// Weighted FedAvg over `basis` (device-id order preserved for f32
@@ -391,13 +435,19 @@ impl<C: Compute> ServerRuntime<C> {
         }
         let want_fp = super::session_fingerprint(self.cfg.config_fp, self.compute.kind());
         for (d, hello) in hellos.iter().enumerate() {
-            let want = self.up_codecs[d].name();
-            if hello.codec != want {
-                return Err(format!(
-                    "device {d} runs codec '{}', server expects '{want}' — \
-                     launch both sides with the same --codec flags",
-                    hello.codec
-                ));
+            // per-stream spec comparison first: a stream mismatch is
+            // reported by name (with its flag), not as an opaque digest
+            for kind in StreamKind::ALL {
+                let want = self.cfg.specs.get(kind);
+                let got = hello.streams.get(kind);
+                if got != want {
+                    return Err(format!(
+                        "device {d} runs {} stream '{got}', server expects '{want}' — \
+                         launch both sides with the same {} (or --codec) flag",
+                        kind.label(),
+                        kind.flag()
+                    ));
+                }
             }
             if hello.config_fp != want_fp {
                 return Err(format!(
@@ -439,6 +489,7 @@ impl<C: Compute> ServerRuntime<C> {
             })
             .sum();
         let (bytes_up, bytes_down) = self.metrics.total_bytes();
+        let (ratio_up, ratio_down, ratio_sync) = self.metrics.ratio_by_stream();
         crate::log_info!(
             "[{label}] session done: {} rounds, {} payload bytes, {framed} framed bytes",
             outcome.rounds_run,
@@ -452,6 +503,9 @@ impl<C: Compute> ServerRuntime<C> {
             total_bytes_up: bytes_up,
             total_bytes_down: bytes_down,
             total_bytes_sync: self.metrics.total_bytes_sync(),
+            ratio_up,
+            ratio_down,
+            ratio_sync,
             time_to_target_s: outcome.time_to_target_s,
             rounds_run: outcome.rounds_run,
             straggler_events: self.metrics.straggler_events(),
@@ -479,25 +533,12 @@ pub fn mock_runtime(
     test: Arc<Dataset>,
 ) -> Result<ServerRuntime<MockCompute>, String> {
     let channels = compute::MOCK_CUT.0;
-    let mut ups = Vec::with_capacity(cfg.devices);
-    let mut downs = Vec::with_capacity(cfg.devices);
-    let mut sync_ups = Vec::with_capacity(cfg.devices);
-    let mut sync_downs = Vec::with_capacity(cfg.devices);
-    for d in 0..cfg.devices {
-        ups.push(cfg.uplink_codec(channels, d)?);
-        downs.push(cfg.downlink_codec(channels, d)?);
-        sync_ups.push(cfg.sync_uplink_codec(d)?);
-        sync_downs.push(cfg.sync_downlink_codec(d)?);
-    }
     let classes = test.classes;
     ServerRuntime::new(
-        cfg.serve_config(compute::MOCK_BATCH),
+        cfg.serve_config(compute::MOCK_BATCH)?,
         MockCompute::new(classes),
         compute::mock_server_init(),
-        ups,
-        downs,
-        sync_ups,
-        sync_downs,
+        cfg.stream_set(channels)?,
         test,
         cfg.network(),
     )

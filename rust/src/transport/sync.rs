@@ -19,7 +19,7 @@
 //! byte count of the full pack is what `RoundCost::bytes_sync` accounts —
 //! separately from the paper's smashed-data axis.
 
-use crate::codecs::{Codec, RoundCtx};
+use crate::codecs::{Codec, CodecError, RoundCtx};
 use crate::quant::payload::{ByteReader, ByteWriter, MAX_ELEMENTS};
 use crate::tensor::Tensor;
 
@@ -59,18 +59,26 @@ pub fn pack_params(params: &[Tensor], codec: &mut dyn Codec) -> Vec<u8> {
 /// Rebuild the parameter list from a pack. `codec` must be a stream twin
 /// of the packer's (the envelopes are self-describing, so any instance of
 /// the same codec family decodes them).
-pub fn unpack_params(bytes: &[u8], codec: &dyn Codec) -> Result<Vec<Tensor>, String> {
+pub fn unpack_params(bytes: &[u8], codec: &mut dyn Codec) -> Result<Vec<Tensor>, CodecError> {
     let mut r = ByteReader::new(bytes);
     let n = r.u32()? as usize;
     if n > MAX_TENSORS {
-        return Err(format!("sync pack claims {n} tensors (cap {MAX_TENSORS})"));
+        return Err(CodecError::LimitExceeded {
+            what: "sync pack tensors",
+            claimed: n,
+            cap: MAX_TENSORS,
+        });
     }
     let mut shapes = Vec::with_capacity(n);
     let mut total = 0usize;
     for _ in 0..n {
         let rank = r.u8()? as usize;
         if rank > MAX_RANK {
-            return Err(format!("sync tensor rank {rank} exceeds cap {MAX_RANK}"));
+            return Err(CodecError::LimitExceeded {
+                what: "sync tensor rank",
+                claimed: rank,
+                cap: MAX_RANK,
+            });
         }
         let mut dims = Vec::with_capacity(rank);
         for _ in 0..rank {
@@ -79,41 +87,50 @@ pub fn unpack_params(bytes: &[u8], codec: &dyn Codec) -> Result<Vec<Tensor>, Str
         let elems = dims
             .iter()
             .try_fold(1usize, |acc, &d| acc.checked_mul(d))
-            .ok_or("sync tensor dims overflow")?;
+            .ok_or(CodecError::LimitExceeded {
+                what: "sync tensor elements",
+                claimed: usize::MAX,
+                cap: MAX_ELEMENTS,
+            })?;
         if elems > MAX_ELEMENTS {
-            return Err(format!("sync tensor claims {elems} elements (cap {MAX_ELEMENTS})"));
+            return Err(CodecError::LimitExceeded {
+                what: "sync tensor elements",
+                claimed: elems,
+                cap: MAX_ELEMENTS,
+            });
         }
-        total = total
-            .checked_add(elems)
-            .ok_or("sync pack element count overflow")?;
+        total = total.checked_add(elems).ok_or(CodecError::LimitExceeded {
+            what: "sync pack elements",
+            claimed: usize::MAX,
+            cap: MAX_ELEMENTS,
+        })?;
         shapes.push((dims, elems));
     }
     if total > MAX_ELEMENTS {
-        return Err(format!("sync pack claims {total} elements (cap {MAX_ELEMENTS})"));
+        return Err(CodecError::LimitExceeded {
+            what: "sync pack elements",
+            claimed: total,
+            cap: MAX_ELEMENTS,
+        });
     }
     if n == 0 {
-        if r.remaining() != 0 {
-            return Err(format!(
-                "{} bytes of trailing garbage after empty sync pack",
-                r.remaining()
-            ));
-        }
+        r.expect_end()?;
         return Ok(Vec::new());
     }
     let blob_len = r.u32()? as usize;
     if blob_len != r.remaining() {
-        return Err(format!(
+        return Err(CodecError::Malformed(format!(
             "sync pack blob length {blob_len} disagrees with {} remaining bytes",
             r.remaining()
-        ));
+        )));
     }
     let blob = r.bytes(blob_len)?;
-    let flat = codec.decompress(blob)?;
+    let flat = codec.decode(blob)?;
     if flat.len() != total {
-        return Err(format!(
-            "sync pack decompressed to {} elements, shape table wants {total}",
+        return Err(CodecError::Malformed(format!(
+            "sync pack decoded to {} elements, shape table wants {total}",
             flat.len()
-        ));
+        )));
     }
     let data = flat.data();
     let mut out = Vec::with_capacity(n);
@@ -141,9 +158,9 @@ mod tests {
     #[test]
     fn identity_pack_is_lossless() {
         let mut up = by_name("identity", 1, 10, 0).unwrap();
-        let twin = by_name("identity", 1, 10, 0).unwrap();
+        let mut twin = by_name("identity", 1, 10, 0).unwrap();
         let pack = pack_params(&params(), up.as_mut());
-        let back = unpack_params(&pack, twin.as_ref()).unwrap();
+        let back = unpack_params(&pack, twin.as_mut()).unwrap();
         assert_eq!(back, params());
     }
 
@@ -151,7 +168,7 @@ mod tests {
     fn empty_pack_roundtrips() {
         let mut up = by_name("identity", 1, 10, 0).unwrap();
         let pack = pack_params(&[], up.as_mut());
-        let back = unpack_params(&pack, up.as_ref()).unwrap();
+        let back = unpack_params(&pack, up.as_mut()).unwrap();
         assert!(back.is_empty());
     }
 
@@ -162,9 +179,9 @@ mod tests {
             (0..512).map(|i| (i % 17) as f32 * 0.3 - 1.0).collect(),
         )];
         let mut up = by_name("uniform4", 1, 10, 0).unwrap();
-        let twin = by_name("uniform4", 1, 10, 0).unwrap();
+        let mut twin = by_name("uniform4", 1, 10, 0).unwrap();
         let pack = pack_params(&big, up.as_mut());
-        let back = unpack_params(&pack, twin.as_ref()).unwrap();
+        let back = unpack_params(&pack, twin.as_mut()).unwrap();
         assert_eq!(back.len(), 1);
         assert_eq!(back[0].dims(), &[32, 16]);
         // 4-bit quantization: the pack must be well under raw f32
@@ -173,11 +190,11 @@ mod tests {
 
     #[test]
     fn hostile_shape_tables_rejected() {
-        let codec = by_name("identity", 1, 10, 0).unwrap();
+        let mut codec = by_name("identity", 1, 10, 0).unwrap();
         // claims 2^20 tensors
         let mut w = ByteWriter::new();
         w.u32(1 << 20);
-        assert!(unpack_params(&w.finish(), codec.as_ref()).is_err());
+        assert!(unpack_params(&w.finish(), codec.as_mut()).is_err());
         // one tensor claiming terabytes of elements
         let mut w = ByteWriter::new();
         w.u32(1);
@@ -185,12 +202,12 @@ mod tests {
         for _ in 0..4 {
             w.u32(60000);
         }
-        assert!(unpack_params(&w.finish(), codec.as_ref()).is_err());
+        assert!(unpack_params(&w.finish(), codec.as_mut()).is_err());
         // truncated shape table
         let mut w = ByteWriter::new();
         w.u32(2);
         w.u8(1);
-        assert!(unpack_params(&w.finish(), codec.as_ref()).is_err());
+        assert!(unpack_params(&w.finish(), codec.as_mut()).is_err());
         // blob length lies about the remaining bytes
         let mut w = ByteWriter::new();
         w.u32(1);
@@ -198,7 +215,7 @@ mod tests {
         w.u32(2);
         w.u32(9999);
         w.f32(1.0);
-        assert!(unpack_params(&w.finish(), codec.as_ref()).is_err());
+        assert!(unpack_params(&w.finish(), codec.as_mut()).is_err());
     }
 
     #[test]
@@ -215,6 +232,6 @@ mod tests {
         // simplest: take everything after the original 10-byte shape table
         let blob_and_len = &good[4 + 1 + 4..];
         w.bytes(blob_and_len);
-        assert!(unpack_params(&w.finish(), up.as_ref()).is_err());
+        assert!(unpack_params(&w.finish(), up.as_mut()).is_err());
     }
 }

@@ -226,8 +226,11 @@ mod tests {
                 device_id: 0,
                 devices: 1,
                 shard_len: 10,
-                codec: "identity".into(),
                 config_fp: 7,
+                uplink: "identity".into(),
+                downlink: "identity".into(),
+                sync: "identity".into(),
+                streams_fp: 7,
             })
             .unwrap();
             let ack = t.recv().unwrap();

@@ -5,6 +5,7 @@
 
 use slacc::codecs::{self, compression_ratio, Codec, RoundCtx};
 use slacc::entropy::shannon;
+use slacc::quant::payload::Header;
 use slacc::tensor::{Tensor, ChannelMajor};
 use slacc::util::prop::Prop;
 use slacc::util::rng::Pcg32;
@@ -43,7 +44,7 @@ fn every_codec_roundtrips_every_corpus_tensor() {
             let ent = shannon::entropies(&cm);
             let wire = codec.compress(&cm, RoundCtx { entropy: Some(&ent) });
             let rec = codec
-                .decompress(&wire)
+                .decode(&wire)
                 .unwrap_or_else(|e| panic!("{name} tensor {ti}: {e}"));
             assert_eq!(rec.dims(), cm.to_nchw().dims(), "{name} tensor {ti}");
             assert!(
@@ -67,7 +68,7 @@ fn repeated_rounds_keep_state_consistent() {
                 .collect();
             let cm = Tensor::new(vec![2, 8, 4, 4], data).to_channel_major();
             let wire = codec.compress(&cm, RoundCtx::default());
-            let rec = codec.decompress(&wire).unwrap();
+            let rec = codec.decode(&wire).unwrap();
             assert!(rec.data().iter().all(|v| v.is_finite()), "{name} round {round}");
         }
     }
@@ -89,7 +90,7 @@ fn quantizing_codecs_bound_reconstruction_error() {
             for name in ["slacc", "uniform4", "uniform8", "easyquant", "powerquant"] {
                 let mut codec = build(name, c, rng.next_u64());
                 let wire = codec.compress(&cm, RoundCtx::default());
-                let rec = codec.decompress(&wire).map_err(|e| format!("{name}: {e}"))?;
+                let rec = codec.decode(&wire).map_err(|e| format!("{name}: {e}"))?;
                 let orig_cm = orig.to_channel_major();
                 let rec_cm = rec.to_channel_major();
                 for ch in 0..c {
@@ -133,26 +134,78 @@ fn compression_ratios_ordered_sanely() {
     assert!(compression_ratio(&cm, sl) >= 4.0, "slacc ratio too low");
 }
 
+/// Every registered spec the hostile-envelope fuzz drives (base families,
+/// a wrapped spec, and a parameterized selection spec).
+const FUZZ_SPECS: &[&str] = &[
+    "identity", "uniform4", "uniform8", "slacc", "slacc-paper-eq6",
+    "powerquant", "randtopk", "splitfc", "easyquant", "ef:uniform4",
+    "select:std:2",
+];
+
 #[test]
 fn corrupted_payloads_never_panic() {
-    // decompress is exposed to the network; any byte corruption must be a
+    // decode is exposed to the network; any byte corruption must be a
     // clean Err (or a well-formed wrong tensor), never a panic/OOB
     let cm = corpus(11).remove(1);
-    for name in codecs::ALL_CODECS {
+    for name in FUZZ_SPECS {
         let mut codec = build(name, cm.channels, 12);
         let wire = codec.compress(&cm, RoundCtx::default());
-        // truncations
-        for cut in [0usize, 1, 5, wire.len() / 2, wire.len().saturating_sub(1)] {
-            let _ = codec.decompress(&wire[..cut]);
-        }
-        // bit flips in header and body
+        // bit flips anywhere in the body
         let mut rng = Pcg32::seeded(13);
         for _ in 0..50 {
             let mut bad = wire.clone();
             let pos = rng.below(bad.len() as u32) as usize;
             bad[pos] ^= 1 << rng.below(8);
-            let _ = codec.decompress(&bad); // must not panic
+            let _ = codec.decode(&bad); // must not panic
         }
+    }
+}
+
+#[test]
+fn hostile_envelopes_systematically_rejected() {
+    // For every registered codec: every prefix truncation of a valid
+    // envelope, and every bit flip in its payload header, must come back
+    // as a typed CodecError — never a panic, and never an allocation past
+    // the MAX_ELEMENTS guard (the hostile-dims case below would demand
+    // terabytes if any decoder allocated from dims before validating).
+    let cm = corpus(21).remove(0); // (2, 8, 4, 4) activation-like
+    for name in FUZZ_SPECS {
+        let mut codec = build(name, cm.channels, 22);
+        let wire = codec.compress(&cm, RoundCtx::default());
+        codec
+            .decode(&wire)
+            .unwrap_or_else(|e| panic!("{name}: pristine envelope rejected: {e}"));
+
+        // every strict prefix fails cleanly (decoders consume an exact,
+        // self-described byte count and reject both shortfall and surplus)
+        for cut in 0..wire.len() {
+            assert!(
+                codec.decode(&wire[..cut]).is_err(),
+                "{name}: accepted a {cut}-byte prefix of a {}-byte envelope",
+                wire.len()
+            );
+        }
+
+        // every bit flip in the common payload header (magic, codec id,
+        // version, dims)
+        for byte in 0..Header::BYTES {
+            for bit in 0..8 {
+                let mut bad = wire.clone();
+                bad[byte] ^= 1 << bit;
+                assert!(
+                    codec.decode(&bad).is_err(),
+                    "{name}: accepted a header flip at byte {byte} bit {bit}"
+                );
+            }
+        }
+
+        // hostile dims: a header claiming terabytes must be rejected by
+        // the MAX_ELEMENTS guard before any allocation happens
+        let mut bad = wire.clone();
+        for (i, d) in [60000u32, 60000, 60000, 4].into_iter().enumerate() {
+            bad[4 + 4 * i..8 + 4 * i].copy_from_slice(&d.to_le_bytes());
+        }
+        assert!(codec.decode(&bad).is_err(), "{name}: hostile dims accepted");
     }
 }
 

@@ -140,6 +140,105 @@ fn tcp_session_matches_loopback_with_identity_codec() {
     }
 }
 
+/// Acceptance: a mixed-stream session (`--uplink-codec slacc
+/// --downlink-codec uniform8 --sync-codec uniform8`) trains end-to-end
+/// over loopback AND TCP with byte-for-byte parity between the two
+/// transports.
+#[test]
+fn mixed_stream_session_matches_across_transports() {
+    let mut cfg = tiny_cfg("slacc", 3, 3);
+    cfg.uplink_codec = Some("slacc".into());
+    cfg.downlink_codec = Some("uniform8".into());
+    cfg.sync_codec = Some("uniform8".into());
+    let loopback = run_mock_loopback(&cfg).unwrap();
+    let tcp = run_tcp_session(&cfg);
+    assert_eq!(tcp.rounds_run, 3);
+    assert_eq!(tcp.metrics.len(), loopback.metrics.len());
+    for (l, t) in loopback.metrics.records.iter().zip(&tcp.metrics.records) {
+        assert_eq!(l.bytes_up, t.bytes_up, "round {}", l.round);
+        assert_eq!(l.bytes_down, t.bytes_down, "round {}", l.round);
+        assert_eq!(l.bytes_sync, t.bytes_sync, "round {}", l.round);
+        assert_eq!(l.loss, t.loss, "round {}", l.round);
+        assert_eq!(l.accuracy, t.accuracy, "round {}", l.round);
+    }
+    // the mixed table genuinely differs from the all-slacc shorthand run
+    let all_slacc = run_mock_loopback(&tiny_cfg("slacc", 3, 3)).unwrap();
+    assert_eq!(loopback.total_bytes_up, all_slacc.total_bytes_up);
+    assert_ne!(loopback.total_bytes_down, all_slacc.total_bytes_down);
+    assert_ne!(loopback.total_bytes_sync, all_slacc.total_bytes_sync);
+}
+
+/// Per-stream byte accounting: the report carries a compression ratio per
+/// StreamKind, and each behaves as its codec implies (slacc uplink
+/// compresses well; an identity sync stream sits at ~1x after envelope
+/// overhead).
+#[test]
+fn per_stream_ratios_are_reported() {
+    let cfg = tiny_cfg("slacc", 3, 4);
+    let report = run_mock_loopback(&cfg).unwrap();
+    assert!(
+        report.ratio_up > 2.0,
+        "slacc uplink ratio {} too low",
+        report.ratio_up
+    );
+    assert!(
+        report.ratio_down > 2.0,
+        "slacc downlink ratio {} too low",
+        report.ratio_down
+    );
+    // identity sync: raw/wire slightly below 1 (envelope + shape table)
+    assert!(
+        report.ratio_sync > 0.5 && report.ratio_sync <= 1.0,
+        "identity sync ratio {} out of range",
+        report.ratio_sync
+    );
+    for rec in &report.metrics.records {
+        assert!(rec.raw_up > rec.bytes_up, "round {}", rec.round);
+        assert_eq!(rec.ratio_up(), rec.raw_up as f64 / rec.bytes_up as f64);
+    }
+}
+
+/// Acceptance: a per-stream spec disagreement is rejected at the Hello
+/// handshake with an error naming the offending stream.
+#[test]
+fn per_stream_spec_mismatch_rejected_at_hello() {
+    let mut server_cfg = tiny_cfg("slacc", 2, 3);
+    server_cfg.downlink_codec = Some("uniform8".into());
+    let device_cfg = tiny_cfg("slacc", 2, 3); // downlink = slacc shorthand
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handles: Vec<_> = (0..2)
+        .map(|d| {
+            let cfg = device_cfg.clone();
+            let addr = addr.clone();
+            thread::spawn(move || -> Result<(), String> {
+                let (train, _) =
+                    Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+                let mut worker = mock_worker(&cfg, Arc::new(train), d)?;
+                let mut conn =
+                    TcpTransport::connect_retry(&addr, 40, Duration::from_millis(100))?;
+                run_blocking(&mut worker, &mut conn)
+            })
+        })
+        .collect();
+    let (_, test) = Dataset::for_config(
+        &server_cfg.dataset,
+        server_cfg.train_n,
+        server_cfg.test_n,
+        server_cfg.seed,
+    )
+    .unwrap();
+    let mut rt = mock_runtime(&server_cfg, Arc::new(test)).unwrap();
+    let err = accept_and_serve(&mut rt, &listener).unwrap_err();
+    assert!(
+        err.contains("downlink") && err.contains("--downlink-codec"),
+        "error must name the mismatched stream: {err}"
+    );
+    for h in handles {
+        assert!(h.join().unwrap().is_err());
+    }
+}
+
 #[test]
 fn config_mismatch_is_rejected_at_handshake() {
     // same fleet size and codec, but the device runs a different lr —

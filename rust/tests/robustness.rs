@@ -109,10 +109,10 @@ fn payloads_with_hostile_headers_are_rejected() {
         .write(&mut w);
     w.u16(1);
     let bytes = w.finish();
-    let codec = codecs::by_name("slacc", 8, 10, 0).unwrap();
+    let mut codec = codecs::by_name("slacc", 8, 10, 0).unwrap();
     // must return quickly with an error (truncated body), not OOM:
     // group parsing reads bits/channels before any big allocation
-    assert!(codec.decompress(&bytes).is_err());
+    assert!(codec.decode(&bytes).is_err());
 }
 
 #[test]
@@ -121,8 +121,8 @@ fn cross_codec_payloads_rejected_by_id() {
     let mut a = codecs::by_name("uniform4", 4, 10, 0).unwrap();
     let wire = a.compress(&cm, RoundCtx::default());
     for other in ["slacc", "powerquant", "randtopk", "splitfc", "easyquant"] {
-        let c = codecs::by_name(other, 4, 10, 0).unwrap();
-        assert!(c.decompress(&wire).is_err(), "{other} accepted a uniform payload");
+        let mut c = codecs::by_name(other, 4, 10, 0).unwrap();
+        assert!(c.decode(&wire).is_err(), "{other} accepted a uniform payload");
     }
 }
 
@@ -140,7 +140,7 @@ fn ef_wrapped_codecs_build_and_roundtrip() {
         let mut c = codecs::by_name(&name, 8, 20, 2).unwrap();
         for _ in 0..5 {
             let wire = c.compress(&cm, RoundCtx::default());
-            let rec = c.decompress(&wire).unwrap();
+            let rec = c.decode(&wire).unwrap();
             assert!(rec.data().iter().all(|v| v.is_finite()), "{name}");
         }
     }
