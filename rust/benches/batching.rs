@@ -1,0 +1,163 @@
+//! Cross-device batched server compute — dispatch-amortization bench.
+//!
+//!     cargo bench --bench batching            # full sweep
+//!     cargo bench --bench batching -- --smoke # seconds-fast CI smoke
+//!
+//! Fleet sizes × `--batch-window` settings through the real arrival-order
+//! scheduler + server runtime over loopback (engine-free, runs anywhere).
+//! The mock compute burns a modeled PJRT-boundary cost once per
+//! `server_step` *dispatch* — the latency a real engine pays per
+//! `execute()` call — so the wall-clock numbers isolate exactly what
+//! batching amortizes. Batched semantics are the sequential chain, so
+//! every configuration is also checked for bit-identical losses and wire
+//! bytes against its `--batch-window 1` baseline (the mock model is
+//! arrival-order-deterministic at zero delay).
+//!
+//! Results land in `BENCH_batching.json` (committed) via the shared
+//! recorder in `benches/common.rs`, so the repo keeps a perf trajectory.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::{Duration, Instant};
+
+use slacc::bench::Table;
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::coordinator::trainer::TrainReport;
+use slacc::sched::Policy;
+use slacc::transport::server::run_mock_loopback_shimmed;
+use slacc::util::json::Json;
+
+/// Modeled cost of one PJRT-boundary crossing. 200 us is mid-range for a
+/// CPU PJRT dispatch of this model's server_step (see
+/// `benches/microbench.rs` for measured numbers when artifacts exist).
+const DISPATCH_COST: Duration = Duration::from_micros(200);
+
+fn bench_cfg(devices: usize, rounds: usize, window: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for("ham");
+    cfg.devices = devices;
+    cfg.rounds = rounds;
+    cfg.train_n = (devices * 16).max(256);
+    cfg.test_n = 16;
+    cfg.eval_every = rounds.max(1); // one eval at the end
+    cfg.lr = 1e-3;
+    cfg.seed = 3;
+    cfg.codec = CodecChoice::Named("slacc".into());
+    cfg.schedule = Policy::arrival();
+    cfg.batch_window = window;
+    cfg
+}
+
+fn run_session(devices: usize, rounds: usize, window: usize) -> (TrainReport, f64) {
+    let cfg = bench_cfg(devices, rounds, window);
+    let delays = vec![0.0; devices];
+    let t0 = Instant::now();
+    let (report, _) = run_mock_loopback_shimmed(&cfg, &delays, 0, DISPATCH_COST)
+        .unwrap_or_else(|e| panic!("fleet {devices} window {window}: {e}"));
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(report.rounds_run, rounds, "fleet {devices} window {window}");
+    assert!(
+        report.metrics.records.iter().all(|r| r.loss.is_finite()),
+        "fleet {devices} window {window}: non-finite loss"
+    );
+    (report, wall)
+}
+
+/// Bit-level parity of a batched run against its window-1 baseline:
+/// batching must change dispatch count and nothing else.
+fn assert_parity(base: &TrainReport, batched: &TrainReport, devices: usize, window: usize) {
+    assert_eq!(base.metrics.len(), batched.metrics.len());
+    for (a, b) in base.metrics.records.iter().zip(&batched.metrics.records) {
+        let ctx = format!("fleet {devices} window {window} round {}", a.round);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss drift: {ctx}");
+        assert_eq!(a.bytes_up, b.bytes_up, "uplink bytes drift: {ctx}");
+        assert_eq!(a.bytes_down, b.bytes_down, "downlink bytes drift: {ctx}");
+        assert_eq!(a.bytes_sync, b.bytes_sync, "sync bytes drift: {ctx}");
+        assert_eq!(a.accuracy, b.accuracy, "accuracy drift: {ctx}");
+    }
+    assert_eq!(base.server_steps, batched.server_steps);
+}
+
+fn sweep(fleets: &[usize], windows: &[usize], rounds: usize, full: bool) {
+    let mut table = Table::new(
+        "batching: server dispatch amortization (mock fleet, modeled 200us dispatch)",
+        &["devices", "window", "steps", "dispatches", "steps_per_disp", "wall_s", "speedup"],
+    );
+    let mut rec = common::BenchRecorder::new("batching");
+    assert_eq!(windows.first(), Some(&1), "sweep needs the window-1 baseline first");
+    for &devices in fleets {
+        let mut base: Option<(TrainReport, f64)> = None;
+        for &window in windows {
+            let (report, wall) = run_session(devices, rounds, window);
+            if let Some((b, _)) = &base {
+                assert_parity(b, &report, devices, window);
+            } else {
+                assert_eq!(
+                    report.server_dispatches, report.server_steps,
+                    "window 1 must dispatch per device"
+                );
+            }
+            let base_wall = base.as_ref().map_or(wall, |&(_, w)| w);
+            if base.is_none() {
+                base = Some((report.clone(), wall));
+            }
+            if window > 1 {
+                assert!(
+                    report.server_dispatches < report.server_steps,
+                    "fleet {devices} window {window}: batching never amortized a dispatch"
+                );
+            }
+            let speedup = base_wall / wall.max(1e-12);
+            if full && devices >= 16 && window >= 4 {
+                assert!(
+                    speedup > 1.0,
+                    "fleet {devices} window {window}: batched dispatch did not beat \
+                     per-device dispatch ({wall:.4}s vs {base_wall:.4}s)"
+                );
+            }
+            let per_disp =
+                report.server_steps as f64 / report.server_dispatches.max(1) as f64;
+            table.row(vec![
+                devices.to_string(),
+                window.to_string(),
+                report.server_steps.to_string(),
+                report.server_dispatches.to_string(),
+                format!("{per_disp:.2}"),
+                format!("{wall:.4}"),
+                format!("{speedup:.2}"),
+            ]);
+            rec.row(vec![
+                ("devices", Json::Num(devices as f64)),
+                ("window", Json::Num(window as f64)),
+                ("rounds", Json::Num(rounds as f64)),
+                ("server_steps", Json::Num(report.server_steps as f64)),
+                ("server_dispatches", Json::Num(report.server_dispatches as f64)),
+                ("steps_per_dispatch", Json::Num(per_disp)),
+                ("dispatch_cost_us", Json::Num(DISPATCH_COST.as_micros() as f64)),
+                ("wall_s", Json::Num(wall)),
+                ("speedup_vs_window1", Json::Num(speedup)),
+            ]);
+        }
+    }
+    table.finish();
+    if full {
+        // only the full sweep updates the committed perf-trajectory file;
+        // the CI smoke subset must not clobber it with its reduced grid
+        rec.write();
+    } else {
+        println!("[smoke mode: BENCH_batching.json left untouched]");
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("[batching bench: smoke mode]");
+        // CI gate: panics / shape mismatches / parity drift fail the job;
+        // the wall-clock ordering is asserted only in the full sweep
+        // (shared CI runners are too noisy for timing assertions)
+        sweep(&[4, 16], &[1, 4], 2, false);
+    } else {
+        sweep(&[4, 16, 64], &[1, 4, 8], 6, true);
+    }
+}

@@ -147,8 +147,80 @@ fn main() {
             if steady_ok { "zero-alloc" } else { "allocates" }
         );
     }
+    // --- entropy hot path: per-channel entropies into caller scratch ---
+    // `entropies_into` backs ACII on every uplink/downlink tensor; with a
+    // warmed caller-owned buffer its steady state must not allocate at all
+    // (the per-channel kernel fuses min/max into its first pass and never
+    // materializes the softmax).
+    let mut ent_scratch: Vec<f32> = Vec::new();
+    shannon::entropies_into(&cm, &mut ent_scratch);
+    assert_eq!(
+        ent_scratch, ent,
+        "entropies_into diverged from the allocating path"
+    );
+    let a0 = allocs();
+    for _ in 0..iters {
+        shannon::entropies_into(&cm, &mut ent_scratch);
+    }
+    let ent_allocs = (allocs() - a0) as f64 / iters as f64;
+    assert!(
+        ent_allocs == 0.0,
+        "entropies_into: {ent_allocs} allocations per warmed call \
+         (caller-scratch contract broken)"
+    );
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        shannon::entropies_into(&cm, &mut ent_scratch);
+        std::hint::black_box(&ent_scratch);
+    }
+    let ent_mbs = raw_bytes as f64 * iters as f64 / t0.elapsed().as_secs_f64() / 1e6;
     println!(
-        "\nzero-alloc contract held for {:?} ({} iters at {}x{}x{}x{})",
+        "\n{:<16} {:>8} {:>10.1} {:>10} {:>12.1} {:>12}",
+        "entropies_into", c, ent_mbs, "-", ent_allocs, "zero-alloc"
+    );
+
+    // --- sync pack: one payload allocation per pack, scratch reused ---
+    // the FedAvg broadcast loop packs once per device per agg round; with
+    // a warmed SyncScratch the only allocation left is the returned
+    // payload itself (exact-capacity, no growth).
+    let params = vec![
+        slacc::tensor::Tensor::new(vec![c, 16], vec![0.25; c * 16]),
+        slacc::tensor::Tensor::new(vec![c], vec![-0.5; c]),
+    ];
+    let mut sync_codec = codecs::by_name("identity", 1, 1000, 3).unwrap();
+    let mut sync_scratch = slacc::transport::sync::SyncScratch::default();
+    let warm = slacc::transport::sync::pack_params_with(
+        &params,
+        sync_codec.as_mut(),
+        &mut sync_scratch,
+    );
+    let a0 = allocs();
+    for _ in 0..iters {
+        std::hint::black_box(slacc::transport::sync::pack_params_with(
+            &params,
+            sync_codec.as_mut(),
+            &mut sync_scratch,
+        ));
+    }
+    let pack_allocs = (allocs() - a0) as f64 / iters as f64;
+    assert!(
+        pack_allocs <= 1.0,
+        "pack_params_with: {pack_allocs} allocations per warmed pack \
+         (want exactly the returned payload)"
+    );
+    println!(
+        "{:<16} {:>8} {:>10} {:>10} {:>12.1} {:>12}",
+        "sync pack",
+        warm.len(),
+        "-",
+        "-",
+        pack_allocs,
+        "payload-only"
+    );
+
+    println!(
+        "\nzero-alloc contract held for {:?} + entropies_into + sync pack \
+         ({} iters at {}x{}x{}x{})",
         ZERO_ALLOC, iters, b, c, h, w
     );
 }

@@ -88,3 +88,40 @@ pub fn require_artifacts(dataset: &str) {
         std::process::exit(0); // bench "passes" vacuously, like a skip
     }
 }
+
+/// Machine-readable bench results, committed next to the crate so the repo
+/// accumulates a perf trajectory across PRs (unlike the `bench_results/`
+/// sidecars, which are per-run scratch). `write()` emits
+/// `BENCH_<name>.json` in the crate root: `{"bench": ..., "rows": [...]}`
+/// with one flat object per recorded row.
+pub struct BenchRecorder {
+    name: String,
+    rows: Vec<slacc::util::json::Json>,
+}
+
+impl BenchRecorder {
+    pub fn new(name: &str) -> BenchRecorder {
+        BenchRecorder { name: name.to_string(), rows: Vec::new() }
+    }
+
+    /// Record one row of named values.
+    pub fn row(&mut self, fields: Vec<(&str, slacc::util::json::Json)>) {
+        self.rows.push(slacc::util::json::Json::obj(fields));
+    }
+
+    /// Write `BENCH_<name>.json` (cargo bench runs with the crate root as
+    /// CWD) and return its path.
+    pub fn write(self) -> std::path::PathBuf {
+        use slacc::util::json::Json;
+        let path = std::path::PathBuf::from(format!("BENCH_{}.json", self.name));
+        let doc = Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("rows", Json::Arr(self.rows)),
+        ]);
+        std::fs::write(&path, doc.dump()).unwrap_or_else(|e| {
+            panic!("write {}: {e}", path.display());
+        });
+        println!("[saved {}]", path.display());
+        path
+    }
+}

@@ -51,6 +51,8 @@ pub struct SelectionCodec {
     rng: Pcg32,
     /// channels picked by the most recent compress (diagnostics)
     last_selected: Vec<usize>,
+    /// reusable instantaneous-entropy buffer (no allocation once warmed)
+    inst: Vec<f32>,
 }
 
 impl SelectionCodec {
@@ -64,6 +66,7 @@ impl SelectionCodec {
                             AlphaSchedule::Adaptive),
             rng: Pcg32::new(seed, 0x5e1ec7),
             last_selected: Vec::new(),
+            inst: Vec::new(),
         }
     }
 
@@ -83,12 +86,15 @@ impl SelectionCodec {
         let c = data.channels;
         // ACII state advances every round regardless of strategy so the
         // entropy modes stay comparable round-for-round.
-        let inst: Vec<f32> = match ctx.entropy {
-            Some(h) => h.to_vec(),
-            None => shannon::entropies(data),
-        };
-        let hist = self.acii.historical(&inst);
-        let blended = self.acii.update(&inst);
+        match ctx.entropy {
+            Some(h) => {
+                self.inst.clear();
+                self.inst.extend_from_slice(h);
+            }
+            None => shannon::entropies_into(data, &mut self.inst),
+        }
+        let hist = self.acii.historical(&self.inst);
+        let blended = self.acii.update(&self.inst);
 
         match self.strategy {
             Selection::Fixed(ch) => vec![ch.min(c - 1)],
@@ -100,7 +106,7 @@ impl SelectionCodec {
                     (0..c).map(|ch| view::mean_std(data.channel(ch)).1).collect();
                 Self::top_n(&stds, self.n_select)
             }
-            Selection::EntropyInstant => Self::top_n(&inst, self.n_select),
+            Selection::EntropyInstant => Self::top_n(&self.inst, self.n_select),
             Selection::EntropyHistorical => Self::top_n(&hist, self.n_select),
             Selection::EntropyBlended => Self::top_n(&blended, self.n_select),
         }

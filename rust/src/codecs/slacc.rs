@@ -88,6 +88,10 @@ pub struct SlAccCodec {
     /// reusable per-channel quantization scratch (encode hot path)
     codes: Vec<u32>,
     packed: Vec<u8>,
+    /// reusable instantaneous-entropy buffer (ACII input, Eq. 1) — filled
+    /// by `shannon::entropies_into` (host fallback) or copied from the
+    /// kernel output, no allocation once warmed
+    inst: Vec<f32>,
 }
 
 impl SlAccCodec {
@@ -101,6 +105,7 @@ impl SlAccCodec {
             last: None,
             codes: Vec::new(),
             packed: Vec::new(),
+            inst: Vec::new(),
         }
     }
 
@@ -152,11 +157,14 @@ impl Codec for SlAccCodec {
         assert_eq!(c, self.acii.channels(), "codec built for different C");
 
         // --- ACII: blended channel importance (Eqs. 1-3) ---
-        let inst: Vec<f32> = match ctx.entropy {
-            Some(h) => h.to_vec(),
-            None => shannon::entropies(data),
-        };
-        let blended = self.acii.update(&inst);
+        match ctx.entropy {
+            Some(h) => {
+                self.inst.clear();
+                self.inst.extend_from_slice(h);
+            }
+            None => shannon::entropies_into(data, &mut self.inst),
+        }
+        let blended = self.acii.update(&self.inst);
 
         // --- CGC: group by entropy (Eq. 4), bits per group (Eqs. 5-6) ---
         let clustering: Clustering = kmeans_1d(&blended, self.cfg.groups, &mut self.rng);

@@ -96,6 +96,12 @@ pub struct ExperimentConfig {
     /// `--sync-codec`: codec spec for the ModelSync (FedAvg) streams;
     /// None = "identity" (lossless, envelope-wrapped raw f32)
     pub sync_codec: Option<String>,
+    /// `--batch-window`: max same-shaped Activations the server coalesces
+    /// into one `server_step_batch` dispatch (1 = per-device dispatch, the
+    /// historical behavior). Only arrival-order scheduling batches;
+    /// InOrder forces 1. Fingerprinted: a batched engine session's fused
+    /// update changes numerics, so fleets must agree on the window.
+    pub batch_window: usize,
 }
 
 impl ExperimentConfig {
@@ -126,6 +132,7 @@ impl ExperimentConfig {
             compress_gradients: true,
             schedule: Policy::InOrder,
             sync_codec: None,
+            batch_window: 1,
         }
     }
 
@@ -196,6 +203,7 @@ impl ExperimentConfig {
             eval_batch,
             config_fp: self.fingerprint(),
             schedule: self.schedule,
+            batch_window: self.batch_window,
             specs: self.stream_specs()?,
         })
     }
@@ -221,7 +229,7 @@ impl ExperimentConfig {
             .map(|s| s.table())
             .unwrap_or_else(|e| format!("invalid({e})"));
         let repr = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}|{}",
             self.dataset,
             self.seed,
             self.lr.to_bits(),
@@ -241,6 +249,7 @@ impl ExperimentConfig {
             self.slacc.b_max,
             self.alpha,
             self.schedule.label(),
+            self.batch_window,
         );
         crate::codecs::stream::fnv1a(&repr)
     }
@@ -284,6 +293,9 @@ impl ExperimentConfig {
                  downlink is always the identity stream)"
                     .into(),
             );
+        }
+        if self.batch_window == 0 {
+            return Err("batch window must be >= 1".into());
         }
         // parses (and therefore registry-validates) all three stream specs
         self.stream_specs()?;
@@ -346,6 +358,29 @@ mod tests {
         c.compress_gradients = false;
         c.downlink_codec = Some("uniform8".into());
         assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default_for("ham");
+        c.batch_window = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn batch_window_is_fingerprinted_and_projected() {
+        let a = ExperimentConfig::default_for("ham");
+        let mut b = ExperimentConfig::default_for("ham");
+        b.batch_window = 8;
+        b.schedule = Policy::arrival();
+        b.validate().unwrap();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = ExperimentConfig::default_for("ham");
+        c.schedule = Policy::arrival();
+        assert_ne!(
+            b.fingerprint(),
+            c.fingerprint(),
+            "window must be fingerprinted independently of the schedule"
+        );
+        assert_eq!(b.serve_config(32).unwrap().batch_window, 8);
+        assert_eq!(a.serve_config(32).unwrap().batch_window, 1);
     }
 
     #[test]

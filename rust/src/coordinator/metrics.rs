@@ -56,6 +56,12 @@ pub struct TrainReport {
     pub rounds_run: usize,
     /// straggler carry-overs across the session (0 under InOrder)
     pub straggler_events: usize,
+    /// server `server_step` items executed (one per device Activations)
+    pub server_steps: usize,
+    /// compute dispatches those items crossed the PJRT boundary in —
+    /// equal to `server_steps` at `--batch-window 1`, smaller when
+    /// batching amortizes the boundary
+    pub server_dispatches: usize,
 }
 
 /// raw/wire compression ratio; 0 when the stream moved no bytes.

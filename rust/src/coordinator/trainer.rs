@@ -23,6 +23,13 @@
 //! *same* protocol and scheduling code over poll-driven TCP; given the same
 //! config and seed both produce identical per-round wire bytes (under the
 //! default InOrder schedule).
+//!
+//! Stage iii is dispatched through `Compute::server_step_batch`: under
+//! `--schedule arrival --batch-window N` the scheduler coalesces up to N
+//! same-shaped uplinks into one compute-boundary crossing (the report's
+//! `server_dispatches` vs `server_steps` shows the amortization); the
+//! default window of 1 — and InOrder always — is the historical
+//! per-device dispatch, bit-for-bit.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -183,6 +190,12 @@ impl Trainer {
 
     pub fn metrics(&self) -> &MetricsLog {
         self.runtime.metrics()
+    }
+
+    /// (device steps executed, compute dispatches they rode in) so far —
+    /// see [`ServerRuntime::dispatch_stats`].
+    pub fn dispatch_stats(&self) -> (usize, usize) {
+        self.runtime.dispatch_stats()
     }
 
     /// Test accuracy of the current model (device 0's client sub-model +

@@ -49,7 +49,21 @@ pub fn channel_entropy(xs: &[f32]) -> f32 {
 
 /// Per-channel entropies of channel-major rows.
 pub fn entropies(rows: &crate::tensor::ChannelMajor) -> Vec<f32> {
-    (0..rows.channels).map(|c| channel_entropy(rows.channel(c))).collect()
+    let mut out = Vec::with_capacity(rows.channels);
+    entropies_into(rows, &mut out);
+    out
+}
+
+/// [`entropies`] into a caller-owned buffer: `out` is cleared and refilled,
+/// so a warmed buffer makes the steady-state path allocation-free (the
+/// per-channel kernel itself never allocates — min/max are fused into its
+/// first pass, and the exp sums stream in the second; the softmax is never
+/// materialized). Bit-exact with [`channel_entropy`] per channel; the
+/// counting-allocator audit in `benches/codecs.rs` pins the zero-alloc
+/// contract.
+pub fn entropies_into(rows: &crate::tensor::ChannelMajor, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend((0..rows.channels).map(|c| channel_entropy(rows.channel(c))));
 }
 
 #[cfg(test)]
@@ -141,6 +155,25 @@ mod tests {
         assert_eq!(hs.len(), 3);
         for c in 0..3 {
             assert_eq!(hs[c], channel_entropy(cm.channel(c)));
+        }
+    }
+
+    #[test]
+    fn entropies_into_is_bit_exact_and_reusable() {
+        let mut rng = Pcg32::seeded(9);
+        let mut scratch = Vec::new();
+        // reuse ONE buffer across differently-shaped inputs: each call must
+        // clear stale contents and match the allocating path bit for bit
+        for (b, c, hw) in [(2usize, 5usize, 3usize), (4, 2, 4), (1, 8, 2)] {
+            let data: Vec<f32> =
+                (0..b * c * hw * hw).map(|_| rng.next_gaussian()).collect();
+            let cm = Tensor::new(vec![b, c, hw, hw], data).to_channel_major();
+            entropies_into(&cm, &mut scratch);
+            let fresh = entropies(&cm);
+            assert_eq!(scratch.len(), c);
+            for (a, b) in scratch.iter().zip(&fresh) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         }
     }
 }

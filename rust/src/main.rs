@@ -109,6 +109,9 @@ fn print_help() {
            --straggler-timeout S   (arrival) close a round after S seconds\n\
            --min-quorum N          (arrival) devices required to close a\n\
                                    timed-out round [all]\n\
+           --batch-window N        (arrival) max same-shaped Activations\n\
+                                   coalesced into one server_step dispatch\n\
+                                   [1]; inorder always forces 1\n\
            --sync-codec SPEC       codec for ModelSync traffic [identity]\n\
          serve flags (train flags plus):\n\
            --bind ADDR             listen address          [127.0.0.1:7878]\n\
@@ -175,6 +178,7 @@ fn config_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
     if let Some(name) = args.str_opt("sync-codec") {
         cfg.sync_codec = Some(name);
     }
+    cfg.batch_window = args.usize_or("batch-window", cfg.batch_window);
     cfg.uplink_codec = args.str_opt("uplink-codec");
     cfg.downlink_codec = args.str_opt("downlink-codec");
 
@@ -226,6 +230,14 @@ fn print_report(report: &TrainReport, csv: Option<String>) -> Result<(), String>
     );
     if report.straggler_events > 0 {
         println!("straggler events  : {}", report.straggler_events);
+    }
+    if report.server_steps > 0 {
+        println!(
+            "server dispatches : {} for {} device steps ({:.2} steps/dispatch)",
+            report.server_dispatches,
+            report.server_steps,
+            report.server_steps as f64 / report.server_dispatches.max(1) as f64
+        );
     }
     if let Some(t) = report.time_to_target_s {
         println!("time to target    : {t:.1}s");

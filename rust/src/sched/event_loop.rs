@@ -368,7 +368,15 @@ impl Fleet for PollFleet {
                 Some(dl) => {
                     let rem = dl.saturating_duration_since(Instant::now());
                     if rem.is_zero() {
-                        return Ok(None);
+                        // drain whatever already landed on the sockets
+                        // before giving up: the batch planner probes with
+                        // a zero timeout between steps, and frames that
+                        // arrived since the last poll pass should coalesce
+                        // into the current dispatch, not wait for the next
+                        if self.poll_step(0)? == 0 {
+                            return Ok(None);
+                        }
+                        continue;
                     }
                     rem.as_millis().clamp(1, i32::MAX as u128) as i32
                 }

@@ -318,6 +318,31 @@ mod tests {
     }
 
     #[test]
+    fn zero_timeout_drains_ready_but_never_blocks() {
+        // the batch planner's probe: recv_any(Some(0.0)) must hand over
+        // everything already arrived and return None the moment the queue
+        // is quiet, without advancing the virtual clock
+        let (mut dev, mut srv) = fleet_pair(3);
+        for (d, end) in dev.iter_mut().enumerate() {
+            end.send(&Message::RoundOpen { round: d as u32, sync: false }).unwrap();
+        }
+        let mut fleet = PumpFleet::new(&mut srv, |_| Ok(()));
+        for want in 0..3 {
+            let got = fleet.recv_any(Some(0.0)).unwrap();
+            assert_eq!(got.map(|(d, _)| d), Some(want));
+        }
+        assert!(fleet.recv_any(Some(0.0)).unwrap().is_none());
+        assert_eq!(fleet.now_s(), 0.0);
+        // a delayed message is NOT ready at zero timeout
+        dev[1].send(&Message::RoundOpen { round: 9, sync: false }).unwrap();
+        let mut delayed =
+            PumpFleet::with_delays(&mut srv, |_| Ok(()), vec![0.0, 0.5, 0.0], 3);
+        assert!(delayed.recv_any(Some(0.0)).unwrap().is_none());
+        // but an unbounded wait still surfaces it
+        assert_eq!(delayed.recv_any(None).unwrap().map(|(d, _)| d), Some(1));
+    }
+
+    #[test]
     fn recv_from_skips_other_devices() {
         let (mut dev, mut srv) = fleet_pair(2);
         dev[0].send(&Message::RoundOpen { round: 0, sync: false }).unwrap();

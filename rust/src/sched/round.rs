@@ -33,11 +33,12 @@ use std::time::Instant;
 
 use crate::coordinator::metrics::RoundRecord;
 use crate::net::timeline::SchedRecord;
+use crate::quant::payload::{ByteReader, Header};
 use crate::sched::fleet::Fleet;
 use crate::sched::Policy;
 use crate::transport::compute::Compute;
 use crate::transport::proto::Message;
-use crate::transport::server::ServerRuntime;
+use crate::transport::server::{BatchItem, ServerRuntime};
 
 /// Where one device stands in the round protocol.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -55,6 +56,72 @@ enum Phase {
 pub struct SchedOutcome {
     pub rounds_run: usize,
     pub time_to_target_s: Option<f64>,
+}
+
+/// Coalesces arrival-ordered Activations into same-shaped dispatch groups
+/// under the `--batch-window N` policy.
+///
+/// The arrival-order queue naturally runs same-shaped (every device of a
+/// session cuts at one geometry), so the plan usually just counts to the
+/// window; the wire-header dims peek makes it robust to a mixed-geometry
+/// batch anyway — a shape change seals the current group so one
+/// `server_step_batch` dispatch never has to straddle shapes. Envelopes
+/// whose header doesn't parse form their own group and surface the decode
+/// error through the normal `step_batch` path, device and round named.
+pub struct BatchPlan {
+    window: usize,
+    dims: Option<[u32; 4]>,
+    items: Vec<BatchItem>,
+}
+
+impl BatchPlan {
+    pub fn new(window: usize) -> BatchPlan {
+        BatchPlan { window: window.max(1), dims: None, items: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// The payload's claimed geometry, if its envelope header parses.
+    fn peek_dims(payload: &[u8]) -> Option<[u32; 4]> {
+        Header::read(&mut ByteReader::new(payload)).ok().map(|h| h.dims)
+    }
+
+    /// Admit one uplink. Returns a ready group when the incoming item's
+    /// shape seals the current one, or the window fills — the caller
+    /// dispatches it immediately.
+    pub fn push(&mut self, item: BatchItem) -> Option<Vec<BatchItem>> {
+        let dims = Self::peek_dims(&item.payload);
+        let sealed = if !self.items.is_empty() && dims != self.dims {
+            Some(std::mem::take(&mut self.items))
+        } else {
+            None
+        };
+        self.dims = dims;
+        self.items.push(item);
+        if sealed.is_some() {
+            return sealed;
+        }
+        if self.items.len() >= self.window {
+            return Some(std::mem::take(&mut self.items));
+        }
+        None
+    }
+
+    /// Drain whatever is buffered (queue went quiet, or the round is
+    /// closing).
+    pub fn flush(&mut self) -> Option<Vec<BatchItem>> {
+        if self.items.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.items))
+        }
+    }
 }
 
 /// Drives the per-round message flow for one session.
@@ -199,7 +266,14 @@ fn run_in_order<C: Compute>(
                 ));
             }
             up[d] = payload.len();
-            let (loss, payload_down) = rt.step_device(d, round, &labels, &payload)?;
+            // always a single-item batch: InOrder's contract is
+            // message-for-message determinism, which a >1 window would
+            // break (Gradients sends would shift relative to receives)
+            let item = BatchItem { d, round, labels, payload };
+            let (loss, payload_down) = rt
+                .step_batch(std::slice::from_ref(&item))?
+                .pop()
+                .expect("step_batch returns one result per item");
             loss_sum += loss;
             down[d] = payload_down.len();
             fleet.send(d, &Message::Gradients {
@@ -281,7 +355,39 @@ fn run_in_order<C: Compute>(
     Ok(SchedOutcome { rounds_run, time_to_target_s: time_to_target })
 }
 
-/// Arrival-order scheduling with optional straggler timeout + quorum.
+/// Dispatch one ready batch group: step every item in ONE
+/// `server_step_batch` crossing, then send each device's Gradients in
+/// arrival order and give in-process workers their turn — per device,
+/// exactly what the unbatched path did after its step.
+fn flush_group<C: Compute>(
+    rt: &mut ServerRuntime<C>,
+    fleet: &mut dyn Fleet,
+    group: Vec<BatchItem>,
+    down: &mut [usize],
+    loss_sum: &mut f64,
+    steps: &mut usize,
+) -> Result<(), String> {
+    let results = rt.step_batch(&group)?;
+    for (it, (loss, payload_down)) in group.iter().zip(results) {
+        *loss_sum += loss;
+        *steps += 1;
+        down[it.d] += payload_down.len();
+        fleet.send(it.d, &Message::Gradients {
+            round: it.round as u32,
+            device_id: it.d as u32,
+            loss: loss as f32,
+            payload: payload_down,
+        })?;
+        fleet.pump(it.d)?;
+    }
+    Ok(())
+}
+
+/// Arrival-order scheduling with optional straggler timeout + quorum,
+/// coalescing up to `--batch-window` same-shaped Activations per compute
+/// dispatch (a [`BatchPlan`] per round; only what actually arrived is
+/// ever batched, so quorum closes and carried stragglers batch exactly
+/// the devices present).
 fn run_arrival<C: Compute>(
     rt: &mut ServerRuntime<C>,
     fleet: &mut dyn Fleet,
@@ -290,6 +396,7 @@ fn run_arrival<C: Compute>(
 ) -> Result<SchedOutcome, String> {
     let n = rt.cfg.devices;
     let label = rt.cfg.label.clone();
+    let window = rt.cfg.batch_window.max(1);
     let mut phase = vec![Phase::Idle; n];
     let mut time_to_target = None;
     let mut rounds_run = 0;
@@ -313,6 +420,7 @@ fn run_arrival<C: Compute>(
         let mut stale: Vec<usize> = Vec::new();
         let mut loss_sum = 0.0f64;
         let mut steps = 0usize;
+        let mut plan = BatchPlan::new(window);
 
         loop {
             // open the round for devices at a round boundary. Opening is
@@ -361,10 +469,16 @@ fn run_arrival<C: Compute>(
                 .count();
             let worked = participants.len() + stale.len();
             if outstanding == 0 && worked > 0 {
+                // a non-full batch can still be pending here (its devices
+                // reached Idle at receive time): dispatch it before the
+                // round closes
+                if let Some(group) = plan.flush() {
+                    flush_group(rt, fleet, group, &mut down, &mut loss_sum, &mut steps)?;
+                }
                 break;
             }
             // timeout close: deadline passed with a quorum of this round's
-            // Activations processed (a round with zero server steps would
+            // Activations delivered (a round with zero server steps would
             // be meaningless, hence `worked > 0`). `rem` is computed once
             // per iteration so the close test and the recv timeout agree
             // at the float boundary.
@@ -374,6 +488,11 @@ fn run_arrival<C: Compute>(
                     let rem = open_s + t - fleet.now_s();
                     if rem <= 0.0 {
                         if worked > 0 && participants.len() >= required {
+                            if let Some(group) = plan.flush() {
+                                flush_group(
+                                    rt, fleet, group, &mut down, &mut loss_sum, &mut steps,
+                                )?;
+                            }
                             break;
                         }
                         // past the deadline but below quorum: wait unbounded
@@ -383,8 +502,20 @@ fn run_arrival<C: Compute>(
                 }
                 // nobody opened yet: block until carried work frees someone
             }
-            let Some((d, msg)) = fleet.recv_any(timeout_arg)? else {
-                continue; // timeout expired; re-evaluate the close conditions
+            // with a batch pending, never block: take only what has
+            // already arrived (zero timeout) and dispatch the batch the
+            // moment the queue goes quiet — opportunistic coalescing that
+            // cannot deadlock on devices waiting for their Gradients
+            let received = if plan.is_empty() {
+                fleet.recv_any(timeout_arg)?
+            } else {
+                fleet.recv_any(Some(0.0))?
+            };
+            let Some((d, msg)) = received else {
+                if let Some(group) = plan.flush() {
+                    flush_group(rt, fleet, group, &mut down, &mut loss_sum, &mut steps)?;
+                }
+                continue; // re-evaluate the close conditions
             };
             match msg {
                 Message::Activations { round: r2, device_id, labels, payload } => {
@@ -408,18 +539,6 @@ fn run_arrival<C: Compute>(
                         ));
                     }
                     up[d] += payload.len();
-                    let (loss, payload_down) =
-                        rt.step_device(d, oround, &labels, &payload)?;
-                    loss_sum += loss;
-                    steps += 1;
-                    down[d] += payload_down.len();
-                    fleet.send(d, &Message::Gradients {
-                        round: oround as u32,
-                        device_id: d as u32,
-                        loss: loss as f32,
-                        payload: payload_down,
-                    })?;
-                    fleet.pump(d)?;
                     active[d] = true;
                     wait_s[d] = fleet.now_s() - opened_at;
                     if oround == round {
@@ -432,11 +551,19 @@ fn run_arrival<C: Compute>(
                             wait_s[d]
                         );
                     }
+                    // the device's protocol position advances at receive
+                    // time (its Activations are consumed; it owes a sync
+                    // push after Gradients, or nothing) — the compute and
+                    // the Gradients send ride the batch dispatch
                     phase[d] = if osync {
                         Phase::AwaitSync { round: oround }
                     } else {
                         Phase::Idle
                     };
+                    let item = BatchItem { d, round: oround, labels, payload };
+                    if let Some(group) = plan.push(item) {
+                        flush_group(rt, fleet, group, &mut down, &mut loss_sum, &mut steps)?;
+                    }
                 }
                 Message::ModelSync { round: r2, device_id, payload } => {
                     if device_id as usize != d {
@@ -553,4 +680,70 @@ fn run_arrival<C: Compute>(
         }
     }
     Ok(SchedOutcome { rounds_run, time_to_target_s: time_to_target })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::payload::ByteWriter;
+
+    fn payload_with_dims(dims: [u32; 4]) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        Header { codec_id: 0, dims }.write(&mut w);
+        w.finish()
+    }
+
+    fn item(d: usize, dims: [u32; 4]) -> BatchItem {
+        BatchItem { d, round: 0, labels: vec![0], payload: payload_with_dims(dims) }
+    }
+
+    #[test]
+    fn window_one_flushes_every_push() {
+        let mut plan = BatchPlan::new(1);
+        for d in 0..3 {
+            let group = plan.push(item(d, [8, 4, 2, 2])).expect("window 1 = immediate");
+            assert_eq!(group.len(), 1);
+            assert_eq!(group[0].d, d);
+            assert!(plan.is_empty());
+        }
+        assert!(plan.flush().is_none());
+    }
+
+    #[test]
+    fn window_fills_then_flushes_in_arrival_order() {
+        let mut plan = BatchPlan::new(3);
+        assert!(plan.push(item(2, [8, 4, 2, 2])).is_none());
+        assert!(plan.push(item(0, [8, 4, 2, 2])).is_none());
+        assert_eq!(plan.len(), 2);
+        let group = plan.push(item(1, [8, 4, 2, 2])).expect("window reached");
+        assert_eq!(group.iter().map(|i| i.d).collect::<Vec<_>>(), vec![2, 0, 1]);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn shape_change_seals_the_current_group() {
+        let mut plan = BatchPlan::new(8);
+        assert!(plan.push(item(0, [8, 4, 2, 2])).is_none());
+        assert!(plan.push(item(1, [8, 4, 2, 2])).is_none());
+        // a differently-shaped uplink must not ride the same dispatch
+        let sealed = plan.push(item(2, [4, 4, 2, 2])).expect("shape change seals");
+        assert_eq!(sealed.iter().map(|i| i.d).collect::<Vec<_>>(), vec![0, 1]);
+        // the odd one out is buffered, not lost
+        let rest = plan.flush().expect("new-shape item buffered");
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].d, 2);
+    }
+
+    #[test]
+    fn unparseable_payloads_form_their_own_group() {
+        let mut plan = BatchPlan::new(8);
+        assert!(plan.push(item(0, [8, 4, 2, 2])).is_none());
+        let garbage =
+            BatchItem { d: 1, round: 0, labels: vec![0], payload: vec![1, 2, 3] };
+        let sealed = plan.push(garbage).expect("garbage seals the shaped group");
+        assert_eq!(sealed.len(), 1);
+        assert_eq!(sealed[0].d, 0);
+        let rest = plan.flush().unwrap();
+        assert_eq!(rest[0].d, 1, "the garbage item surfaces for decode-error reporting");
+    }
 }

@@ -143,6 +143,13 @@ impl ChannelMajor {
         &self.data
     }
 
+    /// Consume the view, returning the raw (C, N) buffer. Lets callers
+    /// that built the view from a reusable scratch buffer (via
+    /// [`ChannelMajor::from_rows`]) take the allocation back afterwards.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
     /// Relayout back to NCHW.
     pub fn to_nchw(&self) -> Tensor {
         let (b, c, hw) = (self.batch, self.channels, self.height * self.width);

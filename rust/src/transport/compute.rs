@@ -16,6 +16,7 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::time::{Duration, Instant};
 
 use crate::runtime::{Arg, Engine};
 use crate::tensor::Tensor;
@@ -61,6 +62,29 @@ pub trait Compute {
         lr: f32,
     ) -> Result<StepOut, String>;
 
+    /// Stage iii for a *batch* of devices' smashed data in one dispatch.
+    ///
+    /// Semantics are the sequential chain: item `i` steps from item
+    /// `i-1`'s updated parameters, exactly as `acts.len()` back-to-back
+    /// [`Compute::server_step`] calls would. The default implementation is
+    /// literally that chain; backends override it to amortize their
+    /// per-dispatch overhead (the whole point of `--batch-window`).
+    ///
+    /// A backend that performs one *fused* parameter update for the batch
+    /// (the stacked engine path) may leave `new_params` empty on all but
+    /// the final [`StepOut`]; callers must apply the **last non-empty**
+    /// `new_params`. [`MockCompute`] always fills the full chain, which is
+    /// what the batched-vs-sequential equivalence tests pin down.
+    fn server_step_batch(
+        &mut self,
+        params: &[Tensor],
+        acts: &[&Tensor],
+        ys: &[&[i32]],
+        lr: f32,
+    ) -> Result<Vec<StepOut>, String> {
+        sequential_step_chain(self, params, acts, ys, lr)
+    }
+
     /// Per-channel ACII entropy of a smashed-data tensor.
     fn entropy(&mut self, t: &Tensor) -> Result<Vec<f32>, String>;
 
@@ -92,6 +116,70 @@ impl EngineCompute {
 
 fn param_args(params: &[Tensor]) -> Vec<Arg<'_>> {
     params.iter().map(|t| Arg::F32(t.data(), t.dims())).collect()
+}
+
+/// The one definition of the chain itself, parameterized over how a
+/// single step runs: item `i` borrows item `i-1`'s `new_params` straight
+/// out of the output list (no cloning — the old per-device path never
+/// copied the server model, and neither does this).
+fn chain_steps<F>(
+    params: &[Tensor],
+    acts: &[&Tensor],
+    ys: &[&[i32]],
+    lr: f32,
+    mut step: F,
+) -> Result<Vec<StepOut>, String>
+where
+    F: FnMut(&[Tensor], &Tensor, &[i32], f32) -> Result<StepOut, String>,
+{
+    if acts.len() != ys.len() {
+        return Err(format!(
+            "server_step_batch: {} activation tensors for {} label sets",
+            acts.len(),
+            ys.len()
+        ));
+    }
+    let mut out: Vec<StepOut> = Vec::with_capacity(acts.len());
+    for (&a, &y) in acts.iter().zip(ys) {
+        let p = out.last().map(|o| o.new_params.as_slice()).unwrap_or(params);
+        let s = step(p, a, y, lr)?;
+        out.push(s);
+    }
+    Ok(out)
+}
+
+/// The reference batched semantics: `acts.len()` back-to-back
+/// [`Compute::server_step`] calls, item `i` starting from item `i-1`'s
+/// updated parameters. The trait default, the engine fallbacks, and (via
+/// [`chain_steps`]) the mock's amortized path all route through this one
+/// chain, so "batched == sequential" is true by construction wherever it
+/// is used.
+pub fn sequential_step_chain<C: Compute + ?Sized>(
+    compute: &mut C,
+    params: &[Tensor],
+    acts: &[&Tensor],
+    ys: &[&[i32]],
+    lr: f32,
+) -> Result<Vec<StepOut>, String> {
+    chain_steps(params, acts, ys, lr, |p, a, y, l| compute.server_step(p, a, y, l))
+}
+
+/// Name of the AOT artifact that can serve a stacked `[B_total, C, H, W]`
+/// server step in one dispatch, if the manifest compiled one for exactly
+/// that geometry. Artifacts are shape-specialized, so this is a strict
+/// dims check against the acts input slot (position `n_params`), probing a
+/// dedicated wide `server_step_batch` artifact first and the plain
+/// `server_step` second (it matches when the stacked batch happens to
+/// equal its compiled batch, i.e. a batch of one).
+fn stacked_artifact(engine: &Engine, n_params: usize, dims: &[usize]) -> Option<&'static str> {
+    for name in ["server_step_batch", "server_step"] {
+        if let Ok(spec) = engine.manifest().artifact(name) {
+            if spec.inputs.get(n_params).is_some_and(|io| io.dims == dims) {
+                return Some(name);
+            }
+        }
+    }
+    None
 }
 
 impl Compute for EngineCompute {
@@ -148,6 +236,93 @@ impl Compute for EngineCompute {
         Ok(StepOut { loss, g_acts, new_params })
     }
 
+    /// Real stacked-tensor execution: when the manifest carries an
+    /// artifact compiled for the concatenated `[B_total, C, H, W]` batch,
+    /// the whole group crosses the PJRT boundary in ONE dispatch (one
+    /// fused forward/backward/update; `new_params` lands on the final
+    /// [`StepOut`] only). Artifacts are shape-specialized, so any batch
+    /// the compiled geometry cannot serve falls back to the exact
+    /// sequential chain — correctness never depends on which path ran.
+    fn server_step_batch(
+        &mut self,
+        params: &[Tensor],
+        acts: &[&Tensor],
+        ys: &[&[i32]],
+        lr: f32,
+    ) -> Result<Vec<StepOut>, String> {
+        if acts.len() != ys.len() {
+            return Err(format!(
+                "server_step_batch: {} activation tensors for {} label sets",
+                acts.len(),
+                ys.len()
+            ));
+        }
+        if acts.len() <= 1 {
+            return sequential_step_chain(self, params, acts, ys, lr);
+        }
+        let d0 = acts[0].dims().to_vec();
+        let same_shape = d0.len() == 4
+            && acts
+                .iter()
+                .all(|a| a.dims().len() == 4 && a.dims()[1..] == d0[1..]);
+        if !same_shape {
+            return sequential_step_chain(self, params, acts, ys, lr);
+        }
+        let b_total: usize = acts.iter().map(|a| a.dims()[0]).sum();
+        let stacked_dims = vec![b_total, d0[1], d0[2], d0[3]];
+        let artifact = {
+            let eng = self.engine.borrow();
+            stacked_artifact(&eng, params.len(), &stacked_dims)
+        };
+        let Some(name) = artifact else {
+            return sequential_step_chain(self, params, acts, ys, lr);
+        };
+
+        let mut flat: Vec<f32> = Vec::with_capacity(b_total * d0[1] * d0[2] * d0[3]);
+        for a in acts {
+            flat.extend_from_slice(a.data());
+        }
+        let mut labels: Vec<i32> =
+            Vec::with_capacity(ys.iter().map(|y| y.len()).sum());
+        for y in ys {
+            labels.extend_from_slice(y);
+        }
+        let y_dims = [labels.len()];
+        let mut args = param_args(params);
+        args.push(Arg::F32(&flat, &stacked_dims));
+        args.push(Arg::I32(&labels, &y_dims));
+        args.push(Arg::ScalarF32(lr));
+        let mut out = self.engine.borrow_mut().execute(name, &args)?;
+        if out.len() < 2 {
+            return Err(format!("{name} returned {} outputs, need >= 2", out.len()));
+        }
+        let mut new_params = out.split_off(2);
+        let g_stacked = out.pop().unwrap();
+        let loss = out.pop().unwrap().data()[0] as f64;
+        if g_stacked.len() != flat.len() {
+            return Err(format!(
+                "{name}: stacked gradient has {} elements, batch sent {}",
+                g_stacked.len(),
+                flat.len()
+            ));
+        }
+        let g = g_stacked.data();
+        let mut outs = Vec::with_capacity(acts.len());
+        let mut off = 0usize;
+        for (i, a) in acts.iter().enumerate() {
+            let n = a.len();
+            let g_acts = Tensor::new(a.dims().to_vec(), g[off..off + n].to_vec());
+            off += n;
+            let np = if i + 1 == acts.len() {
+                std::mem::take(&mut new_params)
+            } else {
+                Vec::new()
+            };
+            outs.push(StepOut { loss, g_acts, new_params: np });
+        }
+        Ok(outs)
+    }
+
     fn entropy(&mut self, t: &Tensor) -> Result<Vec<f32>, String> {
         if self.entropy_via_kernel {
             let out = self
@@ -199,12 +374,65 @@ pub fn mock_server_init() -> Vec<Tensor> {
 /// bit-identical activations, gradients, and therefore wire bytes.
 pub struct MockCompute {
     classes: usize,
+    /// modeled cost of one PJRT-boundary crossing, burned once per
+    /// `server_step` *dispatch* (so a batched dispatch pays it once).
+    /// Zero by default — tests and parity checks are unaffected;
+    /// `benches/batching.rs` sets it to a PJRT-representative latency to
+    /// measure what `--batch-window` amortizes.
+    dispatch_cost: Duration,
 }
 
 impl MockCompute {
     pub fn new(classes: usize) -> MockCompute {
         assert!(classes >= 1);
-        MockCompute { classes }
+        MockCompute { classes, dispatch_cost: Duration::ZERO }
+    }
+
+    /// Set the modeled per-dispatch boundary cost (see the field docs).
+    pub fn set_dispatch_cost(&mut self, cost: Duration) {
+        self.dispatch_cost = cost;
+    }
+
+    /// Busy-wait for the modeled dispatch latency (spin, not sleep: the
+    /// interesting costs are in the tens-to-hundreds of microseconds,
+    /// well under scheduler sleep granularity).
+    fn burn_dispatch(&self) {
+        if self.dispatch_cost.is_zero() {
+            return;
+        }
+        let t0 = Instant::now();
+        while t0.elapsed() < self.dispatch_cost {
+            std::hint::spin_loop();
+        }
+    }
+
+    /// One server step's math, shared verbatim by the single and batched
+    /// entry points so `server_step_batch` is bit-for-bit the sequential
+    /// chain.
+    fn step_once(
+        &self,
+        params: &[Tensor],
+        acts: &Tensor,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<StepOut, String> {
+        if y.is_empty() {
+            return Err("mock server_step: empty labels".into());
+        }
+        let m2 = acts.data().iter().map(|&v| (v * v) as f64).sum::<f64>()
+            / acts.len().max(1) as f64;
+        let loss = m2 + 0.01 * params.first().map(|t| t.data()[0].abs() as f64).unwrap_or(0.0);
+        let g_data: Vec<f32> = acts.data().iter().map(|&v| 0.3 * v - 0.01).collect();
+        let g_acts = Tensor::new(acts.dims().to_vec(), g_data);
+        let step = lr * loss as f32;
+        let new_params = params
+            .iter()
+            .map(|t| {
+                let data = t.data().iter().map(|&v| v - step * 0.1).collect();
+                Tensor::new(t.dims().to_vec(), data)
+            })
+            .collect();
+        Ok(StepOut { loss, g_acts, new_params })
     }
 }
 
@@ -274,23 +502,23 @@ impl Compute for MockCompute {
         y: &[i32],
         lr: f32,
     ) -> Result<StepOut, String> {
-        if y.is_empty() {
-            return Err("mock server_step: empty labels".into());
-        }
-        let m2 = acts.data().iter().map(|&v| (v * v) as f64).sum::<f64>()
-            / acts.len().max(1) as f64;
-        let loss = m2 + 0.01 * params.first().map(|t| t.data()[0].abs() as f64).unwrap_or(0.0);
-        let g_data: Vec<f32> = acts.data().iter().map(|&v| 0.3 * v - 0.01).collect();
-        let g_acts = Tensor::new(acts.dims().to_vec(), g_data);
-        let step = lr * loss as f32;
-        let new_params = params
-            .iter()
-            .map(|t| {
-                let data = t.data().iter().map(|&v| v - step * 0.1).collect();
-                Tensor::new(t.dims().to_vec(), data)
-            })
-            .collect();
-        Ok(StepOut { loss, g_acts, new_params })
+        self.burn_dispatch();
+        self.step_once(params, acts, y, lr)
+    }
+
+    /// Exact per-item semantics (the shared [`chain_steps`] chain over the
+    /// same `step_once` the single path uses) with the modeled
+    /// PJRT-boundary cost paid ONCE for the whole batch — what a real
+    /// stacked dispatch amortizes, measurable without an engine.
+    fn server_step_batch(
+        &mut self,
+        params: &[Tensor],
+        acts: &[&Tensor],
+        ys: &[&[i32]],
+        lr: f32,
+    ) -> Result<Vec<StepOut>, String> {
+        self.burn_dispatch();
+        chain_steps(params, acts, ys, lr, |p, a, y, l| self.step_once(p, a, y, l))
     }
 
     fn entropy(&mut self, t: &Tensor) -> Result<Vec<f32>, String> {
@@ -351,5 +579,64 @@ mod tests {
             .eval_logits(&params, &mock_server_init(), &x, &dims)
             .unwrap();
         assert_eq!(logits.dims(), &[2, 7]);
+    }
+
+    /// The tentpole contract: one batched dispatch == the sequential
+    /// chain, bit for bit (losses, gradients, and the parameter chain).
+    #[test]
+    fn mock_batch_step_is_bitwise_sequential() {
+        let mut m = MockCompute::new(7);
+        let cparams = mock_client_init();
+        let dims = [2usize, 3, 5, 5];
+        let acts: Vec<Tensor> = (0..4)
+            .map(|i| {
+                let x: Vec<f32> = (0..2 * 3 * 5 * 5)
+                    .map(|j| ((i * 7 + j) % 13) as f32 * 0.1)
+                    .collect();
+                m.client_fwd(&cparams, &x, &dims).unwrap()
+            })
+            .collect();
+        let ys: Vec<Vec<i32>> = (0..4).map(|i| vec![i as i32, (i + 1) as i32]).collect();
+
+        // sequential reference: thread new_params through by hand
+        let mut seq = Vec::new();
+        let mut params = mock_server_init();
+        for (a, y) in acts.iter().zip(&ys) {
+            let out = m.server_step(&params, a, y, 1e-2).unwrap();
+            params = out.new_params.clone();
+            seq.push(out);
+        }
+
+        let act_refs: Vec<&Tensor> = acts.iter().collect();
+        let y_refs: Vec<&[i32]> = ys.iter().map(|y| y.as_slice()).collect();
+        let batched = m
+            .server_step_batch(&mock_server_init(), &act_refs, &y_refs, 1e-2)
+            .unwrap();
+        assert_eq!(batched.len(), seq.len());
+        for (b, s) in batched.iter().zip(&seq) {
+            assert_eq!(b.loss.to_bits(), s.loss.to_bits());
+            assert_eq!(b.g_acts, s.g_acts);
+            assert_eq!(b.new_params, s.new_params);
+        }
+        // a dispatch cost must not change a single bit
+        let mut costed = MockCompute::new(7);
+        costed.set_dispatch_cost(std::time::Duration::from_micros(50));
+        let again = costed
+            .server_step_batch(&mock_server_init(), &act_refs, &y_refs, 1e-2)
+            .unwrap();
+        for (b, s) in again.iter().zip(&seq) {
+            assert_eq!(b.loss.to_bits(), s.loss.to_bits());
+            assert_eq!(b.g_acts, s.g_acts);
+        }
+    }
+
+    #[test]
+    fn batch_rejects_mismatched_lengths() {
+        let mut m = MockCompute::new(3);
+        let a = Tensor::new(vec![1, 1, 1, 2], vec![1.0, 2.0]);
+        let y: &[i32] = &[0];
+        assert!(m
+            .server_step_batch(&mock_server_init(), &[&a, &a], &[y], 1e-2)
+            .is_err());
     }
 }

@@ -43,6 +43,9 @@ pub struct DeviceWorker<C: Compute> {
     session_fp: u64,
     /// the negotiated per-stream spec table (declared in the Hello)
     specs: StreamSpecs,
+    /// reusable flatten/envelope scratch for the ModelSync pushes (one
+    /// allocation per push — the frame-owned payload)
+    sync_scratch: sync::SyncScratch,
     pending: Option<Pending>,
     done: bool,
 }
@@ -65,6 +68,7 @@ impl<C: Compute> DeviceWorker<C> {
             lr: cfg.lr,
             session_fp,
             specs,
+            sync_scratch: sync::SyncScratch::default(),
             pending: None,
             done: false,
         })
@@ -177,9 +181,10 @@ impl<C: Compute> DeviceWorker<C> {
                 )?;
                 self.state.client_params = new_params;
                 if pending.sync {
-                    let payload = sync::pack_params(
+                    let payload = sync::pack_params_with(
                         &self.state.client_params,
                         self.state.streams.sync_up.as_mut(),
+                        &mut self.sync_scratch,
                     );
                     Ok(vec![Message::ModelSync {
                         round,

@@ -31,6 +31,7 @@ use crate::coordinator::server::ServerState;
 use crate::data::Dataset;
 use crate::net::timeline::{SchedRecord, Timeline};
 use crate::net::NetworkSim;
+use crate::quant::payload::ByteWriter;
 use crate::sched::fleet::{Fleet, PumpFleet};
 use crate::sched::round::RoundScheduler;
 use crate::sched::Policy;
@@ -60,6 +61,10 @@ pub struct ServeConfig {
     pub config_fp: u64,
     /// round-scheduling policy (see [`crate::sched::Policy`])
     pub schedule: Policy,
+    /// `--batch-window`: max same-shaped Activations coalesced into one
+    /// `server_step_batch` dispatch (arrival-order scheduling only;
+    /// InOrder forces 1 to stay message-for-message deterministic)
+    pub batch_window: usize,
     /// the negotiated per-stream codec spec table; devices must present
     /// an identical table in their Hello (mismatches are rejected naming
     /// the offending stream)
@@ -195,6 +200,29 @@ pub struct ServerRuntime<C: Compute> {
     pub(crate) net: NetworkSim,
     pub(crate) timeline: Timeline,
     pub(crate) metrics: MetricsLog,
+    /// one downlink-encode scratch shared across a batch's devices (the
+    /// frame still owns its payload; this kills the per-device buffer
+    /// growth the old fresh-`ByteWriter`-per-device path paid)
+    down_scratch: ByteWriter,
+    /// flatten + envelope scratch for the sync broadcast loop
+    sync_scratch: sync::SyncScratch,
+    /// total `server_step` items executed (one per device Activations)
+    server_steps: usize,
+    /// total `server_step_batch` dispatches those items crossed the
+    /// compute boundary in — the amortization numerator
+    server_dispatches: usize,
+}
+
+/// One device's uplink contribution awaiting the next batched dispatch:
+/// everything [`ServerRuntime::step_batch`] needs to run stages ii–iii
+/// for that device.
+pub struct BatchItem {
+    pub d: usize,
+    /// the round this Activations frame belongs to (a carried straggler's
+    /// stale round can ride in the same batch as current-round items)
+    pub round: usize,
+    pub labels: Vec<i32>,
+    pub payload: Vec<u8>,
 }
 
 impl<C: Compute> ServerRuntime<C> {
@@ -221,6 +249,9 @@ impl<C: Compute> ServerRuntime<C> {
                 cfg.specs.table()
             ));
         }
+        if cfg.batch_window == 0 {
+            return Err("batch window must be >= 1".into());
+        }
         let client_params = (0..cfg.devices).map(|_| None).collect();
         Ok(ServerRuntime {
             cfg,
@@ -234,6 +265,10 @@ impl<C: Compute> ServerRuntime<C> {
             net,
             timeline: Timeline::new(),
             metrics: MetricsLog::new(),
+            down_scratch: ByteWriter::new(),
+            sync_scratch: sync::SyncScratch::default(),
+            server_steps: 0,
+            server_dispatches: 0,
         })
     }
 
@@ -302,50 +337,105 @@ impl<C: Compute> ServerRuntime<C> {
         acc
     }
 
-    /// Stages ii–iii for one device's uplink: decode, `server_step`,
-    /// update the shared server model, encode the downlink gradients.
-    /// Returns (loss, downlink payload).
-    pub(crate) fn step_device(
+    /// Stages ii–iii for a batch of device uplinks: per device decode,
+    /// then ONE `server_step_batch` dispatch per same-shaped run (the
+    /// PJRT-boundary amortization `--batch-window` exists for), then per
+    /// device entropy + downlink encode. Returns per-item
+    /// `(loss, downlink payload)` in input order. A single-item slice is
+    /// exactly the old `step_device`.
+    pub(crate) fn step_batch(
         &mut self,
-        d: usize,
-        round: usize,
-        labels: &[i32],
-        payload: &[u8],
-    ) -> Result<(f64, Vec<u8>), String> {
-        let acts_hat = self.streams.device(d).up.decode(payload).map_err(|e| {
-            format!("round {round}: device {d} uplink stream: {e}")
-        })?;
-        self.raw_round[0] += acts_hat.len() * 4;
-        let StepOut { loss, g_acts, new_params } = self.compute.server_step(
-            &self.server.server_params,
-            &acts_hat,
-            labels,
-            self.cfg.lr,
-        )?;
-        if !loss.is_finite() {
-            return Err(format!("round {round} device {d}: loss diverged ({loss})"));
+        items: &[BatchItem],
+    ) -> Result<Vec<(f64, Vec<u8>)>, String> {
+        // stage ii (server half): decode every uplink envelope through its
+        // device's stream — per-device state, inherently per-item work
+        let mut acts: Vec<Tensor> = Vec::with_capacity(items.len());
+        for it in items {
+            let acts_hat = self.streams.device(it.d).up.decode(&it.payload).map_err(|e| {
+                format!("round {}: device {} uplink stream: {e}", it.round, it.d)
+            })?;
+            self.raw_round[0] += acts_hat.len() * 4;
+            acts.push(acts_hat);
         }
-        self.server.update(new_params);
-        // downlink: every path goes through a codec envelope (the
-        // uncompressed config uses the identity stream), so byte
-        // accounting is comparable across configs
-        let g_ent = if self.cfg.compress_gradients {
-            Some(self.compute.entropy(&g_acts)?)
-        } else {
-            None
-        };
-        let g_cm = g_acts.to_channel_major();
-        self.raw_round[1] += g_cm.data().len() * 4;
-        // the frame owns its payload, so the message path takes the
-        // single-allocation `compress` convenience; the reusable-buffer
-        // `encode` is the primitive underneath (benches/codecs.rs audits
-        // its zero-steady-state-allocation contract)
-        let payload_down = self
-            .streams
-            .device(d)
-            .down
-            .compress(&g_cm, RoundCtx { entropy: g_ent.as_deref() });
-        Ok((loss, payload_down))
+
+        let mut results: Vec<(f64, Vec<u8>)> = Vec::with_capacity(items.len());
+        let mut i = 0usize;
+        while i < items.len() {
+            // one dispatch per run of same-shaped activations (the batch
+            // planner already groups by wire-header dims; this re-check
+            // costs nothing and keeps step_batch safe standalone)
+            let mut j = i + 1;
+            while j < items.len() && acts[j].dims() == acts[i].dims() {
+                j += 1;
+            }
+            let group_acts: Vec<&Tensor> = acts[i..j].iter().collect();
+            let group_ys: Vec<&[i32]> =
+                items[i..j].iter().map(|it| it.labels.as_slice()).collect();
+            let mut outs = self.compute.server_step_batch(
+                &self.server.server_params,
+                &group_acts,
+                &group_ys,
+                self.cfg.lr,
+            )?;
+            if outs.len() != j - i {
+                return Err(format!(
+                    "server_step_batch returned {} outputs for {} items",
+                    outs.len(),
+                    j - i
+                ));
+            }
+            self.server_dispatches += 1;
+            self.server_steps += j - i;
+            // the shared model advances to the end of the chain (or the
+            // fused update — batched backends may fill only the final
+            // StepOut's new_params)
+            let final_params = outs
+                .iter_mut()
+                .rev()
+                .find(|o| !o.new_params.is_empty())
+                .map(|o| std::mem::take(&mut o.new_params))
+                .ok_or("server_step_batch returned no parameter update")?;
+            self.server.update(final_params);
+
+            for (it, out) in items[i..j].iter().zip(outs) {
+                let StepOut { loss, g_acts, .. } = out;
+                if !loss.is_finite() {
+                    return Err(format!(
+                        "round {} device {}: loss diverged ({loss})",
+                        it.round, it.d
+                    ));
+                }
+                // downlink: every path goes through a codec envelope (the
+                // uncompressed config uses the identity stream), so byte
+                // accounting is comparable across configs
+                let g_ent = if self.cfg.compress_gradients {
+                    Some(self.compute.entropy(&g_acts)?)
+                } else {
+                    None
+                };
+                let g_cm = g_acts.to_channel_major();
+                self.raw_round[1] += g_cm.data().len() * 4;
+                // ONE warmed scratch serves every downlink encode in the
+                // batch; the frame still owns its payload (the to_vec is
+                // the single steady-state allocation per message)
+                self.down_scratch.clear();
+                self.streams.device(it.d).down.encode(
+                    &g_cm,
+                    RoundCtx { entropy: g_ent.as_deref() },
+                    &mut self.down_scratch,
+                );
+                results.push((loss, self.down_scratch.to_vec()));
+            }
+            i = j;
+        }
+        Ok(results)
+    }
+
+    /// (items stepped, compute dispatches they crossed the boundary in)
+    /// so far — `benches/batching.rs` and the equivalence tests read the
+    /// amortization off the report.
+    pub fn dispatch_stats(&self) -> (usize, usize) {
+        (self.server_steps, self.server_dispatches)
     }
 
     /// Accept a device's ModelSync push (unpack through its sync stream).
@@ -360,10 +450,16 @@ impl<C: Compute> ServerRuntime<C> {
         Ok(())
     }
 
-    /// Pack the FedAvg result for device `d`'s downlink sync stream.
+    /// Pack the FedAvg result for device `d`'s downlink sync stream. One
+    /// caller-owned scratch (flatten buffer + envelope writer) serves the
+    /// whole broadcast loop instead of a fresh allocation set per device.
     pub(crate) fn pack_broadcast(&mut self, d: usize, params: &[Tensor]) -> Vec<u8> {
         self.raw_round[2] += params.iter().map(|t| t.len() * 4).sum::<usize>();
-        sync::pack_params(params, self.streams.device(d).sync_down.as_mut())
+        sync::pack_params_with(
+            params,
+            self.streams.device(d).sync_down.as_mut(),
+            &mut self.sync_scratch,
+        )
     }
 
     /// Weighted FedAvg over `basis` (device-id order preserved for f32
@@ -473,7 +569,18 @@ impl<C: Compute> ServerRuntime<C> {
 
         let label = self.cfg.label.clone();
         let policy = self.cfg.schedule;
-        crate::log_info!("[{label}] serving {n} devices, schedule={}", policy.label());
+        let window = self.cfg.batch_window;
+        if window > 1 && policy == Policy::InOrder {
+            crate::log_info!(
+                "[{label}] --batch-window {window} forced to 1 under the \
+                 in-order schedule (its byte-level determinism contract \
+                 precludes coalescing); use --schedule arrival to batch"
+            );
+        }
+        crate::log_info!(
+            "[{label}] serving {n} devices, schedule={} batch_window={window}",
+            policy.label()
+        );
         let outcome = RoundScheduler::new(policy).run(self, fleet)?;
 
         for d in 0..n {
@@ -509,6 +616,8 @@ impl<C: Compute> ServerRuntime<C> {
             time_to_target_s: outcome.time_to_target_s,
             rounds_run: outcome.rounds_run,
             straggler_events: self.metrics.straggler_events(),
+            server_steps: self.server_steps,
+            server_dispatches: self.server_dispatches,
             metrics: std::mem::take(&mut self.metrics),
         })
     }
@@ -563,6 +672,19 @@ pub fn run_mock_loopback_delayed(
     delays: &[f64],
     shim_seed: u64,
 ) -> Result<(TrainReport, Vec<SchedRecord>), String> {
+    run_mock_loopback_shimmed(cfg, delays, shim_seed, std::time::Duration::ZERO)
+}
+
+/// [`run_mock_loopback_delayed`] with a modeled PJRT-boundary cost burned
+/// by the server's [`MockCompute`] once per `server_step` *dispatch*.
+/// `benches/batching.rs` uses it to measure what `--batch-window`
+/// amortizes without needing an engine; zero cost is the plain mock.
+pub fn run_mock_loopback_shimmed(
+    cfg: &ExperimentConfig,
+    delays: &[f64],
+    shim_seed: u64,
+    dispatch_cost: std::time::Duration,
+) -> Result<(TrainReport, Vec<SchedRecord>), String> {
     cfg.validate()?;
     if delays.len() != cfg.devices {
         return Err(format!(
@@ -574,6 +696,7 @@ pub fn run_mock_loopback_delayed(
     let (train, test) = Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
     let train = Arc::new(train);
     let mut runtime = mock_runtime(cfg, Arc::new(test))?;
+    runtime.compute.set_dispatch_cost(dispatch_cost);
     let mut workers = Vec::with_capacity(cfg.devices);
     let mut dev_conns = Vec::with_capacity(cfg.devices);
     let mut srv_conns: Vec<Box<dyn Transport>> = Vec::with_capacity(cfg.devices);

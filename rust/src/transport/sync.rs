@@ -21,19 +21,62 @@
 
 use crate::codecs::{Codec, CodecError, RoundCtx};
 use crate::quant::payload::{ByteReader, ByteWriter, MAX_ELEMENTS};
-use crate::tensor::Tensor;
+use crate::tensor::{ChannelMajor, Tensor};
 
 /// Cap on tensors per pack (a sub-model has a handful of params).
 pub const MAX_TENSORS: usize = 1 << 12;
 /// Cap on tensor rank.
 pub const MAX_RANK: usize = 8;
 
+/// Reusable scratch for the pack paths: the parameter flatten buffer and
+/// the codec-envelope writer. A session endpoint owns one and reuses it
+/// across rounds and devices, so the steady-state encode side of a sync
+/// push/broadcast performs exactly one allocation — the returned payload
+/// the frame takes ownership of (the same contract the PR 3 redesign
+/// established for the uplink codecs).
+#[derive(Default)]
+pub struct SyncScratch {
+    flat: Vec<f32>,
+    blob: ByteWriter,
+}
+
 /// Pack a parameter list through `codec`. An empty list encodes to a
-/// shape-table-only pack (the "keep what you have" reply).
+/// shape-table-only pack (the "keep what you have" reply). Convenience
+/// wrapper over [`pack_params_with`] with throwaway scratch; per-round
+/// callers (the server broadcast loop, the device push) hold a
+/// [`SyncScratch`] and call [`pack_params_with`] directly.
 pub fn pack_params(params: &[Tensor], codec: &mut dyn Codec) -> Vec<u8> {
+    pack_params_with(params, codec, &mut SyncScratch::default())
+}
+
+/// [`pack_params`] with caller-owned scratch buffers. Byte-identical
+/// output; the warmed steady state performs exactly ONE allocation — the
+/// returned payload, sized up front from the already-encoded blob
+/// (`benches/codecs.rs` audits this with its counting allocator).
+pub fn pack_params_with(
+    params: &[Tensor],
+    codec: &mut dyn Codec,
+    scratch: &mut SyncScratch,
+) -> Vec<u8> {
     assert!(params.len() <= MAX_TENSORS, "{} params exceed pack cap", params.len());
     let total: usize = params.iter().map(|t| t.len()).sum();
-    let mut w = ByteWriter::with_capacity(8 + params.len() * 8 + total * 4);
+    scratch.blob.clear();
+    if !params.is_empty() {
+        scratch.flat.clear();
+        scratch.flat.reserve(total);
+        for t in params {
+            scratch.flat.extend_from_slice(t.data());
+        }
+        // a flat 1x1x1xN NCHW tensor and its channel-major view share one
+        // layout, so the view is built straight over the scratch buffer
+        // (no relayout copy) and the buffer is taken back after the encode
+        let cm =
+            ChannelMajor::from_rows(1, total, 1, 1, total, std::mem::take(&mut scratch.flat));
+        codec.encode(&cm, RoundCtx::default(), &mut scratch.blob);
+        scratch.flat = cm.into_data();
+    }
+    let table: usize = params.iter().map(|t| 1 + 4 * t.dims().len()).sum();
+    let mut w = ByteWriter::with_capacity(4 + table + 4 + scratch.blob.len());
     w.u32(params.len() as u32);
     for t in params {
         assert!(t.dims().len() <= MAX_RANK, "rank {} exceeds pack cap", t.dims().len());
@@ -45,14 +88,8 @@ pub fn pack_params(params: &[Tensor], codec: &mut dyn Codec) -> Vec<u8> {
     if params.is_empty() {
         return w.finish();
     }
-    let mut flat = Vec::with_capacity(total);
-    for t in params {
-        flat.extend_from_slice(t.data());
-    }
-    let cm = Tensor::new(vec![1, 1, 1, total], flat).to_channel_major();
-    let blob = codec.compress(&cm, RoundCtx::default());
-    w.u32(blob.len() as u32);
-    w.bytes(&blob);
+    w.u32(scratch.blob.len() as u32);
+    w.bytes(scratch.blob.as_slice());
     w.finish()
 }
 
@@ -162,6 +199,33 @@ mod tests {
         let pack = pack_params(&params(), up.as_mut());
         let back = unpack_params(&pack, twin.as_mut()).unwrap();
         assert_eq!(back, params());
+    }
+
+    #[test]
+    fn scratch_pack_is_byte_identical_and_reusable() {
+        // one scratch across rounds AND across payload shapes must keep
+        // producing exactly the bytes of the allocating path
+        let mut scratch = SyncScratch::default();
+        let mut a = by_name("uniform8", 1, 10, 0).unwrap();
+        let mut b = by_name("uniform8", 1, 10, 0).unwrap();
+        let small = params();
+        let big = vec![Tensor::new(
+            vec![16, 8],
+            (0..128).map(|i| (i % 11) as f32 * 0.4 - 2.0).collect(),
+        )];
+        for round in 0..3 {
+            for p in [&small, &big] {
+                let fresh = pack_params(p, a.as_mut());
+                let reused = pack_params_with(p, b.as_mut(), &mut scratch);
+                assert_eq!(fresh, reused, "round {round}");
+            }
+        }
+        // empty packs skip the codec entirely but still work with scratch
+        let mut c = by_name("identity", 1, 10, 0).unwrap();
+        assert_eq!(
+            pack_params(&[], c.as_mut()),
+            pack_params_with(&[], c.as_mut(), &mut scratch)
+        );
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Batched server compute — the equivalence suite.
+//!
+//! Load-bearing properties of `--batch-window`:
+//! * `server_step_batch` on the mock compute IS the sequential chain, bit
+//!   for bit (pinned again here at the session level; the compute-level
+//!   pin lives in `transport/compute.rs`).
+//! * A batched arrival-order session matches its `--batch-window 1` twin
+//!   on every loss bit, every byte axis, and every scheduling record —
+//!   batching may only change how many dispatches the steps ride in.
+//! * InOrder forces batch=1 (message-for-message parity with the
+//!   pre-batching baseline is its contract).
+//! * Loopback and TCP agree byte-for-byte with `--batch-window 8`.
+//! * Straggler/quorum rounds batch only the devices actually present.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::coordinator::metrics::TrainReport;
+use slacc::data::Dataset;
+use slacc::sched::Policy;
+use slacc::transport::device::{mock_worker, run_blocking};
+use slacc::transport::server::{
+    accept_and_serve, mock_runtime, run_mock_loopback, run_mock_loopback_delayed,
+};
+use slacc::transport::tcp::TcpTransport;
+
+fn tiny_cfg(codec: &str, devices: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for("ham");
+    cfg.devices = devices;
+    cfg.rounds = rounds;
+    cfg.train_n = 64.max(devices * 8);
+    cfg.test_n = 16;
+    cfg.eval_every = 2;
+    cfg.lr = 1e-3;
+    cfg.seed = 3;
+    cfg.codec = CodecChoice::Named(codec.into());
+    cfg
+}
+
+fn assert_records_identical(a: &TrainReport, b: &TrainReport) {
+    assert_eq!(a.metrics.len(), b.metrics.len());
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "round {}", x.round);
+        assert_eq!(x.bytes_up, y.bytes_up, "round {}", x.round);
+        assert_eq!(x.bytes_down, y.bytes_down, "round {}", x.round);
+        assert_eq!(x.bytes_sync, y.bytes_sync, "round {}", x.round);
+        assert_eq!(x.raw_up, y.raw_up, "round {}", x.round);
+        assert_eq!(x.accuracy, y.accuracy, "round {}", x.round);
+        assert_eq!(x.participants, y.participants, "round {}", x.round);
+    }
+}
+
+#[test]
+fn batched_arrival_session_matches_window1_bit_for_bit() {
+    let mut base = tiny_cfg("slacc", 4, 4);
+    base.schedule = Policy::arrival();
+    let baseline = run_mock_loopback(&base).unwrap();
+    assert_eq!(
+        baseline.server_dispatches, baseline.server_steps,
+        "window 1 = one dispatch per device step"
+    );
+    for window in [2usize, 8] {
+        let mut cfg = tiny_cfg("slacc", 4, 4);
+        cfg.schedule = Policy::arrival();
+        cfg.batch_window = window;
+        let batched = run_mock_loopback(&cfg).unwrap();
+        assert_records_identical(&baseline, &batched);
+        assert_eq!(batched.server_steps, baseline.server_steps);
+        assert!(
+            batched.server_dispatches < batched.server_steps,
+            "window {window}: no dispatch was ever amortized \
+             ({} dispatches for {} steps)",
+            batched.server_dispatches,
+            batched.server_steps
+        );
+    }
+}
+
+#[test]
+fn batched_sessions_with_delays_stay_deterministic() {
+    let mut cfg = tiny_cfg("slacc", 3, 4);
+    cfg.schedule = Policy::arrival();
+    cfg.batch_window = 4;
+    let delays = [0.03, 0.01, 0.02];
+    let (a, sched_a) = run_mock_loopback_delayed(&cfg, &delays, 42).unwrap();
+    let (b, sched_b) = run_mock_loopback_delayed(&cfg, &delays, 42).unwrap();
+    assert_records_identical(&a, &b);
+    assert_eq!(sched_a, sched_b);
+    assert_eq!(a.server_dispatches, b.server_dispatches);
+}
+
+#[test]
+fn inorder_forces_single_item_dispatches() {
+    // InOrder's determinism contract precludes coalescing: a window of 8
+    // must behave exactly like (and dispatch exactly like) window 1
+    let baseline = run_mock_loopback(&tiny_cfg("slacc", 3, 4)).unwrap();
+    let mut cfg = tiny_cfg("slacc", 3, 4);
+    cfg.batch_window = 8;
+    let windowed = run_mock_loopback(&cfg).unwrap();
+    assert_records_identical(&baseline, &windowed);
+    assert_eq!(windowed.server_dispatches, windowed.server_steps);
+    assert_eq!(windowed.server_steps, 3 * 4);
+}
+
+#[test]
+fn quorum_close_batches_only_the_devices_present() {
+    let mut cfg = tiny_cfg("slacc", 3, 10);
+    cfg.eval_every = 20;
+    cfg.schedule = Policy::arrival_with_timeout(0.4, 2);
+    cfg.batch_window = 8;
+    // device 2 misses every 0.4 s window; rounds must close on the fast
+    // pair and batch exactly them (plus the straggler's stale catch-ups)
+    let delays = [0.06, 0.06, 1.2];
+    let (report, sched) = run_mock_loopback_delayed(&cfg, &delays, 7).unwrap();
+    assert_eq!(report.rounds_run, 10);
+    assert!(report.straggler_events >= 1, "no straggler was ever carried");
+    assert!(
+        sched.iter().any(|r| r.stale.contains(&2)),
+        "straggler never caught up: {sched:?}"
+    );
+    // every Activations that arrived was stepped (none were dropped or
+    // double-stepped by the batcher)
+    let arrived: usize = sched.iter().map(|r| r.participants.len() + r.stale.len()).sum();
+    assert_eq!(report.server_steps, arrived);
+    // the fast pair coalesces: fewer dispatches than steps
+    assert!(
+        report.server_dispatches < report.server_steps,
+        "{} dispatches for {} steps",
+        report.server_dispatches,
+        report.server_steps
+    );
+    // identical runs of the same quorum session at window 1 agree on the
+    // numbers (the batcher changes dispatch count only)
+    let mut w1 = cfg.clone();
+    w1.batch_window = 1;
+    let (base, sched1) = run_mock_loopback_delayed(&w1, &delays, 7).unwrap();
+    assert_records_identical(&base, &report);
+    assert_eq!(sched1, sched);
+}
+
+/// Loopback vs TCP byte parity at `--batch-window 8`: the mock model is
+/// arrival-order-independent in its *bytes* (gradients don't read the
+/// server params), so per-round byte axes must agree across transports
+/// even though TCP arrival order is racy.
+#[test]
+fn tcp_vs_loopback_byte_parity_with_batch_window_8() {
+    let mut cfg = tiny_cfg("slacc", 3, 4);
+    cfg.schedule = Policy::arrival();
+    cfg.batch_window = 8;
+
+    let loopback = run_mock_loopback(&cfg).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut handles = Vec::new();
+    for d in 0..cfg.devices {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        handles.push(thread::spawn(move || -> Result<(), String> {
+            let (train, _) =
+                Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+            let mut worker = mock_worker(&cfg, Arc::new(train), d)?;
+            let mut conn =
+                TcpTransport::connect_retry(&addr, 80, Duration::from_millis(100))?;
+            run_blocking(&mut worker, &mut conn)
+        }));
+    }
+    let (_, test) =
+        Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed).unwrap();
+    let mut rt = mock_runtime(&cfg, Arc::new(test)).unwrap();
+    let tcp = accept_and_serve(&mut rt, &listener).unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(tcp.rounds_run, loopback.rounds_run);
+    assert_eq!(tcp.server_steps, loopback.server_steps);
+    for (a, b) in loopback.metrics.records.iter().zip(&tcp.metrics.records) {
+        assert_eq!(a.bytes_up, b.bytes_up, "round {}", a.round);
+        assert_eq!(a.bytes_down, b.bytes_down, "round {}", a.round);
+        assert_eq!(a.bytes_sync, b.bytes_sync, "round {}", a.round);
+        assert_eq!(a.raw_up, b.raw_up, "round {}", a.round);
+        assert_eq!(a.raw_down, b.raw_down, "round {}", a.round);
+    }
+    assert_eq!(
+        (loopback.total_bytes_up, loopback.total_bytes_down, loopback.total_bytes_sync),
+        (tcp.total_bytes_up, tcp.total_bytes_down, tcp.total_bytes_sync)
+    );
+}
+
+/// A fleet whose members disagree on `--batch-window` must be rejected at
+/// handshake (an engine session's fused batched update changes numerics).
+#[test]
+fn mismatched_batch_window_rejected_at_handshake() {
+    let mut server_cfg = tiny_cfg("slacc", 1, 2);
+    server_cfg.schedule = Policy::arrival();
+    server_cfg.batch_window = 8;
+    let mut device_cfg = server_cfg.clone();
+    device_cfg.batch_window = 1;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = thread::spawn(move || {
+        let (train, _) = Dataset::for_config(
+            &device_cfg.dataset,
+            device_cfg.train_n,
+            device_cfg.test_n,
+            device_cfg.seed,
+        )
+        .unwrap();
+        let mut worker = mock_worker(&device_cfg, Arc::new(train), 0).unwrap();
+        let mut conn =
+            TcpTransport::connect_retry(&addr, 80, Duration::from_millis(100)).unwrap();
+        // the server drops the session at handshake; any outcome but a
+        // clean full run is acceptable on the device side
+        let _ = run_blocking(&mut worker, &mut conn);
+    });
+    let (_, test) = Dataset::for_config(
+        &server_cfg.dataset,
+        server_cfg.train_n,
+        server_cfg.test_n,
+        server_cfg.seed,
+    )
+    .unwrap();
+    let mut rt = mock_runtime(&server_cfg, Arc::new(test)).unwrap();
+    let err = accept_and_serve(&mut rt, &listener).unwrap_err();
+    assert!(
+        err.contains("fingerprint"),
+        "want a session-fingerprint rejection, got: {err}"
+    );
+    handle.join().unwrap();
+}
