@@ -1,0 +1,349 @@
+//! Multi-server sharded SL over localhost TCP: one coordinator process +
+//! 2 shard-server processes + 4 device-worker processes.
+//!
+//!     cargo run --release --example sharded
+//!
+//! The orchestrator re-spawns this example binary in `--role coordinator`
+//! / `--role shard` / `--role device` mode (the same topology `slacc
+//! serve --role ...` deploys), waits for the cluster to finish, then — in
+//! mock mode — runs the identical config through the in-process
+//! channel-transport simulation (`run_sharded_mock`) and asserts that
+//! every shard's per-round `bytes_up`/`bytes_down`/`bytes_sync` match
+//! exactly: the cross-shard sync tier moves the same bytes over real
+//! sockets as over the deterministic in-process fabric.
+//!
+//! With AOT artifacts present every process trains the real model through
+//! PJRT (no in-process reference — PJRT objects never cross threads); the
+//! cluster is still asserted to complete every round on every shard.
+//!
+//! Flags: --rounds N [4] --devices N [4] --shards N [2]
+//!        --sync-every N [1] --port P [47710] --seed N [0]
+
+use std::net::TcpListener;
+use std::process::Command;
+use std::sync::Arc;
+use std::time::Duration;
+
+use slacc::cli::Args;
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::coordinator::trainer::engine_runtime_for_shard;
+use slacc::data::Dataset;
+use slacc::sched::fleet::ShardFleet;
+use slacc::shard::coordinator::Coordinator;
+use slacc::shard::link::ShardLink;
+use slacc::shard::sim::run_sharded_mock;
+use slacc::transport::device::{mock_worker, run_blocking};
+use slacc::transport::server::{accept_and_serve, mock_runtime_for_shard};
+use slacc::transport::tcp::TcpTransport;
+use slacc::transport::{session_fingerprint, Transport};
+
+fn session_cfg(
+    devices: usize,
+    shards: usize,
+    rounds: usize,
+    sync_every: usize,
+    seed: u64,
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for("ham");
+    cfg.devices = devices;
+    cfg.rounds = rounds;
+    cfg.seed = seed;
+    cfg.train_n = 256;
+    cfg.test_n = 64;
+    cfg.lr = 1e-3;
+    cfg.codec = CodecChoice::Named("slacc".into());
+    cfg.shards = shards;
+    cfg.shard_sync_every = sync_every;
+    cfg
+}
+
+/// Port layout under `--port P`: shard k's device listener is `P + k`,
+/// its coordinator listener `P + 100 + k`.
+fn dev_port(base: usize, shard: usize) -> usize {
+    base + shard
+}
+
+fn shard_port(base: usize, shard: usize) -> usize {
+    base + 100 + shard
+}
+
+fn main() -> Result<(), String> {
+    slacc::util::logging::init_from_env();
+    let mut args = Args::from_env();
+    let role = args.str_or("role", "main");
+    let devices = args.usize_or("devices", 4);
+    let shards = args.usize_or("shards", 2);
+    let rounds = args.usize_or("rounds", 4);
+    let sync_every = args.usize_or("sync-every", 1);
+    let seed = args.usize_or("seed", 0) as u64;
+    let port = args.usize_or("port", 47710);
+    let id = args.usize_or("id", 0);
+    let csv = args.str_opt("csv");
+    args.finish()?;
+    let cfg = session_cfg(devices, shards, rounds, sync_every, seed);
+    cfg.validate()?;
+    match role.as_str() {
+        "main" => orchestrate(cfg, port),
+        "coordinator" => role_coordinator(cfg, port),
+        "shard" => role_shard(cfg, port, id, csv),
+        "device" => role_device(cfg, port, id),
+        other => Err(format!("unknown --role '{other}'")),
+    }
+}
+
+fn role_coordinator(cfg: ExperimentConfig, port: usize) -> Result<(), String> {
+    let kind = if cfg.have_artifacts() { "engine" } else { "mock" };
+    let mut conns: Vec<Box<dyn Transport>> = Vec::with_capacity(cfg.shards);
+    for k in 0..cfg.shards {
+        let addr = format!("127.0.0.1:{}", shard_port(port, k));
+        conns.push(Box::new(TcpTransport::connect_retry(
+            &addr,
+            120,
+            Duration::from_millis(250),
+        )?));
+    }
+    let mut coordinator = Coordinator::from_experiment(&cfg, kind)?;
+    let mut fleet = ShardFleet::new(conns);
+    let report = coordinator.run(&mut fleet)?;
+    println!(
+        "[coordinator] {} shards, {} sync epochs, {:.2} KB up / {:.2} KB down",
+        report.shards,
+        report.sync_epochs,
+        report.bytes_up as f64 / 1e3,
+        report.bytes_down as f64 / 1e3
+    );
+    Ok(())
+}
+
+fn role_shard(
+    cfg: ExperimentConfig,
+    port: usize,
+    shard_id: usize,
+    csv: Option<String>,
+) -> Result<(), String> {
+    let topo = cfg.topology();
+    let shape = topo.shape_for(cfg.devices, shard_id);
+    let shard_bind = format!("127.0.0.1:{}", shard_port(port, shard_id));
+    let shard_listener =
+        TcpListener::bind(&shard_bind).map_err(|e| format!("bind {shard_bind}: {e}"))?;
+    println!("[shard {shard_id}] waiting for the coordinator on {shard_bind}");
+    let coord_conn = TcpTransport::accept_direct(&shard_listener)?;
+
+    let (train, test) =
+        Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+    let weight = slacc::shard::shard_weight(&cfg, &train, shard_id);
+    let kind = if cfg.have_artifacts() { "engine" } else { "mock" };
+    let session_fp = session_fingerprint(cfg.fingerprint(), kind);
+    let link = ShardLink::handshake(
+        Box::new(coord_conn),
+        &topo,
+        shard_id,
+        weight,
+        session_fp,
+        cfg.shard_link_streams(shard_id)?,
+    )?;
+
+    let dev_bind = format!("127.0.0.1:{}", dev_port(port, shard_id));
+    let listener =
+        TcpListener::bind(&dev_bind).map_err(|e| format!("bind {dev_bind}: {e}"))?;
+    println!(
+        "[shard {shard_id}] serving devices {}..{} on {dev_bind}",
+        shape.base,
+        shape.base + shape.local
+    );
+    let report = if cfg.have_artifacts() {
+        let mut rt = engine_runtime_for_shard(&cfg, shard_id)?;
+        rt.attach_shard_link(link);
+        accept_and_serve(&mut rt, &listener)?
+    } else {
+        let mut rt = mock_runtime_for_shard(&cfg, shard_id, Arc::new(test))?;
+        rt.attach_shard_link(link);
+        accept_and_serve(&mut rt, &listener)?
+    };
+    println!(
+        "[shard {shard_id}] {} rounds done: {:.2} KB up / {:.2} KB sync",
+        report.rounds_run,
+        report.total_bytes_up as f64 / 1e3,
+        report.total_bytes_sync as f64 / 1e3
+    );
+    if let Some(path) = csv {
+        report.metrics.write_csv(std::path::Path::new(&path))?;
+    }
+    Ok(())
+}
+
+fn role_device(cfg: ExperimentConfig, port: usize, id: usize) -> Result<(), String> {
+    let shape = cfg.topology().shape_for(cfg.devices, 0);
+    let shard = id / shape.local; // contiguous ranges: id's serving shard
+    let addr = format!("127.0.0.1:{}", dev_port(port, shard));
+    let mut conn = TcpTransport::connect_retry(&addr, 120, Duration::from_millis(250))?;
+    if cfg.have_artifacts() {
+        let mut worker = slacc::coordinator::trainer::engine_worker(&cfg, id)?;
+        run_blocking(&mut worker, &mut conn)?;
+    } else {
+        let (train, _) =
+            Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+        let mut worker = mock_worker(&cfg, Arc::new(train), id)?;
+        run_blocking(&mut worker, &mut conn)?;
+    }
+    println!("[device {id}] done ({} bytes sent)", conn.stats().bytes_sent);
+    Ok(())
+}
+
+fn orchestrate(cfg: ExperimentConfig, port: usize) -> Result<(), String> {
+    let exe = std::env::current_exe().map_err(|e| e.to_string())?;
+    let mock = !cfg.have_artifacts();
+    println!(
+        "orchestrator: {} devices x {} rounds across {} shards (+1 coordinator) \
+         over 127.0.0.1:{port}.. ({})",
+        cfg.devices,
+        cfg.rounds,
+        cfg.shards,
+        if mock { "mock model" } else { "PJRT artifacts" }
+    );
+    let common = [
+        ("--devices", cfg.devices.to_string()),
+        ("--shards", cfg.shards.to_string()),
+        ("--rounds", cfg.rounds.to_string()),
+        ("--sync-every", cfg.shard_sync_every.to_string()),
+        ("--seed", cfg.seed.to_string()),
+        ("--port", port.to_string()),
+    ];
+    let spawn = |extra: &[(&str, String)]| -> Result<std::process::Child, String> {
+        let mut c = Command::new(&exe);
+        for (k, v) in extra {
+            c.args([*k, v.as_str()]);
+        }
+        for (k, v) in &common {
+            c.args([*k, v.as_str()]);
+        }
+        c.spawn().map_err(|e| format!("spawn: {e}"))
+    };
+
+    let mut csvs = Vec::new();
+    let mut shards = Vec::new();
+    for k in 0..cfg.shards {
+        let csv = std::env::temp_dir()
+            .join(format!("slacc_sharded_{}_{k}.csv", std::process::id()));
+        shards.push(spawn(&[
+            ("--role", "shard".into()),
+            ("--id", k.to_string()),
+            ("--csv", csv.to_string_lossy().into_owned()),
+        ])?);
+        csvs.push(csv);
+    }
+    let mut coordinator = spawn(&[("--role", "coordinator".into())])?;
+    let mut devices = Vec::new();
+    for g in 0..cfg.devices {
+        devices.push(spawn(&[("--role", "device".into()), ("--id", g.to_string())])?);
+    }
+
+    // on any failure, kill AND reap every remaining child — a dead shard
+    // leaves the coordinator and sibling devices blocked on sockets, and
+    // an unreaped child is a zombie until this process exits
+    fn kill_wait(procs: &mut [std::process::Child]) {
+        for p in procs.iter_mut() {
+            let _ = p.kill(); // errors on already-exited children expected
+        }
+        for p in procs.iter_mut() {
+            let _ = p.wait();
+        }
+    }
+    for g in 0..devices.len() {
+        let st = devices[g].wait().map_err(|e| e.to_string())?;
+        if !st.success() {
+            kill_wait(&mut devices);
+            kill_wait(std::slice::from_mut(&mut coordinator));
+            kill_wait(&mut shards);
+            return Err(format!("device {g} exited with {st}"));
+        }
+    }
+    let st = coordinator.wait().map_err(|e| e.to_string())?;
+    if !st.success() {
+        kill_wait(&mut shards);
+        return Err(format!("coordinator exited with {st}"));
+    }
+    // wait (and thereby reap) every shard before reporting the first bad one
+    let mut shard_fail = None;
+    for (k, s) in shards.iter_mut().enumerate() {
+        let st = s.wait().map_err(|e| e.to_string())?;
+        if !st.success() && shard_fail.is_none() {
+            shard_fail = Some(format!("shard {k} exited with {st}"));
+        }
+    }
+    if let Some(err) = shard_fail {
+        return Err(err);
+    }
+
+    // per-shard per-round wire bytes from the TCP run
+    let mut tcp_rounds: Vec<Vec<(usize, usize, usize)>> = Vec::new();
+    for (k, csv) in csvs.iter().enumerate() {
+        let text = std::fs::read_to_string(csv)
+            .map_err(|e| format!("read {}: {e}", csv.display()))?;
+        let rows: Vec<(usize, usize, usize)> = text
+            .lines()
+            .skip(1)
+            .map(|line| {
+                let f: Vec<&str> = line.split(',').collect();
+                Ok((
+                    f[3].parse::<usize>().map_err(|e| format!("bytes_up: {e}"))?,
+                    f[4].parse::<usize>().map_err(|e| format!("bytes_down: {e}"))?,
+                    f[7].parse::<usize>().map_err(|e| format!("bytes_sync: {e}"))?,
+                ))
+            })
+            .collect::<Result<_, String>>()?;
+        if rows.len() != cfg.rounds {
+            return Err(format!(
+                "shard {k} ran {} rounds, expected {}",
+                rows.len(),
+                cfg.rounds
+            ));
+        }
+        tcp_rounds.push(rows);
+        let _ = std::fs::remove_file(csv);
+    }
+
+    if !mock {
+        println!(
+            "CLUSTER OK: {} shards x {} rounds over TCP with PJRT artifacts \
+             (in-process parity reference needs mock mode)",
+            cfg.shards, cfg.rounds
+        );
+        return Ok(());
+    }
+
+    // the same cluster through the in-process channel-transport fabric
+    println!("orchestrator: re-running in-process for the parity check");
+    let reference = run_sharded_mock(&cfg)?;
+    let mut ok = true;
+    println!("shard round  tcp-up  sim-up  tcp-down  sim-down  tcp-sync  sim-sync");
+    for (k, (tcp, sim)) in
+        tcp_rounds.iter().zip(&reference.shard_reports).enumerate()
+    {
+        for (r, (&(up, down, sync), rec)) in
+            tcp.iter().zip(&sim.metrics.records).enumerate()
+        {
+            let row_ok =
+                up == rec.bytes_up && down == rec.bytes_down && sync == rec.bytes_sync;
+            ok &= row_ok;
+            println!(
+                "{k:>5} {r:>5}  {up:>6}  {:>6}  {down:>8}  {:>8}  {sync:>8}  {:>8}  {}",
+                rec.bytes_up,
+                rec.bytes_down,
+                rec.bytes_sync,
+                if row_ok { "ok" } else { "MISMATCH" }
+            );
+        }
+    }
+    if !ok {
+        return Err("TCP cluster and in-process simulation disagree on wire bytes".into());
+    }
+    println!(
+        "PARITY OK: {} shards x {} devices x {} rounds — TCP cluster bytes \
+         identical to the in-process topology simulation",
+        cfg.shards,
+        cfg.devices,
+        cfg.rounds
+    );
+    Ok(())
+}

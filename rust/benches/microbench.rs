@@ -9,7 +9,7 @@
 mod common;
 
 use slacc::bench::Bencher;
-use slacc::cluster::kmeans_1d;
+use slacc::grouping::kmeans_1d;
 use slacc::codecs::{self, Codec, RoundCtx};
 use slacc::entropy::shannon;
 use slacc::quant::bitpack;

@@ -1,0 +1,168 @@
+//! Multi-server sharding — coordinator-tier scaling bench.
+//!
+//!     cargo bench --bench sharding            # full sweep
+//!     cargo bench --bench sharding -- --smoke # seconds-fast CI smoke
+//!
+//! A fixed mock device fleet is partitioned across 1/2/4 shard servers
+//! and driven through the *real* stack: per-shard `ServerRuntime`s +
+//! device workers on threads, the real `Coordinator` over channel
+//! transports, real ShardHello/ShardSync frames and `--sync-codec`
+//! packs (`run_sharded_mock` — nothing is stubbed). A second sweep holds
+//! the topology at 2 shards and amortizes the cross-shard cadence
+//! (`--shard-sync-every` 1/2/4), quantifying the sync-byte/coordination
+//! trade the flag exists for.
+//!
+//! Results land in `BENCH_sharding.json` (committed) via the shared
+//! recorder in `benches/common.rs`, so the repo keeps a perf trajectory.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use slacc::bench::Table;
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::shard::sim::{run_sharded_mock, ShardedReport};
+use slacc::util::json::Json;
+
+fn bench_cfg(devices: usize, shards: usize, sync_every: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for("ham");
+    cfg.devices = devices;
+    cfg.rounds = rounds;
+    cfg.train_n = (devices * 16).max(256);
+    cfg.test_n = 32;
+    cfg.eval_every = rounds.max(1); // one eval at the end
+    cfg.lr = 1e-3;
+    cfg.seed = 3;
+    cfg.codec = CodecChoice::Named("slacc".into());
+    cfg.shards = shards;
+    cfg.shard_sync_every = sync_every;
+    cfg
+}
+
+fn run_cluster(
+    devices: usize,
+    shards: usize,
+    sync_every: usize,
+    rounds: usize,
+) -> (ShardedReport, f64) {
+    let cfg = bench_cfg(devices, shards, sync_every, rounds);
+    let t0 = Instant::now();
+    let report = run_sharded_mock(&cfg)
+        .unwrap_or_else(|e| panic!("{shards} shards, sync-every {sync_every}: {e}"));
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(report.shard_reports.len(), shards);
+    for (k, rep) in report.shard_reports.iter().enumerate() {
+        assert_eq!(rep.rounds_run, rounds, "shard {k}");
+        assert!(
+            rep.metrics.records.iter().all(|r| r.loss.is_finite()),
+            "shard {k}: non-finite loss"
+        );
+    }
+    if shards > 1 {
+        assert_eq!(
+            report.coordinator.sync_epochs,
+            rounds / sync_every,
+            "{shards} shards: wrong sync-epoch count"
+        );
+        assert!(report.coordinator.bytes_up > 0);
+    }
+    (report, wall)
+}
+
+fn sweep(shard_counts: &[usize], cadences: &[usize], devices: usize, rounds: usize, full: bool) {
+    let mut table = Table::new(
+        "sharding: coordinator tier over a fixed mock fleet",
+        &["shards", "sync_every", "epochs", "sync_KB", "coord_KB", "acc", "wall_s"],
+    );
+    let mut rec = common::BenchRecorder::new("sharding");
+    let mut row = |report: &ShardedReport, shards: usize, sync_every: usize, wall: f64| {
+        let sync_kb = report.total_bytes_sync() as f64 / 1e3;
+        let coord_b = report.coordinator.bytes_up + report.coordinator.bytes_down;
+        let (_, acc) = report.accuracy_range();
+        table.row(vec![
+            shards.to_string(),
+            sync_every.to_string(),
+            report.coordinator.sync_epochs.to_string(),
+            format!("{sync_kb:.1}"),
+            format!("{:.1}", coord_b as f64 / 1e3),
+            format!("{acc:.3}"),
+            format!("{wall:.3}"),
+        ]);
+        rec.row(vec![
+            ("devices", Json::Num(devices as f64)),
+            ("shards", Json::Num(shards as f64)),
+            ("sync_every", Json::Num(sync_every as f64)),
+            ("rounds", Json::Num(rounds as f64)),
+            ("sync_epochs", Json::Num(report.coordinator.sync_epochs as f64)),
+            ("bytes_sync_total", Json::Num(report.total_bytes_sync() as f64)),
+            ("coord_bytes_up", Json::Num(report.coordinator.bytes_up as f64)),
+            ("coord_bytes_down", Json::Num(report.coordinator.bytes_down as f64)),
+            ("final_accuracy", Json::Num(acc)),
+            ("wall_s", Json::Num(wall)),
+        ]);
+    };
+
+    // shard-count scaling at the default cadence; the 2-shard run doubles
+    // as the cadence sweep's sync-every-1 baseline (no duplicate run/row)
+    let mut single_acc = None;
+    let mut two_shard_sync: Option<usize> = None;
+    for &shards in shard_counts {
+        let (report, wall) = run_cluster(devices, shards, 1, rounds);
+        let (lo, hi) = report.accuracy_range();
+        assert_eq!(lo, hi, "{shards} shards: shards must agree after a full merge");
+        match single_acc {
+            None => single_acc = Some(hi),
+            Some(base) => assert!(
+                (hi - base).abs() < 0.05,
+                "{shards} shards drifted from the single-server accuracy \
+                 ({hi} vs {base})"
+            ),
+        }
+        if shards == 2 {
+            two_shard_sync = Some(report.total_bytes_sync());
+        }
+        row(&report, shards, 1, wall);
+    }
+
+    // cadence amortization at a fixed 2-shard topology
+    let mut prev_sync = two_shard_sync;
+    for &sync_every in cadences {
+        if sync_every == 1 || rounds % sync_every != 0 {
+            continue; // 1 is the shard-count sweep's 2-shard row
+        }
+        let (report, wall) = run_cluster(devices, 2, sync_every, rounds);
+        let total = report.total_bytes_sync();
+        if let Some(prev) = prev_sync {
+            assert!(
+                total < prev,
+                "sync-every {sync_every}: amortizing must shrink the sync byte \
+                 axis ({total} >= {prev})"
+            );
+        }
+        prev_sync = Some(total);
+        row(&report, 2, sync_every, wall);
+    }
+
+    table.finish();
+    if full {
+        // only the full sweep updates the committed perf-trajectory file;
+        // the CI smoke subset must not clobber it with its reduced grid
+        rec.write();
+    } else {
+        println!("[smoke mode: BENCH_sharding.json left untouched]");
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("[sharding bench: smoke mode]");
+        // CI gate: cluster completion, sync-epoch counts, byte-axis
+        // monotonicity, cross-shard accuracy agreement (wall clock is
+        // reported, never asserted — shared runners are noisy)
+        sweep(&[1, 2], &[1, 2], 4, 4, false);
+    } else {
+        sweep(&[1, 2, 4], &[1, 2, 4], 8, common::env_usize("SLACC_BENCH_ROUNDS", 8), true);
+    }
+}

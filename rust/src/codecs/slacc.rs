@@ -23,7 +23,7 @@
 //! (the paper's stated goal) at every tensor size. The fig7 ablation bench
 //! quantifies the difference.
 
-use crate::cluster::{kmeans_1d, Clustering};
+use crate::grouping::{kmeans_1d, Clustering};
 use crate::codecs::{ids, Codec, CodecError, RoundCtx};
 use crate::entropy::{shannon, Acii, AlphaSchedule};
 use crate::quant::bitpack;

@@ -220,6 +220,37 @@ fn sync_seed(seed: u64, device: usize, dir: u64) -> u64 {
     seed ^ (0x5106 << 20) ^ ((device as u64) * 2 + dir)
 }
 
+/// Seed for a shard↔coordinator sync stream (`dir` 0 = shard push, 1 =
+/// coordinator broadcast). A distinct namespace from the per-device sync
+/// seeds so a shard link never shares an RNG stream with a device link.
+fn shard_seed(seed: u64, shard: usize, dir: u64) -> u64 {
+    seed ^ (0x51AD << 28) ^ ((shard as u64) * 2 + dir)
+}
+
+/// Build the codec pair for one shard↔coordinator link: `(push,
+/// broadcast)` instances of the negotiated sync-stream spec. Both ends of
+/// a link build identical twins (the seeds are a pure function of the
+/// session seed + shard id + direction), exactly like the per-device
+/// streams. Shard links see flattened parameters: one logical channel.
+pub fn shard_sync_streams(
+    specs: &StreamSpecs,
+    cfg: &SessionStreamCfg,
+    shard: usize,
+) -> Result<(Box<dyn Codec>, Box<dyn Codec>), CodecError> {
+    let reg = CodecRegistry::standard();
+    let ctx = |seed: u64| StreamCtx {
+        channels: 1,
+        total_rounds: cfg.total_rounds,
+        seed,
+        slacc: cfg.slacc,
+        alpha: cfg.alpha,
+    };
+    Ok((
+        reg.build(&specs.sync, &ctx(shard_seed(cfg.seed, shard, 0)))?,
+        reg.build(&specs.sync, &ctx(shard_seed(cfg.seed, shard, 1)))?,
+    ))
+}
+
 /// The four codec instances serving one device's streams on one endpoint.
 /// The compressing side and its decompressing twin build identical
 /// instances (the envelopes are self-describing, and stream seeds are a
@@ -277,8 +308,22 @@ impl StreamSet {
         cfg: &SessionStreamCfg,
         devices: usize,
     ) -> Result<StreamSet, CodecError> {
-        let mut streams = Vec::with_capacity(devices);
-        for d in 0..devices {
+        Self::build_range(specs, cfg, 0, devices)
+    }
+
+    /// Build the stream codecs for a contiguous global-device-id range
+    /// `[base, base + count)`, indexed locally from 0. A shard server of a
+    /// multi-server topology serves such a slice of the fleet; seeds stay
+    /// derived from the *global* id, so shard servers hold exactly the
+    /// twins their devices build.
+    pub fn build_range(
+        specs: StreamSpecs,
+        cfg: &SessionStreamCfg,
+        base: usize,
+        count: usize,
+    ) -> Result<StreamSet, CodecError> {
+        let mut streams = Vec::with_capacity(count);
+        for d in base..base + count {
             streams.push(DeviceStreams::build(&specs, cfg, d)?);
         }
         Ok(StreamSet { specs, streams })

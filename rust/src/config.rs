@@ -11,12 +11,13 @@
 
 use crate::codecs::selection::Selection;
 use crate::codecs::stream::{
-    DeviceStreams, SessionStreamCfg, StreamSet, StreamSpecs,
+    self, DeviceStreams, SessionStreamCfg, StreamSet, StreamSpecs,
 };
 use crate::data::partition::Partition;
 use crate::entropy::AlphaSchedule;
 use crate::net::{DeviceLink, ServerModel};
 use crate::sched::Policy;
+use crate::shard::Topology;
 
 /// Which compressor runs on the smashed-data streams (the `--codec`
 /// shorthand: applied to uplink and downlink unless overridden per
@@ -102,6 +103,14 @@ pub struct ExperimentConfig {
     /// InOrder forces 1. Fingerprinted: a batched engine session's fused
     /// update changes numerics, so fleets must agree on the window.
     pub batch_window: usize,
+    /// `--shards`: how many shard servers the device fleet is partitioned
+    /// across (1 = single server, the historical topology). Fingerprinted:
+    /// sharding changes the server-model update order, so every node of a
+    /// cluster must agree.
+    pub shards: usize,
+    /// `--shard-sync-every`: cross-shard FedAvg cadence in rounds (only
+    /// meaningful with `--shards > 1`). Fingerprinted for the same reason.
+    pub shard_sync_every: usize,
 }
 
 impl ExperimentConfig {
@@ -133,6 +142,8 @@ impl ExperimentConfig {
             schedule: Policy::InOrder,
             sync_codec: None,
             batch_window: 1,
+            shards: 1,
+            shard_sync_every: 1,
         }
     }
 
@@ -176,6 +187,39 @@ impl ExperimentConfig {
             .map_err(String::from)
     }
 
+    /// Build the stream codecs for the device slice shard `shard_id`
+    /// serves (locally indexed, globally seeded — see
+    /// [`StreamSet::build_range`]).
+    pub fn stream_set_for_shard(
+        &self,
+        channels: usize,
+        shard_id: usize,
+    ) -> Result<StreamSet, String> {
+        let shape = self.topology().shape_for(self.devices, shard_id);
+        let specs = self.stream_specs()?;
+        StreamSet::build_range(
+            specs,
+            &self.session_stream_cfg(channels),
+            shape.base,
+            shape.local,
+        )
+        .map_err(String::from)
+    }
+
+    /// Build the codec pair for shard `shard_id`'s coordinator link:
+    /// `(push, broadcast)` twins of the `--sync-codec` stream. Both ends
+    /// call this with the same arguments and hold identical instances.
+    pub fn shard_link_streams(
+        &self,
+        shard_id: usize,
+    ) -> Result<(Box<dyn crate::codecs::Codec>, Box<dyn crate::codecs::Codec>), String>
+    {
+        let specs = self.stream_specs()?;
+        // shard links carry flattened parameters: one logical channel
+        stream::shard_sync_streams(&specs, &self.session_stream_cfg(1), shard_id)
+            .map_err(String::from)
+    }
+
     /// Build one device's four stream codecs (the device side of a
     /// session; the server's [`StreamSet`] holds the identical twins).
     pub fn device_streams(&self, channels: usize, device: usize) -> Result<DeviceStreams, String> {
@@ -184,15 +228,43 @@ impl ExperimentConfig {
             .map_err(String::from)
     }
 
+    /// The cluster topology these flags describe.
+    pub fn topology(&self) -> Topology {
+        Topology { shards: self.shards, sync_every: self.shard_sync_every }
+    }
+
     /// Project this experiment onto the shape a transport server session
     /// enforces. `eval_batch` comes from the model geometry (the artifact
-    /// manifest's batch, or the mock batch).
+    /// manifest's batch, or the mock batch). A single server is shard 0
+    /// of a 1-shard topology.
     pub fn serve_config(
         &self,
         eval_batch: usize,
     ) -> Result<crate::transport::server::ServeConfig, String> {
+        self.serve_config_for_shard(eval_batch, 0)
+    }
+
+    /// [`ExperimentConfig::serve_config`] for shard `shard_id` of the
+    /// configured topology: the runtime serves the contiguous global
+    /// device-id slice [`Topology::shape_for`] assigns to it.
+    pub fn serve_config_for_shard(
+        &self,
+        eval_batch: usize,
+        shard_id: usize,
+    ) -> Result<crate::transport::server::ServeConfig, String> {
+        let topo = self.topology();
+        topo.validate(self.devices, self.client_agg_every)?;
+        if shard_id >= topo.shards {
+            return Err(format!(
+                "shard id {shard_id} out of range ({} shards)",
+                topo.shards
+            ));
+        }
+        let shape = topo.shape_for(self.devices, shard_id);
         Ok(crate::transport::server::ServeConfig {
-            devices: self.devices,
+            devices: shape.local,
+            global_devices: shape.global,
+            device_base: shape.base,
             rounds: self.rounds,
             lr: self.lr,
             eval_every: self.eval_every,
@@ -229,7 +301,7 @@ impl ExperimentConfig {
             .map(|s| s.table())
             .unwrap_or_else(|e| format!("invalid({e})"));
         let repr = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}|{}|{}|{}",
             self.dataset,
             self.seed,
             self.lr.to_bits(),
@@ -250,17 +322,37 @@ impl ExperimentConfig {
             self.alpha,
             self.schedule.label(),
             self.batch_window,
+            self.shards,
+            self.shard_sync_every,
         );
         crate::codecs::stream::fnv1a(&repr)
     }
 
-    /// The fleet's network simulator.
+    /// The full fleet's network simulator. With `shards == 1` (the
+    /// default) this is the whole-fleet slice of [`Self::network_for_shard`];
+    /// sharded in-process trainers never call it.
     pub fn network(&self) -> crate::net::NetworkSim {
+        let full = crate::shard::Topology::single().shape_for(self.devices, 0);
+        self.network_for_slice(full)
+    }
+
+    /// The network simulator for the device slice shard `shard_id` serves
+    /// (heterogeneous speeds are sliced by global device id, so a device
+    /// keeps its link whichever shard it lands on).
+    pub fn network_for_shard(&self, shard_id: usize) -> crate::net::NetworkSim {
+        self.network_for_slice(self.topology().shape_for(self.devices, shard_id))
+    }
+
+    fn network_for_slice(&self, shape: crate::shard::FleetShape) -> crate::net::NetworkSim {
         if self.device_speeds.is_empty() {
-            crate::net::NetworkSim::homogeneous(self.devices, self.link, self.server)
+            crate::net::NetworkSim::homogeneous(shape.local, self.link, self.server)
         } else {
             assert_eq!(self.device_speeds.len(), self.devices);
-            crate::net::NetworkSim::heterogeneous(self.link, &self.device_speeds, self.server)
+            crate::net::NetworkSim::heterogeneous(
+                self.link,
+                &self.device_speeds[shape.base..shape.base + shape.local],
+                self.server,
+            )
         }
     }
 
@@ -297,6 +389,7 @@ impl ExperimentConfig {
         if self.batch_window == 0 {
             return Err("batch window must be >= 1".into());
         }
+        self.topology().validate(self.devices, self.client_agg_every)?;
         // parses (and therefore registry-validates) all three stream specs
         self.stream_specs()?;
         if let Policy::ArrivalOrder { straggler_timeout_s, min_quorum } = self.schedule {
@@ -362,6 +455,60 @@ mod tests {
         let mut c = ExperimentConfig::default_for("ham");
         c.batch_window = 0;
         assert!(c.validate().is_err());
+
+        // 5 devices do not split across 2 shards
+        let mut c = ExperimentConfig::default_for("ham");
+        c.shards = 2;
+        assert!(c.validate().is_err());
+
+        // sync cadence must land on aggregation rounds
+        let mut c = ExperimentConfig::default_for("ham");
+        c.devices = 4;
+        c.shards = 2;
+        c.client_agg_every = 2;
+        c.shard_sync_every = 3;
+        assert!(c.validate().is_err());
+        c.shard_sync_every = 4;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn topology_is_fingerprinted_and_shapes_serve_config() {
+        let mut a = ExperimentConfig::default_for("ham");
+        a.devices = 4;
+        let mut b = a.clone();
+        b.shards = 2;
+        b.validate().unwrap();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = b.clone();
+        c.shard_sync_every = 4;
+        c.validate().unwrap();
+        assert_ne!(b.fingerprint(), c.fingerprint());
+
+        // shard 1 of 2 serves global devices 2..4 as local slots 0..2
+        let s = b.serve_config_for_shard(32, 1).unwrap();
+        assert_eq!(s.devices, 2);
+        assert_eq!(s.global_devices, 4);
+        assert_eq!(s.device_base, 2);
+        assert_eq!(s.gid(0), 2);
+        assert_eq!(s.gid(1), 3);
+        assert!(b.serve_config_for_shard(32, 2).is_err());
+
+        // the unsharded projection keeps the flat shape
+        let s = a.serve_config(32).unwrap();
+        assert_eq!(s.devices, 4);
+        assert_eq!(s.global_devices, 4);
+        assert_eq!(s.device_base, 0);
+
+        // shard stream sets are locally indexed
+        let set = b.stream_set_for_shard(8, 1).unwrap();
+        assert_eq!(set.devices(), 2);
+        // shard link codecs build for the sync spec
+        let (push, bcast) = b.shard_link_streams(0).unwrap();
+        assert_eq!(push.name(), "identity");
+        assert_eq!(bcast.name(), "identity");
+        // per-shard network slices the fleet
+        assert_eq!(b.network_for_shard(1).devices(), 2);
     }
 
     #[test]

@@ -30,6 +30,14 @@
 //! `server_dispatches` vs `server_steps` shows the amortization); the
 //! default window of 1 — and InOrder always — is the historical
 //! per-device dispatch, bit-for-bit.
+//!
+//! With `--shards M > 1` the in-process twin of a whole *cluster* —
+//! M shard sessions plus the coordinator tier — is
+//! [`run_sharded_mock`] (re-exported from [`crate::shard::sim`]): shard
+//! sessions on threads over loopback, the real coordinator over channel
+//! transports, deterministic end to end. The engine path runs sharded as
+//! real processes (`slacc serve --role shard|coordinator`,
+//! `examples/sharded.rs`) because PJRT objects never cross threads.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -39,6 +47,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::device::DeviceState;
 use crate::coordinator::metrics::MetricsLog;
 pub use crate::coordinator::metrics::TrainReport;
+pub use crate::shard::sim::{run_sharded_mock, ShardedReport};
 use crate::data::loader::BatchLoader;
 use crate::data::{partition, Dataset};
 use crate::runtime::Engine;
@@ -89,17 +98,30 @@ fn build_device_state(
 /// Build the PJRT-backed server runtime for a standalone `slacc serve`
 /// process (loads its own engine).
 pub fn engine_runtime(cfg: &ExperimentConfig) -> Result<ServerRuntime<EngineCompute>, String> {
+    engine_runtime_for_shard(cfg, 0)
+}
+
+/// [`engine_runtime`] for shard `shard_id` of a multi-server topology:
+/// the runtime serves that shard's contiguous global-device-id slice
+/// (stream codecs and network links stay globally seeded/sliced, so a
+/// device trains identically whichever shard serves it). The caller
+/// attaches the coordinator link
+/// ([`ServerRuntime::attach_shard_link`]) before serving.
+pub fn engine_runtime_for_shard(
+    cfg: &ExperimentConfig,
+    shard_id: usize,
+) -> Result<ServerRuntime<EngineCompute>, String> {
     cfg.validate()?;
     let engine = Rc::new(RefCell::new(Engine::load(&cfg.artifacts_dir())?));
     let (train, test) = Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
     let geom = load_geom(&engine.borrow(), &train)?;
     ServerRuntime::new(
-        cfg.serve_config(geom.batch)?,
+        cfg.serve_config_for_shard(geom.batch, shard_id)?,
         EngineCompute::new(engine, cfg.entropy_via_kernel),
         geom.server_init,
-        cfg.stream_set(geom.channels)?,
+        cfg.stream_set_for_shard(geom.channels, shard_id)?,
         Arc::new(test),
-        cfg.network(),
+        cfg.network_for_shard(shard_id),
     )
 }
 
@@ -140,6 +162,15 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(cfg: ExperimentConfig) -> Result<Trainer, String> {
         cfg.validate()?;
+        if cfg.shards > 1 {
+            return Err(format!(
+                "the in-process trainer drives a single server; --shards {} needs \
+                 the multi-process topology (slacc serve --role shard|coordinator \
+                 + slacc device) — or shard::sim::run_sharded_mock for an \
+                 engine-free in-process cluster",
+                cfg.shards
+            ));
+        }
         let engine = Rc::new(RefCell::new(Engine::load(&cfg.artifacts_dir())?));
         let (train, test) =
             Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
@@ -214,7 +245,8 @@ impl Trainer {
         for (w, c) in workers.iter().zip(dev_conns.iter_mut()) {
             c.send(&w.hello())?;
         }
-        let (mut conns, hellos) = handshake(std::mem::take(srv_conns), runtime.devices())?;
+        let shape = crate::shard::FleetShape::flat(runtime.devices());
+        let (mut conns, hellos) = handshake(std::mem::take(srv_conns), shape)?;
         runtime.serve(&mut conns, &hellos, |d| pump(&mut workers[d], &mut dev_conns[d]))
     }
 }

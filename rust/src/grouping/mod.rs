@@ -1,7 +1,11 @@
-//! 1-D clustering substrate for CGC (paper Eq. 4).
+//! 1-D entropy-grouping substrate for CGC (paper Eq. 4).
 //!
-//! CGC clusters per-channel entropies — scalars — into `g` groups. Two
-//! implementations:
+//! (Renamed from `cluster` — "cluster" now means the multi-server
+//! topology tier, [`crate::shard`]; a deprecated `crate::cluster` alias
+//! re-exports this module for downstream callers.)
+//!
+//! CGC groups per-channel entropies — scalars — into `g` clusters via
+//! 1-D k-means. Two implementations:
 //!
 //! * [`kmeans_1d`]: Lloyd's algorithm with k-means++ seeding, what the paper
 //!   names. Deterministic given the RNG seed.

@@ -21,16 +21,29 @@
 
 pub mod bench;
 pub mod cli;
-pub mod cluster;
 pub mod codecs;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod entropy;
+pub mod grouping;
 pub mod net;
 pub mod quant;
 pub mod runtime;
 pub mod sched;
+pub mod shard;
 pub mod tensor;
 pub mod transport;
 pub mod util;
+
+/// Deprecated alias of [`grouping`], kept for downstream callers. The 1-D
+/// k-means substrate was renamed so "cluster" unambiguously means the
+/// multi-server topology tier ([`shard`]) going forward.
+#[deprecated(
+    since = "0.2.0",
+    note = "renamed to `grouping`; `cluster` now refers to the multi-server \
+            topology tier (see the `shard` module)"
+)]
+pub mod cluster {
+    pub use crate::grouping::*;
+}

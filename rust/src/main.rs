@@ -29,15 +29,21 @@ use std::time::Duration;
 use slacc::cli::Args;
 use slacc::codecs::{self, RoundCtx};
 use slacc::config::{CodecChoice, ExperimentConfig};
-use slacc::coordinator::trainer::{engine_runtime, engine_worker, TrainReport, Trainer};
+use slacc::coordinator::trainer::{
+    engine_runtime_for_shard, engine_worker, TrainReport, Trainer,
+};
 use slacc::data::partition::Partition;
 use slacc::data::Dataset;
 use slacc::entropy::AlphaSchedule;
+use slacc::sched::fleet::ShardFleet;
 use slacc::sched::Policy;
+use slacc::shard::coordinator::Coordinator;
+use slacc::shard::link::ShardLink;
+use slacc::shard::Role;
 use slacc::transport::device::{mock_worker, run_blocking};
-use slacc::transport::server::{accept_and_serve, mock_runtime};
+use slacc::transport::server::{accept_and_serve, mock_runtime_for_shard};
 use slacc::transport::tcp::TcpTransport;
-use slacc::transport::Transport;
+use slacc::transport::{session_fingerprint, Transport};
 use slacc::util::logging;
 
 fn main() {
@@ -113,11 +119,20 @@ fn print_help() {
                                    coalesced into one server_step dispatch\n\
                                    [1]; inorder always forces 1\n\
            --sync-codec SPEC       codec for ModelSync traffic [identity]\n\
+           --shards M              split the fleet across M shard servers [1]\n\
+           --shard-sync-every K    cross-shard FedAvg cadence in rounds [1]\n\
          serve flags (train flags plus):\n\
-           --bind ADDR             listen address          [127.0.0.1:7878]\n\
+           --bind ADDR             device listen address   [127.0.0.1:7878]\n\
            --mock                  mock model (no PJRT artifacts needed)\n\
+           --role shard|coordinator  this node's topology role [shard]\n\
+           --shard-id K            this shard's slot in 0..shards [0]\n\
+           --shard-bind ADDR       coordinator listen address (shard role,\n\
+                                   shards > 1)             [127.0.0.1:7978]\n\
+           --connect-shard A,B,... shard --shard-bind addresses, one per\n\
+                                   shard (coordinator role, required)\n\
          device flags (train flags plus):\n\
-           --id N                  this device's slot in 0..devices (required)\n\
+           --id N                  this device's GLOBAL slot in 0..devices\n\
+                                   (required; connect to the shard serving it)\n\
            --connect ADDR          server address          [127.0.0.1:7878]\n\
            --mock                  mock model (must match the server)\n\
          common:\n\
@@ -179,6 +194,8 @@ fn config_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
         cfg.sync_codec = Some(name);
     }
     cfg.batch_window = args.usize_or("batch-window", cfg.batch_window);
+    cfg.shards = args.usize_or("shards", cfg.shards);
+    cfg.shard_sync_every = args.usize_or("shard-sync-every", cfg.shard_sync_every);
     cfg.uplink_codec = args.str_opt("uplink-codec");
     cfg.downlink_codec = args.str_opt("downlink-codec");
 
@@ -277,30 +294,142 @@ fn use_mock(cfg: &ExperimentConfig, mock_flag: bool) -> Result<bool, String> {
 fn cmd_serve(mut args: Args) -> Result<(), String> {
     let cfg = config_from_args(&mut args)?;
     let bind = args.str_or("bind", "127.0.0.1:7878");
+    let role = Role::parse(&args.str_or("role", "shard"))?;
+    let shard_id = args.usize_or("shard-id", 0);
+    let shard_bind = args.str_or("shard-bind", "127.0.0.1:7978");
+    let connect_shard = args.str_opt("connect-shard");
     let mock = args.bool_or("mock", false);
     let csv = args.str_opt("csv");
     args.finish()?;
     cfg.validate()?;
 
     let mock = use_mock(&cfg, mock)?;
-    let listener =
-        TcpListener::bind(&bind).map_err(|e| format!("bind {bind}: {e}"))?;
-    let addr = listener.local_addr().map_err(|e| e.to_string())?;
+    match role {
+        Role::Coordinator => serve_coordinator(cfg, connect_shard, mock),
+        Role::Shard => serve_shard(cfg, bind, shard_id, shard_bind, mock, csv),
+    }
+}
+
+/// The coordinator tier: connect to every shard's `--shard-bind` address
+/// and run cross-shard FedAvg until the cluster finishes.
+fn serve_coordinator(
+    cfg: ExperimentConfig,
+    connect_shard: Option<String>,
+    mock: bool,
+) -> Result<(), String> {
+    if cfg.shards < 2 {
+        return Err("--role coordinator needs --shards >= 2".into());
+    }
+    let addrs: Vec<String> = connect_shard
+        .ok_or(
+            "--role coordinator needs --connect-shard ADDR[,ADDR...] (one per \
+             shard's --shard-bind, in shard-id order)",
+        )?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if addrs.len() != cfg.shards {
+        return Err(format!(
+            "--connect-shard lists {} address(es) for --shards {}",
+            addrs.len(),
+            cfg.shards
+        ));
+    }
+    let kind = if mock { "mock" } else { "engine" };
+    let mut conns: Vec<Box<dyn Transport>> = Vec::with_capacity(addrs.len());
+    for (k, addr) in addrs.iter().enumerate() {
+        println!("slacc coordinator: connecting to shard {k} at {addr}");
+        conns.push(Box::new(TcpTransport::connect_retry(
+            addr,
+            120,
+            Duration::from_millis(250),
+        )?));
+    }
+    let mut coordinator = Coordinator::from_experiment(&cfg, kind)?;
+    let mut fleet = ShardFleet::new(conns);
+    let report = coordinator.run(&mut fleet)?;
     println!(
-        "slacc serve: listening on {addr}, waiting for {} device(s) \
-         [{}, schedule={}, mock={mock}]",
-        cfg.devices,
+        "\n=== coordinator report ===\n\
+         shards            : {}\n\
+         sync epochs       : {}\n\
+         shard-sync bytes  : {:.2} KB up / {:.2} KB down",
+        report.shards,
+        report.sync_epochs,
+        report.bytes_up as f64 / 1e3,
+        report.bytes_down as f64 / 1e3
+    );
+    Ok(())
+}
+
+/// A (possibly the only) shard server: in a sharded cluster, accept the
+/// coordinator on `--shard-bind` first, then the shard's device slice on
+/// `--bind`.
+fn serve_shard(
+    cfg: ExperimentConfig,
+    bind: String,
+    shard_id: usize,
+    shard_bind: String,
+    mock: bool,
+    csv: Option<String>,
+) -> Result<(), String> {
+    let topo = cfg.topology();
+    if shard_id >= topo.shards {
+        return Err(format!(
+            "--shard-id {shard_id} out of range (--shards {})",
+            topo.shards
+        ));
+    }
+    let link = if topo.is_sharded() {
+        let shard_listener = TcpListener::bind(&shard_bind)
+            .map_err(|e| format!("bind {shard_bind}: {e}"))?;
+        println!(
+            "slacc serve [shard {shard_id}/{}]: waiting for the coordinator on \
+             {shard_bind}",
+            topo.shards
+        );
+        let conn = TcpTransport::accept_direct(&shard_listener)?;
+        let (train, _) =
+            Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+        let weight = slacc::shard::shard_weight(&cfg, &train, shard_id);
+        let kind = if mock { "mock" } else { "engine" };
+        let session_fp = session_fingerprint(cfg.fingerprint(), kind);
+        Some(ShardLink::handshake(
+            Box::new(conn),
+            &topo,
+            shard_id,
+            weight,
+            session_fp,
+            cfg.shard_link_streams(shard_id)?,
+        )?)
+    } else {
+        None
+    };
+
+    let listener = TcpListener::bind(&bind).map_err(|e| format!("bind {bind}: {e}"))?;
+    let addr = listener.local_addr().map_err(|e| e.to_string())?;
+    let local = topo.shape_for(cfg.devices, shard_id).local;
+    println!(
+        "slacc serve: listening on {addr}, waiting for {local} device(s) \
+         [{}, schedule={}, shards={}, mock={mock}]",
         cfg.stream_specs().map(|s| s.table()).unwrap_or_default(),
         cfg.schedule.label(),
+        topo.shards,
     );
 
     let report = if mock {
         let (_, test) =
             Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
-        let mut rt = mock_runtime(&cfg, Arc::new(test))?;
+        let mut rt = mock_runtime_for_shard(&cfg, shard_id, Arc::new(test))?;
+        if let Some(link) = link {
+            rt.attach_shard_link(link);
+        }
         accept_and_serve(&mut rt, &listener)?
     } else {
-        let mut rt = engine_runtime(&cfg)?;
+        let mut rt = engine_runtime_for_shard(&cfg, shard_id)?;
+        if let Some(link) = link {
+            rt.attach_shard_link(link);
+        }
         accept_and_serve(&mut rt, &listener)?
     };
     print_report(&report, csv)

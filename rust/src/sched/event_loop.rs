@@ -22,6 +22,7 @@ use std::time::Instant;
 
 use crate::sched::fleet::Fleet;
 use crate::sched::poll;
+use crate::shard::FleetShape;
 use crate::transport::proto::{FrameDecoder, Message};
 use crate::transport::server::{hello_from_message, DeviceHello};
 use crate::transport::{TransportError, WireStats};
@@ -69,14 +70,17 @@ pub struct PollFleet {
 }
 
 impl PollFleet {
-    /// Accept `devices` connections, run the Hello handshake through the
-    /// poll loop, and return the fleet with connections re-indexed by
-    /// device id (TCP accept order is racy; the Hello says which slot each
-    /// connection serves).
+    /// Accept one connection per served device slot, run the Hello
+    /// handshake through the poll loop, and return the fleet with
+    /// connections re-indexed by local slot (TCP accept order is racy;
+    /// the Hello says which slot each connection serves). `shape` is the
+    /// fleet slice this node serves — [`FleetShape::flat`] for a single
+    /// server, a shard's contiguous range in a multi-server topology.
     pub fn accept(
         listener: &TcpListener,
-        devices: usize,
+        shape: FleetShape,
     ) -> Result<(PollFleet, Vec<DeviceHello>), String> {
+        let devices = shape.local;
         let mut conns = Vec::with_capacity(devices);
         for i in 0..devices {
             crate::log_info!("sched: waiting for device connection {}/{devices}", i + 1);
@@ -122,7 +126,7 @@ impl PollFleet {
                 ));
             }
             let peer = fleet.conns[i].peer.clone();
-            let hello = hello_from_message(msg, devices, &peer)?;
+            let hello = hello_from_message(msg, shape, &peer)?;
             crate::log_info!(
                 "sched: device {} connected from {peer} (shard={}, {})",
                 hello.device_id,
@@ -139,22 +143,23 @@ impl PollFleet {
             return Err("handshake: a device pipelined frames before HelloAck".into());
         }
 
-        // re-index connections by declared device id
+        // re-index connections by declared device id's local slot
         let mut slots: Vec<Option<(PollConn, DeviceHello)>> =
             (0..devices).map(|_| None).collect();
         for (conn, hello) in fleet.conns.into_iter().zip(by_conn.into_iter()) {
             let hello = hello.expect("every connection delivered a Hello");
             let id = hello.device_id;
-            if slots[id].is_some() {
+            let slot = shape.slot(id).expect("validated by hello_from_message");
+            if slots[slot].is_some() {
                 return Err(format!("two connections claim device id {id}"));
             }
-            slots[id] = Some((conn, hello));
+            slots[slot] = Some((conn, hello));
         }
         let mut conns = Vec::with_capacity(devices);
         let mut hellos = Vec::with_capacity(devices);
-        for (d, slot) in slots.into_iter().enumerate() {
-            let (conn, hello) =
-                slot.ok_or_else(|| format!("no connection for device {d}"))?;
+        for (slot, entry) in slots.into_iter().enumerate() {
+            let (conn, hello) = entry
+                .ok_or_else(|| format!("no connection for device {}", shape.gid(slot)))?;
             conns.push(conn);
             hellos.push(hello);
         }
@@ -385,7 +390,7 @@ impl Fleet for PollFleet {
         }
     }
 
-    fn pump(&mut self, _d: usize) -> Result<(), String> {
+    fn pump(&mut self, _d: usize) -> Result<(), TransportError> {
         Ok(()) // remote devices run themselves
     }
 
@@ -438,7 +443,7 @@ mod tests {
                 assert!(matches!(ack, Message::HelloAck { .. }));
             }));
         }
-        let (mut fleet, hellos) = PollFleet::accept(&listener, 3).unwrap();
+        let (mut fleet, hellos) = PollFleet::accept(&listener, FleetShape::flat(3)).unwrap();
         assert_eq!(fleet.devices(), 3);
         for (d, h) in hellos.iter().enumerate() {
             assert_eq!(h.device_id, d);
@@ -471,7 +476,7 @@ mod tests {
                 let _ = t.recv(); // hold the socket open until shutdown
             }));
         }
-        let (mut fleet, _) = PollFleet::accept(&listener, 2).unwrap();
+        let (mut fleet, _) = PollFleet::accept(&listener, FleetShape::flat(2)).unwrap();
         let (first, _) = fleet.recv_any(None).unwrap().unwrap();
         assert_eq!(first, 1, "the fast device must surface first");
         let (second, _) = fleet.recv_any(None).unwrap().unwrap();
@@ -493,7 +498,7 @@ mod tests {
             t.send(&hello(0, 1)).unwrap();
             let _ = t.recv(); // blocks until shutdown
         });
-        let (mut fleet, _) = PollFleet::accept(&listener, 1).unwrap();
+        let (mut fleet, _) = PollFleet::accept(&listener, FleetShape::flat(1)).unwrap();
         let t0 = Instant::now();
         assert!(fleet.recv_any(Some(0.05)).unwrap().is_none());
         let waited = t0.elapsed().as_secs_f64();
@@ -512,7 +517,7 @@ mod tests {
             t.send(&hello(0, 1)).unwrap();
             // drop: clean close after the handshake
         });
-        let (mut fleet, _) = PollFleet::accept(&listener, 1).unwrap();
+        let (mut fleet, _) = PollFleet::accept(&listener, FleetShape::flat(1)).unwrap();
         handle.join().unwrap();
         let err = fleet.recv_from(0).unwrap_err();
         assert!(err.is_peer_closed(), "want PeerClosed, got {err:?}");

@@ -14,6 +14,11 @@
 //!   deterministic in unit tests — no real sleeping anywhere.
 //! * [`crate::sched::event_loop::PollFleet`] — real non-blocking TCP
 //!   sockets behind `poll`, wall-clock time.
+//! * [`ShardFleet`] — a fleet whose "devices" are downstream shard
+//!   *servers*: the coordinator tier of a multi-server topology drives
+//!   inter-shard ModelSync through the same [`Fleet`] seam, over any
+//!   [`Transport`] (TCP across machines, [`crate::transport::channel`]
+//!   between threads).
 
 use std::collections::VecDeque;
 
@@ -46,7 +51,7 @@ pub trait Fleet {
 
     /// Give an in-process device worker its turn (no-op on socket fleets,
     /// where remote devices run themselves).
-    fn pump(&mut self, d: usize) -> Result<(), String>;
+    fn pump(&mut self, d: usize) -> Result<(), TransportError>;
 
     /// Framed-byte accounting for device `d`'s connection.
     fn stats(&self, d: usize) -> WireStats;
@@ -56,7 +61,7 @@ pub trait Fleet {
 }
 
 /// In-process fleet over loopback transports (see module docs).
-pub struct PumpFleet<'a, P: FnMut(usize) -> Result<(), String>> {
+pub struct PumpFleet<'a, P: FnMut(usize) -> Result<(), TransportError>> {
     conns: &'a mut [Box<dyn Transport>],
     pump_fn: P,
     /// per-device queue of (message, virtual arrival time)
@@ -67,7 +72,7 @@ pub struct PumpFleet<'a, P: FnMut(usize) -> Result<(), String>> {
     now: f64,
 }
 
-impl<'a, P: FnMut(usize) -> Result<(), String>> PumpFleet<'a, P> {
+impl<'a, P: FnMut(usize) -> Result<(), TransportError>> PumpFleet<'a, P> {
     /// Plain fleet: no artificial delays, arrival ties broken by device id
     /// (which makes zero-delay arrival-order runs identical to in-order).
     pub fn new(conns: &'a mut [Box<dyn Transport>], pump_fn: P) -> PumpFleet<'a, P> {
@@ -104,7 +109,7 @@ impl<'a, P: FnMut(usize) -> Result<(), String>> PumpFleet<'a, P> {
 
     /// Pump device `d` and stamp anything it produced with an arrival time.
     fn fill(&mut self, d: usize) -> Result<(), TransportError> {
-        (self.pump_fn)(d).map_err(TransportError::Protocol)?;
+        (self.pump_fn)(d)?;
         while let Some(msg) = self.conns[d].try_recv()? {
             let arrival = if self.delays[d] > 0.0 {
                 let jitter = self.rng.range_f32(0.9, 1.1) as f64;
@@ -136,7 +141,7 @@ impl<'a, P: FnMut(usize) -> Result<(), String>> PumpFleet<'a, P> {
     }
 }
 
-impl<P: FnMut(usize) -> Result<(), String>> Fleet for PumpFleet<'_, P> {
+impl<P: FnMut(usize) -> Result<(), TransportError>> Fleet for PumpFleet<'_, P> {
     fn devices(&self) -> usize {
         self.conns.len()
     }
@@ -206,8 +211,86 @@ impl<P: FnMut(usize) -> Result<(), String>> Fleet for PumpFleet<'_, P> {
         }
     }
 
-    fn pump(&mut self, d: usize) -> Result<(), String> {
+    fn pump(&mut self, d: usize) -> Result<(), TransportError> {
         (self.pump_fn)(d)
+    }
+
+    fn stats(&self, d: usize) -> WireStats {
+        self.conns[d].stats()
+    }
+
+    fn peer(&self, d: usize) -> String {
+        self.conns[d].peer()
+    }
+}
+
+/// A [`Fleet`] whose "devices" are downstream shard servers.
+///
+/// This is the seam that makes the server tier recursive: the coordinator
+/// of a multi-server topology ([`crate::shard::coordinator`]) drives its
+/// shards through the exact interface the round scheduler drives devices
+/// through — `send`/`recv_from` over the framed protocol — so everything
+/// built against [`Fleet`] (byte accounting, peer labels, future
+/// shard-level straggler policy) applies one tier up unchanged.
+///
+/// Cross-shard sync is a barrier (every active shard pushes before the
+/// merge), so the coordinator consumes messages with blocking
+/// `recv_from`; `recv_any` is a cooperative try-recv poll for transports
+/// that support it (channels; the threaded TCP accept mode), provided for
+/// [`Fleet`] completeness.
+pub struct ShardFleet {
+    conns: Vec<Box<dyn Transport>>,
+    start: std::time::Instant,
+}
+
+impl ShardFleet {
+    /// Wrap connections to the downstream shards, index = shard id.
+    pub fn new(conns: Vec<Box<dyn Transport>>) -> ShardFleet {
+        ShardFleet { conns, start: std::time::Instant::now() }
+    }
+}
+
+impl Fleet for ShardFleet {
+    fn devices(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn now_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn send(&mut self, d: usize, msg: &Message) -> Result<(), TransportError> {
+        self.conns[d].send(msg)
+    }
+
+    fn recv_from(&mut self, d: usize) -> Result<Message, TransportError> {
+        self.conns[d].recv()
+    }
+
+    fn recv_any(
+        &mut self,
+        timeout_s: Option<f64>,
+    ) -> Result<Option<(usize, Message)>, TransportError> {
+        let deadline = timeout_s.map(|t| {
+            std::time::Instant::now() + std::time::Duration::from_secs_f64(t.max(0.0))
+        });
+        loop {
+            for (d, conn) in self.conns.iter_mut().enumerate() {
+                if let Some(msg) = conn.try_recv()? {
+                    return Ok(Some((d, msg)));
+                }
+            }
+            if let Some(dl) = deadline {
+                if std::time::Instant::now() >= dl {
+                    return Ok(None);
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    fn pump(&mut self, _d: usize) -> Result<(), TransportError> {
+        Ok(()) // shard servers run themselves
     }
 
     fn stats(&self, d: usize) -> WireStats {

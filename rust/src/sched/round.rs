@@ -28,6 +28,17 @@
 //! and the simulated round time excludes carried stragglers
 //! ([`crate::net::NetworkSim::round_cost_sched`]) — closing a round
 //! without the slow device is the whole point.
+//!
+//! **Cross-shard scheduling.** When the runtime is a shard of a
+//! multi-server topology, both policies call
+//! [`ServerRuntime::cross_shard`] between the local FedAvg and its
+//! broadcast: at every [`ShardSyncPolicy`] boundary the shard exchanges
+//! its aggregated client sub-model and its server sub-model with the
+//! coordinator tier and broadcasts the *cluster-wide* merge to its
+//! devices instead of the local average. Device indices inside the
+//! scheduler are local slots; everything that crosses the wire carries
+//! the device's *global* id (`rt.cfg.gid(d)`), so a device behaves
+//! identically whichever shard serves it.
 
 use std::time::Instant;
 
@@ -56,6 +67,29 @@ enum Phase {
 pub struct SchedOutcome {
     pub rounds_run: usize,
     pub time_to_target_s: Option<f64>,
+}
+
+/// The cross-shard scheduling policy: when a shard pauses at an
+/// aggregation boundary to merge sub-models with the coordinator tier
+/// (`--shard-sync-every K`; every aggregation round at the default 1).
+/// Amortizing the sync trades inter-shard traffic and coordinator
+/// barriers against shard-model drift — the same time-vs-fidelity axis
+/// the straggler policies trade on, one tier up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSyncPolicy {
+    /// Sync every this many rounds (>= 1).
+    pub every: usize,
+}
+
+impl ShardSyncPolicy {
+    pub fn new(every: usize) -> ShardSyncPolicy {
+        ShardSyncPolicy { every: every.max(1) }
+    }
+
+    /// Is round `round` (0-based) a cross-shard sync boundary?
+    pub fn due(&self, round: usize) -> bool {
+        (round + 1) % self.every == 0
+    }
 }
 
 /// Coalesces arrival-ordered Activations into same-shaped dispatch groups
@@ -170,6 +204,9 @@ fn close_round<C: Compute>(
     // raw (pre-codec) bytes this round, accumulated by the runtime's
     // decode/encode/sync helpers — the per-stream compression-ratio axis
     let [raw_up, raw_down, raw_sync] = rt.take_round_raw();
+    // shard-link traffic (cross-shard push + merged reply) rides the
+    // ModelSync byte axis: it is FedAvg traffic, one tier up
+    let shard_wire = std::mem::take(&mut rt.shard_round_wire);
     rt.timeline.push_with_sched(cost, sched);
     // a straggling device 0 has no fresh sub-model to evaluate; skip the
     // eval rather than fail the session (InOrder never hits this)
@@ -184,7 +221,7 @@ fn close_round<C: Compute>(
         accuracy,
         bytes_up: cost.bytes_up,
         bytes_down: cost.bytes_down,
-        bytes_sync: cost.bytes_sync,
+        bytes_sync: cost.bytes_sync + shard_wire,
         raw_up,
         raw_down,
         raw_sync,
@@ -260,9 +297,10 @@ fn run_in_order<C: Compute>(
                     ))
                 }
             };
-            if r2 != round || dev != d {
+            if r2 != round || dev != rt.cfg.gid(d) {
                 return Err(format!(
-                    "round {round}: device {d} sent activations for round {r2} as device {dev}"
+                    "round {round}: device {} sent activations for round {r2} as device {dev}",
+                    rt.cfg.gid(d)
                 ));
             }
             up[d] = payload.len();
@@ -278,7 +316,7 @@ fn run_in_order<C: Compute>(
             down[d] = payload_down.len();
             fleet.send(d, &Message::Gradients {
                 round: round as u32,
-                device_id: d as u32,
+                device_id: rt.cfg.gid(d) as u32,
                 loss: loss as f32,
                 payload: payload_down,
             })?;
@@ -296,14 +334,15 @@ fn run_in_order<C: Compute>(
                 let msg = fleet.recv_from(d)?;
                 match msg {
                     Message::ModelSync { device_id, payload, .. }
-                        if device_id as usize == d && !payload.is_empty() =>
+                        if device_id as usize == rt.cfg.gid(d) && !payload.is_empty() =>
                     {
                         sync_up[d] = payload.len();
                         rt.accept_sync(d, &payload)?;
                     }
                     other => {
                         return Err(format!(
-                            "round {round}: expected non-empty ModelSync from device {d}, got {}",
+                            "round {round}: expected non-empty ModelSync from device {}, got {}",
+                            rt.cfg.gid(d),
                             other.type_name()
                         ))
                     }
@@ -312,12 +351,19 @@ fn run_in_order<C: Compute>(
             if agg_due {
                 let basis: Vec<usize> = (0..n).collect();
                 let reply = rt.fedavg_over(&basis, round)?;
+                // cross-shard boundary: merge with the other shards before
+                // broadcasting (a no-op on a single server). cross_shard
+                // only returns None for a None input (a Some push that the
+                // coordinator dropped is an error inside it)
+                let reply = rt
+                    .cross_shard(round, Some(reply))?
+                    .expect("cross_shard preserves a Some client model");
                 for d in 0..n {
                     let payload = rt.pack_broadcast(d, &reply);
                     sync_down[d] = payload.len();
                     fleet.send(d, &Message::ModelSync {
                         round: round as u32,
-                        device_id: d as u32,
+                        device_id: rt.cfg.gid(d) as u32,
                         payload,
                     })?;
                 }
@@ -374,7 +420,7 @@ fn flush_group<C: Compute>(
         down[it.d] += payload_down.len();
         fleet.send(it.d, &Message::Gradients {
             round: it.round as u32,
-            device_id: it.d as u32,
+            device_id: rt.cfg.gid(it.d) as u32,
             loss: loss as f32,
             payload: payload_down,
         })?;
@@ -519,9 +565,10 @@ fn run_arrival<C: Compute>(
             };
             match msg {
                 Message::Activations { round: r2, device_id, labels, payload } => {
-                    if device_id as usize != d {
+                    if device_id as usize != rt.cfg.gid(d) {
                         return Err(format!(
-                            "round {round}: device {d} sent activations labeled device {device_id}"
+                            "round {round}: device {} sent activations labeled device {device_id}",
+                            rt.cfg.gid(d)
                         ));
                     }
                     let (oround, osync, opened_at) = match phase[d] {
@@ -566,9 +613,10 @@ fn run_arrival<C: Compute>(
                     }
                 }
                 Message::ModelSync { round: r2, device_id, payload } => {
-                    if device_id as usize != d {
+                    if device_id as usize != rt.cfg.gid(d) {
                         return Err(format!(
-                            "round {round}: device {d} sent ModelSync labeled device {device_id}"
+                            "round {round}: device {} sent ModelSync labeled device {device_id}",
+                            rt.cfg.gid(d)
                         ));
                     }
                     let owed = match phase[d] {
@@ -629,23 +677,30 @@ fn run_arrival<C: Compute>(
         }
 
         // partial FedAvg over whatever sub-models are available; the
-        // broadcast goes only to devices at a round boundary
+        // broadcast goes only to devices at a round boundary. The
+        // cross-shard exchange still runs on a basis-less sync round
+        // (pushing only the server sub-model) so the coordinator barrier
+        // never desyncs, and can even *supply* a cluster client model a
+        // straggling shard had no local basis for.
         if agg_due {
             let basis: Vec<usize> =
                 (0..n).filter(|&d| rt.client_params[d].is_some()).collect();
-            if basis.is_empty() {
+            let local = if basis.is_empty() {
                 crate::log_debug!(
-                    "[{label}] round {round}: no sub-models available, skipping FedAvg"
+                    "[{label}] round {round}: no sub-models available for FedAvg"
                 );
+                None
             } else {
-                let reply = rt.fedavg_over(&basis, round)?;
+                Some(rt.fedavg_over(&basis, round)?)
+            };
+            if let Some(reply) = rt.cross_shard(round, local)? {
                 for d in 0..n {
                     if phase[d] == Phase::Idle {
                         let payload = rt.pack_broadcast(d, &reply);
                         sync_down[d] += payload.len();
                         fleet.send(d, &Message::ModelSync {
                             round: round as u32,
-                            device_id: d as u32,
+                            device_id: rt.cfg.gid(d) as u32,
                             payload,
                         })?;
                         fleet.pump(d)?;

@@ -1,0 +1,423 @@
+//! The coordinator tier: FedAvg across shard servers.
+//!
+//! A [`Coordinator`] drives a [`crate::sched::fleet::ShardFleet`] whose
+//! "devices" are the downstream shard servers. After a symmetric
+//! [`Message::ShardHello`] handshake (the coordinator declares the
+//! topology, each shard validates and echoes it back with its FedAvg
+//! weight), the run is a sequence of *sync epochs*: every active shard
+//! pushes its aggregated client sub-model and its server sub-model
+//! ([`Message::ShardSync`], packed through the negotiated `--sync-codec`
+//! stream), the coordinator merges each with a weighted FedAvg, and
+//! broadcasts the merged pair back. A shard leaves the tier by pushing
+//! two zero-length blobs (sent by [`crate::shard::link::ShardLink::finish`]
+//! at session end — early stopping included); the epoch loop ends when
+//! every shard has left.
+//!
+//! The merge math is the same [`fedavg_params`] the device tier uses —
+//! weighted by shard sample counts, folded in shard-id order — so a
+//! cluster-wide average at `--shard-sync-every 1` equals the single-server
+//! FedAvg up to f32 association.
+
+use crate::codecs::Codec;
+use crate::config::ExperimentConfig;
+use crate::coordinator::device::fedavg_params;
+use crate::sched::fleet::Fleet;
+use crate::tensor::Tensor;
+use crate::transport::proto::Message;
+use crate::transport::{session_fingerprint, sync, TransportError};
+
+/// One shard's codec twins on the coordinator side: `push` decodes the
+/// shard's uplink packs, `bcast` encodes the merged broadcast.
+pub struct ShardCodecs {
+    pub push: Box<dyn Codec>,
+    pub bcast: Box<dyn Codec>,
+}
+
+/// What the coordinator was launched with (every shard must echo it).
+#[derive(Debug, Clone)]
+pub struct CoordinatorCfg {
+    pub shards: usize,
+    pub sync_every: usize,
+    /// session fingerprint (config digest + compute kind) the whole
+    /// cluster must share
+    pub session_fp: u64,
+    /// codec label for logs
+    pub label: String,
+}
+
+/// Outcome of a coordinator run.
+#[derive(Debug, Clone)]
+pub struct CoordReport {
+    pub shards: usize,
+    /// completed cross-shard sync epochs (merges performed)
+    pub sync_epochs: usize,
+    /// shard → coordinator payload bytes (client + server packs)
+    pub bytes_up: usize,
+    /// coordinator → shard payload bytes
+    pub bytes_down: usize,
+    /// per-shard (up, down) payload bytes, index = shard id
+    pub per_shard: Vec<(usize, usize)>,
+}
+
+/// The coordinator runtime (see module docs).
+pub struct Coordinator {
+    cfg: CoordinatorCfg,
+    codecs: Vec<ShardCodecs>,
+    scratch: sync::SyncScratch,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorCfg, codecs: Vec<ShardCodecs>) -> Result<Coordinator, String> {
+        if cfg.shards < 2 {
+            return Err(format!(
+                "a coordinator needs at least 2 shards, got {}",
+                cfg.shards
+            ));
+        }
+        if codecs.len() != cfg.shards {
+            return Err(format!(
+                "{} codec pairs for {} shards",
+                codecs.len(),
+                cfg.shards
+            ));
+        }
+        Ok(Coordinator { cfg, codecs, scratch: sync::SyncScratch::default() })
+    }
+
+    /// Build a coordinator from the experiment flags. `compute_kind` is
+    /// the cluster's execution backend tag ("engine" / "mock") — the
+    /// coordinator runs no model itself but must fold the same tag into
+    /// the session fingerprint its shards present.
+    pub fn from_experiment(
+        cfg: &ExperimentConfig,
+        compute_kind: &str,
+    ) -> Result<Coordinator, String> {
+        cfg.validate()?;
+        let mut codecs = Vec::with_capacity(cfg.shards);
+        for k in 0..cfg.shards {
+            let (push, bcast) = cfg.shard_link_streams(k)?;
+            codecs.push(ShardCodecs { push, bcast });
+        }
+        Coordinator::new(
+            CoordinatorCfg {
+                shards: cfg.shards,
+                sync_every: cfg.shard_sync_every,
+                session_fp: session_fingerprint(cfg.fingerprint(), compute_kind),
+                label: cfg.codec.label(),
+            },
+            codecs,
+        )
+    }
+
+    /// Drive the full coordinator session over the shard fleet:
+    /// handshake, sync epochs until every shard departs, report.
+    pub fn run(&mut self, fleet: &mut dyn Fleet) -> Result<CoordReport, String> {
+        let m = self.cfg.shards;
+        let label = self.cfg.label.clone();
+        if fleet.devices() != m {
+            return Err(format!(
+                "coordinator: {} shard connections for {m} shards",
+                fleet.devices()
+            ));
+        }
+        // announce the topology to every shard, then validate the echoes
+        for k in 0..m {
+            fleet.send(k, &Message::ShardHello {
+                shard_id: k as u32,
+                shards: m as u32,
+                sync_every: self.cfg.sync_every as u32,
+                config_fp: self.cfg.session_fp,
+                weight: 0,
+            })?;
+            fleet.pump(k)?;
+        }
+        let mut weights = vec![0f64; m];
+        for k in 0..m {
+            let msg = fleet
+                .recv_from(k)
+                .map_err(|e| shard_err(k, &fleet.peer(k), &e))?;
+            weights[k] = self.validate_hello(k, msg)?;
+            crate::log_info!(
+                "[{label}] coordinator: shard {k} up ({}, weight {})",
+                fleet.peer(k),
+                weights[k]
+            );
+        }
+
+        let mut active = vec![true; m];
+        let mut epoch = 0usize;
+        let mut bytes_up = 0usize;
+        let mut bytes_down = 0usize;
+        let mut per_shard = vec![(0usize, 0usize); m];
+        loop {
+            // barrier: one message per active shard (push or departure)
+            let mut pushes: Vec<Option<(Vec<Tensor>, Vec<Tensor>)>> =
+                (0..m).map(|_| None).collect();
+            for k in 0..m {
+                if !active[k] {
+                    continue;
+                }
+                let msg = fleet
+                    .recv_from(k)
+                    .map_err(|e| shard_err(k, &fleet.peer(k), &e))?;
+                match msg {
+                    Message::ShardSync { epoch: e, shard_id, client, server } => {
+                        if shard_id as usize != k {
+                            return Err(format!(
+                                "shard {k} pushed a sync labeled shard {shard_id}"
+                            ));
+                        }
+                        if client.is_empty() && server.is_empty() {
+                            active[k] = false;
+                            crate::log_info!(
+                                "[{label}] coordinator: shard {k} left the sync \
+                                 tier after {epoch} epoch(s)"
+                            );
+                            continue;
+                        }
+                        if e as usize != epoch {
+                            return Err(format!(
+                                "shard {k} pushed sync epoch {e}, coordinator is \
+                                 at {epoch} — cadence desync"
+                            ));
+                        }
+                        let c = sync::unpack_params(&client, self.codecs[k].push.as_mut())
+                            .map_err(|e| format!("shard {k} client push: {e}"))?;
+                        let s = sync::unpack_params(&server, self.codecs[k].push.as_mut())
+                            .map_err(|e| format!("shard {k} server push: {e}"))?;
+                        if s.is_empty() {
+                            return Err(format!(
+                                "shard {k} pushed an empty server sub-model"
+                            ));
+                        }
+                        bytes_up += client.len() + server.len();
+                        per_shard[k].0 += client.len() + server.len();
+                        pushes[k] = Some((c, s));
+                    }
+                    other => {
+                        return Err(format!(
+                            "expected ShardSync from shard {k}, got {}",
+                            other.type_name()
+                        ))
+                    }
+                }
+            }
+            if pushes.iter().all(|p| p.is_none()) {
+                break; // every shard has left
+            }
+            let (merged_client, merged_server) =
+                merge_shard_models(&pushes, &weights, epoch)?;
+            for k in 0..m {
+                if pushes[k].is_none() {
+                    continue;
+                }
+                let cb = sync::pack_params_with(
+                    &merged_client,
+                    self.codecs[k].bcast.as_mut(),
+                    &mut self.scratch,
+                );
+                let sb = sync::pack_params_with(
+                    &merged_server,
+                    self.codecs[k].bcast.as_mut(),
+                    &mut self.scratch,
+                );
+                bytes_down += cb.len() + sb.len();
+                per_shard[k].1 += cb.len() + sb.len();
+                fleet.send(k, &Message::ShardSync {
+                    epoch: epoch as u32,
+                    shard_id: k as u32,
+                    client: cb,
+                    server: sb,
+                })?;
+                fleet.pump(k)?;
+            }
+            epoch += 1;
+            crate::log_debug!("[{label}] coordinator: sync epoch {epoch} merged");
+        }
+        crate::log_info!(
+            "[{label}] coordinator done: {epoch} sync epoch(s), {bytes_up} B up / \
+             {bytes_down} B down"
+        );
+        Ok(CoordReport {
+            shards: m,
+            sync_epochs: epoch,
+            bytes_up,
+            bytes_down,
+            per_shard,
+        })
+    }
+
+    /// Validate one shard's hello echo; returns its FedAvg weight.
+    fn validate_hello(&self, k: usize, msg: Message) -> Result<f64, String> {
+        match msg {
+            Message::ShardHello { shard_id, shards, sync_every, config_fp, weight } => {
+                if shard_id as usize != k {
+                    return Err(format!(
+                        "connection {k} answered as shard {shard_id} — check the \
+                         --connect-shard address order"
+                    ));
+                }
+                if shards as usize != self.cfg.shards {
+                    return Err(format!(
+                        "shard {k} was configured for {shards} shards, the \
+                         coordinator for {} — launch with the same --shards",
+                        self.cfg.shards
+                    ));
+                }
+                if sync_every as usize != self.cfg.sync_every {
+                    return Err(format!(
+                        "shard {k} syncs every {sync_every} round(s), the \
+                         coordinator every {} — launch with the same \
+                         --shard-sync-every",
+                        self.cfg.sync_every
+                    ));
+                }
+                if config_fp != self.cfg.session_fp {
+                    return Err(format!(
+                        "shard {k} presents session fingerprint {config_fp:#018x}, \
+                         the coordinator expects {:#018x} — launch every node of \
+                         the cluster with identical flags and the same \
+                         engine-vs-mock mode",
+                        self.cfg.session_fp
+                    ));
+                }
+                if weight == 0 {
+                    return Err(format!("shard {k} declares an empty device fleet"));
+                }
+                Ok(weight as f64)
+            }
+            Message::Hello { device_id, .. } => Err(format!(
+                "a device (id {device_id}) connected to the coordinator — devices \
+                 connect to a shard server's --bind address, the coordinator's \
+                 --connect-shard list points at shard --shard-bind addresses"
+            )),
+            other => Err(format!(
+                "expected ShardHello from shard {k}, got {}",
+                other.type_name()
+            )),
+        }
+    }
+}
+
+fn shard_err(k: usize, peer: &str, e: &TransportError) -> String {
+    if e.is_peer_closed() {
+        format!("shard {k} ({peer}) disconnected mid-session: {e}")
+    } else {
+        format!("shard {k} ({peer}): {e}")
+    }
+}
+
+/// Weighted FedAvg of the pushed shard sub-models, folded in shard-id
+/// order (deterministic f32 association). Server sub-models must agree in
+/// shape across every pushing shard; client sub-models are merged over
+/// the shards that had one this epoch (a quorum round on some shard may
+/// push none) with weights renormalized among them — empty result iff no
+/// shard had a client basis.
+pub(crate) fn merge_shard_models(
+    pushes: &[Option<(Vec<Tensor>, Vec<Tensor>)>],
+    weights: &[f64],
+    epoch: usize,
+) -> Result<(Vec<Tensor>, Vec<Tensor>), String> {
+    use super::shapes_match;
+    let mut server_sets: Vec<&[Tensor]> = Vec::new();
+    let mut server_w: Vec<f64> = Vec::new();
+    let mut client_sets: Vec<&[Tensor]> = Vec::new();
+    let mut client_w: Vec<f64> = Vec::new();
+    let mut first_server: Option<usize> = None;
+    let mut first_client: Option<usize> = None;
+    for (k, push) in pushes.iter().enumerate() {
+        let Some((client, server)) = push else { continue };
+        if let Some(j) = first_server {
+            if !shapes_match(server, server_sets[0]) {
+                return Err(format!(
+                    "sync epoch {epoch}: shard {k} pushed a server sub-model whose \
+                     shape differs from shard {j}'s"
+                ));
+            }
+        } else {
+            first_server = Some(k);
+        }
+        server_sets.push(server);
+        server_w.push(weights[k]);
+        if !client.is_empty() {
+            if let Some(j) = first_client {
+                if !shapes_match(client, client_sets[0]) {
+                    return Err(format!(
+                        "sync epoch {epoch}: shard {k} pushed a client sub-model \
+                         whose shape differs from shard {j}'s"
+                    ));
+                }
+            } else {
+                first_client = Some(k);
+            }
+            client_sets.push(client);
+            client_w.push(weights[k]);
+        }
+    }
+    if server_sets.is_empty() {
+        return Err(format!("sync epoch {epoch}: no shard pushed a sub-model"));
+    }
+    let merged_server = fedavg_params(&server_sets, &server_w);
+    let merged_client = if client_sets.is_empty() {
+        Vec::new()
+    } else {
+        fedavg_params(&client_sets, &client_w)
+    };
+    Ok((merged_client, merged_server))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::new(vec![v.len()], v.to_vec())
+    }
+
+    #[test]
+    fn merge_weights_by_shard_samples() {
+        let pushes = vec![
+            Some((vec![t(&[1.0])], vec![t(&[0.0, 2.0])])),
+            Some((vec![t(&[3.0])], vec![t(&[4.0, 0.0])])),
+        ];
+        // weights 1:3 — merged = 0.25*a + 0.75*b
+        let (mc, ms) = merge_shard_models(&pushes, &[1.0, 3.0], 0).unwrap();
+        assert_eq!(mc.len(), 1);
+        assert!((mc[0].data()[0] - 2.5).abs() < 1e-6);
+        assert!((ms[0].data()[0] - 3.0).abs() < 1e-6);
+        assert!((ms[0].data()[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_skips_clientless_pushes_and_renormalizes() {
+        let pushes = vec![
+            Some((Vec::new(), vec![t(&[2.0])])),
+            Some((vec![t(&[6.0])], vec![t(&[4.0])])),
+        ];
+        let (mc, ms) = merge_shard_models(&pushes, &[1.0, 1.0], 1).unwrap();
+        // only shard 1 had a client model: merge == its model exactly
+        assert_eq!(mc.len(), 1);
+        assert!((mc[0].data()[0] - 6.0).abs() < 1e-6);
+        // server merge still spans both shards
+        assert!((ms[0].data()[0] - 3.0).abs() < 1e-6);
+
+        // nobody had a client basis: empty client merge, server still runs
+        let pushes = vec![
+            Some((Vec::new(), vec![t(&[2.0])])),
+            Some((Vec::new(), vec![t(&[4.0])])),
+        ];
+        let (mc, _) = merge_shard_models(&pushes, &[1.0, 1.0], 2).unwrap();
+        assert!(mc.is_empty());
+    }
+
+    #[test]
+    fn merge_rejects_shape_mismatch_and_empty_epochs() {
+        let pushes = vec![
+            Some((vec![t(&[1.0])], vec![t(&[1.0, 2.0])])),
+            Some((vec![t(&[1.0])], vec![t(&[1.0])])),
+        ];
+        assert!(merge_shard_models(&pushes, &[1.0, 1.0], 0).is_err());
+        let none: Vec<Option<(Vec<Tensor>, Vec<Tensor>)>> = vec![None, None];
+        assert!(merge_shard_models(&none, &[1.0, 1.0], 0).is_err());
+    }
+}

@@ -1,0 +1,234 @@
+//! The shard side of the coordinator tier: one connection from a shard
+//! server up to its coordinator.
+//!
+//! A [`ShardLink`] owns the transport, the `--sync-codec` stream twins
+//! for both directions, and the cross-shard cadence
+//! ([`ShardSyncPolicy`]). The server runtime calls
+//! [`ShardLink::exchange`] at every due aggregation boundary — a
+//! blocking barrier with the coordinator, exactly like a device's
+//! ModelSync round-trip one tier down — and [`ShardLink::finish`] when
+//! the session ends, so the coordinator never waits on a departed shard.
+//!
+//! Sub-models ride the existing ModelSync pack format
+//! ([`crate::transport::sync`]): client and server sub-models travel as
+//! two packs inside one [`Message::ShardSync`] frame, compressed through
+//! the negotiated sync stream.
+
+use crate::codecs::Codec;
+use crate::tensor::Tensor;
+use crate::transport::proto::Message;
+use crate::transport::{sync, Transport};
+
+use super::Topology;
+use crate::sched::round::ShardSyncPolicy;
+
+/// A shard server's connection to the coordinator tier.
+pub struct ShardLink {
+    conn: Box<dyn Transport>,
+    shard_id: usize,
+    policy: ShardSyncPolicy,
+    /// compress-side codec for this shard's pushes
+    push: Box<dyn Codec>,
+    /// decode twin of the coordinator's broadcast codec
+    bcast: Box<dyn Codec>,
+    scratch: sync::SyncScratch,
+    /// next cross-shard sync epoch (increments per completed exchange)
+    epoch: usize,
+    /// wire bytes of the last exchange: (push, merged reply)
+    last_wire: (usize, usize),
+    finished: bool,
+}
+
+impl ShardLink {
+    /// Complete the coordinator handshake on a fresh connection: receive
+    /// the coordinator's [`Message::ShardHello`], validate the topology
+    /// it declares against this node's flags (shard slot, shard count,
+    /// sync cadence, session fingerprint), and echo the hello back with
+    /// this shard's FedAvg `weight` (total local training samples).
+    /// `codecs` is the `(push, broadcast)` stream pair from
+    /// [`crate::config::ExperimentConfig::shard_link_streams`].
+    pub fn handshake(
+        mut conn: Box<dyn Transport>,
+        topo: &Topology,
+        shard_id: usize,
+        weight: u64,
+        session_fp: u64,
+        codecs: (Box<dyn Codec>, Box<dyn Codec>),
+    ) -> Result<ShardLink, String> {
+        let msg = conn
+            .recv()
+            .map_err(|e| format!("shard {shard_id}: coordinator handshake: {e}"))?;
+        match msg {
+            Message::ShardHello { shard_id: sid, shards, sync_every, config_fp, .. } => {
+                if sid as usize != shard_id {
+                    return Err(format!(
+                        "coordinator addressed shard {sid}, this node is shard \
+                         {shard_id} — check the --connect-shard address order"
+                    ));
+                }
+                if shards as usize != topo.shards {
+                    return Err(format!(
+                        "coordinator runs {shards} shards, this node was launched \
+                         with --shards {} — the cluster must agree",
+                        topo.shards
+                    ));
+                }
+                if sync_every as usize != topo.sync_every {
+                    return Err(format!(
+                        "coordinator syncs every {sync_every} round(s), this node \
+                         every {} — launch both with the same --shard-sync-every",
+                        topo.sync_every
+                    ));
+                }
+                if config_fp != session_fp {
+                    return Err(format!(
+                        "coordinator presents session fingerprint {config_fp:#018x}, \
+                         this shard expects {session_fp:#018x} — launch every node \
+                         of the cluster with identical flags and the same \
+                         engine-vs-mock mode"
+                    ));
+                }
+            }
+            Message::Hello { device_id, .. } => {
+                return Err(format!(
+                    "shard {shard_id}: a device (id {device_id}) connected on the \
+                     coordinator port — devices connect to --bind, coordinators \
+                     to --shard-bind"
+                ))
+            }
+            other => {
+                return Err(format!(
+                    "shard {shard_id}: expected ShardHello from the coordinator, \
+                     got {}",
+                    other.type_name()
+                ))
+            }
+        }
+        conn.send(&Message::ShardHello {
+            shard_id: shard_id as u32,
+            shards: topo.shards as u32,
+            sync_every: topo.sync_every as u32,
+            config_fp: session_fp,
+            weight,
+        })
+        .map_err(|e| format!("shard {shard_id}: coordinator handshake reply: {e}"))?;
+        crate::log_info!(
+            "shard {shard_id}: coordinator link up ({}, weight {weight}, sync \
+             every {})",
+            conn.peer(),
+            topo.sync_every
+        );
+        let (push, bcast) = codecs;
+        Ok(ShardLink {
+            conn,
+            shard_id,
+            policy: ShardSyncPolicy::new(topo.sync_every),
+            push,
+            bcast,
+            scratch: sync::SyncScratch::default(),
+            epoch: 0,
+            last_wire: (0, 0),
+            finished: false,
+        })
+    }
+
+    /// Is round `round` a cross-shard sync boundary?
+    pub fn due(&self, round: usize) -> bool {
+        self.policy.due(round)
+    }
+
+    /// Wire bytes of the most recent exchange: (push, merged reply).
+    pub fn last_wire(&self) -> (usize, usize) {
+        self.last_wire
+    }
+
+    /// Completed sync epochs so far.
+    pub fn epochs(&self) -> usize {
+        self.epoch
+    }
+
+    /// One cross-shard sync: push this shard's aggregated client
+    /// sub-model (may be empty on a quorum round with no client basis)
+    /// and its server sub-model, block until the coordinator's merged
+    /// pair arrives, and return it. The merged client list is empty iff
+    /// no shard in the cluster had a client basis this epoch.
+    pub fn exchange(
+        &mut self,
+        client: &[Tensor],
+        server: &[Tensor],
+    ) -> Result<(Vec<Tensor>, Vec<Tensor>), String> {
+        let me = self.shard_id;
+        if self.finished {
+            return Err(format!("shard {me}: exchange after finish"));
+        }
+        if server.is_empty() {
+            return Err(format!("shard {me}: refusing to push an empty server sub-model"));
+        }
+        let client_pack = sync::pack_params_with(client, self.push.as_mut(), &mut self.scratch);
+        let server_pack = sync::pack_params_with(server, self.push.as_mut(), &mut self.scratch);
+        let pushed = client_pack.len() + server_pack.len();
+        self.conn
+            .send(&Message::ShardSync {
+                epoch: self.epoch as u32,
+                shard_id: me as u32,
+                client: client_pack,
+                server: server_pack,
+            })
+            .map_err(|e| format!("shard {me}: push to coordinator: {e}"))?;
+        let reply = self
+            .conn
+            .recv()
+            .map_err(|e| format!("shard {me}: awaiting coordinator merge: {e}"))?;
+        match reply {
+            Message::ShardSync { epoch, shard_id, client, server } => {
+                if shard_id as usize != me {
+                    return Err(format!(
+                        "shard {me}: coordinator merge addressed shard {shard_id}"
+                    ));
+                }
+                if epoch as usize != self.epoch {
+                    return Err(format!(
+                        "shard {me}: coordinator merge for epoch {epoch}, expected \
+                         {} — cadence desync",
+                        self.epoch
+                    ));
+                }
+                let received = client.len() + server.len();
+                let merged_client = sync::unpack_params(&client, self.bcast.as_mut())
+                    .map_err(|e| format!("shard {me}: merged client sub-model: {e}"))?;
+                let merged_server = sync::unpack_params(&server, self.bcast.as_mut())
+                    .map_err(|e| format!("shard {me}: merged server sub-model: {e}"))?;
+                if merged_server.is_empty() {
+                    return Err(format!(
+                        "shard {me}: coordinator merge carried no server sub-model"
+                    ));
+                }
+                self.epoch += 1;
+                self.last_wire = (pushed, received);
+                Ok((merged_client, merged_server))
+            }
+            other => Err(format!(
+                "shard {me}: expected the coordinator's ShardSync merge, got {}",
+                other.type_name()
+            )),
+        }
+    }
+
+    /// Announce a clean departure from the sync tier (two zero-length
+    /// blobs). Idempotent; called by the runtime at session end so the
+    /// coordinator never blocks on a finished shard.
+    pub fn finish(&mut self) -> Result<(), String> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        self.conn
+            .send(&Message::ShardSync {
+                epoch: self.epoch as u32,
+                shard_id: self.shard_id as u32,
+                client: Vec::new(),
+                server: Vec::new(),
+            })
+            .map_err(|e| format!("shard {}: departure notice: {e}", self.shard_id))
+    }
+}

@@ -1,0 +1,247 @@
+//! Multi-server topology tier: role-based nodes and cross-shard
+//! parameter sync.
+//!
+//! A single `slacc serve` process is the scaling ceiling no codec can
+//! lift — every device's smashed data funnels through one server model.
+//! This subsystem partitions the device fleet across several shard
+//! servers with a parameter-sync tier between them:
+//!
+//! * [`Role::Shard`] — today's behavior: a
+//!   [`crate::transport::server::ServerRuntime`] driving a device
+//!   [`crate::sched::fleet::Fleet`] (`PollFleet` over sockets, `PumpFleet`
+//!   in-process). In a sharded cluster a shard additionally holds a
+//!   [`link::ShardLink`] to the coordinator and pauses at
+//!   `--shard-sync-every` round boundaries to exchange sub-models.
+//! * [`Role::Coordinator`] — a node whose "fleet" is the downstream shard
+//!   servers themselves: a [`crate::sched::fleet::ShardFleet`] over the
+//!   same framed protocol, driven by [`coordinator::Coordinator`]. Each
+//!   sync epoch it FedAvgs the shards' client and server sub-models
+//!   (weighted by shard sample counts) and broadcasts the merge back.
+//!
+//! Inter-shard traffic rides the existing ModelSync pack format
+//! ([`crate::transport::sync`]) on the negotiated `--sync-codec` stream
+//! and is accounted on the `bytes_sync` axis. The topology (shard count,
+//! sync cadence) is folded into the session fingerprint and echoed in the
+//! [`crate::transport::proto::Message::ShardHello`] handshake, so a
+//! mismatched cluster is rejected at connect time exactly like mismatched
+//! codecs and batch windows.
+//!
+//! The fleet is split into contiguous equal ranges: shard `k` of `M`
+//! serves global device ids `[k*per, (k+1)*per)` where
+//! `per = devices / M` ([`Topology::shape_for`]). Devices keep their
+//! *global* ids everywhere — data partition, batch-loader seeds, and
+//! codec stream seeds are all derived from the global id, so a sharded
+//! cluster and a single server train the *same* per-device data streams.
+//!
+//! [`sim::run_sharded_mock`] runs the whole topology in one process
+//! (shard sessions on threads over loopback, the coordinator over
+//! [`crate::transport::channel`] transports) so the tier is testable
+//! deterministically without sockets; `examples/sharded.rs` runs the same
+//! cluster as real processes over localhost TCP.
+
+pub mod coordinator;
+pub mod link;
+pub mod sim;
+
+/// Do two tensor lists agree element-for-element in shape? The one
+/// definition both tiers validate remote sub-models against (the
+/// coordinator checking shard pushes, a shard checking the coordinator's
+/// merge) — peers are remote, so a mismatch must be an error, never a
+/// panic downstream.
+pub(crate) fn shapes_match(a: &[crate::tensor::Tensor], b: &[crate::tensor::Tensor]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.dims() == y.dims())
+}
+
+/// Shard `shard_id`'s cross-shard FedAvg weight: total training samples
+/// across its device slice. Every node derives the same partition from
+/// the shared (fingerprint-matched) config, so the cluster agrees on the
+/// weights without shipping the dataset — the single definition behind
+/// the shard CLI, the in-process simulator, and `examples/sharded.rs`.
+pub fn shard_weight(
+    cfg: &crate::config::ExperimentConfig,
+    train: &crate::data::Dataset,
+    shard_id: usize,
+) -> u64 {
+    let shape = cfg.topology().shape_for(cfg.devices, shard_id);
+    let parts =
+        crate::data::partition::partition(train, cfg.devices, cfg.partition, cfg.seed);
+    (shape.base..shape.base + shape.local)
+        .map(|g| parts.device(g).len() as u64)
+        .sum()
+}
+
+/// What a `slacc serve` node is in the topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// A (possibly the only) device-serving shard server.
+    Shard,
+    /// The cross-shard aggregation tier: serves shard servers, not devices.
+    Coordinator,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Result<Role, String> {
+        match s {
+            "shard" => Ok(Role::Shard),
+            "coordinator" => Ok(Role::Coordinator),
+            other => Err(format!("unknown --role '{other}' (shard|coordinator)")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Role::Shard => "shard",
+            Role::Coordinator => "coordinator",
+        }
+    }
+}
+
+/// The cluster shape every node must agree on: how many shard servers the
+/// device fleet is split across and how often they merge sub-models.
+/// `shards == 1` is the degenerate single-server topology (no coordinator,
+/// no shard link — exactly the pre-topology behavior).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    /// Number of shard servers the device fleet is partitioned across.
+    pub shards: usize,
+    /// `--shard-sync-every K`: the coordinator FedAvgs shard sub-models
+    /// every K rounds (1 = every round).
+    pub sync_every: usize,
+}
+
+impl Topology {
+    /// The single-server topology.
+    pub fn single() -> Topology {
+        Topology { shards: 1, sync_every: 1 }
+    }
+
+    pub fn is_sharded(&self) -> bool {
+        self.shards > 1
+    }
+
+    /// Validate against the fleet shape. A cross-shard sync round needs
+    /// fresh client sub-models to merge, so the sync cadence must land on
+    /// aggregation rounds only.
+    pub fn validate(&self, devices: usize, client_agg_every: usize) -> Result<(), String> {
+        if self.shards == 0 {
+            return Err("shards must be >= 1".into());
+        }
+        if self.sync_every == 0 {
+            return Err("--shard-sync-every must be >= 1".into());
+        }
+        if self.shards > 1 {
+            if devices % self.shards != 0 {
+                return Err(format!(
+                    "{devices} devices do not split evenly across {} shards \
+                     (the fleet is partitioned into contiguous equal ranges)",
+                    self.shards
+                ));
+            }
+            if self.sync_every % client_agg_every != 0 {
+                return Err(format!(
+                    "--shard-sync-every {} must be a multiple of --agg-every \
+                     {client_agg_every} (a cross-shard sync round needs fresh \
+                     client sub-models to merge)",
+                    self.sync_every
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The contiguous global-device-id range shard `shard_id` serves.
+    /// Call [`Topology::validate`] first; an indivisible fleet here is a
+    /// programmer error.
+    pub fn shape_for(&self, devices: usize, shard_id: usize) -> FleetShape {
+        assert!(
+            self.shards >= 1 && devices % self.shards == 0,
+            "topology not validated: {devices} devices across {} shards",
+            self.shards
+        );
+        assert!(
+            shard_id < self.shards,
+            "shard id {shard_id} out of range ({} shards)",
+            self.shards
+        );
+        let per = devices / self.shards;
+        FleetShape { global: devices, base: shard_id * per, local: per }
+    }
+}
+
+/// The slice of the global device fleet one server node handshakes with:
+/// devices declare their *global* id and the global fleet size, and the
+/// node maps ids in `[base, base + local)` onto its local slots. A
+/// single server is the `flat` shape (base 0, local == global).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetShape {
+    /// Total devices in the cluster (what every device's Hello declares).
+    pub global: usize,
+    /// First global device id served by this node.
+    pub base: usize,
+    /// Number of devices served by this node.
+    pub local: usize,
+}
+
+impl FleetShape {
+    /// The unsharded shape: one server, every device.
+    pub fn flat(n: usize) -> FleetShape {
+        FleetShape { global: n, base: 0, local: n }
+    }
+
+    /// Local slot of a global device id, if this node serves it.
+    pub fn slot(&self, gid: usize) -> Option<usize> {
+        if gid >= self.base && gid < self.base + self.local {
+            Some(gid - self.base)
+        } else {
+            None
+        }
+    }
+
+    /// Global device id of a local slot.
+    pub fn gid(&self, slot: usize) -> usize {
+        debug_assert!(slot < self.local);
+        self.base + slot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn role_parses() {
+        assert_eq!(Role::parse("shard").unwrap(), Role::Shard);
+        assert_eq!(Role::parse("coordinator").unwrap(), Role::Coordinator);
+        assert!(Role::parse("server").is_err());
+    }
+
+    #[test]
+    fn topology_validates() {
+        Topology::single().validate(5, 1).unwrap();
+        let t = Topology { shards: 2, sync_every: 4 };
+        t.validate(4, 1).unwrap();
+        t.validate(4, 2).unwrap();
+        // 5 devices across 2 shards
+        assert!(t.validate(5, 1).is_err());
+        // sync cadence off the aggregation grid
+        assert!(t.validate(4, 3).is_err());
+        assert!(Topology { shards: 0, sync_every: 1 }.validate(4, 1).is_err());
+        assert!(Topology { shards: 2, sync_every: 0 }.validate(4, 1).is_err());
+    }
+
+    #[test]
+    fn shapes_partition_the_fleet_contiguously() {
+        let t = Topology { shards: 2, sync_every: 1 };
+        let s0 = t.shape_for(4, 0);
+        let s1 = t.shape_for(4, 1);
+        assert_eq!(s0, FleetShape { global: 4, base: 0, local: 2 });
+        assert_eq!(s1, FleetShape { global: 4, base: 2, local: 2 });
+        assert_eq!(s1.slot(2), Some(0));
+        assert_eq!(s1.slot(3), Some(1));
+        assert_eq!(s1.slot(1), None);
+        assert_eq!(s1.gid(1), 3);
+        let flat = FleetShape::flat(3);
+        assert_eq!(flat.slot(2), Some(2));
+        assert_eq!(flat.slot(3), None);
+    }
+}

@@ -1,0 +1,170 @@
+//! In-process N-shard topology simulation: the whole coordinator tier in
+//! one process, deterministically.
+//!
+//! Each shard session (a mock [`ServerRuntime`] plus its local device
+//! workers over single-threaded loopback, exactly
+//! [`crate::transport::server::run_mock_loopback`]) runs on its own
+//! thread; the coordinator runs the *real*
+//! [`crate::shard::coordinator::Coordinator`] over a
+//! [`crate::sched::fleet::ShardFleet`] of
+//! [`crate::transport::channel`] transports. Nothing is stubbed: the
+//! same handshakes, frames, codec packs, and merge math run here as in a
+//! multi-process TCP cluster, so `examples/sharded.rs` can assert
+//! byte-for-byte parity between the two.
+//!
+//! Determinism: every shard's device round loop is the in-order loopback
+//! path (deterministic on its own), and cross-shard merges fold pushes in
+//! shard-id order with a full barrier per epoch — thread scheduling
+//! cannot reorder anything that affects numerics or wire bytes.
+
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::metrics::TrainReport;
+use crate::data::Dataset;
+use crate::sched::fleet::{PumpFleet, ShardFleet};
+use crate::transport::server::{
+    handshake, mock_runtime_for_shard, run_mock_loopback, ServerRuntime,
+};
+use crate::transport::{channel, device, loopback, session_fingerprint, Transport};
+
+use super::coordinator::{CoordReport, Coordinator};
+use super::link::ShardLink;
+
+/// Everything a sharded mock session produced: one [`TrainReport`] per
+/// shard (index = shard id) plus the coordinator's byte accounting.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    pub shard_reports: Vec<TrainReport>,
+    pub coordinator: CoordReport,
+}
+
+impl ShardedReport {
+    /// Total ModelSync bytes across every shard (device tier + shard
+    /// tier; the shard-link bytes ride each shard's `bytes_sync` axis).
+    pub fn total_bytes_sync(&self) -> usize {
+        self.shard_reports.iter().map(|r| r.total_bytes_sync).sum()
+    }
+
+    /// (min, max) final accuracy across shards — after a
+    /// `--shard-sync-every 1` session every shard evaluates the same
+    /// merged models, so the range collapses.
+    pub fn accuracy_range(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for r in &self.shard_reports {
+            lo = lo.min(r.final_accuracy);
+            hi = hi.max(r.final_accuracy);
+        }
+        (lo, hi)
+    }
+}
+
+/// Run a complete sharded mock session in-process (see module docs).
+/// `cfg.shards == 1` degenerates to [`run_mock_loopback`] with an empty
+/// coordinator report — the single-server baseline through the same entry
+/// point.
+pub fn run_sharded_mock(cfg: &ExperimentConfig) -> Result<ShardedReport, String> {
+    cfg.validate()?;
+    let topo = cfg.topology();
+    if !topo.is_sharded() {
+        let report = run_mock_loopback(cfg)?;
+        return Ok(ShardedReport {
+            shard_reports: vec![report],
+            coordinator: CoordReport {
+                shards: 1,
+                sync_epochs: 0,
+                bytes_up: 0,
+                bytes_down: 0,
+                per_shard: vec![(0, 0)],
+            },
+        });
+    }
+    let m = topo.shards;
+    let mut coord_ends: Vec<Box<dyn Transport>> = Vec::with_capacity(m);
+    let mut threads = Vec::with_capacity(m);
+    for k in 0..m {
+        let (shard_end, coord_end) = channel::pair(&format!("shardlink{k}"));
+        coord_ends.push(Box::new(coord_end));
+        let cfg = cfg.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("slacc-shard{k}"))
+                .spawn(move || run_mock_shard_session(&cfg, k, Box::new(shard_end)))
+                .map_err(|e| format!("spawn shard {k}: {e}"))?,
+        );
+    }
+    let mut coordinator = Coordinator::from_experiment(cfg, "mock")?;
+    let mut fleet = ShardFleet::new(coord_ends);
+    let coord_result = coordinator.run(&mut fleet);
+    // drop the coordinator-side channel ends BEFORE joining: after a
+    // coordinator-side error, a healthy shard may still be blocked in its
+    // exchange recv — closing the channels surfaces PeerClosed there, so
+    // the joins below cannot hang
+    drop(fleet);
+
+    let mut shard_reports = Vec::with_capacity(m);
+    let mut errors = Vec::new();
+    for (k, t) in threads.into_iter().enumerate() {
+        match t.join() {
+            Ok(Ok(report)) => shard_reports.push(report),
+            Ok(Err(e)) => errors.push(format!("shard {k}: {e}")),
+            Err(_) => errors.push(format!("shard {k}: session thread panicked")),
+        }
+    }
+    // shard-side errors are the root cause when the coordinator merely
+    // saw the hang-up — surface them first
+    if !errors.is_empty() {
+        return Err(errors.join("; "));
+    }
+    let coordinator_report = coord_result?;
+    Ok(ShardedReport { shard_reports, coordinator: coordinator_report })
+}
+
+/// One shard's full mock session: coordinator handshake, local device
+/// fleet over loopback, serve. The device workers carry their *global*
+/// ids, so data shards, loader seeds, and codec streams match a
+/// single-server session of the same config exactly.
+fn run_mock_shard_session(
+    cfg: &ExperimentConfig,
+    shard_id: usize,
+    coord_conn: Box<dyn Transport>,
+) -> Result<TrainReport, String> {
+    let topo = cfg.topology();
+    let shape = topo.shape_for(cfg.devices, shard_id);
+    let (train, test) = Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+    let train = Arc::new(train);
+    let mut runtime: ServerRuntime<_> = mock_runtime_for_shard(cfg, shard_id, Arc::new(test))?;
+
+    let weight = super::shard_weight(cfg, &train, shard_id);
+    let session_fp = session_fingerprint(cfg.fingerprint(), "mock");
+    let link = ShardLink::handshake(
+        coord_conn,
+        &topo,
+        shard_id,
+        weight,
+        session_fp,
+        cfg.shard_link_streams(shard_id)?,
+    )?;
+    runtime.attach_shard_link(link);
+
+    let mut workers = Vec::with_capacity(shape.local);
+    let mut dev_conns = Vec::with_capacity(shape.local);
+    let mut srv_conns: Vec<Box<dyn Transport>> = Vec::with_capacity(shape.local);
+    for g in shape.base..shape.base + shape.local {
+        let worker = device::mock_worker(cfg, train.clone(), g)?;
+        let (mut dev_end, srv_end) = loopback::pair(&format!("shard{shard_id}dev{g}"));
+        dev_end.send(&worker.hello())?;
+        workers.push(worker);
+        dev_conns.push(dev_end);
+        srv_conns.push(Box::new(srv_end));
+    }
+    let (mut conns, hellos) = handshake(srv_conns, shape)?;
+    let report = {
+        let mut fleet = PumpFleet::new(&mut conns, |d| {
+            device::pump(&mut workers[d], &mut dev_conns[d])
+        });
+        runtime.serve_fleet(&mut fleet, &hellos)?
+    };
+    Ok(report)
+}

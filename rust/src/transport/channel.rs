@@ -1,0 +1,140 @@
+//! In-process, thread-safe channel transport: the cross-thread twin of
+//! [`crate::transport::loopback`].
+//!
+//! Loopback's `Rc`-shared queues pin both endpoints to one thread, which
+//! is exactly right for a device fleet pumped by a single-threaded server
+//! loop — but the in-process sharded-topology simulator
+//! ([`crate::shard::sim`]) runs each shard session on its own thread with
+//! the coordinator on another, so the shard↔coordinator links need
+//! endpoints that can cross threads. `ChannelTransport` carries fully
+//! framed bytes over `std::sync::mpsc` channels: `recv` blocks like a
+//! socket, `try_recv` polls, and a dropped peer surfaces as the typed
+//! [`TransportError::PeerClosed`] — the same semantics the TCP transport
+//! exposes, so code driven over channels behaves identically over real
+//! sockets.
+//!
+//! Frames are encoded/decoded exactly as on a wire ([`Message::encode_frame`]),
+//! so byte accounting through a channel session matches a TCP session
+//! bit-for-bit.
+
+use std::sync::mpsc;
+
+use super::proto::Message;
+use super::{Transport, TransportError, WireStats};
+
+/// One end of a channel transport pair.
+pub struct ChannelTransport {
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
+    stats: WireStats,
+    name: String,
+}
+
+/// Create a connected pair `(a_end, b_end)`; either end may move to its
+/// own thread.
+pub fn pair(label: &str) -> (ChannelTransport, ChannelTransport) {
+    let (a_tx, b_rx) = mpsc::channel();
+    let (b_tx, a_rx) = mpsc::channel();
+    (
+        ChannelTransport {
+            tx: a_tx,
+            rx: a_rx,
+            stats: WireStats::default(),
+            name: format!("{label}/a"),
+        },
+        ChannelTransport {
+            tx: b_tx,
+            rx: b_rx,
+            stats: WireStats::default(),
+            name: format!("{label}/b"),
+        },
+    )
+}
+
+impl ChannelTransport {
+    fn note_recv(&mut self, frame: &[u8]) -> Result<Message, TransportError> {
+        self.stats.frames_recv += 1;
+        self.stats.bytes_recv += frame.len() as u64;
+        Message::decode_frame(frame).map_err(TransportError::Protocol)
+    }
+
+    fn closed(&self) -> TransportError {
+        TransportError::PeerClosed { peer: self.name.clone() }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, msg: &Message) -> Result<(), TransportError> {
+        let frame = msg.encode_frame();
+        let n = frame.len() as u64;
+        self.tx.send(frame).map_err(|_| self.closed())?;
+        self.stats.frames_sent += 1;
+        self.stats.bytes_sent += n;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message, TransportError> {
+        let frame = self.rx.recv().map_err(|_| self.closed())?;
+        self.note_recv(&frame)
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Message>, TransportError> {
+        match self.rx.try_recv() {
+            Ok(frame) => Ok(Some(self.note_recv(&frame)?)),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => Err(self.closed()),
+        }
+    }
+
+    fn stats(&self) -> WireStats {
+        self.stats
+    }
+
+    fn peer(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn frames_cross_threads_with_byte_accounting() {
+        let (mut a, mut b) = pair("t");
+        let handle = thread::spawn(move || {
+            let msg = b.recv().unwrap();
+            assert!(matches!(msg, Message::RoundOpen { round: 7, .. }));
+            b.send(&Message::Shutdown { reason: "ok".into() }).unwrap();
+            b.stats()
+        });
+        a.send(&Message::RoundOpen { round: 7, sync: true }).unwrap();
+        assert!(matches!(a.recv().unwrap(), Message::Shutdown { .. }));
+        let b_stats = handle.join().unwrap();
+        assert_eq!(a.stats().bytes_sent, b_stats.bytes_recv);
+        assert_eq!(a.stats().bytes_recv, b_stats.bytes_sent);
+        assert!(a.stats().bytes_sent > 0);
+    }
+
+    #[test]
+    fn dropped_peer_is_typed_peer_closed() {
+        let (mut a, b) = pair("t");
+        drop(b);
+        assert!(a.recv().unwrap_err().is_peer_closed());
+        assert!(a.try_recv().unwrap_err().is_peer_closed());
+        assert!(a
+            .send(&Message::RoundOpen { round: 0, sync: false })
+            .unwrap_err()
+            .is_peer_closed());
+    }
+
+    #[test]
+    fn try_recv_polls_without_blocking() {
+        let (mut a, mut b) = pair("t");
+        assert!(a.try_recv().unwrap().is_none());
+        b.send(&Message::RoundOpen { round: 1, sync: false }).unwrap();
+        assert!(a.try_recv().unwrap().is_some());
+        assert!(a.try_recv().unwrap().is_none());
+    }
+}

@@ -96,6 +96,41 @@ pub trait Compute {
         x: &[f32],
         x_dims: &[usize],
     ) -> Result<Tensor, String>;
+
+    /// Full-model logits for a run of equally-shaped eval batches, one
+    /// `[B, classes]` tensor per input batch.
+    ///
+    /// Evaluation is a pure row-wise forward pass, so stacking batches
+    /// cannot change any example's logits — unlike `server_step_batch`
+    /// there is no parameter chain to preserve. The default is the
+    /// historical per-batch walk (one [`Compute::eval_logits`] dispatch
+    /// each); backends override it to cross the compute boundary once for
+    /// the whole test set when a stacked artifact exists, falling back to
+    /// the exact walk otherwise.
+    fn eval_logits_batch(
+        &mut self,
+        client: &[Tensor],
+        server: &[Tensor],
+        xs: &[&[f32]],
+        x_dims: &[usize],
+    ) -> Result<Vec<Tensor>, String> {
+        eval_walk(self, client, server, xs, x_dims)
+    }
+}
+
+/// The reference eval semantics: one [`Compute::eval_logits`] call per
+/// batch. The trait default and the engine fallback both route through
+/// this single walk, so "stacked == walked" parity has one definition.
+pub fn eval_walk<C: Compute + ?Sized>(
+    compute: &mut C,
+    client: &[Tensor],
+    server: &[Tensor],
+    xs: &[&[f32]],
+    x_dims: &[usize],
+) -> Result<Vec<Tensor>, String> {
+    xs.iter()
+        .map(|x| compute.eval_logits(client, server, x, x_dims))
+        .collect()
 }
 
 /// The real PJRT-backed compute path.
@@ -165,16 +200,23 @@ pub fn sequential_step_chain<C: Compute + ?Sized>(
 }
 
 /// Name of the AOT artifact that can serve a stacked `[B_total, C, H, W]`
-/// server step in one dispatch, if the manifest compiled one for exactly
-/// that geometry. Artifacts are shape-specialized, so this is a strict
-/// dims check against the acts input slot (position `n_params`), probing a
-/// dedicated wide `server_step_batch` artifact first and the plain
-/// `server_step` second (it matches when the stacked batch happens to
-/// equal its compiled batch, i.e. a batch of one).
-fn stacked_artifact(engine: &Engine, n_params: usize, dims: &[usize]) -> Option<&'static str> {
-    for name in ["server_step_batch", "server_step"] {
+/// input in one dispatch, if the manifest compiled one for exactly that
+/// geometry. Artifacts are shape-specialized, so this is a strict dims
+/// check against the stacked input slot (position `input_slot`), probing
+/// the `names` candidates in order — a dedicated wide artifact first, the
+/// plain one second (it matches when the stacked batch happens to equal
+/// its compiled batch, i.e. a batch of one). Shared by the
+/// `server_step_batch` training path and the `eval_logits_batch` eval
+/// path.
+fn stacked_artifact(
+    engine: &Engine,
+    names: &[&'static str],
+    input_slot: usize,
+    dims: &[usize],
+) -> Option<&'static str> {
+    for &name in names {
         if let Ok(spec) = engine.manifest().artifact(name) {
-            if spec.inputs.get(n_params).is_some_and(|io| io.dims == dims) {
+            if spec.inputs.get(input_slot).is_some_and(|io| io.dims == dims) {
                 return Some(name);
             }
         }
@@ -272,7 +314,12 @@ impl Compute for EngineCompute {
         let stacked_dims = vec![b_total, d0[1], d0[2], d0[3]];
         let artifact = {
             let eng = self.engine.borrow();
-            stacked_artifact(&eng, params.len(), &stacked_dims)
+            stacked_artifact(
+                &eng,
+                &["server_step_batch", "server_step"],
+                params.len(),
+                &stacked_dims,
+            )
         };
         let Some(name) = artifact else {
             return sequential_step_chain(self, params, acts, ys, lr);
@@ -351,6 +398,75 @@ impl Compute for EngineCompute {
         args.push(Arg::F32(x, x_dims));
         let out = self.engine.borrow_mut().execute("eval_logits", &args)?;
         out.into_iter().next().ok_or_else(|| "eval_logits returned no output".into())
+    }
+
+    /// Stacked eval: when the manifest carries an artifact compiled for
+    /// the concatenated `[k*B, C, H, W]` geometry, the whole test-set
+    /// walk crosses the PJRT boundary in ONE dispatch and the stacked
+    /// logits are split back per batch. Eval is row-wise, so the split
+    /// rows are the per-batch logits exactly; any geometry the manifest
+    /// cannot serve falls back to the per-batch walk.
+    fn eval_logits_batch(
+        &mut self,
+        client: &[Tensor],
+        server: &[Tensor],
+        xs: &[&[f32]],
+        x_dims: &[usize],
+    ) -> Result<Vec<Tensor>, String> {
+        if xs.len() <= 1 || x_dims.len() != 4 {
+            return eval_walk(self, client, server, xs, x_dims);
+        }
+        let b = x_dims[0];
+        let per = b * x_dims[1] * x_dims[2] * x_dims[3];
+        if xs.iter().any(|x| x.len() != per) {
+            return Err(format!(
+                "eval_logits_batch: a batch has the wrong element count for \
+                 dims {x_dims:?}"
+            ));
+        }
+        let stacked_dims = vec![xs.len() * b, x_dims[1], x_dims[2], x_dims[3]];
+        let artifact = {
+            let eng = self.engine.borrow();
+            stacked_artifact(
+                &eng,
+                &["eval_logits_batch", "eval_logits"],
+                client.len() + server.len(),
+                &stacked_dims,
+            )
+        };
+        let Some(name) = artifact else {
+            return eval_walk(self, client, server, xs, x_dims);
+        };
+        let mut flat: Vec<f32> = Vec::with_capacity(xs.len() * per);
+        for x in xs {
+            flat.extend_from_slice(x);
+        }
+        let mut args = param_args(client);
+        args.extend(param_args(server));
+        args.push(Arg::F32(&flat, &stacked_dims));
+        let out = self.engine.borrow_mut().execute(name, &args)?;
+        let logits = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| format!("{name} returned no output"))?;
+        let dims = logits.dims();
+        if dims.len() != 2 || dims[0] != xs.len() * b {
+            return Err(format!(
+                "{name}: stacked logits have dims {dims:?}, expected \
+                 [{}, classes]",
+                xs.len() * b
+            ));
+        }
+        let classes = dims[1];
+        let data = logits.data();
+        Ok((0..xs.len())
+            .map(|i| {
+                Tensor::new(
+                    vec![b, classes],
+                    data[i * b * classes..(i + 1) * b * classes].to_vec(),
+                )
+            })
+            .collect())
     }
 }
 
@@ -638,5 +754,36 @@ mod tests {
         assert!(m
             .server_step_batch(&mock_server_init(), &[&a, &a], &[y], 1e-2)
             .is_err());
+    }
+
+    /// The batched-eval contract: one `eval_logits_batch` call over the
+    /// whole walk is bit-identical to the per-batch `eval_logits` walk.
+    #[test]
+    fn eval_logits_batch_is_bitwise_the_walk() {
+        let mut m = MockCompute::new(5);
+        let client = mock_client_init();
+        let server = mock_server_init();
+        let dims = [2usize, 3, 4, 4];
+        let batches: Vec<Vec<f32>> = (0..3)
+            .map(|i| {
+                (0..2 * 3 * 4 * 4)
+                    .map(|j| ((i * 5 + j) % 11) as f32 * 0.2 - 0.7)
+                    .collect()
+            })
+            .collect();
+        let walked: Vec<Tensor> = batches
+            .iter()
+            .map(|x| m.eval_logits(&client, &server, x, &dims).unwrap())
+            .collect();
+        let xs: Vec<&[f32]> = batches.iter().map(|v| v.as_slice()).collect();
+        let batched = m.eval_logits_batch(&client, &server, &xs, &dims).unwrap();
+        assert_eq!(batched.len(), walked.len());
+        for (b, w) in batched.iter().zip(&walked) {
+            assert_eq!(b.dims(), w.dims());
+            let bits = |t: &Tensor| {
+                t.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            };
+            assert_eq!(bits(b), bits(w));
+        }
     }
 }

@@ -23,7 +23,7 @@ use crate::data::{partition, Dataset};
 
 use super::compute::{self, Compute, MockCompute};
 use super::proto::Message;
-use super::{sync, Transport};
+use super::{sync, Transport, TransportError};
 
 struct Pending {
     round: u32,
@@ -244,13 +244,15 @@ impl<C: Compute> DeviceWorker<C> {
 
 /// Drain every queued message on `conn` through the worker (non-blocking).
 /// This is how the single-threaded loopback trainer gives a device its
-/// turn; TCP sessions use [`run_blocking`] instead.
+/// turn; TCP sessions use [`run_blocking`] instead. Typed like the rest
+/// of the transport layer: a worker that rejects a message is a protocol
+/// violation, transport failures keep their own variants.
 pub fn pump<C: Compute>(
     worker: &mut DeviceWorker<C>,
     conn: &mut dyn Transport,
-) -> Result<(), String> {
+) -> Result<(), TransportError> {
     while let Some(msg) = conn.try_recv()? {
-        for reply in worker.handle(msg)? {
+        for reply in worker.handle(msg).map_err(TransportError::Protocol)? {
             conn.send(&reply)?;
         }
     }

@@ -28,6 +28,7 @@
 //! accounted separately, and [`WireStats`] additionally tracks full framed
 //! bytes per connection so the protocol overhead is observable.
 
+pub mod channel;
 pub mod compute;
 pub mod device;
 pub mod loopback;

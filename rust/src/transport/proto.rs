@@ -31,8 +31,10 @@ use crate::quant::payload::{ByteReader, ByteWriter};
 /// Frame magic: "SLAC" in ASCII.
 pub const FRAME_MAGIC: u32 = 0x534C_4143;
 /// Wire-protocol version (frames, not payload envelopes). v2 replaced
-/// Hello's single codec string with the full per-stream spec table.
-pub const PROTO_VERSION: u8 = 2;
+/// Hello's single codec string with the full per-stream spec table; v3
+/// added the shard-tier frames (ShardHello/ShardSync) for multi-server
+/// topologies.
+pub const PROTO_VERSION: u8 = 3;
 /// Fixed frame-header size in bytes (magic + version + type + body_len).
 pub const FRAME_HEADER_BYTES: usize = 4 + 1 + 1 + 4;
 /// Hard cap on a frame body: 1 GiB, matching the payload header's
@@ -52,6 +54,8 @@ pub mod msg_type {
     pub const GRADIENTS: u8 = 5;
     pub const MODEL_SYNC: u8 = 6;
     pub const SHUTDOWN: u8 = 7;
+    pub const SHARD_HELLO: u8 = 8;
+    pub const SHARD_SYNC: u8 = 9;
 }
 
 /// One SL-protocol message.
@@ -98,6 +102,42 @@ pub enum Message {
     ModelSync { round: u32, device_id: u32, payload: Vec<u8> },
     /// server → device: session over (completed, early-stopped, or failed).
     Shutdown { reason: String },
+    /// Shard-tier handshake, both directions. The coordinator opens each
+    /// shard connection by declaring the topology it was launched with
+    /// (which shard slot this connection serves, the shard count, the
+    /// cross-shard sync cadence, and the session fingerprint); the shard
+    /// validates and echoes the same fields back with its FedAvg `weight`
+    /// (total local training samples). Either side rejects a mismatch,
+    /// naming the offending flag — a mis-shaped cluster must not train.
+    ShardHello {
+        shard_id: u32,
+        shards: u32,
+        sync_every: u32,
+        config_fp: u64,
+        /// shard → coordinator only: this shard's sample count (its
+        /// cross-shard FedAvg weight). 0 in the coordinator's opener.
+        weight: u64,
+    },
+    /// Shard-tier parameter sync, both directions. Shard → coordinator:
+    /// push the shard's aggregated client sub-model and its server
+    /// sub-model, each packed through the negotiated `--sync-codec`
+    /// stream ([`crate::transport::sync`]). Coordinator → shard: the
+    /// cross-shard FedAvg merge of both, same packing. A push with two
+    /// zero-length blobs means "this shard's session is over" (clean
+    /// departure from the sync tier).
+    ShardSync {
+        /// cross-shard sync epoch (round / `--shard-sync-every`), so a
+        /// cadence desync is caught instead of silently merging stale
+        /// models
+        epoch: u32,
+        shard_id: u32,
+        /// sync pack of the shard/merged client sub-model (may be an
+        /// empty *pack* — zero tensors — when a quorum round had no
+        /// client basis; a zero-length *blob* is the done marker)
+        client: Vec<u8>,
+        /// sync pack of the shard/merged server sub-model
+        server: Vec<u8>,
+    },
 }
 
 impl Message {
@@ -110,6 +150,8 @@ impl Message {
             Message::Gradients { .. } => msg_type::GRADIENTS,
             Message::ModelSync { .. } => msg_type::MODEL_SYNC,
             Message::Shutdown { .. } => msg_type::SHUTDOWN,
+            Message::ShardHello { .. } => msg_type::SHARD_HELLO,
+            Message::ShardSync { .. } => msg_type::SHARD_SYNC,
         }
     }
 
@@ -122,6 +164,8 @@ impl Message {
             Message::Gradients { .. } => "Gradients",
             Message::ModelSync { .. } => "ModelSync",
             Message::Shutdown { .. } => "Shutdown",
+            Message::ShardHello { .. } => "ShardHello",
+            Message::ShardSync { .. } => "ShardSync",
         }
     }
 
@@ -178,6 +222,19 @@ impl Message {
             Message::Shutdown { reason } => {
                 write_str(w, reason);
             }
+            Message::ShardHello { shard_id, shards, sync_every, config_fp, weight } => {
+                w.u32(*shard_id);
+                w.u32(*shards);
+                w.u32(*sync_every);
+                w.u64(*config_fp);
+                w.u64(*weight);
+            }
+            Message::ShardSync { epoch, shard_id, client, server } => {
+                w.u32(*epoch);
+                w.u32(*shard_id);
+                write_blob(w, client);
+                write_blob(w, server);
+            }
         }
     }
 
@@ -228,6 +285,19 @@ impl Message {
                 payload: read_blob(r)?,
             },
             msg_type::SHUTDOWN => Message::Shutdown { reason: read_str(r)? },
+            msg_type::SHARD_HELLO => Message::ShardHello {
+                shard_id: r.u32()?,
+                shards: r.u32()?,
+                sync_every: r.u32()?,
+                config_fp: r.u64()?,
+                weight: r.u64()?,
+            },
+            msg_type::SHARD_SYNC => Message::ShardSync {
+                epoch: r.u32()?,
+                shard_id: r.u32()?,
+                client: read_blob(r)?,
+                server: read_blob(r)?,
+            },
             other => return Err(format!("unknown message type {other}")),
         };
         Ok(msg)
@@ -506,6 +576,19 @@ mod tests {
                 payload: vec![42; 33],
             },
             Message::Shutdown { reason: "done".into() },
+            Message::ShardHello {
+                shard_id: 1,
+                shards: 2,
+                sync_every: 4,
+                config_fp: 0xdead_beef_0000_0001,
+                weight: 1024,
+            },
+            Message::ShardSync {
+                epoch: 3,
+                shard_id: 1,
+                client: vec![7; 12],
+                server: vec![8; 20],
+            },
         ]
     }
 

@@ -35,17 +35,25 @@ use crate::quant::payload::ByteWriter;
 use crate::sched::fleet::{Fleet, PumpFleet};
 use crate::sched::round::RoundScheduler;
 use crate::sched::Policy;
+use crate::shard::link::ShardLink;
+use crate::shard::FleetShape;
 use crate::tensor::Tensor;
 
 use super::compute::{self, Compute, MockCompute, StepOut};
 use super::proto::Message;
-use super::{sync, Transport};
+use super::{sync, Transport, TransportError};
 
 /// The run shape a server session enforces (a projection of
 /// [`ExperimentConfig`] plus the model's batch geometry).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// devices this node serves (the LOCAL count — a shard of a
+    /// multi-server topology serves a slice of the fleet)
     pub devices: usize,
+    /// total devices in the cluster (what every device's Hello declares)
+    pub global_devices: usize,
+    /// first global device id this node serves (0 on a single server)
+    pub device_base: usize,
     pub rounds: usize,
     pub lr: f32,
     pub eval_every: usize,
@@ -71,7 +79,26 @@ pub struct ServeConfig {
     pub specs: StreamSpecs,
 }
 
-/// What a device declared in its Hello frame.
+impl ServeConfig {
+    /// Global device id of local slot `d` (messages on the wire always
+    /// carry global ids; the runtime's arrays are local-indexed).
+    pub fn gid(&self, d: usize) -> usize {
+        self.device_base + d
+    }
+
+    /// The fleet slice this node handshakes with.
+    pub fn shape(&self) -> FleetShape {
+        FleetShape {
+            global: self.global_devices,
+            base: self.device_base,
+            local: self.devices,
+        }
+    }
+}
+
+/// What a device declared in its Hello frame. `device_id` is the *global*
+/// id; a sharded node maps it onto a local slot via
+/// [`FleetShape::slot`].
 #[derive(Debug, Clone)]
 pub struct DeviceHello {
     pub device_id: usize,
@@ -81,12 +108,12 @@ pub struct DeviceHello {
     pub config_fp: u64,
 }
 
-/// Validate one handshake frame against the fleet shape. Shared by the
-/// blocking [`handshake`] and the poll-loop accept
+/// Validate one handshake frame against the fleet slice this node serves.
+/// Shared by the blocking [`handshake`] and the poll-loop accept
 /// ([`crate::sched::event_loop::PollFleet::accept`]).
 pub fn hello_from_message(
     msg: Message,
-    devices: usize,
+    shape: FleetShape,
     peer: &str,
 ) -> Result<DeviceHello, String> {
     let (device_id, fleet, shard_len, config_fp, uplink, downlink, sync, streams_fp) =
@@ -110,6 +137,13 @@ pub fn hello_from_message(
                 sync,
                 streams_fp,
             ),
+            Message::ShardHello { shards, .. } => {
+                return Err(format!(
+                    "handshake: {peer} opened with a ShardHello ({shards} shards) \
+                     — this port serves devices; coordinators connect to \
+                     --shard-bind"
+                ))
+            }
             other => {
                 return Err(format!(
                     "handshake: expected Hello from {peer}, got {}",
@@ -117,13 +151,26 @@ pub fn hello_from_message(
                 ))
             }
         };
-    if fleet != devices {
+    if fleet != shape.global {
         return Err(format!(
-            "device {device_id} was configured for {fleet} devices, server for {devices}"
+            "device {device_id} was configured for {fleet} devices, the cluster \
+             for {}",
+            shape.global
         ));
     }
-    if device_id >= devices {
-        return Err(format!("device id {device_id} out of range (devices={devices})"));
+    if device_id >= shape.global {
+        return Err(format!(
+            "device id {device_id} out of range (devices={})",
+            shape.global
+        ));
+    }
+    if shape.slot(device_id).is_none() {
+        return Err(format!(
+            "device {device_id} connected to the wrong shard (this shard serves \
+             devices {}..{})",
+            shape.base,
+            shape.base + shape.local
+        ));
     }
     if shard_len == 0 {
         return Err(format!("device {device_id} declares an empty data shard"));
@@ -141,23 +188,28 @@ pub fn hello_from_message(
     Ok(DeviceHello { device_id, shard_len, streams, config_fp })
 }
 
-/// Receive one Hello per connection and order connections by device id.
+/// Receive one Hello per connection and order connections by local slot.
 /// Connections may arrive in any order (TCP accept order is racy); the
 /// Hello tells the server which slot each one serves.
 pub fn handshake(
     conns: Vec<Box<dyn Transport>>,
-    devices: usize,
+    shape: FleetShape,
 ) -> Result<(Vec<Box<dyn Transport>>, Vec<DeviceHello>), String> {
-    if conns.len() != devices {
-        return Err(format!("handshake: {} connections for {devices} devices", conns.len()));
+    if conns.len() != shape.local {
+        return Err(format!(
+            "handshake: {} connections for {} devices",
+            conns.len(),
+            shape.local
+        ));
     }
     let mut slots: Vec<Option<(Box<dyn Transport>, DeviceHello)>> =
-        (0..devices).map(|_| None).collect();
+        (0..shape.local).map(|_| None).collect();
     for mut conn in conns {
         let msg = conn.recv()?;
         let peer = conn.peer();
-        let hello = hello_from_message(msg, devices, &peer)?;
-        if slots[hello.device_id].is_some() {
+        let hello = hello_from_message(msg, shape, &peer)?;
+        let slot = shape.slot(hello.device_id).expect("validated by hello_from_message");
+        if slots[slot].is_some() {
             return Err(format!("two connections claim device id {}", hello.device_id));
         }
         crate::log_info!(
@@ -166,12 +218,13 @@ pub fn handshake(
             hello.shard_len,
             hello.streams.table()
         );
-        slots[hello.device_id] = Some((conn, hello));
+        slots[slot] = Some((conn, hello));
     }
-    let mut out_conns = Vec::with_capacity(devices);
-    let mut hellos = Vec::with_capacity(devices);
-    for (d, slot) in slots.into_iter().enumerate() {
-        let (conn, hello) = slot.ok_or_else(|| format!("no connection for device {d}"))?;
+    let mut out_conns = Vec::with_capacity(shape.local);
+    let mut hellos = Vec::with_capacity(shape.local);
+    for (slot, entry) in slots.into_iter().enumerate() {
+        let (conn, hello) = entry
+            .ok_or_else(|| format!("no connection for device {}", shape.gid(slot)))?;
         out_conns.push(conn);
         hellos.push(hello);
     }
@@ -211,6 +264,13 @@ pub struct ServerRuntime<C: Compute> {
     /// total `server_step_batch` dispatches those items crossed the
     /// compute boundary in — the amortization numerator
     server_dispatches: usize,
+    /// coordinator link of a sharded topology (None on a single server):
+    /// [`ServerRuntime::cross_shard`] exchanges sub-models through it at
+    /// `--shard-sync-every` round boundaries
+    shard: Option<ShardLink>,
+    /// shard-link wire bytes this round (push + merged reply), drained at
+    /// round close onto the `bytes_sync` axis
+    pub(crate) shard_round_wire: usize,
 }
 
 /// One device's uplink contribution awaiting the next batched dispatch:
@@ -269,7 +329,17 @@ impl<C: Compute> ServerRuntime<C> {
             sync_scratch: sync::SyncScratch::default(),
             server_steps: 0,
             server_dispatches: 0,
+            shard: None,
+            shard_round_wire: 0,
         })
+    }
+
+    /// Attach this shard's coordinator link (multi-server topologies
+    /// only). The session will exchange sub-models through it at every
+    /// `--shard-sync-every` aggregation boundary and announce its
+    /// departure at shutdown.
+    pub fn attach_shard_link(&mut self, link: ShardLink) {
+        self.shard = Some(link);
     }
 
     /// Drain the per-round raw-byte counters ([uplink, downlink, sync]).
@@ -292,25 +362,47 @@ impl<C: Compute> ServerRuntime<C> {
     }
 
     /// Test accuracy of (client, server) params over the held-out set.
+    ///
+    /// The whole walk is handed to [`Compute::eval_logits_batch`] in one
+    /// call, so a backend with a stacked `eval_logits` artifact evaluates
+    /// the full test set in a single dispatch (the same PJRT-boundary
+    /// amortization `server_step_batch` buys training); the default
+    /// implementation is the historical per-batch walk, bit for bit.
     pub fn evaluate_with(&mut self, client: &[Tensor]) -> Result<f64, String> {
         let batch = self.cfg.eval_batch;
         let n_batches = self.test.len() / batch;
         if n_batches == 0 {
             return Err("test set smaller than one batch".into());
         }
-        let mut correct = 0usize;
-        let mut total = 0usize;
+        let x_dims = [batch, self.test.channels, self.test.height, self.test.width];
+        // the whole walk is materialized so the stacked path can concat it
+        // into one dispatch — a deliberate peak-memory-for-dispatch trade
+        // (one extra f32 copy of the held-out set, a few MB at our sizes)
+        let mut xs_data: Vec<Vec<f32>> = Vec::with_capacity(n_batches);
+        let mut ys: Vec<Vec<i32>> = Vec::with_capacity(n_batches);
         for bi in 0..n_batches {
             let idx: Vec<usize> = (bi * batch..(bi + 1) * batch).collect();
             let (x, y) = self.test.batch(&idx);
-            let x_dims = [batch, self.test.channels, self.test.height, self.test.width];
-            let logits = self.compute.eval_logits(
-                client,
-                &self.server.server_params,
-                &x,
-                &x_dims,
-            )?;
-            let classes = self.test.classes;
+            xs_data.push(x);
+            ys.push(y);
+        }
+        let xs: Vec<&[f32]> = xs_data.iter().map(|v| v.as_slice()).collect();
+        let logits_list = self.compute.eval_logits_batch(
+            client,
+            &self.server.server_params,
+            &xs,
+            &x_dims,
+        )?;
+        if logits_list.len() != n_batches {
+            return Err(format!(
+                "eval_logits_batch returned {} outputs for {n_batches} batches",
+                logits_list.len()
+            ));
+        }
+        let classes = self.test.classes;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (logits, y) in logits_list.iter().zip(&ys) {
             for (i, &label) in y.iter().enumerate() {
                 let row = &logits.data()[i * classes..(i + 1) * classes];
                 let pred = row
@@ -500,15 +592,74 @@ impl<C: Compute> ServerRuntime<C> {
         }
     }
 
-    /// Drive a full training session over the given (handshaken, device-id
-    /// ordered) connections. `pump(d)` gives in-process device workers
-    /// their turn; pass a no-op for remote transports. Convenience wrapper
-    /// over [`ServerRuntime::serve_fleet`] with a [`PumpFleet`].
+    /// The cross-shard sync point: if this node is a shard of a
+    /// multi-server topology and `round` is a `--shard-sync-every`
+    /// boundary, exchange the local aggregation result (`local`, the
+    /// shard's FedAvg'd client sub-model — `None` when a quorum round had
+    /// no client basis) and the server sub-model with the coordinator and
+    /// apply the cluster-wide merge of both. No link, or an off-cadence
+    /// round, passes `local` through untouched. Wire bytes land on the
+    /// `bytes_sync` axis at round close; raw bytes feed the sync
+    /// compression ratio.
+    pub(crate) fn cross_shard(
+        &mut self,
+        round: usize,
+        local: Option<Vec<Tensor>>,
+    ) -> Result<Option<Vec<Tensor>>, String> {
+        // disjoint field borrows: the link is driven while the server
+        // params are read, then replaced
+        let ServerRuntime { shard, server, raw_round, shard_round_wire, .. } = self;
+        let Some(link) = shard.as_mut() else { return Ok(local) };
+        if !link.due(round) {
+            return Ok(local);
+        }
+        let raw = |ts: &[Tensor]| ts.iter().map(|t| t.len() * 4).sum::<usize>();
+        let client_push: &[Tensor] = local.as_deref().unwrap_or(&[]);
+        raw_round[2] += raw(client_push) + raw(&server.server_params);
+        let (merged_client, merged_server) = link
+            .exchange(client_push, &server.server_params)
+            .map_err(|e| format!("round {round}: shard link: {e}"))?;
+        let (wire_up, wire_down) = link.last_wire();
+        *shard_round_wire += wire_up + wire_down;
+        raw_round[2] += raw(&merged_client) + raw(&merged_server);
+        // the coordinator is a remote peer: shape-validate before applying
+        use crate::shard::shapes_match;
+        if !shapes_match(&merged_server, &server.server_params) {
+            return Err(format!(
+                "round {round}: coordinator returned a server sub-model whose \
+                 shape differs from this shard's"
+            ));
+        }
+        server.update(merged_server);
+        if merged_client.is_empty() {
+            if local.is_some() {
+                return Err(format!(
+                    "round {round}: coordinator dropped this shard's client \
+                     sub-model from the merge"
+                ));
+            }
+            return Ok(None);
+        }
+        if let Some(l) = &local {
+            if !shapes_match(&merged_client, l) {
+                return Err(format!(
+                    "round {round}: coordinator returned a client sub-model \
+                     whose shape differs from this shard's"
+                ));
+            }
+        }
+        Ok(Some(merged_client))
+    }
+
+    /// Drive a full training session over the given (handshaken,
+    /// slot-ordered) connections. `pump(d)` gives in-process device
+    /// workers their turn; pass a no-op for remote transports. Convenience
+    /// wrapper over [`ServerRuntime::serve_fleet`] with a [`PumpFleet`].
     pub fn serve(
         &mut self,
         conns: &mut [Box<dyn Transport>],
         hellos: &[DeviceHello],
-        pump: impl FnMut(usize) -> Result<(), String>,
+        pump: impl FnMut(usize) -> Result<(), TransportError>,
     ) -> Result<TrainReport, String> {
         let mut fleet = PumpFleet::new(conns, pump);
         self.serve_fleet(&mut fleet, hellos)
@@ -558,7 +709,7 @@ impl<C: Compute> ServerRuntime<C> {
         self.weights = hellos.iter().map(|h| h.shard_len as f64).collect();
         for d in 0..n {
             fleet.send(d, &Message::HelloAck {
-                device_id: d as u32,
+                device_id: self.cfg.gid(d) as u32,
                 rounds: self.cfg.rounds as u32,
                 agg_every: self.cfg.client_agg_every as u32,
             })?;
@@ -583,6 +734,12 @@ impl<C: Compute> ServerRuntime<C> {
         );
         let outcome = RoundScheduler::new(policy).run(self, fleet)?;
 
+        // leave the sync tier cleanly (early stop included) before the
+        // device shutdowns, so the coordinator never blocks on a finished
+        // shard's next push
+        if let Some(link) = self.shard.as_mut() {
+            link.finish().map_err(|e| format!("shard link shutdown: {e}"))?;
+        }
         for d in 0..n {
             fleet.send(d, &Message::Shutdown { reason: "training complete".into() })?;
         }
@@ -630,8 +787,9 @@ pub fn accept_and_serve<C: Compute>(
     runtime: &mut ServerRuntime<C>,
     listener: &std::net::TcpListener,
 ) -> Result<TrainReport, String> {
-    let n = runtime.devices();
-    let (mut fleet, hellos) = crate::sched::event_loop::PollFleet::accept(listener, n)?;
+    let shape = runtime.cfg.shape();
+    let (mut fleet, hellos) =
+        crate::sched::event_loop::PollFleet::accept(listener, shape)?;
     runtime.serve_fleet(&mut fleet, &hellos)
 }
 
@@ -641,15 +799,26 @@ pub fn mock_runtime(
     cfg: &ExperimentConfig,
     test: Arc<Dataset>,
 ) -> Result<ServerRuntime<MockCompute>, String> {
+    mock_runtime_for_shard(cfg, 0, test)
+}
+
+/// [`mock_runtime`] for shard `shard_id` of a multi-server topology: the
+/// runtime serves that shard's contiguous global-device-id slice (stream
+/// codecs and network links stay globally seeded/sliced).
+pub fn mock_runtime_for_shard(
+    cfg: &ExperimentConfig,
+    shard_id: usize,
+    test: Arc<Dataset>,
+) -> Result<ServerRuntime<MockCompute>, String> {
     let channels = compute::MOCK_CUT.0;
     let classes = test.classes;
     ServerRuntime::new(
-        cfg.serve_config(compute::MOCK_BATCH)?,
+        cfg.serve_config_for_shard(compute::MOCK_BATCH, shard_id)?,
         MockCompute::new(classes),
         compute::mock_server_init(),
-        cfg.stream_set(channels)?,
+        cfg.stream_set_for_shard(channels, shard_id)?,
         test,
-        cfg.network(),
+        cfg.network_for_shard(shard_id),
     )
 }
 
@@ -686,6 +855,13 @@ pub fn run_mock_loopback_shimmed(
     dispatch_cost: std::time::Duration,
 ) -> Result<(TrainReport, Vec<SchedRecord>), String> {
     cfg.validate()?;
+    if cfg.shards > 1 {
+        return Err(format!(
+            "run_mock_loopback drives a single server; --shards {} needs \
+             crate::shard::sim::run_sharded_mock",
+            cfg.shards
+        ));
+    }
     if delays.len() != cfg.devices {
         return Err(format!(
             "{} delays for {} devices",
@@ -708,7 +884,7 @@ pub fn run_mock_loopback_shimmed(
         dev_conns.push(dev_end);
         srv_conns.push(Box::new(srv_end));
     }
-    let (mut conns, hellos) = handshake(srv_conns, cfg.devices)?;
+    let (mut conns, hellos) = handshake(srv_conns, FleetShape::flat(cfg.devices))?;
     let report = {
         let mut fleet = PumpFleet::with_delays(
             &mut conns,

@@ -83,6 +83,16 @@ impl TcpTransport {
         })
     }
 
+    /// Accept one connection in blocking **direct** mode (no reader
+    /// thread). For strictly lock-step peers on a dedicated listener —
+    /// the shard server's coordinator port is the canonical user: one
+    /// connection, request/response only, so the thread-per-connection
+    /// accept mode buys nothing.
+    pub fn accept_direct(listener: &TcpListener) -> Result<TcpTransport, String> {
+        let (stream, _) = listener.accept().map_err(|e| format!("accept: {e}"))?;
+        Self::direct(stream)
+    }
+
     /// Server side: accept one connection and spawn its reader thread.
     pub fn accept(listener: &TcpListener) -> Result<TcpTransport, String> {
         let (stream, _) = listener.accept().map_err(|e| format!("accept: {e}"))?;

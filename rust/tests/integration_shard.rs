@@ -1,0 +1,449 @@
+//! Topology-tier integration: the multi-server sharding stack end to end.
+//!
+//! Load-bearing properties:
+//! * A 2-shard × 2-device cluster trains end to end through the
+//!   coordinator tier and, at `--shard-sync-every 1`, lands within noise
+//!   of the equivalent 4-device single-server session (the mock model
+//!   makes the eval exactly reproducible, so "within noise" is pinned
+//!   tightly).
+//! * Topology-mismatched ShardHellos — wrong shard count, wrong sync
+//!   cadence, a device pointed at a coordinator port — are rejected at
+//!   handshake, naming the offending flag.
+//! * A shard that vanishes mid-session surfaces as a typed peer-closed
+//!   error on the coordinator, never a hang.
+//! * `--shard-sync-every K` amortization is visible on the `bytes_sync`
+//!   axis: shard-link traffic lands only on sync rounds, and a larger K
+//!   moves fewer sync bytes in total.
+//! * The TCP cluster is byte-for-byte identical to the in-process
+//!   channel-transport simulation (the shard-tier twin of the PR 1
+//!   loopback/TCP parity goldens).
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::coordinator::metrics::TrainReport;
+use slacc::data::Dataset;
+use slacc::sched::fleet::ShardFleet;
+use slacc::shard::coordinator::{CoordReport, Coordinator};
+use slacc::shard::link::ShardLink;
+use slacc::shard::sim::run_sharded_mock;
+use slacc::shard::{FleetShape, Topology};
+use slacc::transport::channel;
+use slacc::transport::device::{mock_worker, run_blocking};
+use slacc::transport::proto::Message;
+use slacc::transport::server::{
+    accept_and_serve, handshake, mock_runtime_for_shard, run_mock_loopback,
+};
+use slacc::transport::tcp::TcpTransport;
+use slacc::transport::{loopback, session_fingerprint, Transport};
+
+fn sharded_cfg(
+    devices: usize,
+    shards: usize,
+    rounds: usize,
+    sync_every: usize,
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for("ham");
+    cfg.devices = devices;
+    cfg.rounds = rounds;
+    cfg.train_n = 128;
+    cfg.test_n = 32;
+    cfg.eval_every = 2;
+    cfg.lr = 1e-3;
+    cfg.seed = 3;
+    cfg.codec = CodecChoice::Named("slacc".into());
+    cfg.shards = shards;
+    cfg.shard_sync_every = sync_every;
+    cfg
+}
+
+/// The acceptance bar: a 2-shard × 2-device cluster through the full
+/// coordinator tier reaches the same accuracy as the 4-device
+/// single-server session at sync-every-1, and every shard evaluates the
+/// *same* merged models.
+#[test]
+fn two_shard_cluster_matches_single_server_within_noise() {
+    let single = run_mock_loopback(&sharded_cfg(4, 1, 6, 1)).unwrap();
+    let cfg = sharded_cfg(4, 2, 6, 1);
+    let sharded = run_sharded_mock(&cfg).unwrap();
+
+    assert_eq!(sharded.shard_reports.len(), 2);
+    for (k, rep) in sharded.shard_reports.iter().enumerate() {
+        assert_eq!(rep.rounds_run, 6, "shard {k}");
+        assert!(
+            rep.metrics.records.iter().all(|r| r.loss.is_finite()),
+            "shard {k}: non-finite loss"
+        );
+        assert!(rep.total_bytes_up > 0 && rep.total_bytes_down > 0, "shard {k}");
+    }
+    // at sync-every-1 every eval happens after a cross-shard merge, so
+    // both shards score the identical cluster model
+    let (lo, hi) = sharded.accuracy_range();
+    assert_eq!(lo, hi, "shards evaluated different models after a full merge");
+    assert!(
+        (hi - single.final_accuracy).abs() < 0.05,
+        "sharded accuracy {hi} far from single-server {}",
+        single.final_accuracy
+    );
+    // the coordinator merged every round and moved real bytes
+    assert_eq!(sharded.coordinator.sync_epochs, 6);
+    assert!(sharded.coordinator.bytes_up > 0);
+    assert!(sharded.coordinator.bytes_down > 0);
+    for (k, &(up, down)) in sharded.coordinator.per_shard.iter().enumerate() {
+        assert!(up > 0 && down > 0, "shard {k} moved no sync-tier bytes");
+    }
+}
+
+/// `shards == 1` through the sharded entry point is exactly the
+/// single-server loopback session (no coordinator, no shard link).
+#[test]
+fn one_shard_degenerates_to_the_single_server_session() {
+    let cfg = sharded_cfg(3, 1, 3, 1);
+    let single = run_mock_loopback(&cfg).unwrap();
+    let sharded = run_sharded_mock(&cfg).unwrap();
+    assert_eq!(sharded.shard_reports.len(), 1);
+    assert_eq!(sharded.coordinator.sync_epochs, 0);
+    let (a, b) = (&single.metrics.records, &sharded.shard_reports[0].metrics.records);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "round {}", x.round);
+        assert_eq!(x.bytes_up, y.bytes_up, "round {}", x.round);
+        assert_eq!(x.bytes_sync, y.bytes_sync, "round {}", x.round);
+    }
+}
+
+#[test]
+fn coordinator_rejects_wrong_shard_count_at_handshake() {
+    let cfg = sharded_cfg(4, 2, 2, 1);
+    let (shard_end0, coord_end0) = channel::pair("fake0");
+    let (_keep_alive, coord_end1) = channel::pair("fake1");
+    let fake = thread::spawn(move || {
+        let mut conn = shard_end0;
+        let hello = conn.recv().unwrap();
+        assert!(matches!(hello, Message::ShardHello { .. }));
+        // echo back a 3-shard topology against the coordinator's 2
+        conn.send(&Message::ShardHello {
+            shard_id: 0,
+            shards: 3,
+            sync_every: 1,
+            config_fp: 0,
+            weight: 64,
+        })
+        .unwrap();
+    });
+    let mut coordinator = Coordinator::from_experiment(&cfg, "mock").unwrap();
+    let mut fleet =
+        ShardFleet::new(vec![Box::new(coord_end0), Box::new(coord_end1)]);
+    let err = coordinator.run(&mut fleet).unwrap_err();
+    assert!(err.contains("--shards"), "want the flag named, got: {err}");
+    fake.join().unwrap();
+}
+
+#[test]
+fn coordinator_rejects_a_device_hello() {
+    let cfg = sharded_cfg(4, 2, 2, 1);
+    let (shard_end0, coord_end0) = channel::pair("dev-as-shard");
+    let (_keep_alive, coord_end1) = channel::pair("other");
+    let fake = thread::spawn(move || {
+        let mut conn = shard_end0;
+        let _ = conn.recv().unwrap();
+        // a device worker pointed at the coordinator by mistake
+        conn.send(&Message::Hello {
+            device_id: 0,
+            devices: 4,
+            shard_len: 32,
+            config_fp: 1,
+            uplink: "identity".into(),
+            downlink: "identity".into(),
+            sync: "identity".into(),
+            streams_fp: 2,
+        })
+        .unwrap();
+    });
+    let mut coordinator = Coordinator::from_experiment(&cfg, "mock").unwrap();
+    let mut fleet =
+        ShardFleet::new(vec![Box::new(coord_end0), Box::new(coord_end1)]);
+    let err = coordinator.run(&mut fleet).unwrap_err();
+    assert!(err.contains("device"), "want the role mismatch named, got: {err}");
+    fake.join().unwrap();
+}
+
+#[test]
+fn shard_rejects_mismatched_coordinator_hellos() {
+    let cfg = sharded_cfg(4, 2, 2, 1);
+    let fp = session_fingerprint(cfg.fingerprint(), "mock");
+    let topo = Topology { shards: 2, sync_every: 1 };
+
+    // wrong sync cadence
+    let (shard_end, mut coord_end) = channel::pair("c1");
+    coord_end
+        .send(&Message::ShardHello {
+            shard_id: 0,
+            shards: 2,
+            sync_every: 4,
+            config_fp: fp,
+            weight: 0,
+        })
+        .unwrap();
+    let err = ShardLink::handshake(
+        Box::new(shard_end),
+        &topo,
+        0,
+        100,
+        fp,
+        cfg.shard_link_streams(0).unwrap(),
+    )
+    .unwrap_err();
+    assert!(err.contains("--shard-sync-every"), "got: {err}");
+
+    // wrong session fingerprint
+    let (shard_end, mut coord_end) = channel::pair("c2");
+    coord_end
+        .send(&Message::ShardHello {
+            shard_id: 0,
+            shards: 2,
+            sync_every: 1,
+            config_fp: fp ^ 1,
+            weight: 0,
+        })
+        .unwrap();
+    let err = ShardLink::handshake(
+        Box::new(shard_end),
+        &topo,
+        0,
+        100,
+        fp,
+        cfg.shard_link_streams(0).unwrap(),
+    )
+    .unwrap_err();
+    assert!(err.contains("fingerprint"), "got: {err}");
+
+    // a device connected to the coordinator port
+    let (shard_end, mut coord_end) = channel::pair("c3");
+    coord_end
+        .send(&Message::Hello {
+            device_id: 1,
+            devices: 4,
+            shard_len: 32,
+            config_fp: 1,
+            uplink: "identity".into(),
+            downlink: "identity".into(),
+            sync: "identity".into(),
+            streams_fp: 2,
+        })
+        .unwrap();
+    let err = ShardLink::handshake(
+        Box::new(shard_end),
+        &topo,
+        0,
+        100,
+        fp,
+        cfg.shard_link_streams(0).unwrap(),
+    )
+    .unwrap_err();
+    assert!(err.contains("device"), "got: {err}");
+}
+
+/// A device whose global id belongs to another shard's slice is rejected
+/// by the device handshake, naming the served range.
+#[test]
+fn device_on_the_wrong_shard_is_rejected() {
+    let cfg = sharded_cfg(4, 2, 2, 1);
+    let (train, _) =
+        Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed).unwrap();
+    let worker = mock_worker(&cfg, Arc::new(train), 0).unwrap();
+    let (mut dev_end, srv_end) = loopback::pair("wrong-shard");
+    dev_end.send(&worker.hello()).unwrap();
+    // shard 1 serves global ids 2..4; global id 0 must be bounced
+    let shape = FleetShape { global: 4, base: 2, local: 1 };
+    let err = handshake(vec![Box::new(srv_end)], shape).unwrap_err();
+    assert!(err.contains("wrong shard"), "got: {err}");
+}
+
+/// A shard that dies mid-session must fail the coordinator with a typed
+/// peer-closed error, never a hang.
+#[test]
+fn shard_disconnect_surfaces_peer_closed() {
+    let cfg = sharded_cfg(4, 2, 4, 1);
+    let fp = session_fingerprint(cfg.fingerprint(), "mock");
+    let mut coord_ends: Vec<Box<dyn Transport>> = Vec::new();
+    let mut fakes = Vec::new();
+    for k in 0..2usize {
+        let (shard_end, coord_end) = channel::pair(&format!("dying{k}"));
+        coord_ends.push(Box::new(coord_end));
+        let cfg = cfg.clone();
+        fakes.push(thread::spawn(move || {
+            let topo = cfg.topology();
+            let link = ShardLink::handshake(
+                Box::new(shard_end),
+                &topo,
+                k,
+                64,
+                fp,
+                cfg.shard_link_streams(k).unwrap(),
+            )
+            .unwrap();
+            // vanish without a departure notice: the link (and its
+            // transport) drops here, mid-tier
+            drop(link);
+        }));
+    }
+    let mut coordinator = Coordinator::from_experiment(&cfg, "mock").unwrap();
+    let mut fleet = ShardFleet::new(coord_ends);
+    let err = coordinator.run(&mut fleet).unwrap_err();
+    assert!(
+        err.contains("disconnected mid-session") && err.contains("peer closed"),
+        "want a typed disconnect, got: {err}"
+    );
+    for f in fakes {
+        f.join().unwrap();
+    }
+}
+
+/// `--shard-sync-every K`: shard-link bytes land on the `bytes_sync` axis
+/// of sync rounds only, and a larger K moves fewer sync bytes in total.
+#[test]
+fn shard_sync_cadence_lands_on_the_sync_byte_axis() {
+    let every_round = run_sharded_mock(&sharded_cfg(4, 2, 8, 1)).unwrap();
+    let amortized = run_sharded_mock(&sharded_cfg(4, 2, 8, 4)).unwrap();
+
+    assert_eq!(every_round.coordinator.sync_epochs, 8);
+    assert_eq!(amortized.coordinator.sync_epochs, 2);
+
+    // within the K=4 run: rounds 3 and 7 carry the shard link on top of
+    // the device-tier ModelSync traffic every round carries
+    for rep in &amortized.shard_reports {
+        let recs = &rep.metrics.records;
+        assert_eq!(recs.len(), 8);
+        for sync_round in [3usize, 7] {
+            for plain_round in [0usize, 1, 2] {
+                assert!(
+                    recs[sync_round].bytes_sync > recs[plain_round].bytes_sync,
+                    "round {sync_round} ({}) should out-weigh round {plain_round} ({})",
+                    recs[sync_round].bytes_sync,
+                    recs[plain_round].bytes_sync
+                );
+            }
+        }
+        // the sync ratio axis stays well-defined (raw bytes recorded)
+        for r in recs {
+            assert!(r.bytes_sync > 0 && r.raw_sync > 0, "round {}", r.round);
+        }
+    }
+    assert!(
+        every_round.total_bytes_sync() > amortized.total_bytes_sync(),
+        "amortizing the cadence must shrink the sync byte axis: {} vs {}",
+        every_round.total_bytes_sync(),
+        amortized.total_bytes_sync()
+    );
+    // the smashed-data axes exist on both (they are not compared: shard
+    // models drift between merges, so envelope sizes may differ)
+    assert!(every_round.shard_reports[0].total_bytes_up > 0);
+    assert!(amortized.shard_reports[0].total_bytes_up > 0);
+}
+
+/// TCP cluster == channel-transport simulation, byte for byte: the
+/// shard-tier twin of the loopback/TCP parity goldens.
+#[test]
+fn tcp_two_shard_cluster_matches_the_loopback_sim() {
+    let cfg = sharded_cfg(4, 2, 4, 1);
+    let reference = run_sharded_mock(&cfg).unwrap();
+
+    let mut dev_addrs = Vec::new();
+    let mut shard_addrs = Vec::new();
+    let mut dev_listeners = Vec::new();
+    let mut shard_listeners = Vec::new();
+    for _ in 0..2 {
+        let dl = TcpListener::bind("127.0.0.1:0").unwrap();
+        let sl = TcpListener::bind("127.0.0.1:0").unwrap();
+        dev_addrs.push(dl.local_addr().unwrap().to_string());
+        shard_addrs.push(sl.local_addr().unwrap().to_string());
+        dev_listeners.push(dl);
+        shard_listeners.push(sl);
+    }
+
+    let mut shard_handles = Vec::new();
+    for (k, (dev_l, shard_l)) in
+        dev_listeners.into_iter().zip(shard_listeners).enumerate()
+    {
+        let cfg = cfg.clone();
+        shard_handles.push(thread::spawn(move || -> Result<TrainReport, String> {
+            let topo = cfg.topology();
+            let conn = TcpTransport::accept_direct(&shard_l)?;
+            let (train, test) =
+                Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+            let weight = slacc::shard::shard_weight(&cfg, &train, k);
+            let fp = session_fingerprint(cfg.fingerprint(), "mock");
+            let link = ShardLink::handshake(
+                Box::new(conn),
+                &topo,
+                k,
+                weight,
+                fp,
+                cfg.shard_link_streams(k)?,
+            )?;
+            let mut rt = mock_runtime_for_shard(&cfg, k, Arc::new(test))?;
+            rt.attach_shard_link(link);
+            accept_and_serve(&mut rt, &dev_l)
+        }));
+    }
+
+    let coord_cfg = cfg.clone();
+    let coord = thread::spawn(move || -> Result<CoordReport, String> {
+        let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+        for addr in &shard_addrs {
+            conns.push(Box::new(TcpTransport::connect_retry(
+                addr,
+                80,
+                Duration::from_millis(100),
+            )?));
+        }
+        let mut coordinator = Coordinator::from_experiment(&coord_cfg, "mock")?;
+        let mut fleet = ShardFleet::new(conns);
+        coordinator.run(&mut fleet)
+    });
+
+    let mut dev_handles = Vec::new();
+    for g in 0..4usize {
+        let cfg = cfg.clone();
+        let addr = dev_addrs[g / 2].clone();
+        dev_handles.push(thread::spawn(move || -> Result<(), String> {
+            let (train, _) =
+                Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+            let mut worker = mock_worker(&cfg, Arc::new(train), g)?;
+            let mut conn =
+                TcpTransport::connect_retry(&addr, 80, Duration::from_millis(100))?;
+            run_blocking(&mut worker, &mut conn)
+        }));
+    }
+
+    let mut tcp_reports = Vec::new();
+    for (k, h) in shard_handles.into_iter().enumerate() {
+        tcp_reports.push(h.join().unwrap().unwrap_or_else(|e| panic!("shard {k}: {e}")));
+    }
+    let tcp_coord = coord.join().unwrap().unwrap();
+    for (g, h) in dev_handles.into_iter().enumerate() {
+        h.join().unwrap().unwrap_or_else(|e| panic!("device {g}: {e}"));
+    }
+
+    for (k, (tcp, sim)) in
+        tcp_reports.iter().zip(&reference.shard_reports).enumerate()
+    {
+        assert_eq!(tcp.metrics.len(), sim.metrics.len(), "shard {k}");
+        for (a, b) in tcp.metrics.records.iter().zip(&sim.metrics.records) {
+            let ctx = format!("shard {k} round {}", a.round);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss drift: {ctx}");
+            assert_eq!(a.bytes_up, b.bytes_up, "uplink drift: {ctx}");
+            assert_eq!(a.bytes_down, b.bytes_down, "downlink drift: {ctx}");
+            assert_eq!(a.bytes_sync, b.bytes_sync, "sync drift: {ctx}");
+            assert_eq!(a.accuracy, b.accuracy, "accuracy drift: {ctx}");
+        }
+    }
+    assert_eq!(tcp_coord.sync_epochs, reference.coordinator.sync_epochs);
+    assert_eq!(tcp_coord.bytes_up, reference.coordinator.bytes_up);
+    assert_eq!(tcp_coord.bytes_down, reference.coordinator.bytes_down);
+    assert_eq!(tcp_coord.per_shard, reference.coordinator.per_shard);
+}
