@@ -60,6 +60,62 @@ impl StreamKind {
             StreamKind::Sync => "--sync-codec",
         }
     }
+
+    /// Codec-site telemetry instruments for this stream direction.
+    pub fn obs(&self) -> &'static StreamObs {
+        match self {
+            StreamKind::Uplink => &UPLINK_OBS,
+            StreamKind::Downlink => &DOWNLINK_OBS,
+            StreamKind::Sync => &SYNC_OBS,
+        }
+    }
+}
+
+/// The per-stream instrument bundle — static handles into the
+/// [`crate::obs::metrics`] registry, so recording is a couple of relaxed
+/// atomic ops with zero allocation.
+pub struct StreamObs {
+    pub encode_ns: &'static crate::obs::metrics::Histogram,
+    pub decode_ns: &'static crate::obs::metrics::Histogram,
+    pub encode_bytes: &'static crate::obs::metrics::Counter,
+    pub decode_bytes: &'static crate::obs::metrics::Counter,
+}
+
+static UPLINK_OBS: StreamObs = StreamObs {
+    encode_ns: &crate::obs::metrics::CODEC_ENC_NS_UP,
+    decode_ns: &crate::obs::metrics::CODEC_DEC_NS_UP,
+    encode_bytes: &crate::obs::metrics::CODEC_ENC_BYTES_UP,
+    decode_bytes: &crate::obs::metrics::CODEC_DEC_BYTES_UP,
+};
+static DOWNLINK_OBS: StreamObs = StreamObs {
+    encode_ns: &crate::obs::metrics::CODEC_ENC_NS_DOWN,
+    decode_ns: &crate::obs::metrics::CODEC_DEC_NS_DOWN,
+    encode_bytes: &crate::obs::metrics::CODEC_ENC_BYTES_DOWN,
+    decode_bytes: &crate::obs::metrics::CODEC_DEC_BYTES_DOWN,
+};
+static SYNC_OBS: StreamObs = StreamObs {
+    encode_ns: &crate::obs::metrics::CODEC_ENC_NS_SYNC,
+    decode_ns: &crate::obs::metrics::CODEC_DEC_NS_SYNC,
+    encode_bytes: &crate::obs::metrics::CODEC_ENC_BYTES_SYNC,
+    decode_bytes: &crate::obs::metrics::CODEC_DEC_BYTES_SYNC,
+};
+
+/// Record one codec encode at a call site: `started` is the `Instant` taken
+/// just before the encode, `wire_bytes` the envelope length produced.
+#[inline]
+pub fn record_encode(kind: StreamKind, started: std::time::Instant, wire_bytes: usize) {
+    let o = kind.obs();
+    o.encode_ns.observe(started.elapsed().as_nanos() as u64);
+    o.encode_bytes.add(wire_bytes as u64);
+}
+
+/// Record one codec decode at a call site (`wire_bytes` = envelope length
+/// consumed).
+#[inline]
+pub fn record_decode(kind: StreamKind, started: std::time::Instant, wire_bytes: usize) {
+    let o = kind.obs();
+    o.decode_ns.observe(started.elapsed().as_nanos() as u64);
+    o.decode_bytes.add(wire_bytes as u64);
 }
 
 /// The base (innermost) codec family of a spec.

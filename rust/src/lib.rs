@@ -28,6 +28,7 @@ pub mod data;
 pub mod entropy;
 pub mod grouping;
 pub mod net;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod sched;

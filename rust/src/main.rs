@@ -40,8 +40,10 @@ use slacc::sched::Policy;
 use slacc::shard::coordinator::Coordinator;
 use slacc::shard::link::ShardLink;
 use slacc::shard::Role;
+use slacc::obs::export::{MetricsExporter, SnapshotWriter};
+use slacc::obs::span;
 use slacc::transport::device::{mock_worker, run_blocking};
-use slacc::transport::server::{accept_and_serve, mock_runtime_for_shard};
+use slacc::transport::server::{accept_and_serve_with, mock_runtime_for_shard};
 use slacc::transport::tcp::TcpTransport;
 use slacc::transport::{session_fingerprint, Transport};
 use slacc::util::logging;
@@ -135,6 +137,15 @@ fn print_help() {
                                    (required; connect to the shard serving it)\n\
            --connect ADDR          server address          [127.0.0.1:7878]\n\
            --mock                  mock model (must match the server)\n\
+         serve telemetry (all off by default; never part of the session\n\
+         fingerprint):\n\
+           --metrics-bind ADDR     live Prometheus scrape endpoint, served\n\
+                                   non-blocking from the event loop\n\
+           --metrics-every N       whole-registry JSONL snapshot every N\n\
+                                   closed rounds\n\
+           --metrics-out FILE      snapshot file    [metrics.jsonl]\n\
+           --trace-out FILE        enable tracing spans; drain them to\n\
+                                   FILE as JSONL at session end\n\
          common:\n\
            --log-level error|warn|info|debug|trace",
         codecs::ALL_CODECS
@@ -291,6 +302,27 @@ fn use_mock(cfg: &ExperimentConfig, mock_flag: bool) -> Result<bool, String> {
     ))
 }
 
+/// The `serve` telemetry flags (deliberately outside
+/// [`ExperimentConfig::fingerprint`]: observing a session must never
+/// change what fleet it handshakes with).
+struct ObsFlags {
+    metrics_bind: Option<String>,
+    metrics_every: Option<usize>,
+    metrics_out: String,
+    trace_out: Option<String>,
+}
+
+impl ObsFlags {
+    fn from_args(args: &mut Args) -> ObsFlags {
+        ObsFlags {
+            metrics_bind: args.str_opt("metrics-bind"),
+            metrics_every: args.usize_opt("metrics-every"),
+            metrics_out: args.str_or("metrics-out", "metrics.jsonl"),
+            trace_out: args.str_opt("trace-out"),
+        }
+    }
+}
+
 fn cmd_serve(mut args: Args) -> Result<(), String> {
     let cfg = config_from_args(&mut args)?;
     let bind = args.str_or("bind", "127.0.0.1:7878");
@@ -300,14 +332,35 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
     let connect_shard = args.str_opt("connect-shard");
     let mock = args.bool_or("mock", false);
     let csv = args.str_opt("csv");
+    let obs = ObsFlags::from_args(&mut args);
     args.finish()?;
     cfg.validate()?;
 
-    let mock = use_mock(&cfg, mock)?;
-    match role {
-        Role::Coordinator => serve_coordinator(cfg, connect_shard, mock),
-        Role::Shard => serve_shard(cfg, bind, shard_id, shard_bind, mock, csv),
+    if obs.trace_out.is_some() {
+        span::set_enabled(true);
     }
+    let mock = use_mock(&cfg, mock)?;
+    let result = match role {
+        Role::Coordinator => {
+            if obs.metrics_bind.is_some() || obs.metrics_every.is_some() {
+                return Err(
+                    "--metrics-bind/--metrics-every are served by shard servers; \
+                     the coordinator's blocking shard links have no event loop \
+                     (--trace-out works on any role)"
+                        .into(),
+                );
+            }
+            serve_coordinator(cfg, connect_shard, mock)
+        }
+        Role::Shard => serve_shard(cfg, bind, shard_id, shard_bind, mock, csv, &obs),
+    };
+    // drain spans even when the session failed: a trace of the rounds
+    // leading up to an error is exactly when you want one
+    if let Some(path) = &obs.trace_out {
+        let n = span::write_jsonl(path)?;
+        println!("trace spans       : {n} event(s) -> {path}");
+    }
+    result
 }
 
 /// The coordinator tier: connect to every shard's `--shard-bind` address
@@ -359,6 +412,12 @@ fn serve_coordinator(
         report.bytes_up as f64 / 1e3,
         report.bytes_down as f64 / 1e3
     );
+    if !report.cluster_counters.is_empty() {
+        println!("cluster counters (summed over shard roll-ups):");
+        for (name, v) in &report.cluster_counters {
+            println!("  {name:<48} {v}");
+        }
+    }
     Ok(())
 }
 
@@ -372,6 +431,7 @@ fn serve_shard(
     shard_bind: String,
     mock: bool,
     csv: Option<String>,
+    obs: &ObsFlags,
 ) -> Result<(), String> {
     let topo = cfg.topology();
     if shard_id >= topo.shards {
@@ -417,6 +477,19 @@ fn serve_shard(
         topo.shards,
     );
 
+    let exporter = match &obs.metrics_bind {
+        Some(addr) => {
+            let ex = MetricsExporter::bind(addr)?;
+            println!("slacc serve: metrics exposition on http://{}/metrics", ex.local_addr());
+            Some(ex)
+        }
+        None => None,
+    };
+    let snapshot = match obs.metrics_every {
+        Some(every) => Some(SnapshotWriter::create(&obs.metrics_out, every)?),
+        None => None,
+    };
+
     let report = if mock {
         let (_, test) =
             Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
@@ -424,13 +497,19 @@ fn serve_shard(
         if let Some(link) = link {
             rt.attach_shard_link(link);
         }
-        accept_and_serve(&mut rt, &listener)?
+        if let Some(sw) = snapshot {
+            rt.attach_snapshot_writer(sw);
+        }
+        accept_and_serve_with(&mut rt, &listener, exporter)?
     } else {
         let mut rt = engine_runtime_for_shard(&cfg, shard_id)?;
         if let Some(link) = link {
             rt.attach_shard_link(link);
         }
-        accept_and_serve(&mut rt, &listener)?
+        if let Some(sw) = snapshot {
+            rt.attach_snapshot_writer(sw);
+        }
+        accept_and_serve_with(&mut rt, &listener, exporter)?
     };
     print_report(&report, csv)
 }

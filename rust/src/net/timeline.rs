@@ -31,6 +31,18 @@ impl SchedRecord {
     }
 }
 
+/// One device's cumulative scheduling history — see
+/// [`Timeline::device_wait_profiles`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DeviceWaitProfile {
+    /// total fleet-clock seconds the server spent waiting on this device
+    pub wait_s: f64,
+    /// rounds this device was carried past a close as a straggler
+    pub straggles: usize,
+    /// rounds this device's Activations made the close
+    pub participations: usize,
+}
+
 /// Accumulates per-round costs into a cumulative timeline.
 #[derive(Debug, Clone, Default)]
 pub struct Timeline {
@@ -54,7 +66,11 @@ impl Timeline {
     /// Push a round with its scheduling outcome attached.
     pub fn push_with_sched(&mut self, cost: RoundCost, rec: SchedRecord) {
         self.push(cost);
-        *self.sched.last_mut().unwrap() = Some(rec);
+        // push() just appended a slot; guard anyway rather than unwrap so a
+        // future refactor of push() cannot turn this into a panic
+        if let Some(slot) = self.sched.last_mut() {
+            *slot = Some(rec);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -108,6 +124,34 @@ impl Timeline {
             .flatten()
             .map(|s| s.stragglers.len())
             .sum()
+    }
+
+    /// Per-device cumulative scheduling profile across every recorded
+    /// round: total fleet-clock seconds the server waited on the device,
+    /// times it was carried as a straggler, and rounds it participated in.
+    /// This is the seam a straggler-aware device-selection policy reads —
+    /// `devices` is the fleet size (indices past any record's vectors stay
+    /// zero; ids past `devices` are ignored).
+    pub fn device_wait_profiles(&self, devices: usize) -> Vec<DeviceWaitProfile> {
+        let mut out = vec![DeviceWaitProfile::default(); devices];
+        for rec in self.sched.iter().flatten() {
+            for (d, &w) in rec.wait_s.iter().enumerate() {
+                if d < devices {
+                    out[d].wait_s += w;
+                }
+            }
+            for &d in &rec.participants {
+                if d < devices {
+                    out[d].participations += 1;
+                }
+            }
+            for &d in &rec.stragglers {
+                if d < devices {
+                    out[d].straggles += 1;
+                }
+            }
+        }
+        out
     }
 
     /// Given (round, accuracy) observations, simulated time at which
@@ -179,5 +223,65 @@ mod tests {
         assert!((r1.max_wait_s() - 0.5).abs() < 1e-12);
         assert_eq!(tl.straggler_events(), 2);
         assert_eq!(tl.sched_records().len(), 2);
+    }
+
+    #[test]
+    fn device_wait_profiles_accumulate() {
+        let mut tl = Timeline::new();
+        tl.push(cost(1.0, 1)); // un-scheduled round contributes nothing
+        tl.push_with_sched(
+            cost(1.0, 1),
+            SchedRecord {
+                round: 1,
+                participants: vec![0, 1],
+                stale: vec![],
+                stragglers: vec![2],
+                wait_s: vec![0.1, 0.2, 0.5],
+            },
+        );
+        tl.push_with_sched(
+            cost(1.0, 1),
+            SchedRecord {
+                round: 2,
+                participants: vec![0, 2],
+                stale: vec![],
+                stragglers: vec![2],
+                wait_s: vec![0.3, 0.0, 1.0],
+            },
+        );
+        let p = tl.device_wait_profiles(3);
+        assert_eq!(p.len(), 3);
+        assert!((p[0].wait_s - 0.4).abs() < 1e-12);
+        assert_eq!(p[0].participations, 2);
+        assert_eq!(p[0].straggles, 0);
+        assert!((p[1].wait_s - 0.2).abs() < 1e-12);
+        assert_eq!(p[1].participations, 1);
+        assert!((p[2].wait_s - 1.5).abs() < 1e-12);
+        assert_eq!(p[2].straggles, 2);
+        assert_eq!(p[2].participations, 1);
+    }
+
+    #[test]
+    fn device_wait_profiles_ignore_out_of_range_ids() {
+        let mut tl = Timeline::new();
+        tl.push_with_sched(
+            cost(1.0, 1),
+            SchedRecord {
+                round: 0,
+                participants: vec![0, 9],
+                stale: vec![],
+                stragglers: vec![9],
+                wait_s: vec![0.1, 0.2, 0.3, 0.4],
+            },
+        );
+        let p = tl.device_wait_profiles(2);
+        assert_eq!(p.len(), 2);
+        assert!((p[0].wait_s - 0.1).abs() < 1e-12);
+        assert!((p[1].wait_s - 0.2).abs() < 1e-12);
+        assert_eq!(p[0].participations, 1);
+        assert_eq!(p[1].participations, 0);
+        assert_eq!(p[1].straggles, 0);
+        // empty fleet degenerate
+        assert!(tl.device_wait_profiles(0).is_empty());
     }
 }

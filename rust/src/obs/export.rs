@@ -1,0 +1,276 @@
+//! Live metrics export: the `--metrics-bind` scrape listener and the
+//! `--metrics-every` JSONL snapshot writer.
+//!
+//! [`MetricsExporter`] is a fully non-blocking HTTP/1.1 responder designed
+//! to be *serviced* from the single-threaded `PollFleet` event loop (see
+//! [`crate::sched::event_loop::PollFleet::attach_exporter`]): every call to
+//! [`MetricsExporter::service`] accepts any waiting scrapers, advances each
+//! pending connection as far as its socket allows, and returns immediately.
+//! No thread is spawned and the training path never blocks on a scraper —
+//! a stalled client just holds its connection until the idle timeout.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Instant;
+
+use crate::obs::metrics;
+use crate::util::json::Json;
+
+/// A scraper connection can sit half-open this long before being dropped.
+const SCRAPE_IDLE_S: f64 = 5.0;
+/// Request-header cap; anything longer is answered anyway (we never parse
+/// the request beyond "headers are complete").
+const MAX_REQUEST_BYTES: usize = 8192;
+
+struct ScrapeConn {
+    stream: TcpStream,
+    req: Vec<u8>,
+    /// response bytes once the request headers completed; empty = still reading
+    resp: Vec<u8>,
+    written: usize,
+    opened: Instant,
+}
+
+/// Non-blocking Prometheus-style text-exposition endpoint.
+pub struct MetricsExporter {
+    listener: TcpListener,
+    conns: Vec<ScrapeConn>,
+    addr: SocketAddr,
+}
+
+impl MetricsExporter {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`) in non-blocking mode.
+    pub fn bind(addr: &str) -> Result<MetricsExporter, String> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| format!("--metrics-bind {addr}: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("--metrics-bind {addr}: {e}"))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("--metrics-bind: {e}"))?;
+        Ok(MetricsExporter { listener, conns: Vec::new(), addr })
+    }
+
+    /// The bound address (resolves `:0` ports for tests).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// One non-blocking service pass: accept, progress, reap. Call this
+    /// from every event-loop wakeup; it never blocks.
+    pub fn service(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_ok() {
+                        self.conns.push(ScrapeConn {
+                            stream,
+                            req: Vec::new(),
+                            resp: Vec::new(),
+                            written: 0,
+                            opened: Instant::now(),
+                        });
+                    }
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        self.conns.retain_mut(|conn| {
+            if conn.opened.elapsed().as_secs_f64() > SCRAPE_IDLE_S {
+                return false;
+            }
+            !progress(conn)
+        });
+    }
+}
+
+/// Advance one scraper as far as its socket allows; true = finished (drop).
+fn progress(conn: &mut ScrapeConn) -> bool {
+    if conn.resp.is_empty() {
+        let mut buf = [0u8; 1024];
+        loop {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => return true, // peer gave up
+                Ok(n) => {
+                    conn.req.extend_from_slice(&buf[..n]);
+                    if request_complete(&conn.req) || conn.req.len() >= MAX_REQUEST_BYTES {
+                        conn.resp = build_response();
+                        metrics::SCRAPES.inc();
+                        break;
+                    }
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => return false,
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        }
+    }
+    while conn.written < conn.resp.len() {
+        match conn.stream.write(&conn.resp[conn.written..]) {
+            Ok(0) => return true,
+            Ok(n) => conn.written += n,
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => return false,
+            Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return true,
+        }
+    }
+    let _ = conn.stream.flush();
+    let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+    true
+}
+
+/// We answer any request once its headers are in — the endpoint serves one
+/// document, so there is nothing to route on.
+fn request_complete(req: &[u8]) -> bool {
+    req.windows(4).any(|w| w == b"\r\n\r\n") || req.windows(2).any(|w| w == b"\n\n")
+}
+
+fn build_response() -> Vec<u8> {
+    let body = metrics::render_prometheus();
+    let mut out = format!(
+        "HTTP/1.1 200 OK\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    out.extend_from_slice(body.as_bytes());
+    out
+}
+
+/// Appends one whole-registry JSON snapshot per `every` closed rounds
+/// (`--metrics-every N --metrics-out FILE`).
+pub struct SnapshotWriter {
+    file: std::fs::File,
+    every: usize,
+    pub written: usize,
+}
+
+impl SnapshotWriter {
+    pub fn create(path: &str, every: usize) -> Result<SnapshotWriter, String> {
+        if every == 0 {
+            return Err("--metrics-every must be >= 1".to_string());
+        }
+        let file = std::fs::File::create(path)
+            .map_err(|e| format!("--metrics-out {path}: {e}"))?;
+        Ok(SnapshotWriter { file, every, written: 0 })
+    }
+
+    /// Called at every round close; writes on the cadence boundary.
+    pub fn maybe_snapshot(&mut self, round: usize) {
+        if (round + 1) % self.every != 0 {
+            return;
+        }
+        let mut row = BTreeMap::new();
+        row.insert("round".to_string(), Json::Num(round as f64));
+        row.insert(
+            "elapsed_ns".to_string(),
+            Json::Num(crate::util::logging::elapsed_ns() as f64),
+        );
+        row.insert("metrics".to_string(), metrics::snapshot_json());
+        let mut line = Json::Obj(row).dump();
+        line.push('\n');
+        if self.file.write_all(line.as_bytes()).is_ok() {
+            self.written += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive `service()` like an event loop would until the scrape completes.
+    fn scrape_once(ex: &mut MetricsExporter, request: &[u8]) -> String {
+        let addr = ex.local_addr();
+        let mut client = TcpStream::connect(addr).unwrap();
+        client.write_all(request).unwrap();
+        client
+            .set_read_timeout(Some(std::time::Duration::from_millis(50)))
+            .unwrap();
+        let mut out = Vec::new();
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            ex.service();
+            let mut buf = [0u8; 4096];
+            match client.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => out.extend_from_slice(&buf[..n]),
+                Err(ref e)
+                    if e.kind() == ErrorKind::WouldBlock
+                        || e.kind() == ErrorKind::TimedOut => {}
+                Err(e) => panic!("scrape read: {e}"),
+            }
+            assert!(Instant::now() < deadline, "scrape did not finish");
+        }
+        String::from_utf8(out).unwrap()
+    }
+
+    #[test]
+    fn serves_exposition_over_http() {
+        metrics::POLL_WAKEUPS.inc();
+        let mut ex = MetricsExporter::bind("127.0.0.1:0").unwrap();
+        let text =
+            scrape_once(&mut ex, b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(text.starts_with("HTTP/1.1 200 OK"), "{text}");
+        assert!(text.contains("Content-Type: text/plain"));
+        assert!(text.contains("slacc_poll_wakeups_total"));
+        // Content-Length matches the body exactly
+        let (head, body) = text.split_once("\r\n\r\n").unwrap();
+        let len: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(len, body.len());
+        assert!(ex.conns.is_empty(), "finished scraper must be reaped");
+    }
+
+    #[test]
+    fn service_never_blocks_with_idle_scraper() {
+        let mut ex = MetricsExporter::bind("127.0.0.1:0").unwrap();
+        // connect but send nothing — service passes must return instantly
+        let _idle = TcpStream::connect(ex.local_addr()).unwrap();
+        for _ in 0..3 {
+            let t = Instant::now();
+            ex.service();
+            assert!(t.elapsed().as_millis() < 100, "service must not block");
+        }
+        assert_eq!(ex.conns.len(), 1, "idle scraper stays pending");
+        let n = metrics::SCRAPES.get();
+        // a second, real scraper is served while the idle one hangs
+        let text =
+            scrape_once(&mut ex, b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(text.contains("slacc_metrics_scrapes_total"));
+        assert!(metrics::SCRAPES.get() > n);
+    }
+
+    #[test]
+    fn snapshot_writer_honors_cadence() {
+        let path = std::env::temp_dir().join("slacc_snapshot_test.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        let mut w = SnapshotWriter::create(&path, 2).unwrap();
+        for round in 0..5 {
+            w.maybe_snapshot(round);
+        }
+        assert_eq!(w.written, 2); // rounds 1 and 3
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rows: Vec<Json> =
+            text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].at(&["round"]), &Json::Num(1.0));
+        assert_eq!(rows[1].at(&["round"]), &Json::Num(3.0));
+        match rows[0].at(&["metrics", "counters"]) {
+            Json::Obj(m) => assert!(m.contains_key("slacc_rounds_closed_total")),
+            other => panic!("counters must be an object, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+        assert!(SnapshotWriter::create(&path, 0).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

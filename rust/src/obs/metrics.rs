@@ -1,0 +1,583 @@
+//! Process-global lock-free metrics registry.
+//!
+//! Instruments are `static` items with `const` constructors, so handles are
+//! resolved at compile time and the hot path is exactly one relaxed atomic
+//! RMW — no locks, no map lookups, no steady-state allocation (asserted by
+//! the counting-allocator audit in `benches/obs.rs`). The registry is the
+//! fixed set of instruments enumerated by [`counters`]/[`gauges`]/
+//! [`histograms`]; exporters ([`render_prometheus`], [`snapshot_json`], the
+//! [`rollup_blob`] piggybacked on `ShardSync`) iterate that set.
+//!
+//! Counters are cumulative for the process lifetime (Prometheus counter
+//! semantics): sessions sharing a process accumulate, and readers that want
+//! per-session figures take before/after deltas.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+use crate::quant::payload::{ByteReader, ByteWriter};
+use crate::util::json::Json;
+
+/// Monotonically increasing event/byte count.
+pub struct Counter {
+    base: &'static str,
+    /// Prometheus label pairs without braces (e.g. `stream="uplink"`),
+    /// empty for unlabelled instruments.
+    label: &'static str,
+    help: &'static str,
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new(base: &'static str, label: &'static str, help: &'static str) -> Counter {
+        Counter { base, label, help, v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// `base{label}` — the exposition identity (also the roll-up key).
+    pub fn full_name(&self) -> String {
+        full_name(self.base, self.label)
+    }
+}
+
+/// Point-in-time signed level (queue depth, open connections).
+pub struct Gauge {
+    base: &'static str,
+    label: &'static str,
+    help: &'static str,
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub const fn new(base: &'static str, label: &'static str, help: &'static str) -> Gauge {
+        Gauge { base, label, help, v: AtomicI64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: i64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn full_name(&self) -> String {
+        full_name(self.base, self.label)
+    }
+}
+
+/// Fixed power-of-two buckets: bucket `i` holds observations `v` with
+/// `floor(log2(v)) == i` (`v == 0` lands in bucket 0), clamped to the last
+/// bucket. 36 buckets cover 1ns .. ~34s for nanosecond timings.
+pub const HIST_BUCKETS: usize = 36;
+
+pub struct Histogram {
+    base: &'static str,
+    label: &'static str,
+    help: &'static str,
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((63 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+impl Histogram {
+    pub const fn new(base: &'static str, label: &'static str, help: &'static str) -> Histogram {
+        // array-repeat of a const item is the const-constructible form of
+        // [AtomicU64::new(0); N]; the interior mutability is the point here
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            base,
+            label,
+            help,
+            buckets: [ZERO; HIST_BUCKETS],
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn full_name(&self) -> String {
+        full_name(self.base, self.label)
+    }
+}
+
+fn full_name(base: &str, label: &str) -> String {
+    if label.is_empty() {
+        base.to_string()
+    } else {
+        format!("{base}{{{label}}}")
+    }
+}
+
+// ---------------------------------------------------------------- event loop
+
+pub static POLL_WAKEUPS: Counter = Counter::new(
+    "slacc_poll_wakeups_total",
+    "",
+    "event-loop poll(2) wakeups",
+);
+pub static FRAMES_RECV: Counter = Counter::new(
+    "slacc_frames_recv_total",
+    "",
+    "protocol frames decoded off sockets by the event loop",
+);
+pub static FRAMES_SENT: Counter = Counter::new(
+    "slacc_frames_sent_total",
+    "",
+    "protocol frames written to sockets by the event loop",
+);
+pub static NET_RX_BYTES: Counter = Counter::new(
+    "slacc_net_rx_bytes_total",
+    "",
+    "framed bytes read off sockets (header + body)",
+);
+pub static NET_TX_BYTES: Counter = Counter::new(
+    "slacc_net_tx_bytes_total",
+    "",
+    "framed bytes written to sockets (header + body)",
+);
+pub static QUEUE_DEPTH: Gauge = Gauge::new(
+    "slacc_queue_depth",
+    "",
+    "frames parked in the event loop's arrival queue",
+);
+pub static OPEN_CONNS: Gauge = Gauge::new(
+    "slacc_open_conns",
+    "",
+    "device sockets the event loop is driving",
+);
+
+// ------------------------------------------------------------ server compute
+
+pub static SERVER_STEPS: Counter = Counter::new(
+    "slacc_server_steps_total",
+    "",
+    "server_step items executed (one per device Activations)",
+);
+pub static SERVER_DISPATCHES: Counter = Counter::new(
+    "slacc_server_dispatches_total",
+    "",
+    "compute dispatches those steps crossed the backend boundary in",
+);
+pub static DISPATCH_WIDTH: Histogram = Histogram::new(
+    "slacc_dispatch_width",
+    "",
+    "devices coalesced per server_step_batch dispatch",
+);
+pub static SERVER_STEP_BATCH_NS: Histogram = Histogram::new(
+    "slacc_server_step_batch_ns",
+    "",
+    "wall-clock nanoseconds per server_step_batch dispatch",
+);
+
+// ------------------------------------------- rounds / accounted wire traffic
+
+pub static ROUNDS_CLOSED: Counter = Counter::new(
+    "slacc_rounds_closed_total",
+    "",
+    "training rounds closed by the scheduler",
+);
+/// Accounted wire bytes per stream kind — incremented at round close with
+/// exactly the [`crate::net::RoundCost`] figures that feed the end-of-run
+/// report, so scraped totals and `TrainReport` totals agree to the byte.
+pub static WIRE_UP_BYTES: Counter = Counter::new(
+    "slacc_wire_bytes_total",
+    "stream=\"uplink\"",
+    "accounted payload bytes per stream (matches RoundCost totals)",
+);
+pub static WIRE_DOWN_BYTES: Counter = Counter::new(
+    "slacc_wire_bytes_total",
+    "stream=\"downlink\"",
+    "accounted payload bytes per stream (matches RoundCost totals)",
+);
+pub static WIRE_SYNC_BYTES: Counter = Counter::new(
+    "slacc_wire_bytes_total",
+    "stream=\"sync\"",
+    "accounted payload bytes per stream (matches RoundCost totals)",
+);
+
+// -------------------------------------------------------------- codec sites
+// Measured where a codec runs (device worker or server), so in-process
+// loopback sessions see both ends of each stream; the accounted per-round
+// totals above are the wire-truth axis.
+
+pub static CODEC_ENC_NS_UP: Histogram = Histogram::new(
+    "slacc_codec_encode_ns",
+    "stream=\"uplink\"",
+    "nanoseconds per codec encode",
+);
+pub static CODEC_ENC_NS_DOWN: Histogram = Histogram::new(
+    "slacc_codec_encode_ns",
+    "stream=\"downlink\"",
+    "nanoseconds per codec encode",
+);
+pub static CODEC_ENC_NS_SYNC: Histogram = Histogram::new(
+    "slacc_codec_encode_ns",
+    "stream=\"sync\"",
+    "nanoseconds per codec encode",
+);
+pub static CODEC_DEC_NS_UP: Histogram = Histogram::new(
+    "slacc_codec_decode_ns",
+    "stream=\"uplink\"",
+    "nanoseconds per codec decode",
+);
+pub static CODEC_DEC_NS_DOWN: Histogram = Histogram::new(
+    "slacc_codec_decode_ns",
+    "stream=\"downlink\"",
+    "nanoseconds per codec decode",
+);
+pub static CODEC_DEC_NS_SYNC: Histogram = Histogram::new(
+    "slacc_codec_decode_ns",
+    "stream=\"sync\"",
+    "nanoseconds per codec decode",
+);
+pub static CODEC_ENC_BYTES_UP: Counter = Counter::new(
+    "slacc_codec_encode_bytes_total",
+    "stream=\"uplink\"",
+    "envelope bytes produced by codec encodes",
+);
+pub static CODEC_ENC_BYTES_DOWN: Counter = Counter::new(
+    "slacc_codec_encode_bytes_total",
+    "stream=\"downlink\"",
+    "envelope bytes produced by codec encodes",
+);
+pub static CODEC_ENC_BYTES_SYNC: Counter = Counter::new(
+    "slacc_codec_encode_bytes_total",
+    "stream=\"sync\"",
+    "envelope bytes produced by codec encodes",
+);
+pub static CODEC_DEC_BYTES_UP: Counter = Counter::new(
+    "slacc_codec_decode_bytes_total",
+    "stream=\"uplink\"",
+    "envelope bytes consumed by codec decodes",
+);
+pub static CODEC_DEC_BYTES_DOWN: Counter = Counter::new(
+    "slacc_codec_decode_bytes_total",
+    "stream=\"downlink\"",
+    "envelope bytes consumed by codec decodes",
+);
+pub static CODEC_DEC_BYTES_SYNC: Counter = Counter::new(
+    "slacc_codec_decode_bytes_total",
+    "stream=\"sync\"",
+    "envelope bytes consumed by codec decodes",
+);
+
+// --------------------------------------------------------------- shard tier
+
+pub static SHARD_SYNCS: Counter = Counter::new(
+    "slacc_shard_syncs_total",
+    "",
+    "cross-shard sync exchanges completed",
+);
+pub static SHARD_SYNC_WAIT_NS: Histogram = Histogram::new(
+    "slacc_shard_sync_wait_ns",
+    "",
+    "nanoseconds blocked at the shard-sync barrier (push sent to merge received)",
+);
+pub static FEDAVG_NS: Histogram = Histogram::new(
+    "slacc_fedavg_ns",
+    "",
+    "nanoseconds per cross-shard FedAvg merge",
+);
+
+// ----------------------------------------------------------------- exporter
+
+pub static SCRAPES: Counter = Counter::new(
+    "slacc_metrics_scrapes_total",
+    "",
+    "metrics-endpoint scrapes served",
+);
+
+/// Every counter, same-base instruments adjacent (exposition groups TYPE
+/// lines by base name). This order is also the roll-up wire order.
+pub fn counters() -> &'static [&'static Counter] {
+    &[
+        &POLL_WAKEUPS,
+        &FRAMES_RECV,
+        &FRAMES_SENT,
+        &NET_RX_BYTES,
+        &NET_TX_BYTES,
+        &SERVER_STEPS,
+        &SERVER_DISPATCHES,
+        &ROUNDS_CLOSED,
+        &WIRE_UP_BYTES,
+        &WIRE_DOWN_BYTES,
+        &WIRE_SYNC_BYTES,
+        &CODEC_ENC_BYTES_UP,
+        &CODEC_ENC_BYTES_DOWN,
+        &CODEC_ENC_BYTES_SYNC,
+        &CODEC_DEC_BYTES_UP,
+        &CODEC_DEC_BYTES_DOWN,
+        &CODEC_DEC_BYTES_SYNC,
+        &SHARD_SYNCS,
+        &SCRAPES,
+    ]
+}
+
+pub fn gauges() -> &'static [&'static Gauge] {
+    &[&QUEUE_DEPTH, &OPEN_CONNS]
+}
+
+pub fn histograms() -> &'static [&'static Histogram] {
+    &[
+        &DISPATCH_WIDTH,
+        &SERVER_STEP_BATCH_NS,
+        &CODEC_ENC_NS_UP,
+        &CODEC_ENC_NS_DOWN,
+        &CODEC_ENC_NS_SYNC,
+        &CODEC_DEC_NS_UP,
+        &CODEC_DEC_NS_DOWN,
+        &CODEC_DEC_NS_SYNC,
+        &SHARD_SYNC_WAIT_NS,
+        &FEDAVG_NS,
+    ]
+}
+
+/// Prometheus text exposition (format 0.0.4) of the whole registry.
+pub fn render_prometheus() -> String {
+    let mut out = String::with_capacity(8192);
+    let mut last = "";
+    for c in counters() {
+        if c.base != last {
+            out.push_str(&format!("# HELP {} {}\n# TYPE {} counter\n", c.base, c.help, c.base));
+            last = c.base;
+        }
+        out.push_str(&format!("{} {}\n", c.full_name(), c.get()));
+    }
+    for g in gauges() {
+        out.push_str(&format!("# HELP {} {}\n# TYPE {} gauge\n", g.base, g.help, g.base));
+        out.push_str(&format!("{} {}\n", g.full_name(), g.get()));
+    }
+    last = "";
+    for h in histograms() {
+        if h.base != last {
+            out.push_str(&format!(
+                "# HELP {} {}\n# TYPE {} histogram\n",
+                h.base, h.help, h.base
+            ));
+            last = h.base;
+        }
+        let sep = if h.label.is_empty() { "" } else { "," };
+        let mut cum = 0u64;
+        for (i, b) in h.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            // bucket i holds v < 2^(i+1); with integer observations that is
+            // exactly the `le = 2^(i+1)-1` cumulative bound
+            let le = (1u128 << (i + 1)) - 1;
+            out.push_str(&format!(
+                "{}_bucket{{{}{}le=\"{}\"}} {}\n",
+                h.base, h.label, sep, le, cum
+            ));
+        }
+        out.push_str(&format!(
+            "{}_bucket{{{}{}le=\"+Inf\"}} {}\n",
+            h.base, h.label, sep, cum
+        ));
+        out.push_str(&format!("{}_sum{{{}}} {}\n", h.base, h.label, h.sum()));
+        out.push_str(&format!("{}_count{{{}}} {}\n", h.base, h.label, h.count()));
+    }
+    out
+}
+
+/// Whole-registry snapshot as one JSON object (the `--metrics-every` JSONL
+/// row body): counters/gauges by full name, histograms as `{count, sum}`.
+pub fn snapshot_json() -> Json {
+    let mut counters_o = BTreeMap::new();
+    for c in counters() {
+        counters_o.insert(c.full_name(), Json::Num(c.get() as f64));
+    }
+    let mut gauges_o = BTreeMap::new();
+    for g in gauges() {
+        gauges_o.insert(g.full_name(), Json::Num(g.get() as f64));
+    }
+    let mut hists_o = BTreeMap::new();
+    for h in histograms() {
+        hists_o.insert(
+            h.full_name(),
+            Json::obj(vec![
+                ("count", Json::Num(h.count() as f64)),
+                ("sum", Json::Num(h.sum() as f64)),
+            ]),
+        );
+    }
+    let mut root = BTreeMap::new();
+    root.insert("counters".to_string(), Json::Obj(counters_o));
+    root.insert("gauges".to_string(), Json::Obj(gauges_o));
+    root.insert("histograms".to_string(), Json::Obj(hists_o));
+    Json::Obj(root)
+}
+
+// ------------------------------------------------- shard→coordinator roll-up
+
+/// Roll-up blob version (inside the `ShardSync` metrics field).
+const ROLLUP_VERSION: u8 = 1;
+
+/// Compact cumulative counter snapshot piggybacked on the `ShardSync`
+/// exchange: `(fnv1a(full_name), value)` pairs in [`counters`] order. The
+/// coordinator resolves hashes against its own registry (same binary, same
+/// instrument set), so names never travel on the wire.
+pub fn rollup_blob() -> Vec<u8> {
+    let cs = counters();
+    let mut w = ByteWriter::with_capacity(1 + 4 + cs.len() * 16);
+    w.u8(ROLLUP_VERSION);
+    w.u32(cs.len() as u32);
+    for c in cs {
+        w.u64(crate::codecs::stream::fnv1a(&c.full_name()));
+        w.u64(c.get());
+    }
+    w.finish()
+}
+
+/// Parse a roll-up blob into `(name_hash, value)` pairs. An empty blob is a
+/// valid "nothing to report" (pre-telemetry peers, coordinator→shard legs).
+pub fn parse_rollup(blob: &[u8]) -> Result<Vec<(u64, u64)>, String> {
+    if blob.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut r = ByteReader::new(blob);
+    let ver = r.u8()?;
+    if ver != ROLLUP_VERSION {
+        return Err(format!("unknown metrics roll-up version {ver}"));
+    }
+    let n = r.u32()? as usize;
+    if n > 4096 {
+        return Err(format!("roll-up claims {n} counters (cap 4096)"));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push((r.u64()?, r.u64()?));
+    }
+    Ok(out)
+}
+
+/// Resolve a roll-up name hash against the local registry.
+pub fn counter_name(hash: u64) -> Option<String> {
+    counters().iter().find_map(|c| {
+        let name = c.full_name();
+        (crate::codecs::stream::fnv1a(&name) == hash).then_some(name)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_accumulates() {
+        static H: Histogram = Histogram::new("test_hist_ns", "", "test");
+        H.observe(0);
+        H.observe(3);
+        H.observe(1 << 20);
+        assert_eq!(H.count(), 3);
+        assert_eq!(H.sum(), 3 + (1 << 20));
+    }
+
+    #[test]
+    fn exposition_contains_every_instrument() {
+        POLL_WAKEUPS.inc();
+        WIRE_UP_BYTES.add(10);
+        QUEUE_DEPTH.set(3);
+        DISPATCH_WIDTH.observe(4);
+        let text = render_prometheus();
+        assert!(text.contains("# TYPE slacc_poll_wakeups_total counter"));
+        assert!(text.contains("slacc_wire_bytes_total{stream=\"uplink\"}"));
+        assert!(text.contains("# TYPE slacc_queue_depth gauge"));
+        assert!(text.contains("slacc_dispatch_width_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("slacc_dispatch_width_count{}"));
+        // every registered base appears with a TYPE line exactly once
+        for c in counters() {
+            assert!(text.contains(&format!("# TYPE {} counter", c.base)), "{}", c.base);
+        }
+        for h in histograms() {
+            assert!(text.contains(&format!("# TYPE {} histogram", h.base)), "{}", h.base);
+        }
+    }
+
+    #[test]
+    fn snapshot_json_parses_back() {
+        let j = snapshot_json();
+        let parsed = Json::parse(&j.dump()).unwrap();
+        match parsed {
+            Json::Obj(m) => {
+                assert!(m.contains_key("counters"));
+                assert!(m.contains_key("gauges"));
+                assert!(m.contains_key("histograms"));
+            }
+            other => panic!("snapshot must be an object, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rollup_round_trips_and_resolves() {
+        FRAMES_RECV.add(7);
+        let blob = rollup_blob();
+        let pairs = parse_rollup(&blob).unwrap();
+        assert_eq!(pairs.len(), counters().len());
+        for (hash, _) in &pairs {
+            assert!(counter_name(*hash).is_some(), "hash {hash:#x} must resolve");
+        }
+        // values snapshot real counter state (FRAMES_RECV >= 7)
+        let frames = pairs
+            .iter()
+            .find(|(h, _)| counter_name(*h).as_deref() == Some("slacc_frames_recv_total"))
+            .unwrap();
+        assert!(frames.1 >= 7);
+        // empty blob is the valid "nothing to report"
+        assert!(parse_rollup(&[]).unwrap().is_empty());
+        // truncated blob is rejected, not mis-read
+        assert!(parse_rollup(&blob[..blob.len() - 3]).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! Fleet telemetry: lock-free metrics registry, tracing spans, and live
+//! export.
+//!
+//! Three pieces, same no-async-runtime discipline as [`crate::sched`]:
+//!
+//! * [`metrics`] — process-global atomic counters/gauges/histograms with
+//!   statically registered handles. The hot path is one relaxed atomic RMW
+//!   and zero steady-state allocation; instruments are wired through the
+//!   codec layer, the event loop, server compute, round accounting, and the
+//!   shard tier.
+//! * [`span`] — RAII wall-clock spans (`span!("server_step_batch", width =
+//!   n)`) recorded into per-thread ring buffers, ~1ns when disabled via a
+//!   relaxed atomic gate, drained to JSONL by `--trace-out FILE`.
+//! * [`export`] — a non-blocking Prometheus-style scrape endpoint
+//!   (`--metrics-bind ADDR`) serviced from the `PollFleet` event loop, and
+//!   a per-round JSONL snapshot writer (`--metrics-every N`). Shard
+//!   processes additionally piggyback a counter roll-up on every
+//!   `ShardSync` exchange so the coordinator can report cluster-wide
+//!   totals.
+//!
+//! This layer is the measurement substrate ROADMAP's adaptive directions
+//! (runtime codec renegotiation, straggler-aware device selection) read
+//! from; it observes the session but never alters numerics — telemetry
+//! flags are deliberately *not* part of the config fingerprint.
+
+pub mod export;
+pub mod metrics;
+pub mod span;

@@ -20,6 +20,8 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::Instant;
 
+use crate::obs::export::MetricsExporter;
+use crate::obs::metrics;
 use crate::sched::fleet::Fleet;
 use crate::sched::poll;
 use crate::shard::FleetShape;
@@ -37,6 +39,10 @@ const READ_CHUNK: usize = 64 * 1024;
 /// bound: a peer that floods valid frames blocks in our TCP window (we
 /// stop reading its socket) instead of ballooning server RAM.
 const MAX_QUEUED_FRAMES: usize = 8;
+
+/// With a metrics exporter attached, indefinite poll waits are clamped to
+/// this so pending scrapers are serviced even while the fleet is quiet.
+const EXPORT_TICK_MS: i32 = 50;
 
 struct PollConn {
     stream: TcpStream,
@@ -67,6 +73,8 @@ pub struct PollFleet {
     /// 64 KiB per wake-up)
     rbuf: Vec<u8>,
     start: Instant,
+    /// `--metrics-bind` scrape endpoint, serviced once per poll pass
+    exporter: Option<MetricsExporter>,
 }
 
 impl PollFleet {
@@ -108,6 +116,7 @@ impl PollFleet {
             order: VecDeque::new(),
             rbuf: vec![0u8; READ_CHUNK],
             start: Instant::now(),
+            exporter: None,
         };
 
         // one Hello per connection, in whatever order they land
@@ -171,15 +180,38 @@ impl PollFleet {
                 order: VecDeque::new(),
                 rbuf: vec![0u8; READ_CHUNK],
                 start: fleet.start,
+                exporter: fleet.exporter,
             },
             hellos,
         ))
+    }
+
+    /// Attach a `--metrics-bind` scrape endpoint. The exporter is serviced
+    /// (non-blocking) on every poll pass, and indefinite waits are clamped
+    /// to [`EXPORT_TICK_MS`] so scrapers get answers while the fleet idles.
+    pub fn attach_exporter(&mut self, exporter: MetricsExporter) {
+        self.exporter = Some(exporter);
     }
 
     /// One poll pass: wait up to `timeout_ms` (-1 = forever) for readable
     /// sockets, drain them, decode complete frames into inboxes. Returns
     /// how many frames were decoded.
     fn poll_step(&mut self, timeout_ms: i32) -> Result<usize, TransportError> {
+        metrics::POLL_WAKEUPS.inc();
+        let timeout_ms = match &mut self.exporter {
+            Some(ex) => {
+                ex.service();
+                // clamp indefinite waits so pending scrapers aren't starved
+                // while the fleet is quiet
+                if timeout_ms < 0 {
+                    EXPORT_TICK_MS
+                } else {
+                    timeout_ms.min(EXPORT_TICK_MS)
+                }
+            }
+            None => timeout_ms,
+        };
+        metrics::OPEN_CONNS.set(self.conns.iter().filter(|c| !c.closed).count() as i64);
         // connections whose inbox is at the read-ahead cap are left out of
         // the poll set entirely: their bytes back up into the TCP window
         // until the scheduler drains them
@@ -235,6 +267,8 @@ impl PollFleet {
                         let conn = &mut self.conns[i];
                         conn.stats.frames_recv += 1;
                         conn.stats.bytes_recv += n as u64;
+                        metrics::FRAMES_RECV.inc();
+                        metrics::NET_RX_BYTES.add(n as u64);
                         conn.inbox.push_back(msg);
                         self.order.push_back(i);
                         decoded += 1;
@@ -266,6 +300,7 @@ impl PollFleet {
                 }
             }
         }
+        metrics::QUEUE_DEPTH.set(self.order.len() as i64);
         Ok(decoded)
     }
 
@@ -329,6 +364,8 @@ impl Fleet for PollFleet {
         }
         conn.stats.frames_sent += 1;
         conn.stats.bytes_sent += frame.len() as u64;
+        metrics::FRAMES_SENT.inc();
+        metrics::NET_TX_BYTES.add(frame.len() as u64);
         Ok(())
     }
 

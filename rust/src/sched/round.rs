@@ -215,6 +215,16 @@ fn close_round<C: Compute>(
     } else {
         None
     };
+    // authoritative wire counters: incremented from the exact values that
+    // build the RoundRecord below, so a live scrape's totals agree with
+    // the end-of-run report byte-for-byte
+    crate::obs::metrics::ROUNDS_CLOSED.inc();
+    crate::obs::metrics::WIRE_UP_BYTES.add(cost.bytes_up as u64);
+    crate::obs::metrics::WIRE_DOWN_BYTES.add(cost.bytes_down as u64);
+    crate::obs::metrics::WIRE_SYNC_BYTES.add((cost.bytes_sync + shard_wire) as u64);
+    if let Some(sw) = rt.snapshot.as_mut() {
+        sw.maybe_snapshot(round);
+    }
     let rec = RoundRecord {
         round,
         loss,

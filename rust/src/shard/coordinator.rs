@@ -57,6 +57,22 @@ pub struct CoordReport {
     pub bytes_down: usize,
     /// per-shard (up, down) payload bytes, index = shard id
     pub per_shard: Vec<(usize, usize)>,
+    /// cluster-wide counter totals: every shard's last telemetry roll-up
+    /// (piggybacked on its ShardSync pushes) summed by instrument, names
+    /// resolved against this binary's registry. Empty when no shard sent
+    /// a roll-up (pre-telemetry peers).
+    pub cluster_counters: Vec<(String, u64)>,
+}
+
+impl CoordReport {
+    /// Cluster-wide total of one counter by full exposition name
+    /// (e.g. `slacc_wire_bytes_total{stream="uplink"}`).
+    pub fn cluster_counter(&self, name: &str) -> Option<u64> {
+        self.cluster_counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, v)| v)
+    }
 }
 
 /// The coordinator runtime (see module docs).
@@ -149,6 +165,10 @@ impl Coordinator {
         let mut bytes_up = 0usize;
         let mut bytes_down = 0usize;
         let mut per_shard = vec![(0usize, 0usize); m];
+        // last-seen telemetry roll-up per shard (the blobs are cumulative,
+        // so only the newest matters; the departure notice carries the
+        // final one)
+        let mut rollups: Vec<Vec<(u64, u64)>> = vec![Vec::new(); m];
         loop {
             // barrier: one message per active shard (push or departure)
             let mut pushes: Vec<Option<(Vec<Tensor>, Vec<Tensor>)>> =
@@ -161,11 +181,22 @@ impl Coordinator {
                     .recv_from(k)
                     .map_err(|e| shard_err(k, &fleet.peer(k), &e))?;
                 match msg {
-                    Message::ShardSync { epoch: e, shard_id, client, server } => {
+                    Message::ShardSync { epoch: e, shard_id, client, server, metrics } => {
                         if shard_id as usize != k {
                             return Err(format!(
                                 "shard {k} pushed a sync labeled shard {shard_id}"
                             ));
+                        }
+                        // telemetry is advisory: a malformed roll-up is
+                        // logged and dropped, never a session failure
+                        if !metrics.is_empty() {
+                            match crate::obs::metrics::parse_rollup(&metrics) {
+                                Ok(pairs) => rollups[k] = pairs,
+                                Err(e) => crate::log_warn!(
+                                    "[{label}] coordinator: shard {k} sent an \
+                                     unreadable metrics roll-up: {e}"
+                                ),
+                            }
                         }
                         if client.is_empty() && server.is_empty() {
                             active[k] = false;
@@ -205,8 +236,12 @@ impl Coordinator {
             if pushes.iter().all(|p| p.is_none()) {
                 break; // every shard has left
             }
-            let (merged_client, merged_server) =
-                merge_shard_models(&pushes, &weights, epoch)?;
+            let fedavg_t0 = std::time::Instant::now();
+            let (merged_client, merged_server) = {
+                let _sp = crate::span!("fedavg_merge", epoch = epoch);
+                merge_shard_models(&pushes, &weights, epoch)?
+            };
+            crate::obs::metrics::FEDAVG_NS.observe(fedavg_t0.elapsed().as_nanos() as u64);
             for k in 0..m {
                 if pushes[k].is_none() {
                     continue;
@@ -228,6 +263,7 @@ impl Coordinator {
                     shard_id: k as u32,
                     client: cb,
                     server: sb,
+                    metrics: Vec::new(),
                 })?;
                 fleet.pump(k)?;
             }
@@ -244,6 +280,7 @@ impl Coordinator {
             bytes_up,
             bytes_down,
             per_shard,
+            cluster_counters: sum_rollups(&rollups),
         })
     }
 
@@ -297,6 +334,31 @@ impl Coordinator {
             )),
         }
     }
+}
+
+/// Sum per-shard roll-ups by instrument hash and resolve names against
+/// this binary's registry. Hashes no local counter matches (a newer peer's
+/// instrument) are reported under their hex hash rather than dropped.
+fn sum_rollups(rollups: &[Vec<(u64, u64)>]) -> Vec<(String, u64)> {
+    use std::collections::BTreeMap;
+    let mut totals: BTreeMap<u64, u64> = BTreeMap::new();
+    for pairs in rollups {
+        for &(hash, value) in pairs {
+            *totals.entry(hash).or_insert(0) += value;
+        }
+    }
+    // registry order keeps the report stable and human-scannable
+    let mut out = Vec::with_capacity(totals.len());
+    for c in crate::obs::metrics::counters() {
+        let name = c.full_name();
+        if let Some(v) = totals.remove(&crate::codecs::stream::fnv1a(&name)) {
+            out.push((name, v));
+        }
+    }
+    for (hash, v) in totals {
+        out.push((format!("unknown_{hash:#018x}"), v));
+    }
+    out
 }
 
 fn shard_err(k: usize, peer: &str, e: &TransportError) -> String {
@@ -408,6 +470,24 @@ mod tests {
         ];
         let (mc, _) = merge_shard_models(&pushes, &[1.0, 1.0], 2).unwrap();
         assert!(mc.is_empty());
+    }
+
+    #[test]
+    fn rollups_sum_across_shards_and_resolve_names() {
+        let name = crate::obs::metrics::ROUNDS_CLOSED.full_name();
+        let hash = crate::codecs::stream::fnv1a(&name);
+        let rollups = vec![
+            vec![(hash, 3), (0xdead_beef, 7)],
+            vec![(hash, 5)],
+            Vec::new(),
+        ];
+        let totals = sum_rollups(&rollups);
+        assert_eq!(
+            totals.iter().find(|(n, _)| n == &name).map(|&(_, v)| v),
+            Some(8)
+        );
+        // an unknown instrument hash survives under its hex name
+        assert!(totals.iter().any(|(n, v)| n.starts_with("unknown_0x") && *v == 7));
     }
 
     #[test]

@@ -167,20 +167,28 @@ impl ShardLink {
         let client_pack = sync::pack_params_with(client, self.push.as_mut(), &mut self.scratch);
         let server_pack = sync::pack_params_with(server, self.push.as_mut(), &mut self.scratch);
         let pushed = client_pack.len() + server_pack.len();
+        let _sp = crate::span!("shard_sync", epoch = self.epoch);
         self.conn
             .send(&Message::ShardSync {
                 epoch: self.epoch as u32,
                 shard_id: me as u32,
                 client: client_pack,
                 server: server_pack,
+                // piggyback this shard's cumulative counters so the
+                // coordinator can report cluster-wide totals
+                metrics: crate::obs::metrics::rollup_blob(),
             })
             .map_err(|e| format!("shard {me}: push to coordinator: {e}"))?;
+        let barrier_t0 = std::time::Instant::now();
         let reply = self
             .conn
             .recv()
             .map_err(|e| format!("shard {me}: awaiting coordinator merge: {e}"))?;
+        crate::obs::metrics::SHARD_SYNC_WAIT_NS
+            .observe(barrier_t0.elapsed().as_nanos() as u64);
+        crate::obs::metrics::SHARD_SYNCS.inc();
         match reply {
-            Message::ShardSync { epoch, shard_id, client, server } => {
+            Message::ShardSync { epoch, shard_id, client, server, .. } => {
                 if shard_id as usize != me {
                     return Err(format!(
                         "shard {me}: coordinator merge addressed shard {shard_id}"
@@ -228,6 +236,9 @@ impl ShardLink {
                 shard_id: self.shard_id as u32,
                 client: Vec::new(),
                 server: Vec::new(),
+                // final counter roll-up rides the departure notice, so the
+                // coordinator's cluster totals include the whole session
+                metrics: crate::obs::metrics::rollup_blob(),
             })
             .map_err(|e| format!("shard {}: departure notice: {e}", self.shard_id))
     }

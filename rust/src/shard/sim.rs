@@ -77,6 +77,7 @@ pub fn run_sharded_mock(cfg: &ExperimentConfig) -> Result<ShardedReport, String>
                 bytes_up: 0,
                 bytes_down: 0,
                 per_shard: vec![(0, 0)],
+                cluster_counters: Vec::new(),
             },
         });
     }

@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use crate::codecs::stream::StreamSpecs;
+use crate::codecs::stream::{record_decode, record_encode, StreamKind, StreamSpecs};
 use crate::codecs::RoundCtx;
 use crate::config::ExperimentConfig;
 use crate::coordinator::device::DeviceState;
@@ -140,11 +140,13 @@ impl<C: Compute> DeviceWorker<C> {
                 // with the reusable-buffer encode as the primitive)
                 let h_inst = self.compute.entropy(&acts)?;
                 let acts_cm = acts.to_channel_major();
+                let t0 = std::time::Instant::now();
                 let payload = self
                     .state
                     .streams
                     .up
                     .compress(&acts_cm, RoundCtx { entropy: Some(&h_inst) });
+                record_encode(StreamKind::Uplink, t0, payload.len());
                 self.pending = Some(Pending { round, x, x_dims, sync });
                 Ok(vec![Message::Activations {
                     round,
@@ -166,12 +168,14 @@ impl<C: Compute> DeviceWorker<C> {
                     ));
                 }
                 // stage iv: downlink decode + client backward
+                let t0 = std::time::Instant::now();
                 let g_hat = self
                     .state
                     .streams
                     .down
                     .decode(&payload)
                     .map_err(|e| format!("device {me}: downlink stream: {e}"))?;
+                record_decode(StreamKind::Downlink, t0, payload.len());
                 let new_params = self.compute.client_bwd(
                     &self.state.client_params,
                     &pending.x,

@@ -33,8 +33,9 @@ pub const FRAME_MAGIC: u32 = 0x534C_4143;
 /// Wire-protocol version (frames, not payload envelopes). v2 replaced
 /// Hello's single codec string with the full per-stream spec table; v3
 /// added the shard-tier frames (ShardHello/ShardSync) for multi-server
-/// topologies.
-pub const PROTO_VERSION: u8 = 3;
+/// topologies; v4 added the telemetry roll-up blob to ShardSync so the
+/// coordinator can report cluster-wide counter totals.
+pub const PROTO_VERSION: u8 = 4;
 /// Fixed frame-header size in bytes (magic + version + type + body_len).
 pub const FRAME_HEADER_BYTES: usize = 4 + 1 + 1 + 4;
 /// Hard cap on a frame body: 1 GiB, matching the payload header's
@@ -137,6 +138,11 @@ pub enum Message {
         client: Vec<u8>,
         /// sync pack of the shard/merged server sub-model
         server: Vec<u8>,
+        /// telemetry roll-up ([`crate::obs::metrics::rollup_blob`]):
+        /// shard → coordinator carries the shard's cumulative counters so
+        /// the coordinator can report cluster-wide totals; empty in the
+        /// coordinator's replies (and from pre-telemetry peers)
+        metrics: Vec<u8>,
     },
 }
 
@@ -229,11 +235,12 @@ impl Message {
                 w.u64(*config_fp);
                 w.u64(*weight);
             }
-            Message::ShardSync { epoch, shard_id, client, server } => {
+            Message::ShardSync { epoch, shard_id, client, server, metrics } => {
                 w.u32(*epoch);
                 w.u32(*shard_id);
                 write_blob(w, client);
                 write_blob(w, server);
+                write_blob(w, metrics);
             }
         }
     }
@@ -297,6 +304,7 @@ impl Message {
                 shard_id: r.u32()?,
                 client: read_blob(r)?,
                 server: read_blob(r)?,
+                metrics: read_blob(r)?,
             },
             other => return Err(format!("unknown message type {other}")),
         };
@@ -588,6 +596,7 @@ mod tests {
                 shard_id: 1,
                 client: vec![7; 12],
                 server: vec![8; 20],
+                metrics: vec![1, 0, 0, 0, 0],
             },
         ]
     }

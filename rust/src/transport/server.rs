@@ -22,7 +22,9 @@
 
 use std::sync::Arc;
 
-use crate::codecs::stream::{StreamKind, StreamSet, StreamSpecs};
+use crate::codecs::stream::{
+    record_decode, record_encode, StreamKind, StreamSet, StreamSpecs,
+};
 use crate::codecs::RoundCtx;
 use crate::config::ExperimentConfig;
 use crate::coordinator::device::fedavg_params;
@@ -31,6 +33,9 @@ use crate::coordinator::server::ServerState;
 use crate::data::Dataset;
 use crate::net::timeline::{SchedRecord, Timeline};
 use crate::net::NetworkSim;
+use crate::obs::export::{MetricsExporter, SnapshotWriter};
+use crate::obs::metrics;
+use crate::span;
 use crate::quant::payload::ByteWriter;
 use crate::sched::fleet::{Fleet, PumpFleet};
 use crate::sched::round::RoundScheduler;
@@ -271,6 +276,9 @@ pub struct ServerRuntime<C: Compute> {
     /// shard-link wire bytes this round (push + merged reply), drained at
     /// round close onto the `bytes_sync` axis
     pub(crate) shard_round_wire: usize,
+    /// `--metrics-every`: periodic registry snapshots, written at round
+    /// close (None unless the CLI attached one)
+    pub(crate) snapshot: Option<SnapshotWriter>,
 }
 
 /// One device's uplink contribution awaiting the next batched dispatch:
@@ -331,7 +339,14 @@ impl<C: Compute> ServerRuntime<C> {
             server_dispatches: 0,
             shard: None,
             shard_round_wire: 0,
+            snapshot: None,
         })
+    }
+
+    /// Attach a `--metrics-every` snapshot writer; one JSONL registry
+    /// snapshot lands per cadence boundary at round close.
+    pub fn attach_snapshot_writer(&mut self, writer: SnapshotWriter) {
+        self.snapshot = Some(writer);
     }
 
     /// Attach this shard's coordinator link (multi-server topologies
@@ -443,9 +458,11 @@ impl<C: Compute> ServerRuntime<C> {
         // device's stream — per-device state, inherently per-item work
         let mut acts: Vec<Tensor> = Vec::with_capacity(items.len());
         for it in items {
+            let t0 = std::time::Instant::now();
             let acts_hat = self.streams.device(it.d).up.decode(&it.payload).map_err(|e| {
                 format!("round {}: device {} uplink stream: {e}", it.round, it.d)
             })?;
+            record_decode(StreamKind::Uplink, t0, it.payload.len());
             self.raw_round[0] += acts_hat.len() * 4;
             acts.push(acts_hat);
         }
@@ -463,12 +480,20 @@ impl<C: Compute> ServerRuntime<C> {
             let group_acts: Vec<&Tensor> = acts[i..j].iter().collect();
             let group_ys: Vec<&[i32]> =
                 items[i..j].iter().map(|it| it.labels.as_slice()).collect();
-            let mut outs = self.compute.server_step_batch(
-                &self.server.server_params,
-                &group_acts,
-                &group_ys,
-                self.cfg.lr,
-            )?;
+            let dispatch_t0 = std::time::Instant::now();
+            let mut outs = {
+                let _sp = span!("server_step_batch", width = j - i);
+                self.compute.server_step_batch(
+                    &self.server.server_params,
+                    &group_acts,
+                    &group_ys,
+                    self.cfg.lr,
+                )?
+            };
+            metrics::SERVER_STEP_BATCH_NS.observe(dispatch_t0.elapsed().as_nanos() as u64);
+            metrics::DISPATCH_WIDTH.observe((j - i) as u64);
+            metrics::SERVER_DISPATCHES.inc();
+            metrics::SERVER_STEPS.add((j - i) as u64);
             if outs.len() != j - i {
                 return Err(format!(
                     "server_step_batch returned {} outputs for {} items",
@@ -511,11 +536,13 @@ impl<C: Compute> ServerRuntime<C> {
                 // batch; the frame still owns its payload (the to_vec is
                 // the single steady-state allocation per message)
                 self.down_scratch.clear();
+                let enc_t0 = std::time::Instant::now();
                 self.streams.device(it.d).down.encode(
                     &g_cm,
                     RoundCtx { entropy: g_ent.as_deref() },
                     &mut self.down_scratch,
                 );
+                record_encode(StreamKind::Downlink, enc_t0, self.down_scratch.len());
                 results.push((loss, self.down_scratch.to_vec()));
             }
             i = j;
@@ -532,8 +559,10 @@ impl<C: Compute> ServerRuntime<C> {
 
     /// Accept a device's ModelSync push (unpack through its sync stream).
     pub(crate) fn accept_sync(&mut self, d: usize, payload: &[u8]) -> Result<(), String> {
+        let t0 = std::time::Instant::now();
         let tensors = sync::unpack_params(payload, self.streams.device(d).sync_up.as_mut())
             .map_err(|e| format!("device {d} sync stream (push): {e}"))?;
+        record_decode(StreamKind::Sync, t0, payload.len());
         if tensors.is_empty() {
             return Err(format!("device {d}: ModelSync push carried no tensors"));
         }
@@ -547,11 +576,14 @@ impl<C: Compute> ServerRuntime<C> {
     /// whole broadcast loop instead of a fresh allocation set per device.
     pub(crate) fn pack_broadcast(&mut self, d: usize, params: &[Tensor]) -> Vec<u8> {
         self.raw_round[2] += params.iter().map(|t| t.len() * 4).sum::<usize>();
-        sync::pack_params_with(
+        let t0 = std::time::Instant::now();
+        let payload = sync::pack_params_with(
             params,
             self.streams.device(d).sync_down.as_mut(),
             &mut self.sync_scratch,
-        )
+        );
+        record_encode(StreamKind::Sync, t0, payload.len());
+        payload
     }
 
     /// Weighted FedAvg over `basis` (device-id order preserved for f32
@@ -787,9 +819,22 @@ pub fn accept_and_serve<C: Compute>(
     runtime: &mut ServerRuntime<C>,
     listener: &std::net::TcpListener,
 ) -> Result<TrainReport, String> {
+    accept_and_serve_with(runtime, listener, None)
+}
+
+/// [`accept_and_serve`] with an optional live-metrics exporter
+/// (`--metrics-bind`) attached to the poll loop before the session runs.
+pub fn accept_and_serve_with<C: Compute>(
+    runtime: &mut ServerRuntime<C>,
+    listener: &std::net::TcpListener,
+    exporter: Option<MetricsExporter>,
+) -> Result<TrainReport, String> {
     let shape = runtime.cfg.shape();
     let (mut fleet, hellos) =
         crate::sched::event_loop::PollFleet::accept(listener, shape)?;
+    if let Some(ex) = exporter {
+        fleet.attach_exporter(ex);
+    }
     runtime.serve_fleet(&mut fleet, &hellos)
 }
 

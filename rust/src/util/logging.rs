@@ -1,10 +1,20 @@
 //! Tiny leveled logger (no `log`/`env_logger` runtime deps on the hot path).
 //!
 //! Level is process-global, set once by the CLI (`--log-level`) or the
-//! `SLACC_LOG` environment variable. Macros compile to a branch on a relaxed
-//! atomic load, so disabled levels cost ~1ns.
+//! `SLACC_LOG` environment variable — both routes parse through
+//! [`level_from_str`]. Macros compile to a branch on a relaxed atomic load,
+//! so disabled levels cost ~1ns.
+//!
+//! Every line is prefixed with a monotonic elapsed-time stamp (seconds
+//! since the process epoch — the same epoch [`crate::obs::span`] stamps
+//! trace events with, so logs and spans line up) and the emitting thread's
+//! name, and is formatted into one buffer before a single locked
+//! `write_all`, so concurrent device/server threads cannot interleave
+//! partial lines.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -17,6 +27,18 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Process epoch for log stamps and span timestamps: first use pins it, so
+/// call [`init_from_env`] early for stamps that start near zero.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process epoch (monotonic).
+pub fn elapsed_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
 
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
@@ -33,8 +55,10 @@ pub fn level_from_str(s: &str) -> Option<Level> {
     }
 }
 
-/// Initialize from `SLACC_LOG` if set; call once at startup.
+/// Initialize from `SLACC_LOG` if set; call once at startup (also pins the
+/// elapsed-time epoch).
 pub fn init_from_env() {
+    let _ = epoch();
     if let Ok(v) = std::env::var("SLACC_LOG") {
         if let Some(l) = level_from_str(&v) {
             set_level(l);
@@ -55,7 +79,15 @@ pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("[{tag}] {args}");
+        let t = elapsed_ns() as f64 / 1e9;
+        let cur = std::thread::current();
+        let thread = cur.name().unwrap_or("?");
+        // one formatted buffer, one locked write: no interleaved lines
+        let line = format!("[{t:9.3}s {tag} {thread}] {args}\n");
+        use std::io::Write;
+        let stderr = std::io::stderr();
+        let mut handle = stderr.lock();
+        let _ = handle.write_all(line.as_bytes());
     }
 }
 
@@ -88,5 +120,12 @@ mod tests {
     fn parse_levels() {
         assert_eq!(level_from_str("DEBUG"), Some(Level::Debug));
         assert_eq!(level_from_str("nope"), None);
+    }
+
+    #[test]
+    fn elapsed_is_monotonic() {
+        let a = elapsed_ns();
+        let b = elapsed_ns();
+        assert!(b >= a);
     }
 }

@@ -1,0 +1,291 @@
+//! Telemetry-subsystem integration: the live scrape endpoint under a real
+//! TCP training session, exact byte agreement between the metrics registry
+//! and the end-of-run report, per-round snapshots, trace spans, and the
+//! shard→coordinator counter roll-up — all engine-free via the mock compute.
+//!
+//! The metrics registry is process-global and cumulative, so every test
+//! here serializes on one gate mutex and asserts on before/after *deltas*.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::Duration;
+
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::data::Dataset;
+use slacc::obs::export::{MetricsExporter, SnapshotWriter};
+use slacc::obs::{metrics, span};
+use slacc::shard::sim::run_sharded_mock;
+use slacc::transport::device::{mock_worker, run_blocking};
+use slacc::transport::server::{accept_and_serve_with, mock_runtime, run_mock_loopback};
+use slacc::transport::tcp::TcpTransport;
+use slacc::util::json::Json;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    // a failed sibling test must not wedge the rest of the suite
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tiny_cfg(devices: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for("ham");
+    cfg.devices = devices;
+    cfg.rounds = rounds;
+    cfg.train_n = 64;
+    cfg.test_n = 16;
+    cfg.eval_every = 2;
+    cfg.lr = 1e-3;
+    cfg.seed = 3;
+    cfg.codec = CodecChoice::Named("slacc".into());
+    cfg
+}
+
+/// Wire-byte counters (the accounted axis) as one snapshot.
+fn wire_counters() -> (u64, u64, u64, u64) {
+    (
+        metrics::WIRE_UP_BYTES.get(),
+        metrics::WIRE_DOWN_BYTES.get(),
+        metrics::WIRE_SYNC_BYTES.get(),
+        metrics::ROUNDS_CLOSED.get(),
+    )
+}
+
+/// One blocking scrape of `addr`: full HTTP exchange, returns the body.
+/// `None` when the endpoint is gone (session over) or stalls past 5s.
+fn scrape(addr: &str) -> Option<String> {
+    let mut conn = TcpStream::connect(addr).ok()?;
+    conn.set_read_timeout(Some(Duration::from_secs(5))).ok()?;
+    conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: slacc\r\n\r\n")
+        .ok()?;
+    let mut raw = String::new();
+    conn.read_to_string(&mut raw).ok()?;
+    let (head, body) = raw.split_once("\r\n\r\n")?;
+    if !head.starts_with("HTTP/1.1 200 OK") {
+        return None;
+    }
+    let len: usize = head
+        .lines()
+        .find_map(|l| l.strip_prefix("Content-Length: "))?
+        .parse()
+        .ok()?;
+    (body.len() == len).then(|| body.to_string())
+}
+
+/// Value of an exposition line whose full name (base + labels) is `name`.
+fn exposition_value(body: &str, name: &str) -> Option<u64> {
+    body.lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.trim().parse().ok()))
+}
+
+/// Exact agreement, loopback axis: the WIRE_* counter deltas across a
+/// session equal the `TrainReport` byte totals *to the byte*, and rounds
+/// closed equals rounds run.
+#[test]
+fn wire_counters_match_report_totals_exactly() {
+    let _g = gate();
+    let cfg = tiny_cfg(3, 4);
+    let (up0, down0, sync0, rounds0) = wire_counters();
+    let report = run_mock_loopback(&cfg).unwrap();
+    let (up1, down1, sync1, rounds1) = wire_counters();
+    assert_eq!(up1 - up0, report.total_bytes_up as u64);
+    assert_eq!(down1 - down0, report.total_bytes_down as u64);
+    assert_eq!(sync1 - sync0, report.total_bytes_sync as u64);
+    assert_eq!(rounds1 - rounds0, report.rounds_run as u64);
+    assert!(report.total_bytes_up > 0, "agreement on zero proves nothing");
+}
+
+/// The acceptance bar: a real TCP session with `--metrics-bind` serves
+/// Prometheus text *mid-run* from the event loop; scraped counters are
+/// monotonic, the accounted byte axis lands exactly on the report totals
+/// (which themselves match loopback byte-for-byte), and the per-round
+/// snapshot writer emits one parseable JSONL row per round.
+#[test]
+fn live_scrape_during_tcp_session_agrees_with_report() {
+    let _g = gate();
+    let cfg = tiny_cfg(4, 24);
+    let loopback = run_mock_loopback(&cfg).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let exporter = MetricsExporter::bind("127.0.0.1:0").unwrap();
+    let scrape_addr = exporter.local_addr().to_string();
+    let snap_path = std::env::temp_dir().join(format!(
+        "slacc_obs_snapshots_{}.jsonl",
+        std::process::id()
+    ));
+    let snap_path = snap_path.to_str().unwrap().to_string();
+
+    // scraper runs concurrently with the session: connections queue in the
+    // listener backlog and are serviced from the event loop's poll_step, so
+    // the first scrapes complete while rounds are still closing; once the
+    // session ends the exporter is gone and the scraper stops
+    let scraper = thread::spawn({
+        let scrape_addr = scrape_addr.clone();
+        move || {
+            let mut samples: Vec<(u64, u64, u64)> = Vec::new();
+            for _ in 0..512 {
+                let Some(body) = scrape(&scrape_addr) else { break };
+                samples.push((
+                    exposition_value(&body, "slacc_frames_recv_total").unwrap(),
+                    exposition_value(&body, "slacc_rounds_closed_total").unwrap(),
+                    exposition_value(&body, "slacc_wire_bytes_total{stream=\"uplink\"}")
+                        .unwrap(),
+                ));
+            }
+            samples
+        }
+    });
+
+    let (up0, down0, sync0, _) = wire_counters();
+    let scrapes0 = metrics::SCRAPES.get();
+    let mut handles = Vec::new();
+    for d in 0..cfg.devices {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        handles.push(thread::spawn(move || -> Result<(), String> {
+            let (train, _) =
+                Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+            let mut worker = mock_worker(&cfg, Arc::new(train), d)?;
+            let mut conn =
+                TcpTransport::connect_retry(&addr, 40, Duration::from_millis(100))?;
+            run_blocking(&mut worker, &mut conn)
+        }));
+    }
+    let (_, test) =
+        Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed).unwrap();
+    let mut rt = mock_runtime(&cfg, Arc::new(test)).unwrap();
+    rt.attach_snapshot_writer(SnapshotWriter::create(&snap_path, 1).unwrap());
+    let report = accept_and_serve_with(&mut rt, &listener, Some(exporter)).unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    let samples = scraper.join().unwrap();
+    let (up1, down1, sync1, _) = wire_counters();
+
+    // exact byte agreement on the accounted axis, TCP side
+    assert_eq!(up1 - up0, report.total_bytes_up as u64);
+    assert_eq!(down1 - down0, report.total_bytes_down as u64);
+    assert_eq!(sync1 - sync0, report.total_bytes_sync as u64);
+    // and the TCP totals are the loopback totals (transport parity)
+    assert_eq!(report.total_bytes_up, loopback.total_bytes_up);
+    assert_eq!(report.total_bytes_down, loopback.total_bytes_down);
+
+    // the endpoint really served mid-run: several scrapes landed, every
+    // sampled counter is monotonic, and the final samples are bounded by
+    // the end-of-process registry state
+    assert!(
+        samples.len() >= 2,
+        "only {} scrape(s) completed during a 24-round session",
+        samples.len()
+    );
+    assert!(metrics::SCRAPES.get() - scrapes0 >= samples.len() as u64);
+    for pair in samples.windows(2) {
+        assert!(pair[0].0 <= pair[1].0, "frames_recv went backwards");
+        assert!(pair[0].1 <= pair[1].1, "rounds_closed went backwards");
+        assert!(pair[0].2 <= pair[1].2, "wire uplink bytes went backwards");
+    }
+    let last = samples.last().unwrap();
+    assert!(last.0 <= metrics::FRAMES_RECV.get());
+    assert!(last.2 <= up1);
+
+    // snapshot writer: one row per closed round, every row parses, the
+    // uplink byte counter is monotonic across rows and ends on the total
+    let text = std::fs::read_to_string(&snap_path).unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+    let rows: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(rows.len(), report.rounds_run);
+    let up_name = "slacc_wire_bytes_total{stream=\"uplink\"}";
+    let mut prev = up0 as f64;
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.at(&["round"]), &Json::Num(i as f64));
+        match row.at(&["metrics", "counters", up_name]) {
+            Json::Num(v) => {
+                assert!(*v >= prev, "snapshot {i}: uplink bytes went backwards");
+                prev = *v;
+            }
+            other => panic!("snapshot {i}: {up_name} missing, got {other:?}"),
+        }
+    }
+    assert_eq!(prev, up1 as f64, "last snapshot must carry the final total");
+}
+
+/// Trace spans recorded through a real session drain to parseable JSONL
+/// with the server-compute span present; disabling the gate afterwards
+/// stops recording.
+#[test]
+fn session_spans_drain_to_jsonl() {
+    let _g = gate();
+    let _ = span::drain(); // discard anything a prior test recorded
+    span::set_enabled(true);
+    let report = run_mock_loopback(&tiny_cfg(3, 3));
+    span::set_enabled(false);
+    report.unwrap();
+    let path = std::env::temp_dir().join(format!(
+        "slacc_obs_spans_{}.jsonl",
+        std::process::id()
+    ));
+    let path = path.to_str().unwrap().to_string();
+    let n = span::write_jsonl(&path).unwrap();
+    assert!(n > 0, "an instrumented session must record spans");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let mut saw_batch = false;
+    for line in text.lines() {
+        let row = Json::parse(line).unwrap();
+        if row.at(&["name"]) == &Json::Str("server_step_batch".to_string()) {
+            saw_batch = true;
+            match row.at(&["dur_ns"]) {
+                Json::Num(v) => assert!(*v >= 0.0),
+                other => panic!("dur_ns must be numeric, got {other:?}"),
+            }
+        }
+    }
+    assert!(saw_batch, "server_step_batch span missing from the trace");
+
+    // gate closed again: a fresh session records nothing
+    run_mock_loopback(&tiny_cfg(2, 2)).unwrap();
+    assert!(
+        span::drain().is_empty(),
+        "spans recorded while the gate was disabled"
+    );
+}
+
+/// The counter roll-up piggybacked on ShardSync reaches the coordinator
+/// through the real coordinator tier: cluster totals resolve to registry
+/// names and cover the whole cluster's closed rounds. (In this in-process
+/// sim both shard threads share one process registry, so summed values are
+/// upper bounds, not per-shard figures — the assertion is plumbing, names,
+/// and lower bounds.)
+#[test]
+fn shard_rollup_reaches_coordinator_cluster_totals() {
+    let _g = gate();
+    let mut cfg = tiny_cfg(4, 4);
+    cfg.train_n = 128;
+    cfg.test_n = 32;
+    cfg.shards = 2;
+    cfg.shard_sync_every = 1;
+    let sharded = run_sharded_mock(&cfg).unwrap();
+    let totals = &sharded.coordinator.cluster_counters;
+    assert!(!totals.is_empty(), "coordinator collected no roll-ups");
+    for (name, _) in totals {
+        assert!(
+            name.starts_with("slacc_"),
+            "unresolved roll-up counter: {name}"
+        );
+    }
+    let rounds = sharded
+        .coordinator
+        .cluster_counter("slacc_rounds_closed_total")
+        .expect("rounds_closed missing from cluster totals");
+    let run: usize = sharded.shard_reports.iter().map(|r| r.rounds_run).sum();
+    assert!(
+        rounds >= run as u64,
+        "cluster rounds_closed {rounds} below the {run} rounds the shards ran"
+    );
+    assert!(sharded
+        .coordinator
+        .cluster_counter("slacc_shard_syncs_total")
+        .is_some());
+}
