@@ -17,6 +17,9 @@
 //! `slacc::transport::compute::MockCompute`).
 //!
 //! Flags: --rounds N [3] --devices N [4] --port P [47613] --seed N [0]
+//!        --trace-dir DIR  record every process's lifecycle spans as
+//!                         DIR/server.jsonl + DIR/deviceN.jsonl, ready for
+//!                         `slacc trace DIR/*.jsonl`
 
 use std::net::TcpListener;
 use std::process::Command;
@@ -54,18 +57,42 @@ fn main() -> Result<(), String> {
     let port = args.usize_or("port", 47613);
     let id = args.usize_or("id", 0);
     let csv = args.str_opt("csv");
+    let trace_dir = args.str_opt("trace-dir");
+    let trace_out = args.str_opt("trace-out");
     args.finish()?;
     let cfg = session_cfg(devices, rounds, seed);
     cfg.validate()?;
     match role.as_str() {
-        "main" => orchestrate(cfg, port),
-        "server" => role_server(cfg, port, csv),
-        "device" => role_device(cfg, port, id),
+        "main" => orchestrate(cfg, port, trace_dir),
+        "server" => role_server(cfg, port, csv, trace_out),
+        "device" => role_device(cfg, port, id, trace_out),
         other => Err(format!("unknown --role '{other}'")),
     }
 }
 
-fn role_server(cfg: ExperimentConfig, port: usize, csv: Option<String>) -> Result<(), String> {
+/// Enable span recording for a spawned role and drain it at session end.
+fn begin_trace(role: &'static str, trace_out: &Option<String>) {
+    if trace_out.is_some() {
+        slacc::obs::span::set_enabled(true);
+        slacc::obs::span::set_trace_role(role, 0);
+    }
+}
+
+fn end_trace(tag: &str, trace_out: &Option<String>) -> Result<(), String> {
+    if let Some(path) = trace_out {
+        let n = slacc::obs::span::write_jsonl(path)?;
+        println!("[{tag}] {n} trace event(s) -> {path}");
+    }
+    Ok(())
+}
+
+fn role_server(
+    cfg: ExperimentConfig,
+    port: usize,
+    csv: Option<String>,
+    trace_out: Option<String>,
+) -> Result<(), String> {
+    begin_trace("server", &trace_out);
     let bind = format!("127.0.0.1:{port}");
     let listener = TcpListener::bind(&bind).map_err(|e| format!("bind {bind}: {e}"))?;
     println!("[server] listening on {bind} for {} devices", cfg.devices);
@@ -87,10 +114,16 @@ fn role_server(cfg: ExperimentConfig, port: usize, csv: Option<String>) -> Resul
     if let Some(path) = csv {
         report.metrics.write_csv(std::path::Path::new(&path))?;
     }
-    Ok(())
+    end_trace("server", &trace_out)
 }
 
-fn role_device(cfg: ExperimentConfig, port: usize, id: usize) -> Result<(), String> {
+fn role_device(
+    cfg: ExperimentConfig,
+    port: usize,
+    id: usize,
+    trace_out: Option<String>,
+) -> Result<(), String> {
+    begin_trace("device", &trace_out);
     let addr = format!("127.0.0.1:{port}");
     let mut conn = TcpTransport::connect_retry(&addr, 80, Duration::from_millis(250))?;
     if cfg.have_artifacts() {
@@ -103,10 +136,14 @@ fn role_device(cfg: ExperimentConfig, port: usize, id: usize) -> Result<(), Stri
         run_blocking(&mut worker, &mut conn)?;
     }
     println!("[device {id}] done ({} bytes sent)", conn.stats().bytes_sent);
-    Ok(())
+    end_trace(&format!("device {id}"), &trace_out)
 }
 
-fn orchestrate(cfg: ExperimentConfig, port: usize) -> Result<(), String> {
+fn orchestrate(
+    cfg: ExperimentConfig,
+    port: usize,
+    trace_dir: Option<String>,
+) -> Result<(), String> {
     let exe = std::env::current_exe().map_err(|e| e.to_string())?;
     let csv = std::env::temp_dir()
         .join(format!("slacc_distributed_{}.csv", std::process::id()));
@@ -123,8 +160,21 @@ fn orchestrate(cfg: ExperimentConfig, port: usize) -> Result<(), String> {
         if cfg.have_artifacts() { "PJRT artifacts" } else { "mock model" }
     );
 
+    let traces = match &trace_dir {
+        Some(dir) => {
+            let dir = std::path::PathBuf::from(dir);
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| format!("create {}: {e}", dir.display()))?;
+            Some(dir)
+        }
+        None => None,
+    };
+
     let mut server = Command::new(&exe);
     server.args(["--role", "server", "--csv", &csv.to_string_lossy()]);
+    if let Some(dir) = &traces {
+        server.args(["--trace-out", &dir.join("server.jsonl").to_string_lossy()]);
+    }
     for (k, v) in &common {
         server.args([*k, v.as_str()]);
     }
@@ -134,6 +184,12 @@ fn orchestrate(cfg: ExperimentConfig, port: usize) -> Result<(), String> {
     for d in 0..cfg.devices {
         let mut c = Command::new(&exe);
         c.args(["--role", "device", "--id", &d.to_string()]);
+        if let Some(dir) = &traces {
+            c.args([
+                "--trace-out",
+                &dir.join(format!("device{d}.jsonl")).to_string_lossy(),
+            ]);
+        }
         for (k, v) in &common {
             c.args([*k, v.as_str()]);
         }
@@ -216,5 +272,11 @@ fn orchestrate(cfg: ExperimentConfig, port: usize) -> Result<(), String> {
         tcp_rounds.len(),
         cfg.devices
     );
+    if let Some(dir) = &traces {
+        println!(
+            "traces recorded under {0} — analyze with: slacc trace {0}/*.jsonl",
+            dir.display()
+        );
+    }
     Ok(())
 }

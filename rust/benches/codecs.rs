@@ -96,7 +96,7 @@ fn main() {
         let mut codec: Box<dyn Codec> =
             codecs::by_name(spec, c, 1000, 3).unwrap_or_else(|e| panic!("{spec}: {e}"));
         let mut buf = ByteWriter::new();
-        let ctx = || RoundCtx { entropy: Some(&ent) };
+        let ctx = || RoundCtx { entropy: Some(&ent), kind: None };
 
         // warm the reusable buffer + internal scratch to steady state
         for _ in 0..3 {

@@ -71,7 +71,7 @@ fn main() {
         results.push(
             Bencher::new(&format!("compress[{name}]: 1 MiB activations"))
                 .run_bytes(|| {
-                    wire = codec.compress(&cm, RoundCtx { entropy: Some(&ent) });
+                    wire = codec.compress(&cm, RoundCtx { entropy: Some(&ent), kind: None });
                     raw_bytes
                 }),
         );

@@ -23,7 +23,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-use slacc::codecs::stream::{record_encode, StreamKind};
+use slacc::codecs::stream::{record_encode, record_entropy, StreamKind};
 use slacc::codecs::{self, Codec, RoundCtx};
 use slacc::entropy::shannon;
 use slacc::obs::{metrics, span};
@@ -137,10 +137,18 @@ fn main() {
         metrics::DISPATCH_WIDTH.observe(13)
     });
     audit("span (disabled)", false, &mut || {
-        let _s = slacc::span!("bench_tick", i = 1);
+        let _s = slacc::span!("bench_tick", round = 3, gid = 7, i = 1);
     });
     audit("span (enabled)", true, &mut || {
-        let _s = slacc::span!("bench_tick", i = 1);
+        let _s = slacc::span!("bench_tick", round = 3, gid = 7, i = 1);
+    });
+    audit("span (manual record)", true, &mut || {
+        span::record(
+            span::SpanEvent::manual("bench_wait", 10, 5).round(3).gid(7),
+        );
+    });
+    audit("entropy drift record", false, &mut || {
+        record_entropy(StreamKind::Uplink, &[1.5, 2.5, 3.5, 4.5]);
     });
     let _ = span::drain(); // discard the audit's ring contents
 
@@ -156,7 +164,7 @@ fn main() {
     let mut buf = ByteWriter::new();
     for _ in 0..3 {
         buf.clear();
-        codec.encode(&cm, RoundCtx { entropy: Some(&ent) }, &mut buf);
+        codec.encode(&cm, RoundCtx { entropy: Some(&ent), kind: None }, &mut buf);
     }
 
     let mut best_bare = f64::INFINITY;
@@ -165,16 +173,26 @@ fn main() {
         let t0 = Instant::now();
         for _ in 0..enc_iters {
             buf.clear();
-            codec.encode(&cm, RoundCtx { entropy: Some(&ent) }, &mut buf);
+            codec.encode(&cm, RoundCtx { entropy: Some(&ent), kind: None }, &mut buf);
         }
         best_bare = best_bare.min(t0.elapsed().as_secs_f64());
 
         let t0 = Instant::now();
         for _ in 0..enc_iters {
-            let _sp = slacc::span!("uplink_encode", bytes = buf.len());
+            let _sp = slacc::span!(
+                "uplink_encode",
+                round = 0,
+                gid = 0,
+                kind = StreamKind::Uplink,
+                bytes = buf.len()
+            );
             let enc_t0 = Instant::now();
             buf.clear();
-            codec.encode(&cm, RoundCtx { entropy: Some(&ent) }, &mut buf);
+            codec.encode(
+                &cm,
+                RoundCtx { entropy: Some(&ent), kind: Some(StreamKind::Uplink) },
+                &mut buf,
+            );
             record_encode(StreamKind::Uplink, enc_t0, buf.len());
         }
         best_instr = best_instr.min(t0.elapsed().as_secs_f64());

@@ -1,8 +1,9 @@
 //! Minimal CLI argument substrate (clap is not vendored on this image).
 //!
-//! Supports `--key value`, `--key=value`, bare flags, and one positional
-//! subcommand, with typed getters that accumulate error messages so the
-//! launcher can print everything wrong at once.
+//! Supports `--key value`, `--key=value`, bare flags, a positional
+//! subcommand plus trailing positionals (file lists), with typed getters
+//! that accumulate error messages so the launcher can print everything
+//! wrong at once.
 
 use std::collections::BTreeMap;
 
@@ -10,6 +11,8 @@ use std::collections::BTreeMap;
 pub struct Args {
     pub subcommand: Option<String>,
     flags: BTreeMap<String, String>,
+    positionals: Vec<String>,
+    positionals_taken: bool,
     errors: Vec<String>,
     known: Vec<String>,
 }
@@ -36,7 +39,7 @@ impl Args {
             } else if out.subcommand.is_none() {
                 out.subcommand = Some(tok);
             } else {
-                out.errors.push(format!("unexpected positional argument '{tok}'"));
+                out.positionals.push(tok);
             }
         }
         out
@@ -124,8 +127,22 @@ impl Args {
         }
     }
 
+    /// Trailing positionals after the subcommand (e.g. `slacc trace`'s
+    /// file list). Subcommands that don't call this get the historical
+    /// "unexpected positional" error from [`Args::finish`].
+    pub fn positionals(&mut self) -> Vec<String> {
+        self.positionals_taken = true;
+        self.positionals.clone()
+    }
+
     /// After all getters ran: unknown flags + type errors, if any.
     pub fn finish(mut self) -> Result<(), String> {
+        if !self.positionals_taken {
+            for tok in &self.positionals {
+                self.errors
+                    .push(format!("unexpected positional argument '{tok}'"));
+            }
+        }
         for key in self.flags.keys() {
             if !self.known.contains(key) {
                 self.errors.push(format!(
@@ -181,6 +198,22 @@ mod tests {
         let mut a = parse(&["--rounds", "abc"]);
         assert_eq!(a.usize_or("rounds", 7), 7);
         assert!(a.finish().unwrap_err().contains("not an integer"));
+    }
+
+    #[test]
+    fn positionals_collect_when_consumed() {
+        let mut a = parse(&["trace", "a.jsonl", "b.jsonl", "--chrome", "out.json"]);
+        assert_eq!(a.subcommand.as_deref(), Some("trace"));
+        assert_eq!(a.positionals(), vec!["a.jsonl", "b.jsonl"]);
+        assert_eq!(a.str_opt("chrome").as_deref(), Some("out.json"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn positionals_error_when_unconsumed() {
+        let a = parse(&["train", "stray.jsonl"]);
+        let err = a.finish().unwrap_err();
+        assert!(err.contains("unexpected positional argument 'stray.jsonl'"), "{err}");
     }
 
     #[test]

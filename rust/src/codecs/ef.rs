@@ -64,9 +64,8 @@ impl Codec for EfCodec {
         // NOTE: ctx.entropy was computed on the *raw* tensor; the
         // compensated tensor differs, so recompute inside the inner codec
         // by dropping the hint (correctness > the small CPU saving).
-        let _ = ctx; // entropy hint was computed on the raw tensor; see note
         let start = out.len();
-        self.inner.encode(&comp_cm, RoundCtx { entropy: None }, out);
+        self.inner.encode(&comp_cm, RoundCtx { entropy: None, kind: ctx.kind }, out);
 
         // absorb: m = decay * (x' - D(C(x'))) — the wire bytes we just
         // wrote are decoded in place (no interior-mutability workaround:

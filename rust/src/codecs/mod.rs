@@ -131,6 +131,11 @@ pub struct RoundCtx<'a> {
     /// AOT Pallas kernel on this tensor. Codecs that need entropy fall back
     /// to the host mirror when `None`.
     pub entropy: Option<&'a [f32]>,
+    /// Which session stream this encode serves, when the call site knows
+    /// (device uplink, server downlink). The entropy-path codecs feed the
+    /// per-stream channel-entropy drift gauges from it
+    /// ([`stream::record_entropy`]); `None` records nothing.
+    pub kind: Option<stream::StreamKind>,
 }
 
 /// A smashed-data compressor/decompressor.

@@ -93,6 +93,9 @@ impl SelectionCodec {
             }
             None => shannon::entropies_into(data, &mut self.inst),
         }
+        if let Some(kind) = ctx.kind {
+            super::stream::record_entropy(kind, &self.inst);
+        }
         let hist = self.acii.historical(&self.inst);
         let blended = self.acii.update(&self.inst);
 
@@ -237,7 +240,7 @@ mod tests {
         let cm = random_cm(2, 4, 4, 4, 2);
         let ent = [0.1f32, 5.0, 0.2, 0.3];
         let mut c = codec(Selection::EntropyInstant, 1, 4);
-        let _ = c.compress(&cm, RoundCtx { entropy: Some(&ent) });
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&ent), kind: None });
         assert_eq!(c.last_selected(), &[1]);
     }
 
@@ -246,14 +249,14 @@ mod tests {
         let cm = random_cm(2, 2, 4, 4, 3);
         let mut c = codec(Selection::EntropyHistorical, 1, 2);
         // round 0: channel 0 hot (no history -> falls back to inst)
-        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[5.0, 0.1]) });
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[5.0, 0.1]), kind: None });
         assert_eq!(c.last_selected(), &[0]);
         // round 1: channel 1 suddenly hot, but HISTORY still says 0
-        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[0.1, 5.0]) });
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[0.1, 5.0]), kind: None });
         assert_eq!(c.last_selected(), &[0], "historical must lag");
         // after enough rounds the history flips
         for _ in 0..6 {
-            let _ = c.compress(&cm, RoundCtx { entropy: Some(&[0.1, 5.0]) });
+            let _ = c.compress(&cm, RoundCtx { entropy: Some(&[0.1, 5.0]), kind: None });
         }
         assert_eq!(c.last_selected(), &[1]);
     }

@@ -164,6 +164,9 @@ impl Codec for SlAccCodec {
             }
             None => shannon::entropies_into(data, &mut self.inst),
         }
+        if let Some(kind) = ctx.kind {
+            super::stream::record_entropy(kind, &self.inst);
+        }
         let blended = self.acii.update(&self.inst);
 
         // --- CGC: group by entropy (Eq. 4), bits per group (Eqs. 5-6) ---
@@ -320,7 +323,7 @@ mod tests {
         let ent = [1.0f32, 1.1, 0.9, 1.05, 6.0, 6.1, 5.9, 6.05];
         let cfg = SlAccConfig { groups: 2, ..Default::default() };
         let mut c = SlAccCodec::new(cfg, 8, 100, 5);
-        let _ = c.compress(&cm, RoundCtx { entropy: Some(&ent) });
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&ent), kind: None });
         let last = c.last_round().unwrap();
         let g0 = last.group_of_channel[0];
         for ch in 0..4 {
@@ -346,7 +349,7 @@ mod tests {
             ..Default::default()
         };
         let mut c = SlAccCodec::new(cfg, 4, 100, 7);
-        let _ = c.compress(&cm, RoundCtx { entropy: Some(&ent) });
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&ent), kind: None });
         assert_eq!(c.last_round().unwrap().group_bits, vec![3]); // floor(3.7)
     }
 
@@ -359,7 +362,7 @@ mod tests {
             ..Default::default()
         };
         let mut c = SlAccCodec::new(cfg, 2, 100, 7);
-        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[0.5, 20.0]) });
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[0.5, 20.0]), kind: None });
         assert_eq!(c.last_round().unwrap().group_bits, vec![2, 8]);
     }
 
@@ -374,9 +377,9 @@ mod tests {
             ..Default::default()
         };
         let mut c = SlAccCodec::new(cfg, 4, 100, 9);
-        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[1.0, 1.0, 9.0, 9.0]) });
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[1.0, 1.0, 9.0, 9.0]), kind: None });
         // round 2: wildly different inst entropy, but history dominates
-        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[9.0, 9.0, 1.0, 1.0]) });
+        let _ = c.compress(&cm, RoundCtx { entropy: Some(&[9.0, 9.0, 1.0, 1.0]), kind: None });
         let last = c.last_round().unwrap();
         assert_eq!(last.group_of_channel[0], last.group_of_channel[1]);
         assert_eq!(last.group_of_channel[2], last.group_of_channel[3]);

@@ -118,6 +118,87 @@ pub fn record_decode(kind: StreamKind, started: std::time::Instant, wire_bytes: 
     o.decode_bytes.add(wire_bytes as u64);
 }
 
+/// Entropy samples kept per stream for the windowed drift statistics.
+pub const ENTROPY_WINDOW: usize = 64;
+
+/// Lock-free sliding window of per-encode mean channel entropies for one
+/// stream direction, publishing windowed mean/variance as milli-unit
+/// gauges. Same discipline as the rest of the registry: relaxed atomics
+/// only, zero allocation, races merely smudge the statistics.
+struct EntropyDrift {
+    /// f32 bit patterns of the most recent samples (ring)
+    samples: [std::sync::atomic::AtomicU32; ENTROPY_WINDOW],
+    /// monotone write counter; slot = idx % window, fill = min(idx, window)
+    idx: std::sync::atomic::AtomicUsize,
+    mean: &'static crate::obs::metrics::Gauge,
+    var: &'static crate::obs::metrics::Gauge,
+}
+
+impl EntropyDrift {
+    const fn new(
+        mean: &'static crate::obs::metrics::Gauge,
+        var: &'static crate::obs::metrics::Gauge,
+    ) -> EntropyDrift {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: std::sync::atomic::AtomicU32 = std::sync::atomic::AtomicU32::new(0);
+        EntropyDrift {
+            samples: [ZERO; ENTROPY_WINDOW],
+            idx: std::sync::atomic::AtomicUsize::new(0),
+            mean,
+            var,
+        }
+    }
+
+    fn record(&self, sample: f32) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let i = self.idx.fetch_add(1, Relaxed);
+        self.samples[i % ENTROPY_WINDOW].store(sample.to_bits(), Relaxed);
+        let n = (i + 1).min(ENTROPY_WINDOW);
+        let mut sum = 0.0f64;
+        let mut sumsq = 0.0f64;
+        for slot in &self.samples[..n] {
+            let x = f32::from_bits(slot.load(Relaxed)) as f64;
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = (sumsq / n as f64 - mean * mean).max(0.0);
+        self.mean.set((mean * 1000.0) as i64);
+        self.var.set((var * 1000.0) as i64);
+    }
+}
+
+static UPLINK_DRIFT: EntropyDrift = EntropyDrift::new(
+    &crate::obs::metrics::ENTROPY_MEAN_UP,
+    &crate::obs::metrics::ENTROPY_VAR_UP,
+);
+static DOWNLINK_DRIFT: EntropyDrift = EntropyDrift::new(
+    &crate::obs::metrics::ENTROPY_MEAN_DOWN,
+    &crate::obs::metrics::ENTROPY_VAR_DOWN,
+);
+static SYNC_DRIFT: EntropyDrift = EntropyDrift::new(
+    &crate::obs::metrics::ENTROPY_MEAN_SYNC,
+    &crate::obs::metrics::ENTROPY_VAR_SYNC,
+);
+
+/// Record one encode's per-channel entropies into the stream's drift
+/// window (called from the SL-ACC entropy paths when the
+/// [`super::RoundCtx`] declares its stream kind). The sample is the mean
+/// entropy across channels; the gauges publish windowed mean/variance in
+/// milli-bits.
+pub fn record_entropy(kind: StreamKind, entropies: &[f32]) {
+    if entropies.is_empty() {
+        return;
+    }
+    let sample = entropies.iter().sum::<f32>() / entropies.len() as f32;
+    let drift = match kind {
+        StreamKind::Uplink => &UPLINK_DRIFT,
+        StreamKind::Downlink => &DOWNLINK_DRIFT,
+        StreamKind::Sync => &SYNC_DRIFT,
+    };
+    drift.record(sample);
+}
+
 /// The base (innermost) codec family of a spec.
 #[derive(Debug, Clone, PartialEq)]
 pub enum BaseSpec {

@@ -1,6 +1,7 @@
 //! Training metrics: per-round records, accuracy observations, and
 //! CSV/JSON export for the bench harness and plots.
 
+use crate::net::timeline::DeviceWaitProfile;
 use crate::util::json::Json;
 
 /// One training round's measurements.
@@ -62,6 +63,33 @@ pub struct TrainReport {
     /// equal to `server_steps` at `--batch-window 1`, smaller when
     /// batching amortizes the boundary
     pub server_dispatches: usize,
+    /// per-device wait accounting for this node's local fleet slice,
+    /// `(global device id, profile)` in slot order — the straggler
+    /// attribution axis of the end-of-session report
+    pub device_waits: Vec<(usize, DeviceWaitProfile)>,
+}
+
+impl TrainReport {
+    /// Per-device wait CSV (`device,gid,wait_s,straggles,participations`) —
+    /// written next to the round CSV as `<stem>_devices.csv` so the
+    /// historical round-CSV columns stay index-stable.
+    pub fn device_waits_csv(&self) -> String {
+        let mut out = String::from("device,gid,wait_s,straggles,participations\n");
+        for (d, (gid, p)) in self.device_waits.iter().enumerate() {
+            out.push_str(&format!(
+                "{d},{gid},{:.6},{},{}\n",
+                p.wait_s, p.straggles, p.participations
+            ));
+        }
+        out
+    }
+
+    pub fn write_device_waits_csv(&self, path: &std::path::Path) -> Result<(), String> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).map_err(|e| e.to_string())?;
+        }
+        std::fs::write(path, self.device_waits_csv()).map_err(|e| e.to_string())
+    }
 }
 
 /// raw/wire compression ratio; 0 when the stream moved no bytes.

@@ -7,6 +7,7 @@
 //!   eval      load artifacts + init params and report test accuracy
 //!   inspect   one round of ACII+CGC diagnostics on real activations
 //!   codecs    offline codec comparison on synthetic smashed data
+//!   trace     merge per-node --trace-out files into a critical-path report
 //!
 //! Examples:
 //!   slacc train --dataset ham --codec slacc --rounds 300 --devices 5
@@ -42,6 +43,7 @@ use slacc::shard::link::ShardLink;
 use slacc::shard::Role;
 use slacc::obs::export::{MetricsExporter, SnapshotWriter};
 use slacc::obs::span;
+use slacc::obs::trace;
 use slacc::transport::device::{mock_worker, run_blocking};
 use slacc::transport::server::{accept_and_serve_with, mock_runtime_for_shard};
 use slacc::transport::tcp::TcpTransport;
@@ -68,6 +70,7 @@ fn main() {
         "eval" => cmd_eval(args),
         "inspect" => cmd_inspect(args),
         "codecs" => cmd_codecs(args),
+        "trace" => cmd_trace(args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -83,7 +86,7 @@ fn main() {
 fn print_help() {
     println!(
         "slacc — SL-ACC split learning framework\n\n\
-         USAGE: slacc [train|serve|device|eval|inspect|codecs] [--flags]\n\n\
+         USAGE: slacc [train|serve|device|eval|inspect|codecs|trace] [--flags]\n\n\
          train flags:\n\
            --dataset ham|mnist     model/dataset config    [ham]\n\
            --codec SPEC            both data directions    [slacc]\n\
@@ -137,6 +140,14 @@ fn print_help() {
                                    (required; connect to the shard serving it)\n\
            --connect ADDR          server address          [127.0.0.1:7878]\n\
            --mock                  mock model (must match the server)\n\
+           --trace-out FILE        record this device's lifecycle spans\n\
+         trace flags:\n\
+           slacc trace FILE... [--chrome OUT.json]\n\
+                                   merge the --trace-out JSONL of every node\n\
+                                   of one session (clock-aligned via the\n\
+                                   handshake anchors) into a per-round\n\
+                                   critical-path breakdown; --chrome also\n\
+                                   writes a Chrome trace-event timeline\n\
          serve telemetry (all off by default; never part of the session\n\
          fingerprint):\n\
            --metrics-bind ADDR     live Prometheus scrape endpoint, served\n\
@@ -270,9 +281,28 @@ fn print_report(report: &TrainReport, csv: Option<String>) -> Result<(), String>
     if let Some(t) = report.time_to_target_s {
         println!("time to target    : {t:.1}s");
     }
+    if !report.device_waits.is_empty() {
+        println!("device wait profile:");
+        for (d, (gid, p)) in report.device_waits.iter().enumerate() {
+            println!(
+                "  device {d} (gid {gid}): waited {:.2}s, straggled {} of {} rounds",
+                p.wait_s, p.straggles, p.participations
+            );
+        }
+    }
     if let Some(path) = csv {
-        report.metrics.write_csv(std::path::Path::new(&path))?;
-        println!("metrics CSV       : {path}");
+        let path = std::path::PathBuf::from(path);
+        report.metrics.write_csv(&path)?;
+        println!("metrics CSV       : {}", path.display());
+        if !report.device_waits.is_empty() {
+            let stem = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("metrics");
+            let dev_path = path.with_file_name(format!("{stem}_devices.csv"));
+            report.write_device_waits_csv(&dev_path)?;
+            println!("device wait CSV   : {}", dev_path.display());
+        }
     }
     Ok(())
 }
@@ -338,6 +368,13 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
 
     if obs.trace_out.is_some() {
         span::set_enabled(true);
+        span::set_trace_role(
+            match role {
+                Role::Coordinator => "coordinator",
+                Role::Shard => "server",
+            },
+            shard_id as u64,
+        );
     }
     let mock = use_mock(&cfg, mock)?;
     let result = match role {
@@ -519,23 +556,34 @@ fn cmd_device(mut args: Args) -> Result<(), String> {
     let id = args.usize_or("id", usize::MAX);
     let connect = args.str_or("connect", "127.0.0.1:7878");
     let mock = args.bool_or("mock", false);
+    let trace_out = args.str_opt("trace-out");
     args.finish()?;
     cfg.validate()?;
     if id == usize::MAX {
         return Err("--id is required (this device's slot in 0..devices)".into());
     }
+    if trace_out.is_some() {
+        span::set_enabled(true);
+        span::set_trace_role("device", 0);
+    }
 
     let mut conn =
         TcpTransport::connect_retry(&connect, 40, Duration::from_millis(250))?;
-    if use_mock(&cfg, mock)? {
+    let session = if use_mock(&cfg, mock)? {
         let (train, _) =
             Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
         let mut worker = mock_worker(&cfg, Arc::new(train), id)?;
-        run_blocking(&mut worker, &mut conn)?;
+        run_blocking(&mut worker, &mut conn)
     } else {
         let mut worker = engine_worker(&cfg, id)?;
-        run_blocking(&mut worker, &mut conn)?;
+        run_blocking(&mut worker, &mut conn)
+    };
+    // like serve: drain spans even when the session errored out
+    if let Some(path) = &trace_out {
+        let n = span::write_jsonl(path)?;
+        println!("device {id}: {n} trace event(s) -> {path}");
     }
+    session?;
     let stats = conn.stats();
     println!(
         "device {id}: session complete ({} frames / {} bytes sent, {} frames / {} bytes received)",
@@ -566,6 +614,38 @@ fn cmd_inspect(mut args: Args) -> Result<(), String> {
     println!("ran 1 inspection round; loss {:.4}", report.metrics.records[0].loss);
     println!("see `slacc train --log-level debug` for per-round detail, or");
     println!("`cargo run --release --example inspect_entropy` for full dumps");
+    Ok(())
+}
+
+/// `slacc trace FILE...`: the offline critical-path analyzer over the
+/// per-node `--trace-out` JSONL of one session.
+fn cmd_trace(mut args: Args) -> Result<(), String> {
+    let files = args.positionals();
+    let chrome = args.str_opt("chrome");
+    args.finish()?;
+    if files.is_empty() {
+        return Err(
+            "usage: slacc trace FILE... [--chrome OUT.json] — pass every \
+             node's --trace-out JSONL from one session"
+                .into(),
+        );
+    }
+    let mut nodes = Vec::with_capacity(files.len());
+    for f in &files {
+        nodes.push(trace::parse_file(f)?);
+    }
+    let analysis = trace::analyze(nodes)?;
+    print!("{}", trace::summary(&analysis));
+    println!();
+    print!("{}", trace::render_table(&analysis));
+    if let Some(out) = chrome {
+        std::fs::write(&out, trace::chrome_json(&analysis).dump())
+            .map_err(|e| format!("{out}: {e}"))?;
+        println!(
+            "\nchrome trace      : {out} (load in chrome://tracing or \
+             ui.perfetto.dev)"
+        );
+    }
     Ok(())
 }
 

@@ -323,6 +323,54 @@ pub static FEDAVG_NS: Histogram = Histogram::new(
     "nanoseconds per cross-shard FedAvg merge",
 );
 
+// ------------------------------------------------------------------ tracing
+
+/// Span events overwritten in a full ring before a drain could save them —
+/// nonzero means `--trace-out` files have holes.
+pub static TRACE_DROPPED: Counter = Counter::new(
+    "slacc_trace_dropped_total",
+    "",
+    "trace span events overwritten before drain (ring overflow)",
+);
+
+// -------------------------------------------------- channel-entropy drift
+// Windowed mean/variance of the per-encode ACII channel-entropy means,
+// recorded from the SL-ACC entropy paths (`codecs/slacc.rs`,
+// `codecs/selection.rs`) via `codecs::stream::record_entropy`. Milli-bit
+// units keep the integer gauge precise enough for the renegotiation loop
+// (ROADMAP item 4) to see drift.
+
+pub static ENTROPY_MEAN_UP: Gauge = Gauge::new(
+    "slacc_entropy_mean_milli",
+    "stream=\"uplink\"",
+    "windowed mean of per-encode channel-entropy means (milli-bits)",
+);
+pub static ENTROPY_MEAN_DOWN: Gauge = Gauge::new(
+    "slacc_entropy_mean_milli",
+    "stream=\"downlink\"",
+    "windowed mean of per-encode channel-entropy means (milli-bits)",
+);
+pub static ENTROPY_MEAN_SYNC: Gauge = Gauge::new(
+    "slacc_entropy_mean_milli",
+    "stream=\"sync\"",
+    "windowed mean of per-encode channel-entropy means (milli-bits)",
+);
+pub static ENTROPY_VAR_UP: Gauge = Gauge::new(
+    "slacc_entropy_var_milli",
+    "stream=\"uplink\"",
+    "windowed variance of per-encode channel-entropy means (milli-bits^2)",
+);
+pub static ENTROPY_VAR_DOWN: Gauge = Gauge::new(
+    "slacc_entropy_var_milli",
+    "stream=\"downlink\"",
+    "windowed variance of per-encode channel-entropy means (milli-bits^2)",
+);
+pub static ENTROPY_VAR_SYNC: Gauge = Gauge::new(
+    "slacc_entropy_var_milli",
+    "stream=\"sync\"",
+    "windowed variance of per-encode channel-entropy means (milli-bits^2)",
+);
+
 // ----------------------------------------------------------------- exporter
 
 pub static SCRAPES: Counter = Counter::new(
@@ -353,12 +401,22 @@ pub fn counters() -> &'static [&'static Counter] {
         &CODEC_DEC_BYTES_DOWN,
         &CODEC_DEC_BYTES_SYNC,
         &SHARD_SYNCS,
+        &TRACE_DROPPED,
         &SCRAPES,
     ]
 }
 
 pub fn gauges() -> &'static [&'static Gauge] {
-    &[&QUEUE_DEPTH, &OPEN_CONNS]
+    &[
+        &QUEUE_DEPTH,
+        &OPEN_CONNS,
+        &ENTROPY_MEAN_UP,
+        &ENTROPY_MEAN_DOWN,
+        &ENTROPY_MEAN_SYNC,
+        &ENTROPY_VAR_UP,
+        &ENTROPY_VAR_DOWN,
+        &ENTROPY_VAR_SYNC,
+    ]
 }
 
 pub fn histograms() -> &'static [&'static Histogram] {

@@ -11,6 +11,11 @@
 //! * [`span`] — RAII wall-clock spans (`span!("server_step_batch", width =
 //!   n)`) recorded into per-thread ring buffers, ~1ns when disabled via a
 //!   relaxed atomic gate, drained to JSONL by `--trace-out FILE`.
+//! * [`trace`] — the offline half of `--trace-out`: `slacc trace` merges
+//!   multi-node span JSONL onto one clock (via the Hello-exchange anchors
+//!   in each file's header row) and decomposes every round into a
+//!   critical-path stage breakdown, with an optional Chrome trace-event
+//!   export.
 //! * [`export`] — a non-blocking Prometheus-style scrape endpoint
 //!   (`--metrics-bind ADDR`) serviced from the `PollFleet` event loop, and
 //!   a per-round JSONL snapshot writer (`--metrics-every N`). Shard
@@ -26,3 +31,4 @@
 pub mod export;
 pub mod metrics;
 pub mod span;
+pub mod trace;

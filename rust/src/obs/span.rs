@@ -1,21 +1,29 @@
 //! Hierarchical wall-clock tracing spans.
 //!
 //! A span is an RAII guard ([`SpanGuard`]) that records `(name, key=val,
-//! start_ns, dur_ns, depth)` into its thread's ring buffer when dropped.
-//! Recording is gated on one process-global relaxed atomic (the same
-//! pattern as [`crate::util::logging`]'s level gate), so a disabled span
-//! costs ~1ns — one load, no clock read, no ring touch. Enabled spans take
-//! their own thread's uncontended mutex, so there is no cross-thread
+//! start_ns, dur_ns, depth)` plus a small fixed attribute set — round id,
+//! global device id, stream kind — into its thread's ring buffer when
+//! dropped. Recording is gated on one process-global relaxed atomic (the
+//! same pattern as [`crate::util::logging`]'s level gate), so a disabled
+//! span costs ~1ns — one load, no clock read, no ring touch. Enabled spans
+//! take their own thread's uncontended mutex, so there is no cross-thread
 //! contention on the hot path either.
 //!
 //! Rings are fixed-capacity ([`RING_CAP`] events, oldest overwritten) and
 //! registered globally on first use, so any thread — in practice the server
 //! main thread at session end — can [`drain`] every thread's events and
 //! write them as JSONL (`--trace-out FILE`) for flame/straggler analysis.
+//! Overwrites are surfaced on the metrics registry
+//! ([`crate::obs::metrics::TRACE_DROPPED`]) and warned about at drain time.
 //!
 //! Timestamps are nanoseconds since the shared process epoch
 //! ([`crate::util::logging::elapsed_ns`]), so span times line up with log
-//! line stamps.
+//! line stamps — but only *within* one process. To make traces from
+//! different nodes joinable offline, each JSONL file opens with a header
+//! row carrying the node role, shard id, session fingerprint, and the
+//! per-device clock anchors stamped during the Hello exchange
+//! ([`record_anchor`]); `slacc trace` ([`crate::obs::trace`]) uses the
+//! anchor pairs to shift every device file onto its server's clock.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -26,6 +34,12 @@ use crate::util::logging::elapsed_ns;
 
 /// Events kept per thread before the oldest are overwritten.
 pub const RING_CAP: usize = 4096;
+
+/// Sentinel for an unset round / global-device-id attribute.
+pub const NO_ID: u32 = u32::MAX;
+/// Sentinel for an unset stream-kind attribute (set values are
+/// `StreamKind as u8`: 0 uplink, 1 downlink, 2 sync).
+pub const NO_KIND: u8 = u8::MAX;
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
 
@@ -51,6 +65,63 @@ pub struct SpanEvent {
     pub dur_ns: u64,
     /// nesting depth at record time (1 = top-level span on its thread)
     pub depth: u32,
+    /// round id, [`NO_ID`] when the span is not tied to a round
+    pub round: u32,
+    /// global device id, [`NO_ID`] when not device-scoped
+    pub gid: u32,
+    /// stream kind (`StreamKind as u8`), [`NO_KIND`] when not stream-scoped
+    pub kind: u8,
+}
+
+impl SpanEvent {
+    /// A manually timed span (for waits computed from timestamps rather
+    /// than RAII scopes — queue wait, batch-seal wait, the round itself).
+    /// Chain `.round(..)/.gid(..)/.kind(..)` then hand to [`record`].
+    pub fn manual(name: &'static str, start_ns: u64, dur_ns: u64) -> SpanEvent {
+        SpanEvent {
+            name,
+            key: "",
+            val: 0,
+            start_ns,
+            dur_ns,
+            depth: 1,
+            round: NO_ID,
+            gid: NO_ID,
+            kind: NO_KIND,
+        }
+    }
+
+    pub fn round(mut self, r: u32) -> SpanEvent {
+        self.round = r;
+        self
+    }
+
+    pub fn gid(mut self, g: u32) -> SpanEvent {
+        self.gid = g;
+        self
+    }
+
+    pub fn kind(mut self, k: u8) -> SpanEvent {
+        self.kind = k;
+        self
+    }
+
+    pub fn attr(mut self, key: &'static str, val: u64) -> SpanEvent {
+        self.key = key;
+        self.val = val;
+        self
+    }
+}
+
+/// Record a manually built event into this thread's ring (no-op while the
+/// gate is off). Zero allocation: the event is `Copy` and the ring is
+/// preallocated.
+#[inline]
+pub fn record(ev: SpanEvent) {
+    if !enabled() {
+        return;
+    }
+    lock_clean(my_ring()).push(ev);
 }
 
 struct Ring {
@@ -69,6 +140,7 @@ impl Ring {
         } else {
             self.events[self.head] = ev;
             self.head = (self.head + 1) % RING_CAP;
+            crate::obs::metrics::TRACE_DROPPED.inc();
         }
         self.total += 1;
     }
@@ -124,17 +196,45 @@ pub struct SpanGuard {
     key: &'static str,
     val: u64,
     start_ns: u64,
+    round: u32,
+    gid: u32,
+    kind: u8,
     active: bool,
 }
 
 impl SpanGuard {
     #[inline]
-    pub fn begin(name: &'static str, key: &'static str, val: u64) -> SpanGuard {
+    pub fn begin(
+        name: &'static str,
+        key: &'static str,
+        val: u64,
+        round: u32,
+        gid: u32,
+        kind: u8,
+    ) -> SpanGuard {
         if !enabled() {
-            return SpanGuard { name, key, val, start_ns: 0, active: false };
+            return SpanGuard {
+                name,
+                key,
+                val,
+                start_ns: 0,
+                round,
+                gid,
+                kind,
+                active: false,
+            };
         }
         DEPTH.with(|d| d.set(d.get() + 1));
-        SpanGuard { name, key, val, start_ns: elapsed_ns(), active: true }
+        SpanGuard {
+            name,
+            key,
+            val,
+            start_ns: elapsed_ns(),
+            round,
+            gid,
+            kind,
+            active: true,
+        }
     }
 }
 
@@ -156,6 +256,9 @@ impl Drop for SpanGuard {
             start_ns: self.start_ns,
             dur_ns: end.saturating_sub(self.start_ns),
             depth,
+            round: self.round,
+            gid: self.gid,
+            kind: self.kind,
         };
         lock_clean(my_ring()).push(ev);
     }
@@ -163,46 +266,229 @@ impl Drop for SpanGuard {
 
 /// Open a span: `let _sp = span!("server_step_batch", width = n);` — the
 /// guard must be bound to a name so it lives to the end of the scope.
+///
+/// `round = ..`, `gid = ..`, and `kind = ..` are the *fixed* attributes
+/// (they fill [`SpanEvent::round`]/[`SpanEvent::gid`]/[`SpanEvent::kind`],
+/// in that literal spelling and order); one extra free-form `key = val`
+/// pair may follow.
 #[macro_export]
 macro_rules! span {
     ($name:expr) => {
-        $crate::obs::span::SpanGuard::begin($name, "", 0)
+        $crate::obs::span::SpanGuard::begin(
+            $name,
+            "",
+            0,
+            $crate::obs::span::NO_ID,
+            $crate::obs::span::NO_ID,
+            $crate::obs::span::NO_KIND,
+        )
+    };
+    ($name:expr, round = $r:expr, gid = $g:expr, kind = $k:expr, $key:ident = $val:expr) => {
+        $crate::obs::span::SpanGuard::begin(
+            $name,
+            stringify!($key),
+            ($val) as u64,
+            ($r) as u32,
+            ($g) as u32,
+            ($k) as u8,
+        )
+    };
+    ($name:expr, round = $r:expr, gid = $g:expr, kind = $k:expr) => {
+        $crate::obs::span::SpanGuard::begin(
+            $name,
+            "",
+            0,
+            ($r) as u32,
+            ($g) as u32,
+            ($k) as u8,
+        )
+    };
+    ($name:expr, round = $r:expr, gid = $g:expr, $key:ident = $val:expr) => {
+        $crate::obs::span::SpanGuard::begin(
+            $name,
+            stringify!($key),
+            ($val) as u64,
+            ($r) as u32,
+            ($g) as u32,
+            $crate::obs::span::NO_KIND,
+        )
+    };
+    ($name:expr, round = $r:expr, gid = $g:expr) => {
+        $crate::obs::span::SpanGuard::begin(
+            $name,
+            "",
+            0,
+            ($r) as u32,
+            ($g) as u32,
+            $crate::obs::span::NO_KIND,
+        )
+    };
+    ($name:expr, round = $r:expr, $key:ident = $val:expr) => {
+        $crate::obs::span::SpanGuard::begin(
+            $name,
+            stringify!($key),
+            ($val) as u64,
+            ($r) as u32,
+            $crate::obs::span::NO_ID,
+            $crate::obs::span::NO_KIND,
+        )
+    };
+    ($name:expr, round = $r:expr) => {
+        $crate::obs::span::SpanGuard::begin(
+            $name,
+            "",
+            0,
+            ($r) as u32,
+            $crate::obs::span::NO_ID,
+            $crate::obs::span::NO_KIND,
+        )
+    };
+    ($name:expr, gid = $g:expr, $key:ident = $val:expr) => {
+        $crate::obs::span::SpanGuard::begin(
+            $name,
+            stringify!($key),
+            ($val) as u64,
+            $crate::obs::span::NO_ID,
+            ($g) as u32,
+            $crate::obs::span::NO_KIND,
+        )
+    };
+    ($name:expr, gid = $g:expr) => {
+        $crate::obs::span::SpanGuard::begin(
+            $name,
+            "",
+            0,
+            $crate::obs::span::NO_ID,
+            ($g) as u32,
+            $crate::obs::span::NO_KIND,
+        )
     };
     ($name:expr, $key:ident = $val:expr) => {
-        $crate::obs::span::SpanGuard::begin($name, stringify!($key), ($val) as u64)
+        $crate::obs::span::SpanGuard::begin(
+            $name,
+            stringify!($key),
+            ($val) as u64,
+            $crate::obs::span::NO_ID,
+            $crate::obs::span::NO_ID,
+            $crate::obs::span::NO_KIND,
+        )
     };
+}
+
+// ---- cross-node trace metadata (the JSONL header row) ---------------------
+
+struct TraceMeta {
+    /// node role: "server", "device", "coordinator", "" until declared
+    role: &'static str,
+    shard: u64,
+    session_fp: Option<u64>,
+    /// (gid, this process's `elapsed_ns` at the Hello exchange) — the
+    /// server stamps one per device at HelloAck send; a device stamps its
+    /// own gid at HelloAck receipt. The pair of stamps for one gid differs
+    /// by the two clocks' offset (± one-way latency), which is exactly the
+    /// shift `slacc trace` applies to join the files.
+    anchors: Vec<(u32, u64)>,
+}
+
+static META: Mutex<TraceMeta> = Mutex::new(TraceMeta {
+    role: "",
+    shard: 0,
+    session_fp: None,
+    anchors: Vec::new(),
+});
+
+/// Declare this process's role/shard for the trace header (binaries and
+/// examples call this once at launch; latest call wins).
+pub fn set_trace_role(role: &'static str, shard: u64) {
+    let mut m = lock_clean(&META);
+    m.role = role;
+    m.shard = shard;
+}
+
+/// Declare the negotiated session fingerprint for the trace header
+/// (stamped by the runtimes once the Hello exchange has validated it).
+pub fn set_trace_session(fp: u64) {
+    lock_clean(&META).session_fp = Some(fp);
+}
+
+/// Stamp a clock anchor for `gid`: this process's [`elapsed_ns`] at the
+/// moment the Hello exchange for that device completed on this side.
+/// Re-anchoring a gid replaces the old stamp (latest session wins).
+pub fn record_anchor(gid: u32, anchor_ns: u64) {
+    let mut m = lock_clean(&META);
+    if let Some(slot) = m.anchors.iter_mut().find(|(g, _)| *g == gid) {
+        slot.1 = anchor_ns;
+    } else {
+        m.anchors.push((gid, anchor_ns));
+    }
+}
+
+/// The header row `write_jsonl` opens each trace file with.
+fn header_row() -> Json {
+    let m = lock_clean(&META);
+    Json::obj(vec![
+        ("header", Json::Num(1.0)),
+        ("role", Json::Str(m.role.to_string())),
+        ("shard", Json::Num(m.shard as f64)),
+        (
+            "session_fp",
+            Json::Str(m.session_fp.map_or(String::new(), |fp| format!("{fp:016x}"))),
+        ),
+        (
+            "anchors",
+            Json::Arr(
+                m.anchors
+                    .iter()
+                    .map(|&(g, ns)| {
+                        Json::Arr(vec![Json::Num(g as f64), Json::Num(ns as f64)])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 /// Drain every thread's ring: `(thread_name, recorded_since_last_drain,
 /// events)` per thread with anything new, events in chronological order,
-/// rings cleared.
+/// rings cleared. Warns once when any ring overwrote events since the last
+/// drain — the trace has holes and `TRACE_DROPPED` says how many.
 pub fn drain() -> Vec<(String, u64, Vec<SpanEvent>)> {
     let regs = lock_clean(rings());
     let mut out = Vec::with_capacity(regs.len());
+    let mut dropped = 0u64;
     for ring in regs.iter() {
         let mut g = lock_clean(ring);
         let total = g.total;
         g.total = 0;
         let events = g.take();
+        dropped += total.saturating_sub(events.len() as u64);
         if total > 0 {
             out.push((g.thread.clone(), total, events));
         }
     }
+    if dropped > 0 {
+        crate::log_warn!(
+            "trace rings overwrote {dropped} span(s) before this drain — the \
+             trace has holes (see slacc_trace_dropped_total)"
+        );
+    }
     out
 }
 
-/// Drain all rings to `path` as JSONL (one span per line). Returns the
-/// number of events written.
+/// Drain all rings to `path` as JSONL: one header row (node role, shard,
+/// session fingerprint, Hello clock anchors), then one span per line.
+/// Returns the number of span events written.
 pub fn write_jsonl(path: &str) -> Result<usize, String> {
     use std::io::Write;
     let mut file = std::fs::File::create(path)
         .map_err(|e| format!("--trace-out {path}: {e}"))?;
     let mut written = 0usize;
-    let mut lines = String::new();
+    let mut lines = header_row().dump();
+    lines.push('\n');
     for (thread, total, events) in drain() {
         let dropped = total.saturating_sub(events.len() as u64);
         for ev in &events {
-            let row = Json::obj(vec![
+            let mut fields = vec![
                 ("thread", Json::Str(thread.clone())),
                 ("name", Json::Str(ev.name.to_string())),
                 ("key", Json::Str(ev.key.to_string())),
@@ -210,8 +496,17 @@ pub fn write_jsonl(path: &str) -> Result<usize, String> {
                 ("start_ns", Json::Num(ev.start_ns as f64)),
                 ("dur_ns", Json::Num(ev.dur_ns as f64)),
                 ("depth", Json::Num(ev.depth as f64)),
-            ]);
-            lines.push_str(&row.dump());
+            ];
+            if ev.round != NO_ID {
+                fields.push(("round", Json::Num(ev.round as f64)));
+            }
+            if ev.gid != NO_ID {
+                fields.push(("gid", Json::Num(ev.gid as f64)));
+            }
+            if ev.kind != NO_KIND {
+                fields.push(("kind", Json::Num(ev.kind as f64)));
+            }
+            lines.push_str(&Json::obj(fields).dump());
             lines.push('\n');
             written += 1;
         }
@@ -254,6 +549,7 @@ mod tests {
         on_thread("span-off", || {
             let _a = crate::span!("quiet");
             let _b = crate::span!("quiet", device = 3);
+            record(SpanEvent::manual("quiet", 1, 2));
         });
         let got: Vec<_> = drain()
             .into_iter()
@@ -284,6 +580,9 @@ mod tests {
         assert_eq!(events[0].key, "device");
         assert_eq!(events[0].val, 7);
         assert_eq!(events[0].depth, 2);
+        assert_eq!(events[0].round, NO_ID);
+        assert_eq!(events[0].gid, NO_ID);
+        assert_eq!(events[0].kind, NO_KIND);
         assert_eq!(events[1].name, "outer");
         assert_eq!(events[1].depth, 1);
         assert!(events[1].start_ns <= events[0].start_ns);
@@ -291,9 +590,50 @@ mod tests {
     }
 
     #[test]
+    fn fixed_attributes_ride_every_macro_arm() {
+        let _g = lock_clean(&GATE);
+        set_enabled(true);
+        on_thread("span-attrs", || {
+            let _a = crate::span!("a", round = 3, gid = 7);
+            let _b = crate::span!("b", round = 4, gid = 8, kind = 1u8);
+            let _c = crate::span!("c", round = 5, gid = 9, bytes = 100);
+            let _d = crate::span!("d", round = 6);
+            let _e = crate::span!("e", gid = 10);
+            record(
+                SpanEvent::manual("m", 50, 25)
+                    .round(11)
+                    .gid(12)
+                    .kind(0)
+                    .attr("n", 2),
+            );
+        });
+        set_enabled(false);
+        let mut threads = drain();
+        threads.retain(|(t, _, _)| t == "span-attrs");
+        let (_, _, events) = &threads[0];
+        let by_name = |n: &str| *events.iter().find(|e| e.name == n).unwrap();
+        let a = by_name("a");
+        assert_eq!((a.round, a.gid, a.kind), (3, 7, NO_KIND));
+        let b = by_name("b");
+        assert_eq!((b.round, b.gid, b.kind), (4, 8, 1));
+        let c = by_name("c");
+        assert_eq!((c.round, c.gid, c.key, c.val), (5, 9, "bytes", 100));
+        let d = by_name("d");
+        assert_eq!((d.round, d.gid), (6, NO_ID));
+        let e = by_name("e");
+        assert_eq!((e.round, e.gid), (NO_ID, 10));
+        let m = by_name("m");
+        assert_eq!(
+            (m.round, m.gid, m.kind, m.start_ns, m.dur_ns, m.key, m.val),
+            (11, 12, 0, 50, 25, "n", 2)
+        );
+    }
+
+    #[test]
     fn ring_overwrites_oldest_but_counts_all() {
         let _g = lock_clean(&GATE);
         set_enabled(true);
+        let dropped0 = crate::obs::metrics::TRACE_DROPPED.get();
         on_thread("span-ring", || {
             for i in 0..(RING_CAP + 10) {
                 let _s = crate::span!("tick", i = i);
@@ -308,14 +648,21 @@ mod tests {
         // oldest 10 were overwritten: first surviving event is i == 10
         assert_eq!(events[0].val, 10);
         assert_eq!(events[RING_CAP - 1].val, (RING_CAP + 9) as u64);
+        // ...and the loss is visible on the metrics registry
+        assert!(crate::obs::metrics::TRACE_DROPPED.get() - dropped0 >= 10);
     }
 
     #[test]
-    fn jsonl_lines_parse() {
+    fn jsonl_has_header_and_attribute_fields() {
         let _g = lock_clean(&GATE);
         set_enabled(true);
+        set_trace_role("server", 2);
+        set_trace_session(0xabcd_1234_5678_9abc);
+        record_anchor(5, 1_000);
+        record_anchor(5, 2_000); // re-anchor replaces
+        record_anchor(6, 3_000);
         on_thread("span-jsonl", || {
-            let _s = crate::span!("write_me", round = 4);
+            let _s = crate::span!("write_me", round = 4, gid = 9, bytes = 17);
         });
         set_enabled(false);
         let path = std::env::temp_dir().join("slacc_span_test.jsonl");
@@ -323,13 +670,31 @@ mod tests {
         let n = write_jsonl(&path).unwrap();
         assert!(n >= 1);
         let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+
+        // line 0 is the header row
+        let head = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(head.at(&["header"]), &Json::Num(1.0));
+        assert_eq!(head.at(&["role"]), &Json::Str("server".to_string()));
+        assert_eq!(head.at(&["shard"]), &Json::Num(2.0));
+        assert_eq!(
+            head.at(&["session_fp"]),
+            &Json::Str("abcd123456789abc".to_string())
+        );
+        let anchors = head.at(&["anchors"]).as_arr().unwrap();
+        assert_eq!(anchors.len(), 2);
+        assert_eq!(anchors[0].as_arr().unwrap()[1], Json::Num(2000.0));
+
         let mine: Vec<&str> =
             text.lines().filter(|l| l.contains("span-jsonl")).collect();
         assert_eq!(mine.len(), 1);
         let row = Json::parse(mine[0]).unwrap();
         assert_eq!(row.at(&["name"]), &Json::Str("write_me".to_string()));
-        assert_eq!(row.at(&["key"]), &Json::Str("round".to_string()));
-        assert_eq!(row.at(&["val"]), &Json::Num(4.0));
-        let _ = std::fs::remove_file(&path);
+        assert_eq!(row.at(&["key"]), &Json::Str("bytes".to_string()));
+        assert_eq!(row.at(&["val"]), &Json::Num(17.0));
+        assert_eq!(row.at(&["round"]), &Json::Num(4.0));
+        assert_eq!(row.at(&["gid"]), &Json::Num(9.0));
+        // kind was unset, so the field is omitted
+        assert!(row.get("kind").is_none());
     }
 }

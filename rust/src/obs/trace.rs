@@ -1,0 +1,778 @@
+//! `slacc trace`: offline cross-node trace analysis.
+//!
+//! Each node of a distributed session records spans into its own
+//! `--trace-out FILE` with its own monotonic clock. This module merges
+//! those files into one causally-ordered per-round timeline:
+//!
+//! 1. **Clock alignment** — every file opens with a header row carrying
+//!    the per-device anchors stamped during the Hello exchange
+//!    ([`crate::obs::span::record_anchor`]): the server stamps its clock at
+//!    HelloAck send, the device stamps its own at HelloAck receipt. The two
+//!    stamps for one gid differ by the clocks' offset (± one-way latency),
+//!    so shifting a device file by `server_anchor - device_anchor` puts it
+//!    on its server's clock — good to well under a round's duration, which
+//!    is all stage attribution needs.
+//! 2. **Round joining** — the server's `round` spans define per-round
+//!    windows. Spans carrying a `round` attribute join directly; gid-only
+//!    spans (`queue_wait`, `write_park` — recorded where the round is not
+//!    in scope) join by time containment, falling back to the nearest
+//!    window inside the session's round phase. Handshake/shutdown spans
+//!    outside the phase are ignored.
+//! 3. **Critical path** — per round, the device whose stage chain ends
+//!    last is the critical (straggling) device; its per-stage durations,
+//!    plus derived wire gaps (`uplink_wire`, `downlink_wire`) and an
+//!    explicit `other` remainder, decompose the round wall clock. The
+//!    stage with the largest share bounded the round.
+//!
+//! The analyzer is pure (parse → [`analyze`] → [`render_table`] /
+//! [`summary`] / [`chrome_json`]); `slacc trace` in `main.rs` is a thin
+//! I/O wrapper around it.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// One parsed `--trace-out` JSONL file.
+#[derive(Debug, Clone)]
+pub struct NodeTrace {
+    pub path: String,
+    /// node role from the header: "server", "device", "coordinator", ...
+    pub role: String,
+    pub shard: u64,
+    /// session fingerprint (hex string; empty if the node never validated
+    /// a Hello exchange)
+    pub session_fp: String,
+    /// (gid, this node's `elapsed_ns` at the Hello exchange for that gid)
+    pub anchors: Vec<(u32, u64)>,
+    pub events: Vec<RawEvent>,
+    /// span events this node's rings overwrote before the drain
+    pub dropped: u64,
+}
+
+/// One span row, clock-local to its node.
+#[derive(Debug, Clone)]
+pub struct RawEvent {
+    pub name: String,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub round: Option<u32>,
+    pub gid: Option<u32>,
+}
+
+/// One span event shifted onto its reference server's clock.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// index into the analyzed node list (the Chrome-export pid)
+    pub node: usize,
+    pub name: String,
+    pub start_ns: i64,
+    pub dur_ns: i64,
+    pub round: Option<u32>,
+    pub gid: Option<u32>,
+}
+
+/// The critical-path decomposition of one round.
+#[derive(Debug, Clone)]
+pub struct RoundBreakdown {
+    pub shard: u64,
+    pub round: u32,
+    pub wall_ns: i64,
+    /// gids whose uplinks joined this round
+    pub participants: usize,
+    /// the device whose stage chain ended last (None if no device-scoped
+    /// span joined the round)
+    pub critical_gid: Option<u32>,
+    /// the largest stage on the critical chain
+    pub bounding_stage: &'static str,
+    pub bounding_ns: i64,
+    /// the critical device's full stage chain, `other` last — sums to
+    /// `wall_ns` up to clamping of overlapping stages
+    pub stages: Vec<(&'static str, i64)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageStat {
+    pub name: &'static str,
+    pub count: usize,
+    pub p50_ns: i64,
+    pub p95_ns: i64,
+    pub max_ns: i64,
+}
+
+/// The merged, aligned, per-round view over every input trace.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    pub session_fp: String,
+    /// one human label per input node, index-aligned with [`Event::node`]
+    pub nodes: Vec<String>,
+    pub rounds: Vec<RoundBreakdown>,
+    pub stage_stats: Vec<StageStat>,
+    /// per-gid rounds-on-the-critical-path counts, most-blamed first
+    pub straggler_counts: Vec<(u32, usize)>,
+    /// total ring-overwritten spans across all nodes (trace holes)
+    pub dropped: u64,
+    /// round-lifecycle spans that could not be attached to any round
+    pub unjoined: usize,
+    /// every aligned span, for the Chrome export
+    pub events: Vec<Event>,
+}
+
+/// The per-device lifecycle stages in causal order. `uplink_wire` and
+/// `downlink_wire` are derived gaps (no process observes the network
+/// itself); `batch_seal_wait` / `server_step_batch` are round-scoped and
+/// shared by the batch the device rode in.
+const DEVICE_STAGES: &[&str] = &[
+    "client_fwd",
+    "uplink_encode",
+    "uplink_wire",
+    "queue_wait",
+    "uplink_decode",
+    "batch_seal_wait",
+    "server_step_batch",
+    "downlink_encode",
+    "write_park",
+    "downlink_wire",
+    "downlink_decode",
+    "client_bwd",
+];
+
+/// Round-scoped stages that follow the per-device chain.
+const ROUND_STAGES: &[&str] = &["fedavg", "eval", "shard_barrier"];
+
+/// Parse one trace file's text (header row, span rows, dropped rows).
+pub fn parse_trace(path: &str, text: &str) -> Result<NodeTrace, String> {
+    let mut lines = text.lines().enumerate();
+    let (_, first) = lines
+        .next()
+        .ok_or_else(|| format!("{path}: empty trace file"))?;
+    let head = Json::parse(first).map_err(|e| format!("{path}:1: {e}"))?;
+    if head.get("header").is_none() {
+        return Err(format!(
+            "{path}: first row is not a trace header — re-record with this \
+             version's --trace-out"
+        ));
+    }
+    let role = head
+        .get("role")
+        .and_then(|j| j.as_str())
+        .unwrap_or("")
+        .to_string();
+    let shard = head.get("shard").and_then(|j| j.as_f64()).unwrap_or(0.0) as u64;
+    let session_fp = head
+        .get("session_fp")
+        .and_then(|j| j.as_str())
+        .unwrap_or("")
+        .to_string();
+    let mut anchors = Vec::new();
+    if let Some(arr) = head.get("anchors").and_then(|j| j.as_arr()) {
+        for pair in arr {
+            let p = pair
+                .as_arr()
+                .ok_or_else(|| format!("{path}: malformed anchor entry"))?;
+            if p.len() != 2 {
+                return Err(format!("{path}: anchor entry is not a [gid, ns] pair"));
+            }
+            anchors.push((
+                p[0].as_f64().unwrap_or(0.0) as u32,
+                p[1].as_f64().unwrap_or(0.0) as u64,
+            ));
+        }
+    }
+    let mut events = Vec::new();
+    let mut dropped = 0u64;
+    for (i, line) in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row = Json::parse(line).map_err(|e| format!("{path}:{}: {e}", i + 1))?;
+        if let Some(d) = row.get("dropped").and_then(|j| j.as_f64()) {
+            dropped += d as u64;
+            continue;
+        }
+        let Some(name) = row.get("name").and_then(|j| j.as_str()) else {
+            return Err(format!(
+                "{path}:{}: row has neither a span name nor a dropped count",
+                i + 1
+            ));
+        };
+        events.push(RawEvent {
+            name: name.to_string(),
+            start_ns: row.get("start_ns").and_then(|j| j.as_f64()).unwrap_or(0.0)
+                as u64,
+            dur_ns: row.get("dur_ns").and_then(|j| j.as_f64()).unwrap_or(0.0) as u64,
+            round: row.get("round").and_then(|j| j.as_f64()).map(|x| x as u32),
+            gid: row.get("gid").and_then(|j| j.as_f64()).map(|x| x as u32),
+        });
+    }
+    Ok(NodeTrace { path: path.to_string(), role, shard, session_fp, anchors, events, dropped })
+}
+
+/// [`parse_trace`] over a file on disk.
+pub fn parse_file(path: &str) -> Result<NodeTrace, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    parse_trace(path, &text)
+}
+
+/// `sorted` percentile by nearest-rank (deterministic, no interpolation).
+fn pct(sorted: &[i64], q: f64) -> i64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Merge, align, and decompose the given node traces. Errors on traces
+/// from different sessions or a device file no server file anchors.
+pub fn analyze(nodes: Vec<NodeTrace>) -> Result<Analysis, String> {
+    if nodes.is_empty() {
+        return Err("no trace files given".into());
+    }
+    // all non-empty session fingerprints must agree
+    let mut session_fp = String::new();
+    for n in &nodes {
+        if n.session_fp.is_empty() {
+            continue;
+        }
+        if session_fp.is_empty() {
+            session_fp = n.session_fp.clone();
+        } else if session_fp != n.session_fp {
+            return Err(format!(
+                "{}: session fingerprint {} does not match {} — these traces \
+                 come from different sessions",
+                n.path, n.session_fp, session_fp
+            ));
+        }
+    }
+
+    // per-node reference (the node whose clock its events are shifted
+    // onto) and offset. Non-device nodes are their own reference; a device
+    // joins the server whose anchors cover one of its gids.
+    let mut refs = vec![0usize; nodes.len()];
+    let mut offsets = vec![0i64; nodes.len()];
+    for (i, n) in nodes.iter().enumerate() {
+        if n.role != "device" {
+            refs[i] = i;
+            continue;
+        }
+        let mut found = None;
+        'anchors: for &(gid, dev_ns) in &n.anchors {
+            for (j, m) in nodes.iter().enumerate() {
+                if m.role == "device" {
+                    continue;
+                }
+                if let Some(&(_, srv_ns)) = m.anchors.iter().find(|(g, _)| *g == gid)
+                {
+                    found = Some((j, srv_ns as i64 - dev_ns as i64));
+                    break 'anchors;
+                }
+            }
+        }
+        let Some((j, off)) = found else {
+            let gids: Vec<u32> = n.anchors.iter().map(|a| a.0).collect();
+            return Err(format!(
+                "{}: no server trace anchors this device's gid(s) {gids:?} — \
+                 pass the serving node's --trace-out file too",
+                n.path
+            ));
+        };
+        refs[i] = j;
+        offsets[i] = off;
+    }
+
+    // align every event onto its reference clock
+    let mut events: Vec<Event> = Vec::new();
+    for (i, n) in nodes.iter().enumerate() {
+        for e in &n.events {
+            events.push(Event {
+                node: i,
+                name: e.name.clone(),
+                start_ns: e.start_ns as i64 + offsets[i],
+                dur_ns: e.dur_ns as i64,
+                round: e.round,
+                gid: e.gid,
+            });
+        }
+    }
+    events.sort_by_key(|e| e.start_ns);
+
+    // round windows per reference node; duplicate `round` spans (an
+    // in-process multi-shard sim records one per shard thread) merge by
+    // min-start / max-end
+    let mut windows: BTreeMap<(usize, u32), (i64, i64)> = BTreeMap::new();
+    for e in &events {
+        if e.name != "round" {
+            continue;
+        }
+        let Some(r) = e.round else { continue };
+        let end = e.start_ns + e.dur_ns;
+        let w = windows.entry((refs[e.node], r)).or_insert((e.start_ns, end));
+        w.0 = w.0.min(e.start_ns);
+        w.1 = w.1.max(end);
+    }
+    if windows.is_empty() {
+        return Err(
+            "no `round` spans in any trace — was the serving node run with \
+             --trace-out?"
+                .into(),
+        );
+    }
+
+    // join every non-round span to a (reference, round) bucket
+    let mut buckets: BTreeMap<(usize, u32), Vec<usize>> = BTreeMap::new();
+    let mut unjoined = 0usize;
+    for (idx, e) in events.iter().enumerate() {
+        if e.name == "round" {
+            continue;
+        }
+        let rf = refs[e.node];
+        if let Some(r) = e.round {
+            buckets.entry((rf, r)).or_default().push(idx);
+            continue;
+        }
+        if e.gid.is_none() {
+            continue; // free-form span (warmup, shard_sync, ...): not lifecycle
+        }
+        // gid-only span: time containment, else nearest window within the
+        // session's round phase (gaps between consecutive rounds are thin)
+        let mid = e.start_ns + e.dur_ns / 2;
+        let mut best: Option<(i64, u32)> = None;
+        let mut phase: Option<(i64, i64)> = None;
+        for (&(wr, r), &(s, t)) in &windows {
+            if wr != rf {
+                continue;
+            }
+            let p = phase.get_or_insert((s, t));
+            p.0 = p.0.min(s);
+            p.1 = p.1.max(t);
+            let dist = if mid < s {
+                s - mid
+            } else if mid > t {
+                mid - t
+            } else {
+                0
+            };
+            let better = match best {
+                None => true,
+                Some((bd, _)) => dist < bd,
+            };
+            if better {
+                best = Some((dist, r));
+            }
+        }
+        match (best, phase) {
+            (Some((0, r)), _) => buckets.entry((rf, r)).or_default().push(idx),
+            (Some((_, r)), Some((ps, pt))) if mid >= ps && mid <= pt => {
+                buckets.entry((rf, r)).or_default().push(idx)
+            }
+            (Some(_), _) => {} // handshake/shutdown span outside the rounds
+            (None, _) => unjoined += 1, // this reference recorded no rounds
+        }
+    }
+
+    // per-round critical-path decomposition
+    let mut rounds = Vec::with_capacity(windows.len());
+    let mut stage_samples: BTreeMap<&'static str, Vec<i64>> = BTreeMap::new();
+    let mut critical_counts: BTreeMap<u32, usize> = BTreeMap::new();
+    let empty: Vec<usize> = Vec::new();
+    for (&(rf, r), &(wstart, wend)) in &windows {
+        let idxs = buckets.get(&(rf, r)).unwrap_or(&empty);
+        let wall = wend - wstart;
+
+        let dur_of = |gid: u32, name: &str| -> i64 {
+            idxs.iter()
+                .map(|&i| &events[i])
+                .filter(|e| e.gid == Some(gid) && e.name == name)
+                .map(|e| e.dur_ns)
+                .sum()
+        };
+        let first_start = |gid: u32, name: &str| -> Option<i64> {
+            idxs.iter()
+                .map(|&i| &events[i])
+                .filter(|e| e.gid == Some(gid) && e.name == name)
+                .map(|e| e.start_ns)
+                .min()
+        };
+        let last_end = |gid: u32, name: &str| -> Option<i64> {
+            idxs.iter()
+                .map(|&i| &events[i])
+                .filter(|e| e.gid == Some(gid) && e.name == name)
+                .map(|e| e.start_ns + e.dur_ns)
+                .max()
+        };
+        let round_dur = |name: &str| -> i64 {
+            idxs.iter()
+                .map(|&i| &events[i])
+                .filter(|e| e.gid.is_none() && e.name == name)
+                .map(|e| e.dur_ns)
+                .sum()
+        };
+
+        let mut gids: Vec<u32> = idxs.iter().filter_map(|&i| events[i].gid).collect();
+        gids.sort_unstable();
+        gids.dedup();
+        let chain_end = |gid: u32| -> i64 {
+            idxs.iter()
+                .map(|&i| &events[i])
+                .filter(|e| e.gid == Some(gid))
+                .map(|e| e.start_ns + e.dur_ns)
+                .max()
+                .unwrap_or(wstart)
+        };
+        let critical_gid = gids.iter().copied().max_by_key(|&g| chain_end(g));
+
+        let mut stages: Vec<(&'static str, i64)> = Vec::new();
+        if let Some(g) = critical_gid {
+            let uplink_sent = last_end(g, "uplink_encode");
+            let uplink_arrived =
+                first_start(g, "queue_wait").or_else(|| first_start(g, "uplink_decode"));
+            let uplink_wire = match (uplink_sent, uplink_arrived) {
+                (Some(a), Some(b)) => (b - a).max(0),
+                _ => 0,
+            };
+            let downlink_sent =
+                last_end(g, "write_park").max(last_end(g, "downlink_encode"));
+            let downlink_wire =
+                match (downlink_sent, first_start(g, "downlink_decode")) {
+                    (Some(a), Some(b)) => (b - a).max(0),
+                    _ => 0,
+                };
+            for &name in DEVICE_STAGES {
+                let ns = match name {
+                    "uplink_wire" => uplink_wire,
+                    "downlink_wire" => downlink_wire,
+                    "batch_seal_wait" | "server_step_batch" => round_dur(name),
+                    _ => dur_of(g, name),
+                };
+                stages.push((name, ns));
+            }
+            for &name in ROUND_STAGES {
+                stages.push((name, round_dur(name)));
+            }
+            let spent: i64 = stages.iter().map(|s| s.1).sum();
+            stages.push(("other", (wall - spent).max(0)));
+            *critical_counts.entry(g).or_insert(0) += 1;
+        }
+        let (bounding_stage, bounding_ns) = stages
+            .iter()
+            .copied()
+            .max_by_key(|&(_, ns)| ns)
+            .unwrap_or(("other", 0));
+
+        for &(name, ns) in &stages {
+            if ns > 0 {
+                stage_samples.entry(name).or_default().push(ns);
+            }
+        }
+        stage_samples.entry("round").or_default().push(wall);
+
+        rounds.push(RoundBreakdown {
+            shard: nodes[rf].shard,
+            round: r,
+            wall_ns: wall,
+            participants: gids.len(),
+            critical_gid,
+            bounding_stage,
+            bounding_ns,
+            stages,
+        });
+    }
+
+    let mut stage_stats: Vec<StageStat> = stage_samples
+        .into_iter()
+        .map(|(name, mut xs)| {
+            xs.sort_unstable();
+            StageStat {
+                name,
+                count: xs.len(),
+                p50_ns: pct(&xs, 0.5),
+                p95_ns: pct(&xs, 0.95),
+                max_ns: *xs.last().unwrap_or(&0),
+            }
+        })
+        .collect();
+    // present stages in chain order, then the extras
+    let order = |n: &str| -> usize {
+        DEVICE_STAGES
+            .iter()
+            .chain(ROUND_STAGES.iter())
+            .position(|&s| s == n)
+            .unwrap_or(usize::MAX)
+    };
+    stage_stats.sort_by_key(|s| order(s.name));
+
+    let mut straggler_counts: Vec<(u32, usize)> = critical_counts.into_iter().collect();
+    straggler_counts.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+
+    let labels = nodes
+        .iter()
+        .map(|n| {
+            let role = if n.role.is_empty() { "node" } else { &n.role };
+            format!("{role} shard {} ({})", n.shard, n.path)
+        })
+        .collect();
+    Ok(Analysis {
+        session_fp,
+        nodes: labels,
+        rounds,
+        stage_stats,
+        straggler_counts,
+        dropped: nodes.iter().map(|n| n.dropped).sum(),
+        unjoined,
+        events,
+    })
+}
+
+/// The human-readable critical-path report.
+pub fn render_table(a: &Analysis) -> String {
+    let ms = |ns: i64| ns as f64 / 1e6;
+    let mut out = String::new();
+    out.push_str("per-round critical path\n");
+    out.push_str(&format!(
+        "{:>5} {:>5} {:>10} {:>7}  {:<17} {:>10}\n",
+        "shard", "round", "wall_ms", "device", "bounded by", "stage_ms"
+    ));
+    for r in &a.rounds {
+        let dev = match r.critical_gid {
+            Some(g) => g.to_string(),
+            None => "-".to_string(),
+        };
+        out.push_str(&format!(
+            "{:>5} {:>5} {:>10.3} {:>7}  {:<17} {:>10.3}\n",
+            r.shard,
+            r.round,
+            ms(r.wall_ns),
+            dev,
+            r.bounding_stage,
+            ms(r.bounding_ns)
+        ));
+        let chain: Vec<String> = r
+            .stages
+            .iter()
+            .filter(|s| s.1 > 0)
+            .map(|&(n, ns)| format!("{n} {:.3}", ms(ns)))
+            .collect();
+        if !chain.is_empty() {
+            out.push_str(&format!("        {}\n", chain.join(" | ")));
+        }
+    }
+    out.push_str("\nper-stage latency (ms)\n");
+    out.push_str(&format!(
+        "{:<18} {:>6} {:>10} {:>10} {:>10}\n",
+        "stage", "count", "p50", "p95", "max"
+    ));
+    for s in &a.stage_stats {
+        out.push_str(&format!(
+            "{:<18} {:>6} {:>10.3} {:>10.3} {:>10.3}\n",
+            s.name,
+            s.count,
+            ms(s.p50_ns),
+            ms(s.p95_ns),
+            ms(s.max_ns)
+        ));
+    }
+    if !a.straggler_counts.is_empty() {
+        out.push_str("\nstraggler attribution (rounds bounded by each device)\n");
+        for &(g, c) in &a.straggler_counts {
+            out.push_str(&format!("  device {g}: {c}/{} rounds\n", a.rounds.len()));
+        }
+    }
+    out
+}
+
+/// The one-screen summary (`dropped spans: N` is the CI health line).
+pub fn summary(a: &Analysis) -> String {
+    let mut out = String::new();
+    if !a.session_fp.is_empty() {
+        out.push_str(&format!("session: {}\n", a.session_fp));
+    }
+    for label in &a.nodes {
+        out.push_str(&format!("node: {label}\n"));
+    }
+    out.push_str(&format!("rounds reconstructed: {}\n", a.rounds.len()));
+    out.push_str(&format!("unjoined spans: {}\n", a.unjoined));
+    out.push_str(&format!("dropped spans: {}\n", a.dropped));
+    out
+}
+
+/// The merged timeline as Chrome trace-event JSON (load in
+/// `chrome://tracing` or Perfetto): one complete ("X") event per span,
+/// microsecond timestamps on the aligned clock, pid = node, tid = gid.
+pub fn chrome_json(a: &Analysis) -> Json {
+    Json::Arr(
+        a.events
+            .iter()
+            .map(|e| {
+                let mut args = Vec::new();
+                if let Some(r) = e.round {
+                    args.push(("round", Json::Num(r as f64)));
+                }
+                if let Some(g) = e.gid {
+                    args.push(("gid", Json::Num(g as f64)));
+                }
+                Json::obj(vec![
+                    ("name", Json::str(&e.name)),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::Num(e.start_ns as f64 / 1e3)),
+                    ("dur", Json::Num(e.dur_ns as f64 / 1e3)),
+                    ("pid", Json::Num(e.node as f64)),
+                    ("tid", Json::Num(e.gid.unwrap_or(0) as f64)),
+                    ("args", Json::obj(args)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server_text() -> String {
+        [
+            r#"{"header": 1, "role": "server", "shard": 0, "session_fp": "00000000000000ab", "anchors": [[1, 1000]]}"#,
+            // a handshake-time queue_wait, before any round: must be
+            // ignored, not counted unjoined
+            r#"{"thread": "main", "name": "queue_wait", "key": "", "val": 0, "start_ns": 100, "dur_ns": 50, "depth": 1, "gid": 1}"#,
+            r#"{"thread": "main", "name": "round", "key": "", "val": 0, "start_ns": 2000, "dur_ns": 1000, "depth": 1, "round": 0}"#,
+            r#"{"thread": "main", "name": "queue_wait", "key": "", "val": 0, "start_ns": 2300, "dur_ns": 100, "depth": 1, "gid": 1}"#,
+            r#"{"thread": "main", "name": "uplink_decode", "key": "", "val": 0, "start_ns": 2400, "dur_ns": 50, "depth": 1, "round": 0, "gid": 1, "kind": 0}"#,
+            r#"{"thread": "main", "name": "server_step_batch", "key": "width", "val": 1, "start_ns": 2500, "dur_ns": 250, "depth": 1, "round": 0}"#,
+            r#"{"thread": "main", "name": "downlink_encode", "key": "", "val": 0, "start_ns": 2750, "dur_ns": 50, "depth": 1, "round": 0, "gid": 1, "kind": 1}"#,
+        ]
+        .join("\n")
+    }
+
+    fn device_text() -> String {
+        // device clock runs 500ns behind the server's anchor: the
+        // server stamped 1000, this node stamped 500 -> offset +500
+        [
+            r#"{"header": 1, "role": "device", "shard": 0, "session_fp": "00000000000000ab", "anchors": [[1, 500]]}"#,
+            r#"{"thread": "main", "name": "client_fwd", "key": "", "val": 0, "start_ns": 1600, "dur_ns": 100, "depth": 1, "round": 0, "gid": 1}"#,
+            r#"{"thread": "main", "name": "uplink_encode", "key": "", "val": 0, "start_ns": 1700, "dur_ns": 100, "depth": 1, "round": 0, "gid": 1, "kind": 0}"#,
+            r#"{"thread": "main", "name": "downlink_decode", "key": "", "val": 0, "start_ns": 2300, "dur_ns": 50, "depth": 1, "round": 0, "gid": 1, "kind": 1}"#,
+            r#"{"thread": "main", "name": "client_bwd", "key": "", "val": 0, "start_ns": 2350, "dur_ns": 100, "depth": 1, "round": 0, "gid": 1}"#,
+            r#"{"thread": "main", "dropped": 3}"#,
+        ]
+        .join("\n")
+    }
+
+    fn two_node() -> Analysis {
+        analyze(vec![
+            parse_trace("server.jsonl", &server_text()).unwrap(),
+            parse_trace("device.jsonl", &device_text()).unwrap(),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_header_events_and_dropped_rows() {
+        let n = parse_trace("device.jsonl", &device_text()).unwrap();
+        assert_eq!(n.role, "device");
+        assert_eq!(n.session_fp, "00000000000000ab");
+        assert_eq!(n.anchors, vec![(1, 500)]);
+        assert_eq!(n.events.len(), 4);
+        assert_eq!(n.dropped, 3);
+        assert_eq!(n.events[0].name, "client_fwd");
+        assert_eq!(n.events[0].round, Some(0));
+        assert_eq!(n.events[0].gid, Some(1));
+    }
+
+    #[test]
+    fn device_clock_is_shifted_onto_the_servers() {
+        let a = two_node();
+        let fwd = a.events.iter().find(|e| e.name == "client_fwd").unwrap();
+        // device-local 1600 + (1000 - 500) anchor offset
+        assert_eq!(fwd.start_ns, 2100);
+        assert_eq!(fwd.node, 1);
+    }
+
+    #[test]
+    fn critical_path_decomposes_the_round() {
+        let a = two_node();
+        assert_eq!(a.rounds.len(), 1);
+        let r = &a.rounds[0];
+        assert_eq!(r.round, 0);
+        assert_eq!(r.wall_ns, 1000);
+        assert_eq!(r.participants, 1);
+        assert_eq!(r.critical_gid, Some(1));
+        assert_eq!(r.bounding_stage, "server_step_batch");
+        assert_eq!(r.bounding_ns, 250);
+        // the chain sums exactly to the round wall clock
+        let total: i64 = r.stages.iter().map(|s| s.1).sum();
+        assert_eq!(total, r.wall_ns);
+        let get = |name: &str| r.stages.iter().find(|s| s.0 == name).unwrap().1;
+        assert_eq!(get("client_fwd"), 100);
+        assert_eq!(get("uplink_encode"), 100);
+        // encode ends (aligned) at 2300, queue_wait starts at 2300
+        assert_eq!(get("uplink_wire"), 0);
+        assert_eq!(get("queue_wait"), 100);
+        assert_eq!(get("uplink_decode"), 50);
+        assert_eq!(get("server_step_batch"), 250);
+        assert_eq!(get("downlink_encode"), 50);
+        // downlink_encode ends 2800; decode starts (aligned) at 2800
+        assert_eq!(get("downlink_wire"), 0);
+        assert_eq!(get("downlink_decode"), 50);
+        assert_eq!(get("client_bwd"), 100);
+        assert_eq!(get("other"), 200);
+        // the handshake queue_wait was outside the round phase: not joined,
+        // not unjoined
+        assert_eq!(a.unjoined, 0);
+        assert_eq!(a.dropped, 3);
+        assert_eq!(a.straggler_counts, vec![(1, 1)]);
+    }
+
+    #[test]
+    fn summary_reports_the_drop_count() {
+        let a = two_node();
+        let s = summary(&a);
+        assert!(s.contains("rounds reconstructed: 1"), "{s}");
+        assert!(s.contains("unjoined spans: 0"), "{s}");
+        assert!(s.contains("dropped spans: 3"), "{s}");
+    }
+
+    #[test]
+    fn table_renders_every_section() {
+        let a = two_node();
+        let t = render_table(&a);
+        assert!(t.contains("per-round critical path"), "{t}");
+        assert!(t.contains("server_step_batch"), "{t}");
+        assert!(t.contains("per-stage latency"), "{t}");
+        assert!(t.contains("straggler attribution"), "{t}");
+        assert!(t.contains("device 1: 1/1 rounds"), "{t}");
+    }
+
+    #[test]
+    fn chrome_export_is_an_event_array() {
+        let a = two_node();
+        let j = chrome_json(&a);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), a.events.len());
+        let fwd = arr
+            .iter()
+            .find(|e| e.at(&["name"]) == &Json::Str("client_fwd".into()))
+            .unwrap();
+        assert_eq!(fwd.at(&["ph"]), &Json::Str("X".into()));
+        assert_eq!(fwd.at(&["ts"]), &Json::Num(2.1)); // 2100ns in us
+        assert_eq!(fwd.at(&["pid"]), &Json::Num(1.0));
+        assert_eq!(fwd.at(&["tid"]), &Json::Num(1.0));
+    }
+
+    #[test]
+    fn mismatched_sessions_are_rejected() {
+        let other = server_text().replace("00000000000000ab", "00000000000000cd");
+        let err = analyze(vec![
+            parse_trace("a.jsonl", &server_text()).unwrap(),
+            parse_trace("b.jsonl", &other).unwrap(),
+        ])
+        .unwrap_err();
+        assert!(err.contains("different sessions"), "{err}");
+    }
+
+    #[test]
+    fn unanchored_device_is_rejected() {
+        let lone = parse_trace("device.jsonl", &device_text()).unwrap();
+        let err = analyze(vec![lone]).unwrap_err();
+        assert!(err.contains("no server trace anchors"), "{err}");
+    }
+}

@@ -47,7 +47,10 @@ const EXPORT_TICK_MS: i32 = 50;
 struct PollConn {
     stream: TcpStream,
     decoder: FrameDecoder,
-    inbox: VecDeque<Message>,
+    /// decoded frames awaiting the scheduler, each with its enqueue
+    /// timestamp (`elapsed_ns` at decode) — the `queue_wait` span measures
+    /// decode→consume latency per frame
+    inbox: VecDeque<(Message, u64)>,
     stats: WireStats,
     peer: String,
     closed: bool,
@@ -73,6 +76,9 @@ pub struct PollFleet {
     /// 64 KiB per wake-up)
     rbuf: Vec<u8>,
     start: Instant,
+    /// the fleet slice this node serves — maps connection slots to global
+    /// device ids for the per-device trace spans
+    shape: FleetShape,
     /// `--metrics-bind` scrape endpoint, serviced once per poll pass
     exporter: Option<MetricsExporter>,
 }
@@ -116,6 +122,7 @@ impl PollFleet {
             order: VecDeque::new(),
             rbuf: vec![0u8; READ_CHUNK],
             start: Instant::now(),
+            shape,
             exporter: None,
         };
 
@@ -180,6 +187,7 @@ impl PollFleet {
                 order: VecDeque::new(),
                 rbuf: vec![0u8; READ_CHUNK],
                 start: fleet.start,
+                shape,
                 exporter: fleet.exporter,
             },
             hellos,
@@ -269,7 +277,8 @@ impl PollFleet {
                         conn.stats.bytes_recv += n as u64;
                         metrics::FRAMES_RECV.inc();
                         metrics::NET_RX_BYTES.add(n as u64);
-                        conn.inbox.push_back(msg);
+                        conn.inbox
+                            .push_back((msg, crate::util::logging::elapsed_ns()));
                         self.order.push_back(i);
                         decoded += 1;
                     }
@@ -311,6 +320,25 @@ impl PollFleet {
     fn first_dead_error(&self) -> Option<TransportError> {
         self.conns.iter().find(|c| c.closed).map(|c| c.terminal_error())
     }
+
+    /// Trace the decode→consume latency of a frame popped from slot `i`'s
+    /// inbox: the uplink's "sat in the arrival queue" stage of a round.
+    /// Recorded manually (the wait already happened) with the connection's
+    /// global device id; the analyzer assigns the round by time containment.
+    fn note_queue_wait(&self, i: usize, enq_ns: u64) {
+        if !crate::obs::span::enabled() {
+            return;
+        }
+        let now = crate::util::logging::elapsed_ns();
+        crate::obs::span::record(
+            crate::obs::span::SpanEvent::manual(
+                "queue_wait",
+                enq_ns,
+                now.saturating_sub(enq_ns),
+            )
+            .gid(self.shape.gid(i) as u32),
+        );
+    }
 }
 
 impl Fleet for PollFleet {
@@ -342,6 +370,7 @@ impl Fleet for PollFleet {
                     // a peer that stops reading must not wedge the whole
                     // single-threaded loop: bound the stall and fail the
                     // connection instead of retrying forever
+                    let _sp = crate::span!("write_park", gid = self.shape.gid(d));
                     if !poll::wait_writable(&conn.stream, 10_000)
                         .map_err(TransportError::Io)?
                     {
@@ -373,10 +402,12 @@ impl Fleet for PollFleet {
         loop {
             if let Some(pos) = self.order.iter().position(|&i| i == d) {
                 let _ = self.order.remove(pos);
-                return Ok(self.conns[d]
+                let (msg, enq_ns) = self.conns[d]
                     .inbox
                     .pop_front()
-                    .expect("order entry implies a queued message"));
+                    .expect("order entry implies a queued message");
+                self.note_queue_wait(d, enq_ns);
+                return Ok(msg);
             }
             if self.conns[d].closed {
                 return Err(self.conns[d].terminal_error());
@@ -393,10 +424,11 @@ impl Fleet for PollFleet {
             .map(|t| Instant::now() + std::time::Duration::from_secs_f64(t.max(0.0)));
         loop {
             if let Some(i) = self.order.pop_front() {
-                let msg = self.conns[i]
+                let (msg, enq_ns) = self.conns[i]
                     .inbox
                     .pop_front()
                     .expect("order entry implies a queued message");
+                self.note_queue_wait(i, enq_ns);
                 return Ok(Some((i, msg)));
             }
             // queue drained (so every inbox is empty): any closed socket

@@ -106,11 +106,20 @@ pub struct BatchPlan {
     window: usize,
     dims: Option<[u32; 4]>,
     items: Vec<BatchItem>,
+    /// `elapsed_ns` when the buffered group's first item was admitted
+    /// (tracing enabled only) — the `batch_seal_wait` span measures how
+    /// long arrivals sat buffered waiting for the window to fill or seal
+    first_admit_ns: Option<u64>,
 }
 
 impl BatchPlan {
     pub fn new(window: usize) -> BatchPlan {
-        BatchPlan { window: window.max(1), dims: None, items: Vec::new() }
+        BatchPlan {
+            window: window.max(1),
+            dims: None,
+            items: Vec::new(),
+            first_admit_ns: None,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -132,16 +141,21 @@ impl BatchPlan {
     pub fn push(&mut self, item: BatchItem) -> Option<Vec<BatchItem>> {
         let dims = Self::peek_dims(&item.payload);
         let sealed = if !self.items.is_empty() && dims != self.dims {
+            self.note_seal();
             Some(std::mem::take(&mut self.items))
         } else {
             None
         };
         self.dims = dims;
+        if self.items.is_empty() && crate::obs::span::enabled() {
+            self.first_admit_ns = Some(crate::util::logging::elapsed_ns());
+        }
         self.items.push(item);
         if sealed.is_some() {
             return sealed;
         }
         if self.items.len() >= self.window {
+            self.note_seal();
             return Some(std::mem::take(&mut self.items));
         }
         None
@@ -153,8 +167,28 @@ impl BatchPlan {
         if self.items.is_empty() {
             None
         } else {
+            self.note_seal();
             Some(std::mem::take(&mut self.items))
         }
+    }
+
+    /// Trace how long the (non-empty) buffered group sat between its first
+    /// admit and this seal — recorded manually because the wait already
+    /// happened by the time the group is handed out for dispatch.
+    fn note_seal(&mut self) {
+        let Some(t0) = self.first_admit_ns.take() else { return };
+        if !crate::obs::span::enabled() {
+            return;
+        }
+        let now = crate::util::logging::elapsed_ns();
+        crate::obs::span::record(
+            crate::obs::span::SpanEvent::manual(
+                "batch_seal_wait",
+                t0,
+                now.saturating_sub(t0),
+            )
+            .round(self.items[0].round as u32),
+        );
     }
 }
 
@@ -211,6 +245,7 @@ fn close_round<C: Compute>(
     // a straggling device 0 has no fresh sub-model to evaluate; skip the
     // eval rather than fail the session (InOrder never hits this)
     let accuracy = if eval_due && rt.client_params[0].is_some() {
+        let _sp = crate::span!("eval", round = round);
         Some(rt.evaluate()?)
     } else {
         None
@@ -257,6 +292,21 @@ fn close_round<C: Compute>(
         crate::log_debug!("[{label}] round {round}: loss {loss:.4}");
     }
     rt.metrics.push(rec);
+    // the per-round umbrella span, recorded manually at close: start is
+    // back-dated to the round's wall-clock open, so every stage span of
+    // this round nests inside it in the merged timeline
+    if crate::obs::span::enabled() {
+        let dur = wall.elapsed().as_nanos() as u64;
+        let now = crate::util::logging::elapsed_ns();
+        crate::obs::span::record(
+            crate::obs::span::SpanEvent::manual(
+                "round",
+                now.saturating_sub(dur),
+                dur,
+            )
+            .round(round as u32),
+        );
+    }
     Ok(stop)
 }
 
@@ -360,7 +410,10 @@ fn run_in_order<C: Compute>(
             }
             if agg_due {
                 let basis: Vec<usize> = (0..n).collect();
-                let reply = rt.fedavg_over(&basis, round)?;
+                let reply = {
+                    let _sp = crate::span!("fedavg", round = round);
+                    rt.fedavg_over(&basis, round)?
+                };
                 // cross-shard boundary: merge with the other shards before
                 // broadcasting (a no-op on a single server). cross_shard
                 // only returns None for a None input (a Some push that the
@@ -701,6 +754,7 @@ fn run_arrival<C: Compute>(
                 );
                 None
             } else {
+                let _sp = crate::span!("fedavg", round = round);
                 Some(rt.fedavg_over(&basis, round)?)
             };
             if let Some(reply) = rt.cross_shard(round, local)? {

@@ -117,6 +117,14 @@ impl<C: Compute> DeviceWorker<C> {
                         self.rounds
                     ));
                 }
+                // trace joinability: this side's clock anchor for the Hello
+                // exchange (the server stamps its own at HelloAck send), plus
+                // the validated session fingerprint for the header row
+                crate::obs::span::set_trace_session(self.session_fp);
+                crate::obs::span::record_anchor(
+                    me as u32,
+                    crate::util::logging::elapsed_ns(),
+                );
                 Ok(Vec::new())
             }
             Message::RoundOpen { round, sync } => {
@@ -132,20 +140,32 @@ impl<C: Compute> DeviceWorker<C> {
                     self.data.height,
                     self.data.width,
                 ];
-                let acts = self
-                    .compute
-                    .client_fwd(&self.state.client_params, &x, &x_dims)?;
+                let acts = {
+                    let _sp = crate::span!("client_fwd", round = round, gid = me);
+                    self.compute
+                        .client_fwd(&self.state.client_params, &x, &x_dims)?
+                };
                 // stage ii (device half): ACII entropy + uplink compression
                 // (the frame owns its payload: single-allocation compress,
                 // with the reusable-buffer encode as the primitive)
                 let h_inst = self.compute.entropy(&acts)?;
                 let acts_cm = acts.to_channel_major();
                 let t0 = std::time::Instant::now();
-                let payload = self
-                    .state
-                    .streams
-                    .up
-                    .compress(&acts_cm, RoundCtx { entropy: Some(&h_inst) });
+                let payload = {
+                    let _sp = crate::span!(
+                        "uplink_encode",
+                        round = round,
+                        gid = me,
+                        kind = StreamKind::Uplink
+                    );
+                    self.state.streams.up.compress(
+                        &acts_cm,
+                        RoundCtx {
+                            entropy: Some(&h_inst),
+                            kind: Some(StreamKind::Uplink),
+                        },
+                    )
+                };
                 record_encode(StreamKind::Uplink, t0, payload.len());
                 self.pending = Some(Pending { round, x, x_dims, sync });
                 Ok(vec![Message::Activations {
@@ -169,20 +189,30 @@ impl<C: Compute> DeviceWorker<C> {
                 }
                 // stage iv: downlink decode + client backward
                 let t0 = std::time::Instant::now();
-                let g_hat = self
-                    .state
-                    .streams
-                    .down
-                    .decode(&payload)
-                    .map_err(|e| format!("device {me}: downlink stream: {e}"))?;
+                let g_hat = {
+                    let _sp = crate::span!(
+                        "downlink_decode",
+                        round = round,
+                        gid = me,
+                        kind = StreamKind::Downlink
+                    );
+                    self.state
+                        .streams
+                        .down
+                        .decode(&payload)
+                        .map_err(|e| format!("device {me}: downlink stream: {e}"))?
+                };
                 record_decode(StreamKind::Downlink, t0, payload.len());
-                let new_params = self.compute.client_bwd(
-                    &self.state.client_params,
-                    &pending.x,
-                    &pending.x_dims,
-                    &g_hat,
-                    self.lr,
-                )?;
+                let new_params = {
+                    let _sp = crate::span!("client_bwd", round = round, gid = me);
+                    self.compute.client_bwd(
+                        &self.state.client_params,
+                        &pending.x,
+                        &pending.x_dims,
+                        &g_hat,
+                        self.lr,
+                    )?
+                };
                 self.state.client_params = new_params;
                 if pending.sync {
                     let payload = sync::pack_params_with(

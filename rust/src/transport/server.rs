@@ -459,9 +459,17 @@ impl<C: Compute> ServerRuntime<C> {
         let mut acts: Vec<Tensor> = Vec::with_capacity(items.len());
         for it in items {
             let t0 = std::time::Instant::now();
-            let acts_hat = self.streams.device(it.d).up.decode(&it.payload).map_err(|e| {
-                format!("round {}: device {} uplink stream: {e}", it.round, it.d)
-            })?;
+            let acts_hat = {
+                let _sp = span!(
+                    "uplink_decode",
+                    round = it.round,
+                    gid = self.cfg.gid(it.d),
+                    kind = StreamKind::Uplink
+                );
+                self.streams.device(it.d).up.decode(&it.payload).map_err(|e| {
+                    format!("round {}: device {} uplink stream: {e}", it.round, it.d)
+                })?
+            };
             record_decode(StreamKind::Uplink, t0, it.payload.len());
             self.raw_round[0] += acts_hat.len() * 4;
             acts.push(acts_hat);
@@ -482,7 +490,8 @@ impl<C: Compute> ServerRuntime<C> {
                 items[i..j].iter().map(|it| it.labels.as_slice()).collect();
             let dispatch_t0 = std::time::Instant::now();
             let mut outs = {
-                let _sp = span!("server_step_batch", width = j - i);
+                let _sp =
+                    span!("server_step_batch", round = items[i].round, width = j - i);
                 self.compute.server_step_batch(
                     &self.server.server_params,
                     &group_acts,
@@ -537,11 +546,22 @@ impl<C: Compute> ServerRuntime<C> {
                 // the single steady-state allocation per message)
                 self.down_scratch.clear();
                 let enc_t0 = std::time::Instant::now();
-                self.streams.device(it.d).down.encode(
-                    &g_cm,
-                    RoundCtx { entropy: g_ent.as_deref() },
-                    &mut self.down_scratch,
-                );
+                {
+                    let _sp = span!(
+                        "downlink_encode",
+                        round = it.round,
+                        gid = self.cfg.gid(it.d),
+                        kind = StreamKind::Downlink
+                    );
+                    self.streams.device(it.d).down.encode(
+                        &g_cm,
+                        RoundCtx {
+                            entropy: g_ent.as_deref(),
+                            kind: Some(StreamKind::Downlink),
+                        },
+                        &mut self.down_scratch,
+                    );
+                }
                 record_encode(StreamKind::Downlink, enc_t0, self.down_scratch.len());
                 results.push((loss, self.down_scratch.to_vec()));
             }
@@ -648,9 +668,14 @@ impl<C: Compute> ServerRuntime<C> {
         let raw = |ts: &[Tensor]| ts.iter().map(|t| t.len() * 4).sum::<usize>();
         let client_push: &[Tensor] = local.as_deref().unwrap_or(&[]);
         raw_round[2] += raw(client_push) + raw(&server.server_params);
-        let (merged_client, merged_server) = link
-            .exchange(client_push, &server.server_params)
-            .map_err(|e| format!("round {round}: shard link: {e}"))?;
+        // the barrier span covers the whole blocking exchange (push +
+        // coordinator merge wait); the inner `shard_sync` span inside
+        // `ShardLink::exchange` keys on epoch, this one on the round
+        let (merged_client, merged_server) = {
+            let _sp = span!("shard_barrier", round = round);
+            link.exchange(client_push, &server.server_params)
+                .map_err(|e| format!("round {round}: shard link: {e}"))?
+        };
         let (wire_up, wire_down) = link.last_wire();
         *shard_round_wire += wire_up + wire_down;
         raw_round[2] += raw(&merged_client) + raw(&merged_server);
@@ -739,12 +764,21 @@ impl<C: Compute> ServerRuntime<C> {
             }
         }
         self.weights = hellos.iter().map(|h| h.shard_len as f64).collect();
+        // trace joinability: the session fingerprint names the session in
+        // every node's trace header, and the per-device anchor (this side's
+        // monotonic clock at HelloAck send; the device stamps its own at
+        // receipt) lets `slacc trace` align the two clocks offline
+        crate::obs::span::set_trace_session(want_fp);
         for d in 0..n {
             fleet.send(d, &Message::HelloAck {
                 device_id: self.cfg.gid(d) as u32,
                 rounds: self.cfg.rounds as u32,
                 agg_every: self.cfg.client_agg_every as u32,
             })?;
+            crate::obs::span::record_anchor(
+                self.cfg.gid(d) as u32,
+                crate::util::logging::elapsed_ns(),
+            );
         }
         for d in 0..n {
             fleet.pump(d)?;
@@ -807,6 +841,13 @@ impl<C: Compute> ServerRuntime<C> {
             straggler_events: self.metrics.straggler_events(),
             server_steps: self.server_steps,
             server_dispatches: self.server_dispatches,
+            device_waits: self
+                .timeline
+                .device_wait_profiles(n)
+                .into_iter()
+                .enumerate()
+                .map(|(d, p)| (self.cfg.gid(d), p))
+                .collect(),
             metrics: std::mem::take(&mut self.metrics),
         })
     }

@@ -42,7 +42,7 @@ fn every_codec_roundtrips_every_corpus_tensor() {
         for name in codecs::ALL_CODECS {
             let mut codec = build(name, cm.channels, 2);
             let ent = shannon::entropies(&cm);
-            let wire = codec.compress(&cm, RoundCtx { entropy: Some(&ent) });
+            let wire = codec.compress(&cm, RoundCtx { entropy: Some(&ent), kind: None });
             let rec = codec
                 .decode(&wire)
                 .unwrap_or_else(|e| panic!("{name} tensor {ti}: {e}"));
@@ -238,7 +238,7 @@ fn slacc_adapts_bits_to_entropy_structure() {
         50,
         15,
     );
-    let _ = codec.compress(&cm, RoundCtx { entropy: Some(&ent) });
+    let _ = codec.compress(&cm, RoundCtx { entropy: Some(&ent), kind: None });
     let last = codec.last_round().unwrap();
     let g_hi = last.group_of_channel[0];
     let g_lo = last.group_of_channel[7];

@@ -15,7 +15,7 @@ use std::time::Duration;
 use slacc::config::{CodecChoice, ExperimentConfig};
 use slacc::data::Dataset;
 use slacc::obs::export::{MetricsExporter, SnapshotWriter};
-use slacc::obs::{metrics, span};
+use slacc::obs::{metrics, span, trace};
 use slacc::shard::sim::run_sharded_mock;
 use slacc::transport::device::{mock_worker, run_blocking};
 use slacc::transport::server::{accept_and_serve_with, mock_runtime, run_mock_loopback};
@@ -231,10 +231,19 @@ fn session_spans_drain_to_jsonl() {
     assert!(n > 0, "an instrumented session must record spans");
     let text = std::fs::read_to_string(&path).unwrap();
     let _ = std::fs::remove_file(&path);
+    // line 0 is the joinability header (role / shard / session / anchors)
+    let mut lines = text.lines();
+    let header = Json::parse(lines.next().unwrap()).unwrap();
+    assert_eq!(header.at(&["header"]), &Json::Num(1.0));
+    assert!(header.get("role").is_some());
+    assert!(header.get("anchors").is_some());
     let mut saw_batch = false;
-    for line in text.lines() {
+    for line in lines {
         let row = Json::parse(line).unwrap();
-        if row.at(&["name"]) == &Json::Str("server_step_batch".to_string()) {
+        let Some(name) = row.get("name") else {
+            continue; // a per-thread dropped-count row
+        };
+        if name == &Json::Str("server_step_batch".to_string()) {
             saw_batch = true;
             match row.at(&["dur_ns"]) {
                 Json::Num(v) => assert!(*v >= 0.0),
@@ -250,6 +259,138 @@ fn session_spans_drain_to_jsonl() {
         span::drain().is_empty(),
         "spans recorded while the gate was disabled"
     );
+}
+
+/// Tentpole acceptance, in-process edition: a sharded multi-thread mock
+/// session drains a trace the analyzer can fully join — every round
+/// reconstructed with a critical device and a stage chain that covers at
+/// least the round wall clock, zero unjoined lifecycle spans, zero ring
+/// drops.
+#[test]
+fn sharded_session_traces_are_fully_joinable() {
+    let _g = gate();
+    let _ = span::drain(); // discard anything a prior test recorded
+    span::set_enabled(true);
+    span::set_trace_role("server", 0);
+    let mut cfg = tiny_cfg(4, 4);
+    cfg.train_n = 128;
+    cfg.test_n = 32;
+    cfg.shards = 2;
+    cfg.shard_sync_every = 1;
+    let result = run_sharded_mock(&cfg);
+    span::set_enabled(false);
+    result.unwrap();
+
+    let path = std::env::temp_dir().join(format!(
+        "slacc_obs_joinable_{}.jsonl",
+        std::process::id()
+    ));
+    let path = path.to_str().unwrap().to_string();
+    let n = span::write_jsonl(&path).unwrap();
+    assert!(n > 0, "an instrumented sharded session must record spans");
+    let node = trace::parse_file(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(node.role, "server");
+
+    let analysis = trace::analyze(vec![node]).unwrap();
+    assert_eq!(analysis.unjoined, 0, "every lifecycle span must join a round");
+    assert_eq!(analysis.dropped, 0, "tiny session must not overwrite its rings");
+    let got: Vec<u32> = analysis.rounds.iter().map(|r| r.round).collect();
+    let want: Vec<u32> = (0..cfg.rounds as u32).collect();
+    assert_eq!(got, want, "every round must be reconstructable");
+    for r in &analysis.rounds {
+        assert!(r.wall_ns > 0, "round {} has no wall clock", r.round);
+        assert!(r.participants > 0, "round {} joined no devices", r.round);
+        assert!(
+            r.critical_gid.is_some(),
+            "round {} has no critical device",
+            r.round
+        );
+        // `other` absorbs any un-instrumented remainder, so the chain can
+        // never undershoot the wall clock (overlapping shard stages in this
+        // single-process sim can make it exceed it)
+        let sum: i64 = r.stages.iter().map(|s| s.1).sum();
+        assert!(
+            sum >= r.wall_ns,
+            "round {}: stage chain {}ns under the {}ns wall",
+            r.round,
+            sum,
+            r.wall_ns
+        );
+    }
+    assert!(trace::summary(&analysis).contains("dropped spans: 0"));
+}
+
+/// The committed two-node fixture reproduces its golden critical-path
+/// table: clock alignment via the handshake anchors, derived wire stages,
+/// and an exact stages-sum-to-wall decomposition per round.
+#[test]
+fn fixture_traces_reproduce_the_golden_table() {
+    let nodes = vec![
+        trace::parse_trace(
+            "server.jsonl",
+            include_str!("fixtures/trace/server.jsonl"),
+        )
+        .unwrap(),
+        trace::parse_trace(
+            "device0.jsonl",
+            include_str!("fixtures/trace/device0.jsonl"),
+        )
+        .unwrap(),
+        trace::parse_trace(
+            "device1.jsonl",
+            include_str!("fixtures/trace/device1.jsonl"),
+        )
+        .unwrap(),
+    ];
+    let a = trace::analyze(nodes).unwrap();
+    assert_eq!(a.session_fp, "00000000deadbeef");
+    assert_eq!(a.unjoined, 0);
+    assert_eq!(a.dropped, 0);
+    assert_eq!(a.rounds.len(), 2);
+    // the fixture is overlap-free, so the decomposition is exact
+    for r in &a.rounds {
+        let sum: i64 = r.stages.iter().map(|s| s.1).sum();
+        assert_eq!(sum, r.wall_ns, "round {} chain must sum to its wall", r.round);
+        assert_eq!(r.participants, 2);
+    }
+    assert_eq!(a.rounds[0].critical_gid, Some(1));
+    assert_eq!(a.rounds[1].critical_gid, Some(0));
+    assert_eq!(a.rounds[0].bounding_stage, "client_fwd");
+    assert_eq!(a.rounds[0].bounding_ns, 2_000_000);
+    assert_eq!(a.straggler_counts, vec![(0, 1), (1, 1)]);
+
+    // golden table comparison, whitespace-normalized so only the numbers
+    // and their order are load-bearing
+    fn norm(s: &str) -> String {
+        s.lines()
+            .map(|l| l.split_whitespace().collect::<Vec<_>>().join(" "))
+            .filter(|l| !l.is_empty())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+    let table = trace::render_table(&a);
+    let golden = include_str!("fixtures/trace/expected_table.txt");
+    assert_eq!(
+        norm(&table),
+        norm(golden),
+        "critical-path table drifted from the golden fixture; got:\n{table}"
+    );
+
+    // the Chrome export carries one complete event per span, clock-aligned
+    let chrome = trace::chrome_json(&a);
+    let arr = chrome.as_arr().unwrap();
+    assert_eq!(arr.len(), a.events.len());
+    let fwd = arr
+        .iter()
+        .find(|e| {
+            e.at(&["name"]) == &Json::Str("client_fwd".into())
+                && e.at(&["args", "round"]) == &Json::Num(0.0)
+                && e.at(&["tid"]) == &Json::Num(1.0)
+        })
+        .expect("device 1's round-0 client_fwd missing from the Chrome export");
+    // device-1 local 8_700_000ns + the 1_500_000ns anchor offset, in us
+    assert_eq!(fwd.at(&["ts"]), &Json::Num(10_200.0));
 }
 
 /// The counter roll-up piggybacked on ShardSync reaches the coordinator
