@@ -1,0 +1,643 @@
+//! Adaptive runtime renegotiation: the telemetry-driven control loop that
+//! retunes per-stream codecs mid-session (`--adapt`, proto v5).
+//!
+//! The negotiated [`StreamSpecs`] table used to be frozen at the Hello
+//! handshake; this module turns it into a *runtime* quantity. At every
+//! closed round the server consults a [`Controller`] with that round's
+//! telemetry ([`RoundObs`]: per-stream compressed/raw byte ratios, the
+//! windowed `slacc_entropy_{mean,var}_milli` drift gauges, and the
+//! scheduler's wait profile). When the controller decides to retune, the
+//! server:
+//!
+//! 1. re-negotiates the table ([`retuned_specs`]: the uplink steps to the
+//!    chosen spec, the downlink follows unless it is the lossless identity
+//!    stream, the sync streams never change — they are stateful and
+//!    session-long on both ends),
+//! 2. pushes a [`Message::SpecUpdate`] frame (new table + FNV digest +
+//!    activation round) to every device at the round boundary, a full
+//!    round ([`ACTIVATION_LEAD`]) before activation,
+//! 3. collects one [`Message::SpecUpdateAck`] per device — a device that
+//!    sends an activation-round frame without having acked is a protocol
+//!    error, same discipline as the Hello digest cross-check — and
+//! 4. swaps its own decode/encode twins at the agreed round via
+//!    [`SpecEpochs`]: per-round epoch lookup, so a carried straggler
+//!    finishing a stale round is served under the *old* table while
+//!    current-round traffic already runs the new one.
+//!
+//! Devices mirror step 4 exactly: the fresh [`DeviceStreams`] built at the
+//! first `RoundOpen >= activate_round` are seed-identical twins of the
+//! server's new epoch (stream seeds are a pure function of session seed +
+//! device + direction), so wire bytes stay byte-for-byte reproducible
+//! across loopback and TCP through a transition.
+//!
+//! Two controller families parse from the `--adapt` directive:
+//!
+//! * `at:R=<spec>[,R=<spec>...]` — [`ForcedScheduleController`]: an
+//!   explicit transition schedule (activate `<spec>` at round `R`).
+//!   Transport-invariant, so it is what the parity tests and mock
+//!   sessions drive.
+//! * `ladder:<spec1>,<spec2>[,...][;cooldown=N][;up-below=X][;down-above=Y]`
+//!   — [`EntropyBudgetController`]: steps the uplink *up* the rung list
+//!   (more aggressive compression) while the windowed channel-entropy
+//!   variance sits at or below `up-below` milli-bits, and back *down*
+//!   when it reaches `down-above`. The gap between the two thresholds is
+//!   the hysteresis band and `cooldown` rounds must pass between
+//!   transitions, so the controller never flip-flops on a noisy gauge.
+
+use crate::codecs::stream::{StreamSet, StreamSpec, StreamSpecs};
+use crate::codecs::CodecError;
+
+/// How many rounds ahead of the decision boundary a transition activates:
+/// a decision at the close of round `c` activates at `c + ACTIVATION_LEAD`.
+/// The scheduler opens at most one round past the last close, so the
+/// SpecUpdate pushed at close of `c` always precedes the activation
+/// round's RoundOpen on every device's (FIFO) connection — the ack can be
+/// collected before the first frame of the activation round without ever
+/// stalling the pipeline.
+pub const ACTIVATION_LEAD: usize = 2;
+
+/// One closed round's telemetry, as the controller sees it. Assembled
+/// server-side from the round record and the live obs registry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundObs {
+    /// uplink compression ratio this round (raw f32 bytes / wire bytes)
+    pub ratio_up: f64,
+    /// downlink compression ratio this round
+    pub ratio_down: f64,
+    /// windowed mean of the uplink channel entropy (`slacc_entropy_mean_milli`)
+    pub entropy_mean_milli: i64,
+    /// windowed variance of the uplink channel entropy (`slacc_entropy_var_milli`)
+    pub entropy_var_milli: i64,
+    /// the slowest device's wait this round (timeline wait profile)
+    pub max_wait_s: f64,
+}
+
+/// A renegotiation policy: consulted once per closed round (only while no
+/// earlier transition is still in flight) and answers with the uplink spec
+/// to step to, or `None` to hold.
+pub trait Controller {
+    fn decide(&mut self, round: usize, obs: &RoundObs) -> Option<String>;
+
+    /// Short name for logs and the bench report.
+    fn label(&self) -> &'static str;
+}
+
+/// Re-negotiate the full table for a new uplink spec: the downlink follows
+/// the uplink (the paper compresses both data directions) unless the
+/// session runs it as the lossless identity stream, and the sync spec is
+/// carried over verbatim — sync codecs are stateful and session-long, so
+/// a transition never touches them.
+pub fn retuned_specs(current: &StreamSpecs, uplink: &str) -> Result<StreamSpecs, CodecError> {
+    let downlink = if current.downlink.as_str() == "identity" {
+        "identity"
+    } else {
+        uplink
+    };
+    StreamSpecs::parse(uplink, downlink, current.sync.as_str())
+}
+
+/// A parsed `--adapt` directive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdaptPlan {
+    /// `at:R=<spec>,...` — explicit activation rounds.
+    Forced(Vec<(usize, String)>),
+    /// `ladder:<spec>,...` — entropy-budget rung walking.
+    Ladder {
+        rungs: Vec<String>,
+        cooldown: usize,
+        up_below: i64,
+        down_above: i64,
+    },
+}
+
+/// Canonicalize one spec token through the registry grammar (so `none`
+/// and `identity` compare equal everywhere downstream).
+fn canon_spec(s: &str) -> Result<String, String> {
+    StreamSpec::parse(s)
+        .map(|sp| sp.as_str().to_string())
+        .map_err(|e| format!("--adapt: invalid spec '{s}': {e}"))
+}
+
+impl AdaptPlan {
+    /// Parse an `--adapt` directive. Grammar:
+    ///
+    /// * `at:R=<spec>[,R=<spec>...]` — rounds strictly increasing, each
+    ///   `>= 2` (a transition needs [`ACTIVATION_LEAD`] rounds of runway).
+    /// * `ladder:<spec1>,<spec2>[,...]` with optional `;cooldown=N`,
+    ///   `;up-below=X`, `;down-above=Y` suffixes (milli-bit thresholds,
+    ///   `up-below < down-above`).
+    pub fn parse(s: &str) -> Result<AdaptPlan, String> {
+        if let Some(body) = s.strip_prefix("at:") {
+            let mut entries = Vec::new();
+            for part in body.split(',') {
+                let (round, spec) = part.split_once('=').ok_or_else(|| {
+                    format!("--adapt at: entry '{part}' is not R=<spec>")
+                })?;
+                let round: usize = round.trim().parse().map_err(|_| {
+                    format!("--adapt at: '{round}' is not a round number")
+                })?;
+                if round < ACTIVATION_LEAD {
+                    return Err(format!(
+                        "--adapt at: round {round} is too early (a transition \
+                         activates no earlier than round {ACTIVATION_LEAD})"
+                    ));
+                }
+                if let Some(&(prev, _)) = entries.last() {
+                    if round <= prev {
+                        return Err(format!(
+                            "--adapt at: rounds must be strictly increasing \
+                             ({prev} then {round})"
+                        ));
+                    }
+                }
+                entries.push((round, canon_spec(spec.trim())?));
+            }
+            if entries.is_empty() {
+                return Err("--adapt at: needs at least one R=<spec> entry".into());
+            }
+            return Ok(AdaptPlan::Forced(entries));
+        }
+        if let Some(body) = s.strip_prefix("ladder:") {
+            let mut parts = body.split(';');
+            let rungs: Vec<String> = parts
+                .next()
+                .unwrap_or("")
+                .split(',')
+                .filter(|r| !r.trim().is_empty())
+                .map(|r| canon_spec(r.trim()))
+                .collect::<Result<_, _>>()?;
+            if rungs.len() < 2 {
+                return Err(
+                    "--adapt ladder: needs at least two rungs to step between".into()
+                );
+            }
+            let mut cooldown = 8usize;
+            let mut up_below = 150i64;
+            let mut down_above = 600i64;
+            for opt in parts {
+                let (key, val) = opt.split_once('=').ok_or_else(|| {
+                    format!("--adapt ladder: option '{opt}' is not key=value")
+                })?;
+                match key.trim() {
+                    "cooldown" => {
+                        cooldown = val.trim().parse().map_err(|_| {
+                            format!("--adapt ladder: cooldown '{val}' is not a number")
+                        })?;
+                        if cooldown == 0 {
+                            return Err("--adapt ladder: cooldown must be >= 1".into());
+                        }
+                    }
+                    "up-below" => {
+                        up_below = val.trim().parse().map_err(|_| {
+                            format!("--adapt ladder: up-below '{val}' is not a number")
+                        })?;
+                    }
+                    "down-above" => {
+                        down_above = val.trim().parse().map_err(|_| {
+                            format!("--adapt ladder: down-above '{val}' is not a number")
+                        })?;
+                    }
+                    other => {
+                        return Err(format!(
+                            "--adapt ladder: unknown option '{other}' \
+                             (cooldown, up-below, down-above)"
+                        ))
+                    }
+                }
+            }
+            if up_below >= down_above {
+                return Err(format!(
+                    "--adapt ladder: up-below ({up_below}) must be strictly below \
+                     down-above ({down_above}) — the gap is the hysteresis band"
+                ));
+            }
+            return Ok(AdaptPlan::Ladder { rungs, cooldown, up_below, down_above });
+        }
+        Err(format!(
+            "--adapt: unknown directive '{s}' (expected at:R=<spec>,... or \
+             ladder:<spec>,<spec>,...)"
+        ))
+    }
+
+    /// Build the controller this plan describes. `initial_uplink` is the
+    /// session's handshake-time uplink spec (canonical form); a ladder must
+    /// contain it so the controller knows its starting rung.
+    pub fn controller(&self, initial_uplink: &str) -> Result<Box<dyn Controller>, String> {
+        match self {
+            AdaptPlan::Forced(entries) => Ok(Box::new(ForcedScheduleController {
+                entries: entries.clone(),
+                next: 0,
+            })),
+            AdaptPlan::Ladder { rungs, cooldown, up_below, down_above } => {
+                let pos = rungs
+                    .iter()
+                    .position(|r| r == initial_uplink)
+                    .ok_or_else(|| {
+                        format!(
+                            "--adapt ladder: the session's uplink spec \
+                             '{initial_uplink}' is not one of the rungs \
+                             ({}) — the ladder must include the starting spec",
+                            rungs.join(",")
+                        )
+                    })?;
+                Ok(Box::new(EntropyBudgetController {
+                    rungs: rungs.clone(),
+                    pos,
+                    cooldown: *cooldown,
+                    up_below: *up_below,
+                    down_above: *down_above,
+                    since_last: 0,
+                }))
+            }
+        }
+    }
+}
+
+/// Plays back an explicit `at:R=<spec>` schedule. An entry fires at the
+/// first consulted boundary whose activation round reaches it — "at round
+/// R, or the first boundary after R once any earlier transition has
+/// settled" — so back-to-back entries are never silently dropped.
+pub struct ForcedScheduleController {
+    entries: Vec<(usize, String)>,
+    next: usize,
+}
+
+impl Controller for ForcedScheduleController {
+    fn decide(&mut self, round: usize, _obs: &RoundObs) -> Option<String> {
+        let (at, spec) = self.entries.get(self.next)?;
+        if *at <= round + ACTIVATION_LEAD {
+            self.next += 1;
+            return Some(spec.clone());
+        }
+        None
+    }
+
+    fn label(&self) -> &'static str {
+        "forced-schedule"
+    }
+}
+
+/// The default telemetry-driven policy: walk an ordered rung list (least →
+/// most aggressive compression) on the windowed uplink channel-entropy
+/// variance. A stable activation distribution (variance at or below
+/// `up_below` milli-bits) means harder compression is safe; a drifting one
+/// (at or above `down_above`) steps back toward fidelity. In between the
+/// controller holds — the dead band plus the `cooldown` round count is the
+/// anti-flip-flop discipline.
+pub struct EntropyBudgetController {
+    rungs: Vec<String>,
+    pos: usize,
+    cooldown: usize,
+    up_below: i64,
+    down_above: i64,
+    since_last: usize,
+}
+
+impl Controller for EntropyBudgetController {
+    fn decide(&mut self, _round: usize, obs: &RoundObs) -> Option<String> {
+        self.since_last += 1;
+        if self.since_last < self.cooldown {
+            return None;
+        }
+        if obs.entropy_var_milli <= self.up_below && self.pos + 1 < self.rungs.len() {
+            self.pos += 1;
+            self.since_last = 0;
+            return Some(self.rungs[self.pos].clone());
+        }
+        if obs.entropy_var_milli >= self.down_above && self.pos > 0 {
+            self.pos -= 1;
+            self.since_last = 0;
+            return Some(self.rungs[self.pos].clone());
+        }
+        None
+    }
+
+    fn label(&self) -> &'static str {
+        "entropy-budget"
+    }
+}
+
+/// One server-side stream-table epoch: `set` serves every round from
+/// `from_round` until the next epoch begins.
+struct Epoch {
+    from_round: usize,
+    set: StreamSet,
+}
+
+/// The server's per-round view of the stream table: epoch 0 is the
+/// handshake-negotiated set, later epochs are pushed by accepted
+/// transitions. Lookups are by round, so in-flight frames of a stale round
+/// (carried stragglers) decode/encode under the table that round ran with.
+pub struct SpecEpochs {
+    epochs: Vec<Epoch>,
+}
+
+impl SpecEpochs {
+    /// Wrap the handshake-negotiated set as epoch 0 (active from round 0).
+    pub fn new(initial: StreamSet) -> SpecEpochs {
+        SpecEpochs { epochs: vec![Epoch { from_round: 0, set: initial }] }
+    }
+
+    /// Devices served (identical across epochs).
+    pub fn devices(&self) -> usize {
+        self.epochs[0].set.devices()
+    }
+
+    /// The handshake-time spec table (epoch 0's).
+    pub fn initial_specs(&self) -> &StreamSpecs {
+        self.epochs[0].set.specs()
+    }
+
+    /// The most recently negotiated table (the last epoch's, whether or
+    /// not its activation round has been reached).
+    pub fn current_specs(&self) -> &StreamSpecs {
+        self.epochs.last().expect("never empty").set.specs()
+    }
+
+    /// The most recently negotiated stream set.
+    pub fn current(&self) -> &StreamSet {
+        &self.epochs.last().expect("never empty").set
+    }
+
+    /// Number of epochs negotiated so far (1 = never retuned).
+    pub fn len(&self) -> usize {
+        self.epochs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// The stream set serving `round`: the last epoch whose activation
+    /// round is `<= round`.
+    pub fn for_round(&mut self, round: usize) -> &mut StreamSet {
+        let i = self
+            .epochs
+            .iter()
+            .rposition(|e| e.from_round <= round)
+            .expect("epoch 0 starts at round 0");
+        &mut self.epochs[i].set
+    }
+
+    /// The set owning the session-long sync-stream instances. Sync codecs
+    /// are stateful across the whole session and never renegotiated, so
+    /// they always live in epoch 0 regardless of data-stream transitions.
+    pub fn sync_set(&mut self) -> &mut StreamSet {
+        &mut self.epochs[0].set
+    }
+
+    /// The spec table active for `round`, rendered for the round CSV.
+    pub fn active_table(&self, round: usize) -> String {
+        let i = self
+            .epochs
+            .iter()
+            .rposition(|e| e.from_round <= round)
+            .expect("epoch 0 starts at round 0");
+        self.epochs[i].set.specs().table()
+    }
+
+    /// Install a new epoch activating at `from_round` (strictly after the
+    /// last epoch's activation round).
+    pub fn push(&mut self, from_round: usize, set: StreamSet) {
+        debug_assert!(
+            from_round > self.epochs.last().expect("never empty").from_round,
+            "epochs must activate in increasing round order"
+        );
+        self.epochs.push(Epoch { from_round, set });
+    }
+}
+
+/// A pushed-but-unsettled transition: the server holds new epochs here
+/// until every device has acked.
+pub struct PendingUpdate {
+    pub activate: usize,
+    pub fp: u64,
+    /// per-local-slot "ack still owed" flags
+    pub unacked: Vec<bool>,
+}
+
+impl PendingUpdate {
+    pub fn fully_acked(&self) -> bool {
+        self.unacked.iter().all(|&u| !u)
+    }
+}
+
+/// The server's adaptation state: the controller plus the in-flight
+/// transition (at most one — the controller is not consulted again until
+/// the previous push is fully acked).
+pub struct AdaptState {
+    pub controller: Box<dyn Controller>,
+    pub pending: Option<PendingUpdate>,
+}
+
+impl AdaptState {
+    /// Parse an `--adapt` directive and bind it to the session's initial
+    /// spec table.
+    pub fn from_directive(directive: &str, initial: &StreamSpecs) -> Result<AdaptState, String> {
+        let plan = AdaptPlan::parse(directive)?;
+        let controller = plan.controller(initial.uplink.as_str())?;
+        Ok(AdaptState { controller, pending: None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::slacc::SlAccConfig;
+    use crate::codecs::stream::SessionStreamCfg;
+
+    fn obs(var: i64) -> RoundObs {
+        RoundObs {
+            ratio_up: 4.0,
+            ratio_down: 4.0,
+            entropy_mean_milli: 2500,
+            entropy_var_milli: var,
+            max_wait_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn parse_forced_schedule() {
+        let p = AdaptPlan::parse("at:4=uniform4,9=none").unwrap();
+        // specs canonicalize (none -> identity)
+        assert_eq!(
+            p,
+            AdaptPlan::Forced(vec![(4, "uniform4".into()), (9, "identity".into())])
+        );
+        assert!(AdaptPlan::parse("at:").is_err());
+        assert!(AdaptPlan::parse("at:4").is_err(), "missing =spec");
+        assert!(AdaptPlan::parse("at:1=uniform4").is_err(), "too early");
+        assert!(AdaptPlan::parse("at:5=uniform4,5=uniform2").is_err(), "not increasing");
+        assert!(AdaptPlan::parse("at:5=bogus").is_err(), "unknown spec");
+    }
+
+    #[test]
+    fn parse_ladder() {
+        let p = AdaptPlan::parse("ladder:uniform8,uniform4").unwrap();
+        assert_eq!(
+            p,
+            AdaptPlan::Ladder {
+                rungs: vec!["uniform8".into(), "uniform4".into()],
+                cooldown: 8,
+                up_below: 150,
+                down_above: 600,
+            }
+        );
+        let p =
+            AdaptPlan::parse("ladder:slacc,uniform4;cooldown=3;up-below=50;down-above=90")
+                .unwrap();
+        assert_eq!(
+            p,
+            AdaptPlan::Ladder {
+                rungs: vec!["slacc".into(), "uniform4".into()],
+                cooldown: 3,
+                up_below: 50,
+                down_above: 90,
+            }
+        );
+        assert!(AdaptPlan::parse("ladder:uniform8").is_err(), "one rung");
+        assert!(AdaptPlan::parse("ladder:uniform8,bogus").is_err());
+        assert!(AdaptPlan::parse("ladder:a8,a4;cooldown=0").is_err());
+        assert!(
+            AdaptPlan::parse("ladder:uniform8,uniform4;up-below=600;down-above=600")
+                .is_err(),
+            "no hysteresis band"
+        );
+        assert!(AdaptPlan::parse("ladder:uniform8,uniform4;wat=1").is_err());
+        assert!(AdaptPlan::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn forced_controller_fires_in_order_and_carries_late_entries() {
+        let plan = AdaptPlan::parse("at:4=uniform4,5=uniform2").unwrap();
+        let mut c = plan.controller("uniform8").unwrap();
+        assert_eq!(c.decide(0, &obs(0)), None, "round 4 needs close of >= 2");
+        assert_eq!(c.decide(1, &obs(0)), None);
+        assert_eq!(c.decide(2, &obs(0)), Some("uniform4".into()));
+        // entry 5 wanted the close of round 3, but the first transition was
+        // still settling; it fires at the next consulted boundary instead
+        // of being dropped
+        assert_eq!(c.decide(4, &obs(0)), Some("uniform2".into()));
+        assert_eq!(c.decide(5, &obs(0)), None, "schedule exhausted");
+    }
+
+    #[test]
+    fn ladder_requires_the_starting_rung() {
+        let plan = AdaptPlan::parse("ladder:uniform8,uniform4").unwrap();
+        assert!(plan.controller("slacc").is_err());
+        assert!(plan.controller("uniform8").is_ok());
+    }
+
+    #[test]
+    fn ladder_steps_up_on_stable_entropy_with_cooldown() {
+        let plan =
+            AdaptPlan::parse("ladder:uniform8,uniform4,uniform2;cooldown=3").unwrap();
+        let mut c = plan.controller("uniform8").unwrap();
+        assert_eq!(c.decide(0, &obs(0)), None, "cooldown");
+        assert_eq!(c.decide(1, &obs(0)), None, "cooldown");
+        assert_eq!(c.decide(2, &obs(0)), Some("uniform4".into()));
+        assert_eq!(c.decide(3, &obs(0)), None, "cooldown restarts");
+        assert_eq!(c.decide(4, &obs(0)), None);
+        assert_eq!(c.decide(5, &obs(0)), Some("uniform2".into()));
+        // top of the ladder: stable entropy no longer steps
+        assert_eq!(c.decide(8, &obs(0)), None);
+        assert_eq!(c.decide(9, &obs(0)), None);
+    }
+
+    #[test]
+    fn ladder_steps_down_on_drift_and_holds_in_the_dead_band() {
+        let plan = AdaptPlan::parse(
+            "ladder:uniform8,uniform4;cooldown=1;up-below=100;down-above=500",
+        )
+        .unwrap();
+        let mut c = plan.controller("uniform4").unwrap();
+        // dead band: between the thresholds nothing moves
+        assert_eq!(c.decide(0, &obs(300)), None);
+        assert_eq!(c.decide(1, &obs(499)), None);
+        assert_eq!(c.decide(2, &obs(101)), None);
+        // drift: step down toward fidelity
+        assert_eq!(c.decide(3, &obs(500)), Some("uniform8".into()));
+        // bottom of the ladder: drift cannot step further
+        assert_eq!(c.decide(4, &obs(9999)), None);
+        // stable again: climb back
+        assert_eq!(c.decide(5, &obs(100)), Some("uniform4".into()));
+    }
+
+    #[test]
+    fn retuned_specs_follow_the_uplink_but_pin_identity_downlink_and_sync() {
+        let both = StreamSpecs::parse("slacc", "slacc", "identity").unwrap();
+        let r = retuned_specs(&both, "uniform4").unwrap();
+        assert_eq!(r.table(), "uplink=uniform4 downlink=uniform4 sync=identity");
+
+        let nograd = StreamSpecs::parse("slacc", "identity", "uniform8").unwrap();
+        let r = retuned_specs(&nograd, "uniform4").unwrap();
+        assert_eq!(r.table(), "uplink=uniform4 downlink=identity sync=uniform8");
+
+        assert!(retuned_specs(&both, "bogus").is_err());
+    }
+
+    #[test]
+    fn spec_epochs_serve_rounds_by_activation() {
+        let cfg = SessionStreamCfg {
+            channels: 4,
+            total_rounds: 20,
+            seed: 7,
+            slacc: SlAccConfig::default(),
+            alpha: None,
+        };
+        let a = StreamSpecs::parse("uniform8", "uniform8", "identity").unwrap();
+        let b = StreamSpecs::parse("uniform4", "uniform4", "identity").unwrap();
+        let set = StreamSet::build(a.clone(), &cfg, 2).unwrap();
+        let mut ep = SpecEpochs::new(set);
+        assert_eq!(ep.len(), 1);
+        assert_eq!(ep.devices(), 2);
+        let next = ep.current().rebuilt(b.clone()).unwrap();
+        ep.push(5, next);
+        assert_eq!(ep.len(), 2);
+        // rounds below the activation round stay on the old table
+        assert_eq!(ep.for_round(4).specs(), &a);
+        assert_eq!(ep.for_round(5).specs(), &b);
+        assert_eq!(ep.for_round(19).specs(), &b);
+        assert_eq!(ep.active_table(4), a.table());
+        assert_eq!(ep.active_table(5), b.table());
+        // sync instances are pinned to epoch 0
+        assert_eq!(ep.sync_set().specs(), &a);
+        assert_eq!(ep.current_specs(), &b);
+        assert_eq!(ep.initial_specs(), &a);
+    }
+
+    #[test]
+    fn rebuilt_sets_are_seed_identical_twins() {
+        use crate::codecs::RoundCtx;
+        let cfg = SessionStreamCfg {
+            channels: 4,
+            total_rounds: 20,
+            seed: 7,
+            slacc: SlAccConfig::default(),
+            alpha: None,
+        };
+        let a = StreamSpecs::parse("uniform8", "uniform8", "identity").unwrap();
+        let b = StreamSpecs::parse("randtopk", "randtopk", "identity").unwrap();
+        let set = StreamSet::build(a, &cfg, 2).unwrap();
+        let mut rebuilt = set.rebuilt(b.clone()).unwrap();
+        // the device side builds fresh DeviceStreams from the same seeds:
+        // a stochastic codec must produce identical envelopes on both ends
+        let mut device_side =
+            crate::codecs::stream::DeviceStreams::build(&b, &cfg, 1).unwrap();
+        let cm = crate::codecs::test_support::random_cm(3, 4, 2, 2, 1);
+        let w_srv = rebuilt.device(1).up.compress(&cm, RoundCtx::default());
+        let w_dev = device_side.up.compress(&cm, RoundCtx::default());
+        assert_eq!(w_srv, w_dev);
+    }
+
+    #[test]
+    fn pending_update_ack_tracking() {
+        let mut p = PendingUpdate { activate: 6, fp: 1, unacked: vec![true; 3] };
+        assert!(!p.fully_acked());
+        p.unacked[0] = false;
+        p.unacked[2] = false;
+        assert!(!p.fully_acked());
+        p.unacked[1] = false;
+        assert!(p.fully_acked());
+    }
+}

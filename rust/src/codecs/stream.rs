@@ -436,6 +436,10 @@ impl DeviceStreams {
 pub struct StreamSet {
     specs: StreamSpecs,
     streams: Vec<DeviceStreams>,
+    /// build parameters retained so [`StreamSet::rebuilt`] can produce a
+    /// sibling set (same fleet slice, new spec table) mid-session
+    session: SessionStreamCfg,
+    base: usize,
 }
 
 impl StreamSet {
@@ -463,7 +467,16 @@ impl StreamSet {
         for d in base..base + count {
             streams.push(DeviceStreams::build(&specs, cfg, d)?);
         }
-        Ok(StreamSet { specs, streams })
+        Ok(StreamSet { specs, streams, session: *cfg, base })
+    }
+
+    /// Build a sibling set for the same fleet slice (same session
+    /// parameters, same global-id range) under a re-negotiated spec table.
+    /// Stream seeds are a pure function of seed + device + direction, so
+    /// the server-side instances built here are exact twins of the fresh
+    /// [`DeviceStreams`] each device builds when it activates the update.
+    pub fn rebuilt(&self, specs: StreamSpecs) -> Result<StreamSet, CodecError> {
+        StreamSet::build_range(specs, &self.session, self.base, self.streams.len())
     }
 
     /// The negotiated spec table this set was built from.

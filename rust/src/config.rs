@@ -111,6 +111,12 @@ pub struct ExperimentConfig {
     /// `--shard-sync-every`: cross-shard FedAvg cadence in rounds (only
     /// meaningful with `--shards > 1`). Fingerprinted for the same reason.
     pub shard_sync_every: usize,
+    /// `--adapt`: runtime renegotiation directive (`at:R=<spec>,...` or
+    /// `ladder:<spec>,...`; see [`crate::adapt::AdaptPlan`]). None = the
+    /// negotiated spec table is fixed for the session (the historical
+    /// behavior). Fingerprinted: both ends must agree on whether the
+    /// session may retune mid-run.
+    pub adapt: Option<String>,
 }
 
 impl ExperimentConfig {
@@ -144,6 +150,7 @@ impl ExperimentConfig {
             batch_window: 1,
             shards: 1,
             shard_sync_every: 1,
+            adapt: None,
         }
     }
 
@@ -169,7 +176,7 @@ impl ExperimentConfig {
     }
 
     /// The shared session parameters every stream build uses.
-    fn session_stream_cfg(&self, channels: usize) -> SessionStreamCfg {
+    pub(crate) fn session_stream_cfg(&self, channels: usize) -> SessionStreamCfg {
         SessionStreamCfg {
             channels,
             total_rounds: self.rounds,
@@ -277,6 +284,7 @@ impl ExperimentConfig {
             schedule: self.schedule,
             batch_window: self.batch_window,
             specs: self.stream_specs()?,
+            adapt: self.adapt.clone(),
         })
     }
 
@@ -301,7 +309,7 @@ impl ExperimentConfig {
             .map(|s| s.table())
             .unwrap_or_else(|e| format!("invalid({e})"));
         let repr = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}|{}|{}|{}|{}",
             self.dataset,
             self.seed,
             self.lr.to_bits(),
@@ -324,6 +332,7 @@ impl ExperimentConfig {
             self.batch_window,
             self.shards,
             self.shard_sync_every,
+            self.adapt.as_deref().unwrap_or("-"),
         );
         crate::codecs::stream::fnv1a(&repr)
     }
@@ -391,7 +400,19 @@ impl ExperimentConfig {
         }
         self.topology().validate(self.devices, self.client_agg_every)?;
         // parses (and therefore registry-validates) all three stream specs
-        self.stream_specs()?;
+        let specs = self.stream_specs()?;
+        if let Some(directive) = self.adapt.as_deref() {
+            if self.shards > 1 {
+                return Err(
+                    "--adapt is single-server only (cross-shard epoch agreement \
+                     is not coordinated yet)"
+                        .into(),
+                );
+            }
+            // full parse + ladder/initial-spec consistency, same path the
+            // server runtime takes at session start
+            crate::adapt::AdaptState::from_directive(directive, &specs)?;
+        }
         if let Policy::ArrivalOrder { straggler_timeout_s, min_quorum } = self.schedule {
             if let Some(t) = straggler_timeout_s {
                 if !(t > 0.0) {

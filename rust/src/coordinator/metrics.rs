@@ -33,6 +33,9 @@ pub struct RoundRecord {
     pub sim_time_s: f64,
     /// real wall-clock milliseconds spent on this round
     pub wall_ms: f64,
+    /// the spec table active for this round (changes mid-session only
+    /// under `--adapt`; see [`crate::adapt`])
+    pub spec: String,
 }
 
 /// Result of a completed training session (in-process or over a real
@@ -222,15 +225,15 @@ impl MetricsLog {
         // distributed-parity checks parse by index; new axes go at the end
         let mut out = String::from(
             "round,loss,accuracy,bytes_up,bytes_down,sim_time_s,wall_ms,bytes_sync,\
-             stragglers,ratio_up,ratio_down,ratio_sync\n",
+             stragglers,ratio_up,ratio_down,ratio_sync,active_spec\n",
         );
         for r in &self.records {
             let acc = r.accuracy.map_or(String::new(), |a| format!("{a:.6}"));
             out.push_str(&format!(
-                "{},{:.6},{},{},{},{:.4},{:.1},{},{},{:.3},{:.3},{:.3}\n",
+                "{},{:.6},{},{},{},{:.4},{:.1},{},{},{:.3},{:.3},{:.3},{}\n",
                 r.round, r.loss, acc, r.bytes_up, r.bytes_down, r.sim_time_s,
                 r.wall_ms, r.bytes_sync, r.stragglers, r.ratio_up(),
-                r.ratio_down(), r.ratio_sync()
+                r.ratio_down(), r.ratio_sync(), r.spec
             ));
         }
         out
@@ -258,6 +261,7 @@ impl MetricsLog {
                         ("stragglers", Json::Num(r.stragglers as f64)),
                         ("sim_time_s", Json::Num(r.sim_time_s)),
                         ("wall_ms", Json::Num(r.wall_ms)),
+                        ("active_spec", Json::Str(r.spec.clone())),
                     ])
                 })
                 .collect(),
@@ -291,6 +295,7 @@ mod tests {
             stragglers: 0,
             sim_time_s: t,
             wall_ms: 1.0,
+            spec: "uplink=slacc downlink=slacc sync=identity".into(),
         }
     }
 

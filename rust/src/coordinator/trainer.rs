@@ -146,6 +146,7 @@ pub fn engine_worker(
         EngineCompute::new(engine, cfg.entropy_via_kernel),
         Arc::new(train),
         cfg,
+        geom.channels,
     )
 }
 
@@ -198,6 +199,7 @@ impl Trainer {
                 EngineCompute::new(engine.clone(), cfg.entropy_via_kernel),
                 train.clone(),
                 &cfg,
+                geom.channels,
             )?);
             let (dev_end, srv_end) = loopback::pair(&format!("dev{d}"));
             dev_conns.push(dev_end);

@@ -1,8 +1,7 @@
 //! 1-D entropy-grouping substrate for CGC (paper Eq. 4).
 //!
 //! (Renamed from `cluster` — "cluster" now means the multi-server
-//! topology tier, [`crate::shard`]; a deprecated `crate::cluster` alias
-//! re-exports this module for downstream callers.)
+//! topology tier, [`crate::shard`].)
 //!
 //! CGC groups per-channel entropies — scalars — into `g` clusters via
 //! 1-D k-means. Two implementations:

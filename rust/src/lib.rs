@@ -19,6 +19,7 @@
 //! Python never runs on the request path: the [`runtime`] module loads the
 //! AOT artifacts through PJRT and the coordinator drives them from Rust.
 
+pub mod adapt;
 pub mod bench;
 pub mod cli;
 pub mod codecs;
@@ -36,15 +37,3 @@ pub mod shard;
 pub mod tensor;
 pub mod transport;
 pub mod util;
-
-/// Deprecated alias of [`grouping`], kept for downstream callers. The 1-D
-/// k-means substrate was renamed so "cluster" unambiguously means the
-/// multi-server topology tier ([`shard`]) going forward.
-#[deprecated(
-    since = "0.2.0",
-    note = "renamed to `grouping`; `cluster` now refers to the multi-server \
-            topology tier (see the `shard` module)"
-)]
-pub mod cluster {
-    pub use crate::grouping::*;
-}

@@ -126,6 +126,10 @@ fn print_help() {
            --sync-codec SPEC       codec for ModelSync traffic [identity]\n\
            --shards M              split the fleet across M shard servers [1]\n\
            --shard-sync-every K    cross-shard FedAvg cadence in rounds [1]\n\
+           --adapt DIRECTIVE       retune data-stream codecs mid-session:\n\
+                                   at:R=SPEC,... (forced schedule) or\n\
+                                   ladder:SPEC,SPEC,...[;cooldown=N] (telemetry\n\
+                                   control loop) [off]\n\
          serve flags (train flags plus):\n\
            --bind ADDR             device listen address   [127.0.0.1:7878]\n\
            --mock                  mock model (no PJRT artifacts needed)\n\
@@ -220,6 +224,7 @@ fn config_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
     cfg.shard_sync_every = args.usize_or("shard-sync-every", cfg.shard_sync_every);
     cfg.uplink_codec = args.str_opt("uplink-codec");
     cfg.downlink_codec = args.str_opt("downlink-codec");
+    cfg.adapt = args.str_opt("adapt");
 
     if let Some(sel) = args.str_opt("select") {
         use slacc::codecs::selection::Selection;

@@ -137,7 +137,7 @@ const DEVICE_STAGES: &[&str] = &[
 ];
 
 /// Round-scoped stages that follow the per-device chain.
-const ROUND_STAGES: &[&str] = &["fedavg", "eval", "shard_barrier"];
+const ROUND_STAGES: &[&str] = &["fedavg", "eval", "shard_barrier", "spec_update"];
 
 /// Parse one trace file's text (header row, span rows, dropped rows).
 pub fn parse_trace(path: &str, text: &str) -> Result<NodeTrace, String> {

@@ -264,6 +264,7 @@ fn close_round<C: Compute>(
         round,
         loss,
         accuracy,
+        spec: rt.streams.active_table(round),
         bytes_up: cost.bytes_up,
         bytes_down: cost.bytes_down,
         bytes_sync: cost.bytes_sync + shard_wire,
@@ -345,7 +346,17 @@ fn run_in_order<C: Compute>(
         let mut sync_down = vec![0usize; n];
         let mut loss_sum = 0.0f64;
         for d in 0..n {
-            let msg = fleet.recv_from(d)?;
+            // a SpecUpdate pushed at the previous round's close is acked
+            // before the device's first frame of any later round; consume
+            // the ack(s) queued ahead of this round's Activations
+            let msg = loop {
+                match fleet.recv_from(d)? {
+                    Message::SpecUpdateAck { activate_round, streams_fp } => {
+                        rt.accept_spec_ack(d, activate_round as usize, streams_fp)?;
+                    }
+                    m => break m,
+                }
+            };
             let (r2, dev, labels, payload) = match msg {
                 Message::Activations { round, device_id, labels, payload } => {
                     (round as usize, device_id as usize, labels, payload)
@@ -363,6 +374,7 @@ fn run_in_order<C: Compute>(
                     rt.cfg.gid(d)
                 ));
             }
+            rt.spec_ack_gate(d, round)?;
             up[d] = payload.len();
             // always a single-item batch: InOrder's contract is
             // message-for-message determinism, which a >1 window would
@@ -460,6 +472,7 @@ fn run_in_order<C: Compute>(
         if stop {
             break;
         }
+        rt.adapt_after_close(round, fleet, 0.0)?;
     }
     Ok(SchedOutcome { rounds_run, time_to_target_s: time_to_target })
 }
@@ -648,6 +661,7 @@ fn run_arrival<C: Compute>(
                              was opened for {oround}"
                         ));
                     }
+                    rt.spec_ack_gate(d, oround)?;
                     up[d] += payload.len();
                     active[d] = true;
                     wait_s[d] = fleet.now_s() - opened_at;
@@ -709,6 +723,9 @@ fn run_arrival<C: Compute>(
                     // charges the sync bytes themselves. The loop top
                     // opens it for this round if nobody has opened yet.
                     phase[d] = Phase::Idle;
+                }
+                Message::SpecUpdateAck { activate_round, streams_fp } => {
+                    rt.accept_spec_ack(d, activate_round as usize, streams_fp)?;
                 }
                 other => {
                     return Err(format!(
@@ -797,6 +814,8 @@ fn run_arrival<C: Compute>(
         if stop {
             break;
         }
+        let max_wait = wait_s.iter().cloned().fold(0.0f64, f64::max);
+        rt.adapt_after_close(round, fleet, max_wait)?;
     }
     Ok(SchedOutcome { rounds_run, time_to_target_s: time_to_target })
 }

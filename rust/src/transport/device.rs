@@ -14,7 +14,9 @@
 
 use std::sync::Arc;
 
-use crate::codecs::stream::{record_decode, record_encode, StreamKind, StreamSpecs};
+use crate::codecs::stream::{
+    record_decode, record_encode, DeviceStreams, SessionStreamCfg, StreamKind, StreamSpecs,
+};
 use crate::codecs::RoundCtx;
 use crate::config::ExperimentConfig;
 use crate::coordinator::device::DeviceState;
@@ -41,8 +43,20 @@ pub struct DeviceWorker<C: Compute> {
     rounds: usize,
     lr: f32,
     session_fp: u64,
-    /// the negotiated per-stream spec table (declared in the Hello)
+    /// the negotiated per-stream spec table (declared in the Hello;
+    /// replaced when a [`Message::SpecUpdate`] activates)
     specs: StreamSpecs,
+    /// session stream-build parameters, retained so a SpecUpdate can
+    /// rebuild [`DeviceStreams`] mid-session with the original seeds
+    stream_cfg: SessionStreamCfg,
+    /// acked SpecUpdates not yet activated, ordered by activation round.
+    /// A queue (not an `Option`): the server may push update N+1 as soon
+    /// as update N is fully acked, before a carried straggler has seen
+    /// N's activation round.
+    pending_specs: Vec<(u32, StreamSpecs)>,
+    /// highest round the server has opened on this device — SpecUpdates
+    /// must activate strictly after it
+    latest_open: Option<u32>,
     /// reusable flatten/envelope scratch for the ModelSync pushes (one
     /// allocation per push — the frame-owned payload)
     sync_scratch: sync::SyncScratch,
@@ -56,9 +70,11 @@ impl<C: Compute> DeviceWorker<C> {
         compute: C,
         data: Arc<Dataset>,
         cfg: &ExperimentConfig,
+        channels: usize,
     ) -> Result<DeviceWorker<C>, String> {
         let session_fp = super::session_fingerprint(cfg.fingerprint(), compute.kind());
         let specs = cfg.stream_specs()?;
+        let stream_cfg = cfg.session_stream_cfg(channels);
         Ok(DeviceWorker {
             compute,
             data,
@@ -68,6 +84,9 @@ impl<C: Compute> DeviceWorker<C> {
             lr: cfg.lr,
             session_fp,
             specs,
+            stream_cfg,
+            pending_specs: Vec::new(),
+            latest_open: None,
             sync_scratch: sync::SyncScratch::default(),
             pending: None,
             done: false,
@@ -131,6 +150,8 @@ impl<C: Compute> DeviceWorker<C> {
                 if self.pending.is_some() {
                     return Err(format!("device {me}: RoundOpen {round} while a round is open"));
                 }
+                self.latest_open = Some(round);
+                self.apply_due_spec_updates(round)?;
                 // stage i: client forward on the next local batch
                 let idx = self.state.loader.next_batch();
                 let (x, y) = self.data.batch(&idx);
@@ -263,6 +284,47 @@ impl<C: Compute> DeviceWorker<C> {
                 }
                 Ok(Vec::new())
             }
+            Message::SpecUpdate { activate_round, uplink, downlink, sync, streams_fp } => {
+                let next = StreamSpecs::parse(&uplink, &downlink, &sync)
+                    .map_err(|e| format!("device {me}: SpecUpdate: {e}"))?;
+                if next.fingerprint() != streams_fp {
+                    return Err(format!(
+                        "device {me}: SpecUpdate digest {streams_fp:#018x} does not match \
+                         its spec strings ({})",
+                        next.table()
+                    ));
+                }
+                if next.sync.as_str() != self.specs.sync.as_str() {
+                    return Err(format!(
+                        "device {me}: SpecUpdate changes the sync stream ({} -> {}); \
+                         sync codecs are session-long",
+                        self.specs.sync.as_str(),
+                        next.sync.as_str()
+                    ));
+                }
+                if let Some(open) = self.latest_open {
+                    if activate_round <= open {
+                        return Err(format!(
+                            "device {me}: SpecUpdate activates at round {activate_round}, \
+                             but round {open} is already open"
+                        ));
+                    }
+                }
+                if let Some(&(last, _)) = self.pending_specs.last() {
+                    if activate_round <= last {
+                        return Err(format!(
+                            "device {me}: SpecUpdate activates at round {activate_round}, \
+                             not after the queued update at round {last}"
+                        ));
+                    }
+                }
+                crate::log_info!(
+                    "device {me}: spec update queued for round {activate_round}: {}",
+                    next.table()
+                );
+                self.pending_specs.push((activate_round, next));
+                Ok(vec![Message::SpecUpdateAck { activate_round, streams_fp }])
+            }
             Message::Shutdown { reason } => {
                 crate::log_debug!("device {me}: shutdown ({reason})");
                 self.done = true;
@@ -273,6 +335,28 @@ impl<C: Compute> DeviceWorker<C> {
                 other.type_name()
             )),
         }
+    }
+
+    /// Activate every queued spec update due by `round`. Only the last
+    /// applicable table is built (intermediate epochs were never used on
+    /// the wire for this device — the server skips them identically).
+    /// Data codecs are rebuilt from the session seeds; the sync pair is
+    /// carried over, since sync codecs are stateful and session-long.
+    fn apply_due_spec_updates(&mut self, round: u32) -> Result<(), String> {
+        let due = self.pending_specs.iter().take_while(|(at, _)| *at <= round).count();
+        if due == 0 {
+            return Ok(());
+        }
+        let (_, specs) = self.pending_specs.drain(..due).last().unwrap();
+        let me = self.state.id;
+        let mut fresh = DeviceStreams::build(&specs, &self.stream_cfg, me)
+            .map_err(|e| format!("device {me}: spec update activation: {e}"))?;
+        std::mem::swap(&mut fresh.sync_up, &mut self.state.streams.sync_up);
+        std::mem::swap(&mut fresh.sync_down, &mut self.state.streams.sync_down);
+        self.state.streams = fresh;
+        crate::log_info!("device {me}: spec update active from round {round}: {}", specs.table());
+        self.specs = specs;
+        Ok(())
     }
 }
 
@@ -334,5 +418,5 @@ pub fn mock_worker(
         cfg.device_streams(channels, id)?,
     );
     let classes = train.classes;
-    DeviceWorker::new(state, MockCompute::new(classes), train, cfg)
+    DeviceWorker::new(state, MockCompute::new(classes), train, cfg, channels)
 }

@@ -34,8 +34,10 @@ pub const FRAME_MAGIC: u32 = 0x534C_4143;
 /// Hello's single codec string with the full per-stream spec table; v3
 /// added the shard-tier frames (ShardHello/ShardSync) for multi-server
 /// topologies; v4 added the telemetry roll-up blob to ShardSync so the
-/// coordinator can report cluster-wide counter totals.
-pub const PROTO_VERSION: u8 = 4;
+/// coordinator can report cluster-wide counter totals; v5 added the
+/// runtime renegotiation frames (SpecUpdate/SpecUpdateAck) that swap the
+/// per-stream codec table mid-session at an agreed round boundary.
+pub const PROTO_VERSION: u8 = 5;
 /// Fixed frame-header size in bytes (magic + version + type + body_len).
 pub const FRAME_HEADER_BYTES: usize = 4 + 1 + 1 + 4;
 /// Hard cap on a frame body: 1 GiB, matching the payload header's
@@ -57,6 +59,8 @@ pub mod msg_type {
     pub const SHUTDOWN: u8 = 7;
     pub const SHARD_HELLO: u8 = 8;
     pub const SHARD_SYNC: u8 = 9;
+    pub const SPEC_UPDATE: u8 = 10;
+    pub const SPEC_UPDATE_ACK: u8 = 11;
 }
 
 /// One SL-protocol message.
@@ -144,6 +148,31 @@ pub enum Message {
         /// coordinator's replies (and from pre-telemetry peers)
         metrics: Vec<u8>,
     },
+    /// server → device: runtime renegotiation (proto v5). The control loop
+    /// ([`crate::adapt`]) re-negotiated the per-stream codec table; every
+    /// device must swap its streams atomically at the start of round
+    /// `activate_round`. Pushed at a round boundary, at least one full
+    /// round before activation, and acked ([`Message::SpecUpdateAck`])
+    /// before the device's first frame of the activation round. Frames for
+    /// rounds below `activate_round` (including carried stragglers
+    /// finishing a stale round) keep using the old table. The digest is
+    /// cross-checked against the spec strings on receipt, exactly like
+    /// Hello's.
+    SpecUpdate {
+        activate_round: u32,
+        /// canonical spec of the new uplink stream
+        uplink: String,
+        /// canonical spec of the new downlink stream
+        downlink: String,
+        /// canonical spec of the new ModelSync streams
+        sync: String,
+        /// [`crate::codecs::stream::StreamSpecs::fingerprint`] of the table
+        streams_fp: u64,
+    },
+    /// device → server: the device accepted a [`Message::SpecUpdate`] and
+    /// will swap at `activate_round`. Echoes the update's round + digest so
+    /// the server can match the ack against the transition it pushed.
+    SpecUpdateAck { activate_round: u32, streams_fp: u64 },
 }
 
 impl Message {
@@ -158,6 +187,8 @@ impl Message {
             Message::Shutdown { .. } => msg_type::SHUTDOWN,
             Message::ShardHello { .. } => msg_type::SHARD_HELLO,
             Message::ShardSync { .. } => msg_type::SHARD_SYNC,
+            Message::SpecUpdate { .. } => msg_type::SPEC_UPDATE,
+            Message::SpecUpdateAck { .. } => msg_type::SPEC_UPDATE_ACK,
         }
     }
 
@@ -172,6 +203,8 @@ impl Message {
             Message::Shutdown { .. } => "Shutdown",
             Message::ShardHello { .. } => "ShardHello",
             Message::ShardSync { .. } => "ShardSync",
+            Message::SpecUpdate { .. } => "SpecUpdate",
+            Message::SpecUpdateAck { .. } => "SpecUpdateAck",
         }
     }
 
@@ -242,6 +275,17 @@ impl Message {
                 write_blob(w, server);
                 write_blob(w, metrics);
             }
+            Message::SpecUpdate { activate_round, uplink, downlink, sync, streams_fp } => {
+                w.u32(*activate_round);
+                w.u64(*streams_fp);
+                write_str(w, uplink);
+                write_str(w, downlink);
+                write_str(w, sync);
+            }
+            Message::SpecUpdateAck { activate_round, streams_fp } => {
+                w.u32(*activate_round);
+                w.u64(*streams_fp);
+            }
         }
     }
 
@@ -306,6 +350,17 @@ impl Message {
                 server: read_blob(r)?,
                 metrics: read_blob(r)?,
             },
+            msg_type::SPEC_UPDATE => Message::SpecUpdate {
+                activate_round: r.u32()?,
+                streams_fp: r.u64()?,
+                uplink: read_str(r)?,
+                downlink: read_str(r)?,
+                sync: read_str(r)?,
+            },
+            msg_type::SPEC_UPDATE_ACK => Message::SpecUpdateAck {
+                activate_round: r.u32()?,
+                streams_fp: r.u64()?,
+            },
             other => return Err(format!("unknown message type {other}")),
         };
         Ok(msg)
@@ -368,7 +423,12 @@ fn read_frame_header(r: &mut ByteReader) -> Result<(u8, usize), String> {
     }
     let version = r.u8()?;
     if version != PROTO_VERSION {
-        return Err(format!("unsupported protocol version {version}"));
+        // name both versions: a v4 peer (pre-SpecUpdate) dialing a v5 node
+        // must learn exactly which side is stale, not just "unsupported"
+        return Err(format!(
+            "unsupported protocol version: peer speaks v{version}, this build \
+             speaks v{PROTO_VERSION}"
+        ));
     }
     let ty = r.u8()?;
     let body_len = r.u32()? as usize;
@@ -598,6 +658,17 @@ mod tests {
                 server: vec![8; 20],
                 metrics: vec![1, 0, 0, 0, 0],
             },
+            Message::SpecUpdate {
+                activate_round: 12,
+                uplink: "uniform4".into(),
+                downlink: "identity".into(),
+                sync: "identity".into(),
+                streams_fp: 0xfaca_de00_1234_5678,
+            },
+            Message::SpecUpdateAck {
+                activate_round: 12,
+                streams_fp: 0xfaca_de00_1234_5678,
+            },
         ]
     }
 
@@ -651,7 +722,11 @@ mod tests {
         assert!(Message::decode_frame(&bad).is_err());
         let mut bad = good.clone();
         bad[4] = 99; // version
-        assert!(Message::decode_frame(&bad).is_err());
+        let err = Message::decode_frame(&bad).unwrap_err();
+        // the rejection must name BOTH versions (a stale v4 peer needs to
+        // learn which side to upgrade)
+        assert!(err.contains("v99"), "{err}");
+        assert!(err.contains(&format!("v{PROTO_VERSION}")), "{err}");
         let mut bad = good.clone();
         bad[5] = 200; // type
         assert!(Message::decode_frame(&bad).is_err());
@@ -736,6 +811,67 @@ mod tests {
         }
         assert_eq!(out, samples());
         assert_eq!(dec.buffered(), 0);
+    }
+
+    #[test]
+    fn old_proto_v4_frame_rejected_by_name() {
+        // a pre-SpecUpdate peer: same framing, version byte 4
+        let mut frame = Message::RoundOpen { round: 0, sync: false }.encode_frame();
+        frame[4] = 4;
+        let err = Message::decode_frame(&frame).unwrap_err();
+        assert!(err.contains("v4"), "{err}");
+        assert!(err.contains("v5"), "{err}");
+        let mut dec = FrameDecoder::new();
+        dec.feed(&frame);
+        assert!(dec.next().unwrap_err().contains("v4"));
+    }
+
+    /// Systematic hostile-envelope fuzz for the v5 renegotiation frames:
+    /// every strict prefix truncation and every single-bit header flip of
+    /// a valid SpecUpdate/SpecUpdateAck must be rejected, never panic and
+    /// never decode to the original message.
+    #[test]
+    fn spec_update_prefix_truncations_and_header_bitflips_rejected() {
+        let frames = [
+            Message::SpecUpdate {
+                activate_round: 9,
+                uplink: "ef:slacc".into(),
+                downlink: "uniform8".into(),
+                sync: "identity".into(),
+                streams_fp: 0x1122_3344_5566_7788,
+            }
+            .encode_frame(),
+            Message::SpecUpdateAck {
+                activate_round: 9,
+                streams_fp: 0x1122_3344_5566_7788,
+            }
+            .encode_frame(),
+        ];
+        for frame in &frames {
+            for cut in 0..frame.len() {
+                assert!(
+                    Message::decode_frame(&frame[..cut]).is_err(),
+                    "prefix of {cut}/{} bytes accepted",
+                    frame.len()
+                );
+            }
+            let original = Message::decode_frame(frame).unwrap();
+            for byte in 0..FRAME_HEADER_BYTES {
+                for bit in 0..8 {
+                    let mut bad = frame.clone();
+                    bad[byte] ^= 1 << bit;
+                    match Message::decode_frame(&bad) {
+                        Err(_) => {}
+                        Ok(m) => panic!(
+                            "header bit {bit} of byte {byte} flipped, still \
+                             decoded as {} (original {})",
+                            m.type_name(),
+                            original.type_name()
+                        ),
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -22,6 +22,7 @@
 
 use std::sync::Arc;
 
+use crate::adapt::{self, AdaptState, PendingUpdate, RoundObs, SpecEpochs};
 use crate::codecs::stream::{
     record_decode, record_encode, StreamKind, StreamSet, StreamSpecs,
 };
@@ -82,6 +83,10 @@ pub struct ServeConfig {
     /// an identical table in their Hello (mismatches are rejected naming
     /// the offending stream)
     pub specs: StreamSpecs,
+    /// `--adapt`: runtime renegotiation directive (see [`crate::adapt`]);
+    /// None freezes the handshake table for the whole session (the
+    /// historical behavior)
+    pub adapt: Option<String>,
 }
 
 impl ServeConfig {
@@ -241,11 +246,14 @@ pub struct ServerRuntime<C: Compute> {
     pub(crate) cfg: ServeConfig,
     pub(crate) compute: C,
     pub(crate) server: ServerState,
-    /// every per-device, per-direction codec instance: decode twins for
-    /// the uplink/sync pushes (decoding is wire-driven, so fresh twins
-    /// mirror the devices' compressors exactly) and the compress-side
-    /// state for the downlink/sync broadcasts
-    pub(crate) streams: StreamSet,
+    /// every per-device, per-direction codec instance, organized as
+    /// per-round *epochs* ([`SpecEpochs`]): epoch 0 is the
+    /// handshake-negotiated table, later epochs are installed by accepted
+    /// `--adapt` transitions, and lookups key on the frame's round so
+    /// stale-round traffic (carried stragglers) is served under the table
+    /// its round ran with. Decode twins mirror the devices' compressors
+    /// exactly; sync streams are session-long and stay pinned to epoch 0.
+    pub(crate) streams: SpecEpochs,
     /// raw (pre-codec) f32 bytes moved this round per stream kind
     /// [uplink, downlink, sync] — drained by `take_round_raw` at each
     /// round close for the per-stream compression-ratio axis
@@ -279,6 +287,10 @@ pub struct ServerRuntime<C: Compute> {
     /// `--metrics-every`: periodic registry snapshots, written at round
     /// close (None unless the CLI attached one)
     pub(crate) snapshot: Option<SnapshotWriter>,
+    /// `--adapt`: the renegotiation control loop (controller + in-flight
+    /// transition), consulted at every round close; None runs the frozen
+    /// handshake table
+    pub(crate) adapt: Option<AdaptState>,
 }
 
 /// One device's uplink contribution awaiting the next batched dispatch:
@@ -320,12 +332,17 @@ impl<C: Compute> ServerRuntime<C> {
         if cfg.batch_window == 0 {
             return Err("batch window must be >= 1".into());
         }
+        let adapt = cfg
+            .adapt
+            .as_deref()
+            .map(|d| AdaptState::from_directive(d, &cfg.specs))
+            .transpose()?;
         let client_params = (0..cfg.devices).map(|_| None).collect();
         Ok(ServerRuntime {
             cfg,
             compute,
             server: ServerState::new(server_init),
-            streams,
+            streams: SpecEpochs::new(streams),
             raw_round: [0; 3],
             client_params,
             weights: Vec::new(),
@@ -340,6 +357,7 @@ impl<C: Compute> ServerRuntime<C> {
             shard: None,
             shard_round_wire: 0,
             snapshot: None,
+            adapt,
         })
     }
 
@@ -466,9 +484,11 @@ impl<C: Compute> ServerRuntime<C> {
                     gid = self.cfg.gid(it.d),
                     kind = StreamKind::Uplink
                 );
-                self.streams.device(it.d).up.decode(&it.payload).map_err(|e| {
-                    format!("round {}: device {} uplink stream: {e}", it.round, it.d)
-                })?
+                // epoch lookup by the frame's round: a carried straggler's
+                // stale round decodes under the table it was opened with
+                self.streams.for_round(it.round).device(it.d).up.decode(&it.payload).map_err(
+                    |e| format!("round {}: device {} uplink stream: {e}", it.round, it.d),
+                )?
             };
             record_decode(StreamKind::Uplink, t0, it.payload.len());
             self.raw_round[0] += acts_hat.len() * 4;
@@ -553,7 +573,7 @@ impl<C: Compute> ServerRuntime<C> {
                         gid = self.cfg.gid(it.d),
                         kind = StreamKind::Downlink
                     );
-                    self.streams.device(it.d).down.encode(
+                    self.streams.for_round(it.round).device(it.d).down.encode(
                         &g_cm,
                         RoundCtx {
                             entropy: g_ent.as_deref(),
@@ -577,11 +597,177 @@ impl<C: Compute> ServerRuntime<C> {
         (self.server_steps, self.server_dispatches)
     }
 
+    /// How many stream-table epochs this session has negotiated so far
+    /// (1 = the handshake table was never retuned).
+    pub fn spec_epochs(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// The telemetry view the controller decides on: the just-closed
+    /// round's per-stream compression ratios plus the live obs-registry
+    /// entropy-drift gauges and the scheduler's worst wait.
+    fn round_obs(&self, max_wait_s: f64) -> RoundObs {
+        let (ratio_up, ratio_down) = self
+            .metrics
+            .records
+            .last()
+            .map(|r| (r.ratio_up(), r.ratio_down()))
+            .unwrap_or((0.0, 0.0));
+        RoundObs {
+            ratio_up,
+            ratio_down,
+            entropy_mean_milli: metrics::ENTROPY_MEAN_UP.get(),
+            entropy_var_milli: metrics::ENTROPY_VAR_UP.get(),
+            max_wait_s,
+        }
+    }
+
+    /// The `--adapt` hook, called by both schedulers after every round
+    /// close (except a stopping one): consult the controller and, if it
+    /// retunes, push the [`Message::SpecUpdate`] to the whole fleet and
+    /// install the new epoch server-side. At most one transition is in
+    /// flight: while a pushed update still owes acks the controller is not
+    /// consulted, and the deferred decision fires at a later boundary.
+    pub(crate) fn adapt_after_close(
+        &mut self,
+        round: usize,
+        fleet: &mut dyn Fleet,
+        max_wait_s: f64,
+    ) -> Result<(), String> {
+        // the state is taken out for the duration so the controller can be
+        // consulted while `self` assembles telemetry and drives the fleet
+        let Some(mut adapt) = self.adapt.take() else { return Ok(()) };
+        let result = self.adapt_step(&mut adapt, round, fleet, max_wait_s);
+        self.adapt = Some(adapt);
+        result
+    }
+
+    fn adapt_step(
+        &mut self,
+        adapt: &mut AdaptState,
+        round: usize,
+        fleet: &mut dyn Fleet,
+        max_wait_s: f64,
+    ) -> Result<(), String> {
+        if adapt.pending.is_some() {
+            return Ok(()); // a pushed transition still owes acks
+        }
+        let activate = round + adapt::ACTIVATION_LEAD;
+        if activate >= self.cfg.rounds {
+            return Ok(()); // no full round left to activate in
+        }
+        let obs = self.round_obs(max_wait_s);
+        let Some(next_up) = adapt.controller.decide(round, &obs) else {
+            return Ok(());
+        };
+        let current = self.streams.current_specs().clone();
+        let next = adapt::retuned_specs(&current, &next_up)
+            .map_err(|e| format!("round {round}: --adapt retune to '{next_up}': {e}"))?;
+        if next == current {
+            return Ok(()); // the controller re-chose the active table
+        }
+        let t0 = crate::util::logging::elapsed_ns();
+        let set = self
+            .streams
+            .current()
+            .rebuilt(next.clone())
+            .map_err(|e| format!("round {round}: rebuilding streams for '{next_up}': {e}"))?;
+        let fp = next.fingerprint();
+        crate::log_info!(
+            "[{}] round {round}: spec update -> {} (digest {fp:#018x}, activates \
+             round {activate})",
+            self.cfg.label,
+            next.table()
+        );
+        let n = self.cfg.devices;
+        for d in 0..n {
+            fleet.send(d, &Message::SpecUpdate {
+                activate_round: activate as u32,
+                uplink: next.uplink.as_str().to_string(),
+                downlink: next.downlink.as_str().to_string(),
+                sync: next.sync.as_str().to_string(),
+                streams_fp: fp,
+            })?;
+        }
+        for d in 0..n {
+            fleet.pump(d)?;
+        }
+        // the transition boundary is a first-class critical-path stage:
+        // `slacc trace` attributes it to the activation round instead of
+        // letting renegotiation time inflate `other`
+        if crate::obs::span::enabled() {
+            let now = crate::util::logging::elapsed_ns();
+            crate::obs::span::record(
+                crate::obs::span::SpanEvent::manual(
+                    "spec_update",
+                    t0,
+                    now.saturating_sub(t0),
+                )
+                .round(activate as u32)
+                .attr("digest", fp),
+            );
+        }
+        self.streams.push(activate, set);
+        adapt.pending = Some(PendingUpdate { activate, fp, unacked: vec![true; n] });
+        Ok(())
+    }
+
+    /// Accept a device's [`Message::SpecUpdateAck`], matching it against
+    /// the in-flight transition by activation round and digest.
+    pub(crate) fn accept_spec_ack(
+        &mut self,
+        d: usize,
+        activate: usize,
+        fp: u64,
+    ) -> Result<(), String> {
+        let adapt = self.adapt.as_mut().ok_or_else(|| {
+            format!("device {d}: SpecUpdateAck on a session without --adapt")
+        })?;
+        let pending = adapt.pending.as_mut().ok_or_else(|| {
+            format!("device {d}: SpecUpdateAck with no spec update in flight")
+        })?;
+        if activate != pending.activate || fp != pending.fp {
+            return Err(format!(
+                "device {d}: SpecUpdateAck for round {activate} digest {fp:#018x}, \
+                 the in-flight update is round {} digest {:#018x}",
+                pending.activate, pending.fp
+            ));
+        }
+        if !pending.unacked[d] {
+            return Err(format!(
+                "device {d}: duplicate SpecUpdateAck for round {activate}"
+            ));
+        }
+        pending.unacked[d] = false;
+        if pending.fully_acked() {
+            adapt.pending = None; // settled: the controller may retune again
+        }
+        Ok(())
+    }
+
+    /// Protocol discipline at the activation boundary: a device whose
+    /// frame belongs to round `>= activate` without having acked the
+    /// in-flight update is violating the renegotiation handshake (its
+    /// codec state would silently diverge from the server's epoch).
+    pub(crate) fn spec_ack_gate(&self, d: usize, round: usize) -> Result<(), String> {
+        if let Some(p) = self.adapt.as_ref().and_then(|a| a.pending.as_ref()) {
+            if round >= p.activate && p.unacked[d] {
+                return Err(format!(
+                    "round {round}: device {d} entered spec-update activation round \
+                     {} without acking the update (digest {:#018x})",
+                    p.activate, p.fp
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Accept a device's ModelSync push (unpack through its sync stream).
     pub(crate) fn accept_sync(&mut self, d: usize, payload: &[u8]) -> Result<(), String> {
         let t0 = std::time::Instant::now();
-        let tensors = sync::unpack_params(payload, self.streams.device(d).sync_up.as_mut())
-            .map_err(|e| format!("device {d} sync stream (push): {e}"))?;
+        let tensors =
+            sync::unpack_params(payload, self.streams.sync_set().device(d).sync_up.as_mut())
+                .map_err(|e| format!("device {d} sync stream (push): {e}"))?;
         record_decode(StreamKind::Sync, t0, payload.len());
         if tensors.is_empty() {
             return Err(format!("device {d}: ModelSync push carried no tensors"));
@@ -599,7 +785,7 @@ impl<C: Compute> ServerRuntime<C> {
         let t0 = std::time::Instant::now();
         let payload = sync::pack_params_with(
             params,
-            self.streams.device(d).sync_down.as_mut(),
+            self.streams.sync_set().device(d).sync_down.as_mut(),
             &mut self.sync_scratch,
         );
         record_encode(StreamKind::Sync, t0, payload.len());

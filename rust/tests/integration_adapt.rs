@@ -1,0 +1,349 @@
+//! Adaptive-renegotiation integration: `--adapt` sessions end to end.
+//!
+//! Load-bearing properties:
+//! * A forced `--adapt at:` schedule transitions the data-stream codecs
+//!   mid-session with byte-for-byte parity between the in-process loopback
+//!   path and a real multi-threaded TCP deployment — including the rounds
+//!   on both sides of each activation boundary.
+//! * The round CSV records the active spec table per round (new
+//!   `active_spec` column; historical columns keep their indexes).
+//! * A quorum close can carry a straggler *across* an activation
+//!   boundary: its stale-round frames are served under the old table and
+//!   the session stays deterministic.
+//! * A SpecUpdate whose digest disagrees with its spec strings (or that
+//!   tries to swap the session-long sync stream, or to activate an
+//!   already-open round) is rejected by name at the device.
+//! * An `--adapt` disagreement between server and device is a session
+//!   fingerprint mismatch, rejected at the Hello handshake.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use slacc::codecs::stream::StreamSpecs;
+use slacc::config::{CodecChoice, ExperimentConfig};
+use slacc::coordinator::metrics::TrainReport;
+use slacc::data::Dataset;
+use slacc::sched::Policy;
+use slacc::transport::device::{mock_worker, run_blocking};
+use slacc::transport::proto::Message;
+use slacc::transport::server::{
+    accept_and_serve, mock_runtime, run_mock_loopback, run_mock_loopback_delayed,
+};
+use slacc::transport::tcp::TcpTransport;
+
+fn tiny_cfg(codec: &str, devices: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for("ham");
+    cfg.devices = devices;
+    cfg.rounds = rounds;
+    cfg.train_n = 64;
+    cfg.test_n = 16;
+    cfg.eval_every = 2;
+    cfg.lr = 1e-3;
+    cfg.seed = 3;
+    cfg.codec = CodecChoice::Named(codec.into());
+    cfg
+}
+
+fn run_tcp_session(cfg: &ExperimentConfig) -> TrainReport {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut handles = Vec::new();
+    for d in 0..cfg.devices {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        handles.push(thread::spawn(move || -> Result<(), String> {
+            let (train, _) =
+                Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+            let mut worker = mock_worker(&cfg, Arc::new(train), d)?;
+            let mut conn =
+                TcpTransport::connect_retry(&addr, 40, Duration::from_millis(100))?;
+            run_blocking(&mut worker, &mut conn)
+        }));
+    }
+    let (_, test) =
+        Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed).unwrap();
+    let mut rt = mock_runtime(cfg, Arc::new(test)).unwrap();
+    let report = accept_and_serve(&mut rt, &listener).unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    report
+}
+
+/// Acceptance: a forced two-transition schedule (`slacc -> uniform8 ->
+/// identity`) activates at the named rounds, changes the wire bytes, and
+/// keeps loopback/TCP byte parity through both boundaries.
+#[test]
+fn forced_adapt_schedule_transitions_with_transport_parity() {
+    let mut cfg = tiny_cfg("slacc", 3, 6);
+    cfg.adapt = Some("at:2=uniform8,4=identity".into());
+    let loopback = run_mock_loopback(&cfg).unwrap();
+    assert_eq!(loopback.rounds_run, 6);
+
+    // the per-round spec column walks the schedule exactly
+    let specs: Vec<&str> =
+        loopback.metrics.records.iter().map(|r| r.spec.as_str()).collect();
+    assert_eq!(specs[0], "uplink=slacc downlink=slacc sync=identity");
+    assert_eq!(specs[1], "uplink=slacc downlink=slacc sync=identity");
+    assert_eq!(specs[2], "uplink=uniform8 downlink=uniform8 sync=identity");
+    assert_eq!(specs[3], "uplink=uniform8 downlink=uniform8 sync=identity");
+    assert_eq!(specs[4], "uplink=identity downlink=identity sync=identity");
+    assert_eq!(specs[5], "uplink=identity downlink=identity sync=identity");
+
+    // the transitions are real on the wire: the identity epoch ships raw
+    // f32 activations, which dwarf both compressed epochs
+    let by_round: Vec<usize> =
+        loopback.metrics.records.iter().map(|r| r.bytes_up).collect();
+    assert!(
+        by_round[4] > 2 * by_round[3],
+        "identity epoch should inflate uplink bytes: {by_round:?}"
+    );
+
+    let tcp = run_tcp_session(&cfg);
+    assert_eq!(tcp.rounds_run, 6);
+    assert_eq!(tcp.metrics.len(), loopback.metrics.len());
+    for (l, t) in loopback.metrics.records.iter().zip(&tcp.metrics.records) {
+        assert_eq!(l.bytes_up, t.bytes_up, "round {}", l.round);
+        assert_eq!(l.bytes_down, t.bytes_down, "round {}", l.round);
+        assert_eq!(l.bytes_sync, t.bytes_sync, "round {}", l.round);
+        assert_eq!(l.loss, t.loss, "round {}", l.round);
+        assert_eq!(l.accuracy, t.accuracy, "round {}", l.round);
+        assert_eq!(l.spec, t.spec, "round {}", l.round);
+    }
+}
+
+/// The adapted session is reproducible, and its pre-activation rounds are
+/// byte-identical to the un-adapted session (the transition is the only
+/// difference).
+#[test]
+fn adapted_session_is_deterministic_and_prefix_stable() {
+    let mut cfg = tiny_cfg("slacc", 3, 5);
+    cfg.adapt = Some("at:3=uniform4".into());
+    let a = run_mock_loopback(&cfg).unwrap();
+    let b = run_mock_loopback(&cfg).unwrap();
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_eq!(x.loss, y.loss, "round {}", x.round);
+        assert_eq!(x.bytes_up, y.bytes_up, "round {}", x.round);
+        assert_eq!(x.spec, y.spec, "round {}", x.round);
+    }
+    let frozen = run_mock_loopback(&tiny_cfg("slacc", 3, 5)).unwrap();
+    for r in 0..3 {
+        assert_eq!(
+            a.metrics.records[r].bytes_up, frozen.metrics.records[r].bytes_up,
+            "pre-activation round {r} must match the frozen session"
+        );
+        assert_eq!(a.metrics.records[r].loss, frozen.metrics.records[r].loss);
+    }
+    assert_ne!(
+        a.metrics.records[3].spec, frozen.metrics.records[3].spec,
+        "the activation round must run the new table"
+    );
+}
+
+/// The CSV gains `active_spec` as the LAST column; the historical columns
+/// (bytes_up/bytes_down at indexes 3/4, which the distributed parity
+/// checks parse) keep their positions.
+#[test]
+fn round_csv_records_the_active_spec_in_a_stable_layout() {
+    let mut cfg = tiny_cfg("slacc", 2, 4);
+    cfg.adapt = Some("at:2=uniform8".into());
+    let report = run_mock_loopback(&cfg).unwrap();
+    let csv = report.metrics.to_csv();
+    let mut lines = csv.trim().lines();
+    let header: Vec<&str> = lines.next().unwrap().split(',').collect();
+    assert_eq!(header[3], "bytes_up");
+    assert_eq!(header[4], "bytes_down");
+    assert_eq!(*header.last().unwrap(), "active_spec");
+    for (line, rec) in lines.zip(&report.metrics.records) {
+        let f: Vec<&str> = line.split(',').collect();
+        assert_eq!(f[3].parse::<usize>().unwrap(), rec.bytes_up, "round {}", rec.round);
+        // the spec table contains no commas, so it stays one CSV field
+        assert_eq!(*f.last().unwrap(), rec.spec, "round {}", rec.round);
+    }
+}
+
+/// Acceptance: a quorum close carries the slow device across the
+/// activation boundary — its stale-round frames are served under the old
+/// table, the transition still lands, and the session is deterministic.
+#[test]
+fn straggler_carried_across_the_activation_boundary() {
+    let mut cfg = tiny_cfg("slacc", 3, 8);
+    cfg.eval_every = 20; // eval only at the end
+    cfg.schedule = Policy::arrival_with_timeout(0.4, 2);
+    cfg.adapt = Some("at:2=uniform4".into());
+    // device 2 is far slower than the timeout window: round 0 closes on
+    // the fast pair and carries it, so its round-0 work lands *after* the
+    // uniform4 epoch activated
+    let delays = [0.06, 0.06, 1.2];
+    let (report, sched) = run_mock_loopback_delayed(&cfg, &delays, 7).unwrap();
+    assert_eq!(report.rounds_run, 8);
+    assert!(report.straggler_events >= 1, "no straggler was ever carried");
+    assert!(
+        sched.iter().any(|r| r.round >= 2 && r.stale.contains(&2)),
+        "the straggler's stale work never landed past the boundary: {sched:?}"
+    );
+    assert_eq!(
+        report.metrics.records[1].spec,
+        "uplink=slacc downlink=slacc sync=identity"
+    );
+    assert_eq!(
+        report.metrics.records[2].spec,
+        "uplink=uniform4 downlink=uniform4 sync=identity"
+    );
+    // reproducible under the same shim seed
+    let (again, sched2) = run_mock_loopback_delayed(&cfg, &delays, 7).unwrap();
+    assert_eq!(sched, sched2);
+    for (x, y) in report.metrics.records.iter().zip(&again.metrics.records) {
+        assert_eq!(x.loss, y.loss, "round {}", x.round);
+        assert_eq!(x.bytes_up, y.bytes_up, "round {}", x.round);
+    }
+}
+
+/// Hostile SpecUpdates are rejected at the device by name: a digest that
+/// disagrees with the spec strings, a sync-stream swap, and an activation
+/// round that is not in the future.
+#[test]
+fn device_rejects_malformed_spec_updates_by_name() {
+    let cfg = tiny_cfg("slacc", 2, 4);
+    let (train, _) =
+        Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed).unwrap();
+    let mut worker = mock_worker(&cfg, Arc::new(train), 0).unwrap();
+
+    let good = StreamSpecs::parse("uniform4", "uniform4", "identity").unwrap();
+
+    // digest/spec-string disagreement
+    let err = worker
+        .handle(Message::SpecUpdate {
+            activate_round: 2,
+            uplink: "uniform4".into(),
+            downlink: "uniform4".into(),
+            sync: "identity".into(),
+            streams_fp: good.fingerprint() ^ 1,
+        })
+        .unwrap_err();
+    assert!(
+        err.contains("digest") && err.contains("does not match"),
+        "digest mismatch must be named: {err}"
+    );
+
+    // sync streams are session-long
+    let synced = StreamSpecs::parse("uniform4", "uniform4", "uniform8").unwrap();
+    let err = worker
+        .handle(Message::SpecUpdate {
+            activate_round: 2,
+            uplink: "uniform4".into(),
+            downlink: "uniform4".into(),
+            sync: "uniform8".into(),
+            streams_fp: synced.fingerprint(),
+        })
+        .unwrap_err();
+    assert!(err.contains("sync"), "sync swap must be named: {err}");
+
+    // an unparseable spec string never panics
+    let err = worker
+        .handle(Message::SpecUpdate {
+            activate_round: 2,
+            uplink: "bogus".into(),
+            downlink: "uniform4".into(),
+            sync: "identity".into(),
+            streams_fp: 7,
+        })
+        .unwrap_err();
+    assert!(err.contains("SpecUpdate"), "unexpected error: {err}");
+
+    // a well-formed update is acked...
+    let replies = worker
+        .handle(Message::SpecUpdate {
+            activate_round: 2,
+            uplink: "uniform4".into(),
+            downlink: "uniform4".into(),
+            sync: "identity".into(),
+            streams_fp: good.fingerprint(),
+        })
+        .unwrap();
+    assert_eq!(
+        replies,
+        vec![Message::SpecUpdateAck {
+            activate_round: 2,
+            streams_fp: good.fingerprint()
+        }]
+    );
+
+    // ...but a second one must queue strictly after it
+    let err = worker
+        .handle(Message::SpecUpdate {
+            activate_round: 2,
+            uplink: "uniform8".into(),
+            downlink: "uniform8".into(),
+            sync: "identity".into(),
+            streams_fp: StreamSpecs::parse("uniform8", "uniform8", "identity")
+                .unwrap()
+                .fingerprint(),
+        })
+        .unwrap_err();
+    assert!(err.contains("not after"), "unexpected error: {err}");
+}
+
+/// An `--adapt` disagreement between the endpoints changes the session
+/// fingerprint and is rejected at the Hello handshake.
+#[test]
+fn adapt_disagreement_is_a_fingerprint_mismatch() {
+    let mut server_cfg = tiny_cfg("slacc", 2, 4);
+    server_cfg.adapt = Some("at:2=uniform4".into());
+    let device_cfg = tiny_cfg("slacc", 2, 4); // no --adapt
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handles: Vec<_> = (0..2)
+        .map(|d| {
+            let cfg = device_cfg.clone();
+            let addr = addr.clone();
+            thread::spawn(move || -> Result<(), String> {
+                let (train, _) =
+                    Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+                let mut worker = mock_worker(&cfg, Arc::new(train), d)?;
+                let mut conn =
+                    TcpTransport::connect_retry(&addr, 40, Duration::from_millis(100))?;
+                run_blocking(&mut worker, &mut conn)
+            })
+        })
+        .collect();
+    let (_, test) = Dataset::for_config(
+        &server_cfg.dataset,
+        server_cfg.train_n,
+        server_cfg.test_n,
+        server_cfg.seed,
+    )
+    .unwrap();
+    let mut rt = mock_runtime(&server_cfg, Arc::new(test)).unwrap();
+    let err = accept_and_serve(&mut rt, &listener).unwrap_err();
+    assert!(err.contains("fingerprint"), "unexpected error: {err}");
+    for h in handles {
+        assert!(h.join().unwrap().is_err());
+    }
+}
+
+/// Config validation: the directive is parsed up front, a ladder must
+/// contain the session's starting uplink spec, and `--adapt` is
+/// single-server only.
+#[test]
+fn adapt_directives_are_validated_up_front() {
+    let mut cfg = tiny_cfg("slacc", 2, 4);
+    cfg.adapt = Some("at:2=uniform4".into());
+    cfg.validate().unwrap();
+
+    cfg.adapt = Some("nonsense".into());
+    assert!(cfg.validate().is_err());
+
+    // the ladder must include the starting rung (uplink is slacc here)
+    cfg.adapt = Some("ladder:uniform8,uniform4".into());
+    assert!(cfg.validate().unwrap_err().contains("starting spec"));
+    cfg.adapt = Some("ladder:slacc,uniform4".into());
+    cfg.validate().unwrap();
+
+    cfg.adapt = Some("at:2=uniform4".into());
+    cfg.shards = 2;
+    cfg.devices = 4;
+    assert!(cfg.validate().unwrap_err().contains("single-server"));
+}
