@@ -1,0 +1,212 @@
+//! Event-loop scale curve — the 10k-devices-per-shard readiness bench.
+//!
+//!     cargo bench --bench event_loop            # full 256→10k sweep
+//!     cargo bench --bench event_loop -- --smoke # seconds-fast CI smoke
+//!
+//! Two sweeps, both over every readiness backend (`epoll` and `poll` on
+//! linux, `poll` elsewhere):
+//!
+//! * **wakeup** — the dispatch-cost curve the epoll rework exists for. A
+//!   [`Poller`] holds `n` registered connections of which only 8 are ever
+//!   active; each iteration writes one byte into the 8 active sockets and
+//!   times wakeup → ready-token dispatch → drain. `poll(2)` scans all `n`
+//!   descriptors per wakeup (cost grows with fleet size), edge-triggered
+//!   epoll returns only the ready 8 (cost stays flat) — the measured
+//!   crossover is the row pair to look at. Idle descriptors are `dup`s of
+//!   one never-written socket, so 10 000 registrations fit comfortably in
+//!   the fd budget.
+//! * **soak** — end-to-end scripted fleets through the real
+//!   [`PollFleet`] echo harness (`slacc::sched::soak`), reporting wall
+//!   time per fleet size; the harness verifies every payload byte and
+//!   that per-device wire accounting is uniform across the fleet.
+//!
+//! Results land in `BENCH_scale.json` (committed) via the shared recorder
+//! in `benches/common.rs` on full runs; the smoke subset asserts dispatch
+//! correctness (exactly the 8 active tokens surface, idle connections
+//! never fire) and leaves the file untouched. Wall clock is reported,
+//! never asserted — shared runners are noisy.
+
+#[path = "common.rs"]
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+use slacc::bench::Table;
+use slacc::sched::event_loop::FleetOptions;
+use slacc::sched::poll::{Backend, Poller};
+use slacc::sched::soak::{run_soak, SoakConfig};
+use slacc::util::json::Json;
+
+/// Active (traffic-bearing) connections in the wakeup sweep; everything
+/// past these is registered but idle.
+const ACTIVE: usize = 8;
+
+fn backends() -> Vec<Backend> {
+    if cfg!(target_os = "linux") {
+        vec![Backend::Epoll, Backend::Poll]
+    } else {
+        vec![Backend::Poll]
+    }
+}
+
+/// One accepted loopback pair: (client end, non-blocking server end).
+fn socket_pair(listener: &TcpListener) -> (TcpStream, TcpStream) {
+    let addr = listener.local_addr().expect("listener addr");
+    let client = TcpStream::connect(addr).expect("connect");
+    client.set_nodelay(true).expect("nodelay");
+    let (server, _) = listener.accept().expect("accept");
+    server.set_nonblocking(true).expect("nonblocking");
+    (client, server)
+}
+
+/// Time `iters` dispatch cycles of a `conns`-connection interest set with
+/// [`ACTIVE`] hot sockets; returns mean ns per cycle.
+fn wakeup_cycle_ns(backend: Backend, conns: usize, iters: usize) -> f64 {
+    assert!(conns > ACTIVE, "need room for idle connections");
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let mut poller = Poller::new(backend).expect("poller");
+
+    let mut clients = Vec::with_capacity(ACTIVE);
+    let mut servers = Vec::with_capacity(ACTIVE);
+    for token in 0..ACTIVE {
+        let (client, server) = socket_pair(&listener);
+        poller.register(&server, token).expect("register active");
+        clients.push(client);
+        servers.push(server);
+    }
+    // idle bulk: dups of one never-written pair — real descriptors in the
+    // interest set that never become ready (both ends held open)
+    let (_idle_client, idle_server) = socket_pair(&listener);
+    let mut idle = Vec::with_capacity(conns - ACTIVE);
+    for token in ACTIVE..conns {
+        let dup = idle_server.try_clone().expect("dup idle socket");
+        poller.register(&dup, token).expect("register idle");
+        idle.push(dup);
+    }
+    assert_eq!(poller.armed(), conns);
+
+    let mut scratch = [0u8; 256];
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for client in &mut clients {
+            client.write_all(&[0xA5]).expect("poke");
+        }
+        let mut drained = 0usize;
+        while drained < ACTIVE {
+            let ready = poller.wait(1000).expect("wait");
+            assert!(ready > 0, "wakeup timed out with pokes in flight");
+            for k in 0..ready {
+                let token = poller.ready_token(k);
+                assert!(token < ACTIVE, "idle connection {token} fired");
+                loop {
+                    match servers[token].read(&mut scratch) {
+                        Ok(0) => panic!("active connection {token} hit EOF"),
+                        Ok(n) => drained += n,
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) => panic!("drain {token}: {e}"),
+                    }
+                }
+            }
+        }
+        assert_eq!(drained, ACTIVE, "dispatch lost bytes");
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn sweep(sizes: &[usize], soak_sizes: &[usize], iters: usize, rounds: usize, full: bool) {
+    let mut table = Table::new(
+        "event loop: wakeup dispatch and fleet soak vs. registered connections",
+        &["kind", "backend", "conns", "active", "ns_per_cycle", "wall_s"],
+    );
+    let mut rec = common::BenchRecorder::new("scale");
+
+    for &conns in sizes {
+        for backend in backends() {
+            let ns = wakeup_cycle_ns(backend, conns, iters);
+            table.row(vec![
+                "wakeup".to_string(),
+                backend.as_str().to_string(),
+                conns.to_string(),
+                ACTIVE.to_string(),
+                format!("{ns:.0}"),
+                "-".to_string(),
+            ]);
+            rec.row(vec![
+                ("kind", Json::Str("wakeup".to_string())),
+                ("backend", Json::Str(backend.as_str().to_string())),
+                ("conns", Json::Num(conns as f64)),
+                ("active", Json::Num(ACTIVE as f64)),
+                ("ns_per_cycle", Json::Num(ns)),
+                ("wall_s", Json::Null),
+            ]);
+        }
+    }
+
+    for &devices in soak_sizes {
+        // a full TCP pair per soak device: stay within default fd budgets
+        // here; the 10k end-to-end path is the `scale_soak_10k_devices`
+        // integration test (needs a raised ulimit)
+        let devices = if devices > 4096 {
+            println!("[soak clamped to 4096 devices — fd budget; see scale_soak_10k_devices]");
+            4096
+        } else {
+            devices
+        };
+        for backend in backends() {
+            let mut cfg = SoakConfig::new(devices, rounds);
+            cfg.driver_threads = 8;
+            cfg.opts = FleetOptions { backend, write_stall_secs: 10 };
+            let report = run_soak(&cfg)
+                .unwrap_or_else(|e| panic!("soak {devices} on {backend:?}: {e}"));
+            let golden = report.per_device[0];
+            for stats in &report.per_device {
+                assert_eq!(*stats, golden, "soak traffic must be uniform");
+            }
+            table.row(vec![
+                "soak".to_string(),
+                report.backend.to_string(),
+                devices.to_string(),
+                devices.to_string(),
+                "-".to_string(),
+                format!("{:.3}", report.wall_s),
+            ]);
+            rec.row(vec![
+                ("kind", Json::Str("soak".to_string())),
+                ("backend", Json::Str(report.backend.to_string())),
+                ("conns", Json::Num(devices as f64)),
+                ("active", Json::Num(devices as f64)),
+                ("ns_per_cycle", Json::Null),
+                ("wall_s", Json::Num(report.wall_s)),
+            ]);
+        }
+    }
+
+    table.finish();
+    if full {
+        // only the full sweep updates the committed perf-trajectory file;
+        // the CI smoke subset must not clobber it with its reduced grid
+        rec.write();
+    } else {
+        println!("[smoke mode: BENCH_scale.json left untouched]");
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("[event_loop bench: smoke mode]");
+        // CI gate: O(ready) dispatch correctness on both backends (idle
+        // connections never fire, no lost bytes) and a clean small soak
+        sweep(&[256, 1024], &[256], 200, 2, false);
+    } else {
+        sweep(
+            &[256, 1024, 4096, 10_000],
+            &[256, 1024, 4096],
+            common::env_usize("SLACC_BENCH_WAKEUPS", 2000),
+            2,
+            true,
+        );
+    }
+}

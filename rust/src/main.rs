@@ -36,7 +36,9 @@ use slacc::coordinator::trainer::{
 use slacc::data::partition::Partition;
 use slacc::data::Dataset;
 use slacc::entropy::AlphaSchedule;
+use slacc::sched::event_loop::FleetOptions;
 use slacc::sched::fleet::ShardFleet;
+use slacc::sched::poll::Backend;
 use slacc::sched::Policy;
 use slacc::shard::coordinator::Coordinator;
 use slacc::shard::link::ShardLink;
@@ -45,7 +47,7 @@ use slacc::obs::export::{MetricsExporter, SnapshotWriter};
 use slacc::obs::span;
 use slacc::obs::trace;
 use slacc::transport::device::{mock_worker, run_blocking};
-use slacc::transport::server::{accept_and_serve_with, mock_runtime_for_shard};
+use slacc::transport::server::{accept_and_serve_opts, mock_runtime_for_shard};
 use slacc::transport::tcp::TcpTransport;
 use slacc::transport::{session_fingerprint, Transport};
 use slacc::util::logging;
@@ -139,6 +141,13 @@ fn print_help() {
                                    shards > 1)             [127.0.0.1:7978]\n\
            --connect-shard A,B,... shard --shard-bind addresses, one per\n\
                                    shard (coordinator role, required)\n\
+           --io-backend MODE       event-loop readiness backend:\n\
+                                   auto|epoll|poll [auto]; auto picks\n\
+                                   edge-triggered epoll on linux, poll(2)\n\
+                                   elsewhere (never fingerprinted — both\n\
+                                   backends drive bit-identical sessions)\n\
+           --write-stall-secs S    abort a write jammed for S seconds on a\n\
+                                   peer that stopped reading [10]\n\
          device flags (train flags plus):\n\
            --id N                  this device's GLOBAL slot in 0..devices\n\
                                    (required; connect to the shard serving it)\n\
@@ -367,9 +376,18 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
     let connect_shard = args.str_opt("connect-shard");
     let mock = args.bool_or("mock", false);
     let csv = args.str_opt("csv");
+    // event-loop tunables: like the telemetry flags below, deliberately
+    // outside the config fingerprint — how the server polls its sockets
+    // must not change what fleet it handshakes with
+    let io_backend = args.str_opt("io-backend");
+    let write_stall_secs = args.usize_opt("write-stall-secs");
     let obs = ObsFlags::from_args(&mut args);
     args.finish()?;
     cfg.validate()?;
+    let io = FleetOptions {
+        backend: Backend::parse(io_backend.as_deref().unwrap_or("auto"))?,
+        write_stall_secs: write_stall_secs.unwrap_or(10) as u64,
+    };
 
     if obs.trace_out.is_some() {
         span::set_enabled(true);
@@ -392,9 +410,16 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
                         .into(),
                 );
             }
+            if io_backend.is_some() || write_stall_secs.is_some() {
+                return Err(
+                    "--io-backend/--write-stall-secs tune the shard event loop; \
+                     the coordinator's blocking shard links have no poll loop"
+                        .into(),
+                );
+            }
             serve_coordinator(cfg, connect_shard, mock)
         }
-        Role::Shard => serve_shard(cfg, bind, shard_id, shard_bind, mock, csv, &obs),
+        Role::Shard => serve_shard(cfg, bind, shard_id, shard_bind, mock, csv, &obs, io),
     };
     // drain spans even when the session failed: a trace of the rounds
     // leading up to an error is exactly when you want one
@@ -466,6 +491,7 @@ fn serve_coordinator(
 /// A (possibly the only) shard server: in a sharded cluster, accept the
 /// coordinator on `--shard-bind` first, then the shard's device slice on
 /// `--bind`.
+#[allow(clippy::too_many_arguments)]
 fn serve_shard(
     cfg: ExperimentConfig,
     bind: String,
@@ -474,6 +500,7 @@ fn serve_shard(
     mock: bool,
     csv: Option<String>,
     obs: &ObsFlags,
+    io: FleetOptions,
 ) -> Result<(), String> {
     let topo = cfg.topology();
     if shard_id >= topo.shards {
@@ -542,7 +569,7 @@ fn serve_shard(
         if let Some(sw) = snapshot {
             rt.attach_snapshot_writer(sw);
         }
-        accept_and_serve_with(&mut rt, &listener, exporter)?
+        accept_and_serve_opts(&mut rt, &listener, exporter, io)?
     } else {
         let mut rt = engine_runtime_for_shard(&cfg, shard_id)?;
         if let Some(link) = link {
@@ -551,7 +578,7 @@ fn serve_shard(
         if let Some(sw) = snapshot {
             rt.attach_snapshot_writer(sw);
         }
-        accept_and_serve_with(&mut rt, &listener, exporter)?
+        accept_and_serve_opts(&mut rt, &listener, exporter, io)?
     };
     print_report(&report, csv)
 }

@@ -189,6 +189,21 @@ pub static OPEN_CONNS: Gauge = Gauge::new(
     "",
     "device sockets the event loop is driving",
 );
+pub static READY_EVENTS: Counter = Counter::new(
+    "slacc_ready_events_total",
+    "",
+    "per-socket readiness events dispatched by the event loop (O(ready) work)",
+);
+pub static WRITE_STALLS: Counter = Counter::new(
+    "slacc_write_stall_total",
+    "",
+    "writes aborted after stalling past --write-stall-secs (peer not reading)",
+);
+pub static CONN_BUF_BYTES: Gauge = Gauge::new(
+    "slacc_conn_buf_bytes",
+    "",
+    "bytes of per-connection decode-ring capacity currently retained",
+);
 
 // ------------------------------------------------------------ server compute
 
@@ -403,6 +418,8 @@ pub fn counters() -> &'static [&'static Counter] {
         &SHARD_SYNCS,
         &TRACE_DROPPED,
         &SCRAPES,
+        &READY_EVENTS,
+        &WRITE_STALLS,
     ]
 }
 
@@ -416,6 +433,7 @@ pub fn gauges() -> &'static [&'static Gauge] {
         &ENTROPY_VAR_UP,
         &ENTROPY_VAR_DOWN,
         &ENTROPY_VAR_SYNC,
+        &CONN_BUF_BYTES,
     ]
 }
 

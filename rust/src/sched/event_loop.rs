@@ -5,23 +5,35 @@
 //! ([`crate::transport::tcp::TcpTransport::accept`]); that caps a server at
 //! a few hundred devices and buys nothing — the protocol is frame-oriented
 //! and the server's work per frame is CPU-bound PJRT stepping anyway.
-//! [`PollFleet`] replaces it: sockets sit in a `poll(2)` set
-//! ([`crate::sched::poll`]), reads drain into per-connection
-//! [`FrameDecoder`]s, and completed messages surface through the
-//! [`Fleet`] interface in true arrival order — which is exactly what the
-//! arrival-order round scheduler wants to consume.
+//! [`PollFleet`] replaces it: sockets sit behind a persistent
+//! [`poll::Poller`] interest set (edge-triggered epoll on linux, `poll(2)`
+//! elsewhere — see [`FleetOptions::backend`]), reads drain **directly into**
+//! per-connection [`FrameDecoder`] rings (no intermediate read buffer), and
+//! completed messages surface through the [`Fleet`] interface in true
+//! arrival order — which is exactly what the arrival-order round scheduler
+//! wants to consume.
+//!
+//! The connection slab is addressed by stable tokens (= local device
+//! slots): a wakeup dispatches O(ready) connections, not O(fleet), and the
+//! steady-state wakeup→decode→dispatch path performs no allocation (pinned
+//! by the counting-allocator audit in `benches/obs.rs`).
 //!
 //! Writes are also non-blocking: a `WouldBlock` mid-frame parks on
-//! `poll(POLLOUT)` for that one socket. The PJRT engine never crosses a
+//! `poll(POLLOUT)` for that one socket, bounded by
+//! [`FleetOptions::write_stall_secs`]. Payload-bearing frames go out as a
+//! vectored write (header+prefix from a reusable scratch, payload borrowed
+//! from the message), so FedAvg/ModelSync broadcasts never assemble a
+//! per-device copy of the shared payload. The PJRT engine never crosses a
 //! thread boundary because there are no other threads.
 
 use std::collections::VecDeque;
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::Instant;
 
 use crate::obs::export::MetricsExporter;
 use crate::obs::metrics;
+use crate::quant::payload::ByteWriter;
 use crate::sched::fleet::Fleet;
 use crate::sched::poll;
 use crate::shard::FleetShape;
@@ -30,19 +42,39 @@ use crate::transport::server::{hello_from_message, DeviceHello};
 use crate::transport::{TransportError, WireStats};
 
 /// Read chunk size per `read` call; frames larger than this reassemble
-/// across poll wake-ups in the decoder.
+/// across poll wake-ups in the decoder ring.
 const READ_CHUNK: usize = 64 * 1024;
 
 /// Per-connection cap on decoded-but-unconsumed frames. The protocol is
 /// lock-step, so a handful of read-ahead is all pipelining needs — this is
 /// the poll-loop equivalent of the threaded path's `sync_channel(2)`
-/// bound: a peer that floods valid frames blocks in our TCP window (we
-/// stop reading its socket) instead of ballooning server RAM.
+/// bound: a peer that floods valid frames is gated out of the interest set
+/// (its bytes back up in our TCP window) instead of ballooning server RAM.
 const MAX_QUEUED_FRAMES: usize = 8;
 
 /// With a metrics exporter attached, indefinite poll waits are clamped to
 /// this so pending scrapers are serviced even while the fleet is quiet.
 const EXPORT_TICK_MS: i32 = 50;
+
+/// Tunables for a [`PollFleet`], surfaced on the CLI as `--io-backend` and
+/// `--write-stall-secs`. Deliberately *not* part of the config
+/// fingerprint: how a server polls its sockets must not change the
+/// handshake, and both backends produce bit-identical sessions.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetOptions {
+    /// Readiness backend (`--io-backend epoll|poll|auto`).
+    pub backend: poll::Backend,
+    /// Abort a write after stalling this many seconds on a peer that has
+    /// stopped reading (`--write-stall-secs`, default 10; 0 = abort at the
+    /// first full-buffer stall).
+    pub write_stall_secs: u64,
+}
+
+impl Default for FleetOptions {
+    fn default() -> FleetOptions {
+        FleetOptions { backend: poll::Backend::Auto, write_stall_secs: 10 }
+    }
+}
 
 struct PollConn {
     stream: TcpStream,
@@ -56,6 +88,12 @@ struct PollConn {
     closed: bool,
     /// terminal error to surface when the inbox drains
     failure: Option<TransportError>,
+    /// inbox hit [`MAX_QUEUED_FRAMES`] and the socket left the interest
+    /// set; re-armed by the ungate path when the scheduler drains it
+    gated: bool,
+    /// decoder-ring capacity last reported to the `slacc_conn_buf_bytes`
+    /// gauge (delta-tracked so closes and reclaims subtract correctly)
+    buf_cap: usize,
 }
 
 impl PollConn {
@@ -72,9 +110,13 @@ pub struct PollFleet {
     /// connection indices in frame-completion order, one entry per queued
     /// message (the arrival-order queue)
     order: VecDeque<usize>,
-    /// reusable read buffer (poll_step runs on every recv; don't allocate
-    /// 64 KiB per wake-up)
-    rbuf: Vec<u8>,
+    /// persistent readiness set; tokens are connection slots
+    poller: poll::Poller,
+    /// reusable frame-prefix scratch for the vectored write path
+    wbuf: ByteWriter,
+    /// connections not yet closed (mirrors the `slacc_open_conns` gauge)
+    open_count: usize,
+    write_stall_secs: u64,
     start: Instant,
     /// the fleet slice this node serves — maps connection slots to global
     /// device ids for the per-device trace spans
@@ -84,17 +126,28 @@ pub struct PollFleet {
 }
 
 impl PollFleet {
+    /// [`PollFleet::accept_with`] under [`FleetOptions::default`] (auto
+    /// backend, 10s write stall).
+    pub fn accept(
+        listener: &TcpListener,
+        shape: FleetShape,
+    ) -> Result<(PollFleet, Vec<DeviceHello>), String> {
+        PollFleet::accept_with(listener, shape, FleetOptions::default())
+    }
+
     /// Accept one connection per served device slot, run the Hello
     /// handshake through the poll loop, and return the fleet with
     /// connections re-indexed by local slot (TCP accept order is racy;
     /// the Hello says which slot each connection serves). `shape` is the
     /// fleet slice this node serves — [`FleetShape::flat`] for a single
     /// server, a shard's contiguous range in a multi-server topology.
-    pub fn accept(
+    pub fn accept_with(
         listener: &TcpListener,
         shape: FleetShape,
+        opts: FleetOptions,
     ) -> Result<(PollFleet, Vec<DeviceHello>), String> {
         let devices = shape.local;
+        let mut poller = poll::Poller::new(opts.backend)?;
         let mut conns = Vec::with_capacity(devices);
         for i in 0..devices {
             crate::log_info!("sched: waiting for device connection {}/{devices}", i + 1);
@@ -107,6 +160,7 @@ impl PollFleet {
             stream
                 .set_nonblocking(true)
                 .map_err(|e| format!("set_nonblocking: {e}"))?;
+            poller.register(&stream, i)?;
             conns.push(PollConn {
                 stream,
                 decoder: FrameDecoder::new(),
@@ -115,12 +169,17 @@ impl PollFleet {
                 peer,
                 closed: false,
                 failure: None,
+                gated: false,
+                buf_cap: 0,
             });
         }
         let mut fleet = PollFleet {
             conns,
             order: VecDeque::new(),
-            rbuf: vec![0u8; READ_CHUNK],
+            poller,
+            wbuf: ByteWriter::new(),
+            open_count: devices,
+            write_stall_secs: opts.write_stall_secs,
             start: Instant::now(),
             shape,
             exporter: None,
@@ -162,7 +221,8 @@ impl PollFleet {
         // re-index connections by declared device id's local slot
         let mut slots: Vec<Option<(PollConn, DeviceHello)>> =
             (0..devices).map(|_| None).collect();
-        for (conn, hello) in fleet.conns.into_iter().zip(by_conn.into_iter()) {
+        let accepted = std::mem::take(&mut fleet.conns);
+        for (conn, hello) in accepted.into_iter().zip(by_conn.into_iter()) {
             let hello = hello.expect("every connection delivered a Hello");
             let id = hello.device_id;
             let slot = shape.slot(id).expect("validated by hello_from_message");
@@ -179,16 +239,25 @@ impl PollFleet {
             conns.push(conn);
             hellos.push(hello);
         }
+        // a fresh interest set keyed by the *final* slot tokens; the
+        // handshake poller (accept-order tokens) unwinds with `fleet`
+        let mut poller = poll::Poller::new(opts.backend)?;
+        for (slot, conn) in conns.iter().enumerate() {
+            poller.register(&conn.stream, slot)?;
+        }
         // every inbox was verified empty above, so the rebuilt fleet
         // starts with a consistent (empty) arrival queue
         Ok((
             PollFleet {
                 conns,
                 order: VecDeque::new(),
-                rbuf: vec![0u8; READ_CHUNK],
+                poller,
+                wbuf: ByteWriter::new(),
+                open_count: devices,
+                write_stall_secs: opts.write_stall_secs,
                 start: fleet.start,
                 shape,
-                exporter: fleet.exporter,
+                exporter: fleet.exporter.take(),
             },
             hellos,
         ))
@@ -199,6 +268,144 @@ impl PollFleet {
     /// to [`EXPORT_TICK_MS`] so scrapers get answers while the fleet idles.
     pub fn attach_exporter(&mut self, exporter: MetricsExporter) {
         self.exporter = Some(exporter);
+    }
+
+    /// Resolved readiness-backend name (`"epoll"`, `"poll"`, or `"busy"`).
+    pub fn backend_kind(&self) -> &'static str {
+        self.poller.kind()
+    }
+
+    /// Mark `i` closed: record the terminal error, leave the interest set,
+    /// keep the `open_conns` count and buffer gauge honest. Idempotent.
+    fn close_conn(&mut self, i: usize, failure: Option<TransportError>) {
+        if self.conns[i].closed {
+            return;
+        }
+        self.conns[i].closed = true;
+        if self.conns[i].failure.is_none() {
+            self.conns[i].failure = failure;
+        }
+        self.open_count -= 1;
+        if self.conns[i].gated {
+            // a gated socket already left the interest set
+            self.conns[i].gated = false;
+        } else {
+            let _ = self.poller.deregister(&self.conns[i].stream, i);
+        }
+    }
+
+    /// Sync the `slacc_conn_buf_bytes` gauge with slot `i`'s current
+    /// decoder-ring capacity (delta-tracked per connection).
+    fn note_buf_cap(&mut self, i: usize) {
+        let cap = self.conns[i].decoder.capacity();
+        let prev = self.conns[i].buf_cap;
+        if cap != prev {
+            metrics::CONN_BUF_BYTES.add(cap as i64 - prev as i64);
+            self.conns[i].buf_cap = cap;
+        }
+    }
+
+    /// Service one ready connection: drain the socket into its decoder
+    /// ring (edge-triggered contract: read to `WouldBlock`), extract every
+    /// complete frame into the inbox, then apply the read-ahead gate and
+    /// EOF verdict. Returns how many frames were decoded. Stale tokens
+    /// (closed or duplicate) are a no-op.
+    fn service(&mut self, i: usize) -> usize {
+        if self.conns[i].closed {
+            return 0;
+        }
+        let mut hit_eof = false;
+        let mut read_err: Option<String> = None;
+        loop {
+            let conn = &mut self.conns[i];
+            let slot = conn.decoder.read_slot(READ_CHUNK);
+            match conn.stream.read(slot) {
+                Ok(0) => {
+                    hit_eof = true;
+                    break;
+                }
+                Ok(n) => conn.decoder.commit(n),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    read_err = Some(format!("{}: read: {e}", conn.peer));
+                    break;
+                }
+            }
+        }
+        if let Some(msg) = read_err {
+            self.close_conn(i, Some(TransportError::Io(msg)));
+        }
+        // extract complete frames; whether an EOF was clean is only
+        // decidable *after* this pass (the final frames and the hang-up
+        // often land in the same wakeup)
+        let mut decoded = 0usize;
+        loop {
+            let conn = &mut self.conns[i];
+            match conn.decoder.next() {
+                Ok(Some((msg, n))) => {
+                    conn.stats.frames_recv += 1;
+                    conn.stats.bytes_recv += n as u64;
+                    metrics::FRAMES_RECV.inc();
+                    metrics::NET_RX_BYTES.add(n as u64);
+                    conn.inbox
+                        .push_back((msg, crate::util::logging::elapsed_ns()));
+                    self.order.push_back(i);
+                    decoded += 1;
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    let msg = format!("{}: {e}", conn.peer);
+                    self.close_conn(i, Some(TransportError::Protocol(msg)));
+                    break;
+                }
+            }
+        }
+        if hit_eof {
+            // leftover bytes after extracting every complete frame = a
+            // genuine mid-frame truncation; none = clean hang-up
+            // (surfaces as PeerClosed via terminal_error)
+            let buffered = self.conns[i].decoder.buffered();
+            let failure = if buffered > 0 {
+                Some(TransportError::Io(format!(
+                    "{}: connection closed mid-frame ({buffered} bytes buffered)",
+                    self.conns[i].peer
+                )))
+            } else {
+                None
+            };
+            self.close_conn(i, failure);
+        }
+        // read-ahead gate: at the cap, leave the interest set; bytes back
+        // up into the TCP window until the scheduler drains the inbox
+        if !self.conns[i].closed
+            && !self.conns[i].gated
+            && self.conns[i].inbox.len() >= MAX_QUEUED_FRAMES
+        {
+            let _ = self.poller.mask(&self.conns[i].stream, i);
+            self.conns[i].gated = true;
+        }
+        self.note_buf_cap(i);
+        decoded
+    }
+
+    /// Re-arm slot `i` after the scheduler drained its inbox below the
+    /// cap. The re-registration regenerates an epoll edge if kernel bytes
+    /// are pending; the forced-ready mark covers bytes already sitting in
+    /// the userspace ring.
+    fn ungate(&mut self, i: usize) -> Result<(), TransportError> {
+        if !self.conns[i].gated
+            || self.conns[i].closed
+            || self.conns[i].inbox.len() >= MAX_QUEUED_FRAMES
+        {
+            return Ok(());
+        }
+        self.poller
+            .unmask(&self.conns[i].stream, i)
+            .map_err(TransportError::Io)?;
+        self.conns[i].gated = false;
+        self.poller.force_ready(i);
+        Ok(())
     }
 
     /// One poll pass: wait up to `timeout_ms` (-1 = forever) for readable
@@ -219,95 +426,16 @@ impl PollFleet {
             }
             None => timeout_ms,
         };
-        metrics::OPEN_CONNS.set(self.conns.iter().filter(|c| !c.closed).count() as i64);
-        // connections whose inbox is at the read-ahead cap are left out of
-        // the poll set entirely: their bytes back up into the TCP window
-        // until the scheduler drains them
-        let open: Vec<usize> = (0..self.conns.len())
-            .filter(|&i| {
-                !self.conns[i].closed && self.conns[i].inbox.len() < MAX_QUEUED_FRAMES
-            })
-            .collect();
-        if open.is_empty() {
+        metrics::OPEN_CONNS.set(self.open_count as i64);
+        if self.poller.armed() == 0 && !self.poller.has_forced() {
+            // every connection is closed or gated: nothing to wait on
             return Ok(0);
         }
-        let ready = {
-            let streams: Vec<&TcpStream> =
-                open.iter().map(|&i| &self.conns[i].stream).collect();
-            poll::wait_readable(&streams, timeout_ms).map_err(TransportError::Io)?
-        };
+        let n = self.poller.wait(timeout_ms).map_err(TransportError::Io)?;
+        metrics::READY_EVENTS.add(n as u64);
         let mut decoded = 0usize;
-        for (&i, &is_ready) in open.iter().zip(ready.iter()) {
-            if !is_ready {
-                continue;
-            }
-            // drain this socket completely, then extract complete frames;
-            // whether an EOF was clean is only decidable *after* the
-            // extraction pass (the final frames and the hang-up often land
-            // in the same poll wake-up)
-            let mut hit_eof = false;
-            loop {
-                match self.conns[i].stream.read(&mut self.rbuf) {
-                    Ok(0) => {
-                        hit_eof = true;
-                        break;
-                    }
-                    Ok(n) => {
-                        let conn = &mut self.conns[i];
-                        conn.decoder.feed(&self.rbuf[..n]);
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
-                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-                    Err(e) => {
-                        let conn = &mut self.conns[i];
-                        conn.closed = true;
-                        conn.failure = Some(TransportError::Io(format!(
-                            "{}: read: {e}",
-                            conn.peer
-                        )));
-                        break;
-                    }
-                }
-            }
-            loop {
-                match self.conns[i].decoder.next() {
-                    Ok(Some((msg, n))) => {
-                        let conn = &mut self.conns[i];
-                        conn.stats.frames_recv += 1;
-                        conn.stats.bytes_recv += n as u64;
-                        metrics::FRAMES_RECV.inc();
-                        metrics::NET_RX_BYTES.add(n as u64);
-                        conn.inbox
-                            .push_back((msg, crate::util::logging::elapsed_ns()));
-                        self.order.push_back(i);
-                        decoded += 1;
-                    }
-                    Ok(None) => break,
-                    Err(e) => {
-                        let conn = &mut self.conns[i];
-                        conn.closed = true;
-                        conn.failure = Some(TransportError::Protocol(format!(
-                            "{}: {e}",
-                            conn.peer
-                        )));
-                        break;
-                    }
-                }
-            }
-            if hit_eof {
-                let conn = &mut self.conns[i];
-                conn.closed = true;
-                // leftover bytes after extracting every complete frame =
-                // a genuine mid-frame truncation; none = clean hang-up
-                // (surfaces as PeerClosed via terminal_error)
-                if conn.failure.is_none() && conn.decoder.buffered() > 0 {
-                    conn.failure = Some(TransportError::Io(format!(
-                        "{}: connection closed mid-frame ({} bytes buffered)",
-                        conn.peer,
-                        conn.decoder.buffered()
-                    )));
-                }
-            }
+        for k in 0..n {
+            decoded += self.service(self.poller.ready_token(k));
         }
         metrics::QUEUE_DEPTH.set(self.order.len() as i64);
         Ok(decoded)
@@ -341,6 +469,18 @@ impl PollFleet {
     }
 }
 
+impl Drop for PollFleet {
+    fn drop(&mut self) {
+        // return this fleet's retained ring capacity to the gauge so a
+        // finished session reads as zero
+        for c in &self.conns {
+            if c.buf_cap > 0 {
+                metrics::CONN_BUF_BYTES.add(-(c.buf_cap as i64));
+            }
+        }
+    }
+}
+
 impl Fleet for PollFleet {
     fn devices(&self) -> usize {
         self.conns.len()
@@ -351,14 +491,37 @@ impl Fleet for PollFleet {
     }
 
     fn send(&mut self, d: usize, msg: &Message) -> Result<(), TransportError> {
-        let frame = msg.encode_frame();
+        // payload-bearing frames split into [header+prefix | payload] for a
+        // vectored write: the payload bytes are borrowed from the message,
+        // never copied into a per-device frame buffer — a broadcast's
+        // shared payload goes out of every socket from one allocation
+        let payload: &[u8] = match msg.encode_frame_prefix(&mut self.wbuf) {
+            Some(p) => p,
+            None => {
+                // control frames are tiny; assemble them whole
+                let frame = msg.encode_frame();
+                self.wbuf.clear();
+                self.wbuf.bytes(&frame);
+                &[]
+            }
+        };
         let conn = &mut self.conns[d];
         if conn.closed {
             return Err(conn.terminal_error());
         }
+        let head = self.wbuf.as_slice();
+        let total = head.len() + payload.len();
+        let stall_ms =
+            self.write_stall_secs.saturating_mul(1000).min(i32::MAX as u64) as i32;
         let mut off = 0usize;
-        while off < frame.len() {
-            match conn.stream.write(&frame[off..]) {
+        while off < total {
+            let res = if off < head.len() {
+                let bufs = [IoSlice::new(&head[off..]), IoSlice::new(payload)];
+                conn.stream.write_vectored(&bufs)
+            } else {
+                conn.stream.write(&payload[off - head.len()..])
+            };
+            match res {
                 Ok(0) => {
                     return Err(TransportError::Io(format!(
                         "{}: write returned 0",
@@ -371,13 +534,15 @@ impl Fleet for PollFleet {
                     // single-threaded loop: bound the stall and fail the
                     // connection instead of retrying forever
                     let _sp = crate::span!("write_park", gid = self.shape.gid(d));
-                    if !poll::wait_writable(&conn.stream, 10_000)
+                    if !poll::wait_writable(&conn.stream, stall_ms)
                         .map_err(TransportError::Io)?
                     {
+                        metrics::WRITE_STALLS.inc();
                         return Err(TransportError::Io(format!(
-                            "{}: write of {} stalled for 10s (peer not reading)",
+                            "{}: write of {} stalled for {}s (peer not reading)",
                             conn.peer,
-                            msg.type_name()
+                            msg.type_name(),
+                            self.write_stall_secs
                         )));
                     }
                 }
@@ -392,9 +557,9 @@ impl Fleet for PollFleet {
             }
         }
         conn.stats.frames_sent += 1;
-        conn.stats.bytes_sent += frame.len() as u64;
+        conn.stats.bytes_sent += total as u64;
         metrics::FRAMES_SENT.inc();
-        metrics::NET_TX_BYTES.add(frame.len() as u64);
+        metrics::NET_TX_BYTES.add(total as u64);
         Ok(())
     }
 
@@ -407,6 +572,7 @@ impl Fleet for PollFleet {
                     .pop_front()
                     .expect("order entry implies a queued message");
                 self.note_queue_wait(d, enq_ns);
+                self.ungate(d)?;
                 return Ok(msg);
             }
             if self.conns[d].closed {
@@ -429,6 +595,7 @@ impl Fleet for PollFleet {
                     .pop_front()
                     .expect("order entry implies a queued message");
                 self.note_queue_wait(i, enq_ns);
+                self.ungate(i)?;
                 return Ok(Some((i, msg)));
             }
             // queue drained (so every inbox is empty): any closed socket
@@ -496,34 +663,53 @@ mod tests {
         }
     }
 
+    fn backends_under_test() -> Vec<poll::Backend> {
+        if cfg!(target_os = "linux") {
+            vec![poll::Backend::Epoll, poll::Backend::Poll]
+        } else {
+            vec![poll::Backend::Poll]
+        }
+    }
+
+    fn opts(backend: poll::Backend) -> FleetOptions {
+        FleetOptions { backend, write_stall_secs: 10 }
+    }
+
     #[test]
     fn accepts_and_orders_by_device_id() {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap().to_string();
-        let mut handles = Vec::new();
-        // connect in reverse id order to force re-indexing
-        for d in [2u32, 0, 1] {
-            let addr = addr.clone();
-            handles.push(thread::spawn(move || {
-                let mut t = TcpTransport::connect(&addr).unwrap();
-                t.send(&hello(d, 3)).unwrap();
-                // wait for one reply so the server-side test can send
-                let ack = t.recv().unwrap();
-                assert!(matches!(ack, Message::HelloAck { .. }));
-            }));
-        }
-        let (mut fleet, hellos) = PollFleet::accept(&listener, FleetShape::flat(3)).unwrap();
-        assert_eq!(fleet.devices(), 3);
-        for (d, h) in hellos.iter().enumerate() {
-            assert_eq!(h.device_id, d);
-        }
-        for d in 0..3 {
-            fleet
-                .send(d, &Message::HelloAck { device_id: d as u32, rounds: 1, agg_every: 1 })
-                .unwrap();
-        }
-        for h in handles {
-            h.join().unwrap();
+        for backend in backends_under_test() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            let mut handles = Vec::new();
+            // connect in reverse id order to force re-indexing
+            for d in [2u32, 0, 1] {
+                let addr = addr.clone();
+                handles.push(thread::spawn(move || {
+                    let mut t = TcpTransport::connect(&addr).unwrap();
+                    t.send(&hello(d, 3)).unwrap();
+                    // wait for one reply so the server-side test can send
+                    let ack = t.recv().unwrap();
+                    assert!(matches!(ack, Message::HelloAck { .. }));
+                }));
+            }
+            let (mut fleet, hellos) =
+                PollFleet::accept_with(&listener, FleetShape::flat(3), opts(backend))
+                    .unwrap();
+            assert_eq!(fleet.devices(), 3);
+            for (d, h) in hellos.iter().enumerate() {
+                assert_eq!(h.device_id, d);
+            }
+            for d in 0..3 {
+                fleet
+                    .send(
+                        d,
+                        &Message::HelloAck { device_id: d as u32, rounds: 1, agg_every: 1 },
+                    )
+                    .unwrap();
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
         }
     }
 
@@ -579,16 +765,148 @@ mod tests {
 
     #[test]
     fn disconnect_surfaces_peer_closed() {
+        for backend in backends_under_test() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            let handle = thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr).unwrap();
+                t.send(&hello(0, 1)).unwrap();
+                // drop: clean close after the handshake
+            });
+            let (mut fleet, _) =
+                PollFleet::accept_with(&listener, FleetShape::flat(1), opts(backend))
+                    .unwrap();
+            handle.join().unwrap();
+            let err = fleet.recv_from(0).unwrap_err();
+            assert!(err.is_peer_closed(), "want PeerClosed, got {err:?}");
+        }
+    }
+
+    #[test]
+    fn flood_gates_at_the_cap_and_recovers_in_order() {
+        // a device that fires 50 frames back-to-back must not balloon the
+        // inbox: the gate engages at MAX_QUEUED_FRAMES and the ungate path
+        // re-arms the socket as the scheduler drains, preserving order
+        const FLOOD: u32 = 50;
+        for backend in backends_under_test() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            let handle = thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr).unwrap();
+                t.send(&hello(0, 1)).unwrap();
+                for r in 0..FLOOD {
+                    t.send(&Message::RoundOpen { round: r, sync: false }).unwrap();
+                }
+                let _ = t.recv(); // hold open until shutdown
+            });
+            let (mut fleet, _) =
+                PollFleet::accept_with(&listener, FleetShape::flat(1), opts(backend))
+                    .unwrap();
+            for want in 0..FLOOD {
+                let (i, msg) = fleet.recv_any(None).unwrap().unwrap();
+                assert_eq!(i, 0);
+                match msg {
+                    Message::RoundOpen { round, .. } => {
+                        assert_eq!(round, want, "{}: flood reordered", backend.as_str())
+                    }
+                    other => panic!("unexpected {}", other.type_name()),
+                }
+                assert!(
+                    fleet.conns[0].inbox.len() <= MAX_QUEUED_FRAMES,
+                    "{}: inbox grew past the gate ({} frames)",
+                    backend.as_str(),
+                    fleet.conns[0].inbox.len()
+                );
+            }
+            fleet.send(0, &Message::Shutdown { reason: "t".into() }).unwrap();
+            handle.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn write_stall_zero_aborts_and_counts() {
+        // a peer that never reads: with --write-stall-secs 0 the first
+        // full-buffer WouldBlock aborts instead of parking for 10s
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let handle = thread::spawn(move || {
             let mut t = TcpTransport::connect(&addr).unwrap();
             t.send(&hello(0, 1)).unwrap();
-            // drop: clean close after the handshake
+            // never read again; hold the socket open long enough for the
+            // server's send side to jam
+            thread::sleep(std::time::Duration::from_secs(4));
+        });
+        let (mut fleet, _) = PollFleet::accept_with(
+            &listener,
+            FleetShape::flat(1),
+            FleetOptions { backend: poll::Backend::Auto, write_stall_secs: 0 },
+        )
+        .unwrap();
+        let stalls_before = metrics::WRITE_STALLS.get();
+        let payload = vec![0u8; 256 * 1024];
+        let t0 = Instant::now();
+        let mut result = Ok(());
+        for round in 0..64 {
+            result = fleet.send(
+                0,
+                &Message::ModelSync { round, device_id: 0, payload: payload.clone() },
+            );
+            if result.is_err() {
+                break;
+            }
+        }
+        let err = result.expect_err("send into a jammed socket must abort");
+        assert!(
+            err.to_string().contains("stalled"),
+            "want a stall error, got: {err}"
+        );
+        assert!(
+            metrics::WRITE_STALLS.get() > stalls_before,
+            "slacc_write_stall_total did not move"
+        );
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(3),
+            "stall abort took {:?} with write_stall_secs=0",
+            t0.elapsed()
+        );
+        drop(fleet);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn giant_frame_capacity_is_reclaimed_after_consumption() {
+        use crate::transport::proto::DECODER_RETAIN_CAP;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let big = 4 * 1024 * 1024;
+        let handle = thread::spawn(move || {
+            let mut t = TcpTransport::connect(&addr).unwrap();
+            t.send(&hello(0, 1)).unwrap();
+            t.send(&Message::Gradients {
+                round: 0,
+                device_id: 0,
+                loss: 0.0,
+                payload: vec![3u8; big],
+            })
+            .unwrap();
+            let _ = t.recv();
         });
         let (mut fleet, _) = PollFleet::accept(&listener, FleetShape::flat(1)).unwrap();
+        let (_, msg) = fleet.recv_any(None).unwrap().unwrap();
+        assert!(matches!(msg, Message::Gradients { .. }));
+        // ring capacity ballooned for the 4 MiB frame, then reclaimed on
+        // drain; the gauge tracks the retained footprint
+        assert!(
+            fleet.conns[0].decoder.capacity() <= DECODER_RETAIN_CAP,
+            "ring retained {} bytes after the giant frame",
+            fleet.conns[0].decoder.capacity()
+        );
+        assert!(
+            metrics::CONN_BUF_BYTES.get() >= 0,
+            "conn-buf gauge went negative"
+        );
+        fleet.send(0, &Message::Shutdown { reason: "t".into() }).unwrap();
+        drop(fleet);
         handle.join().unwrap();
-        let err = fleet.recv_from(0).unwrap_err();
-        assert!(err.is_peer_closed(), "want PeerClosed, got {err:?}");
     }
 }

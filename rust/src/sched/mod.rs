@@ -24,10 +24,13 @@
 //! [`crate::net::timeline::Timeline`] so time-to-accuracy can be compared
 //! across policies.
 
+#[cfg(target_os = "linux")]
+pub mod epoll;
 pub mod event_loop;
 pub mod fleet;
 pub mod poll;
 pub mod round;
+pub mod soak;
 
 /// How the server orders device work within a round.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]

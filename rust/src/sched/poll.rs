@@ -1,14 +1,22 @@
 //! Socket-readiness polling for the event-loop server — `libc` `poll(2)`
-//! through a direct FFI declaration, so no async runtime (or even the
-//! `libc` crate) is needed. `poll` scales comfortably to the few hundred
-//! sockets one `slacc serve` shard handles; an epoll/kqueue backend can
-//! slot in behind the same two functions if fleets outgrow it.
+//! and `epoll(7)` through direct FFI declarations, so no async runtime (or
+//! even the `libc` crate) is needed.
+//!
+//! Two layers live here:
+//!
+//! * The original free functions [`wait_readable`]/[`wait_writable`] — a
+//!   stateless one-shot `poll(2)` over a slice of streams. Still used for
+//!   single-socket waits (write parking, client-side receive timeouts).
+//! * The [`Poller`] seam — a persistent readiness set with stable integer
+//!   tokens, selected by [`Backend`]: edge-triggered `epoll` on linux
+//!   (O(ready) dispatch, no per-wakeup allocation), a persistent `poll(2)`
+//!   set elsewhere on unix (O(n) kernel scan but zero rebuild cost), and a
+//!   busy-poll fallback on non-unix targets. The event loop talks only to
+//!   `Poller`, so all three backends drive bit-identical sessions.
 //!
 //! The API deliberately traffics in `&TcpStream`, not raw fds, so the
-//! unix-only fd plumbing stays inside this module. On non-unix targets the
-//! functions degrade to a short-sleep busy poll over the non-blocking
-//! sockets — correct (reads still return `WouldBlock`), just less
-//! efficient.
+//! unix-only fd plumbing stays inside this module (and
+//! [`crate::sched::epoll`]).
 
 use std::net::TcpStream;
 
@@ -103,6 +111,300 @@ pub fn wait_writable(_stream: &TcpStream, _timeout_ms: i32) -> Result<bool, Stri
     Ok(true)
 }
 
+/// Which readiness backend drives the event loop. Parsed from
+/// `--io-backend`; `Auto` picks the best available for the target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Edge-triggered epoll on linux, persistent poll elsewhere on unix,
+    /// busy-poll on everything else.
+    #[default]
+    Auto,
+    /// Force edge-triggered epoll (linux only — errors elsewhere).
+    Epoll,
+    /// Force the portable persistent-`poll(2)` set.
+    Poll,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend, String> {
+        match s {
+            "auto" => Ok(Backend::Auto),
+            "epoll" => Ok(Backend::Epoll),
+            "poll" => Ok(Backend::Poll),
+            other => Err(format!(
+                "unknown io backend {other:?} (expected auto|epoll|poll)"
+            )),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::Epoll => "epoll",
+            Backend::Poll => "poll",
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+use crate::sched::epoll::Epoll;
+
+enum Imp {
+    #[cfg(target_os = "linux")]
+    Epoll(Epoll),
+    #[cfg(unix)]
+    Poll(PollSet),
+    #[cfg(not(unix))]
+    Busy(BusySet),
+}
+
+/// Persistent readiness set over stable caller-chosen tokens.
+///
+/// Registered streams stay in the set across wakeups; [`Poller::wait`]
+/// fills an internal ready list that callers walk via
+/// [`Poller::ready_token`]. Backpressure gating goes through
+/// [`Poller::mask`]/[`Poller::unmask`]; [`Poller::force_ready`] marks a
+/// token ready on the next `wait` regardless of kernel state (used after
+/// un-gating so bytes already buffered in userspace are re-serviced even
+/// if no new kernel edge fires).
+///
+/// None of the steady-state methods allocate: the ready/forced lists and
+/// the backend's fd tables are reused across wakeups.
+pub struct Poller {
+    imp: Imp,
+    ready: Vec<usize>,
+    forced: Vec<usize>,
+    armed: usize,
+}
+
+impl Poller {
+    pub fn new(backend: Backend) -> Result<Poller, String> {
+        let imp = match backend {
+            #[cfg(target_os = "linux")]
+            Backend::Auto | Backend::Epoll => Imp::Epoll(Epoll::new()?),
+            #[cfg(all(unix, not(target_os = "linux")))]
+            Backend::Auto => Imp::Poll(PollSet::new()),
+            #[cfg(not(target_os = "linux"))]
+            Backend::Epoll => {
+                return Err(
+                    "io backend 'epoll' is linux-only; use --io-backend poll".to_string()
+                )
+            }
+            #[cfg(unix)]
+            Backend::Poll => Imp::Poll(PollSet::new()),
+            #[cfg(not(unix))]
+            Backend::Auto | Backend::Poll => Imp::Busy(BusySet::new()),
+        };
+        Ok(Poller { imp, ready: Vec::new(), forced: Vec::new(), armed: 0 })
+    }
+
+    /// Resolved backend name for logs and bench rows.
+    pub fn kind(&self) -> &'static str {
+        match &self.imp {
+            #[cfg(target_os = "linux")]
+            Imp::Epoll(_) => "epoll",
+            #[cfg(unix)]
+            Imp::Poll(_) => "poll",
+            #[cfg(not(unix))]
+            Imp::Busy(_) => "busy",
+        }
+    }
+
+    /// Add `stream` to the interest set under `token`. Tokens are caller
+    /// state (connection slot indices) and must be unique among armed
+    /// entries.
+    pub fn register(&mut self, stream: &TcpStream, token: usize) -> Result<(), String> {
+        match &mut self.imp {
+            #[cfg(target_os = "linux")]
+            Imp::Epoll(ep) => ep.add(stream, token)?,
+            #[cfg(unix)]
+            Imp::Poll(ps) => ps.add(stream, token),
+            #[cfg(not(unix))]
+            Imp::Busy(bs) => bs.add(token),
+        }
+        self.armed += 1;
+        Ok(())
+    }
+
+    /// Remove `stream`/`token` from the set. Tolerates entries that were
+    /// never registered or were already masked, so close paths can be
+    /// unconditional.
+    pub fn deregister(&mut self, stream: &TcpStream, token: usize) -> Result<(), String> {
+        let was = match &mut self.imp {
+            #[cfg(target_os = "linux")]
+            Imp::Epoll(ep) => {
+                ep.del(stream)?;
+                true // kernel set is truth; ENOENT already swallowed
+            }
+            #[cfg(unix)]
+            Imp::Poll(ps) => ps.remove(stream, token),
+            #[cfg(not(unix))]
+            Imp::Busy(bs) => bs.remove(token),
+        };
+        if was && self.armed > 0 {
+            self.armed -= 1;
+        }
+        Ok(())
+    }
+
+    /// Stop delivering readiness for `token` (backpressure gate). The
+    /// stream stays open; kernel-side bytes back up into the TCP window.
+    pub fn mask(&mut self, stream: &TcpStream, token: usize) -> Result<(), String> {
+        self.deregister(stream, token)
+    }
+
+    /// Re-arm a gated `token`. On epoll the re-`ADD` regenerates an edge if
+    /// the socket holds bytes; pair with [`Poller::force_ready`] so data
+    /// already drained into userspace is re-serviced too.
+    pub fn unmask(&mut self, stream: &TcpStream, token: usize) -> Result<(), String> {
+        self.register(stream, token)
+    }
+
+    /// Mark `token` ready on the next [`Poller::wait`] regardless of
+    /// kernel readiness.
+    pub fn force_ready(&mut self, token: usize) {
+        self.forced.push(token);
+    }
+
+    /// Number of currently armed (registered, unmasked) entries.
+    pub fn armed(&self) -> usize {
+        self.armed
+    }
+
+    /// Whether any force-marked tokens are pending delivery.
+    pub fn has_forced(&self) -> bool {
+        !self.forced.is_empty()
+    }
+
+    /// Wait up to `timeout_ms` (`-1` = forever) for readiness; returns how
+    /// many ready tokens can be fetched via [`Poller::ready_token`].
+    /// Force-marked tokens are delivered first and turn the wait into a
+    /// non-blocking peek.
+    pub fn wait(&mut self, timeout_ms: i32) -> Result<usize, String> {
+        self.ready.clear();
+        self.ready.append(&mut self.forced);
+        let timeout_ms = if self.ready.is_empty() { timeout_ms } else { 0 };
+        match &mut self.imp {
+            #[cfg(target_os = "linux")]
+            Imp::Epoll(ep) => ep.wait(timeout_ms, &mut self.ready)?,
+            #[cfg(unix)]
+            Imp::Poll(ps) => ps.wait(timeout_ms, &mut self.ready)?,
+            #[cfg(not(unix))]
+            Imp::Busy(bs) => bs.wait(timeout_ms, &mut self.ready),
+        }
+        Ok(self.ready.len())
+    }
+
+    /// The `k`-th ready token from the last [`Poller::wait`].
+    pub fn ready_token(&self, k: usize) -> usize {
+        self.ready[k]
+    }
+}
+
+/// Persistent `poll(2)` interest set: the pollfd array survives across
+/// wakeups (no per-wakeup rebuild or allocation); the kernel scan stays
+/// O(n), which is the cost epoll removes.
+#[cfg(unix)]
+struct PollSet {
+    fds: Vec<sys::PollFd>,
+    tokens: Vec<usize>,
+}
+
+#[cfg(unix)]
+impl PollSet {
+    fn new() -> PollSet {
+        PollSet { fds: Vec::new(), tokens: Vec::new() }
+    }
+
+    fn add(&mut self, stream: &TcpStream, token: usize) {
+        use std::os::unix::io::AsRawFd;
+        let fd = stream.as_raw_fd();
+        // re-adding a known token re-arms it in place
+        if let Some(i) = self.tokens.iter().position(|&t| t == token) {
+            self.fds[i] = sys::PollFd { fd, events: sys::POLLIN, revents: 0 };
+            return;
+        }
+        self.tokens.push(token);
+        self.fds.push(sys::PollFd { fd, events: sys::POLLIN, revents: 0 });
+    }
+
+    /// Returns whether the token was present.
+    fn remove(&mut self, _stream: &TcpStream, token: usize) -> bool {
+        match self.tokens.iter().position(|&t| t == token) {
+            Some(i) => {
+                self.fds.swap_remove(i);
+                self.tokens.swap_remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn wait(&mut self, timeout_ms: i32, out: &mut Vec<usize>) -> Result<(), String> {
+        if self.fds.is_empty() {
+            if timeout_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(timeout_ms as u64));
+            }
+            return Ok(());
+        }
+        loop {
+            let rc = unsafe {
+                sys::poll(self.fds.as_mut_ptr(), self.fds.len() as sys::Nfds, timeout_ms)
+            };
+            if rc < 0 {
+                let e = std::io::Error::last_os_error();
+                if e.kind() == std::io::ErrorKind::Interrupted {
+                    continue;
+                }
+                return Err(format!("poll: {e}"));
+            }
+            for (i, p) in self.fds.iter_mut().enumerate() {
+                if p.revents != 0 {
+                    out.push(self.tokens[i]);
+                    p.revents = 0;
+                }
+            }
+            return Ok(());
+        }
+    }
+}
+
+/// Non-unix fallback: every armed token is "ready" after a 1ms nap;
+/// non-blocking reads sort out who actually has bytes.
+#[cfg(not(unix))]
+struct BusySet {
+    tokens: Vec<usize>,
+}
+
+#[cfg(not(unix))]
+impl BusySet {
+    fn new() -> BusySet {
+        BusySet { tokens: Vec::new() }
+    }
+
+    fn add(&mut self, token: usize) {
+        if !self.tokens.contains(&token) {
+            self.tokens.push(token);
+        }
+    }
+
+    fn remove(&mut self, token: usize) -> bool {
+        match self.tokens.iter().position(|&t| t == token) {
+            Some(i) => {
+                self.tokens.swap_remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn wait(&mut self, timeout_ms: i32, out: &mut Vec<usize>) {
+        let nap = if timeout_ms < 0 { 1 } else { (timeout_ms as u64).min(1) };
+        std::thread::sleep(std::time::Duration::from_millis(nap.max(1)));
+        out.extend_from_slice(&self.tokens);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +449,116 @@ mod tests {
         drop(client);
         let ready = wait_readable(&[&server], 2000).unwrap();
         assert!(ready[0], "hung-up socket must be reported (read will see EOF)");
+    }
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        (client, server)
+    }
+
+    fn backends_under_test() -> Vec<Backend> {
+        #[cfg(target_os = "linux")]
+        return vec![Backend::Epoll, Backend::Poll];
+        #[cfg(not(target_os = "linux"))]
+        vec![Backend::Poll]
+    }
+
+    #[test]
+    fn poller_reports_ready_tokens_on_every_backend() {
+        for backend in backends_under_test() {
+            let (mut c0, s0) = pair();
+            let (_c1, s1) = pair();
+            let mut p = Poller::new(backend).unwrap();
+            p.register(&s0, 10).unwrap();
+            p.register(&s1, 20).unwrap();
+            assert_eq!(p.armed(), 2);
+
+            let n = p.wait(20).unwrap();
+            assert_eq!(n, 0, "{}: quiet sockets reported ready", p.kind());
+
+            c0.write_all(b"hi").unwrap();
+            let n = p.wait(2000).unwrap();
+            let ready: Vec<usize> = (0..n).map(|k| p.ready_token(k)).collect();
+            assert!(
+                ready.contains(&10) && !ready.contains(&20),
+                "{}: got {ready:?}, want [10]",
+                p.kind()
+            );
+        }
+    }
+
+    #[test]
+    fn poller_mask_gates_and_unmask_rearms() {
+        for backend in backends_under_test() {
+            let (mut c, s) = pair();
+            let mut p = Poller::new(backend).unwrap();
+            p.register(&s, 5).unwrap();
+            c.write_all(b"x").unwrap();
+            assert_eq!(p.wait(2000).unwrap(), 1, "{}", p.kind());
+
+            // gate without draining: no wakeups even though bytes pend
+            p.mask(&s, 5).unwrap();
+            assert_eq!(p.armed(), 0);
+            assert_eq!(p.wait(20).unwrap(), 0, "{}: masked token woke up", p.kind());
+
+            // un-gate: pending bytes must surface again
+            p.unmask(&s, 5).unwrap();
+            assert_eq!(p.armed(), 1);
+            let n = p.wait(2000).unwrap();
+            assert!(n >= 1, "{}: unmasked token never re-fired", p.kind());
+            assert_eq!(p.ready_token(0), 5);
+        }
+    }
+
+    #[test]
+    fn poller_force_ready_preempts_the_wait() {
+        for backend in backends_under_test() {
+            let (_c, s) = pair();
+            let mut p = Poller::new(backend).unwrap();
+            p.register(&s, 9).unwrap();
+            p.force_ready(9);
+            let start = std::time::Instant::now();
+            let n = p.wait(5_000).unwrap();
+            assert!(n >= 1, "{}", p.kind());
+            assert_eq!(p.ready_token(0), 9);
+            assert!(
+                start.elapsed() < std::time::Duration::from_secs(2),
+                "{}: forced token did not shortcut the timeout",
+                p.kind()
+            );
+        }
+    }
+
+    #[test]
+    fn poller_deregister_tolerates_unknown_tokens() {
+        for backend in backends_under_test() {
+            let (_c, s) = pair();
+            let mut p = Poller::new(backend).unwrap();
+            p.deregister(&s, 3).unwrap(); // never registered
+            p.register(&s, 3).unwrap();
+            p.deregister(&s, 3).unwrap();
+            assert_eq!(p.armed(), 0, "{}", p.kind());
+        }
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    #[test]
+    fn epoll_backend_errors_off_linux() {
+        assert!(Poller::new(Backend::Epoll).is_err());
+    }
+
+    #[test]
+    fn backend_parses_and_round_trips() {
+        assert_eq!(Backend::parse("auto").unwrap(), Backend::Auto);
+        assert_eq!(Backend::parse("epoll").unwrap(), Backend::Epoll);
+        assert_eq!(Backend::parse("poll").unwrap(), Backend::Poll);
+        assert!(Backend::parse("kqueue").is_err());
+        for b in [Backend::Auto, Backend::Epoll, Backend::Poll] {
+            assert_eq!(Backend::parse(b.as_str()).unwrap(), b);
+        }
     }
 }

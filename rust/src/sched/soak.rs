@@ -1,0 +1,379 @@
+//! Scale-soak harness: drive one [`crate::sched::event_loop::PollFleet`]
+//! with hundreds-to-thousands of scripted mock devices and report
+//! per-device wire statistics, so integration tests and the
+//! `benches/event_loop.rs` scale curve can assert byte parity across I/O
+//! backends and fleet sizes.
+//!
+//! The protocol is a miniature of the real serve loop with fully
+//! deterministic payloads:
+//!
+//! 1. every device connects and Hellos; the server HelloAcks each slot;
+//! 2. per round, the server RoundOpens every device, then `recv_any`s one
+//!    Activations frame per device (payload is a [`Pcg32`] pattern keyed
+//!    by `(device, round)`, verified byte-for-byte on receipt) and
+//!    immediately answers it with a Gradients frame carrying the
+//!    downlink pattern (verified on the device side);
+//! 3. after the last round every device gets a Shutdown.
+//!
+//! Because every device exchanges frames of identical sizes, every
+//! per-device [`WireStats`] in a clean run is identical — to every other
+//! device in the same run, to the same run on the other I/O backend, and
+//! to a smaller reference fleet. That single `==` is the parity
+//! assertion the integration soak tests lean on.
+//!
+//! Devices are scripted blocking [`TcpTransport`]s multiplexed over a
+//! small pool of driver threads (device `d` belongs to thread
+//! `d % driver_threads`), so a 1024-device soak does not need 1024 OS
+//! threads. An optional slow reader — one device that sleeps before
+//! reading its round-0 downlink — exercises the server's write-park path
+//! under fleet load.
+
+use std::net::TcpListener;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::sched::event_loop::{FleetOptions, PollFleet};
+use crate::sched::fleet::Fleet;
+use crate::shard::FleetShape;
+use crate::transport::proto::Message;
+use crate::transport::tcp::TcpTransport;
+use crate::transport::{Transport, WireStats};
+use crate::util::rng::Pcg32;
+
+/// Pcg32 stream ids for the two payload directions, so the uplink and
+/// downlink patterns for the same `(device, round)` never coincide.
+const STREAM_UP: u64 = 0x5eed_0001;
+const STREAM_DOWN: u64 = 0x5eed_0002;
+
+/// Server side gives up if the fleet delivers nothing for this long —
+/// turns a deadlocked soak into a failed test instead of a hung one.
+const RECV_TIMEOUT_S: f64 = 60.0;
+
+/// One scale-soak run: fleet size, traffic shape, and I/O backend.
+#[derive(Debug, Clone)]
+pub struct SoakConfig {
+    /// Devices in the fleet (each is one real TCP connection).
+    pub devices: usize,
+    /// Rounds of RoundOpen → Activations → Gradients echo.
+    pub rounds: usize,
+    /// Uplink (Activations) payload bytes per device per round.
+    pub up_bytes: usize,
+    /// Downlink (Gradients) payload bytes per device per round.
+    pub down_bytes: usize,
+    /// Event-loop options for the server under test.
+    pub opts: FleetOptions,
+    /// Client driver threads; devices are striped across them.
+    pub driver_threads: usize,
+    /// `(device, pause_ms)`: that device sleeps `pause_ms` before reading
+    /// its round-0 Gradients, backing the server's write up against a
+    /// full TCP window.
+    pub slow_reader: Option<(usize, u64)>,
+}
+
+impl SoakConfig {
+    /// A small clean-echo soak; callers override fields as needed.
+    pub fn new(devices: usize, rounds: usize) -> SoakConfig {
+        SoakConfig {
+            devices,
+            rounds,
+            up_bytes: 96,
+            down_bytes: 128,
+            opts: FleetOptions::default(),
+            driver_threads: 8,
+            slow_reader: None,
+        }
+    }
+}
+
+/// What a soak run measured.
+#[derive(Debug, Clone)]
+pub struct SoakReport {
+    /// Which readiness backend actually served the run.
+    pub backend: &'static str,
+    /// Wall-clock seconds from HelloAck to the last Shutdown sent.
+    pub wall_s: f64,
+    /// Per-device framed-byte accounting, indexed by device id. In a
+    /// clean run every entry is identical — the parity invariant.
+    pub per_device: Vec<WireStats>,
+}
+
+/// Deterministic payload for one direction of one `(device, round)` step.
+fn pattern(device: usize, round: usize, len: usize, stream: u64) -> Vec<u8> {
+    let mut rng = Pcg32::new(((device as u64) << 32) | round as u64, stream);
+    let mut buf = vec![0u8; len];
+    for b in buf.iter_mut() {
+        *b = rng.next_u32() as u8;
+    }
+    buf
+}
+
+fn hello_for(device: usize, devices: usize) -> Message {
+    let specs = crate::codecs::stream::StreamSpecs::parse("identity", "identity", "identity")
+        .expect("identity stream specs always parse");
+    Message::Hello {
+        device_id: device as u32,
+        devices: devices as u32,
+        shard_len: 8,
+        config_fp: 1,
+        uplink: specs.uplink.as_str().to_string(),
+        downlink: specs.downlink.as_str().to_string(),
+        sync: specs.sync.as_str().to_string(),
+        streams_fp: specs.fingerprint(),
+    }
+}
+
+/// Drive the devices striped onto one client thread through the whole
+/// scripted session.
+fn drive_clients(tid: usize, addr: String, cfg: SoakConfig) -> Result<(), String> {
+    let mine: Vec<usize> =
+        (0..cfg.devices).filter(|d| d % cfg.driver_threads == tid).collect();
+    let mut conns = Vec::with_capacity(mine.len());
+    for &d in &mine {
+        let mut conn = TcpTransport::connect(&addr)?;
+        conn.send(&hello_for(d, cfg.devices))
+            .map_err(|e| format!("device {d}: hello send: {e}"))?;
+        conns.push(conn);
+    }
+    for (k, &d) in mine.iter().enumerate() {
+        match conns[k].recv().map_err(|e| format!("device {d}: hello ack: {e}"))? {
+            Message::HelloAck { device_id, .. } if device_id as usize == d => {}
+            other => {
+                return Err(format!(
+                    "device {d}: expected HelloAck, got {}",
+                    other.type_name()
+                ))
+            }
+        }
+    }
+    for r in 0..cfg.rounds {
+        for (k, &d) in mine.iter().enumerate() {
+            match conns[k].recv().map_err(|e| format!("device {d}: round open: {e}"))? {
+                Message::RoundOpen { round, .. } if round as usize == r => {}
+                other => {
+                    return Err(format!(
+                        "device {d} round {r}: expected RoundOpen, got {}",
+                        other.type_name()
+                    ))
+                }
+            }
+            conns[k]
+                .send(&Message::Activations {
+                    round: r as u32,
+                    device_id: d as u32,
+                    labels: Vec::new(),
+                    payload: pattern(d, r, cfg.up_bytes, STREAM_UP),
+                })
+                .map_err(|e| format!("device {d} round {r}: activations: {e}"))?;
+            if r == 0 {
+                if let Some((slow, pause_ms)) = cfg.slow_reader {
+                    if slow == d {
+                        thread::sleep(Duration::from_millis(pause_ms));
+                    }
+                }
+            }
+            match conns[k]
+                .recv()
+                .map_err(|e| format!("device {d} round {r}: gradients: {e}"))?
+            {
+                Message::Gradients { round, device_id, payload, .. } => {
+                    if round as usize != r || device_id as usize != d {
+                        return Err(format!(
+                            "device {d} round {r}: gradients addressed to \
+                             device {device_id} round {round}"
+                        ));
+                    }
+                    if payload != pattern(d, r, cfg.down_bytes, STREAM_DOWN) {
+                        return Err(format!(
+                            "device {d} round {r}: downlink payload corrupted"
+                        ));
+                    }
+                }
+                other => {
+                    return Err(format!(
+                        "device {d} round {r}: expected Gradients, got {}",
+                        other.type_name()
+                    ))
+                }
+            }
+        }
+    }
+    for (k, &d) in mine.iter().enumerate() {
+        match conns[k].recv().map_err(|e| format!("device {d}: shutdown: {e}"))? {
+            Message::Shutdown { .. } => {}
+            other => {
+                return Err(format!(
+                    "device {d}: expected Shutdown, got {}",
+                    other.type_name()
+                ))
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run one scripted soak session: spawn the client driver pool, serve the
+/// fleet from this thread, and return per-device wire accounting.
+pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport, String> {
+    if cfg.devices == 0 || cfg.rounds == 0 {
+        return Err("soak needs at least one device and one round".to_string());
+    }
+    let listener =
+        TcpListener::bind("127.0.0.1:0").map_err(|e| format!("soak bind: {e}"))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| format!("soak addr: {e}"))?
+        .to_string();
+
+    let threads = cfg.driver_threads.clamp(1, cfg.devices);
+    let mut run_cfg = cfg.clone();
+    run_cfg.driver_threads = threads;
+    let mut handles = Vec::with_capacity(threads);
+    for tid in 0..threads {
+        let addr = addr.clone();
+        let cfg = run_cfg.clone();
+        handles.push(
+            thread::Builder::new()
+                .name(format!("soak-drv-{tid}"))
+                .spawn(move || drive_clients(tid, addr, cfg))
+                .map_err(|e| format!("soak driver spawn: {e}"))?,
+        );
+    }
+
+    let serve = serve_soak(&listener, &run_cfg);
+
+    let mut client_err = None;
+    for handle in handles {
+        match handle.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                client_err.get_or_insert(e);
+            }
+            Err(_) => {
+                client_err.get_or_insert("soak driver panicked".to_string());
+            }
+        }
+    }
+    let report = serve?;
+    if let Some(e) = client_err {
+        return Err(format!("soak client: {e}"));
+    }
+    Ok(report)
+}
+
+/// The server half of [`run_soak`]: echo the scripted session over a
+/// [`PollFleet`] and account every device's traffic.
+fn serve_soak(listener: &TcpListener, cfg: &SoakConfig) -> Result<SoakReport, String> {
+    let devices = cfg.devices;
+    let shape = FleetShape::flat(devices);
+    let (mut fleet, _hellos) = PollFleet::accept_with(listener, shape, cfg.opts)?;
+    let backend = fleet.backend_kind();
+    let start = Instant::now();
+    for d in 0..devices {
+        fleet
+            .send(
+                d,
+                &Message::HelloAck {
+                    device_id: d as u32,
+                    rounds: cfg.rounds as u32,
+                    agg_every: 1,
+                },
+            )
+            .map_err(|e| format!("hello ack to {d}: {e}"))?;
+    }
+    for r in 0..cfg.rounds {
+        for d in 0..devices {
+            fleet
+                .send(d, &Message::RoundOpen { round: r as u32, sync: false })
+                .map_err(|e| format!("round open {r} to {d}: {e}"))?;
+        }
+        let mut seen = vec![false; devices];
+        for _ in 0..devices {
+            let (d, msg) = fleet
+                .recv_any(Some(RECV_TIMEOUT_S))
+                .map_err(|e| format!("round {r}: {e}"))?
+                .ok_or_else(|| {
+                    format!("round {r}: fleet went quiet for {RECV_TIMEOUT_S}s")
+                })?;
+            match msg {
+                Message::Activations { round, device_id, payload, .. } => {
+                    if round as usize != r || device_id as usize != d {
+                        return Err(format!(
+                            "round {r}: slot {d} delivered activations for \
+                             device {device_id} round {round}"
+                        ));
+                    }
+                    if payload != pattern(d, r, cfg.up_bytes, STREAM_UP) {
+                        return Err(format!(
+                            "round {r}: device {d} uplink payload corrupted"
+                        ));
+                    }
+                }
+                other => {
+                    return Err(format!(
+                        "round {r}: expected Activations from {d}, got {}",
+                        other.type_name()
+                    ))
+                }
+            }
+            if seen[d] {
+                return Err(format!("round {r}: device {d} delivered twice"));
+            }
+            seen[d] = true;
+            fleet
+                .send(
+                    d,
+                    &Message::Gradients {
+                        round: r as u32,
+                        device_id: d as u32,
+                        loss: 0.0,
+                        payload: pattern(d, r, cfg.down_bytes, STREAM_DOWN),
+                    },
+                )
+                .map_err(|e| format!("gradients {r} to {d}: {e}"))?;
+        }
+    }
+    for d in 0..devices {
+        fleet
+            .send(d, &Message::Shutdown { reason: "soak complete".to_string() })
+            .map_err(|e| format!("shutdown to {d}: {e}"))?;
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    let per_device = (0..devices).map(|d| fleet.stats(d)).collect();
+    Ok(SoakReport { backend, wall_s, per_device })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::poll::Backend;
+
+    fn backends_under_test() -> Vec<Backend> {
+        if cfg!(target_os = "linux") {
+            vec![Backend::Epoll, Backend::Poll]
+        } else {
+            vec![Backend::Poll]
+        }
+    }
+
+    #[test]
+    fn small_soak_echoes_cleanly_on_every_backend() {
+        for backend in backends_under_test() {
+            let mut cfg = SoakConfig::new(12, 3);
+            cfg.driver_threads = 4;
+            cfg.opts = FleetOptions { backend, write_stall_secs: 10 };
+            let report = run_soak(&cfg).expect("soak should complete");
+            assert_eq!(report.per_device.len(), 12);
+            let first = report.per_device[0];
+            assert!(first.bytes_sent > 0 && first.bytes_recv > 0);
+            for stats in &report.per_device {
+                assert_eq!(*stats, first, "per-device traffic must be uniform");
+            }
+        }
+    }
+
+    #[test]
+    fn soak_rejects_empty_fleets() {
+        assert!(run_soak(&SoakConfig::new(0, 1)).is_err());
+        assert!(run_soak(&SoakConfig::new(1, 0)).is_err());
+    }
+}

@@ -389,6 +389,64 @@ impl Message {
         w.finish()
     }
 
+    /// Serialize the frame header plus the body *prefix* — everything up
+    /// to and including the payload blob's length word — into `w`
+    /// (clearing it first), returning the borrowed payload slice that
+    /// completes the frame. `prefix ++ payload` is byte-identical to
+    /// [`Message::encode_frame`] (pinned by a golden test), which lets the
+    /// event loop send broadcast payloads via vectored writes without
+    /// assembling a per-device copy of header + payload.
+    ///
+    /// Only the three payload-bearing types (`Activations`, `Gradients`,
+    /// `ModelSync`) have this split form; other types return `None` and
+    /// callers fall back to [`Message::encode_frame`].
+    pub fn encode_frame_prefix<'a>(&'a self, w: &mut ByteWriter) -> Option<&'a [u8]> {
+        let (prefix_len, payload): (usize, &[u8]) = match self {
+            Message::Activations { labels, payload, .. } => {
+                (4 + 4 + 4 + labels.len() * 4 + 4, payload)
+            }
+            Message::Gradients { payload, .. } => (4 + 4 + 4 + 4, payload),
+            Message::ModelSync { payload, .. } => (4 + 4 + 4, payload),
+            _ => return None,
+        };
+        let body_len = prefix_len + payload.len();
+        assert!(
+            body_len <= MAX_FRAME_BODY,
+            "{} body is {body_len} bytes (cap {MAX_FRAME_BODY})",
+            self.type_name()
+        );
+        w.clear();
+        w.reserve(FRAME_HEADER_BYTES + prefix_len);
+        w.u32(FRAME_MAGIC);
+        w.u8(PROTO_VERSION);
+        w.u8(self.type_id());
+        w.u32(body_len as u32);
+        match self {
+            Message::Activations { round, device_id, labels, payload } => {
+                w.u32(*round);
+                w.u32(*device_id);
+                w.u32(labels.len() as u32);
+                for &l in labels {
+                    w.u32(l as u32);
+                }
+                w.u32(payload.len() as u32);
+            }
+            Message::Gradients { round, device_id, loss, payload } => {
+                w.u32(*round);
+                w.u32(*device_id);
+                w.f32(*loss);
+                w.u32(payload.len() as u32);
+            }
+            Message::ModelSync { round, device_id, payload } => {
+                w.u32(*round);
+                w.u32(*device_id);
+                w.u32(payload.len() as u32);
+            }
+            _ => unreachable!("prefix_len matched a payload-bearing type"),
+        }
+        Some(payload)
+    }
+
     /// Parse exactly one frame from `buf`; trailing bytes are an error.
     pub fn decode_frame(buf: &[u8]) -> Result<Message, String> {
         let mut r = ByteReader::new(buf);
@@ -535,16 +593,41 @@ pub fn write_frame(stream: &mut impl std::io::Write, msg: &Message) -> Result<us
     Ok(frame.len())
 }
 
-/// Incremental frame decoder for non-blocking sockets: [`feed`] whatever
-/// bytes the last `read` produced, then [`next`] pops complete messages.
-/// Partial frames stay buffered between poll wake-ups; length caps are
-/// enforced from the header alone, before the body has arrived.
+/// Retained ring capacity after a decoder drains empty: large enough that
+/// steady-state traffic never reallocates, small enough that 10k idle
+/// connections don't pin the peak capacity one giant frame ever forced.
+pub const DECODER_RETAIN_CAP: usize = 128 * 1024;
+
+/// Incremental frame decoder for non-blocking sockets, backed by a
+/// compacting ring the socket reads **directly into**: grab a spare-space
+/// slot with [`read_slot`], `read(2)` into it, [`commit`] the byte count,
+/// then pop frames. Two decode modes:
 ///
-/// [`feed`]: FrameDecoder::feed
+/// * [`next_view`] — zero-copy: yields a [`FrameView`] whose body borrows
+///   the ring in place (no drain memmove, no body materialization).
+/// * [`next`] — compatibility: decodes to an owned [`Message`].
+///
+/// [`feed`] remains for callers holding bytes in their own buffer (it
+/// copies into the ring). Partial frames stay buffered between poll
+/// wake-ups; length caps are enforced from the header alone, before the
+/// body has arrived. After extraction, [`reclaim`] resets the ring and
+/// drops capacity beyond [`DECODER_RETAIN_CAP`] so one giant frame doesn't
+/// pin memory forever.
+///
+/// [`read_slot`]: FrameDecoder::read_slot
+/// [`commit`]: FrameDecoder::commit
+/// [`next_view`]: FrameDecoder::next_view
 /// [`next`]: FrameDecoder::next
+/// [`feed`]: FrameDecoder::feed
+/// [`reclaim`]: FrameDecoder::reclaim
 #[derive(Debug, Default)]
 pub struct FrameDecoder {
+    /// storage; `len()` is the usable size (zero-filled on growth only)
     buf: Vec<u8>,
+    /// first unconsumed byte
+    head: usize,
+    /// one past the last valid byte
+    tail: usize,
 }
 
 impl FrameDecoder {
@@ -552,32 +635,145 @@ impl FrameDecoder {
         FrameDecoder::default()
     }
 
-    /// Append raw stream bytes.
+    /// Append raw stream bytes (copies into the ring; socket readers
+    /// should prefer [`FrameDecoder::read_slot`] + [`FrameDecoder::commit`]
+    /// to skip this copy).
     pub fn feed(&mut self, bytes: &[u8]) {
-        self.buf.extend_from_slice(bytes);
+        let n = bytes.len();
+        if n == 0 {
+            return;
+        }
+        self.read_slot(n)[..n].copy_from_slice(bytes);
+        self.commit(n);
+    }
+
+    /// Mutable spare space at the ring's tail, at least `min` bytes long
+    /// (often longer — callers may fill any prefix of it). Compacts
+    /// buffered bytes to the front or grows the storage as needed; follow
+    /// with [`FrameDecoder::commit`] for however many bytes were written.
+    pub fn read_slot(&mut self, min: usize) -> &mut [u8] {
+        if self.tail + min > self.buf.len() {
+            if self.head > 0 {
+                // compact: slide the unconsumed window to the front
+                self.buf.copy_within(self.head..self.tail, 0);
+                self.tail -= self.head;
+                self.head = 0;
+            }
+            if self.tail + min > self.buf.len() {
+                let need = (self.tail + min).next_power_of_two().max(4096);
+                self.buf.resize(need, 0);
+            }
+        }
+        &mut self.buf[self.tail..]
+    }
+
+    /// Mark `n` bytes of the last [`FrameDecoder::read_slot`] as filled.
+    pub fn commit(&mut self, n: usize) {
+        self.tail += n;
+        debug_assert!(self.tail <= self.buf.len(), "commit past the read slot");
     }
 
     /// Bytes buffered but not yet returned as a frame (0 means the stream
     /// is at a frame boundary — a hang-up here is a clean close).
     pub fn buffered(&self) -> usize {
-        self.buf.len()
+        self.tail - self.head
     }
 
-    /// Pop the next complete frame, if fully buffered. Returns the message
-    /// plus its framed size.
-    pub fn next(&mut self) -> Result<Option<(Message, usize)>, String> {
-        if self.buf.len() < FRAME_HEADER_BYTES {
+    /// Current ring storage footprint in bytes (drives the
+    /// `slacc_conn_buf_bytes` gauge).
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Pop the next complete frame as a borrowed in-place view, if fully
+    /// buffered. The frame's bytes are consumed immediately — decode the
+    /// view before the next ring operation. Header-parse errors consume
+    /// nothing (the connection is torn down on error anyway).
+    pub fn next_view(&mut self) -> Result<Option<FrameView<'_>>, String> {
+        let avail = self.tail - self.head;
+        if avail < FRAME_HEADER_BYTES {
             return Ok(None);
         }
-        let mut r = ByteReader::new(&self.buf);
+        let mut r = ByteReader::new(&self.buf[self.head..self.tail]);
         let (ty, body_len) = read_frame_header(&mut r)?;
         let total = FRAME_HEADER_BYTES + body_len;
-        if self.buf.len() < total {
+        if avail < total {
             return Ok(None);
         }
-        let msg = decode_body(ty, &self.buf[FRAME_HEADER_BYTES..total])?;
-        self.buf.drain(..total);
-        Ok(Some((msg, total)))
+        let start = self.head;
+        self.head += total;
+        Ok(Some(FrameView {
+            ty,
+            body: &self.buf[start + FRAME_HEADER_BYTES..start + total],
+            total,
+        }))
+    }
+
+    /// Pop the next complete frame as an owned message plus its framed
+    /// size. Compatibility wrapper over [`FrameDecoder::next_view`];
+    /// reclaims ring capacity when the buffer drains.
+    pub fn next(&mut self) -> Result<Option<(Message, usize)>, String> {
+        let popped = match self.next_view()? {
+            Some(view) => {
+                let total = view.total();
+                let msg = view.decode()?;
+                Some((msg, total))
+            }
+            None => None,
+        };
+        if popped.is_some() {
+            self.reclaim();
+        }
+        Ok(popped)
+    }
+
+    /// If the ring is empty, rewind it and drop storage beyond
+    /// [`DECODER_RETAIN_CAP`]. Call after frame extraction; a no-op while
+    /// a partial frame is still buffered.
+    pub fn reclaim(&mut self) {
+        if self.head == self.tail {
+            self.head = 0;
+            self.tail = 0;
+            if self.buf.len() > DECODER_RETAIN_CAP {
+                self.buf.truncate(DECODER_RETAIN_CAP);
+                self.buf.shrink_to_fit();
+            }
+        }
+    }
+}
+
+/// One complete frame borrowed in place from a [`FrameDecoder`]'s ring:
+/// the zero-copy decode mode. [`FrameView::body`] aliases the connection's
+/// read buffer, so consumers that only need the raw payload bytes (stats,
+/// forwarding, checksums) touch them without a single copy;
+/// [`FrameView::decode`] materializes an owned [`Message`] on demand.
+#[derive(Debug)]
+pub struct FrameView<'a> {
+    ty: u8,
+    body: &'a [u8],
+    total: usize,
+}
+
+impl<'a> FrameView<'a> {
+    /// Wire type id (see [`msg_type`]).
+    pub fn type_id(&self) -> u8 {
+        self.ty
+    }
+
+    /// The frame body, borrowed from the decode ring.
+    pub fn body(&self) -> &'a [u8] {
+        self.body
+    }
+
+    /// Total framed size (header + body) in bytes.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Decode to an owned [`Message`], enforcing the same trailing-garbage
+    /// check as every other decode path.
+    pub fn decode(&self) -> Result<Message, String> {
+        decode_body(self.ty, self.body)
     }
 }
 
@@ -881,5 +1077,128 @@ mod tests {
         let mut dec = FrameDecoder::new();
         dec.feed(&frame);
         assert!(dec.next().is_err());
+    }
+
+    #[test]
+    fn encode_frame_prefix_matches_encode_frame_byte_for_byte() {
+        let payload: Vec<u8> = (0..613u32).map(|i| (i * 7) as u8).collect();
+        let msgs = [
+            Message::Activations {
+                round: 3,
+                device_id: 9,
+                labels: vec![0, 5, 2, 7],
+                payload: payload.clone(),
+            },
+            Message::Activations {
+                round: 0,
+                device_id: 0,
+                labels: vec![],
+                payload: vec![],
+            },
+            Message::Gradients { round: 11, device_id: 4, loss: 0.625, payload: payload.clone() },
+            Message::ModelSync { round: 2, device_id: 1, payload },
+        ];
+        let mut w = ByteWriter::new();
+        for m in &msgs {
+            let tail = m.encode_frame_prefix(&mut w).expect("payload-bearing type");
+            let mut assembled = w.as_slice().to_vec();
+            assembled.extend_from_slice(tail);
+            assert_eq!(
+                assembled,
+                m.encode_frame(),
+                "prefix ++ payload diverged for {}",
+                m.type_name()
+            );
+        }
+    }
+
+    #[test]
+    fn encode_frame_prefix_declines_payload_free_types() {
+        let mut w = ByteWriter::new();
+        assert!(Message::RoundOpen { round: 1, sync: false }
+            .encode_frame_prefix(&mut w)
+            .is_none());
+        assert!(Message::Shutdown { reason: "done".into() }
+            .encode_frame_prefix(&mut w)
+            .is_none());
+    }
+
+    #[test]
+    fn decoder_read_slot_commit_reassembles_dripped_frames() {
+        let msgs = [
+            Message::RoundOpen { round: 7, sync: true },
+            Message::Gradients { round: 7, device_id: 2, loss: 1.5, payload: vec![9; 300] },
+            Message::Shutdown { reason: "bye".into() },
+        ];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            wire.extend_from_slice(&m.encode_frame());
+        }
+        // drip the wire bytes through read_slot/commit in awkward chunks
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for chunk in wire.chunks(13) {
+            let slot = dec.read_slot(chunk.len());
+            slot[..chunk.len()].copy_from_slice(chunk);
+            dec.commit(chunk.len());
+            while let Some((m, _)) = dec.next().unwrap() {
+                got.push(m);
+            }
+        }
+        assert_eq!(got.len(), msgs.len());
+        for (a, b) in got.iter().zip(msgs.iter()) {
+            assert_eq!(a.encode_frame(), b.encode_frame());
+        }
+        assert_eq!(dec.buffered(), 0);
+    }
+
+    #[test]
+    fn next_view_yields_borrowed_bodies_in_place() {
+        let m = Message::ModelSync { round: 5, device_id: 3, payload: vec![0xAB; 64] };
+        let frame = m.encode_frame();
+        let mut dec = FrameDecoder::new();
+        dec.feed(&frame);
+        let view = dec.next_view().unwrap().expect("complete frame buffered");
+        assert_eq!(view.type_id(), msg_type::MODEL_SYNC);
+        assert_eq!(view.total(), frame.len());
+        assert_eq!(view.body(), &frame[FRAME_HEADER_BYTES..]);
+        let decoded = view.decode().unwrap();
+        assert_eq!(decoded.encode_frame(), frame);
+        assert_eq!(dec.buffered(), 0);
+        assert!(dec.next_view().unwrap().is_none());
+    }
+
+    #[test]
+    fn reclaim_drops_capacity_pinned_by_a_giant_frame() {
+        let big = Message::ModelSync {
+            round: 0,
+            device_id: 0,
+            payload: vec![7; 4 * 1024 * 1024],
+        };
+        let mut dec = FrameDecoder::new();
+        dec.feed(&big.encode_frame());
+        assert!(dec.capacity() > DECODER_RETAIN_CAP);
+        let (_, _) = dec.next().unwrap().expect("giant frame decodes");
+        // next() reclaims on drain: retained storage is back under the cap
+        assert!(
+            dec.capacity() <= DECODER_RETAIN_CAP,
+            "retained {} bytes (cap {DECODER_RETAIN_CAP})",
+            dec.capacity()
+        );
+        // and the decoder still works after the shrink
+        let small = Message::RoundOpen { round: 1, sync: false }.encode_frame();
+        dec.feed(&small);
+        assert!(dec.next().unwrap().is_some());
+    }
+
+    #[test]
+    fn reclaim_is_a_noop_mid_frame() {
+        let frame = Message::RoundOpen { round: 2, sync: false }.encode_frame();
+        let mut dec = FrameDecoder::new();
+        dec.feed(&frame[..4]);
+        dec.reclaim();
+        assert_eq!(dec.buffered(), 4, "partial frame must survive reclaim");
+        dec.feed(&frame[4..]);
+        assert!(dec.next().unwrap().is_some());
     }
 }

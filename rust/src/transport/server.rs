@@ -779,7 +779,10 @@ impl<C: Compute> ServerRuntime<C> {
 
     /// Pack the FedAvg result for device `d`'s downlink sync stream. One
     /// caller-owned scratch (flatten buffer + envelope writer) serves the
-    /// whole broadcast loop instead of a fresh allocation set per device.
+    /// whole broadcast loop instead of a fresh allocation set per device;
+    /// downstream, `PollFleet::send` writes the resulting payload with a
+    /// vectored write (frame prefix + borrowed payload), so the packed
+    /// bytes are never copied into a per-device frame buffer either.
     pub(crate) fn pack_broadcast(&mut self, d: usize, params: &[Tensor]) -> Vec<u8> {
         self.raw_round[2] += params.iter().map(|t| t.len() * 4).sum::<usize>();
         let t0 = std::time::Instant::now();
@@ -1056,9 +1059,28 @@ pub fn accept_and_serve_with<C: Compute>(
     listener: &std::net::TcpListener,
     exporter: Option<MetricsExporter>,
 ) -> Result<TrainReport, String> {
+    accept_and_serve_opts(
+        runtime,
+        listener,
+        exporter,
+        crate::sched::event_loop::FleetOptions::default(),
+    )
+}
+
+/// [`accept_and_serve_with`] plus the event-loop tunables (`--io-backend`,
+/// `--write-stall-secs`). The options steer only how sockets are polled
+/// and how long a jammed write may park — wire traffic is bit-identical
+/// across backends, so they stay out of the config fingerprint.
+pub fn accept_and_serve_opts<C: Compute>(
+    runtime: &mut ServerRuntime<C>,
+    listener: &std::net::TcpListener,
+    exporter: Option<MetricsExporter>,
+    opts: crate::sched::event_loop::FleetOptions,
+) -> Result<TrainReport, String> {
     let shape = runtime.cfg.shape();
     let (mut fleet, hellos) =
-        crate::sched::event_loop::PollFleet::accept(listener, shape)?;
+        crate::sched::event_loop::PollFleet::accept_with(listener, shape, opts)?;
+    crate::log_info!("sched: io backend {}", fleet.backend_kind());
     if let Some(ex) = exporter {
         fleet.attach_exporter(ex);
     }

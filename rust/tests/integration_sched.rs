@@ -21,6 +21,9 @@ use std::time::{Duration, Instant};
 
 use slacc::config::{CodecChoice, ExperimentConfig};
 use slacc::data::Dataset;
+use slacc::sched::event_loop::FleetOptions;
+use slacc::sched::poll::Backend;
+use slacc::sched::soak::{run_soak, SoakConfig};
 use slacc::sched::Policy;
 use slacc::transport::device::{mock_worker, run_blocking};
 use slacc::transport::proto::Message;
@@ -324,4 +327,97 @@ fn mid_session_disconnect_fails_with_peer_closed_inorder() {
 #[test]
 fn mid_session_disconnect_fails_with_peer_closed_arrival() {
     run_mid_session_disconnect(Policy::arrival());
+}
+
+fn soak_backends() -> Vec<Backend> {
+    if cfg!(target_os = "linux") {
+        vec![Backend::Epoll, Backend::Poll]
+    } else {
+        vec![Backend::Poll]
+    }
+}
+
+/// 1024 real TCP device connections through one single-threaded event
+/// loop, on every readiness backend, with byte-for-byte parity: every
+/// device's wire accounting must be identical — across devices, across
+/// backends, and against a 64-device reference fleet. This is the scale
+/// acceptance bar for the epoll rework (the backend must change *nothing*
+/// but the wakeup mechanics).
+#[test]
+fn scale_soak_1024_devices_with_byte_parity_across_backends() {
+    let rounds = 3;
+    let mut ref_cfg = SoakConfig::new(64, rounds);
+    ref_cfg.opts = FleetOptions { backend: Backend::Poll, write_stall_secs: 10 };
+    let reference = run_soak(&ref_cfg).expect("64-device reference soak");
+    let golden = reference.per_device[0];
+    for stats in &reference.per_device {
+        assert_eq!(*stats, golden, "reference fleet traffic must be uniform");
+    }
+    for backend in soak_backends() {
+        let mut cfg = SoakConfig::new(1024, rounds);
+        cfg.driver_threads = 8;
+        cfg.opts = FleetOptions { backend, write_stall_secs: 10 };
+        let report = run_soak(&cfg)
+            .unwrap_or_else(|e| panic!("1024-device soak on {backend:?}: {e}"));
+        assert_eq!(report.backend, backend.as_str());
+        assert_eq!(report.per_device.len(), 1024);
+        for (d, stats) in report.per_device.iter().enumerate() {
+            assert_eq!(
+                *stats, golden,
+                "device {d} on {backend:?} diverged from the 64-device reference"
+            );
+        }
+    }
+}
+
+/// One device stops reading its downlink for 1.5 s while the server owes
+/// it a frame bigger than the socket buffers: the send must park on
+/// POLLOUT (not abort — the stall budget is 10 s), the fleet must finish
+/// the session, and the slow device's wire accounting must come out
+/// identical to everyone else's.
+#[test]
+fn slow_reader_backpressure_recovers_at_scale() {
+    for backend in soak_backends() {
+        let mut cfg = SoakConfig::new(128, 2);
+        // 512 KiB downlink overflows loopback socket buffers, so the
+        // write to the sleeping reader genuinely parks
+        cfg.down_bytes = 512 * 1024;
+        cfg.slow_reader = Some((5, 1500));
+        cfg.opts = FleetOptions { backend, write_stall_secs: 10 };
+        let report = run_soak(&cfg)
+            .unwrap_or_else(|e| panic!("backpressure soak on {backend:?}: {e}"));
+        assert!(
+            report.wall_s >= 1.0,
+            "slow reader never backed the writer up (wall {:.2}s)",
+            report.wall_s
+        );
+        let golden = report.per_device[0];
+        for (d, stats) in report.per_device.iter().enumerate() {
+            assert_eq!(*stats, golden, "device {d} diverged under backpressure");
+        }
+    }
+}
+
+/// The full 10k-devices-per-shard target. 10 000 device sockets plus their
+/// client ends need ~20 100 file descriptors, beyond most default rlimits,
+/// so this runs only on demand:
+/// `ulimit -n 24576 && cargo test --release -- --ignored scale_soak_10k`
+#[test]
+#[ignore = "needs ~20k fds (ulimit -n 24576) and several minutes"]
+fn scale_soak_10k_devices() {
+    let rounds = 1;
+    let mut ref_cfg = SoakConfig::new(64, rounds);
+    ref_cfg.opts = FleetOptions { backend: Backend::Poll, write_stall_secs: 10 };
+    let golden = run_soak(&ref_cfg).expect("64-device reference soak").per_device[0];
+    for backend in soak_backends() {
+        let mut cfg = SoakConfig::new(10_000, rounds);
+        cfg.driver_threads = 16;
+        cfg.opts = FleetOptions { backend, write_stall_secs: 30 };
+        let report = run_soak(&cfg)
+            .unwrap_or_else(|e| panic!("10k-device soak on {backend:?}: {e}"));
+        assert_eq!(report.per_device.len(), 10_000);
+        for (d, stats) in report.per_device.iter().enumerate() {
+            assert_eq!(*stats, golden, "device {d} on {backend:?} diverged");
+        }
+    }
 }
