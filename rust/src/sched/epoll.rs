@@ -102,8 +102,11 @@ impl Epoll {
     }
 
     /// Remove `stream` from the interest set. Removing an fd that is not
-    /// registered (ENOENT) is tolerated so close paths can be unconditional.
-    pub fn del(&mut self, stream: &TcpStream) -> Result<(), String> {
+    /// registered (ENOENT) is tolerated so close paths can be
+    /// unconditional; the return says whether the fd was actually removed
+    /// (`false` = it was never in the set) so callers can keep their armed
+    /// count honest.
+    pub fn del(&mut self, stream: &TcpStream) -> Result<bool, String> {
         let mut ev = sys::EpollEvent { events: 0, data: 0 };
         let rc = unsafe {
             sys::epoll_ctl(self.epfd, sys::EPOLL_CTL_DEL, stream.as_raw_fd(), &mut ev)
@@ -111,11 +114,11 @@ impl Epoll {
         if rc < 0 {
             let e = std::io::Error::last_os_error();
             if e.raw_os_error() == Some(2) {
-                return Ok(()); // ENOENT: already gone
+                return Ok(false); // ENOENT: already gone
             }
             return Err(format!("epoll_ctl(DEL): {e}"));
         }
-        Ok(())
+        Ok(true)
     }
 
     /// Wait up to `timeout_ms` (-1 = forever) and append the tokens of
@@ -233,11 +236,12 @@ mod tests {
     }
 
     #[test]
-    fn double_del_is_tolerated() {
+    fn double_del_is_tolerated_and_reported() {
         let (_client, server) = pair();
         let mut ep = Epoll::new().unwrap();
         ep.add(&server, 0).unwrap();
-        ep.del(&server).unwrap();
-        ep.del(&server).unwrap(); // ENOENT swallowed
+        assert!(ep.del(&server).unwrap(), "first DEL removed a registered fd");
+        // ENOENT swallowed, but reported so armed counts stay honest
+        assert!(!ep.del(&server).unwrap(), "second DEL must report not-present");
     }
 }

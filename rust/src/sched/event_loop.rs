@@ -342,6 +342,16 @@ impl PollFleet {
         let mut decoded = 0usize;
         loop {
             let conn = &mut self.conns[i];
+            // the read-ahead cap bounds *decoded* frames, not just kernel
+            // bytes: a live peer's decode stops at the cap with the rest of
+            // the burst parked in the ring (the ungate force_ready path
+            // re-services it as the scheduler drains the inbox). A dead
+            // peer (EOF / read error) drains fully — no more bytes can
+            // arrive, and the truncation verdict below must only see
+            // genuinely incomplete bytes
+            if !hit_eof && !conn.closed && conn.inbox.len() >= MAX_QUEUED_FRAMES {
+                break;
+            }
             match conn.decoder.next() {
                 Ok(Some((msg, n))) => {
                     conn.stats.frames_recv += 1;
@@ -723,6 +733,9 @@ mod tests {
             handles.push(thread::spawn(move || {
                 let mut t = TcpTransport::connect(&addr).unwrap();
                 t.send(&hello(d, 2)).unwrap();
+                // lock-step protocol: round traffic only after HelloAck
+                let ack = t.recv().unwrap();
+                assert!(matches!(ack, Message::HelloAck { .. }));
                 // device 1 answers immediately; device 0 after a pause
                 if d == 0 {
                     thread::sleep(std::time::Duration::from_millis(300));
@@ -732,6 +745,11 @@ mod tests {
             }));
         }
         let (mut fleet, _) = PollFleet::accept(&listener, FleetShape::flat(2)).unwrap();
+        for d in 0..2 {
+            fleet
+                .send(d, &Message::HelloAck { device_id: d as u32, rounds: 1, agg_every: 1 })
+                .unwrap();
+        }
         let (first, _) = fleet.recv_any(None).unwrap().unwrap();
         assert_eq!(first, 1, "the fast device must surface first");
         let (second, _) = fleet.recv_any(None).unwrap().unwrap();
@@ -794,6 +812,9 @@ mod tests {
             let handle = thread::spawn(move || {
                 let mut t = TcpTransport::connect(&addr).unwrap();
                 t.send(&hello(0, 1)).unwrap();
+                // lock-step protocol: the flood starts only after HelloAck
+                let ack = t.recv().unwrap();
+                assert!(matches!(ack, Message::HelloAck { .. }));
                 for r in 0..FLOOD {
                     t.send(&Message::RoundOpen { round: r, sync: false }).unwrap();
                 }
@@ -802,6 +823,9 @@ mod tests {
             let (mut fleet, _) =
                 PollFleet::accept_with(&listener, FleetShape::flat(1), opts(backend))
                     .unwrap();
+            fleet
+                .send(0, &Message::HelloAck { device_id: 0, rounds: 1, agg_every: 1 })
+                .unwrap();
             for want in 0..FLOOD {
                 let (i, msg) = fleet.recv_any(None).unwrap().unwrap();
                 assert_eq!(i, 0);
@@ -882,6 +906,9 @@ mod tests {
         let handle = thread::spawn(move || {
             let mut t = TcpTransport::connect(&addr).unwrap();
             t.send(&hello(0, 1)).unwrap();
+            // lock-step protocol: round traffic only after HelloAck
+            let ack = t.recv().unwrap();
+            assert!(matches!(ack, Message::HelloAck { .. }));
             t.send(&Message::Gradients {
                 round: 0,
                 device_id: 0,
@@ -892,6 +919,9 @@ mod tests {
             let _ = t.recv();
         });
         let (mut fleet, _) = PollFleet::accept(&listener, FleetShape::flat(1)).unwrap();
+        fleet
+            .send(0, &Message::HelloAck { device_id: 0, rounds: 1, agg_every: 1 })
+            .unwrap();
         let (_, msg) = fleet.recv_any(None).unwrap().unwrap();
         assert!(matches!(msg, Message::Gradients { .. }));
         // ring capacity ballooned for the 4 MiB frame, then reclaimed on

@@ -232,10 +232,7 @@ impl Poller {
     pub fn deregister(&mut self, stream: &TcpStream, token: usize) -> Result<(), String> {
         let was = match &mut self.imp {
             #[cfg(target_os = "linux")]
-            Imp::Epoll(ep) => {
-                ep.del(stream)?;
-                true // kernel set is truth; ENOENT already swallowed
-            }
+            Imp::Epoll(ep) => ep.del(stream)?, // false = ENOENT (never armed)
             #[cfg(unix)]
             Imp::Poll(ps) => ps.remove(stream, token),
             #[cfg(not(unix))]
@@ -542,6 +539,23 @@ mod tests {
             p.register(&s, 3).unwrap();
             p.deregister(&s, 3).unwrap();
             assert_eq!(p.armed(), 0, "{}", p.kind());
+        }
+    }
+
+    #[test]
+    fn stray_deregister_does_not_decrement_armed() {
+        // a deregister of a never-registered stream must not eat an armed
+        // slot: armed()==0 short-circuits poll_step into a no-sleep return,
+        // so an undercount would busy-spin the event loop at 100% CPU
+        for backend in backends_under_test() {
+            let (_c0, s0) = pair();
+            let (_c1, s1) = pair();
+            let (_c2, stray) = pair();
+            let mut p = Poller::new(backend).unwrap();
+            p.register(&s0, 0).unwrap();
+            p.register(&s1, 1).unwrap();
+            p.deregister(&stray, 2).unwrap(); // ENOENT / unknown token
+            assert_eq!(p.armed(), 2, "{}: stray deregister ate an armed slot", p.kind());
         }
     }
 
