@@ -157,7 +157,7 @@ fn sweep(sizes: &[usize], soak_sizes: &[usize], iters: usize, rounds: usize, ful
         for backend in backends() {
             let mut cfg = SoakConfig::new(devices, rounds);
             cfg.driver_threads = 8;
-            cfg.opts = FleetOptions { backend, write_stall_secs: 10 };
+            cfg.opts = FleetOptions { backend, write_stall_secs: 10, elastic: false };
             let report = run_soak(&cfg)
                 .unwrap_or_else(|e| panic!("soak {devices} on {backend:?}: {e}"));
             let golden = report.per_device[0];

@@ -23,7 +23,7 @@ use std::time::{Duration, Instant};
 use slacc::bench::{Bencher, Table};
 use slacc::config::{CodecChoice, ExperimentConfig};
 use slacc::data::Dataset;
-use slacc::sched::Policy;
+use slacc::sched::{Participation, Policy};
 use slacc::transport::device::{mock_worker, run_blocking};
 use slacc::transport::proto::{FrameDecoder, Message};
 use slacc::transport::server::{accept_and_serve, mock_runtime, run_mock_loopback_delayed};
@@ -48,13 +48,22 @@ fn policy_comparison(rounds: usize) {
         &["policy", "rounds", "final_acc%", "sim_time_s", "stragglers", "sync_KB"],
     );
     let policies = [
-        ("inorder", Policy::InOrder),
-        ("arrival", Policy::arrival()),
-        ("arrival+timeout", Policy::arrival_with_timeout(0.08, 4)),
+        ("inorder", Policy::InOrder, Participation::All),
+        ("arrival", Policy::arrival(), Participation::All),
+        ("arrival+timeout", Policy::arrival_with_timeout(0.08, 4), Participation::All),
+        // `--select bias-stragglers`: the chronic straggler sits out every
+        // other round, so the fleet stops burning its timeout twice per
+        // cadence — same accuracy axis, lower simulated time-to-accuracy
+        (
+            "bias-stragglers",
+            Policy::arrival_with_timeout(0.08, 4),
+            Participation::BiasStragglers,
+        ),
     ];
-    for (name, policy) in policies {
+    for (name, policy, participation) in policies {
         let mut cfg = bench_cfg(5, rounds);
         cfg.schedule = policy;
+        cfg.participation = participation;
         // the cost model sees a 10x-slower link; the delay shim makes the
         // same device actually arrive late so the timeout policy engages
         cfg.device_speeds = vec![1.0, 1.0, 1.0, 1.0, 0.1];

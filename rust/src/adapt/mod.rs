@@ -405,6 +405,18 @@ impl SpecEpochs {
         );
         self.epochs.push(Epoch { from_round, set });
     }
+
+    /// Rebuild device `d`'s codec instances in **every** epoch from their
+    /// session-fixed seeds. A re-admitted device restarts its streams from
+    /// a fresh process, so the server's twins must be reset in the sync set
+    /// (epoch 0) and any later data-stream epoch alike — otherwise the
+    /// first post-catchup frame would decode against stale stream state.
+    pub fn rebuild_device(&mut self, d: usize) -> Result<(), CodecError> {
+        for e in &mut self.epochs {
+            e.set.rebuild_device(d)?;
+        }
+        Ok(())
+    }
 }
 
 /// A pushed-but-unsettled transition: the server holds new epochs here

@@ -492,6 +492,16 @@ impl StreamSet {
     pub fn device(&mut self, d: usize) -> &mut DeviceStreams {
         &mut self.streams[d]
     }
+
+    /// Re-instantiate device `d`'s four stream codecs from scratch (same
+    /// spec table, same derived seeds). A readmitted device is a fresh
+    /// process with fresh codec state; rebuilding its server-side twins at
+    /// admission keeps both ends of every stream deterministic across
+    /// departures and re-joins.
+    pub fn rebuild_device(&mut self, d: usize) -> Result<(), CodecError> {
+        self.streams[d] = DeviceStreams::build(&self.specs, &self.session, self.base + d)?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

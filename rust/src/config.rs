@@ -16,7 +16,7 @@ use crate::codecs::stream::{
 use crate::data::partition::Partition;
 use crate::entropy::AlphaSchedule;
 use crate::net::{DeviceLink, ServerModel};
-use crate::sched::Policy;
+use crate::sched::{Participation, Policy};
 use crate::shard::Topology;
 
 /// Which compressor runs on the smashed-data streams (the `--codec`
@@ -117,6 +117,17 @@ pub struct ExperimentConfig {
     /// behavior). Fingerprinted: both ends must agree on whether the
     /// session may retune mid-run.
     pub adapt: Option<String>,
+    /// `--elastic`: keep the listener armed after session start and let
+    /// devices leave / re-join mid-run (proto v6 Join/Leave/Catchup; see
+    /// [`crate::member`]). Requires arrival-order scheduling — the
+    /// in-order schedule's byte-determinism contract cannot absorb a
+    /// shrinking participant set. Fingerprinted: a device must know the
+    /// session admits re-joins before it attempts one.
+    pub elastic: bool,
+    /// `--select`: round-participation policy (see
+    /// [`crate::sched::Participation`]). Fingerprinted: who participates
+    /// changes every downstream numeric.
+    pub participation: Participation,
 }
 
 impl ExperimentConfig {
@@ -151,6 +162,8 @@ impl ExperimentConfig {
             shards: 1,
             shard_sync_every: 1,
             adapt: None,
+            elastic: false,
+            participation: Participation::All,
         }
     }
 
@@ -285,6 +298,8 @@ impl ExperimentConfig {
             batch_window: self.batch_window,
             specs: self.stream_specs()?,
             adapt: self.adapt.clone(),
+            elastic: self.elastic,
+            participation: self.participation,
         })
     }
 
@@ -309,7 +324,7 @@ impl ExperimentConfig {
             .map(|s| s.table())
             .unwrap_or_else(|e| format!("invalid({e})"));
         let repr = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}|{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}|{}|{}|{}|{}|{}|{}",
             self.dataset,
             self.seed,
             self.lr.to_bits(),
@@ -333,6 +348,8 @@ impl ExperimentConfig {
             self.shards,
             self.shard_sync_every,
             self.adapt.as_deref().unwrap_or("-"),
+            self.elastic,
+            self.participation.label(),
         );
         crate::codecs::stream::fnv1a(&repr)
     }
@@ -412,6 +429,33 @@ impl ExperimentConfig {
             // full parse + ladder/initial-spec consistency, same path the
             // server runtime takes at session start
             crate::adapt::AdaptState::from_directive(directive, &specs)?;
+        }
+        if self.elastic {
+            if !matches!(self.schedule, Policy::ArrivalOrder { .. }) {
+                return Err(
+                    "--elastic requires --schedule arrival (the in-order \
+                     schedule's byte-determinism contract cannot absorb a \
+                     shrinking participant set)"
+                        .into(),
+                );
+            }
+            if self.adapt.is_some() {
+                return Err(
+                    "--elastic and --adapt are mutually exclusive for now (a \
+                     re-joining device cannot replay a mid-session spec \
+                     renegotiation)"
+                        .into(),
+                );
+            }
+        }
+        if self.participation == Participation::BiasStragglers
+            && !matches!(self.schedule, Policy::ArrivalOrder { .. })
+        {
+            return Err(
+                "--select bias-stragglers requires --schedule arrival (the \
+                 in-order schedule has no straggler history to bias on)"
+                    .into(),
+            );
         }
         if let Policy::ArrivalOrder { straggler_timeout_s, min_quorum } = self.schedule {
             if let Some(t) = straggler_timeout_s {
@@ -686,6 +730,43 @@ mod tests {
         c.validate().unwrap();
         c.sync_codec = Some("bogus".into());
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn elastic_and_participation_are_validated_and_fingerprinted() {
+        let a = ExperimentConfig::default_for("ham");
+
+        // elastic needs the arrival schedule and no adapt directive
+        let mut b = ExperimentConfig::default_for("ham");
+        b.elastic = true;
+        assert!(b.validate().is_err(), "elastic under InOrder must be rejected");
+        b.schedule = Policy::arrival();
+        b.validate().unwrap();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        b.adapt = Some("at:2=uniform8".into());
+        assert!(b.validate().is_err(), "elastic + adapt must be rejected");
+
+        // bias-stragglers needs arrival scheduling too
+        let mut c = ExperimentConfig::default_for("ham");
+        c.participation = Participation::BiasStragglers;
+        assert!(c.validate().is_err());
+        c.schedule = Policy::arrival();
+        c.validate().unwrap();
+        let mut c_all = ExperimentConfig::default_for("ham");
+        c_all.schedule = Policy::arrival();
+        assert_ne!(c.fingerprint(), c_all.fingerprint());
+
+        // both project onto the serve config
+        let mut d = ExperimentConfig::default_for("ham");
+        d.schedule = Policy::arrival();
+        d.elastic = true;
+        d.participation = Participation::BiasStragglers;
+        let s = d.serve_config(32).unwrap();
+        assert!(s.elastic);
+        assert_eq!(s.participation, Participation::BiasStragglers);
+        let s = a.serve_config(32).unwrap();
+        assert!(!s.elastic);
+        assert_eq!(s.participation, Participation::All);
     }
 
     #[test]

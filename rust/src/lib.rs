@@ -28,6 +28,7 @@ pub mod coordinator;
 pub mod data;
 pub mod entropy;
 pub mod grouping;
+pub mod member;
 pub mod net;
 pub mod obs;
 pub mod quant;

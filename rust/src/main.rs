@@ -39,14 +39,14 @@ use slacc::entropy::AlphaSchedule;
 use slacc::sched::event_loop::FleetOptions;
 use slacc::sched::fleet::ShardFleet;
 use slacc::sched::poll::Backend;
-use slacc::sched::Policy;
+use slacc::sched::{Participation, Policy};
 use slacc::shard::coordinator::Coordinator;
 use slacc::shard::link::ShardLink;
 use slacc::shard::Role;
 use slacc::obs::export::{MetricsExporter, SnapshotWriter};
 use slacc::obs::span;
 use slacc::obs::trace;
-use slacc::transport::device::{mock_worker, run_blocking};
+use slacc::transport::device::{mock_worker, run_blocking, run_blocking_rejoin};
 use slacc::transport::server::{accept_and_serve_opts, mock_runtime_for_shard};
 use slacc::transport::tcp::TcpTransport;
 use slacc::transport::{session_fingerprint, Transport};
@@ -119,6 +119,16 @@ fn print_help() {
            --no-grad-compress      leave downlink gradients uncompressed\n\
            --host-entropy          host entropy instead of the Pallas kernel\n\
            --schedule MODE         round scheduling: inorder|arrival [inorder]\n\
+           --elastic               elastic membership (arrival schedule only):\n\
+                                   keep the listener armed after session start,\n\
+                                   admit Join frames at round boundaries with a\n\
+                                   model-catchup handshake, shed failed devices\n\
+                                   as typed departures instead of aborting\n\
+           --select all|bias-stragglers  participation policy: who is invited\n\
+                                   at round open [all]; bias-stragglers sits\n\
+                                   chronic stragglers out every other round\n\
+                                   (--select also accepts the channel-selection\n\
+                                   ablation strategies below)\n\
            --straggler-timeout S   (arrival) close a round after S seconds\n\
            --min-quorum N          (arrival) devices required to close a\n\
                                    timed-out round [all]\n\
@@ -141,6 +151,12 @@ fn print_help() {
                                    shards > 1)             [127.0.0.1:7978]\n\
            --connect-shard A,B,... shard --shard-bind addresses, one per\n\
                                    shard (coordinator role, required)\n\
+           --checkpoint-dir DIR    (coordinator) write an atomic checkpoint of\n\
+                                   the merged models + epoch counter every\n\
+                                   sync epoch\n\
+           --resume                (coordinator) resume a crashed session from\n\
+                                   --checkpoint-dir; shards re-admit the new\n\
+                                   coordinator and re-push their barriered epoch\n\
            --io-backend MODE       event-loop readiness backend:\n\
                                    auto|epoll|poll [auto]; auto picks\n\
                                    edge-triggered epoll on linux, poll(2)\n\
@@ -153,6 +169,9 @@ fn print_help() {
                                    (required; connect to the shard serving it)\n\
            --connect ADDR          server address          [127.0.0.1:7878]\n\
            --mock                  mock model (must match the server)\n\
+           --rejoin                join a session already in progress (the\n\
+                                   server must run --elastic): send Join\n\
+                                   instead of Hello, receive a model catch-up\n\
            --trace-out FILE        record this device's lifecycle spans\n\
          trace flags:\n\
            slacc trace FILE... [--chrome OUT.json]\n\
@@ -225,6 +244,7 @@ fn config_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
         },
         other => return Err(format!("unknown --schedule '{other}' (inorder|arrival)")),
     };
+    cfg.elastic = args.bool_or("elastic", false);
     if let Some(name) = args.str_opt("sync-codec") {
         cfg.sync_codec = Some(name);
     }
@@ -236,6 +256,15 @@ fn config_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
     cfg.adapt = args.str_opt("adapt");
 
     if let Some(sel) = args.str_opt("select") {
+        // --select is overloaded: participation policies (who is invited
+        // at round open) vs channel-selection ablations (what a codec
+        // keeps). Policy names win; everything else is a selection spec.
+        if let Ok(p) = Participation::parse(&sel) {
+            cfg.participation = p;
+            cfg.codec = CodecChoice::Named(args.str_or("codec", "slacc"));
+            let _ = args.usize_or("n-select", 1);
+            return Ok(cfg);
+        }
         use slacc::codecs::selection::Selection;
         let strategy = match sel.as_str() {
             "random" => Selection::Random,
@@ -376,6 +405,8 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
     let connect_shard = args.str_opt("connect-shard");
     let mock = args.bool_or("mock", false);
     let csv = args.str_opt("csv");
+    let checkpoint_dir = args.str_opt("checkpoint-dir");
+    let resume = args.bool_or("resume", false);
     // event-loop tunables: like the telemetry flags below, deliberately
     // outside the config fingerprint — how the server polls its sockets
     // must not change what fleet it handshakes with
@@ -387,6 +418,8 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
     let io = FleetOptions {
         backend: Backend::parse(io_backend.as_deref().unwrap_or("auto"))?,
         write_stall_secs: write_stall_secs.unwrap_or(10) as u64,
+        // accept_and_serve_opts flips this on when the config says so
+        ..FleetOptions::default()
     };
 
     if obs.trace_out.is_some() {
@@ -417,9 +450,18 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
                         .into(),
                 );
             }
-            serve_coordinator(cfg, connect_shard, mock)
+            serve_coordinator(cfg, connect_shard, mock, checkpoint_dir, resume)
         }
-        Role::Shard => serve_shard(cfg, bind, shard_id, shard_bind, mock, csv, &obs, io),
+        Role::Shard => {
+            if checkpoint_dir.is_some() || resume {
+                return Err(
+                    "--checkpoint-dir/--resume are coordinator flags (the \
+                     coordinator owns the durable cross-shard state)"
+                        .into(),
+                );
+            }
+            serve_shard(cfg, bind, shard_id, shard_bind, mock, csv, &obs, io)
+        }
     };
     // drain spans even when the session failed: a trace of the rounds
     // leading up to an error is exactly when you want one
@@ -436,7 +478,12 @@ fn serve_coordinator(
     cfg: ExperimentConfig,
     connect_shard: Option<String>,
     mock: bool,
+    checkpoint_dir: Option<String>,
+    resume: bool,
 ) -> Result<(), String> {
+    if resume && checkpoint_dir.is_none() {
+        return Err("--resume needs --checkpoint-dir".into());
+    }
     if cfg.shards < 2 {
         return Err("--role coordinator needs --shards >= 2".into());
     }
@@ -467,6 +514,8 @@ fn serve_coordinator(
         )?));
     }
     let mut coordinator = Coordinator::from_experiment(&cfg, kind)?;
+    coordinator
+        .configure_checkpoint(checkpoint_dir.map(std::path::PathBuf::from), resume);
     let mut fleet = ShardFleet::new(conns);
     let report = coordinator.run(&mut fleet)?;
     println!(
@@ -523,14 +572,26 @@ fn serve_shard(
         let weight = slacc::shard::shard_weight(&cfg, &train, shard_id);
         let kind = if mock { "mock" } else { "engine" };
         let session_fp = session_fingerprint(cfg.fingerprint(), kind);
-        Some(ShardLink::handshake(
+        let mut link = ShardLink::handshake(
             Box::new(conn),
             &topo,
             shard_id,
             weight,
             session_fp,
             cfg.shard_link_streams(shard_id)?,
-        )?)
+        )?;
+        // keep the listener: if the coordinator dies mid-session, this
+        // shard re-accepts a `--resume`d one instead of aborting
+        let rebind = shard_bind.clone();
+        link.set_reacquire(Box::new(move || {
+            println!(
+                "slacc serve [shard {shard_id}]: waiting for a resumed \
+                 coordinator on {rebind}"
+            );
+            let conn = TcpTransport::accept_direct(&shard_listener)?;
+            Ok(Box::new(conn) as Box<dyn Transport>)
+        }));
+        Some(link)
     } else {
         None
     };
@@ -588,6 +649,7 @@ fn cmd_device(mut args: Args) -> Result<(), String> {
     let id = args.usize_or("id", usize::MAX);
     let connect = args.str_or("connect", "127.0.0.1:7878");
     let mock = args.bool_or("mock", false);
+    let rejoin = args.bool_or("rejoin", false);
     let trace_out = args.str_opt("trace-out");
     args.finish()?;
     cfg.validate()?;
@@ -605,10 +667,18 @@ fn cmd_device(mut args: Args) -> Result<(), String> {
         let (train, _) =
             Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
         let mut worker = mock_worker(&cfg, Arc::new(train), id)?;
-        run_blocking(&mut worker, &mut conn)
+        if rejoin {
+            run_blocking_rejoin(&mut worker, &mut conn)
+        } else {
+            run_blocking(&mut worker, &mut conn)
+        }
     } else {
         let mut worker = engine_worker(&cfg, id)?;
-        run_blocking(&mut worker, &mut conn)
+        if rejoin {
+            run_blocking_rejoin(&mut worker, &mut conn)
+        } else {
+            run_blocking(&mut worker, &mut conn)
+        }
     };
     // like serve: drain spans even when the session errored out
     if let Some(path) = &trace_out {

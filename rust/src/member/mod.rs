@@ -1,0 +1,312 @@
+//! Elastic fleet membership (proto v6): the per-device state machine that
+//! lets a split-learning session survive devices leaving and returning
+//! mid-run instead of treating every hang-up as fatal.
+//!
+//! The server owns one [`MembershipTable`] per session. Every device slot
+//! walks the state machine
+//!
+//! ```text
+//!            Hello handshake            PeerClosed / Leave / stall
+//!   (start) ----------------> Active ------------------------------+
+//!                               ^                                  v
+//!                               |        Join (epoch ok)        Departed
+//!                          Readmitted <----------- Joining <-------+
+//!                               |   JoinAck + Catchup at the
+//!                               +-- next round boundary
+//! ```
+//!
+//! Each admission stamps the slot with a fresh **member epoch**: the
+//! server returns it in `JoinAck`, the device echoes it in any future
+//! `Join`, and [`MembershipTable::begin_join`] rejects a claimed epoch
+//! that matches neither "fresh process" (0) nor the slot's current
+//! epoch — so a delayed `Join` replayed from a previous incarnation can
+//! never re-enter the session and replay an old round.
+//!
+//! The scheduler consumes two event types produced by an elastic
+//! [`crate::sched::fleet::Fleet`]: typed [`Departure`]s (a closed or
+//! stalled connection shrinking the participant set, absorbed by the
+//! existing quorum semantics) and [`JoinRequest`]s (a parked `Join`
+//! handshake awaiting admission at the next round boundary).
+
+use crate::obs::metrics::{DEPARTURES_TOTAL, FLEET_SIZE, JOINS_TOTAL, READMITS_TOTAL};
+use crate::transport::proto::Message;
+use crate::transport::TransportError;
+
+/// Where one device slot stands in the elastic-membership lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemberState {
+    /// A `Join` handshake is parked, awaiting admission at the next round
+    /// boundary.
+    Joining,
+    /// In the session since the initial `Hello` handshake.
+    Active,
+    /// Connection closed (peer hang-up, write stall, or graceful `Leave`);
+    /// the slot is vacant and open to a re-join.
+    Departed,
+    /// Back in the session after at least one departure (scheduling-wise
+    /// identical to `Active`).
+    Readmitted,
+}
+
+impl MemberState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemberState::Joining => "joining",
+            MemberState::Active => "active",
+            MemberState::Departed => "departed",
+            MemberState::Readmitted => "readmitted",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    state: MemberState,
+    /// admission epoch: 0 for the initial handshake, bumped by every
+    /// re-admission; stamped into `JoinAck` and validated on `Join`
+    epoch: u32,
+    departures: u32,
+}
+
+/// A device connection ended mid-session. In an elastic session these are
+/// drained by the scheduler ([`crate::sched::fleet::Fleet::take_departures`])
+/// and shrink the participant set; in a fixed-fleet session the same
+/// condition stays a fatal [`TransportError`].
+#[derive(Debug, Clone)]
+pub struct Departure {
+    /// connection slot (== global device id on a flat fleet; the fleet
+    /// maps slot → gid on sharded shapes)
+    pub slot: usize,
+    /// what ended the connection; [`TransportError::PeerClosed`] for a
+    /// hang-up, `Protocol`/`Io` for stalls and framing violations
+    pub error: TransportError,
+    /// true when the device announced the departure with a `Leave` frame
+    /// before hanging up
+    pub graceful: bool,
+}
+
+/// A parked `Join` handshake: a late or returning device whose first
+/// frame arrived on a fresh connection, held by the fleet until the
+/// scheduler admits (or rejects) it at a round boundary.
+#[derive(Debug, Clone)]
+pub struct JoinRequest {
+    /// fleet-internal handle; pass back to `admit_join` / `reject_join`
+    pub key: u64,
+    /// global device id the connection claims to serve
+    pub gid: usize,
+    /// admission epoch the device last held (0 for a fresh process)
+    pub member_epoch: u32,
+    /// the full `Join` frame, so the server can run the same spec-table /
+    /// fingerprint validation as the initial `Hello`
+    pub msg: Message,
+    /// wire size of the `Join` frame, credited to the slot's `WireStats`
+    /// on admission so per-device accounting stays exact across
+    /// incarnations
+    pub join_bytes: u64,
+}
+
+/// Per-gid membership state machine for one session, owned by the server
+/// (and mirrored per-shard at the coordinator tier). All transitions keep
+/// the `slacc_fleet_size` gauge and the join/departure/readmit counters
+/// current.
+#[derive(Debug)]
+pub struct MembershipTable {
+    entries: Vec<Entry>,
+}
+
+impl MembershipTable {
+    /// A table for `n` devices that all completed the initial `Hello`
+    /// handshake: everyone starts `Active` at epoch 0.
+    pub fn new(n: usize) -> MembershipTable {
+        FLEET_SIZE.set(n as i64);
+        MembershipTable {
+            entries: vec![Entry { state: MemberState::Active, epoch: 0, departures: 0 }; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn state(&self, gid: usize) -> MemberState {
+        self.entries[gid].state
+    }
+
+    /// Current admission epoch of `gid` (what the next `Join` must claim,
+    /// unless it is a fresh process claiming 0).
+    pub fn epoch(&self, gid: usize) -> u32 {
+        self.entries[gid].epoch
+    }
+
+    /// Devices currently in the session (`Active` or `Readmitted`).
+    pub fn active_count(&self) -> usize {
+        self.entries.iter().filter(|e| is_in_session(e.state)).count()
+    }
+
+    /// Is `gid` currently in the session?
+    pub fn is_active(&self, gid: usize) -> bool {
+        is_in_session(self.entries[gid].state)
+    }
+
+    /// Record a departure. Returns false (and changes nothing) if the slot
+    /// was already out of the session — close paths may fire twice.
+    pub fn depart(&mut self, gid: usize) -> bool {
+        let e = &mut self.entries[gid];
+        if !is_in_session(e.state) && e.state != MemberState::Joining {
+            return false;
+        }
+        e.state = MemberState::Departed;
+        e.departures += 1;
+        DEPARTURES_TOTAL.inc();
+        FLEET_SIZE.set(self.active_count() as i64);
+        true
+    }
+
+    /// Validate a `Join` for `gid` and park it as `Joining`. The claimed
+    /// epoch must be 0 (a fresh process) or the slot's current epoch (the
+    /// same incarnation the server last admitted); anything else is a
+    /// stale incarnation replaying an admission it no longer owns.
+    pub fn begin_join(&mut self, gid: usize, claimed_epoch: u32) -> Result<(), String> {
+        if gid >= self.entries.len() {
+            return Err(format!("join for device {gid} of a {}-device fleet", self.entries.len()));
+        }
+        let e = &mut self.entries[gid];
+        if e.state != MemberState::Departed {
+            return Err(format!(
+                "join for device {gid} in state {} (slot is not vacant)",
+                e.state.label()
+            ));
+        }
+        if claimed_epoch != 0 && claimed_epoch != e.epoch {
+            return Err(format!(
+                "stale member epoch for device {gid}: join claims epoch {claimed_epoch}, \
+                 current is {}",
+                e.epoch
+            ));
+        }
+        e.state = MemberState::Joining;
+        Ok(())
+    }
+
+    /// Admit a parked join: `Joining → Readmitted`, stamping and returning
+    /// the fresh admission epoch for the `JoinAck`.
+    pub fn admit(&mut self, gid: usize) -> Result<u32, String> {
+        let e = &mut self.entries[gid];
+        if e.state != MemberState::Joining {
+            return Err(format!(
+                "admit for device {gid} in state {} (no parked join)",
+                e.state.label()
+            ));
+        }
+        e.state = MemberState::Readmitted;
+        e.epoch += 1;
+        JOINS_TOTAL.inc();
+        if e.departures > 0 {
+            READMITS_TOTAL.inc();
+        }
+        FLEET_SIZE.set(self.active_count() as i64);
+        Ok(self.entries[gid].epoch)
+    }
+
+    /// Roll a parked join back to `Departed` (validation failed after
+    /// `begin_join`, or the fleet dropped the pending connection).
+    pub fn reject(&mut self, gid: usize) {
+        let e = &mut self.entries[gid];
+        if e.state == MemberState::Joining {
+            e.state = MemberState::Departed;
+        }
+    }
+}
+
+fn is_in_session(s: MemberState) -> bool {
+    matches!(s, MemberState::Active | MemberState::Readmitted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_fleet_is_fully_active() {
+        let t = MembershipTable::new(4);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.active_count(), 4);
+        for gid in 0..4 {
+            assert_eq!(t.state(gid), MemberState::Active);
+            assert_eq!(t.epoch(gid), 0);
+            assert!(t.is_active(gid));
+        }
+    }
+
+    #[test]
+    fn depart_join_admit_walks_the_state_machine() {
+        let mut t = MembershipTable::new(3);
+        assert!(t.depart(1));
+        assert_eq!(t.state(1), MemberState::Departed);
+        assert_eq!(t.active_count(), 2);
+        assert!(!t.is_active(1));
+
+        t.begin_join(1, 0).unwrap();
+        assert_eq!(t.state(1), MemberState::Joining);
+        assert!(!t.is_active(1), "a parked join is not yet in the session");
+
+        let epoch = t.admit(1).unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(t.state(1), MemberState::Readmitted);
+        assert_eq!(t.epoch(1), 1);
+        assert_eq!(t.active_count(), 3);
+    }
+
+    #[test]
+    fn double_depart_is_idempotent() {
+        let mut t = MembershipTable::new(2);
+        assert!(t.depart(0));
+        assert!(!t.depart(0), "second depart of the same slot must be a no-op");
+        assert_eq!(t.active_count(), 1);
+    }
+
+    #[test]
+    fn stale_epoch_join_is_rejected() {
+        let mut t = MembershipTable::new(2);
+        // first churn cycle: depart, rejoin holding epoch 0 → admitted as 1
+        t.depart(0);
+        t.begin_join(0, 0).unwrap();
+        assert_eq!(t.admit(0).unwrap(), 1);
+        // second cycle: the *current* incarnation (epoch 1) may rejoin...
+        t.depart(0);
+        t.begin_join(0, 1).unwrap();
+        assert_eq!(t.admit(0).unwrap(), 2);
+        // ...but a replayed Join from the epoch-1 incarnation must bounce
+        t.depart(0);
+        let err = t.begin_join(0, 1).unwrap_err();
+        assert!(err.contains("stale member epoch"), "{err}");
+        // a fresh process (epoch 0) is always allowed to claim the slot
+        t.begin_join(0, 0).unwrap();
+        assert_eq!(t.admit(0).unwrap(), 3);
+    }
+
+    #[test]
+    fn join_requires_a_vacant_slot() {
+        let mut t = MembershipTable::new(2);
+        let err = t.begin_join(0, 0).unwrap_err();
+        assert!(err.contains("not vacant"), "{err}");
+        let err = t.begin_join(5, 0).unwrap_err();
+        assert!(err.contains("2-device fleet"), "{err}");
+    }
+
+    #[test]
+    fn admit_without_parked_join_errors_and_reject_rolls_back() {
+        let mut t = MembershipTable::new(2);
+        assert!(t.admit(0).is_err());
+        t.depart(0);
+        assert!(t.admit(0).is_err(), "Departed slot has no parked join");
+        t.begin_join(0, 0).unwrap();
+        t.reject(0);
+        assert_eq!(t.state(0), MemberState::Departed);
+        assert!(t.admit(0).is_err(), "rejected join must not be admittable");
+    }
+}

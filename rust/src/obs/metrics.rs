@@ -205,6 +205,39 @@ pub static CONN_BUF_BYTES: Gauge = Gauge::new(
     "bytes of per-connection decode-ring capacity currently retained",
 );
 
+// -------------------------------------------------------- elastic membership
+
+pub static FLEET_SIZE: Gauge = Gauge::new(
+    "slacc_fleet_size",
+    "",
+    "devices currently admitted to the session (Active or Readmitted)",
+);
+pub static JOINS_TOTAL: Counter = Counter::new(
+    "slacc_joins_total",
+    "",
+    "mid-session Join admissions completed",
+);
+pub static DEPARTURES_TOTAL: Counter = Counter::new(
+    "slacc_departures_total",
+    "",
+    "mid-session departures (peer hang-ups, write stalls, Leave frames)",
+);
+pub static READMITS_TOTAL: Counter = Counter::new(
+    "slacc_readmits_total",
+    "",
+    "Join admissions that returned a previously departed device",
+);
+pub static WRITE_BATCHES_TOTAL: Counter = Counter::new(
+    "slacc_write_batches_total",
+    "",
+    "syscalls saved by coalescing adjacent control frames into one writev",
+);
+pub static CHECKPOINT_WRITE_NS: Histogram = Histogram::new(
+    "slacc_checkpoint_write_ns",
+    "",
+    "nanoseconds per coordinator checkpoint write (serialize + fsync-free rename)",
+);
+
 // ------------------------------------------------------------ server compute
 
 pub static SERVER_STEPS: Counter = Counter::new(
@@ -420,6 +453,10 @@ pub fn counters() -> &'static [&'static Counter] {
         &SCRAPES,
         &READY_EVENTS,
         &WRITE_STALLS,
+        &JOINS_TOTAL,
+        &DEPARTURES_TOTAL,
+        &READMITS_TOTAL,
+        &WRITE_BATCHES_TOTAL,
     ]
 }
 
@@ -434,6 +471,7 @@ pub fn gauges() -> &'static [&'static Gauge] {
         &ENTROPY_VAR_DOWN,
         &ENTROPY_VAR_SYNC,
         &CONN_BUF_BYTES,
+        &FLEET_SIZE,
     ]
 }
 
@@ -449,6 +487,7 @@ pub fn histograms() -> &'static [&'static Histogram] {
         &CODEC_DEC_NS_SYNC,
         &SHARD_SYNC_WAIT_NS,
         &FEDAVG_NS,
+        &CHECKPOINT_WRITE_NS,
     ]
 }
 

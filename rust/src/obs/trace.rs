@@ -136,8 +136,20 @@ const DEVICE_STAGES: &[&str] = &[
     "client_bwd",
 ];
 
-/// Round-scoped stages that follow the per-device chain.
-const ROUND_STAGES: &[&str] = &["fedavg", "eval", "shard_barrier", "spec_update"];
+/// Round-scoped stages that follow the per-device chain. The membership
+/// spans (`join`/`catchup`/`leave`) and the coordinator `checkpoint` span
+/// land here too: they happen at round boundaries, not inside any single
+/// device's activation chain.
+const ROUND_STAGES: &[&str] = &[
+    "fedavg",
+    "eval",
+    "shard_barrier",
+    "spec_update",
+    "join",
+    "catchup",
+    "leave",
+    "checkpoint",
+];
 
 /// Parse one trace file's text (header row, span rows, dropped rows).
 pub fn parse_trace(path: &str, text: &str) -> Result<NodeTrace, String> {

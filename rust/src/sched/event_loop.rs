@@ -31,6 +31,7 @@ use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::Instant;
 
+use crate::member::{Departure, JoinRequest};
 use crate::obs::export::MetricsExporter;
 use crate::obs::metrics;
 use crate::quant::payload::ByteWriter;
@@ -56,6 +57,14 @@ const MAX_QUEUED_FRAMES: usize = 8;
 /// this so pending scrapers are serviced even while the fleet is quiet.
 const EXPORT_TICK_MS: i32 = 50;
 
+/// With the listener armed (elastic sessions), indefinite poll waits are
+/// clamped to this so a late joiner is noticed even while the fleet idles.
+const JOIN_TICK_MS: i32 = 100;
+
+/// Cap on simultaneously parked `Join` handshakes; connections past the
+/// cap are dropped at accept (a churny fleet retries).
+const MAX_PENDING_JOINS: usize = 64;
+
 /// Tunables for a [`PollFleet`], surfaced on the CLI as `--io-backend` and
 /// `--write-stall-secs`. Deliberately *not* part of the config
 /// fingerprint: how a server polls its sockets must not change the
@@ -68,11 +77,17 @@ pub struct FleetOptions {
     /// stopped reading (`--write-stall-secs`, default 10; 0 = abort at the
     /// first full-buffer stall).
     pub write_stall_secs: u64,
+    /// Elastic membership (`--elastic`): mid-session hang-ups and stalls
+    /// become typed [`Departure`] events instead of fatal errors, and the
+    /// listener stays armed ([`PollFleet::arm_listener`]) so departed or
+    /// late devices can `Join` at the next round boundary. Off, the fleet
+    /// keeps the fixed-membership semantics every pre-v6 test pins.
+    pub elastic: bool,
 }
 
 impl Default for FleetOptions {
     fn default() -> FleetOptions {
-        FleetOptions { backend: poll::Backend::Auto, write_stall_secs: 10 }
+        FleetOptions { backend: poll::Backend::Auto, write_stall_secs: 10, elastic: false }
     }
 }
 
@@ -94,6 +109,13 @@ struct PollConn {
     /// decoder-ring capacity last reported to the `slacc_conn_buf_bytes`
     /// gauge (delta-tracked so closes and reclaims subtract correctly)
     buf_cap: usize,
+    /// elastic mode: this close was recorded as a typed [`Departure`]
+    /// (queued or already drained by the scheduler) — the slot is vacant
+    /// and must not surface a fatal `first_dead_error`
+    departed: bool,
+    /// a `Leave` frame was decoded on this connection, so the close that
+    /// follows is a graceful departure, not a failure
+    saw_leave: bool,
 }
 
 impl PollConn {
@@ -102,6 +124,20 @@ impl PollConn {
             .clone()
             .unwrap_or_else(|| TransportError::PeerClosed { peer: self.peer.clone() })
     }
+}
+
+/// A connection accepted after session start, parked until its first frame
+/// (which must be a `Join`) arrives and the scheduler rules on admission
+/// at the next round boundary.
+struct PendingJoin {
+    stream: TcpStream,
+    decoder: FrameDecoder,
+    peer: String,
+    key: u64,
+    /// decoded `Join`, surfaced to the scheduler exactly once
+    request: Option<JoinRequest>,
+    surfaced: bool,
+    dead: bool,
 }
 
 /// A fleet of non-blocking TCP device connections behind one poll loop.
@@ -123,6 +159,16 @@ pub struct PollFleet {
     shape: FleetShape,
     /// `--metrics-bind` scrape endpoint, serviced once per poll pass
     exporter: Option<MetricsExporter>,
+    /// elastic membership on ([`FleetOptions::elastic`])
+    elastic: bool,
+    /// the session listener, kept armed after handshake in elastic mode
+    /// ([`PollFleet::arm_listener`]) so late joiners can connect
+    listener: Option<TcpListener>,
+    /// connections parked mid-`Join` handshake
+    pending: Vec<PendingJoin>,
+    next_join_key: u64,
+    /// typed departures not yet drained by the scheduler
+    departures: Vec<Departure>,
 }
 
 impl PollFleet {
@@ -171,6 +217,8 @@ impl PollFleet {
                 failure: None,
                 gated: false,
                 buf_cap: 0,
+                departed: false,
+                saw_leave: false,
             });
         }
         let mut fleet = PollFleet {
@@ -183,6 +231,11 @@ impl PollFleet {
             start: Instant::now(),
             shape,
             exporter: None,
+            elastic: false, // handshake runs fixed-fleet; flips below
+            listener: None,
+            pending: Vec::new(),
+            next_join_key: 0,
+            departures: Vec::new(),
         };
 
         // one Hello per connection, in whatever order they land
@@ -258,9 +311,29 @@ impl PollFleet {
                 start: fleet.start,
                 shape,
                 exporter: fleet.exporter.take(),
+                elastic: opts.elastic,
+                listener: None,
+                pending: Vec::new(),
+                next_join_key: 0,
+                departures: Vec::new(),
             },
             hellos,
         ))
+    }
+
+    /// Keep the session listener armed after handshake (elastic mode):
+    /// every poll pass accepts waiting connections, parks them through the
+    /// `Join` handshake, and surfaces complete requests via
+    /// [`Fleet::poll_joins`]. Requires [`FleetOptions::elastic`].
+    pub fn arm_listener(&mut self, listener: TcpListener) -> Result<(), String> {
+        if !self.elastic {
+            return Err("arm_listener requires FleetOptions::elastic".to_string());
+        }
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("listener set_nonblocking: {e}"))?;
+        self.listener = Some(listener);
+        Ok(())
     }
 
     /// Attach a `--metrics-bind` scrape endpoint. The exporter is serviced
@@ -277,6 +350,10 @@ impl PollFleet {
 
     /// Mark `i` closed: record the terminal error, leave the interest set,
     /// keep the `open_conns` count and buffer gauge honest. Idempotent.
+    /// In elastic mode the close is additionally queued as a typed
+    /// [`Departure`] (drained via [`Fleet::take_departures`] once the
+    /// slot's already-decoded frames are consumed) and the slot becomes
+    /// vacant instead of poisoning the session.
     fn close_conn(&mut self, i: usize, failure: Option<TransportError>) {
         if self.conns[i].closed {
             return;
@@ -291,6 +368,14 @@ impl PollFleet {
             self.conns[i].gated = false;
         } else {
             let _ = self.poller.deregister(&self.conns[i].stream, i);
+        }
+        if self.elastic {
+            self.conns[i].departed = true;
+            self.departures.push(Departure {
+                slot: i,
+                error: self.conns[i].terminal_error(),
+                graceful: self.conns[i].saw_leave && self.conns[i].failure.is_none(),
+            });
         }
     }
 
@@ -358,6 +443,10 @@ impl PollFleet {
                     conn.stats.bytes_recv += n as u64;
                     metrics::FRAMES_RECV.inc();
                     metrics::NET_RX_BYTES.add(n as u64);
+                    if matches!(msg, Message::Leave { .. }) {
+                        // the hang-up that follows is a graceful departure
+                        conn.saw_leave = true;
+                    }
                     conn.inbox
                         .push_back((msg, crate::util::logging::elapsed_ns()));
                     self.order.push_back(i);
@@ -436,9 +525,26 @@ impl PollFleet {
             }
             None => timeout_ms,
         };
+        // elastic: accept waiting connections and advance parked Join
+        // handshakes every pass, and clamp indefinite waits so a late
+        // joiner is noticed even while the fleet is quiet
+        let timeout_ms = if self.listener.is_some() {
+            self.accept_pending();
+            self.service_pending();
+            if timeout_ms < 0 { JOIN_TICK_MS } else { timeout_ms.min(JOIN_TICK_MS) }
+        } else {
+            timeout_ms
+        };
         metrics::OPEN_CONNS.set(self.open_count as i64);
         if self.poller.armed() == 0 && !self.poller.has_forced() {
-            // every connection is closed or gated: nothing to wait on
+            // every connection is closed or gated: nothing to wait on —
+            // but with the listener armed, nap for the tick instead of
+            // busy-spinning while an empty fleet waits for joiners
+            if self.listener.is_some() && timeout_ms != 0 {
+                std::thread::sleep(std::time::Duration::from_millis(
+                    timeout_ms.max(1) as u64,
+                ));
+            }
             return Ok(0);
         }
         let n = self.poller.wait(timeout_ms).map_err(TransportError::Io)?;
@@ -454,9 +560,23 @@ impl PollFleet {
     /// The terminal error of the first dead connection. Called when the
     /// arrival queue is drained and at least one socket has closed: a
     /// device that vanishes mid-session is fatal to the session (matching
-    /// the in-order `recv_from` semantics), never a silent hang.
+    /// the in-order `recv_from` semantics), never a silent hang. Elastic
+    /// slots are exempt: their closes surface as typed [`Departure`]s.
     fn first_dead_error(&self) -> Option<TransportError> {
-        self.conns.iter().find(|c| c.closed).map(|c| c.terminal_error())
+        self.conns
+            .iter()
+            .find(|c| c.closed && !c.departed)
+            .map(|c| c.terminal_error())
+    }
+
+    /// Whether a departure is ready for the scheduler: a closed elastic
+    /// slot whose already-decoded frames have all been consumed.
+    /// `recv_any` returns `Ok(None)` on these so an elastic scheduler
+    /// wakes up and shrinks its participant set instead of blocking on a
+    /// fleet that just shrank. (Parked joins don't wake `recv_any` — they
+    /// are acted on at round boundaries via [`Fleet::poll_joins`].)
+    fn membership_event_ready(&self) -> bool {
+        self.departures.iter().any(|d| self.conns[d.slot].inbox.is_empty())
     }
 
     /// Trace the decode→consume latency of a frame popped from slot `i`'s
@@ -476,6 +596,114 @@ impl PollFleet {
             )
             .gid(self.shape.gid(i) as u32),
         );
+    }
+
+    /// Accept whatever connections are waiting on the armed listener and
+    /// park them as pending joins. Non-blocking; called once per poll
+    /// pass. Connections past [`MAX_PENDING_JOINS`] are dropped at accept.
+    fn accept_pending(&mut self) {
+        let Some(listener) = self.listener.as_ref() else { return };
+        let mut fresh = Vec::new();
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => fresh.push(stream),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+        for stream in fresh {
+            if self.pending.len() >= MAX_PENDING_JOINS {
+                crate::log_info!("sched: dropping join connection (pending cap)");
+                continue; // dropping the stream closes it
+            }
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "tcp:unknown".to_string());
+            if stream.set_nodelay(true).is_err() || stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            let key = self.next_join_key;
+            self.next_join_key += 1;
+            crate::log_info!("sched: join connection from {peer} parked (key {key})");
+            self.pending.push(PendingJoin {
+                stream,
+                decoder: FrameDecoder::new(),
+                peer,
+                key,
+                request: None,
+                surfaced: false,
+                dead: false,
+            });
+        }
+    }
+
+    /// Advance every parked join handshake: read what the socket has,
+    /// decode the first frame, and require it to be a `Join` for a slot
+    /// this node serves. Violations (wrong first frame, framing errors,
+    /// hang-ups, foreign device ids) kill the pending connection.
+    fn service_pending(&mut self) {
+        let shape = self.shape;
+        for p in &mut self.pending {
+            if p.dead || p.request.is_some() {
+                continue;
+            }
+            loop {
+                let slot = p.decoder.read_slot(READ_CHUNK);
+                match p.stream.read(slot) {
+                    Ok(0) => {
+                        p.dead = true;
+                        break;
+                    }
+                    Ok(n) => p.decoder.commit(n),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        p.dead = true;
+                        break;
+                    }
+                }
+            }
+            if p.dead {
+                continue;
+            }
+            match p.decoder.next() {
+                Ok(Some((msg, n))) => match &msg {
+                    Message::Join { device_id, member_epoch, .. } => {
+                        let gid = *device_id as usize;
+                        if shape.slot(gid).is_none() {
+                            crate::log_info!(
+                                "sched: {} sent Join for device {gid}, not served here",
+                                p.peer
+                            );
+                            p.dead = true;
+                            continue;
+                        }
+                        metrics::FRAMES_RECV.inc();
+                        metrics::NET_RX_BYTES.add(n as u64);
+                        p.request = Some(JoinRequest {
+                            key: p.key,
+                            gid,
+                            member_epoch: *member_epoch,
+                            msg: msg.clone(),
+                            join_bytes: n as u64,
+                        });
+                    }
+                    other => {
+                        crate::log_info!(
+                            "sched: {} opened with {} instead of Join",
+                            p.peer,
+                            other.type_name()
+                        );
+                        p.dead = true;
+                    }
+                },
+                Ok(None) => {} // partial frame: keep waiting
+                Err(_) => p.dead = true,
+            }
+        }
+        self.pending.retain(|p| !p.dead);
     }
 }
 
@@ -524,6 +752,7 @@ impl Fleet for PollFleet {
         let stall_ms =
             self.write_stall_secs.saturating_mul(1000).min(i32::MAX as u64) as i32;
         let mut off = 0usize;
+        let mut fail: Option<TransportError> = None;
         while off < total {
             let res = if off < head.len() {
                 let bufs = [IoSlice::new(&head[off..]), IoSlice::new(payload)];
@@ -533,10 +762,11 @@ impl Fleet for PollFleet {
             };
             match res {
                 Ok(0) => {
-                    return Err(TransportError::Io(format!(
+                    fail = Some(TransportError::Io(format!(
                         "{}: write returned 0",
                         conn.peer
-                    )))
+                    )));
+                    break;
                 }
                 Ok(n) => off += n,
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -544,28 +774,45 @@ impl Fleet for PollFleet {
                     // single-threaded loop: bound the stall and fail the
                     // connection instead of retrying forever
                     let _sp = crate::span!("write_park", gid = self.shape.gid(d));
-                    if !poll::wait_writable(&conn.stream, stall_ms)
-                        .map_err(TransportError::Io)?
-                    {
-                        metrics::WRITE_STALLS.inc();
-                        return Err(TransportError::Io(format!(
-                            "{}: write of {} stalled for {}s (peer not reading)",
-                            conn.peer,
-                            msg.type_name(),
-                            self.write_stall_secs
-                        )));
+                    match poll::wait_writable(&conn.stream, stall_ms) {
+                        Ok(true) => {}
+                        Ok(false) => {
+                            metrics::WRITE_STALLS.inc();
+                            fail = Some(TransportError::Io(format!(
+                                "{}: write of {} stalled for {}s (peer not reading)",
+                                conn.peer,
+                                msg.type_name(),
+                                self.write_stall_secs
+                            )));
+                            break;
+                        }
+                        Err(e) => {
+                            fail = Some(TransportError::Io(e));
+                            break;
+                        }
                     }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                 Err(e) => {
-                    return Err(TransportError::Io(format!(
+                    fail = Some(TransportError::Io(format!(
                         "{}: write {}: {e}",
                         conn.peer,
                         msg.type_name()
-                    )))
+                    )));
+                    break;
                 }
             }
         }
+        if let Some(e) = fail {
+            // elastic: a dead write path is a *departure* — close the slot
+            // (queueing the typed event) so the session sheds the device
+            // instead of aborting on the error the caller sees
+            if self.elastic {
+                self.close_conn(d, Some(e.clone()));
+            }
+            return Err(e);
+        }
+        let conn = &mut self.conns[d];
         conn.stats.frames_sent += 1;
         conn.stats.bytes_sent += total as u64;
         metrics::FRAMES_SENT.inc();
@@ -608,6 +855,12 @@ impl Fleet for PollFleet {
                 self.ungate(i)?;
                 return Ok(Some((i, msg)));
             }
+            // queue drained: an elastic scheduler must rule on pending
+            // membership events (departures with no frames left, parked
+            // joins) before blocking on the survivors
+            if self.elastic && self.membership_event_ready() {
+                return Ok(None);
+            }
             // queue drained (so every inbox is empty): any closed socket
             // means a device is gone for good — surface it instead of
             // waiting on the survivors forever
@@ -647,6 +900,224 @@ impl Fleet for PollFleet {
     fn peer(&self, d: usize) -> String {
         self.conns[d].peer.clone()
     }
+
+    fn vacant(&self, d: usize) -> bool {
+        self.elastic && self.conns[d].closed
+    }
+
+    fn take_departures(&mut self) -> Vec<Departure> {
+        if self.departures.is_empty() {
+            return Vec::new();
+        }
+        // a departure is only actionable once its slot's in-flight frames
+        // are consumed — otherwise the scheduler would shrink the
+        // participant set while decoded frames from that device still sit
+        // in the inbox and per-device wire accounting would drift
+        let all = std::mem::take(&mut self.departures);
+        let (ready, waiting): (Vec<_>, Vec<_>) = all
+            .into_iter()
+            .partition(|d| self.conns[d.slot].inbox.is_empty());
+        self.departures = waiting;
+        ready
+    }
+
+    fn poll_joins(&mut self) -> Vec<JoinRequest> {
+        // the scheduler polls at round boundaries, which may be a while
+        // after the last poll_step: advance the handshakes now
+        self.accept_pending();
+        self.service_pending();
+        let mut out = Vec::new();
+        for p in &mut self.pending {
+            if let Some(req) = &p.request {
+                if !p.surfaced {
+                    p.surfaced = true;
+                    out.push(req.clone());
+                }
+            }
+        }
+        out
+    }
+
+    fn admit_join(&mut self, key: u64, replies: &[Message]) -> Result<(), TransportError> {
+        let idx = self
+            .pending
+            .iter()
+            .position(|p| p.key == key)
+            .ok_or_else(|| {
+                TransportError::Protocol(format!("admit_join: no parked join with key {key}"))
+            })?;
+        let p = self.pending.remove(idx);
+        let req = match &p.request {
+            Some(r) => r.clone(),
+            None => {
+                return Err(TransportError::Protocol(
+                    "admit_join: pending connection has no decoded Join".to_string(),
+                ))
+            }
+        };
+        let slot = self
+            .shape
+            .slot(req.gid)
+            .expect("service_pending validated the gid maps to a served slot");
+        if !self.conns[slot].closed {
+            return Err(TransportError::Protocol(format!(
+                "admit_join: device {} slot is still open",
+                req.gid
+            )));
+        }
+        if !self.conns[slot].inbox.is_empty() {
+            return Err(TransportError::Protocol(format!(
+                "admit_join: device {} has undrained frames from its previous incarnation",
+                req.gid
+            )));
+        }
+        if p.decoder.buffered() > 0 {
+            return Err(TransportError::Protocol(format!(
+                "{}: sent {} bytes past the Join before JoinAck",
+                p.peer,
+                p.decoder.buffered()
+            )));
+        }
+        // swap the fresh connection into the vacant slot; per-device wire
+        // totals span incarnations (the churn soak pins exact per-device
+        // accounting), the decoder ring starts fresh
+        let mut stats = self.conns[slot].stats;
+        stats.frames_recv += 1; // the Join frame itself
+        stats.bytes_recv += req.join_bytes;
+        let old = std::mem::replace(
+            &mut self.conns[slot],
+            PollConn {
+                stream: p.stream,
+                decoder: p.decoder,
+                inbox: VecDeque::new(),
+                stats,
+                peer: p.peer,
+                closed: false,
+                failure: None,
+                gated: false,
+                buf_cap: 0,
+                departed: false,
+                saw_leave: false,
+            },
+        );
+        if old.buf_cap > 0 {
+            metrics::CONN_BUF_BYTES.add(-(old.buf_cap as i64));
+        }
+        drop(old); // closes the previous incarnation's socket, if still open
+        self.open_count += 1;
+        metrics::OPEN_CONNS.set(self.open_count as i64);
+        self.poller
+            .register(&self.conns[slot].stream, slot)
+            .map_err(TransportError::Io)?;
+        self.note_buf_cap(slot);
+        // any stale departure record for this slot is now moot
+        self.departures.retain(|d| d.slot != slot);
+        self.send_batch(slot, replies)
+    }
+
+    fn reject_join(&mut self, key: u64, reason: &str) {
+        if let Some(idx) = self.pending.iter().position(|p| p.key == key) {
+            let mut p = self.pending.remove(idx);
+            crate::log_info!("sched: rejecting join from {}: {reason}", p.peer);
+            // best-effort refusal; the connection drops either way
+            let frame = Message::Shutdown { reason: reason.to_string() }.encode_frame();
+            let _ = p.stream.write(&frame);
+        }
+    }
+
+    fn send_batch(&mut self, d: usize, msgs: &[Message]) -> Result<(), TransportError> {
+        if msgs.len() < 2 {
+            return match msgs.first() {
+                Some(m) => self.send(d, m),
+                None => Ok(()),
+            };
+        }
+        // adjacent control frames for one connection are tiny (JoinAck,
+        // SpecUpdate, round control): assemble each whole and push the
+        // batch through a single vectored write instead of one syscall
+        // per frame
+        let frames: Vec<Vec<u8>> = msgs.iter().map(|m| m.encode_frame()).collect();
+        let total: usize = frames.iter().map(|f| f.len()).sum();
+        let conn = &mut self.conns[d];
+        if conn.closed {
+            return Err(conn.terminal_error());
+        }
+        let stall_ms =
+            self.write_stall_secs.saturating_mul(1000).min(i32::MAX as u64) as i32;
+        let mut off = 0usize;
+        let mut writes = 0u64;
+        let mut fail: Option<TransportError> = None;
+        while off < total {
+            // rebuild the slice list past `off` (short writes are rare)
+            let mut bufs: Vec<IoSlice> = Vec::with_capacity(frames.len());
+            let mut before = 0usize;
+            for f in &frames {
+                if before + f.len() > off {
+                    bufs.push(IoSlice::new(&f[off.saturating_sub(before)..]));
+                }
+                before += f.len();
+            }
+            match conn.stream.write_vectored(&bufs) {
+                Ok(0) => {
+                    fail = Some(TransportError::Io(format!(
+                        "{}: write returned 0",
+                        conn.peer
+                    )));
+                    break;
+                }
+                Ok(n) => {
+                    writes += 1;
+                    off += n;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    let _sp = crate::span!("write_park", gid = self.shape.gid(d));
+                    match poll::wait_writable(&conn.stream, stall_ms) {
+                        Ok(true) => {}
+                        Ok(false) => {
+                            metrics::WRITE_STALLS.inc();
+                            fail = Some(TransportError::Io(format!(
+                                "{}: batched write of {} frames stalled for {}s \
+                                 (peer not reading)",
+                                conn.peer,
+                                msgs.len(),
+                                self.write_stall_secs
+                            )));
+                            break;
+                        }
+                        Err(e) => {
+                            fail = Some(TransportError::Io(e));
+                            break;
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    fail = Some(TransportError::Io(format!(
+                        "{}: batched write: {e}",
+                        conn.peer
+                    )));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = fail {
+            // same departure semantics as the per-frame path
+            if self.elastic {
+                self.close_conn(d, Some(e.clone()));
+            }
+            return Err(e);
+        }
+        // byte parity with the per-frame path: the batch put exactly the
+        // sum of the individual frame encodings on the wire
+        assert_eq!(off, total, "vectored batch wrote {off} of {total} bytes");
+        let conn = &mut self.conns[d];
+        conn.stats.frames_sent += msgs.len() as u64;
+        conn.stats.bytes_sent += total as u64;
+        metrics::FRAMES_SENT.add(msgs.len() as u64);
+        metrics::NET_TX_BYTES.add(total as u64);
+        metrics::WRITE_BATCHES_TOTAL.add((msgs.len() as u64).saturating_sub(writes));
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -682,7 +1153,7 @@ mod tests {
     }
 
     fn opts(backend: poll::Backend) -> FleetOptions {
-        FleetOptions { backend, write_stall_secs: 10 }
+        FleetOptions { backend, write_stall_secs: 10, elastic: false }
     }
 
     #[test]
@@ -863,7 +1334,7 @@ mod tests {
         let (mut fleet, _) = PollFleet::accept_with(
             &listener,
             FleetShape::flat(1),
-            FleetOptions { backend: poll::Backend::Auto, write_stall_secs: 0 },
+            FleetOptions { backend: poll::Backend::Auto, write_stall_secs: 0, elastic: false },
         )
         .unwrap();
         let stalls_before = metrics::WRITE_STALLS.get();
@@ -937,6 +1408,237 @@ mod tests {
         );
         fleet.send(0, &Message::Shutdown { reason: "t".into() }).unwrap();
         drop(fleet);
+        handle.join().unwrap();
+    }
+
+    fn elastic_opts() -> FleetOptions {
+        FleetOptions { backend: poll::Backend::Auto, write_stall_secs: 10, elastic: true }
+    }
+
+    fn join_msg(d: u32, devices: u32, member_epoch: u32) -> Message {
+        let specs = crate::codecs::stream::StreamSpecs::parse(
+            "identity", "identity", "identity",
+        )
+        .unwrap();
+        Message::Join {
+            device_id: d,
+            devices,
+            shard_len: 8,
+            config_fp: 1,
+            member_epoch,
+            uplink: specs.uplink.as_str().to_string(),
+            downlink: specs.downlink.as_str().to_string(),
+            sync: specs.sync.as_str().to_string(),
+            streams_fp: specs.fingerprint(),
+        }
+    }
+
+    #[test]
+    fn elastic_departure_is_typed_not_fatal() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let quitter = {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr).unwrap();
+                t.send(&hello(0, 2)).unwrap();
+                // drop: clean close right after the handshake
+            })
+        };
+        let survivor_addr = addr.clone();
+        let survivor = thread::spawn(move || {
+            let mut t = TcpTransport::connect(&survivor_addr).unwrap();
+            t.send(&hello(1, 2)).unwrap();
+            let _ = t.recv(); // hold open until shutdown
+        });
+        let (mut fleet, _) =
+            PollFleet::accept_with(&listener, FleetShape::flat(2), elastic_opts()).unwrap();
+        quitter.join().unwrap();
+        // the hang-up surfaces as a membership wakeup, not a fatal error
+        let got = fleet.recv_any(None).unwrap();
+        assert!(got.is_none(), "membership event must surface as Ok(None)");
+        let deps = fleet.take_departures();
+        assert_eq!(deps.len(), 1);
+        assert_eq!(deps[0].slot, 0);
+        assert!(deps[0].error.is_peer_closed(), "got {:?}", deps[0].error);
+        assert!(!deps[0].graceful, "a silent hang-up is not graceful");
+        assert!(fleet.vacant(0));
+        assert!(!fleet.vacant(1));
+        // with the departure drained the fleet blocks normally: a timed
+        // wait times out instead of resurfacing the dead slot
+        assert!(fleet.recv_any(Some(0.05)).unwrap().is_none());
+        assert!(fleet.take_departures().is_empty(), "departure must drain once");
+        fleet.send(1, &Message::Shutdown { reason: "t".into() }).unwrap();
+        drop(fleet);
+        survivor.join().unwrap();
+    }
+
+    #[test]
+    fn graceful_leave_surfaces_frame_then_departure() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = thread::spawn(move || {
+            let mut t = TcpTransport::connect(&addr).unwrap();
+            t.send(&hello(0, 1)).unwrap();
+            t.send(&Message::Leave { device_id: 0, reason: "battery".into() }).unwrap();
+            // drop: the close right after a Leave is a graceful departure
+        });
+        let (mut fleet, _) =
+            PollFleet::accept_with(&listener, FleetShape::flat(1), elastic_opts()).unwrap();
+        handle.join().unwrap();
+        // the Leave frame itself is delivered first (in-flight frames are
+        // consumed before the departure becomes actionable)...
+        let (d, msg) = fleet.recv_any(None).unwrap().expect("Leave frame first");
+        assert_eq!(d, 0);
+        assert!(matches!(msg, Message::Leave { ref reason, .. } if reason == "battery"));
+        // ...then the typed departure, flagged graceful
+        assert!(fleet.recv_any(None).unwrap().is_none());
+        let deps = fleet.take_departures();
+        assert_eq!(deps.len(), 1);
+        assert!(deps[0].graceful, "Leave-then-close must read as graceful");
+    }
+
+    #[test]
+    fn late_join_is_parked_and_admitted_with_batched_replies() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let quitter = {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr).unwrap();
+                t.send(&hello(0, 2)).unwrap();
+            })
+        };
+        let anchor_addr = addr.clone();
+        let anchor = thread::spawn(move || {
+            let mut t = TcpTransport::connect(&anchor_addr).unwrap();
+            t.send(&hello(1, 2)).unwrap();
+            let _ = t.recv(); // hold open until shutdown
+        });
+        let (mut fleet, _) =
+            PollFleet::accept_with(&listener, FleetShape::flat(2), elastic_opts()).unwrap();
+        fleet.arm_listener(listener.try_clone().unwrap()).unwrap();
+        quitter.join().unwrap();
+        assert!(fleet.recv_any(None).unwrap().is_none());
+        let deps = fleet.take_departures();
+        assert_eq!(deps.len(), 1);
+        let stats_before = fleet.stats(0);
+
+        // the device comes back on a fresh connection
+        let rejoin_addr = addr.clone();
+        let rejoiner = thread::spawn(move || {
+            let mut t = TcpTransport::connect(&rejoin_addr).unwrap();
+            t.send(&join_msg(0, 2, 0)).unwrap();
+            let ack = t.recv().unwrap();
+            match ack {
+                Message::JoinAck { device_id, member_epoch, .. } => {
+                    assert_eq!(device_id, 0);
+                    assert_eq!(member_epoch, 1);
+                }
+                other => panic!("want JoinAck, got {}", other.type_name()),
+            }
+            let catchup = t.recv().unwrap();
+            assert!(matches!(catchup, Message::Catchup { round: 7, .. }));
+            t.send(&Message::RoundOpen { round: 7, sync: false }).unwrap();
+            let _ = t.recv(); // hold open until shutdown
+        });
+
+        // park → surface exactly once → admit with a batched reply pair
+        let req = loop {
+            let mut reqs = fleet.poll_joins();
+            if let Some(r) = reqs.pop() {
+                break r;
+            }
+            thread::sleep(std::time::Duration::from_millis(5));
+        };
+        assert_eq!(req.gid, 0);
+        assert_eq!(req.member_epoch, 0);
+        assert!(matches!(req.msg, Message::Join { .. }));
+        assert!(fleet.poll_joins().is_empty(), "a join must surface once");
+
+        let batches_before = metrics::WRITE_BATCHES_TOTAL.get();
+        fleet
+            .admit_join(
+                req.key,
+                &[
+                    Message::JoinAck {
+                        device_id: 0,
+                        round: 7,
+                        member_epoch: 1,
+                        rounds: 10,
+                        agg_every: 1,
+                    },
+                    Message::Catchup { round: 7, device_id: 0, spec_epoch: 0, payload: vec![] },
+                ],
+            )
+            .unwrap();
+        assert!(
+            metrics::WRITE_BATCHES_TOTAL.get() > batches_before,
+            "batched admit replies must count saved syscalls"
+        );
+        assert!(!fleet.vacant(0), "admitted slot is live again");
+        // per-device accounting spans incarnations: the old totals plus
+        // exactly the Join frame arrived so far
+        let stats_after = fleet.stats(0);
+        assert_eq!(stats_after.frames_recv, stats_before.frames_recv + 1);
+        assert!(stats_after.bytes_recv > stats_before.bytes_recv);
+
+        // the readmitted device participates like any other
+        let (d, msg) = fleet.recv_any(None).unwrap().expect("round frame");
+        assert_eq!(d, 0);
+        assert!(matches!(msg, Message::RoundOpen { round: 7, .. }));
+        for d in 0..2 {
+            fleet.send(d, &Message::Shutdown { reason: "t".into() }).unwrap();
+        }
+        drop(fleet);
+        rejoiner.join().unwrap();
+        anchor.join().unwrap();
+    }
+
+    #[test]
+    fn arm_listener_requires_elastic_mode() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = thread::spawn(move || {
+            let mut t = TcpTransport::connect(&addr).unwrap();
+            t.send(&hello(0, 1)).unwrap();
+            let _ = t.recv();
+        });
+        let (mut fleet, _) = PollFleet::accept(&listener, FleetShape::flat(1)).unwrap();
+        let err = fleet.arm_listener(listener.try_clone().unwrap()).unwrap_err();
+        assert!(err.contains("elastic"), "{err}");
+        fleet.send(0, &Message::Shutdown { reason: "t".into() }).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn send_batch_single_writev_matches_per_frame_bytes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = thread::spawn(move || {
+            let mut t = TcpTransport::connect(&addr).unwrap();
+            t.send(&hello(0, 1)).unwrap();
+            for want in 0..3u32 {
+                match t.recv().unwrap() {
+                    Message::RoundOpen { round, .. } => assert_eq!(round, want),
+                    other => panic!("unexpected {}", other.type_name()),
+                }
+            }
+        });
+        let (mut fleet, _) = PollFleet::accept(&listener, FleetShape::flat(1)).unwrap();
+        let msgs: Vec<Message> = (0..3)
+            .map(|r| Message::RoundOpen { round: r, sync: false })
+            .collect();
+        let expected: u64 = msgs.iter().map(|m| m.encode_frame().len() as u64).sum();
+        let before = fleet.stats(0);
+        fleet.send_batch(0, &msgs).unwrap();
+        let after = fleet.stats(0);
+        assert_eq!(after.frames_sent, before.frames_sent + 3);
+        assert_eq!(
+            after.bytes_sent,
+            before.bytes_sent + expected,
+            "batched bytes must match the per-frame encodings exactly"
+        );
         handle.join().unwrap();
     }
 }

@@ -22,6 +22,7 @@
 
 use std::collections::VecDeque;
 
+use crate::member::{Departure, JoinRequest};
 use crate::transport::proto::Message;
 use crate::transport::{Transport, TransportError, WireStats};
 use crate::util::rng::Pcg32;
@@ -43,7 +44,9 @@ pub trait Fleet {
 
     /// Next message from *any* device, in arrival order. `Ok(None)` once
     /// `timeout_s` elapses with nothing arriving; `None` timeout waits
-    /// indefinitely.
+    /// indefinitely. Elastic fleets also return `Ok(None)` when a
+    /// membership event is ready (a departure with no frames left to
+    /// drain) so the scheduler can rule on it instead of blocking.
     fn recv_any(
         &mut self,
         timeout_s: Option<f64>,
@@ -58,6 +61,74 @@ pub trait Fleet {
 
     /// Peer label for logs.
     fn peer(&self, d: usize) -> String;
+
+    // ---- elastic membership (proto v6) ----------------------------------
+    // The defaults describe a fixed fleet: nobody leaves (a hang-up stays
+    // a fatal transport error), nobody joins.
+
+    /// Drain departures that are ready to act on: connections that ended
+    /// mid-session *and* whose already-received frames have all been
+    /// consumed. An entry appears here exactly once.
+    fn take_departures(&mut self) -> Vec<Departure> {
+        Vec::new()
+    }
+
+    /// Surface parked `Join` handshakes, each exactly once. Called by the
+    /// scheduler at round boundaries; the fleet keeps the connection
+    /// parked until [`Fleet::admit_join`] / [`Fleet::reject_join`] rules
+    /// on it.
+    fn poll_joins(&mut self) -> Vec<JoinRequest> {
+        Vec::new()
+    }
+
+    /// Admit the parked join behind `key`: wire its connection into the
+    /// vacant device slot and deliver `replies` (JoinAck, Catchup, …) on
+    /// it as one batch.
+    fn admit_join(&mut self, _key: u64, _replies: &[Message]) -> Result<(), TransportError> {
+        Err(TransportError::Protocol(
+            "this fleet does not admit joins".to_string(),
+        ))
+    }
+
+    /// Reject the parked join behind `key` and drop its connection.
+    fn reject_join(&mut self, _key: u64, _reason: &str) {}
+
+    /// Is device `d`'s slot vacant (departed and not yet readmitted)?
+    fn vacant(&self, _d: usize) -> bool {
+        false
+    }
+
+    /// Send several messages to device `d`. Socket fleets coalesce the
+    /// batch into a single vectored write; the default is sequential
+    /// sends with identical bytes on the wire.
+    fn send_batch(&mut self, d: usize, msgs: &[Message]) -> Result<(), TransportError> {
+        for m in msgs {
+            self.send(d, m)?;
+        }
+        Ok(())
+    }
+
+    /// Tell the fleet which round the scheduler is opening. Fixed fleets
+    /// ignore this; [`PumpFleet`] uses it to fire scripted churn events
+    /// at deterministic points.
+    fn note_round(&mut self, _round: u32) {}
+}
+
+/// One scripted churn event for [`PumpFleet::with_churn`]: deterministic
+/// device kills and rejoins keyed to round numbers, so elastic-membership
+/// scheduling is testable without real sockets or real time.
+#[derive(Debug, Clone)]
+pub enum ChurnEvent {
+    /// Device `device` hangs up at the open of round `round`.
+    Kill { round: u32, device: usize },
+    /// Device `device` offers `join` (a [`Message::Join`]) at the open of
+    /// round `round`. Ignored until the device has actually been killed.
+    Rejoin { round: u32, device: usize, join: Message },
+}
+
+struct ChurnSlot {
+    event: ChurnEvent,
+    fired: bool,
 }
 
 /// In-process fleet over loopback transports (see module docs).
@@ -70,6 +141,14 @@ pub struct PumpFleet<'a, P: FnMut(usize) -> Result<(), TransportError>> {
     delays: Vec<f64>,
     rng: Pcg32,
     now: f64,
+    /// scripted churn events ([`PumpFleet::with_churn`]), fired by round
+    churn: Vec<ChurnSlot>,
+    /// device slots currently out of the session
+    killed: Vec<bool>,
+    /// kills recorded but not yet drained via `take_departures`
+    departures: VecDeque<Departure>,
+    /// last round the scheduler announced via `note_round`
+    round: u32,
 }
 
 impl<'a, P: FnMut(usize) -> Result<(), TransportError>> PumpFleet<'a, P> {
@@ -99,7 +178,22 @@ impl<'a, P: FnMut(usize) -> Result<(), TransportError>> PumpFleet<'a, P> {
             delays,
             rng: Pcg32::new(seed, 0x57AC_4EED),
             now: 0.0,
+            churn: Vec::new(),
+            killed: vec![false; n],
+            departures: VecDeque::new(),
+            round: 0,
         }
+    }
+
+    /// Attach a scripted churn plan: each [`ChurnEvent`] fires when the
+    /// scheduler announces its round via [`Fleet::note_round`], making
+    /// elastic kills and rejoins exactly reproducible.
+    pub fn with_churn(mut self, churn: Vec<ChurnEvent>) -> Self {
+        self.churn = churn
+            .into_iter()
+            .map(|event| ChurnSlot { event, fired: false })
+            .collect();
+        self
     }
 
     /// Virtual clock (exposed for tests).
@@ -108,8 +202,13 @@ impl<'a, P: FnMut(usize) -> Result<(), TransportError>> PumpFleet<'a, P> {
     }
 
     /// Pump device `d` and stamp anything it produced with an arrival time.
+    /// A killed device's worker no longer runs, but messages it handed to
+    /// the transport before the kill stay deliverable — mirroring bytes a
+    /// real peer wrote before hanging up.
     fn fill(&mut self, d: usize) -> Result<(), TransportError> {
-        (self.pump_fn)(d)?;
+        if !self.killed[d] {
+            (self.pump_fn)(d)?;
+        }
         while let Some(msg) = self.conns[d].try_recv()? {
             let arrival = if self.delays[d] > 0.0 {
                 let jitter = self.rng.range_f32(0.9, 1.1) as f64;
@@ -151,6 +250,9 @@ impl<P: FnMut(usize) -> Result<(), TransportError>> Fleet for PumpFleet<'_, P> {
     }
 
     fn send(&mut self, d: usize, msg: &Message) -> Result<(), TransportError> {
+        if self.killed[d] {
+            return Err(TransportError::PeerClosed { peer: self.conns[d].peer() });
+        }
         self.conns[d].send(msg)
     }
 
@@ -212,6 +314,9 @@ impl<P: FnMut(usize) -> Result<(), TransportError>> Fleet for PumpFleet<'_, P> {
     }
 
     fn pump(&mut self, d: usize) -> Result<(), TransportError> {
+        if self.killed[d] {
+            return Ok(());
+        }
         (self.pump_fn)(d)
     }
 
@@ -221,6 +326,98 @@ impl<P: FnMut(usize) -> Result<(), TransportError>> Fleet for PumpFleet<'_, P> {
 
     fn peer(&self, d: usize) -> String {
         self.conns[d].peer()
+    }
+
+    fn take_departures(&mut self) -> Vec<Departure> {
+        // a departure is actionable only once the device's in-flight
+        // messages have been consumed (same contract as the socket fleet)
+        let mut ready = Vec::new();
+        let mut waiting = VecDeque::new();
+        while let Some(dep) = self.departures.pop_front() {
+            if self.pending[dep.slot].is_empty() {
+                ready.push(dep);
+            } else {
+                waiting.push_back(dep);
+            }
+        }
+        self.departures = waiting;
+        ready
+    }
+
+    fn poll_joins(&mut self) -> Vec<JoinRequest> {
+        let round = self.round;
+        let killed = &self.killed;
+        let mut out = Vec::new();
+        for (i, s) in self.churn.iter_mut().enumerate() {
+            if s.fired {
+                continue;
+            }
+            if let ChurnEvent::Rejoin { round: r, device, join } = &s.event {
+                if *r <= round && killed[*device] {
+                    s.fired = true;
+                    let member_epoch = match join {
+                        Message::Join { member_epoch, .. } => *member_epoch,
+                        _ => 0,
+                    };
+                    out.push(JoinRequest {
+                        key: i as u64,
+                        gid: *device,
+                        member_epoch,
+                        msg: join.clone(),
+                        join_bytes: join.encode_frame().len() as u64,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    fn admit_join(&mut self, key: u64, replies: &[Message]) -> Result<(), TransportError> {
+        let device = match self.churn.get(key as usize) {
+            Some(ChurnSlot { event: ChurnEvent::Rejoin { device, .. }, fired: true }) => *device,
+            _ => {
+                return Err(TransportError::Protocol(format!(
+                    "admit_join: key {key} is not a surfaced rejoin"
+                )))
+            }
+        };
+        if !self.killed[device] {
+            return Err(TransportError::Protocol(format!(
+                "admit_join: device {device} slot is not vacant"
+            )));
+        }
+        self.killed[device] = false;
+        for m in replies {
+            self.conns[device].send(m)?;
+        }
+        Ok(())
+    }
+
+    fn vacant(&self, d: usize) -> bool {
+        self.killed[d]
+    }
+
+    fn note_round(&mut self, round: u32) {
+        self.round = round;
+        for i in 0..self.churn.len() {
+            let device = match &self.churn[i] {
+                ChurnSlot { event: ChurnEvent::Kill { round: r, device }, fired: false }
+                    if *r <= round =>
+                {
+                    *device
+                }
+                _ => continue,
+            };
+            self.churn[i].fired = true;
+            if !self.killed[device] {
+                self.killed[device] = true;
+                self.departures.push_back(Departure {
+                    slot: device,
+                    error: TransportError::PeerClosed { peer: self.conns[device].peer() },
+                    graceful: false,
+                });
+            }
+        }
     }
 }
 
@@ -423,6 +620,68 @@ mod tests {
         assert!(delayed.recv_any(Some(0.0)).unwrap().is_none());
         // but an unbounded wait still surfaces it
         assert_eq!(delayed.recv_any(None).unwrap().map(|(d, _)| d), Some(1));
+    }
+
+    #[test]
+    fn scripted_churn_kills_and_readmits_deterministically() {
+        let join = Message::Join {
+            device_id: 1,
+            devices: 3,
+            shard_len: 8,
+            config_fp: 1,
+            member_epoch: 0,
+            uplink: "identity".into(),
+            downlink: "identity".into(),
+            sync: "identity".into(),
+            streams_fp: 0,
+        };
+        let (mut dev, mut srv) = fleet_pair(3);
+        // device 1 has a frame in flight when the kill fires
+        dev[1].send(&Message::RoundOpen { round: 0, sync: false }).unwrap();
+        let mut fleet = PumpFleet::new(&mut srv, |_| Ok(())).with_churn(vec![
+            ChurnEvent::Kill { round: 1, device: 1 },
+            ChurnEvent::Rejoin { round: 2, device: 1, join: join.clone() },
+        ]);
+        fleet.note_round(0);
+        assert!(fleet.take_departures().is_empty(), "no churn before round 1");
+        assert!(fleet.poll_joins().is_empty());
+
+        fleet.note_round(1);
+        // the in-flight frame gates the departure until consumed
+        assert!(fleet.take_departures().is_empty());
+        let (d, _) = fleet.recv_any(None).unwrap().unwrap();
+        assert_eq!(d, 1);
+        let deps = fleet.take_departures();
+        assert_eq!(deps.len(), 1);
+        assert_eq!(deps[0].slot, 1);
+        assert!(deps[0].error.is_peer_closed());
+        assert!(fleet.vacant(1));
+        assert!(fleet.send(1, &Message::RoundOpen { round: 1, sync: false }).is_err());
+        assert!(fleet.poll_joins().is_empty(), "rejoin is scripted for round 2");
+
+        fleet.note_round(2);
+        let reqs = fleet.poll_joins();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].gid, 1);
+        assert_eq!(reqs[0].member_epoch, 0);
+        assert!(fleet.poll_joins().is_empty(), "a join surfaces exactly once");
+        fleet
+            .admit_join(
+                reqs[0].key,
+                &[Message::JoinAck {
+                    device_id: 1,
+                    round: 2,
+                    member_epoch: 1,
+                    rounds: 4,
+                    agg_every: 1,
+                }],
+            )
+            .unwrap();
+        assert!(!fleet.vacant(1));
+        drop(fleet);
+        // the admit replies landed on the device end of the loopback
+        let ack = dev[1].try_recv().unwrap().unwrap();
+        assert!(matches!(ack, Message::JoinAck { member_epoch: 1, .. }));
     }
 
     #[test]

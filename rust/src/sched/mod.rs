@@ -86,9 +86,59 @@ impl Policy {
     }
 }
 
+/// Which devices the scheduler opens a round for (`--select`). Orthogonal
+/// to [`Policy`]: the policy orders work *within* a round, participation
+/// decides who is invited at round open.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Participation {
+    /// Every in-session device participates in every round (the default).
+    #[default]
+    All,
+    /// Deprioritize chronic stragglers: a device whose
+    /// [`crate::net::timeline::DeviceWaitProfile`] history shows it
+    /// straggling in more rounds than it completed on time sits out every
+    /// other round, so the fleet stops paying its timeout tax twice per
+    /// cadence. The opened set is never allowed to go empty.
+    BiasStragglers,
+}
+
+impl Participation {
+    /// Parse the `--select` flag value.
+    pub fn parse(s: &str) -> Result<Participation, String> {
+        match s {
+            "all" => Ok(Participation::All),
+            "bias-stragglers" => Ok(Participation::BiasStragglers),
+            other => Err(format!(
+                "unknown participation policy '{other}' (expected 'all' or \
+                 'bias-stragglers')"
+            )),
+        }
+    }
+
+    /// Stable label for logs and the config fingerprint.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Participation::All => "all",
+            Participation::BiasStragglers => "bias-stragglers",
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn participation_parses_and_labels() {
+        assert_eq!(Participation::parse("all").unwrap(), Participation::All);
+        assert_eq!(
+            Participation::parse("bias-stragglers").unwrap(),
+            Participation::BiasStragglers
+        );
+        assert!(Participation::parse("nope").is_err());
+        assert_eq!(Participation::default().label(), "all");
+        assert_eq!(Participation::BiasStragglers.label(), "bias-stragglers");
+    }
 
     #[test]
     fn labels_distinguish_policies() {

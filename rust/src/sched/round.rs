@@ -46,7 +46,7 @@ use crate::coordinator::metrics::RoundRecord;
 use crate::net::timeline::SchedRecord;
 use crate::quant::payload::{ByteReader, Header};
 use crate::sched::fleet::Fleet;
-use crate::sched::Policy;
+use crate::sched::{Participation, Policy};
 use crate::transport::compute::Compute;
 use crate::transport::proto::Message;
 use crate::transport::server::{BatchItem, ServerRuntime};
@@ -488,21 +488,131 @@ fn flush_group<C: Compute>(
     down: &mut [usize],
     loss_sum: &mut f64,
     steps: &mut usize,
+    elastic: bool,
 ) -> Result<(), String> {
     let results = rt.step_batch(&group)?;
     for (it, (loss, payload_down)) in group.iter().zip(results) {
         *loss_sum += loss;
         *steps += 1;
-        down[it.d] += payload_down.len();
-        fleet.send(it.d, &Message::Gradients {
+        let len = payload_down.len();
+        let sent = fleet.send(it.d, &Message::Gradients {
             round: it.round as u32,
             device_id: rt.cfg.gid(it.d) as u32,
             loss: loss as f32,
             payload: payload_down,
-        })?;
-        fleet.pump(it.d)?;
+        });
+        match sent {
+            Ok(()) => {
+                down[it.d] += len;
+                fleet.pump(it.d)?;
+            }
+            // elastic: the slot died under the Gradients send — the server
+            // step already happened (the model advanced), only the reply is
+            // lost; the typed departure surfaces on the next drain
+            Err(e) if elastic => crate::log_debug!(
+                "sched: round {}: gradients for departing device {} dropped: {e}",
+                it.round,
+                rt.cfg.gid(it.d)
+            ),
+            Err(e) => return Err(e.into()),
+        }
     }
     Ok(())
+}
+
+/// Drain the fleet's typed departures into the membership table: each
+/// departed slot leaves the participant set (its phase resets, it is
+/// dropped from this round's `opened` list) and the session keeps running
+/// on whoever remains — the elastic replacement for the fixed fleet's
+/// fatal `PeerClosed`. Returns how many slots departed.
+fn drain_departures<C: Compute>(
+    rt: &mut ServerRuntime<C>,
+    fleet: &mut dyn Fleet,
+    round: usize,
+    present: &mut [bool],
+    phase: &mut [Phase],
+    opened: &mut Vec<usize>,
+) -> usize {
+    let mut gone = 0;
+    for dep in fleet.take_departures() {
+        let d = dep.slot;
+        if !present[d] {
+            continue; // already accounted (close paths may double-fire)
+        }
+        present[d] = false;
+        rt.membership.depart(d);
+        phase[d] = Phase::Idle;
+        opened.retain(|&x| x != d);
+        gone += 1;
+        crate::log_info!(
+            "[{}] round {round}: device {} departed ({}{})",
+            rt.cfg.label,
+            rt.cfg.gid(d),
+            if dep.graceful { "graceful leave: " } else { "" },
+            dep.error
+        );
+        if crate::obs::span::enabled() {
+            let now = crate::util::logging::elapsed_ns();
+            crate::obs::span::record(
+                crate::obs::span::SpanEvent::manual("leave", now, 0)
+                    .round(round as u32)
+                    .attr("gid", rt.cfg.gid(d) as u64),
+            );
+        }
+    }
+    gone
+}
+
+/// Admit (or reject) every parked `Join` the fleet surfaced: runtime-side
+/// validation + catchup assembly ([`ServerRuntime::process_join`]), then
+/// the fleet swaps the pending connection into its slot and delivers the
+/// `JoinAck` + `Catchup` replies as one batched write. Returns how many
+/// devices were admitted; each re-enters scheduling as `Idle` and is
+/// opened at the next round-open pass.
+fn admit_parked<C: Compute>(
+    rt: &mut ServerRuntime<C>,
+    fleet: &mut dyn Fleet,
+    round: usize,
+    present: &mut [bool],
+    phase: &mut [Phase],
+) -> Result<usize, String> {
+    let mut admitted = 0;
+    for req in fleet.poll_joins() {
+        let _sp = crate::span!("join", round = round, gid = req.gid);
+        match rt.process_join(&req, round) {
+            Ok(replies) => {
+                let d = rt
+                    .cfg
+                    .shape()
+                    .slot(req.gid)
+                    .expect("validated by process_join");
+                if let Err(e) = fleet.admit_join(req.key, &replies) {
+                    // the runtime admitted but the connection is unusable
+                    // (raced a close, pipelined early bytes): roll back
+                    rt.membership.depart(d);
+                    crate::log_info!(
+                        "[{}] round {round}: join for device {} dropped by the \
+                         fleet: {e}",
+                        rt.cfg.label,
+                        req.gid
+                    );
+                    continue;
+                }
+                present[d] = true;
+                phase[d] = Phase::Idle;
+                admitted += 1;
+            }
+            Err(reason) => {
+                crate::log_info!(
+                    "[{}] round {round}: join rejected for device {}: {reason}",
+                    rt.cfg.label,
+                    req.gid
+                );
+                fleet.reject_join(req.key, &reason);
+            }
+        }
+    }
+    Ok(admitted)
 }
 
 /// Arrival-order scheduling with optional straggler timeout + quorum,
@@ -519,7 +629,12 @@ fn run_arrival<C: Compute>(
     let n = rt.cfg.devices;
     let label = rt.cfg.label.clone();
     let window = rt.cfg.batch_window.max(1);
+    let elastic = rt.cfg.elastic;
+    let participation = rt.cfg.participation;
     let mut phase = vec![Phase::Idle; n];
+    // which slots are in the session right now (elastic: shrinks on
+    // departure, grows back on admission; fixed fleet: always all true)
+    let mut present = vec![true; n];
     let mut time_to_target = None;
     let mut rounds_run = 0;
     for round in 0..rt.cfg.rounds {
@@ -531,6 +646,14 @@ fn run_arrival<C: Compute>(
 
         let mut opened = Vec::new();
         let mut open_s = fleet.now_s();
+        // the round boundary is the membership boundary: settle departures
+        // first (so a vacated slot is re-joinable), then admit whatever
+        // `Join`s parked since the last boundary
+        if elastic {
+            fleet.note_round(round as u32);
+            drain_departures(rt, fleet, round, &mut present, &mut phase, &mut opened);
+            admit_parked(rt, fleet, round, &mut present, &mut phase)?;
+        }
 
         let mut up = vec![0usize; n];
         let mut down = vec![0usize; n];
@@ -542,9 +665,24 @@ fn run_arrival<C: Compute>(
         let mut stale: Vec<usize> = Vec::new();
         let mut loss_sum = 0.0f64;
         let mut steps = 0usize;
+        // devices that already delivered *this* round's Activations: if a
+        // wave of departures empties `opened`, the re-open pass below must
+        // not hand them a second RoundOpen for the same round
+        let mut done = vec![false; n];
         let mut plan = BatchPlan::new(window);
 
         loop {
+            // elastic: surface departures before evaluating the close
+            // conditions (a dead slot must stop counting as outstanding),
+            // and admit parked joins while nobody has opened yet — an
+            // emptied fleet can only restart through an admission; a
+            // mid-round join waits for the next boundary
+            if elastic {
+                drain_departures(rt, fleet, round, &mut present, &mut phase, &mut opened);
+                if opened.is_empty() {
+                    admit_parked(rt, fleet, round, &mut present, &mut phase)?;
+                }
+            }
             // open the round for devices at a round boundary. Opening is
             // *lazy*: if every device is mid-carry (all straggling or
             // finishing old syncs), the loop below serves their carried
@@ -554,18 +692,58 @@ fn run_arrival<C: Compute>(
             // RoundOpen nobody is eligible to receive. Once a first batch
             // has opened, later-freed devices wait for the next round.
             if opened.is_empty() {
-                for d in 0..n {
-                    if phase[d] == Phase::Idle {
-                        fleet.send(d, &Message::RoundOpen {
-                            round: round as u32,
-                            sync: wants_sync(d),
-                        })?;
-                        phase[d] = Phase::Open {
-                            round,
-                            sync: wants_sync(d),
-                            opened_s: fleet.now_s(),
-                        };
-                        opened.push(d);
+                let mut cands: Vec<usize> = (0..n)
+                    .filter(|&d| phase[d] == Phase::Idle && present[d] && !done[d])
+                    .collect();
+                // `--select bias-stragglers`: a device whose history shows
+                // more carried closes than on-time deliveries sits out
+                // every other round — the fleet stops paying its timeout
+                // twice per cadence. Never bench the whole candidate set.
+                if participation == Participation::BiasStragglers
+                    && round % 2 == 1
+                    && cands.len() > 1
+                {
+                    let profiles = rt.timeline.device_wait_profiles(n);
+                    let kept: Vec<usize> = cands
+                        .iter()
+                        .copied()
+                        .filter(|&d| {
+                            let p = &profiles[d];
+                            p.straggles < 2 || p.straggles <= p.participations
+                        })
+                        .collect();
+                    if !kept.is_empty() && kept.len() < cands.len() {
+                        crate::log_debug!(
+                            "[{label}] round {round}: benching {} chronic \
+                             straggler(s) this round",
+                            cands.len() - kept.len()
+                        );
+                        cands = kept;
+                    }
+                }
+                for d in cands {
+                    let sent = fleet.send(d, &Message::RoundOpen {
+                        round: round as u32,
+                        sync: wants_sync(d),
+                    });
+                    match sent {
+                        Ok(()) => {
+                            phase[d] = Phase::Open {
+                                round,
+                                sync: wants_sync(d),
+                                opened_s: fleet.now_s(),
+                            };
+                            opened.push(d);
+                        }
+                        // the slot died under the open: don't count it in
+                        // this round; the typed departure surfaces on the
+                        // next drain pass
+                        Err(e) if elastic => crate::log_debug!(
+                            "[{label}] round {round}: RoundOpen to departing \
+                             device {} dropped: {e}",
+                            rt.cfg.gid(d)
+                        ),
+                        Err(e) => return Err(e.into()),
                     }
                 }
                 if !opened.is_empty() {
@@ -595,7 +773,9 @@ fn run_arrival<C: Compute>(
                 // reached Idle at receive time): dispatch it before the
                 // round closes
                 if let Some(group) = plan.flush() {
-                    flush_group(rt, fleet, group, &mut down, &mut loss_sum, &mut steps)?;
+                    flush_group(
+                        rt, fleet, group, &mut down, &mut loss_sum, &mut steps, elastic,
+                    )?;
                 }
                 break;
             }
@@ -612,7 +792,8 @@ fn run_arrival<C: Compute>(
                         if worked > 0 && participants.len() >= required {
                             if let Some(group) = plan.flush() {
                                 flush_group(
-                                    rt, fleet, group, &mut down, &mut loss_sum, &mut steps,
+                                    rt, fleet, group, &mut down, &mut loss_sum,
+                                    &mut steps, elastic,
                                 )?;
                             }
                             break;
@@ -623,6 +804,12 @@ fn run_arrival<C: Compute>(
                     }
                 }
                 // nobody opened yet: block until carried work frees someone
+            }
+            // elastic: an emptied fleet makes progress only through
+            // admissions — poll on a short tick instead of blocking on a
+            // recv that can never complete
+            if elastic && !present.iter().any(|&p| p) {
+                timeout_arg = Some(timeout_arg.map_or(0.05, |t: f64| t.min(0.05)));
             }
             // with a batch pending, never block: take only what has
             // already arrived (zero timeout) and dispatch the batch the
@@ -635,7 +822,9 @@ fn run_arrival<C: Compute>(
             };
             let Some((d, msg)) = received else {
                 if let Some(group) = plan.flush() {
-                    flush_group(rt, fleet, group, &mut down, &mut loss_sum, &mut steps)?;
+                    flush_group(
+                        rt, fleet, group, &mut down, &mut loss_sum, &mut steps, elastic,
+                    )?;
                 }
                 continue; // re-evaluate the close conditions
             };
@@ -667,6 +856,7 @@ fn run_arrival<C: Compute>(
                     wait_s[d] = fleet.now_s() - opened_at;
                     if oround == round {
                         participants.push(d);
+                        done[d] = true;
                     } else {
                         stale.push(d);
                         crate::log_info!(
@@ -686,7 +876,10 @@ fn run_arrival<C: Compute>(
                     };
                     let item = BatchItem { d, round: oround, labels, payload };
                     if let Some(group) = plan.push(item) {
-                        flush_group(rt, fleet, group, &mut down, &mut loss_sum, &mut steps)?;
+                        flush_group(
+                            rt, fleet, group, &mut down, &mut loss_sum, &mut steps,
+                            elastic,
+                        )?;
                     }
                 }
                 Message::ModelSync { round: r2, device_id, payload } => {
@@ -776,18 +969,32 @@ fn run_arrival<C: Compute>(
             };
             if let Some(reply) = rt.cross_shard(round, local)? {
                 for d in 0..n {
-                    if phase[d] == Phase::Idle {
+                    if phase[d] == Phase::Idle && present[d] {
                         let payload = rt.pack_broadcast(d, &reply);
-                        sync_down[d] += payload.len();
-                        fleet.send(d, &Message::ModelSync {
+                        let len = payload.len();
+                        let sent = fleet.send(d, &Message::ModelSync {
                             round: round as u32,
                             device_id: rt.cfg.gid(d) as u32,
                             payload,
-                        })?;
-                        fleet.pump(d)?;
-                        rt.client_params[d] = Some(reply.clone());
+                        });
+                        match sent {
+                            Ok(()) => {
+                                sync_down[d] += len;
+                                fleet.pump(d)?;
+                                rt.client_params[d] = Some(reply.clone());
+                            }
+                            Err(e) if elastic => crate::log_debug!(
+                                "[{label}] round {round}: broadcast to departing \
+                                 device {} dropped: {e}",
+                                rt.cfg.gid(d)
+                            ),
+                            Err(e) => return Err(e.into()),
+                        }
                     }
                 }
+                // the re-admission catchup hands this model to whoever
+                // returns before the next aggregation boundary
+                rt.last_broadcast = Some(reply);
             }
         }
 

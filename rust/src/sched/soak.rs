@@ -27,11 +27,22 @@
 //! threads. An optional slow reader — one device that sleeps before
 //! reading its round-0 downlink — exercises the server's write-park path
 //! under fleet load.
+//!
+//! [`run_churn_soak`] is the elastic variant: the same echo protocol on a
+//! fleet with `FleetOptions::elastic`, plus a membership script — devices
+//! killed right after receiving a RoundOpen (with or without a `Leave`
+//! notice, so both the graceful and the mid-frame hang-up paths run) and
+//! later re-admitted through the proto-v6 `Join`/`JoinAck`/`Catchup`
+//! handshake at a scripted round boundary. Because the script pins every
+//! membership event to a round, the exact per-device frame counts are
+//! computable ([`ChurnSoakConfig::expected_frames`]) and identical across
+//! I/O backends, which is what the churn integration soak asserts.
 
 use std::net::TcpListener;
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::member::{JoinRequest, MembershipTable};
 use crate::sched::event_loop::{FleetOptions, PollFleet};
 use crate::sched::fleet::Fleet;
 use crate::shard::FleetShape;
@@ -93,8 +104,13 @@ pub struct SoakReport {
     /// Wall-clock seconds from HelloAck to the last Shutdown sent.
     pub wall_s: f64,
     /// Per-device framed-byte accounting, indexed by device id. In a
-    /// clean run every entry is identical — the parity invariant.
+    /// clean run every entry is identical — the parity invariant. A churn
+    /// run's entries differ per device but are still exactly computable
+    /// from the script ([`ChurnSoakConfig::expected_frames`]).
     pub per_device: Vec<WireStats>,
+    /// `(device, graceful)` for every departure the server observed,
+    /// sorted by device id. Empty on a clean [`run_soak`].
+    pub departures: Vec<(usize, bool)>,
 }
 
 /// Deterministic payload for one direction of one `(device, round)` step.
@@ -339,7 +355,518 @@ fn serve_soak(listener: &TcpListener, cfg: &SoakConfig) -> Result<SoakReport, St
     }
     let wall_s = start.elapsed().as_secs_f64();
     let per_device = (0..devices).map(|d| fleet.stats(d)).collect();
-    Ok(SoakReport { backend, wall_s, per_device })
+    Ok(SoakReport { backend, wall_s, per_device, departures: Vec::new() })
+}
+
+/// Membership script for one elastic soak: scripted departures and
+/// re-admissions pinned to round numbers, so the session's wire traffic
+/// is deterministic device-by-device.
+#[derive(Debug, Clone)]
+pub struct ChurnSoakConfig {
+    /// The underlying echo session. `opts.elastic` is forced on by the
+    /// server; `driver_threads` and `slow_reader` are ignored (every
+    /// churn device gets its own driver thread, because a device parked
+    /// in a re-join handshake must not stall its thread-mates).
+    pub base: SoakConfig,
+    /// `(round, device, graceful)`: the device hangs up right after
+    /// receiving that round's RoundOpen — with a `Leave` notice first
+    /// when `graceful`, abruptly otherwise — leaving the server's
+    /// RoundOpen to a dead peer and its own Activations unsent.
+    pub kills: Vec<(usize, usize, bool)>,
+    /// `(round, device)`: a fresh process for a killed device `Join`s and
+    /// is admitted at that round's boundary (must be after the kill).
+    pub rejoins: Vec<(usize, usize)>,
+}
+
+/// Per-device view of the churn script, derived once and validated.
+#[derive(Debug, Clone, Copy, Default)]
+struct DeviceScript {
+    /// `(round, graceful)` of this device's scripted hang-up
+    kill: Option<(usize, bool)>,
+    /// round boundary where a fresh incarnation is admitted
+    rejoin: Option<usize>,
+}
+
+impl ChurnSoakConfig {
+    fn scripts(&self) -> Result<Vec<DeviceScript>, String> {
+        let (devices, rounds) = (self.base.devices, self.base.rounds);
+        let mut scripts = vec![DeviceScript::default(); devices];
+        for &(round, device, graceful) in &self.kills {
+            if device >= devices || round >= rounds {
+                return Err(format!(
+                    "kill ({round}, {device}) outside a {devices}x{rounds} session"
+                ));
+            }
+            if scripts[device].kill.is_some() {
+                return Err(format!("device {device} killed twice"));
+            }
+            scripts[device].kill = Some((round, graceful));
+        }
+        for &(round, device) in &self.rejoins {
+            if device >= devices || round >= rounds {
+                return Err(format!(
+                    "rejoin ({round}, {device}) outside a {devices}x{rounds} session"
+                ));
+            }
+            let Some((killed_at, _)) = scripts[device].kill else {
+                return Err(format!("device {device} rejoins without a kill"));
+            };
+            if round <= killed_at {
+                return Err(format!(
+                    "device {device} rejoins at round {round}, not after its \
+                     kill at round {killed_at}"
+                ));
+            }
+            if scripts[device].rejoin.is_some() {
+                return Err(format!("device {device} rejoins twice"));
+            }
+            scripts[device].rejoin = Some(round);
+        }
+        Ok(scripts)
+    }
+
+    /// Exact `(frames_sent, frames_recv)` the server's per-slot
+    /// [`WireStats`] must show for `device` after a clean churn run —
+    /// counted from the server's side of the wire, derived purely from
+    /// the script. Panics on an invalid script (validate via
+    /// [`run_churn_soak`] first).
+    pub fn expected_frames(&self, device: usize) -> (u64, u64) {
+        let s = self.scripts().expect("churn script validated")[device];
+        let rounds = self.base.rounds as u64;
+        match (s.kill, s.rejoin) {
+            // HelloAck + per-round RoundOpen/Gradients + Shutdown;
+            // Hello + per-round Activations
+            (None, _) => (2 + 2 * rounds, 1 + rounds),
+            (Some((k, graceful)), rejoin) => {
+                let k = k as u64;
+                // up to the kill: HelloAck, k+1 RoundOpens (the kill
+                // round's RoundOpen is received before the hang-up),
+                // k Gradients; Hello, k Activations, the Leave notice
+                // when graceful. No Shutdown to a vacant slot.
+                let mut sent = 1 + (k + 1) + k;
+                let mut recv = 1 + k + graceful as u64;
+                if let Some(rj) = rejoin {
+                    let rj = rj as u64;
+                    // JoinAck + Catchup, the remaining rounds, Shutdown;
+                    // the Join frame and the remaining Activations
+                    sent += 2 + 2 * (rounds - rj) + 1;
+                    recv += 1 + (rounds - rj);
+                }
+                (sent, recv)
+            }
+        }
+    }
+}
+
+/// The proto-v6 re-join opening for a fresh soak-device process: same
+/// stream table and fingerprint as [`hello_for`], claiming member epoch 0.
+fn join_for(device: usize, devices: usize) -> Message {
+    let specs = crate::codecs::stream::StreamSpecs::parse("identity", "identity", "identity")
+        .expect("identity stream specs always parse");
+    Message::Join {
+        device_id: device as u32,
+        devices: devices as u32,
+        shard_len: 8,
+        config_fp: 1,
+        member_epoch: 0,
+        uplink: specs.uplink.as_str().to_string(),
+        downlink: specs.downlink.as_str().to_string(),
+        sync: specs.sync.as_str().to_string(),
+        streams_fp: specs.fingerprint(),
+    }
+}
+
+/// Drive one churn-soak device through its scripted life: the initial
+/// incarnation up to the kill (or the whole session), then optionally a
+/// fresh incarnation that `Join`s and serves the remaining rounds.
+fn drive_churn_device(
+    d: usize,
+    addr: &str,
+    cfg: &ChurnSoakConfig,
+    script: DeviceScript,
+) -> Result<(), String> {
+    let base = &cfg.base;
+    let echo_round = |conn: &mut TcpTransport, r: usize| -> Result<(), String> {
+        conn.send(&Message::Activations {
+            round: r as u32,
+            device_id: d as u32,
+            labels: Vec::new(),
+            payload: pattern(d, r, base.up_bytes, STREAM_UP),
+        })
+        .map_err(|e| format!("device {d} round {r}: activations: {e}"))?;
+        match conn
+            .recv()
+            .map_err(|e| format!("device {d} round {r}: gradients: {e}"))?
+        {
+            Message::Gradients { round, device_id, payload, .. } => {
+                if round as usize != r || device_id as usize != d {
+                    return Err(format!(
+                        "device {d} round {r}: gradients addressed to device \
+                         {device_id} round {round}"
+                    ));
+                }
+                if payload != pattern(d, r, base.down_bytes, STREAM_DOWN) {
+                    return Err(format!("device {d} round {r}: downlink corrupted"));
+                }
+                Ok(())
+            }
+            other => Err(format!(
+                "device {d} round {r}: expected Gradients, got {}",
+                other.type_name()
+            )),
+        }
+    };
+    // first incarnation: scoped so the socket is closed (the scripted
+    // hang-up) before the re-join incarnation dials back in
+    {
+        let mut conn = TcpTransport::connect(addr)?;
+        conn.send(&hello_for(d, base.devices))
+            .map_err(|e| format!("device {d}: hello send: {e}"))?;
+        match conn.recv().map_err(|e| format!("device {d}: hello ack: {e}"))? {
+            Message::HelloAck { device_id, .. } if device_id as usize == d => {}
+            other => {
+                return Err(format!(
+                    "device {d}: expected HelloAck, got {}",
+                    other.type_name()
+                ))
+            }
+        }
+        let mut hung_up = false;
+        for r in 0..base.rounds {
+            match conn.recv().map_err(|e| format!("device {d}: round open: {e}"))? {
+                Message::RoundOpen { round, .. } if round as usize == r => {}
+                other => {
+                    return Err(format!(
+                        "device {d} round {r}: expected RoundOpen, got {}",
+                        other.type_name()
+                    ))
+                }
+            }
+            if let Some((kill_round, graceful)) = script.kill {
+                if r == kill_round {
+                    if graceful {
+                        conn.send(&Message::Leave {
+                            device_id: d as u32,
+                            reason: "scripted departure".to_string(),
+                        })
+                        .map_err(|e| format!("device {d}: leave: {e}"))?;
+                    }
+                    hung_up = true;
+                    break;
+                }
+            }
+            echo_round(&mut conn, r)?;
+        }
+        if !hung_up {
+            match conn.recv().map_err(|e| format!("device {d}: shutdown: {e}"))? {
+                Message::Shutdown { .. } => {}
+                other => {
+                    return Err(format!(
+                        "device {d}: expected Shutdown, got {}",
+                        other.type_name()
+                    ))
+                }
+            }
+        }
+    }
+    let Some(rejoin_round) = script.rejoin else { return Ok(()) };
+    // second incarnation: a fresh process claiming member epoch 0
+    let mut conn = TcpTransport::connect(addr)?;
+    conn.send(&join_for(d, base.devices))
+        .map_err(|e| format!("device {d}: join send: {e}"))?;
+    match conn.recv().map_err(|e| format!("device {d}: join ack: {e}"))? {
+        Message::JoinAck { device_id, round, member_epoch, .. } => {
+            if device_id as usize != d {
+                return Err(format!("device {d}: JoinAck addressed to {device_id}"));
+            }
+            if round as usize != rejoin_round {
+                return Err(format!(
+                    "device {d}: admitted at round {round}, script says \
+                     {rejoin_round}"
+                ));
+            }
+            if member_epoch == 0 {
+                return Err(format!("device {d}: re-admission kept epoch 0"));
+            }
+        }
+        other => {
+            return Err(format!(
+                "device {d}: expected JoinAck, got {}",
+                other.type_name()
+            ))
+        }
+    }
+    match conn.recv().map_err(|e| format!("device {d}: catchup: {e}"))? {
+        Message::Catchup { device_id, payload, .. } => {
+            if device_id as usize != d || !payload.is_empty() {
+                return Err(format!(
+                    "device {d}: bad Catchup (addressed to {device_id}, {} \
+                     payload bytes — the soak has no model)",
+                    payload.len()
+                ));
+            }
+        }
+        other => {
+            return Err(format!(
+                "device {d}: expected Catchup, got {}",
+                other.type_name()
+            ))
+        }
+    }
+    for r in rejoin_round..base.rounds {
+        match conn.recv().map_err(|e| format!("device {d}: round open: {e}"))? {
+            Message::RoundOpen { round, .. } if round as usize == r => {}
+            other => {
+                return Err(format!(
+                    "device {d} round {r}: expected RoundOpen after re-join, \
+                     got {}",
+                    other.type_name()
+                ))
+            }
+        }
+        echo_round(&mut conn, r)?;
+    }
+    match conn.recv().map_err(|e| format!("device {d}: shutdown: {e}"))? {
+        Message::Shutdown { .. } => Ok(()),
+        other => Err(format!(
+            "device {d}: expected Shutdown, got {}",
+            other.type_name()
+        )),
+    }
+}
+
+/// Run one elastic churn-soak session: every device on its own driver
+/// thread, the server on this thread, per-device accounting returned.
+pub fn run_churn_soak(cfg: &ChurnSoakConfig) -> Result<SoakReport, String> {
+    if cfg.base.devices == 0 || cfg.base.rounds == 0 {
+        return Err("soak needs at least one device and one round".to_string());
+    }
+    let scripts = cfg.scripts()?;
+    let listener =
+        TcpListener::bind("127.0.0.1:0").map_err(|e| format!("soak bind: {e}"))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| format!("soak addr: {e}"))?
+        .to_string();
+    let mut handles = Vec::with_capacity(cfg.base.devices);
+    for (d, &script) in scripts.iter().enumerate() {
+        let addr = addr.clone();
+        let cfg = cfg.clone();
+        handles.push(
+            thread::Builder::new()
+                .name(format!("churn-dev-{d}"))
+                .spawn(move || drive_churn_device(d, &addr, &cfg, script))
+                .map_err(|e| format!("churn driver spawn: {e}"))?,
+        );
+    }
+    let serve = serve_churn(&listener, cfg);
+    let mut client_err = None;
+    for handle in handles {
+        match handle.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                client_err.get_or_insert(e);
+            }
+            Err(_) => {
+                client_err.get_or_insert("churn driver panicked".to_string());
+            }
+        }
+    }
+    let report = serve?;
+    if let Some(e) = client_err {
+        return Err(format!("churn client: {e}"));
+    }
+    Ok(report)
+}
+
+/// The server half of [`run_churn_soak`]: the scripted echo session on an
+/// elastic fleet, admitting re-joins at their scripted round boundaries
+/// and absorbing scripted departures mid-round. A [`MembershipTable`]
+/// tracks every slot so the admission epochs in `JoinAck` are real.
+fn serve_churn(listener: &TcpListener, cfg: &ChurnSoakConfig) -> Result<SoakReport, String> {
+    let base = &cfg.base;
+    let devices = base.devices;
+    let shape = FleetShape::flat(devices);
+    let mut opts = base.opts;
+    opts.elastic = true;
+    let (mut fleet, _hellos) = PollFleet::accept_with(listener, shape, opts)?;
+    fleet.arm_listener(
+        listener
+            .try_clone()
+            .map_err(|e| format!("churn soak: listener clone: {e}"))?,
+    )?;
+    let backend = fleet.backend_kind();
+    let start = Instant::now();
+    for d in 0..devices {
+        fleet
+            .send(
+                d,
+                &Message::HelloAck {
+                    device_id: d as u32,
+                    rounds: base.rounds as u32,
+                    agg_every: 1,
+                },
+            )
+            .map_err(|e| format!("hello ack to {d}: {e}"))?;
+    }
+    let mut members = MembershipTable::new(devices);
+    let mut present = vec![true; devices];
+    let mut parked: Vec<JoinRequest> = Vec::new();
+    let mut departures: Vec<(usize, bool)> = Vec::new();
+    for r in 0..base.rounds {
+        // round boundary: surface handshakes and departures that landed
+        // since the last poll
+        parked.extend(fleet.poll_joins());
+        for dep in fleet.take_departures() {
+            members.depart(dep.slot);
+            present[dep.slot] = false;
+            departures.push((dep.slot, dep.graceful));
+        }
+        for &(rejoin_round, d) in &cfg.rejoins {
+            if rejoin_round != r {
+                continue;
+            }
+            // the fresh incarnation dialed in some time after its kill;
+            // wait (briefly) for its parked Join and the old slot to
+            // fully retire, then admit with JoinAck + empty Catchup
+            let deadline = Instant::now() + Duration::from_secs_f64(RECV_TIMEOUT_S);
+            let req = loop {
+                let ready = parked.iter().position(|p| p.gid == d);
+                if let Some(i) = ready {
+                    if fleet.vacant(d) {
+                        break parked.remove(i);
+                    }
+                }
+                for dep in fleet.take_departures() {
+                    members.depart(dep.slot);
+                    present[dep.slot] = false;
+                    departures.push((dep.slot, dep.graceful));
+                }
+                parked.extend(fleet.poll_joins());
+                if Instant::now() > deadline {
+                    return Err(format!(
+                        "round {r}: no admissible join from device {d} after \
+                         {RECV_TIMEOUT_S}s"
+                    ));
+                }
+                thread::sleep(Duration::from_millis(1));
+            };
+            members
+                .begin_join(req.gid, req.member_epoch)
+                .map_err(|e| format!("round {r}: {e}"))?;
+            let epoch = members.admit(d).map_err(|e| format!("round {r}: {e}"))?;
+            fleet
+                .admit_join(
+                    req.key,
+                    &[
+                        Message::JoinAck {
+                            device_id: d as u32,
+                            round: r as u32,
+                            member_epoch: epoch,
+                            rounds: base.rounds as u32,
+                            agg_every: 1,
+                        },
+                        Message::Catchup {
+                            round: r as u32,
+                            device_id: d as u32,
+                            spec_epoch: 0,
+                            payload: Vec::new(),
+                        },
+                    ],
+                )
+                .map_err(|e| format!("round {r}: admitting device {d}: {e}"))?;
+            present[d] = true;
+        }
+        for d in 0..devices {
+            if !present[d] {
+                continue;
+            }
+            fleet
+                .send(d, &Message::RoundOpen { round: r as u32, sync: false })
+                .map_err(|e| format!("round open {r} to {d}: {e}"))?;
+        }
+        let mut seen = vec![false; devices];
+        let mut remaining = present.iter().filter(|&&p| p).count();
+        while remaining > 0 {
+            match fleet
+                .recv_any(Some(RECV_TIMEOUT_S))
+                .map_err(|e| format!("round {r}: {e}"))?
+            {
+                Some((d, Message::Activations { round, device_id, payload, .. })) => {
+                    if round as usize != r || device_id as usize != d {
+                        return Err(format!(
+                            "round {r}: slot {d} delivered activations for \
+                             device {device_id} round {round}"
+                        ));
+                    }
+                    if payload != pattern(d, r, base.up_bytes, STREAM_UP) {
+                        return Err(format!(
+                            "round {r}: device {d} uplink payload corrupted"
+                        ));
+                    }
+                    if seen[d] {
+                        return Err(format!("round {r}: device {d} delivered twice"));
+                    }
+                    seen[d] = true;
+                    remaining -= 1;
+                    fleet
+                        .send(
+                            d,
+                            &Message::Gradients {
+                                round: r as u32,
+                                device_id: d as u32,
+                                loss: 0.0,
+                                payload: pattern(d, r, base.down_bytes, STREAM_DOWN),
+                            },
+                        )
+                        .map_err(|e| format!("gradients {r} to {d}: {e}"))?;
+                }
+                Some((d, Message::Leave { device_id, .. })) => {
+                    if device_id as usize != d {
+                        return Err(format!(
+                            "round {r}: slot {d} delivered a Leave for device \
+                             {device_id}"
+                        ));
+                    }
+                    // the hang-up departure surfaces once the inbox drains
+                }
+                Some((d, other)) => {
+                    return Err(format!(
+                        "round {r}: expected Activations from {d}, got {}",
+                        other.type_name()
+                    ))
+                }
+                None => {
+                    let deps = fleet.take_departures();
+                    if deps.is_empty() {
+                        return Err(format!(
+                            "round {r}: fleet went quiet for {RECV_TIMEOUT_S}s"
+                        ));
+                    }
+                    for dep in deps {
+                        members.depart(dep.slot);
+                        present[dep.slot] = false;
+                        departures.push((dep.slot, dep.graceful));
+                        if !seen[dep.slot] {
+                            remaining -= 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for d in 0..devices {
+        if !present[d] {
+            continue;
+        }
+        fleet
+            .send(d, &Message::Shutdown { reason: "soak complete".to_string() })
+            .map_err(|e| format!("shutdown to {d}: {e}"))?;
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    let per_device = (0..devices).map(|d| fleet.stats(d)).collect();
+    departures.sort_unstable();
+    Ok(SoakReport { backend, wall_s, per_device, departures })
 }
 
 #[cfg(test)]
@@ -360,15 +887,56 @@ mod tests {
         for backend in backends_under_test() {
             let mut cfg = SoakConfig::new(12, 3);
             cfg.driver_threads = 4;
-            cfg.opts = FleetOptions { backend, write_stall_secs: 10 };
+            cfg.opts = FleetOptions { backend, write_stall_secs: 10, elastic: false };
             let report = run_soak(&cfg).expect("soak should complete");
             assert_eq!(report.per_device.len(), 12);
+            assert!(report.departures.is_empty());
             let first = report.per_device[0];
             assert!(first.bytes_sent > 0 && first.bytes_recv > 0);
             for stats in &report.per_device {
                 assert_eq!(*stats, first, "per-device traffic must be uniform");
             }
         }
+    }
+
+    #[test]
+    fn churn_soak_departs_and_readmits_with_exact_accounting() {
+        for backend in backends_under_test() {
+            let mut base = SoakConfig::new(6, 5);
+            base.opts = FleetOptions { backend, write_stall_secs: 10, elastic: false };
+            let cfg = ChurnSoakConfig {
+                base,
+                // device 2 announces its departure, device 4 just vanishes
+                kills: vec![(1, 2, true), (2, 4, false)],
+                rejoins: vec![(3, 2)],
+            };
+            let report = run_churn_soak(&cfg).expect("churn soak should complete");
+            assert_eq!(report.departures, vec![(2, true), (4, false)]);
+            for d in 0..cfg.base.devices {
+                let (sent, recv) = cfg.expected_frames(d);
+                let stats = report.per_device[d];
+                assert_eq!(stats.frames_sent, sent, "device {d} frames sent");
+                assert_eq!(stats.frames_recv, recv, "device {d} frames recv");
+            }
+        }
+    }
+
+    #[test]
+    fn churn_scripts_are_validated() {
+        let base = SoakConfig::new(4, 3);
+        let bad = |kills: Vec<(usize, usize, bool)>, rejoins: Vec<(usize, usize)>| {
+            run_churn_soak(&ChurnSoakConfig { base: base.clone(), kills, rejoins })
+                .expect_err("invalid churn script must be rejected")
+        };
+        // device out of range / round out of range
+        bad(vec![(0, 9, false)], vec![]);
+        bad(vec![(9, 0, false)], vec![]);
+        // rejoin without a kill, and not after the kill
+        bad(vec![], vec![(1, 0)]);
+        bad(vec![(2, 0, false)], vec![(1, 0)]);
+        // duplicates
+        bad(vec![(0, 1, false), (1, 1, true)], vec![]);
+        bad(vec![(0, 1, false)], vec![(1, 1), (2, 1)]);
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Coordinator checkpointing: durable cross-shard state, written
+//! atomically every sync epoch.
+//!
+//! The coordinator is the only node in a sharded cluster whose loss is
+//! unrecoverable — shards can rejoin the device tier, but a dead
+//! coordinator used to take the merged models (and the epoch counter the
+//! whole cluster is barriered on) with it. A [`Checkpoint`] captures
+//! exactly the state [`super::coordinator::Coordinator::run_resumed`]
+//! needs to take over an in-flight session: the session fingerprint and
+//! topology (so a resume with different flags is rejected at load time),
+//! the per-shard FedAvg weights, the completed-epoch counter, and the
+//! last merged client + server sub-models.
+//!
+//! Durability protocol: serialize to `<dir>/coordinator.ckpt.tmp`, fsync,
+//! then atomically rename onto `<dir>/coordinator.ckpt`. A crash mid-write
+//! leaves the previous checkpoint intact; a reader never observes a torn
+//! file.
+//!
+//! The format is a little-endian binary layout under a `SLCK` magic —
+//! self-contained (no codec streams involved: resumability must not
+//! depend on replaying stateful codec history).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"SLCK";
+const VERSION: u32 = 1;
+
+/// Final path component of the checkpoint inside `--checkpoint-dir`.
+pub const FILE_NAME: &str = "coordinator.ckpt";
+
+/// Everything the coordinator needs to resume an in-flight session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// session fingerprint (config digest + compute kind) of the cluster
+    /// this state belongs to
+    pub session_fp: u64,
+    pub shards: u32,
+    pub sync_every: u32,
+    /// completed sync epochs: the resumed coordinator's barrier expects
+    /// shard pushes labeled with exactly this epoch next
+    pub epochs_done: u32,
+    /// per-shard FedAvg weights (index = shard id), captured at handshake
+    pub weights: Vec<f64>,
+    /// merged client sub-model from the last completed epoch (may be
+    /// empty: no shard had a client basis that epoch)
+    pub client: Vec<Tensor>,
+    /// merged server sub-model from the last completed epoch
+    pub server: Vec<Tensor>,
+}
+
+impl Checkpoint {
+    /// Serialize to the on-disk layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        out.extend_from_slice(MAGIC);
+        put_u32(&mut out, VERSION);
+        put_u64(&mut out, self.session_fp);
+        put_u32(&mut out, self.shards);
+        put_u32(&mut out, self.sync_every);
+        put_u32(&mut out, self.epochs_done);
+        put_u32(&mut out, self.weights.len() as u32);
+        for w in &self.weights {
+            put_u64(&mut out, w.to_bits());
+        }
+        put_tensors(&mut out, &self.client);
+        put_tensors(&mut out, &self.server);
+        out
+    }
+
+    /// Parse the on-disk layout. Checkpoints come from a prior run of
+    /// this same binary family, but the file is still external input:
+    /// every length is bounds-checked, truncation is an error, never a
+    /// panic.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint, String> {
+        let mut r = Reader { bytes, at: 0 };
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            return Err("not a coordinator checkpoint (bad magic)".into());
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(format!(
+                "checkpoint version {version}, this binary reads {VERSION}"
+            ));
+        }
+        let session_fp = r.u64()?;
+        let shards = r.u32()?;
+        let sync_every = r.u32()?;
+        let epochs_done = r.u32()?;
+        let n = r.u32()? as usize;
+        if n != shards as usize {
+            return Err(format!("{n} weights for {shards} shards"));
+        }
+        let mut weights = Vec::with_capacity(n);
+        for _ in 0..n {
+            weights.push(f64::from_bits(r.u64()?));
+        }
+        let client = take_tensors(&mut r)?;
+        let server = take_tensors(&mut r)?;
+        if r.at != r.bytes.len() {
+            return Err(format!(
+                "{} trailing byte(s) after the checkpoint body",
+                r.bytes.len() - r.at
+            ));
+        }
+        Ok(Checkpoint {
+            session_fp,
+            shards,
+            sync_every,
+            epochs_done,
+            weights,
+            client,
+            server,
+        })
+    }
+
+    /// Durably replace `<dir>/coordinator.ckpt` with this state:
+    /// write-then-rename through a `.tmp` sibling (see module docs).
+    /// Creates `dir` if missing.
+    pub fn write_atomic(&self, dir: &Path) -> Result<(), String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("checkpoint dir {}: {e}", dir.display()))?;
+        let tmp = dir.join(format!("{FILE_NAME}.tmp"));
+        let fin = dir.join(FILE_NAME);
+        let bytes = self.encode();
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| format!("checkpoint {}: {e}", tmp.display()))?;
+        f.write_all(&bytes)
+            .and_then(|_| f.sync_all())
+            .map_err(|e| format!("checkpoint {}: {e}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, &fin)
+            .map_err(|e| format!("checkpoint rename onto {}: {e}", fin.display()))?;
+        Ok(())
+    }
+
+    /// Load `<dir>/coordinator.ckpt`.
+    pub fn load(dir: &Path) -> Result<Checkpoint, String> {
+        let path = checkpoint_path(dir);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| format!("checkpoint {}: {e}", path.display()))?;
+        Checkpoint::decode(&bytes).map_err(|e| format!("checkpoint {}: {e}", path.display()))
+    }
+}
+
+/// Where [`Checkpoint::write_atomic`] puts the durable file.
+pub fn checkpoint_path(dir: &Path) -> PathBuf {
+    dir.join(FILE_NAME)
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_tensors(out: &mut Vec<u8>, ts: &[Tensor]) {
+    put_u32(out, ts.len() as u32);
+    for t in ts {
+        let dims = t.dims();
+        put_u32(out, dims.len() as u32);
+        for &d in dims {
+            put_u32(out, d as u32);
+        }
+        // f32 bit patterns: the resumed merge must be byte-identical to
+        // the uninterrupted one, so no text round-trip
+        let data = t.data();
+        put_u32(out, data.len() as u32);
+        for &x in data {
+            put_u32(out, x.to_bits());
+        }
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.bytes.len() - self.at < n {
+            return Err("truncated checkpoint".into());
+        }
+        let s = &self.bytes[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+}
+
+fn take_tensors(r: &mut Reader) -> Result<Vec<Tensor>, String> {
+    // caps keep a corrupt length field from oversizing an allocation;
+    // they are far above any real model in this codebase
+    const MAX_TENSORS: usize = 1 << 16;
+    const MAX_ELEMS: usize = 1 << 28;
+    let n = r.u32()? as usize;
+    if n > MAX_TENSORS {
+        return Err(format!("absurd tensor count {n}"));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let nd = r.u32()? as usize;
+        if nd > 8 {
+            return Err(format!("absurd tensor rank {nd}"));
+        }
+        let mut dims = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            dims.push(r.u32()? as usize);
+        }
+        let len = r.u32()? as usize;
+        if len > MAX_ELEMS {
+            return Err(format!("absurd tensor length {len}"));
+        }
+        if dims.iter().product::<usize>() != len {
+            return Err(format!("tensor dims {dims:?} disagree with length {len}"));
+        }
+        let mut data = Vec::with_capacity(len);
+        for _ in 0..len {
+            data.push(f32::from_bits(r.u32()?));
+        }
+        out.push(Tensor::new(dims, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(dims: Vec<usize>, v: Vec<f32>) -> Tensor {
+        Tensor::new(dims, v)
+    }
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            session_fp: 0xdead_beef_cafe_f00d,
+            shards: 2,
+            sync_every: 3,
+            epochs_done: 7,
+            weights: vec![1000.0, 1024.0],
+            client: vec![t(vec![2, 2], vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE])],
+            server: vec![
+                t(vec![3], vec![0.25, 0.5, 0.75]),
+                t(vec![1, 2], vec![9.0, -9.0]),
+            ],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrips_bit_exactly() {
+        let ck = sample();
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(back, ck);
+        // empty client merge (no shard had a client basis) survives too
+        let mut ck = sample();
+        ck.client = Vec::new();
+        assert_eq!(Checkpoint::decode(&ck.encode()).unwrap(), ck);
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_input() {
+        let ck = sample();
+        let bytes = ck.encode();
+        assert!(Checkpoint::decode(b"nope").is_err());
+        assert!(Checkpoint::decode(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(Checkpoint::decode(&bad_magic).is_err());
+        let mut bad_version = bytes.clone();
+        bad_version[4] = 99;
+        assert!(Checkpoint::decode(&bad_version).is_err());
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(Checkpoint::decode(&trailing).is_err());
+    }
+
+    #[test]
+    fn write_atomic_then_load_and_replace() {
+        let dir = std::env::temp_dir().join(format!(
+            "slacc-ckpt-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ck = sample();
+        ck.write_atomic(&dir).unwrap();
+        assert_eq!(Checkpoint::load(&dir).unwrap(), ck);
+        // no .tmp litter after a completed write
+        assert!(!dir.join(format!("{FILE_NAME}.tmp")).exists());
+        // a second write replaces, not appends
+        let mut next = ck.clone();
+        next.epochs_done = 8;
+        next.write_atomic(&dir).unwrap();
+        assert_eq!(Checkpoint::load(&dir).unwrap(), next);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

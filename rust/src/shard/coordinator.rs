@@ -18,6 +18,8 @@
 //! cluster-wide average at `--shard-sync-every 1` equals the single-server
 //! FedAvg up to f32 association.
 
+use std::path::PathBuf;
+
 use crate::codecs::Codec;
 use crate::config::ExperimentConfig;
 use crate::coordinator::device::fedavg_params;
@@ -25,6 +27,8 @@ use crate::sched::fleet::Fleet;
 use crate::tensor::Tensor;
 use crate::transport::proto::Message;
 use crate::transport::{session_fingerprint, sync, TransportError};
+
+use super::checkpoint::Checkpoint;
 
 /// One shard's codec twins on the coordinator side: `push` decodes the
 /// shard's uplink packs, `bcast` encodes the merged broadcast.
@@ -43,6 +47,12 @@ pub struct CoordinatorCfg {
     pub session_fp: u64,
     /// codec label for logs
     pub label: String,
+    /// `--checkpoint-dir`: write a [`Checkpoint`] (atomic
+    /// write-then-rename) after every completed sync epoch
+    pub checkpoint_dir: Option<PathBuf>,
+    /// `--resume`: load the checkpoint from `checkpoint_dir` at startup
+    /// and continue the session from its epoch counter instead of epoch 0
+    pub resume: bool,
 }
 
 /// Outcome of a coordinator run.
@@ -80,6 +90,11 @@ pub struct Coordinator {
     cfg: CoordinatorCfg,
     codecs: Vec<ShardCodecs>,
     scratch: sync::SyncScratch,
+    /// stop after this many *completed* sync epochs, leaving the shards
+    /// blocked at their next barrier: the failure-drill knob behind the
+    /// kill-and-resume test (and `--halt-after` drills) — the session can
+    /// then be picked up by [`Coordinator::run_resumed`]
+    halt_after: Option<usize>,
 }
 
 impl Coordinator {
@@ -97,7 +112,20 @@ impl Coordinator {
                 cfg.shards
             ));
         }
-        Ok(Coordinator { cfg, codecs, scratch: sync::SyncScratch::default() })
+        Ok(Coordinator { cfg, codecs, scratch: sync::SyncScratch::default(), halt_after: None })
+    }
+
+    /// Attach checkpointing flags after construction (the CLI path:
+    /// `--checkpoint-dir` / `--resume` are process flags, not part of the
+    /// fingerprinted experiment config).
+    pub fn configure_checkpoint(&mut self, dir: Option<PathBuf>, resume: bool) {
+        self.cfg.checkpoint_dir = dir;
+        self.cfg.resume = resume;
+    }
+
+    /// Stop after `epochs` completed sync epochs (see the field docs).
+    pub fn halt_after(&mut self, epochs: usize) {
+        self.halt_after = Some(epochs);
     }
 
     /// Build a coordinator from the experiment flags. `compute_kind` is
@@ -120,14 +148,34 @@ impl Coordinator {
                 sync_every: cfg.shard_sync_every,
                 session_fp: session_fingerprint(cfg.fingerprint(), compute_kind),
                 label: cfg.codec.label(),
+                checkpoint_dir: None,
+                resume: false,
             },
             codecs,
         )
     }
 
     /// Drive the full coordinator session over the shard fleet:
-    /// handshake, sync epochs until every shard departs, report.
+    /// handshake, sync epochs until every shard departs, report. With
+    /// [`CoordinatorCfg::resume`], the checkpoint is loaded first and the
+    /// epoch loop starts at its counter — the shards, re-accepting the
+    /// fresh connections through their listeners, re-push the epoch they
+    /// were barriered on (see [`crate::shard::link::ShardLink`]'s
+    /// re-admission path), so the cluster picks up where the previous
+    /// coordinator incarnation died.
     pub fn run(&mut self, fleet: &mut dyn Fleet) -> Result<CoordReport, String> {
+        let resumed = if self.cfg.resume {
+            let dir = self
+                .cfg
+                .checkpoint_dir
+                .clone()
+                .ok_or("--resume needs --checkpoint-dir")?;
+            let ck = Checkpoint::load(&dir)?;
+            self.validate_checkpoint(&ck)?;
+            Some(ck)
+        } else {
+            None
+        };
         let m = self.cfg.shards;
         let label = self.cfg.label.clone();
         if fleet.devices() != m {
@@ -159,9 +207,98 @@ impl Coordinator {
                 weights[k]
             );
         }
+        let start = match resumed {
+            Some(ck) => {
+                // the weights are derived from the fingerprint-matched
+                // config on both sides — a mismatch means the checkpoint
+                // belongs to a different cluster despite the fingerprint
+                for (k, (&w, &cw)) in weights.iter().zip(ck.weights.iter()).enumerate() {
+                    if w != cw {
+                        return Err(format!(
+                            "shard {k} declares weight {w}, the checkpoint recorded \
+                             {cw} — this checkpoint is not from this cluster"
+                        ));
+                    }
+                }
+                crate::log_info!(
+                    "[{label}] coordinator: resuming from checkpoint at sync \
+                     epoch {}",
+                    ck.epochs_done
+                );
+                ck.epochs_done as usize
+            }
+            None => 0,
+        };
+        self.run_loop(fleet, &weights, start)
+    }
 
+    /// Take over an in-flight session without a handshake: the fleet's
+    /// shard links outlived the previous coordinator incarnation (the
+    /// in-process takeover path — channel transports whose shard ends are
+    /// still barriered on their next push). Epoch counter and FedAvg
+    /// weights come from the checkpoint.
+    pub fn run_resumed(
+        &mut self,
+        fleet: &mut dyn Fleet,
+        ck: &Checkpoint,
+    ) -> Result<CoordReport, String> {
+        self.validate_checkpoint(ck)?;
+        if fleet.devices() != self.cfg.shards {
+            return Err(format!(
+                "coordinator: {} shard connections for {} shards",
+                fleet.devices(),
+                self.cfg.shards
+            ));
+        }
+        crate::log_info!(
+            "[{}] coordinator: taking over at sync epoch {}",
+            self.cfg.label,
+            ck.epochs_done
+        );
+        self.run_loop(fleet, &ck.weights, ck.epochs_done as usize)
+    }
+
+    /// Does this checkpoint belong to the session this coordinator was
+    /// launched for?
+    fn validate_checkpoint(&self, ck: &Checkpoint) -> Result<(), String> {
+        if ck.session_fp != self.cfg.session_fp {
+            return Err(format!(
+                "checkpoint session fingerprint {:#018x} != this cluster's \
+                 {:#018x} — resume with the exact flags of the original run",
+                ck.session_fp, self.cfg.session_fp
+            ));
+        }
+        if ck.shards as usize != self.cfg.shards
+            || ck.sync_every as usize != self.cfg.sync_every
+        {
+            return Err(format!(
+                "checkpoint topology ({} shards, sync every {}) != launch flags \
+                 ({} shards, sync every {})",
+                ck.shards, ck.sync_every, self.cfg.shards, self.cfg.sync_every
+            ));
+        }
+        if ck.weights.len() != self.cfg.shards {
+            return Err(format!(
+                "checkpoint carries {} weights for {} shards",
+                ck.weights.len(),
+                self.cfg.shards
+            ));
+        }
+        Ok(())
+    }
+
+    /// The sync-epoch loop (see [`Coordinator::run`] docs), starting at
+    /// `start_epoch`.
+    fn run_loop(
+        &mut self,
+        fleet: &mut dyn Fleet,
+        weights: &[f64],
+        start_epoch: usize,
+    ) -> Result<CoordReport, String> {
+        let m = self.cfg.shards;
+        let label = self.cfg.label.clone();
         let mut active = vec![true; m];
-        let mut epoch = 0usize;
+        let mut epoch = start_epoch;
         let mut bytes_up = 0usize;
         let mut bytes_down = 0usize;
         let mut per_shard = vec![(0usize, 0usize); m];
@@ -170,6 +307,15 @@ impl Coordinator {
         // final one)
         let mut rollups: Vec<Vec<(u64, u64)>> = vec![Vec::new(); m];
         loop {
+            if let Some(halt) = self.halt_after {
+                if epoch >= halt {
+                    crate::log_warn!(
+                        "[{label}] coordinator: halting after sync epoch {epoch} \
+                         (failure drill) — shards stay barriered for a resume"
+                    );
+                    break;
+                }
+            }
             // barrier: one message per active shard (push or departure)
             let mut pushes: Vec<Option<(Vec<Tensor>, Vec<Tensor>)>> =
                 (0..m).map(|_| None).collect();
@@ -239,7 +385,7 @@ impl Coordinator {
             let fedavg_t0 = std::time::Instant::now();
             let (merged_client, merged_server) = {
                 let _sp = crate::span!("fedavg_merge", epoch = epoch);
-                merge_shard_models(&pushes, &weights, epoch)?
+                merge_shard_models(&pushes, weights, epoch)?
             };
             crate::obs::metrics::FEDAVG_NS.observe(fedavg_t0.elapsed().as_nanos() as u64);
             for k in 0..m {
@@ -268,6 +414,24 @@ impl Coordinator {
                 fleet.pump(k)?;
             }
             epoch += 1;
+            // durable point: everything a successor needs to take over is
+            // on disk before the next barrier is entered
+            if let Some(dir) = self.cfg.checkpoint_dir.clone() {
+                let t0 = std::time::Instant::now();
+                let _sp = crate::span!("checkpoint", epoch = epoch);
+                Checkpoint {
+                    session_fp: self.cfg.session_fp,
+                    shards: m as u32,
+                    sync_every: self.cfg.sync_every as u32,
+                    epochs_done: epoch as u32,
+                    weights: weights.to_vec(),
+                    client: merged_client,
+                    server: merged_server,
+                }
+                .write_atomic(&dir)?;
+                crate::obs::metrics::CHECKPOINT_WRITE_NS
+                    .observe(t0.elapsed().as_nanos() as u64);
+            }
             crate::log_debug!("[{label}] coordinator: sync epoch {epoch} merged");
         }
         crate::log_info!(

@@ -22,6 +22,11 @@ use crate::transport::{sync, Transport};
 use super::Topology;
 use crate::sched::round::ShardSyncPolicy;
 
+/// How a [`ShardLink`] gets a replacement coordinator connection after a
+/// mid-session hang-up: typically "accept the next connection on this
+/// node's `--shard-bind` listener".
+pub type Reacquire = Box<dyn FnMut() -> Result<Box<dyn Transport>, String> + Send>;
+
 /// A shard server's connection to the coordinator tier.
 pub struct ShardLink {
     conn: Box<dyn Transport>,
@@ -34,9 +39,20 @@ pub struct ShardLink {
     scratch: sync::SyncScratch,
     /// next cross-shard sync epoch (increments per completed exchange)
     epoch: usize,
-    /// wire bytes of the last exchange: (push, merged reply)
+    /// wire bytes of the most recent exchange: (push, merged reply)
     last_wire: (usize, usize),
     finished: bool,
+    /// the topology this link was handshaken with, retained so a resumed
+    /// coordinator's re-handshake validates against the same flags
+    shards: usize,
+    sync_every: usize,
+    session_fp: u64,
+    weight: u64,
+    /// re-admission hook: when set, a coordinator hang-up mid-exchange is
+    /// a *departure*, not a session failure — the link re-accepts, redoes
+    /// the handshake, and re-pushes the barriered epoch (`None` keeps the
+    /// pre-elastic behavior: a hang-up is fatal)
+    reacquire: Option<Reacquire>,
 }
 
 impl ShardLink {
@@ -55,69 +71,14 @@ impl ShardLink {
         session_fp: u64,
         codecs: (Box<dyn Codec>, Box<dyn Codec>),
     ) -> Result<ShardLink, String> {
-        let msg = conn
-            .recv()
-            .map_err(|e| format!("shard {shard_id}: coordinator handshake: {e}"))?;
-        match msg {
-            Message::ShardHello { shard_id: sid, shards, sync_every, config_fp, .. } => {
-                if sid as usize != shard_id {
-                    return Err(format!(
-                        "coordinator addressed shard {sid}, this node is shard \
-                         {shard_id} — check the --connect-shard address order"
-                    ));
-                }
-                if shards as usize != topo.shards {
-                    return Err(format!(
-                        "coordinator runs {shards} shards, this node was launched \
-                         with --shards {} — the cluster must agree",
-                        topo.shards
-                    ));
-                }
-                if sync_every as usize != topo.sync_every {
-                    return Err(format!(
-                        "coordinator syncs every {sync_every} round(s), this node \
-                         every {} — launch both with the same --shard-sync-every",
-                        topo.sync_every
-                    ));
-                }
-                if config_fp != session_fp {
-                    return Err(format!(
-                        "coordinator presents session fingerprint {config_fp:#018x}, \
-                         this shard expects {session_fp:#018x} — launch every node \
-                         of the cluster with identical flags and the same \
-                         engine-vs-mock mode"
-                    ));
-                }
-            }
-            Message::Hello { device_id, .. } => {
-                return Err(format!(
-                    "shard {shard_id}: a device (id {device_id}) connected on the \
-                     coordinator port — devices connect to --bind, coordinators \
-                     to --shard-bind"
-                ))
-            }
-            other => {
-                return Err(format!(
-                    "shard {shard_id}: expected ShardHello from the coordinator, \
-                     got {}",
-                    other.type_name()
-                ))
-            }
-        }
-        conn.send(&Message::ShardHello {
-            shard_id: shard_id as u32,
-            shards: topo.shards as u32,
-            sync_every: topo.sync_every as u32,
-            config_fp: session_fp,
+        hello_exchange(
+            &mut conn,
+            shard_id,
+            topo.shards,
+            topo.sync_every,
+            session_fp,
             weight,
-        })
-        .map_err(|e| format!("shard {shard_id}: coordinator handshake reply: {e}"))?;
-        crate::log_info!(
-            "shard {shard_id}: coordinator link up ({}, weight {weight}, sync \
-             every {})",
-            conn.peer(),
-            topo.sync_every
-        );
+        )?;
         let (push, bcast) = codecs;
         Ok(ShardLink {
             conn,
@@ -129,7 +90,47 @@ impl ShardLink {
             epoch: 0,
             last_wire: (0, 0),
             finished: false,
+            shards: topo.shards,
+            sync_every: topo.sync_every,
+            session_fp,
+            weight,
+            reacquire: None,
         })
+    }
+
+    /// Enable coordinator re-admission (see the field docs): `f` yields
+    /// the replacement connection — typically by blocking on the shard's
+    /// `--shard-bind` listener until a resumed coordinator dials back in.
+    pub fn set_reacquire(&mut self, f: Reacquire) {
+        self.reacquire = Some(f);
+    }
+
+    /// A coordinator hang-up was detected mid-exchange: accept a
+    /// replacement connection and redo the hello exchange against the
+    /// retained session flags.
+    fn readmit(&mut self) -> Result<(), String> {
+        let me = self.shard_id;
+        let f = self
+            .reacquire
+            .as_mut()
+            .expect("readmit without a reacquire hook");
+        crate::log_warn!(
+            "shard {me}: coordinator departed mid-session — waiting to re-admit \
+             a resumed coordinator (sync epoch {})",
+            self.epoch
+        );
+        let mut conn = f()?;
+        hello_exchange(
+            &mut conn,
+            me,
+            self.shards,
+            self.sync_every,
+            self.session_fp,
+            self.weight,
+        )?;
+        self.conn = conn;
+        crate::log_info!("shard {me}: coordinator re-admitted ({})", self.conn.peer());
+        Ok(())
     }
 
     /// Is round `round` a cross-shard sync boundary?
@@ -168,25 +169,43 @@ impl ShardLink {
         let server_pack = sync::pack_params_with(server, self.push.as_mut(), &mut self.scratch);
         let pushed = client_pack.len() + server_pack.len();
         let _sp = crate::span!("shard_sync", epoch = self.epoch);
-        self.conn
-            .send(&Message::ShardSync {
-                epoch: self.epoch as u32,
-                shard_id: me as u32,
-                client: client_pack,
-                server: server_pack,
-                // piggyback this shard's cumulative counters so the
-                // coordinator can report cluster-wide totals
-                metrics: crate::obs::metrics::rollup_blob(),
-            })
-            .map_err(|e| format!("shard {me}: push to coordinator: {e}"))?;
-        let barrier_t0 = std::time::Instant::now();
-        let reply = self
-            .conn
-            .recv()
-            .map_err(|e| format!("shard {me}: awaiting coordinator merge: {e}"))?;
-        crate::obs::metrics::SHARD_SYNC_WAIT_NS
-            .observe(barrier_t0.elapsed().as_nanos() as u64);
-        crate::obs::metrics::SHARD_SYNCS.inc();
+        // one hang-up is survivable when re-admission is armed: accept the
+        // resumed coordinator and re-push this same barriered epoch. A
+        // second failure in the same exchange is fatal either way.
+        let mut readmitted = false;
+        let push_msg = Message::ShardSync {
+            epoch: self.epoch as u32,
+            shard_id: me as u32,
+            client: client_pack,
+            server: server_pack,
+            // piggyback this shard's cumulative counters so the
+            // coordinator can report cluster-wide totals
+            metrics: crate::obs::metrics::rollup_blob(),
+        };
+        let reply = loop {
+            let barrier_t0 = std::time::Instant::now();
+            let attempt = self
+                .conn
+                .send(&push_msg)
+                .and_then(|_| self.conn.recv());
+            match attempt {
+                Ok(reply) => {
+                    crate::obs::metrics::SHARD_SYNC_WAIT_NS
+                        .observe(barrier_t0.elapsed().as_nanos() as u64);
+                    crate::obs::metrics::SHARD_SYNCS.inc();
+                    break reply;
+                }
+                Err(e)
+                    if e.is_peer_closed() && self.reacquire.is_some() && !readmitted =>
+                {
+                    readmitted = true;
+                    self.readmit()?;
+                }
+                Err(e) => {
+                    return Err(format!("shard {me}: coordinator exchange: {e}"));
+                }
+            }
+        };
         match reply {
             Message::ShardSync { epoch, shard_id, client, server, .. } => {
                 if shard_id as usize != me {
@@ -230,16 +249,103 @@ impl ShardLink {
             return Ok(());
         }
         self.finished = true;
-        self.conn
-            .send(&Message::ShardSync {
-                epoch: self.epoch as u32,
-                shard_id: self.shard_id as u32,
-                client: Vec::new(),
-                server: Vec::new(),
-                // final counter roll-up rides the departure notice, so the
-                // coordinator's cluster totals include the whole session
-                metrics: crate::obs::metrics::rollup_blob(),
-            })
-            .map_err(|e| format!("shard {}: departure notice: {e}", self.shard_id))
+        let notice = Message::ShardSync {
+            epoch: self.epoch as u32,
+            shard_id: self.shard_id as u32,
+            client: Vec::new(),
+            server: Vec::new(),
+            // final counter roll-up rides the departure notice, so the
+            // coordinator's cluster totals include the whole session
+            metrics: crate::obs::metrics::rollup_blob(),
+        };
+        match self.conn.send(&notice) {
+            Ok(()) => Ok(()),
+            // same single-retry rule as exchange: a resumed coordinator
+            // still needs the departure notice, or its barrier hangs
+            Err(e) if e.is_peer_closed() && self.reacquire.is_some() => {
+                self.readmit()?;
+                self.conn
+                    .send(&notice)
+                    .map_err(|e| format!("shard {}: departure notice: {e}", self.shard_id))
+            }
+            Err(e) => Err(format!("shard {}: departure notice: {e}", self.shard_id)),
+        }
     }
+}
+
+/// One side of the symmetric ShardHello exchange, shard end: receive the
+/// coordinator's topology announcement, validate it against this node's
+/// flags, echo it back with this shard's FedAvg weight. Shared by the
+/// initial [`ShardLink::handshake`] and the re-admission path — a resumed
+/// coordinator is held to exactly the same checks as the original.
+fn hello_exchange(
+    conn: &mut Box<dyn Transport>,
+    shard_id: usize,
+    shards: usize,
+    sync_every: usize,
+    session_fp: u64,
+    weight: u64,
+) -> Result<(), String> {
+    let msg = conn
+        .recv()
+        .map_err(|e| format!("shard {shard_id}: coordinator handshake: {e}"))?;
+    match msg {
+        Message::ShardHello { shard_id: sid, shards: m, sync_every: se, config_fp, .. } => {
+            if sid as usize != shard_id {
+                return Err(format!(
+                    "coordinator addressed shard {sid}, this node is shard \
+                     {shard_id} — check the --connect-shard address order"
+                ));
+            }
+            if m as usize != shards {
+                return Err(format!(
+                    "coordinator runs {m} shards, this node was launched \
+                     with --shards {shards} — the cluster must agree"
+                ));
+            }
+            if se as usize != sync_every {
+                return Err(format!(
+                    "coordinator syncs every {se} round(s), this node \
+                     every {sync_every} — launch both with the same \
+                     --shard-sync-every"
+                ));
+            }
+            if config_fp != session_fp {
+                return Err(format!(
+                    "coordinator presents session fingerprint {config_fp:#018x}, \
+                     this shard expects {session_fp:#018x} — launch every node \
+                     of the cluster with identical flags and the same \
+                     engine-vs-mock mode"
+                ));
+            }
+        }
+        Message::Hello { device_id, .. } => {
+            return Err(format!(
+                "shard {shard_id}: a device (id {device_id}) connected on the \
+                 coordinator port — devices connect to --bind, coordinators \
+                 to --shard-bind"
+            ))
+        }
+        other => {
+            return Err(format!(
+                "shard {shard_id}: expected ShardHello from the coordinator, \
+                 got {}",
+                other.type_name()
+            ))
+        }
+    }
+    conn.send(&Message::ShardHello {
+        shard_id: shard_id as u32,
+        shards: shards as u32,
+        sync_every: sync_every as u32,
+        config_fp: session_fp,
+        weight,
+    })
+    .map_err(|e| format!("shard {shard_id}: coordinator handshake reply: {e}"))?;
+    crate::log_info!(
+        "shard {shard_id}: coordinator link up ({}, weight {weight}, sync \
+         every {sync_every})",
+        conn.peer()
+    );
+    Ok(())
 }

@@ -39,6 +39,7 @@
 //! deterministically without sockets; `examples/sharded.rs` runs the same
 //! cluster as real processes over localhost TCP.
 
+pub mod checkpoint;
 pub mod coordinator;
 pub mod link;
 pub mod sim;

@@ -28,6 +28,7 @@ use crate::transport::server::{
 };
 use crate::transport::{channel, device, loopback, session_fingerprint, Transport};
 
+use super::checkpoint::Checkpoint;
 use super::coordinator::{CoordReport, Coordinator};
 use super::link::ShardLink;
 
@@ -115,6 +116,72 @@ pub fn run_sharded_mock(cfg: &ExperimentConfig) -> Result<ShardedReport, String>
     }
     // shard-side errors are the root cause when the coordinator merely
     // saw the hang-up — surface them first
+    if !errors.is_empty() {
+        return Err(errors.join("; "));
+    }
+    let coordinator_report = coord_result?;
+    Ok(ShardedReport { shard_reports, coordinator: coordinator_report })
+}
+
+/// The coordinator kill-and-resume drill, in-process: run the cluster
+/// with checkpointing until the coordinator halts after `halt_after`
+/// completed sync epochs (simulating a crash at an epoch boundary — the
+/// shard sessions stay barriered on their channel ends, exactly like
+/// shards waiting out a coordinator restart over TCP), then load the
+/// checkpoint into a *second* coordinator that takes over the same fleet
+/// via [`Coordinator::run_resumed`] and finishes the session.
+///
+/// Because the checkpoint is written after every merge broadcast and the
+/// resumed coordinator replays nothing, the shards' loss trajectories
+/// must be bit-identical to an uninterrupted [`run_sharded_mock`] run.
+pub fn run_sharded_mock_resumed(
+    cfg: &ExperimentConfig,
+    halt_after: usize,
+    checkpoint_dir: &std::path::Path,
+) -> Result<ShardedReport, String> {
+    cfg.validate()?;
+    let topo = cfg.topology();
+    if !topo.is_sharded() {
+        return Err("the kill-and-resume drill needs --shards > 1".into());
+    }
+    let m = topo.shards;
+    let mut coord_ends: Vec<Box<dyn Transport>> = Vec::with_capacity(m);
+    let mut threads = Vec::with_capacity(m);
+    for k in 0..m {
+        let (shard_end, coord_end) = channel::pair(&format!("shardlink{k}"));
+        coord_ends.push(Box::new(coord_end));
+        let cfg = cfg.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("slacc-shard{k}"))
+                .spawn(move || run_mock_shard_session(&cfg, k, Box::new(shard_end)))
+                .map_err(|e| format!("spawn shard {k}: {e}"))?,
+        );
+    }
+    let mut fleet = ShardFleet::new(coord_ends);
+    let coord_result = (|| {
+        let mut first = Coordinator::from_experiment(cfg, "mock")?;
+        first.configure_checkpoint(Some(checkpoint_dir.to_path_buf()), false);
+        first.halt_after(halt_after);
+        first.run(&mut fleet)?;
+        // the first coordinator's state dies here; everything the
+        // successor knows comes off the checkpoint on disk
+        let ck = Checkpoint::load(checkpoint_dir)?;
+        let mut second = Coordinator::from_experiment(cfg, "mock")?;
+        second.configure_checkpoint(Some(checkpoint_dir.to_path_buf()), false);
+        second.run_resumed(&mut fleet, &ck)
+    })();
+    drop(fleet);
+
+    let mut shard_reports = Vec::with_capacity(m);
+    let mut errors = Vec::new();
+    for (k, t) in threads.into_iter().enumerate() {
+        match t.join() {
+            Ok(Ok(report)) => shard_reports.push(report),
+            Ok(Err(e)) => errors.push(format!("shard {k}: {e}")),
+            Err(_) => errors.push(format!("shard {k}: session thread panicked")),
+        }
+    }
     if !errors.is_empty() {
         return Err(errors.join("; "));
     }

@@ -57,6 +57,10 @@ pub struct DeviceWorker<C: Compute> {
     /// highest round the server has opened on this device — SpecUpdates
     /// must activate strictly after it
     latest_open: Option<u32>,
+    /// membership epoch from the last [`Message::JoinAck`]; 0 for a fresh
+    /// process (a first-time joiner or a rejoiner restarted from scratch,
+    /// which the server accepts as "no epoch to claim")
+    member_epoch: u32,
     /// reusable flatten/envelope scratch for the ModelSync pushes (one
     /// allocation per push — the frame-owned payload)
     sync_scratch: sync::SyncScratch,
@@ -87,6 +91,7 @@ impl<C: Compute> DeviceWorker<C> {
             stream_cfg,
             pending_specs: Vec::new(),
             latest_open: None,
+            member_epoch: 0,
             sync_scratch: sync::SyncScratch::default(),
             pending: None,
             done: false,
@@ -120,6 +125,24 @@ impl<C: Compute> DeviceWorker<C> {
         }
     }
 
+    /// The mid-session admission frame: same shape and validation surface
+    /// as [`DeviceWorker::hello`], plus the membership epoch this device
+    /// last held (0 for a fresh process). Sent instead of Hello when the
+    /// session is already running (`slacc device --rejoin`).
+    pub fn join(&self) -> Message {
+        Message::Join {
+            device_id: self.state.id as u32,
+            devices: self.devices as u32,
+            shard_len: self.state.loader.shard_len() as u32,
+            config_fp: self.session_fp,
+            member_epoch: self.member_epoch,
+            uplink: self.specs.uplink.as_str().to_string(),
+            downlink: self.specs.downlink.as_str().to_string(),
+            sync: self.specs.sync.as_str().to_string(),
+            streams_fp: self.specs.fingerprint(),
+        }
+    }
+
     /// Consume one server message; return the replies to send, in order.
     pub fn handle(&mut self, msg: Message) -> Result<Vec<Message>, String> {
         let me = self.state.id;
@@ -144,6 +167,77 @@ impl<C: Compute> DeviceWorker<C> {
                     me as u32,
                     crate::util::logging::elapsed_ns(),
                 );
+                Ok(Vec::new())
+            }
+            Message::JoinAck { device_id, round, member_epoch, rounds, .. } => {
+                if device_id as usize != me {
+                    return Err(format!(
+                        "device {me}: JoinAck addressed to device {device_id}"
+                    ));
+                }
+                if rounds as usize != self.rounds {
+                    return Err(format!(
+                        "device {me}: server runs {rounds} rounds, local config says {}",
+                        self.rounds
+                    ));
+                }
+                self.member_epoch = member_epoch;
+                crate::obs::span::set_trace_session(self.session_fp);
+                crate::obs::span::record_anchor(
+                    me as u32,
+                    crate::util::logging::elapsed_ns(),
+                );
+                crate::log_info!(
+                    "device {me}: admitted mid-session at round {round} \
+                     (member epoch {member_epoch})"
+                );
+                Ok(Vec::new())
+            }
+            Message::Catchup { round, device_id, spec_epoch, payload } => {
+                if device_id as usize != me {
+                    return Err(format!(
+                        "device {me}: Catchup addressed to device {device_id}"
+                    ));
+                }
+                // elastic sessions run with adaptive retuning off, so the
+                // only stream table a rejoiner can decode against is the
+                // session-initial one (epoch 0)
+                if spec_epoch != 0 {
+                    return Err(format!(
+                        "device {me}: Catchup at spec epoch {spec_epoch}; rejoin \
+                         under adaptive retuning is not supported"
+                    ));
+                }
+                // empty pack = "no broadcast has happened yet; keep the
+                // local deterministic init"
+                if payload.is_empty() {
+                    crate::log_debug!(
+                        "device {me}: catchup at round {round}: no broadcast yet, \
+                         keeping local init"
+                    );
+                    return Ok(Vec::new());
+                }
+                let tensors =
+                    sync::unpack_params(&payload, self.state.streams.sync_down.as_mut())
+                        .map_err(|e| format!("device {me}: sync stream (catchup): {e}"))?;
+                if tensors.len() != self.state.client_params.len() {
+                    return Err(format!(
+                        "device {me}: Catchup has {} tensors, model has {}",
+                        tensors.len(),
+                        self.state.client_params.len()
+                    ));
+                }
+                for (t, p) in tensors.iter().zip(self.state.client_params.iter()) {
+                    if t.dims() != p.dims() {
+                        return Err(format!(
+                            "device {me}: Catchup tensor shape {:?} != model {:?}",
+                            t.dims(),
+                            p.dims()
+                        ));
+                    }
+                }
+                self.state.client_params = tensors;
+                crate::log_info!("device {me}: model caught up to round {round}");
                 Ok(Vec::new())
             }
             Message::RoundOpen { round, sync } => {
@@ -383,7 +477,29 @@ pub fn run_blocking<C: Compute>(
     worker: &mut DeviceWorker<C>,
     conn: &mut dyn Transport,
 ) -> Result<(), String> {
-    conn.send(&worker.hello())?;
+    let opening = worker.hello();
+    run_opening(worker, conn, opening)
+}
+
+/// Join (or re-join) a session that is already running: send
+/// [`DeviceWorker::join`] instead of Hello, then serve messages until
+/// Shutdown. The server parks the connection until the next round
+/// boundary, replies JoinAck + Catchup, and folds the device into the
+/// round loop.
+pub fn run_blocking_rejoin<C: Compute>(
+    worker: &mut DeviceWorker<C>,
+    conn: &mut dyn Transport,
+) -> Result<(), String> {
+    let opening = worker.join();
+    run_opening(worker, conn, opening)
+}
+
+fn run_opening<C: Compute>(
+    worker: &mut DeviceWorker<C>,
+    conn: &mut dyn Transport,
+    opening: Message,
+) -> Result<(), String> {
+    conn.send(&opening)?;
     while !worker.is_done() {
         let msg = conn.recv()?;
         for reply in worker.handle(msg)? {

@@ -36,8 +36,10 @@ pub const FRAME_MAGIC: u32 = 0x534C_4143;
 /// topologies; v4 added the telemetry roll-up blob to ShardSync so the
 /// coordinator can report cluster-wide counter totals; v5 added the
 /// runtime renegotiation frames (SpecUpdate/SpecUpdateAck) that swap the
-/// per-stream codec table mid-session at an agreed round boundary.
-pub const PROTO_VERSION: u8 = 5;
+/// per-stream codec table mid-session at an agreed round boundary; v6
+/// added the elastic-membership frames (Join/JoinAck/Catchup/Leave) that
+/// let a device enter or leave a session after handshake.
+pub const PROTO_VERSION: u8 = 6;
 /// Fixed frame-header size in bytes (magic + version + type + body_len).
 pub const FRAME_HEADER_BYTES: usize = 4 + 1 + 1 + 4;
 /// Hard cap on a frame body: 1 GiB, matching the payload header's
@@ -61,6 +63,10 @@ pub mod msg_type {
     pub const SHARD_SYNC: u8 = 9;
     pub const SPEC_UPDATE: u8 = 10;
     pub const SPEC_UPDATE_ACK: u8 = 11;
+    pub const JOIN: u8 = 12;
+    pub const JOIN_ACK: u8 = 13;
+    pub const CATCHUP: u8 = 14;
+    pub const LEAVE: u8 = 15;
 }
 
 /// One SL-protocol message.
@@ -173,6 +179,55 @@ pub enum Message {
     /// will swap at `activate_round`. Echoes the update's round + digest so
     /// the server can match the ack against the transition it pushed.
     SpecUpdateAck { activate_round: u32, streams_fp: u64 },
+    /// device → server: elastic membership (proto v6) — the first frame on
+    /// a *late* connection, from a device asking to join (or rejoin) a
+    /// session that is already past its initial handshake. Carries the
+    /// same validation payload as [`Message::Hello`] plus `member_epoch`:
+    /// the admission epoch the device last held (0 for a process that was
+    /// never admitted), so the server can reject a stale incarnation
+    /// replaying an admission it no longer owns.
+    Join {
+        device_id: u32,
+        devices: u32,
+        shard_len: u32,
+        config_fp: u64,
+        member_epoch: u32,
+        /// canonical spec of the uplink stream
+        uplink: String,
+        /// canonical spec of the downlink stream
+        downlink: String,
+        /// canonical spec of the ModelSync streams
+        sync: String,
+        /// [`crate::codecs::stream::StreamSpecs::fingerprint`] of the table
+        streams_fp: u64,
+    },
+    /// server → device: admission accept for a [`Message::Join`], pushed
+    /// at the next round boundary. `round` is the first round the device
+    /// will be opened for; `member_epoch` is the server-stamped admission
+    /// epoch (the device echoes it in any future Join); `rounds` and
+    /// `agg_every` mirror [`Message::HelloAck`] so a fresh process learns
+    /// the run shape.
+    JoinAck {
+        device_id: u32,
+        round: u32,
+        member_epoch: u32,
+        rounds: u32,
+        agg_every: u32,
+    },
+    /// server → device: model catch-up, sent immediately after
+    /// [`Message::JoinAck`]. `payload` is the current client sub-model
+    /// packed through the negotiated ModelSync codec stream
+    /// ([`crate::transport::sync`]; empty means "keep your local init" —
+    /// no broadcast has happened yet), `spec_epoch` is the active
+    /// [`crate::codecs::stream::StreamSpecs`] epoch, and `round` the
+    /// server's round counter, so the rejoiner rebuilds its codec state
+    /// in lock-step with the server's twin.
+    Catchup { round: u32, device_id: u32, spec_epoch: u32, payload: Vec<u8> },
+    /// device → server: graceful departure announcement. The server
+    /// retires the slot as a typed membership event at the next
+    /// scheduling step instead of treating the subsequent hang-up as an
+    /// I/O failure.
+    Leave { device_id: u32, reason: String },
 }
 
 impl Message {
@@ -189,6 +244,10 @@ impl Message {
             Message::ShardSync { .. } => msg_type::SHARD_SYNC,
             Message::SpecUpdate { .. } => msg_type::SPEC_UPDATE,
             Message::SpecUpdateAck { .. } => msg_type::SPEC_UPDATE_ACK,
+            Message::Join { .. } => msg_type::JOIN,
+            Message::JoinAck { .. } => msg_type::JOIN_ACK,
+            Message::Catchup { .. } => msg_type::CATCHUP,
+            Message::Leave { .. } => msg_type::LEAVE,
         }
     }
 
@@ -205,6 +264,10 @@ impl Message {
             Message::ShardSync { .. } => "ShardSync",
             Message::SpecUpdate { .. } => "SpecUpdate",
             Message::SpecUpdateAck { .. } => "SpecUpdateAck",
+            Message::Join { .. } => "Join",
+            Message::JoinAck { .. } => "JoinAck",
+            Message::Catchup { .. } => "Catchup",
+            Message::Leave { .. } => "Leave",
         }
     }
 
@@ -286,6 +349,44 @@ impl Message {
                 w.u32(*activate_round);
                 w.u64(*streams_fp);
             }
+            Message::Join {
+                device_id,
+                devices,
+                shard_len,
+                config_fp,
+                member_epoch,
+                uplink,
+                downlink,
+                sync,
+                streams_fp,
+            } => {
+                w.u32(*device_id);
+                w.u32(*devices);
+                w.u32(*shard_len);
+                w.u64(*config_fp);
+                w.u64(*streams_fp);
+                w.u32(*member_epoch);
+                write_str(w, uplink);
+                write_str(w, downlink);
+                write_str(w, sync);
+            }
+            Message::JoinAck { device_id, round, member_epoch, rounds, agg_every } => {
+                w.u32(*device_id);
+                w.u32(*round);
+                w.u32(*member_epoch);
+                w.u32(*rounds);
+                w.u32(*agg_every);
+            }
+            Message::Catchup { round, device_id, spec_epoch, payload } => {
+                w.u32(*round);
+                w.u32(*device_id);
+                w.u32(*spec_epoch);
+                write_blob(w, payload);
+            }
+            Message::Leave { device_id, reason } => {
+                w.u32(*device_id);
+                write_str(w, reason);
+            }
         }
     }
 
@@ -360,6 +461,34 @@ impl Message {
             msg_type::SPEC_UPDATE_ACK => Message::SpecUpdateAck {
                 activate_round: r.u32()?,
                 streams_fp: r.u64()?,
+            },
+            msg_type::JOIN => Message::Join {
+                device_id: r.u32()?,
+                devices: r.u32()?,
+                shard_len: r.u32()?,
+                config_fp: r.u64()?,
+                streams_fp: r.u64()?,
+                member_epoch: r.u32()?,
+                uplink: read_str(r)?,
+                downlink: read_str(r)?,
+                sync: read_str(r)?,
+            },
+            msg_type::JOIN_ACK => Message::JoinAck {
+                device_id: r.u32()?,
+                round: r.u32()?,
+                member_epoch: r.u32()?,
+                rounds: r.u32()?,
+                agg_every: r.u32()?,
+            },
+            msg_type::CATCHUP => Message::Catchup {
+                round: r.u32()?,
+                device_id: r.u32()?,
+                spec_epoch: r.u32()?,
+                payload: read_blob(r)?,
+            },
+            msg_type::LEAVE => Message::Leave {
+                device_id: r.u32()?,
+                reason: read_str(r)?,
             },
             other => return Err(format!("unknown message type {other}")),
         };
@@ -481,7 +610,7 @@ fn read_frame_header(r: &mut ByteReader) -> Result<(u8, usize), String> {
     }
     let version = r.u8()?;
     if version != PROTO_VERSION {
-        // name both versions: a v4 peer (pre-SpecUpdate) dialing a v5 node
+        // name both versions: a v5 peer (pre-membership) dialing a v6 node
         // must learn exactly which side is stale, not just "unsupported"
         return Err(format!(
             "unsupported protocol version: peer speaks v{version}, this build \
@@ -865,6 +994,31 @@ mod tests {
                 activate_round: 12,
                 streams_fp: 0xfaca_de00_1234_5678,
             },
+            Message::Join {
+                device_id: 2,
+                devices: 4,
+                shard_len: 128,
+                config_fp: 0xfeed_beef_dead_cafe,
+                member_epoch: 1,
+                uplink: "slacc".into(),
+                downlink: "uniform8".into(),
+                sync: "identity".into(),
+                streams_fp: 0x0123_4567_89ab_cdef,
+            },
+            Message::JoinAck {
+                device_id: 2,
+                round: 41,
+                member_epoch: 2,
+                rounds: 300,
+                agg_every: 1,
+            },
+            Message::Catchup {
+                round: 41,
+                device_id: 2,
+                spec_epoch: 0,
+                payload: vec![13; 29],
+            },
+            Message::Leave { device_id: 2, reason: "battery".into() },
         ]
     }
 
@@ -1010,16 +1164,16 @@ mod tests {
     }
 
     #[test]
-    fn old_proto_v4_frame_rejected_by_name() {
-        // a pre-SpecUpdate peer: same framing, version byte 4
+    fn old_proto_v5_frame_rejected_by_name() {
+        // a pre-membership peer: same framing, version byte 5
         let mut frame = Message::RoundOpen { round: 0, sync: false }.encode_frame();
-        frame[4] = 4;
+        frame[4] = 5;
         let err = Message::decode_frame(&frame).unwrap_err();
-        assert!(err.contains("v4"), "{err}");
         assert!(err.contains("v5"), "{err}");
+        assert!(err.contains("v6"), "{err}");
         let mut dec = FrameDecoder::new();
         dec.feed(&frame);
-        assert!(dec.next().unwrap_err().contains("v4"));
+        assert!(dec.next().unwrap_err().contains("v5"));
     }
 
     /// Systematic hostile-envelope fuzz for the v5 renegotiation frames:
@@ -1042,6 +1196,64 @@ mod tests {
                 streams_fp: 0x1122_3344_5566_7788,
             }
             .encode_frame(),
+        ];
+        for frame in &frames {
+            for cut in 0..frame.len() {
+                assert!(
+                    Message::decode_frame(&frame[..cut]).is_err(),
+                    "prefix of {cut}/{} bytes accepted",
+                    frame.len()
+                );
+            }
+            let original = Message::decode_frame(frame).unwrap();
+            for byte in 0..FRAME_HEADER_BYTES {
+                for bit in 0..8 {
+                    let mut bad = frame.clone();
+                    bad[byte] ^= 1 << bit;
+                    match Message::decode_frame(&bad) {
+                        Err(_) => {}
+                        Ok(m) => panic!(
+                            "header bit {bit} of byte {byte} flipped, still \
+                             decoded as {} (original {})",
+                            m.type_name(),
+                            original.type_name()
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Same hostile-envelope fuzz for the v6 membership frames: every
+    /// strict prefix truncation and every single-bit header flip of a
+    /// valid Join/JoinAck/Catchup/Leave must be rejected, never panic and
+    /// never decode to the original message.
+    #[test]
+    fn join_family_prefix_truncations_and_header_bitflips_rejected() {
+        let frames = [
+            Message::Join {
+                device_id: 7,
+                devices: 16,
+                shard_len: 64,
+                config_fp: 0xaaaa_bbbb_cccc_dddd,
+                member_epoch: 3,
+                uplink: "ef:slacc".into(),
+                downlink: "uniform8".into(),
+                sync: "identity".into(),
+                streams_fp: 0x1122_3344_5566_7788,
+            }
+            .encode_frame(),
+            Message::JoinAck {
+                device_id: 7,
+                round: 19,
+                member_epoch: 4,
+                rounds: 300,
+                agg_every: 1,
+            }
+            .encode_frame(),
+            Message::Catchup { round: 19, device_id: 7, spec_epoch: 1, payload: vec![5; 40] }
+                .encode_frame(),
+            Message::Leave { device_id: 7, reason: "signal lost".into() }.encode_frame(),
         ];
         for frame in &frames {
             for cut in 0..frame.len() {

@@ -38,9 +38,10 @@ use crate::obs::export::{MetricsExporter, SnapshotWriter};
 use crate::obs::metrics;
 use crate::span;
 use crate::quant::payload::ByteWriter;
-use crate::sched::fleet::{Fleet, PumpFleet};
+use crate::member::{JoinRequest, MembershipTable};
+use crate::sched::fleet::{ChurnEvent, Fleet, PumpFleet};
 use crate::sched::round::RoundScheduler;
-use crate::sched::Policy;
+use crate::sched::{Participation, Policy};
 use crate::shard::link::ShardLink;
 use crate::shard::FleetShape;
 use crate::tensor::Tensor;
@@ -87,6 +88,12 @@ pub struct ServeConfig {
     /// None freezes the handshake table for the whole session (the
     /// historical behavior)
     pub adapt: Option<String>,
+    /// `--elastic`: admit proto-v6 `Join`s mid-session and treat closed
+    /// connections as typed departures instead of fatal errors (see
+    /// [`crate::member`]); requires arrival-order scheduling
+    pub elastic: bool,
+    /// `--select`: which in-session devices a round opens for
+    pub participation: Participation,
 }
 
 impl ServeConfig {
@@ -291,6 +298,13 @@ pub struct ServerRuntime<C: Compute> {
     /// transition), consulted at every round close; None runs the frozen
     /// handshake table
     pub(crate) adapt: Option<AdaptState>,
+    /// elastic-membership state machine, one entry per local slot; only
+    /// consulted when `cfg.elastic` (a fixed fleet stays all-Active)
+    pub(crate) membership: MembershipTable,
+    /// the most recent FedAvg broadcast, kept for re-admission catchup: a
+    /// returning device receives it through its (rebuilt) sync stream so
+    /// it rejoins on the fleet's current client sub-model
+    pub(crate) last_broadcast: Option<Vec<Tensor>>,
 }
 
 /// One device's uplink contribution awaiting the next batched dispatch:
@@ -338,6 +352,7 @@ impl<C: Compute> ServerRuntime<C> {
             .map(|d| AdaptState::from_directive(d, &cfg.specs))
             .transpose()?;
         let client_params = (0..cfg.devices).map(|_| None).collect();
+        let membership = MembershipTable::new(cfg.devices);
         Ok(ServerRuntime {
             cfg,
             compute,
@@ -358,6 +373,8 @@ impl<C: Compute> ServerRuntime<C> {
             shard_round_wire: 0,
             snapshot: None,
             adapt,
+            membership,
+            last_broadcast: None,
         })
     }
 
@@ -828,9 +845,126 @@ impl<C: Compute> ServerRuntime<C> {
 
     /// After a full-fleet aggregation every device holds the reply.
     pub(crate) fn set_all_params(&mut self, reply: Vec<Tensor>) {
+        self.last_broadcast = Some(reply.clone());
         for p in self.client_params.iter_mut() {
             *p = Some(reply.clone());
         }
+    }
+
+    /// Admit (or reject) a parked `Join` at a round boundary. Runs the
+    /// same validation as the initial `Hello` — fleet size, session
+    /// fingerprint, per-stream spec table, data-shard size — plus the
+    /// membership epoch check, then rebuilds the slot's server-side codec
+    /// twins (a re-joiner is a fresh process with fresh stream state) and
+    /// assembles the reply frames: a `JoinAck` stamping the new admission
+    /// epoch and a `Catchup` carrying the last FedAvg broadcast through
+    /// the rebuilt sync stream (empty payload = no aggregation yet, keep
+    /// the local init). On `Err` the slot is rolled back to `Departed`;
+    /// the caller forwards the reason via `Fleet::reject_join`.
+    pub(crate) fn process_join(
+        &mut self,
+        req: &JoinRequest,
+        round: usize,
+    ) -> Result<Vec<Message>, String> {
+        let d = self
+            .cfg
+            .shape()
+            .slot(req.gid)
+            .ok_or_else(|| format!("join for device {} outside this shard's slice", req.gid))?;
+        self.membership.begin_join(d, req.member_epoch)?;
+        let checked = (|| -> Result<usize, String> {
+            let Message::Join {
+                devices, shard_len, config_fp, uplink, downlink, sync, streams_fp, ..
+            } = &req.msg
+            else {
+                return Err(format!("device {}: parked join holds a non-Join frame", req.gid));
+            };
+            if *devices as usize != self.cfg.global_devices {
+                return Err(format!(
+                    "device {} rejoins a {}-device cluster, session has {}",
+                    req.gid, devices, self.cfg.global_devices
+                ));
+            }
+            if *shard_len == 0 {
+                return Err(format!("device {} declares an empty data shard", req.gid));
+            }
+            let want_fp =
+                super::session_fingerprint(self.cfg.config_fp, self.compute.kind());
+            if *config_fp != want_fp {
+                return Err(format!(
+                    "device {} rejoins with session fingerprint {config_fp:#018x}, \
+                     server expects {want_fp:#018x}",
+                    req.gid
+                ));
+            }
+            let streams = StreamSpecs::parse(uplink, downlink, sync)
+                .map_err(|e| format!("device {} join spec table: {e}", req.gid))?;
+            if streams.fingerprint() != *streams_fp {
+                return Err(format!(
+                    "device {}: join stream digest {streams_fp:#018x} does not match \
+                     its own spec strings ({})",
+                    req.gid,
+                    streams.table()
+                ));
+            }
+            for kind in StreamKind::ALL {
+                let want = self.cfg.specs.get(kind);
+                let got = streams.get(kind);
+                if got != want {
+                    return Err(format!(
+                        "device {} rejoins with {} stream '{got}', session runs \
+                         '{want}'",
+                        req.gid,
+                        kind.label()
+                    ));
+                }
+            }
+            Ok(*shard_len as usize)
+        })();
+        let shard_len = match checked {
+            Ok(s) => s,
+            Err(e) => {
+                self.membership.reject(d);
+                return Err(e);
+            }
+        };
+        if let Err(e) = self.streams.rebuild_device(d) {
+            self.membership.reject(d);
+            return Err(format!("device {}: rebuilding streams on rejoin: {e}", req.gid));
+        }
+        let epoch = self.membership.admit(d)?;
+        self.weights[d] = shard_len as f64;
+        let payload = match self.last_broadcast.take() {
+            Some(params) => {
+                let _sp = span!("catchup", round = round, gid = req.gid);
+                let p = self.pack_broadcast(d, &params);
+                self.client_params[d] = Some(params.clone());
+                self.last_broadcast = Some(params);
+                p
+            }
+            None => Vec::new(),
+        };
+        crate::log_info!(
+            "[{}] round {round}: device {} re-admitted (epoch {epoch}, catchup {} bytes)",
+            self.cfg.label,
+            req.gid,
+            payload.len()
+        );
+        Ok(vec![
+            Message::JoinAck {
+                device_id: req.gid as u32,
+                round: round as u32,
+                member_epoch: epoch,
+                rounds: self.cfg.rounds as u32,
+                agg_every: self.cfg.client_agg_every as u32,
+            },
+            Message::Catchup {
+                round: round as u32,
+                device_id: req.gid as u32,
+                spec_epoch: (self.streams.len() - 1) as u32,
+                payload,
+            },
+        ])
     }
 
     /// The cross-shard sync point: if this node is a shard of a
@@ -976,6 +1110,30 @@ impl<C: Compute> ServerRuntime<C> {
         let label = self.cfg.label.clone();
         let policy = self.cfg.schedule;
         let window = self.cfg.batch_window;
+        if self.cfg.elastic {
+            if !matches!(policy, Policy::ArrivalOrder { .. }) {
+                return Err(
+                    "elastic membership requires arrival-order scheduling (the \
+                     in-order schedule cannot absorb a shrinking participant set)"
+                        .into(),
+                );
+            }
+            if self.adapt.is_some() {
+                return Err(
+                    "elastic membership and --adapt are mutually exclusive (a \
+                     re-joining device cannot replay a mid-session spec \
+                     renegotiation)"
+                        .into(),
+                );
+            }
+        }
+        if self.cfg.participation == Participation::BiasStragglers
+            && !matches!(policy, Policy::ArrivalOrder { .. })
+        {
+            return Err(
+                "--select bias-stragglers requires arrival-order scheduling".into(),
+            );
+        }
         if window > 1 && policy == Policy::InOrder {
             crate::log_info!(
                 "[{label}] --batch-window {window} forced to 1 under the \
@@ -996,9 +1154,16 @@ impl<C: Compute> ServerRuntime<C> {
             link.finish().map_err(|e| format!("shard link shutdown: {e}"))?;
         }
         for d in 0..n {
+            // a departed slot of an elastic session has nobody to notify
+            if fleet.vacant(d) {
+                continue;
+            }
             fleet.send(d, &Message::Shutdown { reason: "training complete".into() })?;
         }
         for d in 0..n {
+            if fleet.vacant(d) {
+                continue;
+            }
             fleet.pump(d)?;
         }
         let framed: u64 = (0..n)
@@ -1078,9 +1243,19 @@ pub fn accept_and_serve_opts<C: Compute>(
     opts: crate::sched::event_loop::FleetOptions,
 ) -> Result<TrainReport, String> {
     let shape = runtime.cfg.shape();
+    let mut opts = opts;
+    // elastic mode is a session property, not an event-loop tunable: the
+    // runtime's config decides, whatever options the caller assembled
+    opts.elastic = runtime.cfg.elastic;
     let (mut fleet, hellos) =
         crate::sched::event_loop::PollFleet::accept_with(listener, shape, opts)?;
     crate::log_info!("sched: io backend {}", fleet.backend_kind());
+    if runtime.cfg.elastic {
+        let l = listener
+            .try_clone()
+            .map_err(|e| format!("elastic: cloning the session listener: {e}"))?;
+        fleet.arm_listener(l)?;
+    }
     if let Some(ex) = exporter {
         fleet.attach_exporter(ex);
     }
@@ -1186,6 +1361,64 @@ pub fn run_mock_loopback_shimmed(
             delays.to_vec(),
             shim_seed,
         );
+        runtime.serve_fleet(&mut fleet, &hellos)?
+    };
+    Ok((report, runtime.sched_records()))
+}
+
+/// [`run_mock_loopback`] with `--elastic` and a scripted churn plan:
+/// `kills` are `(round, device)` hang-ups fired when the scheduler opens
+/// that round, `rejoins` are `(round, device)` re-admissions — the same
+/// in-process worker dials back in with a proto-v6 `Join`, is admitted at
+/// the round boundary, and catches up from the server's last broadcast.
+/// Deterministic end to end (zero-delay shim), so two identical runs
+/// produce identical metrics and scheduling records.
+pub fn run_mock_loopback_churn(
+    cfg: &ExperimentConfig,
+    kills: &[(u32, usize)],
+    rejoins: &[(u32, usize)],
+) -> Result<(TrainReport, Vec<SchedRecord>), String> {
+    cfg.validate()?;
+    if !cfg.elastic {
+        return Err("run_mock_loopback_churn needs cfg.elastic".into());
+    }
+    if cfg.shards > 1 {
+        return Err("run_mock_loopback_churn drives a single server".into());
+    }
+    for &(_, d) in kills.iter().chain(rejoins) {
+        if d >= cfg.devices {
+            return Err(format!("churn names device {d} of a {}-device fleet", cfg.devices));
+        }
+    }
+    let (train, test) = Dataset::for_config(&cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed)?;
+    let train = Arc::new(train);
+    let mut runtime = mock_runtime(cfg, Arc::new(test))?;
+    let mut workers = Vec::with_capacity(cfg.devices);
+    let mut dev_conns = Vec::with_capacity(cfg.devices);
+    let mut srv_conns: Vec<Box<dyn Transport>> = Vec::with_capacity(cfg.devices);
+    for d in 0..cfg.devices {
+        let worker = super::device::mock_worker(cfg, train.clone(), d)?;
+        let (mut dev_end, srv_end) = super::loopback::pair(&format!("mock{d}"));
+        dev_end.send(&worker.hello())?;
+        workers.push(worker);
+        dev_conns.push(dev_end);
+        srv_conns.push(Box::new(srv_end));
+    }
+    let churn: Vec<ChurnEvent> = kills
+        .iter()
+        .map(|&(round, device)| ChurnEvent::Kill { round, device })
+        .chain(rejoins.iter().map(|&(round, device)| ChurnEvent::Rejoin {
+            round,
+            device,
+            join: workers[device].join(),
+        }))
+        .collect();
+    let (mut conns, hellos) = handshake(srv_conns, FleetShape::flat(cfg.devices))?;
+    let report = {
+        let mut fleet = PumpFleet::new(&mut conns, |d| {
+            super::device::pump(&mut workers[d], &mut dev_conns[d])
+        })
+        .with_churn(churn);
         runtime.serve_fleet(&mut fleet, &hellos)?
     };
     Ok((report, runtime.sched_records()))

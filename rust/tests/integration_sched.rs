@@ -23,12 +23,13 @@ use slacc::config::{CodecChoice, ExperimentConfig};
 use slacc::data::Dataset;
 use slacc::sched::event_loop::FleetOptions;
 use slacc::sched::poll::Backend;
-use slacc::sched::soak::{run_soak, SoakConfig};
+use slacc::sched::soak::{run_churn_soak, run_soak, ChurnSoakConfig, SoakConfig};
 use slacc::sched::Policy;
 use slacc::transport::device::{mock_worker, run_blocking};
 use slacc::transport::proto::Message;
 use slacc::transport::server::{
-    accept_and_serve, mock_runtime, run_mock_loopback, run_mock_loopback_delayed,
+    accept_and_serve, mock_runtime, run_mock_loopback, run_mock_loopback_churn,
+    run_mock_loopback_delayed,
 };
 use slacc::transport::tcp::TcpTransport;
 use slacc::transport::{DelayedTransport, Transport};
@@ -347,7 +348,7 @@ fn soak_backends() -> Vec<Backend> {
 fn scale_soak_1024_devices_with_byte_parity_across_backends() {
     let rounds = 3;
     let mut ref_cfg = SoakConfig::new(64, rounds);
-    ref_cfg.opts = FleetOptions { backend: Backend::Poll, write_stall_secs: 10 };
+    ref_cfg.opts = FleetOptions { backend: Backend::Poll, write_stall_secs: 10, elastic: false };
     let reference = run_soak(&ref_cfg).expect("64-device reference soak");
     let golden = reference.per_device[0];
     for stats in &reference.per_device {
@@ -356,7 +357,7 @@ fn scale_soak_1024_devices_with_byte_parity_across_backends() {
     for backend in soak_backends() {
         let mut cfg = SoakConfig::new(1024, rounds);
         cfg.driver_threads = 8;
-        cfg.opts = FleetOptions { backend, write_stall_secs: 10 };
+        cfg.opts = FleetOptions { backend, write_stall_secs: 10, elastic: false };
         let report = run_soak(&cfg)
             .unwrap_or_else(|e| panic!("1024-device soak on {backend:?}: {e}"));
         assert_eq!(report.backend, backend.as_str());
@@ -383,7 +384,7 @@ fn slow_reader_backpressure_recovers_at_scale() {
         // write to the sleeping reader genuinely parks
         cfg.down_bytes = 512 * 1024;
         cfg.slow_reader = Some((5, 1500));
-        cfg.opts = FleetOptions { backend, write_stall_secs: 10 };
+        cfg.opts = FleetOptions { backend, write_stall_secs: 10, elastic: false };
         let report = run_soak(&cfg)
             .unwrap_or_else(|e| panic!("backpressure soak on {backend:?}: {e}"));
         assert!(
@@ -398,6 +399,83 @@ fn slow_reader_backpressure_recovers_at_scale() {
     }
 }
 
+/// Elastic-membership acceptance: a 16-device session with 4 scripted
+/// departures (two graceful `Leave`s, two abrupt hang-ups, all with the
+/// server's RoundOpen already delivered and the device's reply unsent)
+/// and 2 re-admissions through the proto-v6 Join/JoinAck/Catchup
+/// handshake — on every readiness backend. Per-device wire accounting
+/// must match the script-derived frame counts exactly and be
+/// byte-for-byte identical across backends.
+#[test]
+fn churn_soak_16_devices_with_byte_parity_across_backends() {
+    let mut reports = Vec::new();
+    for backend in soak_backends() {
+        let mut base = SoakConfig::new(16, 6);
+        base.opts = FleetOptions { backend, write_stall_secs: 10, elastic: false };
+        let cfg = ChurnSoakConfig {
+            base,
+            kills: vec![(1, 3, true), (2, 7, false), (3, 11, true), (2, 14, false)],
+            rejoins: vec![(3, 3), (4, 7)],
+        };
+        let report = run_churn_soak(&cfg)
+            .unwrap_or_else(|e| panic!("churn soak on {backend:?}: {e}"));
+        assert_eq!(report.backend, backend.as_str());
+        assert_eq!(
+            report.departures,
+            vec![(3, true), (7, false), (11, true), (14, false)],
+            "departure log on {backend:?}"
+        );
+        for d in 0..16 {
+            let (sent, recv) = cfg.expected_frames(d);
+            let stats = report.per_device[d];
+            assert_eq!(stats.frames_sent, sent, "device {d} frames sent on {backend:?}");
+            assert_eq!(stats.frames_recv, recv, "device {d} frames recv on {backend:?}");
+        }
+        reports.push(report);
+    }
+    let first = &reports[0];
+    for other in &reports[1..] {
+        for d in 0..16 {
+            assert_eq!(
+                other.per_device[d], first.per_device[d],
+                "device {d}: wire accounting diverged between {} and {}",
+                first.backend, other.backend
+            );
+        }
+    }
+}
+
+/// The scheduler-level elastic path over the in-process loopback fleet:
+/// scripted kills shrink the participant set at round boundaries, a
+/// re-joining device is admitted with JoinAck + model catchup and trains
+/// again, and the whole churned session is deterministic end to end.
+#[test]
+fn elastic_loopback_absorbs_churn_and_readmits() {
+    let mut cfg = tiny_cfg("slacc", 4, 8);
+    cfg.eval_every = 100;
+    cfg.elastic = true;
+    cfg.schedule = Policy::arrival();
+    let kills = [(2, 1), (3, 3)];
+    let rejoins = [(5, 1)];
+    let (report, sched) = run_mock_loopback_churn(&cfg, &kills, &rejoins).unwrap();
+    assert_eq!(report.rounds_run, 8);
+    assert!(report.metrics.records.iter().all(|r| r.loss.is_finite()));
+    let sizes: Vec<usize> = sched.iter().map(|r| r.participants.len()).collect();
+    assert_eq!(sizes, vec![4, 4, 3, 2, 2, 3, 3, 3], "participant counts per round");
+    assert!(!sched[2].participants.contains(&1), "device 1 departed at round 2");
+    assert!(sched[5].participants.contains(&1), "device 1 re-admitted at round 5");
+    assert!(!sched[5].participants.contains(&3), "device 3 stayed departed");
+    // the same churn script reproduces the same session, number for number
+    let (again, sched2) = run_mock_loopback_churn(&cfg, &kills, &rejoins).unwrap();
+    assert_eq!(report.metrics.len(), again.metrics.len());
+    for (a, b) in report.metrics.records.iter().zip(&again.metrics.records) {
+        assert_eq!(a.loss, b.loss, "round {}", a.round);
+        assert_eq!(a.bytes_up, b.bytes_up, "round {}", a.round);
+        assert_eq!(a.bytes_down, b.bytes_down, "round {}", a.round);
+    }
+    assert_eq!(sched, sched2, "scheduling records must be reproducible under churn");
+}
+
 /// The full 10k-devices-per-shard target. 10 000 device sockets plus their
 /// client ends need ~20 100 file descriptors, beyond most default rlimits,
 /// so this runs only on demand:
@@ -407,12 +485,12 @@ fn slow_reader_backpressure_recovers_at_scale() {
 fn scale_soak_10k_devices() {
     let rounds = 1;
     let mut ref_cfg = SoakConfig::new(64, rounds);
-    ref_cfg.opts = FleetOptions { backend: Backend::Poll, write_stall_secs: 10 };
+    ref_cfg.opts = FleetOptions { backend: Backend::Poll, write_stall_secs: 10, elastic: false };
     let golden = run_soak(&ref_cfg).expect("64-device reference soak").per_device[0];
     for backend in soak_backends() {
         let mut cfg = SoakConfig::new(10_000, rounds);
         cfg.driver_threads = 16;
-        cfg.opts = FleetOptions { backend, write_stall_secs: 30 };
+        cfg.opts = FleetOptions { backend, write_stall_secs: 30, elastic: false };
         let report = run_soak(&cfg)
             .unwrap_or_else(|e| panic!("10k-device soak on {backend:?}: {e}"));
         assert_eq!(report.per_device.len(), 10_000);

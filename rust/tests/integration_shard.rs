@@ -29,7 +29,8 @@ use slacc::data::Dataset;
 use slacc::sched::fleet::ShardFleet;
 use slacc::shard::coordinator::{CoordReport, Coordinator};
 use slacc::shard::link::ShardLink;
-use slacc::shard::sim::run_sharded_mock;
+use slacc::shard::checkpoint::Checkpoint;
+use slacc::shard::sim::{run_sharded_mock, run_sharded_mock_resumed};
 use slacc::shard::{FleetShape, Topology};
 use slacc::transport::channel;
 use slacc::transport::device::{mock_worker, run_blocking};
@@ -301,6 +302,51 @@ fn shard_disconnect_surfaces_peer_closed() {
     for f in fakes {
         f.join().unwrap();
     }
+}
+
+/// The acceptance drill for `--checkpoint-dir` / `--resume`: the
+/// coordinator dies at a sync-epoch boundary, a fresh one comes up from
+/// the on-disk checkpoint, and the shards' loss curves continue exactly
+/// where an uninterrupted run would have them — bit for bit.
+#[test]
+fn coordinator_kill_and_resume_keeps_the_loss_curve() {
+    let cfg = sharded_cfg(4, 2, 6, 1);
+    let reference = run_sharded_mock(&cfg).unwrap();
+
+    let dir = std::env::temp_dir().join(format!(
+        "slacc-resume-test-{}-{:?}",
+        std::process::id(),
+        thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    // kill after 3 of 6 sync epochs: the successor knows nothing but the
+    // checkpoint on disk
+    let resumed = run_sharded_mock_resumed(&cfg, 3, &dir).unwrap();
+
+    assert_eq!(resumed.shard_reports.len(), 2);
+    for (k, (res, base)) in
+        resumed.shard_reports.iter().zip(&reference.shard_reports).enumerate()
+    {
+        assert_eq!(res.rounds_run, base.rounds_run, "shard {k}");
+        assert_eq!(res.metrics.len(), base.metrics.len(), "shard {k}");
+        for (a, b) in res.metrics.records.iter().zip(&base.metrics.records) {
+            let ctx = format!("shard {k} round {}", a.round);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss drift across resume: {ctx}");
+            assert_eq!(a.accuracy, b.accuracy, "accuracy drift across resume: {ctx}");
+            assert_eq!(a.bytes_up, b.bytes_up, "uplink drift across resume: {ctx}");
+            assert_eq!(a.bytes_sync, b.bytes_sync, "sync drift across resume: {ctx}");
+        }
+    }
+    // the successor finished the remaining epochs; its byte counters only
+    // cover the post-resume half of the session
+    assert_eq!(resumed.coordinator.sync_epochs, reference.coordinator.sync_epochs);
+    assert!(resumed.coordinator.bytes_up > 0);
+    assert!(resumed.coordinator.bytes_up < reference.coordinator.bytes_up);
+    // the final checkpoint covers the whole session, with no tmp litter
+    let ck = Checkpoint::load(&dir).unwrap();
+    assert_eq!(ck.epochs_done, 6);
+    assert!(!dir.join("coordinator.ckpt.tmp").exists());
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// `--shard-sync-every K`: shard-link bytes land on the `bytes_sync` axis
